@@ -1,0 +1,160 @@
+//! End-to-end driver (DESIGN.md "End-to-end validation"): a TR-scale-down
+//! internet time-series graph through the **full stack** — synthetic
+//! traceroute datagen → partitioner → GoFS deployment → 12-host Gopher
+//! engine → all three paper applications (SSSP / N-hop / PageRank), with
+//! the PageRank hot loop on the AOT-compiled JAX/Pallas kernels via PJRT
+//! when artifacts are present. Prints the headline metrics recorded in
+//! EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example internet_analytics
+//! # scale knobs: GOFFISH_VERTICES, GOFFISH_INSTANCES
+//! ```
+
+use goffish::apps::{NHopApp, PageRankApp, SsspApp};
+use goffish::cluster::ClusterSpec;
+use goffish::datagen::{traceroute, CollectionSource, TraceRouteGenerator, TraceRouteParams};
+use goffish::gofs::{deploy, open_collection, DeployConfig, StoreOptions};
+use goffish::gopher::{GopherEngine, RunOptions};
+use goffish::metrics::{keys, Metrics};
+use goffish::runtime::pjrt::{PjrtBackend, PjrtEngine};
+use goffish::runtime::{LocalSpmv, ScalarBackend};
+use goffish::util::bench::Table;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_vertices = env_usize("GOFFISH_VERTICES", 100_000);
+    let n_instances = env_usize("GOFFISH_INSTANCES", 24);
+    let n_hosts = 12; // the paper's testbed size
+
+    println!("=== GoFFish-RS end-to-end internet analytics ===");
+    let t0 = Instant::now();
+    let gen = TraceRouteGenerator::new(TraceRouteParams {
+        n_vertices,
+        n_instances,
+        traces_per_instance: 3_000,
+        ..Default::default()
+    });
+    println!(
+        "[datagen {:.1}s] TR-like: {} vertices, {} edges (ratio {:.2}), diameter≈{}, {} instances",
+        t0.elapsed().as_secs_f64(),
+        gen.template().n_vertices(),
+        gen.template().n_edges(),
+        gen.template().n_edges() as f64 / gen.template().n_vertices() as f64,
+        gen.template().estimate_diameter(0),
+        gen.n_instances()
+    );
+
+    let dir = std::env::temp_dir().join("goffish-internet");
+    let _ = std::fs::remove_dir_all(&dir);
+    let t1 = Instant::now();
+    let report = deploy(&gen, &DeployConfig::new(n_hosts, 20, 20), &dir)?;
+    println!(
+        "[deploy {:.1}s] s20-i20 across {n_hosts} hosts: {} slices, {:.1} MB, subgraphs/partition {:?}",
+        t1.elapsed().as_secs_f64(),
+        report.slices_written,
+        report.bytes_written as f64 / 1e6,
+        report.subgraphs_per_partition
+    );
+
+    let metrics = Arc::new(Metrics::new());
+    let opts = StoreOptions { cache_slots: 14, metrics: metrics.clone(), ..Default::default() };
+    let stores = open_collection(&dir, &opts)?;
+    let engine = GopherEngine::new(stores, ClusterSpec::new(n_hosts), metrics.clone());
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+
+    let mut table = Table::new(&[
+        "app", "pattern", "timesteps", "supersteps", "wall_s", "slices", "msgs", "sim_disk_s",
+        "sim_net_s", "result",
+    ]);
+
+    // --- SSSP (sequentially dependent) over all instances. ---
+    let sssp = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
+    let stats = engine.run(&sssp, &RunOptions::default())?;
+    let last = stats.per_timestep.last().unwrap().timestep;
+    let reached: usize = sssp
+        .results
+        .reached
+        .lock()
+        .unwrap()
+        .iter()
+        .filter(|((t, _), _)| *t == last)
+        .map(|(_, &c)| c)
+        .sum();
+    push_row(&mut table, "sssp", "sequential", &stats, format!("{reached} reachable"));
+
+    // --- N-hop latency (eventually dependent), N=6 as in the paper. ---
+    let mut nhop = NHopApp::new(source, 6, traceroute::eattr::LATENCY_MS);
+    nhop.hist_hi = 1500.0;
+    let stats = engine.run(&nhop, &RunOptions::default())?;
+    let arrivals = nhop.results.composite.lock().unwrap().as_ref().map(|h| h.total()).unwrap_or(0);
+    push_row(&mut table, "nhop(6)", "eventually-dep", &stats, format!("{arrivals} arrivals"));
+
+    // --- PageRank (independent) on the PJRT backend when available. ---
+    let artifacts = std::path::PathBuf::from(
+        std::env::var("GOFFISH_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let (backend, backend_name): (Arc<dyn LocalSpmv>, &str) =
+        match PjrtEngine::load(&artifacts, None, metrics.clone()) {
+            Ok(eng) => (Arc::new(PjrtBackend::new(eng)), "pjrt"),
+            Err(e) => {
+                eprintln!("note: PJRT backend unavailable ({e}); falling back to scalar");
+                (Arc::new(ScalarBackend), "scalar")
+            }
+        };
+    let pr = PageRankApp::new(
+        gen.template().n_vertices(),
+        Some(traceroute::eattr::ACTIVE),
+        backend,
+    );
+    let pr_ts: Vec<usize> = (0..n_instances.min(6)).collect();
+    let stats = engine.run(&pr, &RunOptions { timesteps: Some(pr_ts), ..Default::default() })?;
+    let top = pr.results.top_k(0, 1);
+    push_row(
+        &mut table,
+        &format!("pagerank[{backend_name}]"),
+        "independent",
+        &stats,
+        format!("top v{}", top.first().map(|t| t.0).unwrap_or(0)),
+    );
+
+    table.print("End-to-end results (TR synthetic, 12 simulated hosts)");
+    println!(
+        "kernel calls: {}, kernel time: {:.2}s",
+        metrics.get(keys::KERNEL_CALLS),
+        metrics.get(keys::KERNEL_NS) as f64 / 1e9
+    );
+    println!("total: {:.1}s", t0.elapsed().as_secs_f64());
+    std::fs::remove_dir_all(&dir)?;
+    Ok(())
+}
+
+fn push_row(
+    table: &mut Table,
+    app: &str,
+    pattern: &str,
+    stats: &goffish::gopher::RunStats,
+    result: String,
+) {
+    let slices: u64 = stats.per_timestep.iter().map(|t| t.slices_read).sum();
+    let msgs: u64 = stats.per_timestep.iter().map(|t| t.msgs_local + t.msgs_remote).sum();
+    let disk: f64 = stats.per_timestep.iter().map(|t| t.sim_disk_ns).sum::<u64>() as f64 / 1e9;
+    let net: f64 = stats.per_timestep.iter().map(|t| t.sim_net_ns).sum::<u64>() as f64 / 1e9;
+    table.row(&[
+        app.to_string(),
+        pattern.to_string(),
+        stats.per_timestep.len().to_string(),
+        stats.total_supersteps().to_string(),
+        format!("{:.2}", stats.total_wall_s),
+        slices.to_string(),
+        msgs.to_string(),
+        format!("{disk:.2}"),
+        format!("{net:.2}"),
+        result,
+    ]);
+}

@@ -1,0 +1,91 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the rust runtime.
+
+HLO text — NOT serialized HloModuleProto — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``. Writes one
+``<name>_b{B}_k{K}.hlo.txt`` per kernel variant, a ``manifest.txt`` the
+rust loader parses, and ``model.hlo.txt`` (the Makefile's freshness stamp
+and smoke-test artifact).
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import MODEL_FNS, shapes_for
+
+# (family, B, K) variants to ship. B=128 matches the TPU MXU tile; smaller
+# variants serve tests and small subgraphs.
+VARIANTS = [
+    ("pagerank", 32, 4),
+    ("pagerank", 64, 8),
+    ("pagerank", 128, 8),
+    ("minplus", 32, 4),
+    ("minplus", 64, 8),
+    ("minplus", 128, 8),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(name: str, b: int, k: int) -> str:
+    fn = MODEL_FNS[name]
+    args = shapes_for(name, b, k)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default=None,
+        help="comma-separated name:B:K triples overriding the default set",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    variants = VARIANTS
+    if args.variants:
+        variants = []
+        for spec in args.variants.split(","):
+            name, b, k = spec.split(":")
+            variants.append((name, int(b), int(k)))
+
+    manifest_lines = ["# kernel artifacts: <family> b=<B> k=<K> path=<file>"]
+    for name, b, k in variants:
+        fname = f"{name}_b{b}_k{k}.hlo.txt"
+        text = lower_variant(name, b, k)
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name} b={b} k={k} path={fname}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+
+    # Composed-model smoke artifact + Makefile stamp (written last so an
+    # interrupted build reruns).
+    text = lower_variant("model", 32, 4)
+    with open(os.path.join(args.out_dir, "model.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"wrote {os.path.join(args.out_dir, 'model.hlo.txt')} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

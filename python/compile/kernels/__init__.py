@@ -1,0 +1,14 @@
+"""Layer-1 Pallas tile kernels (build-time only).
+
+The GoFFish-RS hot spot — per-subgraph PageRank contribution sums and
+min-plus SSSP relaxation — re-thought for a TPU MXU as batched dense-tile
+operations (DESIGN.md §Hardware-Adaptation). Kernels are lowered with
+``interpret=True`` so the emitted HLO runs on any PJRT backend (the
+image's CPU plugin cannot execute Mosaic custom-calls); real-TPU
+efficiency is estimated from the BlockSpec VMEM footprint in DESIGN.md.
+"""
+
+from .minplus import minplus_tiles
+from .pagerank import pagerank_tiles
+
+__all__ = ["pagerank_tiles", "minplus_tiles"]

@@ -1,0 +1,49 @@
+"""Min-plus (tropical) tile product kernel for SSSP relaxation.
+
+``o[k, j] = min_s (d[k, s] + W[k, s, j])`` — one relaxation sweep over a
+batch of K dense weight tiles. The tropical semiring has no MXU support,
+so the inner op targets the VPU: a broadcasted add followed by a reduction
+over the source axis, with the same VMEM tiling/BlockSpec schedule as the
+PageRank kernel. Infinities are represented by a large finite sentinel
+(see rust/src/runtime/pjrt.rs BIG) to keep min/plus well-defined in f32.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(d_ref, w_ref, o_ref):
+    d = d_ref[0, :]          # (B,)
+    w = w_ref[0, :, :]       # (B, B)
+    o_ref[0, :] = jnp.min(d[:, None] + w, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def minplus_tiles(w, d, *, interpret=True):
+    """Batched min-plus relaxation sweep.
+
+    Args:
+      w: f32[K, B, B] weight tiles (rows = source, cols = destination).
+      d: f32[K, B] source-block distances.
+      interpret: lower via the Pallas interpreter (required for CPU PJRT).
+
+    Returns:
+      f32[K, B]: candidate destination distances (caller folds with min).
+    """
+    k, b, b2 = w.shape
+    assert b == b2, f"tiles must be square, got {w.shape}"
+    assert d.shape == (k, b), f"d shape {d.shape} != ({k}, {b})"
+    return pl.pallas_call(
+        _kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, b), lambda i: (i, 0)),
+            pl.BlockSpec((1, b, b), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, b), jnp.float32),
+        interpret=interpret,
+    )(d, w)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness signal.
+
+pytest asserts the kernels (interpret mode) match these references across
+shapes and data, and the rust integration tests assert the PJRT-loaded
+artifacts match the rust scalar backends, closing the loop end-to-end.
+"""
+
+import jax.numpy as jnp
+
+
+def pagerank_ref(a, x):
+    """y[k,d] = sum_s a[k,s,d] * x[k,s]."""
+    return jnp.einsum("ksd,ks->kd", a, x)
+
+
+def minplus_ref(w, d):
+    """o[k,j] = min_s (d[k,s] + w[k,s,j])."""
+    return jnp.min(d[:, :, None] + w, axis=1)
+
+
+def pagerank_iteration_ref(adj, ranks, out_deg, damping=0.85):
+    """One dense synchronous PageRank iteration over a whole adjacency.
+
+    adj: f32[N, N] (adj[s, d] = 1 for an edge s->d), ranks: f32[N],
+    out_deg: f32[N]. Dangling mass is dropped (see apps/pagerank.rs note).
+    """
+    n = ranks.shape[0]
+    contrib = jnp.where(out_deg > 0, ranks / jnp.maximum(out_deg, 1.0), 0.0)
+    incoming = contrib @ adj
+    return (1.0 - damping) / n + damping * incoming

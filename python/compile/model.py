@@ -1,0 +1,55 @@
+"""Layer-2 JAX compute graphs, calling the L1 Pallas kernels.
+
+Two artifact families (one per kernel) plus a composed whole-step
+PageRank model used as the `model.hlo.txt` smoke artifact and by the
+python tests. Everything here runs at build time only: `aot.py` lowers
+these jitted functions to HLO text for the rust runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import minplus_tiles, pagerank_tiles
+
+
+def pagerank_tile_model(a, x):
+    """The artifact function for `pagerank_b{B}_k{K}`: tuple-wrapped so the
+    rust side can `to_tuple1()` uniformly."""
+    return (pagerank_tiles(a, x),)
+
+
+def minplus_tile_model(w, d):
+    """The artifact function for `minplus_b{B}_k{K}`."""
+    return (minplus_tiles(w, d),)
+
+
+def pagerank_step_model(tiles, x_blocks, teleport, damping):
+    """A composed L2 step: tile contributions + rank update, fused by XLA.
+
+    tiles: f32[K, B, B]; x_blocks: f32[K, B] (contribution vectors per
+    source block); returns damped, teleported destination blocks. Used as
+    the `model.hlo.txt` stamp artifact and exercised by python tests; the
+    rust hot path calls the leaner per-kernel artifacts and owns the
+    scatter (sparsity structure) itself.
+    """
+    y = pagerank_tiles(tiles, x_blocks)
+    return (teleport + damping * y,)
+
+
+def shapes_for(name, b, k):
+    """Example-argument shapes for lowering a kernel variant."""
+    t = jax.ShapeDtypeStruct((k, b, b), jnp.float32)
+    v = jax.ShapeDtypeStruct((k, b), jnp.float32)
+    if name in ("pagerank", "minplus"):
+        return (t, v)
+    if name == "model":
+        s = jax.ShapeDtypeStruct((), jnp.float32)
+        return (t, v, s, s)
+    raise ValueError(f"unknown artifact family {name}")
+
+
+MODEL_FNS = {
+    "pagerank": pagerank_tile_model,
+    "minplus": minplus_tile_model,
+    "model": pagerank_step_model,
+}

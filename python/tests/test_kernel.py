@@ -1,0 +1,97 @@
+"""L1 correctness: Pallas kernels (interpret mode) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and data; fixed cases pin the artifact shapes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import minplus_tiles, pagerank_tiles
+from compile.kernels.ref import minplus_ref, pagerank_ref
+
+BIG = 1e30  # finite stand-in for +inf (matches rust/src/runtime/pjrt.rs)
+
+
+def rand(shape, rng, lo=-2.0, hi=2.0):
+    return (rng.random(shape, dtype=np.float32) * (hi - lo) + lo).astype(np.float32)
+
+
+@pytest.mark.parametrize("k,b", [(1, 4), (4, 32), (8, 64), (2, 128)])
+def test_pagerank_matches_ref_at_artifact_shapes(k, b):
+    rng = np.random.default_rng(k * 1000 + b)
+    a = rand((k, b, b), rng)
+    x = rand((k, b), rng)
+    got = np.asarray(pagerank_tiles(a, x))
+    want = np.asarray(pagerank_ref(a, x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("k,b", [(1, 4), (4, 32), (8, 64), (2, 128)])
+def test_minplus_matches_ref_at_artifact_shapes(k, b):
+    rng = np.random.default_rng(k * 2000 + b)
+    w = rand((k, b, b), rng, 0.0, 10.0)
+    d = rand((k, b), rng, 0.0, 50.0)
+    got = np.asarray(minplus_tiles(w, d))
+    want = np.asarray(minplus_ref(w, d))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(1, 5),
+    b=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pagerank_property(k, b, seed):
+    rng = np.random.default_rng(seed)
+    a = rand((k, b, b), rng, -5.0, 5.0)
+    x = rand((k, b), rng, -5.0, 5.0)
+    got = np.asarray(pagerank_tiles(a, x))
+    want = np.asarray(pagerank_ref(a, x))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(1, 5),
+    b=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+    sparse=st.floats(0.0, 0.9),
+)
+def test_minplus_property_with_big_sentinels(k, b, seed, sparse):
+    rng = np.random.default_rng(seed)
+    w = rand((k, b, b), rng, 0.0, 100.0)
+    # Knock out a fraction of cells to the BIG sentinel (absent edges).
+    mask = rng.random((k, b, b)) < sparse
+    w = np.where(mask, np.float32(BIG), w).astype(np.float32)
+    d = rand((k, b), rng, 0.0, 100.0)
+    got = np.asarray(minplus_tiles(w, d))
+    want = np.asarray(minplus_ref(w, d))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_pagerank_zero_tiles_give_zero():
+    a = np.zeros((2, 8, 8), np.float32)
+    x = np.ones((2, 8), np.float32)
+    got = np.asarray(pagerank_tiles(a, x))
+    assert got.shape == (2, 8)
+    np.testing.assert_array_equal(got, 0.0)
+
+
+def test_minplus_identity_when_weights_big():
+    w = np.full((1, 8, 8), BIG, np.float32)
+    d = np.arange(8, dtype=np.float32)[None, :]
+    got = np.asarray(minplus_tiles(w, d))
+    # All candidates ~BIG: nothing below the sentinel scale.
+    assert (got > 1e29).all()
+
+
+def test_shape_mismatch_raises():
+    a = np.zeros((2, 8, 8), np.float32)
+    x = np.zeros((3, 8), np.float32)
+    with pytest.raises(AssertionError):
+        pagerank_tiles(a, x)
+    w = np.zeros((2, 8, 4), np.float32)
+    with pytest.raises(AssertionError):
+        minplus_tiles(w, np.zeros((2, 8), np.float32))

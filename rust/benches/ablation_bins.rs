@@ -1,0 +1,85 @@
+//! Ablation A2 — subgraph bin count sweep (§V-D).
+//!
+//! "As the bin size increases and tends towards the number of sub-graphs
+//! in the partition, this degenerates to the non-bin-packing approach"
+//! — many tiny slices, seek-latency bound. Too few bins inflate slice
+//! size variance instead. Reports slice count/size stats and scan cost.
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use goffish::gofs::Projection;
+use goffish::metrics::Metrics;
+use goffish::util::bench::{BenchArgs, Table};
+use goffish::util::stats::Stats;
+use std::sync::Arc;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let scale = BenchScale::from_args(&args);
+    let gen = scale.generator();
+    let bins_sweep = [1usize, 5, 10, 20, 40, 80, 160];
+
+    let mut t = Table::new(&[
+        "bins", "slices", "bytes (MB)", "slice size p50 (KB)", "slice size max (KB)",
+        "scan sim disk (s)", "bin imbalance",
+    ]);
+    for &bins in &bins_sweep {
+        let (dir, report) = deploy_cached(&gen, &scale, bins, 20);
+        // Slice size distribution straight from the filesystem.
+        let mut sizes = Stats::new();
+        for p in 0..scale.hosts {
+            let attr_dir = dir.join(format!("part-{p}/attr"));
+            if let Ok(walk) = walk_files(&attr_dir) {
+                for f in walk {
+                    sizes.push(f as f64 / 1024.0);
+                }
+            }
+        }
+        let stores = open_stores(&dir, scale.hosts, 14, Arc::new(Metrics::new()));
+        for store in &stores {
+            let proj = Projection::all(store.vertex_schema(), store.edge_schema());
+            for sg in store.subgraphs() {
+                for ts in 0..scale.instances {
+                    let _ = store.read_instance(sg.id.local(), ts, &proj).unwrap();
+                }
+            }
+        }
+        let sim: u64 = stores.iter().map(|s| s.sim_disk_ns()).sum();
+        let imbalance = stores
+            .iter()
+            .map(|s| s.shared().bins.imbalance())
+            .fold(0.0f64, f64::max);
+        t.row(&[
+            bins.to_string(),
+            report.slices_written.to_string(),
+            format!("{:.1}", report.bytes_written as f64 / 1e6),
+            format!("{:.1}", sizes.median()),
+            format!("{:.1}", sizes.max()),
+            format!("{:.2}", sim as f64 / 1e9),
+            format!("{imbalance:.2}"),
+        ]);
+    }
+    t.print("A2 — bin count sweep (i20, c14, full scan)");
+}
+
+fn walk_files(dir: &std::path::Path) -> std::io::Result<Vec<u64>> {
+    let mut out = Vec::new();
+    if !dir.exists() {
+        return Ok(out);
+    }
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        for entry in std::fs::read_dir(&d)? {
+            let entry = entry?;
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else {
+                out.push(entry.metadata()?.len());
+            }
+        }
+    }
+    Ok(out)
+}

@@ -1,0 +1,72 @@
+//! Ablation A1 — slice-cache size sweep (§V-E: "the cache size is
+//! configurable and has to balance memory needs with access locality").
+//!
+//! Sweeps c over a full-scan workload and the SSSP app; reports modeled
+//! disk time, hit rate and evictions. Expected: a knee at c ≈ number of
+//! attribute slices live per bin group (the paper's c14 = one slot per
+//! attribute), flat beyond.
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use goffish::apps::SsspApp;
+use goffish::datagen::{traceroute, CollectionSource};
+use goffish::gofs::Projection;
+use goffish::gopher::RunOptions;
+use goffish::metrics::Metrics;
+use goffish::util::bench::{BenchArgs, Table};
+use std::sync::Arc;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let scale = BenchScale::from_args(&args);
+    let gen = scale.generator();
+    let (dir, _) = deploy_cached(&gen, &scale, 20, 20);
+    let caches = [0usize, 2, 4, 8, 14, 28, 64];
+
+    let mut scan_t = Table::new(&["cache", "scan sim disk (s)", "hits", "misses", "hit rate", "evictions"]);
+    for &c in &caches {
+        let stores = open_stores(&dir, scale.hosts, c, Arc::new(Metrics::new()));
+        for store in &stores {
+            let proj = Projection::all(store.vertex_schema(), store.edge_schema());
+            for sg in store.subgraphs() {
+                for t in 0..scale.instances {
+                    let _ = store.read_instance(sg.id.local(), t, &proj).unwrap();
+                }
+            }
+        }
+        let sim: u64 = stores.iter().map(|s| s.sim_disk_ns()).sum();
+        let (h, m, e) = stores.iter().fold((0, 0, 0), |acc, s| {
+            let (h, m, e) = s.cache_stats();
+            (acc.0 + h, acc.1 + m, acc.2 + e)
+        });
+        scan_t.row(&[
+            format!("c{c}"),
+            format!("{:.2}", sim as f64 / 1e9),
+            h.to_string(),
+            m.to_string(),
+            format!("{:.1}%", 100.0 * h as f64 / (h + m).max(1) as f64),
+            e.to_string(),
+        ]);
+    }
+    scan_t.print("A1 — cache sweep, full scan (s20-i20)");
+
+    let mut sssp_t = Table::new(&["cache", "sssp total (s)", "slices read"]);
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+    for &c in &caches {
+        let (eng, _m) = engine(&dir, scale.hosts, c);
+        let app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
+        let stats = eng
+            .run(&app, &RunOptions { timesteps: Some((0..8).collect()), ..Default::default() })
+            .unwrap();
+        let total: f64 = stats
+            .per_timestep
+            .iter()
+            .map(|t| t.wall_s + t.sim_disk_ns as f64 / 1e9)
+            .sum();
+        let slices: u64 = stats.per_timestep.iter().map(|t| t.slices_read).sum();
+        sssp_t.row(&[format!("c{c}"), format!("{total:.2}"), slices.to_string()]);
+    }
+    sssp_t.print("A1 — cache sweep, iBSP SSSP (8 timesteps, s20-i20)");
+}

@@ -1,0 +1,71 @@
+//! Ablation A3 — temporal packing factor sweep (§V-C).
+//!
+//! "The number or time duration of instances packed into a slice can be
+//! tuned." Sweeps i for a sequential time-ordered scan (the access
+//! pattern packing optimizes for) and a *random-timestep* scan (the
+//! pattern it pessimizes), showing the trade-off.
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use goffish::gofs::Projection;
+use goffish::metrics::Metrics;
+use goffish::util::bench::{BenchArgs, Table};
+use goffish::util::Prng;
+use std::sync::Arc;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let scale = BenchScale::from_args(&args);
+    let gen = scale.generator();
+    let packs: Vec<usize> =
+        [1usize, 2, 4, 8, 16, 48].iter().copied().filter(|&i| i <= scale.instances).collect();
+
+    let mut t = Table::new(&[
+        "pack (i)", "slices on disk", "seq scan sim (s)", "seq slices read",
+        "random-access sim (s)", "random slices read",
+    ]);
+    for &pack in &packs {
+        let (dir, report) = deploy_cached(&gen, &scale, 20, pack);
+
+        // Sequential: every subgraph, every instance in time order.
+        let stores = open_stores(&dir, scale.hosts, 14, Arc::new(Metrics::new()));
+        for store in &stores {
+            let proj = Projection::all(store.vertex_schema(), store.edge_schema());
+            for sg in store.subgraphs() {
+                for ts in 0..scale.instances {
+                    let _ = store.read_instance(sg.id.local(), ts, &proj).unwrap();
+                }
+            }
+        }
+        let seq_sim: u64 = stores.iter().map(|s| s.sim_disk_ns()).sum();
+        let seq_misses: u64 = stores.iter().map(|s| s.cache_stats().1).sum();
+
+        // Random: same volume of reads at random timesteps.
+        let stores = open_stores(&dir, scale.hosts, 14, Arc::new(Metrics::new()));
+        let mut rng = Prng::new(42);
+        for store in &stores {
+            let proj = Projection::all(store.vertex_schema(), store.edge_schema());
+            for sg in store.subgraphs() {
+                for _ in 0..scale.instances {
+                    let ts = rng.gen_range(scale.instances as u64) as usize;
+                    let _ = store.read_instance(sg.id.local(), ts, &proj).unwrap();
+                }
+            }
+        }
+        let rnd_sim: u64 = stores.iter().map(|s| s.sim_disk_ns()).sum();
+        let rnd_misses: u64 = stores.iter().map(|s| s.cache_stats().1).sum();
+
+        t.row(&[
+            pack.to_string(),
+            report.slices_written.to_string(),
+            format!("{:.2}", seq_sim as f64 / 1e9),
+            seq_misses.to_string(),
+            format!("{:.2}", rnd_sim as f64 / 1e9),
+            rnd_misses.to_string(),
+        ]);
+    }
+    t.print("A3 — temporal packing sweep (s20, c14)");
+    println!("expected: seq cost falls with i (amortized reads); random access pays for overpacking");
+}

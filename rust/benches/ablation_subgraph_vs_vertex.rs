@@ -1,0 +1,101 @@
+//! Ablation A4 — sub-graph-centric vs vertex-centric (paper §II, [6]).
+//!
+//! "By using a subgraph as a unit of computation [...] the number of
+//! messages the framework must handle is dramatically reduced [...] and
+//! thus requires fewer supersteps." We run SSSP and WCC through both the
+//! Gopher engine and the Pregel-style vertex-centric baseline over the
+//! SAME template and partitioning, and compare supersteps + messages.
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use goffish::apps::{SsspApp, WccApp};
+use goffish::datagen::{traceroute, CollectionSource};
+use goffish::gopher::vertex_centric::{run_vertex_centric, undirected_of, VcSssp, VcWcc};
+use goffish::gopher::RunOptions;
+use goffish::partition::{partition_graph, PartitionOptions};
+use goffish::util::bench::{BenchArgs, Table};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let mut scale = BenchScale::from_args(&args);
+    // Vertex-centric is O(V) per superstep in this in-memory baseline;
+    // keep the default comparison modest.
+    if !args.flag("full") {
+        scale.vertices = scale.vertices.min(20_000);
+    }
+    let gen = scale.generator();
+    let template = gen.template();
+    let partitioning = partition_graph(template, &PartitionOptions::new(scale.hosts));
+    let source_idx = gen.vantages()[0];
+    let source_ext = template.ext_ids[source_idx as usize];
+
+    let mut t = Table::new(&[
+        "algorithm", "model", "supersteps", "msgs local", "msgs remote", "msg MB", "wall (s)",
+    ]);
+
+    // --- SSSP ---
+    let t0 = std::time::Instant::now();
+    let (_, vc) = run_vertex_centric(&VcSssp { source: source_idx }, template, &partitioning, 10_000);
+    t.row(&[
+        "sssp".into(),
+        "vertex-centric".into(),
+        vc.supersteps.to_string(),
+        vc.msgs_local.to_string(),
+        vc.msgs_remote.to_string(),
+        format!("{:.2}", vc.msg_bytes as f64 / 1e6),
+        format!("{:.2}", t0.elapsed().as_secs_f64()),
+    ]);
+
+    let (dir, _) = deploy_cached(&gen, &scale, 20, 20);
+    let (eng, _m) = engine(&dir, scale.hosts, 14);
+    let t0 = std::time::Instant::now();
+    let app = SsspApp::new(source_ext, traceroute::eattr::LATENCY_MS);
+    let stats = eng
+        .run(&app, &RunOptions { timesteps: Some(vec![0]), ..Default::default() })
+        .unwrap();
+    let ts = &stats.per_timestep[0];
+    t.row(&[
+        "sssp".into(),
+        "subgraph-centric".into(),
+        ts.supersteps.to_string(),
+        ts.msgs_local.to_string(),
+        ts.msgs_remote.to_string(),
+        format!("{:.2}", ts.msg_bytes_remote as f64 / 1e6),
+        format!("{:.2}", t0.elapsed().as_secs_f64()),
+    ]);
+
+    // --- WCC ---
+    let t0 = std::time::Instant::now();
+    let undirected = std::sync::Arc::new(undirected_of(template));
+    let (_, vc) = run_vertex_centric(&VcWcc { undirected }, template, &partitioning, 10_000);
+    t.row(&[
+        "wcc".into(),
+        "vertex-centric".into(),
+        vc.supersteps.to_string(),
+        vc.msgs_local.to_string(),
+        vc.msgs_remote.to_string(),
+        format!("{:.2}", vc.msg_bytes as f64 / 1e6),
+        format!("{:.2}", t0.elapsed().as_secs_f64()),
+    ]);
+
+    let t0 = std::time::Instant::now();
+    let app = WccApp::new();
+    let stats = eng
+        .run(&app, &RunOptions { timesteps: Some(vec![0]), ..Default::default() })
+        .unwrap();
+    let ts = &stats.per_timestep[0];
+    t.row(&[
+        "wcc".into(),
+        "subgraph-centric".into(),
+        ts.supersteps.to_string(),
+        ts.msgs_local.to_string(),
+        ts.msgs_remote.to_string(),
+        format!("{:.2}", ts.msg_bytes_remote as f64 / 1e6),
+        format!("{:.2}", t0.elapsed().as_secs_f64()),
+    ]);
+
+    t.print("A4 — subgraph-centric vs vertex-centric (same template + partitioning)");
+    println!("expected shape: subgraph-centric needs ~10-100x fewer supersteps and messages");
+}

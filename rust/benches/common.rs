@@ -1,0 +1,138 @@
+#![allow(dead_code)] // shared across benches; each uses a subset
+//! Shared helpers for the figure-regeneration benches.
+//!
+//! Default scale is a laptop-friendly scale-down of the paper's TR
+//! (19.4M vertices / 146 instances on 12 hosts); pass `--full` for a
+//! larger run, or override with `--vertices/--instances`. All benches
+//! print the paper-figure series as markdown tables (EXPERIMENTS.md
+//! records them) and report the disk-model time (`sim`) next to measured
+//! wall time — Fig. 6/8 shapes live in the modeled series (DESIGN.md §2.3).
+
+use goffish::cluster::ClusterSpec;
+use goffish::datagen::{TraceRouteGenerator, TraceRouteParams};
+use goffish::gofs::{deploy, DeployConfig, DeployReport, DiskModel, Store, StoreOptions};
+use goffish::gopher::GopherEngine;
+use goffish::metrics::Metrics;
+use goffish::util::bench::BenchArgs;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+pub const PAPER_HOSTS: usize = 12;
+
+pub struct BenchScale {
+    pub vertices: usize,
+    pub instances: usize,
+    pub traces: usize,
+    pub hosts: usize,
+}
+
+impl BenchScale {
+    pub fn from_args(args: &BenchArgs) -> BenchScale {
+        let full = args.flag("full");
+        BenchScale {
+            vertices: args.usize("vertices", if full { 400_000 } else { 40_000 }),
+            instances: args.usize("instances", if full { 146 } else { 48 }),
+            traces: args.usize("traces", if full { 4_000 } else { 1_200 }),
+            hosts: args.usize("hosts", PAPER_HOSTS),
+        }
+    }
+
+    pub fn generator(&self) -> TraceRouteGenerator {
+        TraceRouteGenerator::new(TraceRouteParams {
+            n_vertices: self.vertices,
+            n_instances: self.instances,
+            traces_per_instance: self.traces,
+            ..Default::default()
+        })
+    }
+}
+
+/// Deploy (cached across bench invocations in the target dir) and return
+/// the deployment directory + report.
+pub fn deploy_cached(
+    gen: &TraceRouteGenerator,
+    scale: &BenchScale,
+    bins: usize,
+    pack: usize,
+) -> (PathBuf, DeployReport) {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target/bench-deployments")
+        .join(format!(
+            "tr-v{}-t{}-p{}-s{bins}-i{pack}",
+            scale.vertices, scale.instances, scale.hosts
+        ));
+    let stamp = root.join("deploy-report.txt");
+    let cfg = DeployConfig::new(scale.hosts, bins, pack);
+    if !stamp.exists() {
+        let _ = std::fs::remove_dir_all(&root);
+        let report = deploy(gen, &cfg, &root).expect("deploy failed");
+        std::fs::write(
+            &stamp,
+            format!(
+                "{} {} {} {}\n{}\n{}",
+                report.n_vertices,
+                report.n_edges,
+                report.slices_written,
+                report.bytes_written,
+                report
+                    .subgraphs_per_partition
+                    .iter()
+                    .map(|c| c.to_string())
+                    .collect::<Vec<_>>()
+                    .join(" "),
+                report
+                    .subgraph_sizes
+                    .iter()
+                    .map(|(v, e)| format!("{v},{e}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            ),
+        )
+        .unwrap();
+        (root, report)
+    } else {
+        let text = std::fs::read_to_string(&stamp).unwrap();
+        let mut lines = text.lines();
+        let head: Vec<u64> =
+            lines.next().unwrap().split_whitespace().map(|x| x.parse().unwrap()).collect();
+        let per_part: Vec<usize> =
+            lines.next().unwrap().split_whitespace().map(|x| x.parse().unwrap()).collect();
+        let sizes: Vec<(usize, usize)> = lines
+            .next()
+            .unwrap()
+            .split_whitespace()
+            .map(|p| {
+                let (v, e) = p.split_once(',').unwrap();
+                (v.parse().unwrap(), e.parse().unwrap())
+            })
+            .collect();
+        let report = DeployReport {
+            n_parts: scale.hosts,
+            n_instances: scale.instances,
+            n_vertices: head[0] as usize,
+            n_edges: head[1] as usize,
+            subgraphs_per_partition: per_part,
+            subgraph_sizes: sizes,
+            slices_written: head[2] as usize,
+            bytes_written: head[3],
+        };
+        (root, report)
+    }
+}
+
+/// Open all partitions with a given cache size and the HDD disk model.
+pub fn open_stores(dir: &PathBuf, hosts: usize, cache: usize, metrics: Arc<Metrics>) -> Vec<Store> {
+    let opts = StoreOptions { cache_slots: cache, disk: DiskModel::default(), metrics };
+    (0..hosts).map(|p| Store::open(dir, p, opts.clone()).expect("open store")).collect()
+}
+
+pub fn engine(dir: &PathBuf, hosts: usize, cache: usize) -> (GopherEngine, Arc<Metrics>) {
+    let metrics = Arc::new(Metrics::new());
+    let stores = open_stores(dir, hosts, cache, metrics.clone());
+    (GopherEngine::new(stores, ClusterSpec::new(hosts), metrics.clone()), metrics)
+}
+
+/// Paper configuration label.
+pub fn cfg_label(bins: usize, pack: usize, cache: usize) -> String {
+    format!("s{bins}-i{pack}-c{cache}")
+}

@@ -1,0 +1,89 @@
+//! Fig. 5 (+ §VI-A stats): dataset characterization.
+//!
+//! (a) frequency distribution of vertices & edges per subgraph (log2
+//! buckets), (b) number of subgraphs per partition, plus the dataset
+//! stats table (vertices, edges, diameter, instance count). Paper shape:
+//! power-law subgraph sizes spanning ~1 to ~30% of the graph; 1-285
+//! subgraphs per partition with an inverse size correlation.
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use goffish::datagen::CollectionSource;
+use goffish::util::bench::{BenchArgs, Table};
+use goffish::util::histogram::LogHistogram;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let scale = BenchScale::from_args(&args);
+    let gen = scale.generator();
+    let (_, report) = deploy_cached(&gen, &scale, 20, 20);
+
+    // --- §VI-A dataset stats table (E5). ---
+    let mut stats = Table::new(&["metric", "paper (TR)", "this run (synthetic TR)"]);
+    let t = gen.template();
+    stats.row(&["vertices".into(), "19,442,778".into(), t.n_vertices().to_string()]);
+    stats.row(&["edges".into(), "22,782,842".into(), t.n_edges().to_string()]);
+    stats.row(&[
+        "edge:vertex ratio".into(),
+        "1.17".into(),
+        format!("{:.2}", t.n_edges() as f64 / t.n_vertices() as f64),
+    ]);
+    stats.row(&["diameter".into(), "25".into(), t.estimate_diameter(0).to_string()]);
+    stats.row(&["instances".into(), "146".into(), gen.n_instances().to_string()]);
+    stats.row(&["vertex/edge attrs".into(), "7 / 7".into(), format!(
+        "{} / {}",
+        t.vertex_schema.len(),
+        t.edge_schema.len()
+    )]);
+    stats.row(&["partitions".into(), "12".into(), report.n_parts.to_string()]);
+    stats.print("§VI-A dataset statistics (E5)");
+
+    // --- Fig. 5(a): vertices & edges per subgraph, log-bucketed. ---
+    let mut vh = LogHistogram::new();
+    let mut eh = LogHistogram::new();
+    for &(v, e) in &report.subgraph_sizes {
+        vh.record(v as u64);
+        eh.record(e as u64);
+    }
+    let mut fig5a = Table::new(&["size bucket [lo,hi)", "# subgraphs by |V|", "# subgraphs by |E|"]);
+    let rows = vh.rows();
+    let erows = eh.rows();
+    for i in 0..rows.len().max(erows.len()) {
+        let (lo, hi) = rows
+            .get(i)
+            .map(|r| (r.0, r.1))
+            .or_else(|| erows.get(i).map(|r| (r.0, r.1)))
+            .unwrap();
+        let vc = rows.get(i).map(|r| r.2).unwrap_or(0);
+        let ec = erows.get(i).map(|r| r.2).unwrap_or(0) + if i == 0 { eh.zeros() } else { 0 };
+        fig5a.row(&[format!("[{lo}, {hi})"), vc.to_string(), ec.to_string()]);
+    }
+    fig5a.print("Fig. 5(a) — frequency distribution of vertices/edges per subgraph (log scale)");
+
+    // --- Fig. 5(b): subgraphs per partition. ---
+    let mut fig5b = Table::new(&["partition", "# subgraphs", "vertices", "largest subgraph |V|"]);
+    let mut idx = 0usize;
+    for (p, &count) in report.subgraphs_per_partition.iter().enumerate() {
+        let slice = &report.subgraph_sizes[idx..idx + count];
+        idx += count;
+        let verts: usize = slice.iter().map(|s| s.0).sum();
+        let largest = slice.iter().map(|s| s.0).max().unwrap_or(0);
+        fig5b.row(&[p.to_string(), count.to_string(), verts.to_string(), largest.to_string()]);
+    }
+    fig5b.print("Fig. 5(b) — subgraphs per partition");
+
+    let min = report.subgraphs_per_partition.iter().min().unwrap();
+    let max = report.subgraphs_per_partition.iter().max().unwrap();
+    println!(
+        "shape check: subgraphs/partition ranges {min}..{max} (paper: 1..285); \
+         size skew max/median |V| = {:.0}x",
+        {
+            let mut vs: Vec<usize> = report.subgraph_sizes.iter().map(|s| s.0).collect();
+            vs.sort_unstable();
+            let median = vs[vs.len() / 2].max(1);
+            *vs.last().unwrap() as f64 / median as f64
+        }
+    );
+}

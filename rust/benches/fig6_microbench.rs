@@ -1,0 +1,121 @@
+//! Fig. 6 — GoFS layout micro-benchmark.
+//!
+//! "For each of the deployments, we scan through all the sub-graphs, and
+//! for each, we load all their instances. We then sum the total read time
+//! for all instances for each sub-graph, and plot this total read time
+//! cumulatively for all the sub-graphs [sorted largest to smallest]."
+//!
+//! Series: {s20,s40} × {i1,i20} with c14, plus s20-i20-c0. Expected
+//! shapes (paper §VI-B): i20 loses on the largest subgraphs but wins past
+//! a cross-over (~80th subgraph for s20); 20 bins beat 40 bins, more so
+//! without temporal packing; c0 ends ~3× above c14.
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use goffish::gofs::{Projection, Store};
+use goffish::metrics::Metrics;
+use goffish::util::bench::{BenchArgs, Table};
+use std::sync::Arc;
+
+/// Scan: per subgraph (bin-major for locality), read all instances with a
+/// full projection; return per-subgraph total modeled read time (ns) and
+/// subgraph weight for sorting, plus wall seconds.
+fn scan(stores: &[Store], instances: usize) -> (Vec<(usize, u64)>, f64, u64) {
+    let mut per_sg: Vec<(usize, u64)> = Vec::new();
+    let t0 = std::time::Instant::now();
+    let mut slices = 0u64;
+    for store in stores {
+        let proj = Projection::all(store.vertex_schema(), store.edge_schema());
+        for sg in store.subgraphs() {
+            let before = store.sim_disk_ns();
+            let s0 = store.cache_stats().1;
+            for t in 0..instances {
+                let _ = store.read_instance(sg.id.local(), t, &proj).expect("read");
+            }
+            per_sg.push((sg.weight(), store.sim_disk_ns() - before));
+            slices += store.cache_stats().1 - s0;
+        }
+    }
+    (per_sg, t0.elapsed().as_secs_f64(), slices)
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let scale = BenchScale::from_args(&args);
+    let gen = scale.generator();
+
+    // (bins, pack, cache) per paper configuration.
+    let configs: Vec<(usize, usize, usize)> = vec![
+        (20, 20, 14),
+        (20, 1, 14),
+        (40, 20, 14),
+        (40, 1, 14),
+        (20, 20, 0),
+    ];
+
+    let mut series: Vec<(String, Vec<u64>)> = Vec::new(); // cumulative ns per rank
+    let mut totals = Table::new(&["config", "total modeled read (s)", "wall (s)", "slice reads"]);
+    for &(bins, pack, cache) in &configs {
+        let (dir, _) = deploy_cached(&gen, &scale, bins, pack);
+        let stores = open_stores(&dir, scale.hosts, cache, Arc::new(Metrics::new()));
+        let (mut per_sg, wall, slices) = scan(&stores, scale.instances);
+        // Sort largest -> smallest subgraph, cumulative sum of read time.
+        per_sg.sort_by_key(|&(w, _)| std::cmp::Reverse(w));
+        let mut cum = Vec::with_capacity(per_sg.len());
+        let mut acc = 0u64;
+        for &(_, ns) in &per_sg {
+            acc += ns;
+            cum.push(acc);
+        }
+        let label = cfg_label(bins, pack, cache);
+        totals.row(&[
+            label.clone(),
+            format!("{:.2}", acc as f64 / 1e9),
+            format!("{wall:.2}"),
+            slices.to_string(),
+        ]);
+        series.push((label, cum));
+    }
+
+    // Print the cumulative curves at log-spaced X (subgraph rank).
+    let n = series[0].1.len();
+    let mut xs: Vec<usize> = vec![1, 2, 5, 10, 20, 40, 80, 160, 320, 640];
+    xs.retain(|&x| x <= n);
+    if *xs.last().unwrap_or(&0) != n {
+        xs.push(n);
+    }
+    let mut fig6 = Table::new(
+        &std::iter::once("x = #subgraphs".to_string())
+            .chain(series.iter().map(|(l, _)| format!("{l} (s)")))
+            .collect::<Vec<_>>()
+            .iter()
+            .map(|s| s.as_str())
+            .collect::<Vec<_>>(),
+    );
+    for &x in &xs {
+        let mut row = vec![x.to_string()];
+        for (_, cum) in &series {
+            row.push(format!("{:.3}", cum[x - 1] as f64 / 1e9));
+        }
+        fig6.row(&row);
+    }
+    fig6.print("Fig. 6 — cumulative modeled read time, subgraphs sorted largest→smallest");
+    totals.print("Fig. 6 totals");
+
+    // Shape checks (paper prose).
+    let get = |label: &str| &series.iter().find(|(l, _)| l == label).unwrap().1;
+    let (p20, np20) = (get("s20-i20-c14"), get("s20-i1-c14"));
+    let crossover = (0..n).find(|&i| p20[i] < np20[i]);
+    println!(
+        "\nshape: i20-vs-i1 crossover at subgraph #{:?} (paper: ~80); ",
+        crossover.map(|c| c + 1)
+    );
+    let (c0, c14) = (get("s20-i20-c0"), get("s20-i20-c14"));
+    println!(
+        "shape: c0/c14 total ratio = {:.2}x (paper: ~3x); s40-i1/s20-i1 = {:.2}x (>1 expected)",
+        c0[n - 1] as f64 / c14[n - 1] as f64,
+        get("s40-i1-c14")[n - 1] as f64 / np20[n - 1] as f64,
+    );
+}

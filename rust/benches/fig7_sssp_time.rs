@@ -1,0 +1,81 @@
+//! Fig. 7 — time per iBSP timestep for the SSSP application.
+//!
+//! "The Y axis shows the total time taken by one BSP while the X axis
+//! shows sequentially increasing instances, with the first 11 shown."
+//! Configurations: s20-i20-c0, s20-i1-c14, s20-i20-c14. Expected shapes:
+//! timestep 0 dominates (template load, done once); the no-cache config
+//! pays a visible penalty; packing differences are muted because SSSP is
+//! compute-bound.
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use goffish::apps::SsspApp;
+use goffish::datagen::{traceroute, CollectionSource};
+use goffish::gopher::RunOptions;
+use goffish::util::bench::{BenchArgs, Table};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let scale = BenchScale::from_args(&args);
+    let n_ts = args.usize("timesteps", 11).min(scale.instances);
+    let gen = scale.generator();
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+
+    // Paper's three configs, plus s20-i20-c28: with c14 < s20 bins the LRU
+    // cycles and temporal packing gets no cross-timestep reuse (a finding
+    // of this reproduction); 28 slots >= bins shows the §V-C effect.
+    let configs: Vec<(usize, usize, usize)> = vec![(20, 20, 0), (20, 1, 14), (20, 20, 14), (20, 20, 28)];
+    let mut all: Vec<(String, Vec<f64>, f64)> = Vec::new(); // per-ts seconds + template load
+
+    for &(bins, pack, cache) in &configs {
+        let (dir, _) = deploy_cached(&gen, &scale, bins, pack);
+        let t0 = std::time::Instant::now();
+        let (eng, _metrics) = engine(&dir, scale.hosts, cache);
+        // Template + metadata load happens at open; the paper folds it
+        // into timestep 0 ("Timestep 0 includes template load time").
+        let template_load_s = t0.elapsed().as_secs_f64()
+            + eng.stores().iter().map(|s| s.sim_disk_ns()).sum::<u64>() as f64 / 1e9;
+
+        let app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
+        let stats = eng
+            .run(&app, &RunOptions { timesteps: Some((0..n_ts).collect()), ..Default::default() })
+            .expect("sssp run");
+        let per_ts: Vec<f64> = stats
+            .per_timestep
+            .iter()
+            .map(|t| t.wall_s + t.sim_disk_ns as f64 / 1e9 + t.sim_net_ns as f64 / 1e9)
+            .collect();
+        all.push((cfg_label(bins, pack, cache), per_ts, template_load_s));
+    }
+
+    let mut fig7 = Table::new(
+        &std::iter::once("timestep".to_string())
+            .chain(all.iter().map(|(l, _, _)| format!("{l} (s)")))
+            .collect::<Vec<_>>()
+            .iter()
+            .map(|s| s.as_str())
+            .collect::<Vec<_>>(),
+    );
+    for t in 0..n_ts {
+        let mut row = vec![t.to_string()];
+        for (_, per_ts, tmpl) in &all {
+            let v = per_ts[t] + if t == 0 { *tmpl } else { 0.0 };
+            row.push(format!("{v:.3}"));
+        }
+        fig7.row(&row);
+    }
+    fig7.print("Fig. 7 — time per iBSP SSSP timestep (modeled disk+net included)");
+
+    // Shape checks.
+    for (label, per_ts, tmpl) in &all {
+        let t0 = per_ts[0] + tmpl;
+        let rest: f64 = per_ts[1..].iter().sum::<f64>() / (per_ts.len() - 1) as f64;
+        println!("shape [{label}]: timestep0 = {t0:.3}s vs later mean {rest:.3}s (t0 dominates: {})",
+            t0 > rest);
+    }
+    let t_c0: f64 = all[0].1[1..].iter().sum();
+    let t_c14: f64 = all[2].1[1..].iter().sum();
+    println!("shape: no-cache penalty over timesteps 1..: {:.2}x (>1 expected)", t_c0 / t_c14);
+}

@@ -1,0 +1,71 @@
+//! Fig. 8 — cumulative slices loaded vs. timestep for the iBSP SSSP run.
+//!
+//! "The lack of caching shows the high slope for s20-i20-c0, while we see
+//! a tangible difference in the number of slices read with and without
+//! temporal packing." Same three configurations as Fig. 7.
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use goffish::apps::SsspApp;
+use goffish::datagen::{traceroute, CollectionSource};
+use goffish::gopher::RunOptions;
+use goffish::util::bench::{BenchArgs, Table};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let scale = BenchScale::from_args(&args);
+    let n_ts = args.usize("timesteps", 11).min(scale.instances);
+    let gen = scale.generator();
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+
+    // Paper's three configs, plus s20-i20-c28: with c14 < s20 bins the LRU
+    // cycles and temporal packing gets no cross-timestep reuse (a finding
+    // of this reproduction); 28 slots >= bins shows the §V-C effect.
+    let configs: Vec<(usize, usize, usize)> = vec![(20, 20, 0), (20, 1, 14), (20, 20, 14), (20, 20, 28)];
+    let mut all: Vec<(String, Vec<u64>)> = Vec::new();
+
+    for &(bins, pack, cache) in &configs {
+        let (dir, _) = deploy_cached(&gen, &scale, bins, pack);
+        let (eng, _metrics) = engine(&dir, scale.hosts, cache);
+        let app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
+        let stats = eng
+            .run(&app, &RunOptions { timesteps: Some((0..n_ts).collect()), ..Default::default() })
+            .expect("sssp run");
+        let mut cum = Vec::with_capacity(n_ts);
+        let mut acc = 0u64;
+        for t in &stats.per_timestep {
+            acc += t.slices_read;
+            cum.push(acc);
+        }
+        all.push((cfg_label(bins, pack, cache), cum));
+    }
+
+    let mut fig8 = Table::new(
+        &std::iter::once("timestep".to_string())
+            .chain(all.iter().map(|(l, _)| format!("{l} slices")))
+            .collect::<Vec<_>>()
+            .iter()
+            .map(|s| s.as_str())
+            .collect::<Vec<_>>(),
+    );
+    for t in 0..n_ts {
+        let mut row = vec![t.to_string()];
+        for (_, cum) in &all {
+            row.push(cum[t].to_string());
+        }
+        fig8.row(&row);
+    }
+    fig8.print("Fig. 8 — cumulative slices loaded per timestep (iBSP SSSP)");
+
+    let last = n_ts - 1;
+    let by = |l: &str| all.iter().find(|(x, _)| x == l).unwrap().1[last];
+    println!(
+        "\nshape: slope c0/c14 = {:.2}x (steepest expected for c0); i1-c14/i20-c14 = {:.2}x; \
+         i1-c14/i20-c28 = {:.2}x (packing pays once cache >= bins)",
+        by("s20-i20-c0") as f64 / by("s20-i20-c14") as f64,
+        by("s20-i1-c14") as f64 / by("s20-i20-c14") as f64,
+        by("s20-i1-c14") as f64 / by("s20-i20-c28") as f64,
+    );
+}

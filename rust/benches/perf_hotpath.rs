@@ -1,0 +1,240 @@
+//! P1 — hot-path microbenchmarks for the §Perf optimization loop.
+//!
+//! Measures each layer's critical operation in isolation so before/after
+//! deltas in EXPERIMENTS.md §Perf are attributable:
+//!   L3: slice decode, cache hit path, superstep barrier overhead,
+//!       message routing;
+//!   L1/L2 via PJRT: kernel dispatch latency + tile throughput vs the
+//!       scalar backend at several subgraph sizes.
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use goffish::gofs::{Projection, SliceFile};
+use goffish::graph::Schema;
+use goffish::gopher::{
+    Application, ComputeCtx, GopherEngine, Pattern, Payload, RunOptions, SubgraphProgram,
+};
+use goffish::metrics::Metrics;
+use goffish::partition::Subgraph;
+use goffish::runtime::pjrt::{PjrtBackend, PjrtEngine};
+use goffish::runtime::{LocalSpmv, ScalarBackend};
+use goffish::util::bench::{BenchArgs, Bencher, Table};
+use goffish::util::Prng;
+use std::sync::Arc;
+
+/// No-op app used to time pure engine overhead.
+struct NoopApp {
+    supersteps: usize,
+}
+struct NoopProgram {
+    supersteps: usize,
+}
+impl SubgraphProgram for NoopProgram {
+    fn compute(&mut self, ctx: &mut ComputeCtx<'_>, _sgi: &goffish::gofs::SubgraphInstance, _msgs: &[Payload]) {
+        if ctx.superstep >= self.supersteps {
+            ctx.vote_to_halt();
+        }
+    }
+}
+impl Application for NoopApp {
+    fn name(&self) -> &str {
+        "noop"
+    }
+    fn pattern(&self) -> Pattern {
+        Pattern::Sequential
+    }
+    fn projection(&self, _: &Schema, _: &Schema) -> Projection {
+        Projection::none()
+    }
+    fn create(&self, _sg: &Subgraph) -> Box<dyn SubgraphProgram> {
+        Box::new(NoopProgram { supersteps: self.supersteps })
+    }
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let scale = BenchScale::from_args(&args);
+    let gen = scale.generator();
+    let (dir, _) = deploy_cached(&gen, &scale, 20, 20);
+    let b = Bencher::new(1, args.usize("iters", 5));
+    let mut report = Table::new(&["probe", "value", "unit"]);
+
+    // --- L3: slice decode throughput. ---
+    let sample = {
+        // find a reasonably sized attribute slice
+        let mut best: Option<(std::path::PathBuf, u64)> = None;
+        let mut stack = vec![dir.join("part-0/attr")];
+        while let Some(d) = stack.pop() {
+            for e in std::fs::read_dir(&d).unwrap() {
+                let e = e.unwrap();
+                if e.path().is_dir() {
+                    stack.push(e.path());
+                } else {
+                    let len = e.metadata().unwrap().len();
+                    if best.as_ref().map(|(_, l)| len > *l).unwrap_or(true) {
+                        best = Some((e.path(), len));
+                    }
+                }
+            }
+        }
+        best.unwrap()
+    };
+    let bytes = std::fs::read(&sample.0).unwrap();
+    let stats = b.bench("slice decode", || SliceFile::from_bytes(&bytes).unwrap());
+    report.row(&[
+        "slice decode".into(),
+        format!("{:.1}", sample.1 as f64 / stats.min() / 1e6),
+        "MB/s (on-disk bytes)".into(),
+    ]);
+
+    // --- L3: cache hit path. ---
+    let stores = open_stores(&dir, 1, 64, Arc::new(Metrics::new()));
+    let store = &stores[0];
+    let proj = Projection::all(store.vertex_schema(), store.edge_schema());
+    let sg0 = store.subgraphs()[0].id.local();
+    let _ = store.read_instance(sg0, 0, &proj).unwrap(); // warm
+    let stats = b.bench("cached read_instance", || store.read_instance(sg0, 0, &proj).unwrap());
+    report.row(&[
+        "cached read_instance".into(),
+        format!("{:.1}", stats.min() * 1e6),
+        "us".into(),
+    ]);
+
+    // --- L3: superstep barrier overhead (noop app, many supersteps). ---
+    let (eng, _m) = engine(&dir, scale.hosts, 28);
+    let supersteps = 50usize;
+    let stats = b.bench("noop supersteps", || {
+        eng.run(
+            &NoopApp { supersteps },
+            &RunOptions { timesteps: Some(vec![0]), ..Default::default() },
+        )
+        .unwrap()
+    });
+    let n_sg = eng.n_subgraphs();
+    report.row(&[
+        "superstep barrier+dispatch".into(),
+        format!("{:.1}", stats.min() / supersteps as f64 * 1e6),
+        format!("us/superstep ({n_sg} subgraphs)"),
+    ]);
+
+    // --- L3: message routing throughput. ---
+    let routing = bench_message_routing(&eng, &b);
+    report.row(&[
+        "message routing".into(),
+        format!("{:.2}", routing / 1e6),
+        "M msgs/s".into(),
+    ]);
+
+    // --- L1/L2: kernel dispatch + throughput vs scalar. ---
+    match PjrtEngine::load(
+        &std::path::PathBuf::from(
+            std::env::var("GOFFISH_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+        ),
+        None,
+        Arc::new(Metrics::new()),
+    ) {
+        Ok(pjrt) => {
+            let kb = pjrt.b;
+            let kk = pjrt.k;
+            let kernel = format!("pagerank_b{kb}_k{kk}");
+            let a = vec![0.5f32; kk * kb * kb];
+            let x = vec![1.0f32; kk * kb];
+            let stats = b.bench("pjrt kernel call", || {
+                pjrt.execute(&kernel, vec![(a.clone(), vec![kk, kb, kb]), (x.clone(), vec![kk, kb])])
+                    .unwrap()
+            });
+            let flops = 2.0 * (kk * kb * kb) as f64;
+            report.row(&[
+                format!("pjrt kernel b={kb} k={kk}"),
+                format!("{:.2}", flops / stats.min() / 1e9),
+                "GFLOP/s (dispatch incl.)".into(),
+            ]);
+
+            // End-to-end prepared-op apply: pjrt vs scalar on a dense-ish subgraph.
+            for n in [512usize, 2048] {
+                let sg = dense_subgraph(n, 8);
+                let active = vec![true; sg.n_local_edges()];
+                let backend = PjrtBackend::new(pjrt.clone());
+                let op_p = LocalSpmv::prepare(&backend, &sg, &active);
+                let op_s = LocalSpmv::prepare(&ScalarBackend, &sg, &active);
+                let xs: Vec<f32> = (0..n).map(|i| i as f32 / n as f32).collect();
+                let mut y = vec![0.0f32; n];
+                let sp = b.bench(&format!("pjrt spmv n={n}"), || op_p.apply(&xs, &mut y));
+                let ss = b.bench(&format!("scalar spmv n={n}"), || op_s.apply(&xs, &mut y));
+                report.row(&[
+                    format!("spmv n={n} ({} edges)", sg.n_local_edges()),
+                    format!("{:.2}x", ss.min() / sp.min()),
+                    "pjrt speedup over scalar (>1 = faster)".into(),
+                ]);
+            }
+        }
+        Err(e) => println!("pjrt probes skipped: {e}"),
+    }
+
+    report.print("P1 — hot-path probes");
+}
+
+/// A single-subgraph graph with average degree `deg` (for kernel benches).
+fn dense_subgraph(n: usize, deg: usize) -> Subgraph {
+    use goffish::graph::TemplateBuilder;
+    use goffish::partition::{extract_partitions, Partitioning};
+    let mut rng = Prng::new(99);
+    let mut b = TemplateBuilder::new(Schema::new(vec![]), Schema::new(vec![]));
+    for i in 0..n {
+        b.vertex(i as u64);
+    }
+    for i in 0..n - 1 {
+        b.edge(i as u32, i as u32 + 1);
+    }
+    for _ in 0..n * (deg - 1) {
+        let s = rng.gen_range(n as u64) as u32;
+        let d = rng.gen_range(n as u64) as u32;
+        b.edge(s, d);
+    }
+    let t = b.build();
+    let p = Partitioning { n_parts: 1, assign: vec![0; n] };
+    extract_partitions(&t, &p).remove(0).subgraphs.remove(0)
+}
+
+/// Time a one-superstep all-to-neighbors broadcast; msgs/sec routed.
+fn bench_message_routing(eng: &GopherEngine, b: &Bencher) -> f64 {
+    struct Blast;
+    struct BlastProgram;
+    impl SubgraphProgram for BlastProgram {
+        fn compute(&mut self, ctx: &mut ComputeCtx<'_>, sgi: &goffish::gofs::SubgraphInstance, msgs: &[Payload]) {
+            if ctx.superstep == 1 {
+                for r in sgi.sg.remote.iter().take(64) {
+                    ctx.send_to_subgraph(r.dst_subgraph, vec![0u8; 16]);
+                }
+            }
+            let _ = msgs;
+            ctx.vote_to_halt();
+        }
+    }
+    impl Application for Blast {
+        fn name(&self) -> &str {
+            "blast"
+        }
+        fn pattern(&self) -> Pattern {
+            Pattern::Sequential
+        }
+        fn projection(&self, _: &Schema, _: &Schema) -> Projection {
+            Projection::none()
+        }
+        fn create(&self, _sg: &Subgraph) -> Box<dyn SubgraphProgram> {
+            Box::new(BlastProgram)
+        }
+    }
+    let stats = b.bench("message blast", || {
+        eng.run(&Blast, &RunOptions { timesteps: Some(vec![0]), ..Default::default() }).unwrap()
+    });
+    let msgs: u64 = {
+        let s = eng
+            .run(&Blast, &RunOptions { timesteps: Some(vec![0]), ..Default::default() })
+            .unwrap();
+        s.per_timestep[0].msgs_local + s.per_timestep[0].msgs_remote
+    };
+    msgs as f64 / stats.min()
+}

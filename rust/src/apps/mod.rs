@@ -1,0 +1,26 @@
+//! The paper's applications, one per design pattern (§VI-A):
+//!
+//! * [`sssp`] — temporal single-source shortest path, **sequentially
+//!   dependent** (distances incrementally aggregated between instances);
+//! * [`nhop`] — N-hop latency histogram, **eventually dependent**
+//!   (per-instance histograms folded in the Merge step);
+//! * [`pagerank`] — per-instance PageRank over the edges active in that
+//!   window, **independent**;
+//! * [`vehicle_track`] — Algorithm 1's temporal path traversal over a road
+//!   network, **sequentially dependent**;
+//! * [`wcc`] — subgraph-centric connected components (structure-only
+//!   warm-up app; baseline for the vertex-centric comparison).
+
+pub mod nhop;
+pub mod pagerank;
+pub mod pr_stability;
+pub mod sssp;
+pub mod vehicle_track;
+pub mod wcc;
+
+pub use nhop::NHopApp;
+pub use pagerank::PageRankApp;
+pub use pr_stability::PrStabilityApp;
+pub use sssp::SsspApp;
+pub use vehicle_track::VehicleTrackApp;
+pub use wcc::WccApp;

@@ -1,0 +1,221 @@
+//! N-hop latency histogram (eventually dependent pattern; §VI-A).
+//!
+//! "N-hop latency builds a histogram of latency times taken to reach IPs
+//! that are 'N' hops from a source IP; we use N=6. These histograms are
+//! folded into a composite in the merge step."
+//!
+//! Per instance: a BFS from the source bounded at N hops, carrying the
+//! cumulative mean-latency along minimal-hop paths. Vertices first reached
+//! at exactly N hops contribute their latency to a per-subgraph partial
+//! histogram, shipped to the Merge step via `send_to_merge`; Merge folds
+//! all partials (across subgraphs *and* timesteps) into the composite.
+
+use crate::apps::sssp::mean_weight;
+use crate::gofs::{Projection, SubgraphInstance};
+use crate::graph::{Schema, VertexId};
+use crate::gopher::{
+    Application, ComputeCtx, MsgReader, MsgWriter, Pattern, Payload, SubgraphProgram,
+};
+use crate::partition::Subgraph;
+use crate::util::Histogram;
+use std::sync::{Arc, Mutex};
+
+/// Composite histogram produced by the Merge step.
+#[derive(Debug, Default)]
+pub struct NHopResults {
+    pub composite: Mutex<Option<Histogram>>,
+    pub partials_merged: Mutex<usize>,
+}
+
+pub struct NHopApp {
+    pub source_ext: VertexId,
+    pub n_hops: u32,
+    /// Edge attribute for latency.
+    pub weight_attr: usize,
+    /// Histogram bounds (ms) and bucket count.
+    pub hist_lo: f64,
+    pub hist_hi: f64,
+    pub hist_buckets: usize,
+    pub results: Arc<NHopResults>,
+}
+
+impl NHopApp {
+    pub fn new(source_ext: VertexId, n_hops: u32, weight_attr: usize) -> Self {
+        NHopApp {
+            source_ext,
+            n_hops,
+            weight_attr,
+            hist_lo: 0.0,
+            hist_hi: 500.0,
+            hist_buckets: 50,
+            results: Arc::new(NHopResults::default()),
+        }
+    }
+}
+
+impl Application for NHopApp {
+    fn name(&self) -> &str {
+        "nhop"
+    }
+
+    fn pattern(&self) -> Pattern {
+        Pattern::EventuallyDependent
+    }
+
+    fn projection(&self, _vs: &Schema, es: &Schema) -> Projection {
+        Projection { vertex_attrs: vec![], edge_attrs: vec![self.weight_attr.min(es.len() - 1)] }
+    }
+
+    fn create(&self, sg: &Subgraph) -> Box<dyn SubgraphProgram> {
+        Box::new(NHopProgram {
+            source_ext: self.source_ext,
+            n_hops: self.n_hops,
+            weight_attr: self.weight_attr,
+            hist_lo: self.hist_lo,
+            hist_hi: self.hist_hi,
+            hist_buckets: self.hist_buckets,
+            hops: vec![u32::MAX; sg.n_vertices()],
+            lat: vec![f32::INFINITY; sg.n_vertices()],
+            local_w: Vec::new(),
+            remote_w: Vec::new(),
+        })
+    }
+
+    fn merge(&self, msgs: Vec<Payload>) {
+        let mut composite = Histogram::new(self.hist_lo, self.hist_hi, self.hist_buckets);
+        let mut n = 0usize;
+        for m in msgs {
+            if let Some(h) = Histogram::from_bytes(&m) {
+                composite.fold(&h);
+                n += 1;
+            }
+        }
+        *self.results.composite.lock().unwrap() = Some(composite);
+        *self.results.partials_merged.lock().unwrap() = n;
+    }
+}
+
+struct NHopProgram {
+    source_ext: VertexId,
+    n_hops: u32,
+    weight_attr: usize,
+    hist_lo: f64,
+    hist_hi: f64,
+    hist_buckets: usize,
+    /// Min hops per local vertex.
+    hops: Vec<u32>,
+    /// Latency along the minimal-hop path used.
+    lat: Vec<f32>,
+    local_w: Vec<f32>,
+    remote_w: Vec<f32>,
+}
+
+impl NHopProgram {
+    /// Expand the frontier (vertex, hops, lat) through local edges up to
+    /// `n_hops`, recording newly fixed exactly-N vertices into `hist`.
+    fn expand(
+        &mut self,
+        sg: &Subgraph,
+        mut frontier: Vec<(u32, u32, f32)>,
+        hist: &mut Histogram,
+        recorded: &mut u64,
+    ) {
+        while let Some((v, h, l)) = frontier.pop() {
+            if h >= self.n_hops {
+                continue;
+            }
+            for (u, pos) in sg.local.out_edges(v) {
+                let w = self.local_w[pos as usize];
+                if !w.is_finite() {
+                    continue;
+                }
+                let (nh, nl) = (h + 1, l + w);
+                let ui = u as usize;
+                // Keep minimal hops; break hop ties by lower latency.
+                if nh < self.hops[ui] || (nh == self.hops[ui] && nl < self.lat[ui]) {
+                    let newly_n = nh == self.n_hops && self.hops[ui] > self.n_hops;
+                    self.hops[ui] = nh;
+                    self.lat[ui] = nl;
+                    if newly_n {
+                        hist.record(nl as f64);
+                        *recorded += 1;
+                    }
+                    frontier.push((u, nh, nl));
+                }
+            }
+        }
+    }
+}
+
+impl SubgraphProgram for NHopProgram {
+    fn compute(&mut self, ctx: &mut ComputeCtx<'_>, sgi: &SubgraphInstance, msgs: &[Payload]) {
+        let sg = &sgi.sg;
+        if ctx.superstep == 1 {
+            let n_local = sg.n_local_edges();
+            self.local_w = (0..n_local).map(|p| mean_weight(sgi, self.weight_attr, p)).collect();
+            self.remote_w = (0..sg.n_remote_edges())
+                .map(|r| mean_weight(sgi, self.weight_attr, n_local + r))
+                .collect();
+        }
+
+        let mut frontier: Vec<(u32, u32, f32)> = Vec::new();
+        let mut hist = Histogram::new(self.hist_lo, self.hist_hi, self.hist_buckets);
+        let mut recorded = 0u64;
+
+        if ctx.superstep == 1 {
+            if let Some(p) = sg.ext_ids.iter().position(|&e| e == self.source_ext) {
+                self.hops[p] = 0;
+                self.lat[p] = 0.0;
+                frontier.push((p as u32, 0, 0.0));
+            }
+        }
+        for m in msgs {
+            let mut r = MsgReader::new(m);
+            // (global vertex, hops, latency)
+            if let (Ok(gv), Ok(h), Ok(l)) = (r.u32(), r.u32(), r.f64()) {
+                if let Some(lv) = sg.local_of(gv) {
+                    let (lv, l) = (lv as usize, l as f32);
+                    if h < self.hops[lv] || (h == self.hops[lv] && l < self.lat[lv]) {
+                        let newly_n = h == self.n_hops && self.hops[lv] > self.n_hops;
+                        self.hops[lv] = h;
+                        self.lat[lv] = l;
+                        if newly_n {
+                            hist.record(l as f64);
+                            recorded += 1;
+                        }
+                        frontier.push((lv as u32, h, l));
+                    }
+                }
+            }
+        }
+
+        if !frontier.is_empty() {
+            self.expand(sg, frontier, &mut hist, &mut recorded);
+            // Propagate across remote edges from vertices below the bound.
+            for (ri, r) in sg.remote.iter().enumerate() {
+                let v = r.src_local as usize;
+                let w = self.remote_w[ri];
+                if self.hops[v] < self.n_hops && w.is_finite() {
+                    let msg = MsgWriter::new()
+                        .u32(r.dst_global)
+                        .u32(self.hops[v] + 1)
+                        .f64((self.lat[v] + w) as f64)
+                        .finish();
+                    ctx.send_to_subgraph(r.dst_subgraph, msg);
+                }
+            }
+        }
+        if recorded > 0 {
+            ctx.send_to_merge(hist.to_bytes());
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+// (End-to-end tests live in rust/tests/integration_apps.rs — the app
+// needs a deployed collection and an engine.)
+
+/// Convenience for benches: the composite histogram's total count.
+pub fn composite_total(results: &NHopResults) -> u64 {
+    results.composite.lock().unwrap().as_ref().map(|h| h.total()).unwrap_or(0)
+}

@@ -1,0 +1,240 @@
+//! PageRank stability over time (§III-B "clustering" class).
+//!
+//! "Applications that can be placed in this category range from studies
+//! on the PageRank stability over time to analyzing the dynamics of a
+//! person's social network" — each instance computes its own PageRank
+//! independently, then a Merge step folds the per-instance results into a
+//! stability report: for each subgraph, the drift of its rank mass across
+//! the series. Exercises the eventually-dependent pattern with a
+//! *numeric* merge (vs. N-hop's histogram fold).
+
+use crate::gofs::{Projection, SubgraphInstance};
+use crate::graph::{Schema, SubgraphId, Timestep};
+use crate::gopher::{
+    Application, ComputeCtx, MsgReader, MsgWriter, Pattern, Payload, SubgraphProgram,
+};
+use crate::partition::Subgraph;
+use crate::runtime::LocalSpmv;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Stability report produced by Merge.
+#[derive(Debug, Clone, Default)]
+pub struct StabilityReport {
+    /// Per subgraph: (mean rank mass, max |mass_t − mean| across t).
+    pub per_subgraph: Vec<(SubgraphId, f64, f64)>,
+    /// Timesteps folded.
+    pub n_timesteps: usize,
+}
+
+impl StabilityReport {
+    /// Subgraphs whose mass drifts more than `frac` of its mean — the
+    /// "interesting" time-evolving regions.
+    pub fn unstable(&self, frac: f64) -> Vec<SubgraphId> {
+        self.per_subgraph
+            .iter()
+            .filter(|(_, mean, dev)| *mean > 0.0 && dev / mean > frac)
+            .map(|(id, _, _)| *id)
+            .collect()
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct PrStabilityResults {
+    pub report: Mutex<Option<StabilityReport>>,
+}
+
+/// Eventually-dependent PageRank-stability application. Internally reuses
+/// the same synchronous per-instance PageRank as [`super::PageRankApp`],
+/// but ships each (timestep, subgraph) rank mass to Merge instead of a
+/// shared sink — the composition the paper's pattern taxonomy prescribes.
+pub struct PrStabilityApp {
+    pub n_total: usize,
+    pub iterations: usize,
+    pub damping: f32,
+    pub active_attr: Option<usize>,
+    pub backend: Arc<dyn LocalSpmv>,
+    pub results: Arc<PrStabilityResults>,
+}
+
+impl PrStabilityApp {
+    pub fn new(n_total: usize, active_attr: Option<usize>, backend: Arc<dyn LocalSpmv>) -> Self {
+        PrStabilityApp {
+            n_total,
+            iterations: 10,
+            damping: 0.85,
+            active_attr,
+            backend,
+            results: Arc::new(PrStabilityResults::default()),
+        }
+    }
+}
+
+impl Application for PrStabilityApp {
+    fn name(&self) -> &str {
+        "pr_stability"
+    }
+
+    fn pattern(&self) -> Pattern {
+        Pattern::EventuallyDependent
+    }
+
+    fn projection(&self, _vs: &Schema, es: &Schema) -> Projection {
+        Projection {
+            vertex_attrs: vec![],
+            edge_attrs: self.active_attr.iter().map(|&a| a.min(es.len() - 1)).collect(),
+        }
+    }
+
+    fn create(&self, sg: &Subgraph) -> Box<dyn SubgraphProgram> {
+        Box::new(PrStabilityProgram {
+            n_total: self.n_total,
+            iterations: self.iterations,
+            damping: self.damping,
+            active_attr: self.active_attr,
+            backend: self.backend.clone(),
+            ranks: vec![0.0; sg.n_vertices()],
+            remote_in: vec![0.0; sg.n_vertices()],
+            out_deg: Vec::new(),
+            remote_active: Vec::new(),
+            op: None,
+        })
+    }
+
+    fn merge(&self, msgs: Vec<Payload>) {
+        // Fold (sgid, timestep, mass) triples into per-subgraph drift.
+        let mut series: HashMap<SubgraphId, Vec<(Timestep, f64)>> = HashMap::new();
+        let mut timesteps: std::collections::BTreeSet<Timestep> = Default::default();
+        for m in &msgs {
+            let mut r = MsgReader::new(m);
+            if let (Ok(sgid), Ok(t), Ok(mass)) = (r.sgid(), r.u64(), r.f64()) {
+                series.entry(sgid).or_default().push((t as Timestep, mass));
+                timesteps.insert(t as Timestep);
+            }
+        }
+        let mut per_subgraph: Vec<(SubgraphId, f64, f64)> = series
+            .into_iter()
+            .map(|(id, points)| {
+                let mean = points.iter().map(|(_, m)| m).sum::<f64>() / points.len() as f64;
+                let dev = points
+                    .iter()
+                    .map(|(_, m)| (m - mean).abs())
+                    .fold(0.0f64, f64::max);
+                (id, mean, dev)
+            })
+            .collect();
+        per_subgraph.sort_by_key(|(id, _, _)| *id);
+        *self.results.report.lock().unwrap() =
+            Some(StabilityReport { per_subgraph, n_timesteps: timesteps.len() });
+    }
+}
+
+struct PrStabilityProgram {
+    n_total: usize,
+    iterations: usize,
+    damping: f32,
+    active_attr: Option<usize>,
+    backend: Arc<dyn LocalSpmv>,
+    ranks: Vec<f32>,
+    remote_in: Vec<f32>,
+    out_deg: Vec<u32>,
+    remote_active: Vec<bool>,
+    op: Option<Box<dyn crate::runtime::PreparedSpmv>>,
+}
+
+impl PrStabilityProgram {
+    fn send_remote(&self, ctx: &mut ComputeCtx<'_>, sg: &Subgraph) {
+        let mut per_target: HashMap<SubgraphId, HashMap<u32, f64>> = HashMap::new();
+        for (ri, r) in sg.remote.iter().enumerate() {
+            if !self.remote_active[ri] {
+                continue;
+            }
+            let deg = self.out_deg[r.src_local as usize];
+            if deg == 0 {
+                continue;
+            }
+            let c = self.ranks[r.src_local as usize] as f64 / deg as f64;
+            *per_target.entry(r.dst_subgraph).or_default().entry(r.dst_global).or_insert(0.0) += c;
+        }
+        for (target, contribs) in per_target {
+            let pairs: Vec<(u32, f64)> = contribs.into_iter().collect();
+            ctx.send_to_subgraph(target, MsgWriter::new().pairs_u32_f64(&pairs).finish());
+        }
+    }
+}
+
+impl SubgraphProgram for PrStabilityProgram {
+    fn compute(&mut self, ctx: &mut ComputeCtx<'_>, sgi: &SubgraphInstance, msgs: &[Payload]) {
+        let sg = &sgi.sg;
+        let n = sg.n_vertices();
+        if ctx.superstep == 1 {
+            let n_local = sg.n_local_edges();
+            let is_active = |pos: usize| -> bool {
+                match self.active_attr {
+                    None => true,
+                    Some(a) => sgi
+                        .edge_values(a, pos)
+                        .first()
+                        .and_then(|v| v.as_bool())
+                        .unwrap_or(false),
+                }
+            };
+            let mut local_active = vec![false; n_local];
+            self.out_deg = vec![0u32; n];
+            for v in 0..n as u32 {
+                for (_, pos) in sg.local.out_edges(v) {
+                    if is_active(pos as usize) {
+                        local_active[pos as usize] = true;
+                        self.out_deg[v as usize] += 1;
+                    }
+                }
+            }
+            self.remote_active =
+                (0..sg.n_remote_edges()).map(|ri| is_active(n_local + ri)).collect();
+            for (ri, r) in sg.remote.iter().enumerate() {
+                if self.remote_active[ri] {
+                    self.out_deg[r.src_local as usize] += 1;
+                }
+            }
+            self.op = Some(self.backend.prepare(sg, &local_active));
+            self.ranks = vec![1.0 / self.n_total as f32; n];
+            self.send_remote(ctx, sg);
+            return;
+        }
+
+        self.remote_in.iter_mut().for_each(|x| *x = 0.0);
+        for m in msgs {
+            let mut r = MsgReader::new(m);
+            if let Ok(pairs) = r.pairs_u32_f64() {
+                for (gv, c) in pairs {
+                    if let Some(lv) = sg.local_of(gv) {
+                        self.remote_in[lv as usize] += c as f32;
+                    }
+                }
+            }
+        }
+        let contrib: Vec<f32> = (0..n)
+            .map(|v| if self.out_deg[v] > 0 { self.ranks[v] / self.out_deg[v] as f32 } else { 0.0 })
+            .collect();
+        let mut local_in = vec![0.0f32; n];
+        self.op.as_ref().unwrap().apply(&contrib, &mut local_in);
+        let teleport = (1.0 - self.damping) / self.n_total as f32;
+        for v in 0..n {
+            self.ranks[v] = teleport + self.damping * (local_in[v] + self.remote_in[v]);
+        }
+
+        if ctx.superstep <= self.iterations {
+            self.send_remote(ctx, sg);
+        } else {
+            let mass: f64 = self.ranks.iter().map(|&r| r as f64).sum();
+            ctx.send_to_merge(
+                MsgWriter::new()
+                    .sgid(ctx.sgid)
+                    .u64(ctx.timestep as u64)
+                    .f64(mass)
+                    .finish(),
+            );
+            ctx.vote_to_halt();
+        }
+    }
+}

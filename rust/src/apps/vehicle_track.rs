@@ -1,0 +1,189 @@
+//! Temporal path traversal — vehicle tracking (paper Algorithm 1).
+//!
+//! "Locates a vehicle, based on its license plate V, within a road network
+//! and tracks the vehicle over time across multiple instances." The first
+//! timestep finds the vehicle and traces it *spatially* across subgraphs
+//! with superstep messages until it goes missing in that window, then
+//! resumes from the last known location in the next timestep via
+//! `send_to_next_timestep` — the paper's canonical sequentially-dependent
+//! application.
+
+use crate::gofs::{Projection, SubgraphInstance};
+use crate::graph::{Schema, Timestep, VertexId};
+use crate::gopher::{
+    Application, ComputeCtx, MsgReader, MsgWriter, Pattern, Payload, SubgraphProgram,
+};
+use crate::partition::Subgraph;
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
+
+/// Sighting log: where the plate was confirmed, per timestep.
+#[derive(Debug, Default)]
+pub struct TrackResults {
+    pub sightings: Mutex<Vec<(Timestep, VertexId)>>,
+}
+
+impl TrackResults {
+    /// Sorted, deduplicated trajectory.
+    pub fn trajectory(&self) -> Vec<(Timestep, VertexId)> {
+        let mut t: Vec<_> = self.sightings.lock().unwrap().clone();
+        t.sort_unstable();
+        t.dedup();
+        t
+    }
+}
+
+pub struct VehicleTrackApp {
+    pub plate: String,
+    /// Where the search begins (user-provided initial location).
+    pub initial_location: VertexId,
+    /// Vertex attribute holding observed plates.
+    pub plates_attr: usize,
+    pub results: Arc<TrackResults>,
+}
+
+impl VehicleTrackApp {
+    pub fn new(plate: &str, initial_location: VertexId, plates_attr: usize) -> Self {
+        VehicleTrackApp {
+            plate: plate.to_string(),
+            initial_location,
+            plates_attr,
+            results: Arc::new(TrackResults::default()),
+        }
+    }
+}
+
+impl Application for VehicleTrackApp {
+    fn name(&self) -> &str {
+        "vehicle_track"
+    }
+
+    fn pattern(&self) -> Pattern {
+        Pattern::Sequential
+    }
+
+    fn projection(&self, vs: &Schema, _es: &Schema) -> Projection {
+        Projection { vertex_attrs: vec![self.plates_attr.min(vs.len() - 1)], edge_attrs: vec![] }
+    }
+
+    fn create(&self, sg: &Subgraph) -> Box<dyn SubgraphProgram> {
+        Box::new(TrackProgram {
+            plate: self.plate.clone(),
+            initial_location: self.initial_location,
+            plates_attr: self.plates_attr,
+            results: self.results.clone(),
+            visited: vec![false; sg.n_vertices()],
+        })
+    }
+}
+
+struct TrackProgram {
+    plate: String,
+    initial_location: VertexId,
+    plates_attr: usize,
+    results: Arc<TrackResults>,
+    visited: Vec<bool>,
+}
+
+impl TrackProgram {
+    fn seen_here(&self, sgi: &SubgraphInstance, lv: u32) -> bool {
+        sgi.vertex_values(self.plates_attr, lv)
+            .iter()
+            .any(|v| v.as_str() == Some(self.plate.as_str()))
+    }
+}
+
+impl SubgraphProgram for TrackProgram {
+    fn compute(&mut self, ctx: &mut ComputeCtx<'_>, sgi: &SubgraphInstance, msgs: &[Payload]) {
+        let sg = &sgi.sg;
+        // --- Gather search roots (Algorithm 1 lines 2-16). ---
+        let mut roots: Vec<u32> = Vec::new();
+        if ctx.superstep == 1 && ctx.timestep == 0 {
+            // Initialize from user input: the search starts *somewhere*;
+            // the whole subgraph owning the initial location scans itself.
+            if sg.ext_ids.iter().any(|&e| e == self.initial_location) {
+                for v in 0..sg.n_vertices() as u32 {
+                    if self.seen_here(sgi, v) {
+                        roots.push(v);
+                    }
+                }
+            }
+        }
+        for m in msgs {
+            let mut r = MsgReader::new(m);
+            if let Ok(gv) = r.u32() {
+                if let Some(lv) = sg.local_of(gv) {
+                    roots.push(lv);
+                }
+            }
+        }
+        roots.retain(|&v| !self.visited[v as usize]);
+        if roots.is_empty() {
+            ctx.vote_to_halt();
+            return;
+        }
+
+        // --- DFS over the instance's sightings (lines 17). ---
+        let mut stack: Vec<u32> = Vec::new();
+        let mut found: Vec<u32> = Vec::new();
+        for v in roots {
+            // The root itself must carry the plate in this instance
+            // (messages may point at a vertex the vehicle never reached).
+            if !self.visited[v as usize] && self.seen_here(sgi, v) {
+                self.visited[v as usize] = true;
+                stack.push(v);
+                found.push(v);
+            }
+        }
+        while let Some(v) = stack.pop() {
+            for &u in sg.local.neighbors(v) {
+                if !self.visited[u as usize] && self.seen_here(sgi, u) {
+                    self.visited[u as usize] = true;
+                    stack.push(u);
+                    found.push(u);
+                }
+            }
+        }
+
+        if !found.is_empty() {
+            {
+                let mut s = self.results.sightings.lock().unwrap();
+                s.extend(found.iter().map(|&v| (ctx.timestep, sg.ext_ids[v as usize])));
+            }
+            // --- Continue across subgraphs (lines 18-21). ---
+            let mut sent: HashSet<(u64, u32)> = HashSet::new();
+            for r in &sg.remote {
+                if self.visited[r.src_local as usize]
+                    && sent.insert((r.dst_subgraph.0, r.dst_global))
+                {
+                    ctx.send_to_subgraph(
+                        r.dst_subgraph,
+                        MsgWriter::new().u32(r.dst_global).finish(),
+                    );
+                }
+            }
+            // --- Continue in the next instance (lines 22-27): resume from
+            // the last known locations. Sent per found batch; the next
+            // instance's DFS re-validates roots against its own sightings,
+            // so duplicates are harmless.
+            if ctx.timestep + 1 < ctx.n_timesteps {
+                for &v in &found {
+                    ctx.send_to_next_timestep(
+                        MsgWriter::new().u32(sg.vertices[v as usize]).finish(),
+                    );
+                }
+                // Also wake neighbors' next instances: the vehicle may have
+                // crossed a partition boundary between windows.
+                for r in &sg.remote {
+                    if self.visited[r.src_local as usize] {
+                        ctx.send_to_subgraph_in_next_timestep(
+                            r.dst_subgraph,
+                            MsgWriter::new().u32(r.dst_global).finish(),
+                        );
+                    }
+                }
+            }
+        }
+        ctx.vote_to_halt();
+    }
+}

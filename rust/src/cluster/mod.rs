@@ -1,0 +1,33 @@
+//! In-process cluster simulation (DESIGN.md §2.1).
+//!
+//! The paper's testbed is 12 commodity hosts (8-core Xeon, 16 GB, 1 TB
+//! SATA, GigE). We reproduce the *structure* on one machine: each
+//! partition is a simulated host with its own GoFS directory and worker
+//! threads; remote messages cross a [`NetworkModel`] that charges
+//! GigE-like latency and bandwidth, accumulated as simulated time next to
+//! the measured wall-clock.
+
+pub mod net;
+
+pub use net::{NetworkClock, NetworkModel};
+
+/// Static description of the simulated cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub n_hosts: usize,
+    /// Worker threads per host (paper hosts had 8 cores).
+    pub cores_per_host: usize,
+    pub net: NetworkModel,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        ClusterSpec { n_hosts: 12, cores_per_host: 8, net: NetworkModel::default() }
+    }
+}
+
+impl ClusterSpec {
+    pub fn new(n_hosts: usize) -> Self {
+        ClusterSpec { n_hosts, ..Default::default() }
+    }
+}

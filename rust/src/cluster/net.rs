@@ -1,0 +1,103 @@
+//! Network cost model for the simulated cluster.
+//!
+//! Messages between subgraphs on the same host are free (in-memory);
+//! messages that cross hosts are batched per (src host, dst host) pair per
+//! superstep — mirroring Gopher's bulk message transfer between supersteps
+//! — and each batch is charged one latency plus payload/bandwidth.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// GigE-like defaults: 100 µs effective per-batch latency (switch + stack)
+/// and 118 MB/s usable bandwidth.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    pub latency_us: u64,
+    pub bandwidth_mb_s: u64,
+    /// Fixed per-message framing overhead in bytes.
+    pub per_msg_overhead: u64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        NetworkModel { latency_us: 100, bandwidth_mb_s: 118, per_msg_overhead: 64 }
+    }
+}
+
+impl NetworkModel {
+    /// A free network (for tests isolating compute).
+    pub fn instant() -> Self {
+        NetworkModel { latency_us: 0, bandwidth_mb_s: u64::MAX, per_msg_overhead: 0 }
+    }
+
+    /// Cost of transferring one host-pair batch of `n_msgs` messages
+    /// totalling `bytes` payload bytes, in nanoseconds.
+    pub fn batch_cost_ns(&self, n_msgs: u64, bytes: u64) -> u64 {
+        let lat = self.latency_us * 1_000;
+        if self.bandwidth_mb_s == u64::MAX {
+            return lat;
+        }
+        let wire_bytes = bytes + n_msgs * self.per_msg_overhead;
+        lat + wire_bytes.saturating_mul(1_000) / self.bandwidth_mb_s.max(1)
+    }
+}
+
+/// Accumulates simulated network time. Per the BSP model, batches to
+/// different host pairs in one superstep flow concurrently: the charge per
+/// superstep is the *maximum* over pairs, which callers account via
+/// [`NetworkClock::charge_superstep`].
+#[derive(Debug, Default)]
+pub struct NetworkClock {
+    ns: AtomicU64,
+}
+
+impl NetworkClock {
+    /// Charge one superstep's batches: `batches` is (n_msgs, bytes) per
+    /// host pair. Returns the charged (max) cost.
+    pub fn charge_superstep(&self, model: &NetworkModel, batches: &[(u64, u64)]) -> u64 {
+        let cost = batches
+            .iter()
+            .map(|&(n, b)| model.batch_cost_ns(n, b))
+            .max()
+            .unwrap_or(0);
+        self.ns.fetch_add(cost, Ordering::Relaxed);
+        cost
+    }
+
+    pub fn total_ns(&self) -> u64 {
+        self.ns.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batching_beats_per_message_latency() {
+        let m = NetworkModel::default();
+        let batched = m.batch_cost_ns(1000, 1000 * 100);
+        let individual = 1000 * m.batch_cost_ns(1, 100);
+        assert!(batched < individual / 10);
+    }
+
+    #[test]
+    fn superstep_charge_is_max_over_pairs() {
+        let m = NetworkModel { latency_us: 10, bandwidth_mb_s: 100, per_msg_overhead: 0 };
+        let c = NetworkClock::default();
+        let cost = c.charge_superstep(&m, &[(1, 1_000), (1, 1_000_000), (1, 10)]);
+        assert_eq!(cost, m.batch_cost_ns(1, 1_000_000));
+        assert_eq!(c.total_ns(), cost);
+    }
+
+    #[test]
+    fn empty_superstep_is_free() {
+        let c = NetworkClock::default();
+        assert_eq!(c.charge_superstep(&NetworkModel::default(), &[]), 0);
+    }
+
+    #[test]
+    fn instant_network_only_counts_nothing() {
+        let m = NetworkModel::instant();
+        assert_eq!(m.batch_cost_ns(10, 1 << 30), 0);
+    }
+}

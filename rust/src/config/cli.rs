@@ -1,0 +1,114 @@
+//! Minimal CLI argument parser (`--flag value` / `--flag` / positionals).
+
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand, positionals, and `--key value` pairs.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                // `--key value` unless the next token is another flag/eof.
+                match iter.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let v = iter.next().unwrap();
+                        out.flags.insert(key.to_string(), v);
+                    }
+                    _ => out.switches.push(key.to_string()),
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn require(&self, key: &str) -> Result<String> {
+        self.get(key).map(String::from).ok_or_else(|| anyhow!("missing required --{key}"))
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn command_flags_and_switches() {
+        // Note: a bare `--flag` followed by a non-flag token is consumed
+        // as `--flag value` (documented greedy rule); switches therefore
+        // come last or before another `--flag`.
+        let a = parse("run extra --store /tmp/x --cache 14 --verbose");
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.get("store"), Some("/tmp/x"));
+        assert_eq!(a.usize("cache", 0), 14);
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn greedy_flag_consumes_next_token() {
+        let a = parse("run --verbose extra");
+        assert!(!a.switch("verbose"));
+        assert_eq!(a.get("verbose"), Some("extra"));
+    }
+
+    #[test]
+    fn defaults_and_require() {
+        let a = parse("deploy --parts 12");
+        assert_eq!(a.usize("parts", 1), 12);
+        assert_eq!(a.usize("bins", 20), 20);
+        assert_eq!(a.str("dataset", "tr"), "tr");
+        assert!(a.require("out").is_err());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("bench --quick");
+        assert!(a.switch("quick"));
+        assert_eq!(a.get("quick"), None);
+    }
+}

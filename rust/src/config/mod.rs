@@ -1,0 +1,62 @@
+//! Deployment/run configuration and CLI argument parsing.
+//!
+//! `clap` is unavailable offline (DESIGN.md §2.4), so [`cli::Args`] is a
+//! small deterministic `--flag value` parser with typed accessors, and
+//! this module holds the run-level configuration structs shared by the
+//! launcher, examples and benches.
+
+pub mod cli;
+
+pub use cli::Args;
+
+use crate::cluster::ClusterSpec;
+use crate::gofs::{DeployConfig, DiskModel, StoreOptions};
+use crate::metrics::Metrics;
+use std::sync::Arc;
+
+/// Everything needed to open a deployed collection for a run.
+#[derive(Clone)]
+pub struct RunConfig {
+    pub store_dir: std::path::PathBuf,
+    pub cache_slots: usize,
+    pub n_hosts: usize,
+    pub disk: DiskModel,
+    pub metrics: Arc<Metrics>,
+}
+
+impl RunConfig {
+    pub fn store_options(&self) -> StoreOptions {
+        StoreOptions {
+            cache_slots: self.cache_slots,
+            disk: self.disk.clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    pub fn cluster_spec(&self) -> ClusterSpec {
+        ClusterSpec::new(self.n_hosts)
+    }
+}
+
+/// Parse the paper-style deployment label `s<bins>-i<pack>` (e.g.
+/// `s20-i20`), used by benches to sweep configurations.
+pub fn parse_deploy_label(label: &str, n_parts: usize) -> Option<DeployConfig> {
+    let rest = label.strip_prefix('s')?;
+    let (bins, pack) = rest.split_once("-i")?;
+    Some(DeployConfig::new(n_parts, bins.parse().ok()?, pack.parse().ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deploy_label_roundtrip() {
+        let cfg = parse_deploy_label("s20-i20", 12).unwrap();
+        assert_eq!(cfg.n_bins, 20);
+        assert_eq!(cfg.pack, 20);
+        assert_eq!(cfg.label(), "s20-i20");
+        assert!(parse_deploy_label("s20i20", 12).is_none());
+        assert!(parse_deploy_label("x20-i20", 12).is_none());
+    }
+}

@@ -1,0 +1,28 @@
+//! Synthetic dataset generators.
+//!
+//! The paper evaluates on a proprietary traceroute-derived time-series
+//! graph (**TR**: 19.4M vertices, 22.8M edges, 146 two-hour instances,
+//! diameter 25, small-world). That dataset is not public, so
+//! [`traceroute`] synthesizes a collection with the same *shape*:
+//! scale-free internet-like topology with edge:vertex ratio ≈ 1.17,
+//! mixed-type attributes with zero-or-more values per window, and
+//! diurnally-varying latencies (DESIGN.md §2.2). [`roadnet`] generates the
+//! road-network/vehicle workload that motivates the paper's Algorithm 1.
+
+pub mod roadnet;
+pub mod traceroute;
+
+use crate::graph::{GraphInstance, GraphTemplate, Timestep};
+
+/// A streaming source of a time-series graph collection: the template plus
+/// deterministic, independently generatable instances (so deployment never
+/// needs the whole series in memory).
+pub trait CollectionSource {
+    fn template(&self) -> &GraphTemplate;
+    fn n_instances(&self) -> usize;
+    /// Generate instance `t` (deterministic in `t` for a fixed seed).
+    fn instance(&self, t: Timestep) -> GraphInstance;
+}
+
+pub use roadnet::{RoadNetGenerator, RoadNetParams};
+pub use traceroute::{TraceRouteGenerator, TraceRouteParams};

@@ -1,0 +1,304 @@
+//! Synthetic road network with vehicle movements (paper §I, §IV-C).
+//!
+//! The template is a W×H grid of intersections connected by bidirectional
+//! road segments (with a few removed to make it irregular). Instances
+//! record, per window: the license plates observed at each intersection
+//! (`plates`, zero-or-more string values — the camera feed of the paper's
+//! motivating example) and the current travel time on each segment. A
+//! configurable fleet of vehicles performs persistent random walks, so a
+//! given plate traces a *connected* trajectory across consecutive windows
+//! — exactly what Algorithm 1's temporal traversal follows.
+
+use super::CollectionSource;
+use crate::graph::{
+    AttrColumn, AttrSchema, AttrType, AttrValue, GraphInstance, GraphTemplate, Schema,
+    TemplateBuilder, TimeWindow, Timestep, VIdx, ISEXISTS,
+};
+use crate::util::Prng;
+
+#[derive(Debug, Clone)]
+pub struct RoadNetParams {
+    pub width: usize,
+    pub height: usize,
+    /// Fraction of grid segments removed (irregularity).
+    pub removal_frac: f64,
+    pub n_vehicles: usize,
+    /// Intersections a vehicle passes per window.
+    pub moves_per_instance: usize,
+    pub n_instances: usize,
+    pub window_secs: i64,
+    pub seed: u64,
+}
+
+impl Default for RoadNetParams {
+    fn default() -> Self {
+        RoadNetParams {
+            width: 64,
+            height: 64,
+            removal_frac: 0.08,
+            n_vehicles: 500,
+            moves_per_instance: 6,
+            n_instances: 24,
+            window_secs: 300, // 5-minute windows, as in the paper's example
+            seed: 0x0AD5_EED,
+        }
+    }
+}
+
+impl RoadNetParams {
+    pub fn tiny() -> Self {
+        RoadNetParams {
+            width: 8,
+            height: 8,
+            n_vehicles: 20,
+            n_instances: 6,
+            ..Default::default()
+        }
+    }
+}
+
+/// Vertex attribute indices.
+pub mod vattr {
+    pub const KIND: usize = 0;
+    pub const ISEXISTS: usize = 1;
+    /// License plates seen at this intersection during the window.
+    pub const PLATES: usize = 2;
+    pub const CAMERA_OK: usize = 3;
+}
+
+/// Edge attribute indices.
+pub mod eattr {
+    pub const LENGTH_M: usize = 0;
+    pub const ISEXISTS: usize = 1;
+    /// Current travel time (seconds) for the window.
+    pub const TRAVEL_TIME: usize = 2;
+    pub const CONGESTED: usize = 3;
+}
+
+pub struct RoadNetGenerator {
+    params: RoadNetParams,
+    template: GraphTemplate,
+    /// Vehicle positions at the *start* of each instance, computed by
+    /// replaying the walk; position[t][k] = vertex of vehicle k.
+    start_pos: Vec<Vec<VIdx>>,
+}
+
+fn vertex_schema() -> Schema {
+    Schema::new(vec![
+        AttrSchema::constant("kind", AttrValue::Str("intersection".into())),
+        AttrSchema::with_default(ISEXISTS, AttrValue::Bool(true)),
+        AttrSchema::plain("plates", AttrType::Str),
+        AttrSchema::with_default("camera_ok", AttrValue::Bool(true)),
+    ])
+}
+
+fn edge_schema() -> Schema {
+    Schema::new(vec![
+        AttrSchema::constant("length_m", AttrValue::Float(250.0)),
+        AttrSchema::with_default(ISEXISTS, AttrValue::Bool(true)),
+        AttrSchema::plain("travel_time", AttrType::Float),
+        AttrSchema::plain("congested", AttrType::Bool),
+    ])
+}
+
+impl RoadNetGenerator {
+    pub fn new(params: RoadNetParams) -> Self {
+        let mut rng = Prng::new(params.seed);
+        let (w, h) = (params.width, params.height);
+        let mut b = TemplateBuilder::new(vertex_schema(), edge_schema());
+        for y in 0..h {
+            for x in 0..w {
+                b.vertex((y * w + x) as u64);
+            }
+        }
+        let idx = |x: usize, y: usize| (y * w + x) as VIdx;
+        for y in 0..h {
+            for x in 0..w {
+                if x + 1 < w && !rng.gen_bool(params.removal_frac) {
+                    b.edge(idx(x, y), idx(x + 1, y));
+                    b.edge(idx(x + 1, y), idx(x, y));
+                }
+                if y + 1 < h && !rng.gen_bool(params.removal_frac) {
+                    b.edge(idx(x, y), idx(x, y + 1));
+                    b.edge(idx(x, y + 1), idx(x, y));
+                }
+            }
+        }
+        let template = b.build();
+
+        // Pre-compute vehicle start positions for every instance by
+        // replaying walks once (cheap: vehicles × instances × moves).
+        let mut pos: Vec<VIdx> = (0..params.n_vehicles)
+            .map(|_| rng.gen_range((w * h) as u64) as VIdx)
+            .collect();
+        let mut start_pos = Vec::with_capacity(params.n_instances);
+        for t in 0..params.n_instances {
+            start_pos.push(pos.clone());
+            let mut wrng = Prng::new(params.seed).fork(0x9000 + t as u64);
+            for p in pos.iter_mut() {
+                for _ in 0..params.moves_per_instance {
+                    let nbrs = template.out.neighbors(*p);
+                    if !nbrs.is_empty() {
+                        *p = *wrng.choose(nbrs);
+                    }
+                }
+            }
+        }
+
+        RoadNetGenerator { params, template, start_pos }
+    }
+
+    pub fn params(&self) -> &RoadNetParams {
+        &self.params
+    }
+
+    /// Plate string for vehicle `k`.
+    pub fn plate(k: usize) -> String {
+        format!("CA-{k:05}")
+    }
+
+    /// The ground-truth trajectory of vehicle `k` within instance `t`
+    /// (sequence of intersections, starting at its window-start position).
+    pub fn trajectory(&self, t: Timestep, k: usize) -> Vec<VIdx> {
+        let mut wrng = Prng::new(self.params.seed).fork(0x9000 + t as u64);
+        // Replay all vehicles up to k to stay faithful to `new`'s stream use.
+        let mut out = Vec::new();
+        for (i, &start) in self.start_pos[t].iter().enumerate() {
+            let mut p = start;
+            let mut traj = vec![p];
+            for _ in 0..self.params.moves_per_instance {
+                let nbrs = self.template.out.neighbors(p);
+                if !nbrs.is_empty() {
+                    p = *wrng.choose(nbrs);
+                }
+                traj.push(p);
+            }
+            if i == k {
+                out = traj;
+                break;
+            }
+        }
+        out
+    }
+}
+
+impl CollectionSource for RoadNetGenerator {
+    fn template(&self) -> &GraphTemplate {
+        &self.template
+    }
+
+    fn n_instances(&self) -> usize {
+        self.params.n_instances
+    }
+
+    fn instance(&self, t: Timestep) -> GraphInstance {
+        assert!(t < self.params.n_instances);
+        let window = TimeWindow::new(
+            t as i64 * self.params.window_secs,
+            (t as i64 + 1) * self.params.window_secs,
+        );
+        let mut gi = GraphInstance::empty(&self.template, t, window);
+
+        // Replay every vehicle's walk for this window, collecting plate
+        // sightings per intersection (with an in-window timestamp order
+        // encoded by position in the multi-value list).
+        let mut sightings: std::collections::BTreeMap<u32, Vec<String>> = Default::default();
+        let mut wrng = Prng::new(self.params.seed).fork(0x9000 + t as u64);
+        for (k, &start) in self.start_pos[t].iter().enumerate() {
+            let mut p = start;
+            sightings.entry(p).or_default().push(Self::plate(k));
+            for _ in 0..self.params.moves_per_instance {
+                let nbrs = self.template.out.neighbors(p);
+                if !nbrs.is_empty() {
+                    p = *wrng.choose(nbrs);
+                }
+                sightings.entry(p).or_default().push(Self::plate(k));
+            }
+        }
+        let mut plates = AttrColumn::new();
+        for (v, ps) in &sightings {
+            plates.push(*v, ps.iter().map(|p| AttrValue::Str(p.clone())));
+        }
+        gi.vcols[vattr::PLATES] = Some(plates);
+
+        // Travel times: diurnal congestion + noise per edge.
+        let mut trng = Prng::new(self.params.seed).fork(0xA000 + t as u64);
+        let peak = 1.0 + 0.8 * ((t as f64 / 6.0 * std::f64::consts::TAU).sin() + 1.0) / 2.0;
+        let mut tt = AttrColumn::new();
+        let mut congested = AttrColumn::new();
+        for e in 0..self.template.n_edges() as u32 {
+            let base = 20.0 + 10.0 * trng.gen_f64();
+            let v = base * peak;
+            tt.push(e, [AttrValue::Float(v)]);
+            if v > 40.0 {
+                congested.push(e, [AttrValue::Bool(true)]);
+            }
+        }
+        gi.ecols[eattr::TRAVEL_TIME] = Some(tt);
+        gi.ecols[eattr::CONGESTED] = Some(congested);
+
+        gi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_topology() {
+        let g = RoadNetGenerator::new(RoadNetParams::tiny());
+        let t = g.template();
+        assert_eq!(t.n_vertices(), 64);
+        // Bidirectional segments: even edge count.
+        assert_eq!(t.n_edges() % 2, 0);
+        assert!(t.n_edges() > 100);
+    }
+
+    #[test]
+    fn plates_trace_connected_trajectories() {
+        let g = RoadNetGenerator::new(RoadNetParams::tiny());
+        let t = g.template();
+        let traj = g.trajectory(0, 5);
+        assert_eq!(traj.len(), g.params().moves_per_instance + 1);
+        for w in traj.windows(2) {
+            assert!(
+                w[0] == w[1] || t.out.neighbors(w[0]).contains(&w[1]),
+                "trajectory not connected"
+            );
+        }
+        // The plate shows up at every intersection on the trajectory.
+        let gi = g.instance(0);
+        let plates = gi.vcols[vattr::PLATES].as_ref().unwrap();
+        let plate = RoadNetGenerator::plate(5);
+        for &v in &traj {
+            assert!(
+                plates.get(v).iter().any(|p| p.as_str() == Some(plate.as_str())),
+                "plate missing at {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn trajectories_chain_across_instances() {
+        let g = RoadNetGenerator::new(RoadNetParams::tiny());
+        // End of window t == start of window t+1 for each vehicle.
+        let t0 = g.trajectory(0, 3);
+        let t1 = g.trajectory(1, 3);
+        assert_eq!(*t0.last().unwrap(), t1[0]);
+    }
+
+    #[test]
+    fn instances_deterministic() {
+        let g = RoadNetGenerator::new(RoadNetParams::tiny());
+        assert_eq!(g.instance(2), g.instance(2));
+    }
+
+    #[test]
+    fn travel_times_cover_all_edges() {
+        let g = RoadNetGenerator::new(RoadNetParams::tiny());
+        let gi = g.instance(1);
+        let tt = gi.ecols[eattr::TRAVEL_TIME].as_ref().unwrap();
+        assert_eq!(tt.n_elements(), g.template().n_edges());
+    }
+}

@@ -1,0 +1,401 @@
+//! Synthetic TR: internet-like traceroute time-series graph (§VI-A).
+//!
+//! Topology: a preferential-attachment tree (union of traceroutes is
+//! nearly a tree — the paper's TR has |E|/|V| ≈ 1.17) over vantage hosts,
+//! routers and destination hosts, plus a configurable fraction of
+//! cross/peering edges. Edges are directed along trace direction
+//! (vantage → destination), so the whole graph is reachable from any
+//! vantage point — matching how the paper's SSSP/N-hop pick sources.
+//!
+//! Instances: for each 2-hour window we simulate `traces_per_instance`
+//! traceroutes along tree paths; every vertex/edge on a path accrues
+//! attribute values (hop latency, RTT, etc.), giving the paper's
+//! "zero or more values per attribute per element per window". Latency
+//! follows a per-edge base plus a diurnal (24 h) congestion factor.
+
+use super::CollectionSource;
+use crate::graph::{
+    AttrColumn, AttrSchema, AttrType, AttrValue, GraphInstance, GraphTemplate, Schema,
+    TemplateBuilder, TimeWindow, Timestep, VIdx, ISEXISTS,
+};
+use crate::util::Prng;
+
+/// Generator parameters. Defaults give a laptop-scale collection with the
+/// paper's structural shape; scale up `n_vertices` to approach TR.
+#[derive(Debug, Clone)]
+pub struct TraceRouteParams {
+    pub n_vertices: usize,
+    /// Number of vantage hosts ("a dozen" in the paper).
+    pub n_vantage: usize,
+    /// Extra cross-link fraction over the tree (|E| ≈ (1+x)·|V|).
+    pub cross_frac: f64,
+    /// Number of graph instances (paper: 146).
+    pub n_instances: usize,
+    /// Window duration in seconds (paper: 2 h).
+    pub window_secs: i64,
+    /// Traceroutes simulated per window.
+    pub traces_per_instance: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceRouteParams {
+    fn default() -> Self {
+        TraceRouteParams {
+            n_vertices: 50_000,
+            n_vantage: 12,
+            cross_frac: 0.17,
+            n_instances: 146,
+            window_secs: 2 * 3600,
+            traces_per_instance: 2_000,
+            seed: 0x7EAC_E201,
+        }
+    }
+}
+
+impl TraceRouteParams {
+    /// A tiny configuration for unit tests.
+    pub fn tiny() -> Self {
+        TraceRouteParams {
+            n_vertices: 300,
+            n_vantage: 3,
+            n_instances: 12,
+            traces_per_instance: 100,
+            ..Default::default()
+        }
+    }
+}
+
+pub struct TraceRouteGenerator {
+    params: TraceRouteParams,
+    template: GraphTemplate,
+    /// Parent of each vertex in the attachment tree (root: itself).
+    parent: Vec<VIdx>,
+    /// Depth in the tree.
+    depth: Vec<u32>,
+    /// Tree edge index from parent(v) -> v (u32::MAX for root).
+    parent_edge: Vec<u32>,
+    /// Vantage vertices (tree roots' children — near the core).
+    vantages: Vec<VIdx>,
+    /// Base latency per template edge (ms).
+    base_latency: Vec<f32>,
+}
+
+/// Vertex attribute indices (see `vertex_schema`).
+pub mod vattr {
+    pub const IP: usize = 0;
+    pub const ASN: usize = 1;
+    pub const KIND: usize = 2;
+    pub const ISEXISTS: usize = 3;
+    pub const RTT_MS: usize = 4;
+    pub const TRACES_SEEN: usize = 5;
+    pub const LOAD: usize = 6;
+}
+
+/// Edge attribute indices (see `edge_schema`).
+pub mod eattr {
+    pub const LINK_ID: usize = 0;
+    pub const MEDIUM: usize = 1;
+    pub const ISEXISTS: usize = 2;
+    pub const LATENCY_MS: usize = 3;
+    pub const BANDWIDTH: usize = 4;
+    pub const DROPS: usize = 5;
+    pub const ACTIVE: usize = 6;
+}
+
+fn vertex_schema() -> Schema {
+    Schema::new(vec![
+        AttrSchema::constant("ip", AttrValue::Str(String::new())), // placeholder; real IPs in ext_ids
+        AttrSchema::constant("asn", AttrValue::Int(0)),
+        AttrSchema::constant("kind", AttrValue::Str("router".into())),
+        AttrSchema::with_default(ISEXISTS, AttrValue::Bool(true)),
+        AttrSchema::plain("rtt_ms", AttrType::Float),
+        AttrSchema::plain("traces_seen", AttrType::Int),
+        AttrSchema::plain("load", AttrType::Float),
+    ])
+}
+
+fn edge_schema() -> Schema {
+    Schema::new(vec![
+        AttrSchema::constant("link_id", AttrValue::Int(0)),
+        AttrSchema::constant("medium", AttrValue::Str("fiber".into())),
+        AttrSchema::with_default(ISEXISTS, AttrValue::Bool(true)),
+        AttrSchema::plain("latency_ms", AttrType::Float),
+        AttrSchema::plain("bandwidth_mbps", AttrType::Float),
+        AttrSchema::plain("drops", AttrType::Int),
+        AttrSchema::plain("active", AttrType::Bool),
+    ])
+}
+
+impl TraceRouteGenerator {
+    pub fn new(params: TraceRouteParams) -> Self {
+        assert!(params.n_vertices >= params.n_vantage + 2);
+        let mut rng = Prng::new(params.seed);
+        let n = params.n_vertices;
+
+        // --- Preferential-attachment tree over all vertices. ---
+        // Degree-biased sampling via the standard edge-endpoint trick:
+        // picking a uniform element of `endpoints` is proportional to degree.
+        let mut b = TemplateBuilder::new(vertex_schema(), edge_schema());
+        let mut parent = vec![0 as VIdx; n];
+        let mut depth = vec![0u32; n];
+        let mut parent_edge = vec![u32::MAX; n];
+        let mut endpoints: Vec<VIdx> = Vec::with_capacity(2 * n);
+
+        let root = b.vertex(ip_of(0));
+        endpoints.push(root);
+        for i in 1..n {
+            let v = b.vertex(ip_of(i as u64));
+            let p = *rng.choose(&endpoints);
+            parent[v as usize] = p;
+            depth[v as usize] = depth[p as usize] + 1;
+            let e = b.edge(p, v); // trace direction: toward destination
+            parent_edge[v as usize] = e;
+            endpoints.push(p);
+            endpoints.push(v);
+        }
+
+        // --- Cross/peering links (degree-biased, forward in depth). ---
+        let n_cross = (n as f64 * params.cross_frac) as usize;
+        for _ in 0..n_cross {
+            let a = *rng.choose(&endpoints);
+            let c = *rng.choose(&endpoints);
+            if a != c {
+                // orient from shallower to deeper to keep reachability DAG-ish
+                let (s, d) = if depth[a as usize] <= depth[c as usize] { (a, c) } else { (c, a) };
+                b.edge(s, d);
+            }
+        }
+
+        // Vantages: the first `n_vantage` children of the root region
+        // (shallow vertices reach everything downstream).
+        let mut vantages: Vec<VIdx> = (0..n as VIdx)
+            .filter(|&v| depth[v as usize] <= 1)
+            .take(params.n_vantage)
+            .collect();
+        if vantages.is_empty() {
+            vantages.push(root);
+        }
+
+        let template = b.build();
+
+        // Per-edge base latency: mostly LAN-ish, heavy tail for long links.
+        let mut base_latency = Vec::with_capacity(template.n_edges());
+        for _ in 0..template.n_edges() {
+            base_latency.push(rng.gen_pareto(0.5, 1.6).min(200.0) as f32);
+        }
+
+        TraceRouteGenerator { params, template, parent, depth, parent_edge, vantages, base_latency }
+    }
+
+    pub fn params(&self) -> &TraceRouteParams {
+        &self.params
+    }
+
+    pub fn vantages(&self) -> &[VIdx] {
+        &self.vantages
+    }
+
+    /// Tree path from the root down to `v` as (vertex, incoming tree edge).
+    fn path_from_root(&self, v: VIdx) -> Vec<(VIdx, u32)> {
+        let mut rev = Vec::with_capacity(self.depth[v as usize] as usize + 1);
+        let mut cur = v;
+        loop {
+            rev.push((cur, self.parent_edge[cur as usize]));
+            if self.parent_edge[cur as usize] == u32::MAX {
+                break;
+            }
+            cur = self.parent[cur as usize];
+        }
+        rev.reverse();
+        rev
+    }
+
+    /// Diurnal congestion multiplier for a window index.
+    fn congestion(&self, t: Timestep) -> f64 {
+        let windows_per_day = (24 * 3600) as f64 / self.params.window_secs as f64;
+        let phase = (t as f64 / windows_per_day) * std::f64::consts::TAU;
+        1.0 + 0.35 * (phase.sin() + 1.0) // 1.0 .. 1.7
+    }
+}
+
+fn ip_of(i: u64) -> u64 {
+    // Spread ids over a 10.x.x.x-like space; external id is the "IP".
+    0x0A00_0000u64 + i
+}
+
+impl CollectionSource for TraceRouteGenerator {
+    fn template(&self) -> &GraphTemplate {
+        &self.template
+    }
+
+    fn n_instances(&self) -> usize {
+        self.params.n_instances
+    }
+
+    fn instance(&self, t: Timestep) -> GraphInstance {
+        assert!(t < self.params.n_instances);
+        let mut rng = Prng::new(self.params.seed).fork(t as u64 + 1);
+        let congestion = self.congestion(t);
+        let n = self.template.n_vertices();
+        let window = TimeWindow::new(
+            t as i64 * self.params.window_secs,
+            (t as i64 + 1) * self.params.window_secs,
+        );
+
+        // Accumulate multi-valued samples per touched element.
+        let mut v_rtt: std::collections::BTreeMap<u32, Vec<f64>> = Default::default();
+        let mut v_traces: std::collections::BTreeMap<u32, i64> = Default::default();
+        let mut e_lat: std::collections::BTreeMap<u32, Vec<f64>> = Default::default();
+        let mut e_drops: std::collections::BTreeMap<u32, i64> = Default::default();
+
+        for _ in 0..self.params.traces_per_instance {
+            let dest = rng.gen_range(n as u64) as VIdx;
+            let path = self.path_from_root(dest);
+            let mut rtt = 0.0f64;
+            for &(v, e_in) in &path {
+                if e_in != u32::MAX {
+                    let lat = self.base_latency[e_in as usize] as f64 * congestion
+                        * (0.9 + 0.2 * rng.gen_f64());
+                    rtt += lat;
+                    e_lat.entry(e_in).or_default().push(lat);
+                    if rng.gen_bool(0.01) {
+                        *e_drops.entry(e_in).or_default() += 1;
+                    }
+                }
+                v_rtt.entry(v).or_default().push(rtt);
+                *v_traces.entry(v).or_default() += 1;
+            }
+        }
+
+        let mut gi = GraphInstance::empty(&self.template, t, window);
+
+        let mut rtt_col = AttrColumn::new();
+        let mut load_col = AttrColumn::new();
+        for (v, rtts) in &v_rtt {
+            rtt_col.push(*v, rtts.iter().map(|&r| AttrValue::Float(r)));
+            let load = rtts.len() as f64 / self.params.traces_per_instance as f64;
+            load_col.push(*v, [AttrValue::Float(load)]);
+        }
+        let mut traces_col = AttrColumn::new();
+        for (v, c) in &v_traces {
+            traces_col.push(*v, [AttrValue::Int(*c)]);
+        }
+        gi.vcols[vattr::RTT_MS] = Some(rtt_col);
+        gi.vcols[vattr::TRACES_SEEN] = Some(traces_col);
+        gi.vcols[vattr::LOAD] = Some(load_col);
+
+        let mut lat_col = AttrColumn::new();
+        let mut active_col = AttrColumn::new();
+        let mut bw_col = AttrColumn::new();
+        for (e, lats) in &e_lat {
+            lat_col.push(*e, lats.iter().map(|&l| AttrValue::Float(l)));
+            active_col.push(*e, [AttrValue::Bool(true)]);
+            // Bandwidth estimate inversely related to congestion + noise.
+            let bw = 1000.0 / (1.0 + lats.iter().sum::<f64>() / lats.len() as f64);
+            bw_col.push(*e, [AttrValue::Float(bw)]);
+        }
+        let mut drops_col = AttrColumn::new();
+        for (e, d) in &e_drops {
+            drops_col.push(*e, [AttrValue::Int(*d)]);
+        }
+        gi.ecols[eattr::LATENCY_MS] = Some(lat_col);
+        gi.ecols[eattr::ACTIVE] = Some(active_col);
+        gi.ecols[eattr::BANDWIDTH] = Some(bw_col);
+        gi.ecols[eattr::DROPS] = Some(drops_col);
+
+        gi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_shape_matches_tr() {
+        let g = TraceRouteGenerator::new(TraceRouteParams {
+            n_vertices: 5_000,
+            ..TraceRouteParams::tiny()
+        });
+        let t = g.template();
+        assert_eq!(t.n_vertices(), 5_000);
+        let ratio = t.n_edges() as f64 / t.n_vertices() as f64;
+        assert!((1.05..1.35).contains(&ratio), "edge/vertex ratio {ratio}");
+        // Power-law-ish: a max degree far above the mean.
+        let max_deg = (0..t.n_vertices() as u32).map(|v| t.out.degree(v)).max().unwrap();
+        assert!(max_deg > 50, "max degree {max_deg}");
+        // Small-world: diameter well below log-squared bound, above 5.
+        let d = t.estimate_diameter(0);
+        assert!((5..60).contains(&d), "diameter {d}");
+    }
+
+    #[test]
+    fn instances_are_deterministic_and_windowed() {
+        let g = TraceRouteGenerator::new(TraceRouteParams::tiny());
+        let a = g.instance(3);
+        let b = g.instance(3);
+        assert_eq!(a, b);
+        assert_eq!(a.timestep, 3);
+        assert_eq!(a.window.duration(), 2 * 3600);
+        assert_eq!(a.window.start, 3 * 2 * 3600);
+    }
+
+    #[test]
+    fn traced_elements_have_multivalued_attrs() {
+        let g = TraceRouteGenerator::new(TraceRouteParams::tiny());
+        let gi = g.instance(0);
+        let lat = gi.ecols[eattr::LATENCY_MS].as_ref().unwrap();
+        assert!(lat.n_elements() > 0);
+        // At least one edge saw multiple traces => multiple values.
+        assert!(lat.n_values() > lat.n_elements());
+        // Latency values positive.
+        for (_, vals) in lat.iter() {
+            for v in vals {
+                assert!(v.as_float().unwrap() > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn congestion_makes_peak_windows_slower() {
+        let params = TraceRouteParams::tiny();
+        let g = TraceRouteGenerator::new(params);
+        // windows_per_day = 12; peak at t≈3, trough at t≈9.
+        let mean_lat = |t: usize| {
+            let gi = g.instance(t);
+            let col = gi.ecols[eattr::LATENCY_MS].as_ref().unwrap();
+            let mut sum = 0.0;
+            let mut cnt = 0usize;
+            for (_, vals) in col.iter() {
+                for v in vals {
+                    sum += v.as_float().unwrap();
+                    cnt += 1;
+                }
+            }
+            sum / cnt as f64
+        };
+        assert!(mean_lat(3) > mean_lat(9), "diurnal congestion missing");
+    }
+
+    #[test]
+    fn vantages_reach_most_of_the_graph() {
+        let g = TraceRouteGenerator::new(TraceRouteParams::tiny());
+        let t = g.template();
+        let start = g.vantages()[0];
+        // BFS downstream.
+        let mut seen = vec![false; t.n_vertices()];
+        let mut q = std::collections::VecDeque::from([start]);
+        seen[start as usize] = true;
+        let mut count = 0usize;
+        while let Some(v) = q.pop_front() {
+            count += 1;
+            for &u in t.out.neighbors(v) {
+                if !seen[u as usize] {
+                    seen[u as usize] = true;
+                    q.push_back(u);
+                }
+            }
+        }
+        assert!(count * 10 >= t.n_vertices() * 5, "vantage reaches {count}/{}", t.n_vertices());
+    }
+}

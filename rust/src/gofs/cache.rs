@@ -1,0 +1,183 @@
+//! LRU slice cache (§V-E).
+//!
+//! "GoFS caches slices in memory, once loaded from disk, up to a
+//! predetermined number of slots [...] least recently used eviction. The
+//! cache size is configurable [at runtime] and the API makes the caching
+//! transparent." Keys are slice identities; values are decoded slices
+//! behind `Arc` so readers keep columns alive across eviction.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::{Arc, Mutex};
+
+struct Entry<V> {
+    value: Arc<V>,
+    /// Monotonic last-use tick.
+    used: u64,
+}
+
+struct Inner<K, V> {
+    map: HashMap<K, Entry<V>>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// A thread-safe LRU cache with a fixed number of slots (`0` disables
+/// caching entirely — the paper's `c0` configuration).
+pub struct SliceCache<K, V> {
+    slots: usize,
+    inner: Mutex<Inner<K, V>>,
+}
+
+impl<K: Eq + Hash + Clone, V> SliceCache<K, V> {
+    pub fn new(slots: usize) -> Self {
+        SliceCache {
+            slots,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                tick: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Look up `key`, or load it with `load` on a miss (caching the result
+    /// unless slots == 0). `load` runs outside the lock is *not* needed at
+    /// this scale; we hold the lock for simplicity and correctness of the
+    /// hit/miss accounting — contention is measured in the perf pass.
+    pub fn get_or_load<E>(
+        &self,
+        key: &K,
+        load: impl FnOnce() -> Result<V, E>,
+    ) -> Result<Arc<V>, E> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.map.get_mut(key) {
+            e.used = tick;
+            let value = e.value.clone();
+            inner.hits += 1;
+            return Ok(value);
+        }
+        inner.misses += 1;
+        let value = Arc::new(load()?);
+        if self.slots > 0 {
+            if inner.map.len() >= self.slots {
+                // Evict the least-recently-used entry.
+                if let Some(victim) = inner
+                    .map
+                    .iter()
+                    .min_by_key(|(_, e)| e.used)
+                    .map(|(k, _)| k.clone())
+                {
+                    inner.map.remove(&victim);
+                    inner.evictions += 1;
+                }
+            }
+            inner.map.insert(key.clone(), Entry { value: value.clone(), used: tick });
+        }
+        Ok(value)
+    }
+
+    /// (hits, misses, evictions)
+    pub fn stats(&self) -> (u64, u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.hits, inner.misses, inner.evictions)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ok_load(v: u32) -> impl FnOnce() -> Result<u32, std::convert::Infallible> {
+        move || Ok(v)
+    }
+
+    #[test]
+    fn hit_after_load() {
+        let c: SliceCache<&str, u32> = SliceCache::new(2);
+        assert_eq!(*c.get_or_load(&"a", ok_load(1)).unwrap(), 1);
+        assert_eq!(*c.get_or_load(&"a", ok_load(99)).unwrap(), 1); // cached
+        let (h, m, _) = c.stats();
+        assert_eq!((h, m), (1, 1));
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let c: SliceCache<&str, u32> = SliceCache::new(2);
+        c.get_or_load(&"a", ok_load(1)).unwrap();
+        c.get_or_load(&"b", ok_load(2)).unwrap();
+        c.get_or_load(&"a", ok_load(0)).unwrap(); // touch a
+        c.get_or_load(&"c", ok_load(3)).unwrap(); // evicts b
+        assert_eq!(c.len(), 2);
+        // b reloads (miss), a still cached.
+        let (_, m0, _) = c.stats();
+        c.get_or_load(&"a", ok_load(9)).unwrap();
+        let (_, m1, _) = c.stats();
+        assert_eq!(m0, m1, "a should hit");
+        c.get_or_load(&"b", ok_load(2)).unwrap();
+        let (_, m2, _) = c.stats();
+        assert_eq!(m2, m1 + 1, "b should miss after eviction");
+    }
+
+    #[test]
+    fn zero_slots_disables_caching() {
+        let c: SliceCache<u32, u32> = SliceCache::new(0);
+        c.get_or_load(&1, ok_load(10)).unwrap();
+        c.get_or_load(&1, ok_load(10)).unwrap();
+        let (h, m, _) = c.stats();
+        assert_eq!((h, m), (0, 2));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn values_survive_eviction_via_arc() {
+        let c: SliceCache<u32, Vec<u8>> = SliceCache::new(1);
+        let v1 = c.get_or_load(&1, || Ok::<_, std::convert::Infallible>(vec![1, 2, 3])).unwrap();
+        c.get_or_load(&2, || Ok::<_, std::convert::Infallible>(vec![4])).unwrap(); // evicts 1
+        assert_eq!(*v1, vec![1, 2, 3]); // still usable
+    }
+
+    #[test]
+    fn load_errors_propagate_and_do_not_cache() {
+        let c: SliceCache<u32, u32> = SliceCache::new(4);
+        let r: Result<Arc<u32>, String> = c.get_or_load(&7, || Err("boom".to_string()));
+        assert!(r.is_err());
+        assert_eq!(c.len(), 0);
+        // Subsequent success caches normally.
+        let v: Result<Arc<u32>, String> = c.get_or_load(&7, || Ok(42));
+        assert_eq!(*v.unwrap(), 42);
+    }
+
+    #[test]
+    fn eviction_count_grows_under_pressure() {
+        let c: SliceCache<u32, u32> = SliceCache::new(3);
+        for i in 0..10u32 {
+            c.get_or_load(&i, ok_load(i)).unwrap();
+        }
+        let (_, _, e) = c.stats();
+        assert_eq!(e, 7);
+        assert_eq!(c.len(), 3);
+    }
+}

@@ -1,0 +1,64 @@
+//! GoFS — the Graph-oriented File System (paper §V).
+//!
+//! A distributed *data store* (not a database) for time-series graphs,
+//! co-designed with the Gopher access patterns:
+//!
+//! * **Partitioned storage using slices** (§V-A): the template is
+//!   partitioned across hosts; *slices* — single files holding a
+//!   serialized graph data structure — are the unit of disk access.
+//! * **Iteration, filtering, projection** (§V-B): subgraph-centric
+//!   iterators over space and time; start/end time filters resolved via a
+//!   metadata index; per-attribute slices so only projected attributes are
+//!   read; constant/default value inheritance from the template.
+//! * **Temporal instance packing** (§V-C): `i` adjacent instances packed
+//!   per slice so one read amortizes the next `i−1` timesteps.
+//! * **Subgraph bin packing** (§V-D): a fixed number `s` of bins per
+//!   partition bounds slice count/size skew; iterators return subgraphs in
+//!   bin-major order.
+//! * **Slice caching** (§V-E): a runtime-configurable LRU cache of decoded
+//!   slices (`c` slots).
+//!
+//! Layout on disk (one directory per partition/host):
+//! ```text
+//! part-0/
+//!   template.slice            # subgraph topology + schemas + layout params
+//!   meta.slice                # windows, packing params, slice index
+//!   attr/v3/b07-g002.slice    # vertex attr 3, bin 7, instance group 2
+//!   attr/e0/b00-g000.slice    # edge attr 0, bin 0, instance group 0
+//! ```
+
+pub mod cache;
+pub mod disk;
+pub mod reader;
+pub mod slice;
+pub mod writer;
+
+pub use cache::SliceCache;
+pub use disk::DiskModel;
+pub use reader::{open_collection, Projection, Store, StoreOptions, SubgraphInstance};
+pub use slice::{SliceFile, SliceKind};
+pub use writer::{deploy, DeployConfig, DeployReport};
+
+/// Identifies one attribute slice within a partition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SliceKey {
+    /// True for vertex attributes, false for edge attributes.
+    pub vertex: bool,
+    /// Attribute index in the respective schema.
+    pub attr: usize,
+    /// Subgraph bin (§V-D).
+    pub bin: usize,
+    /// Temporal instance group: timesteps `[group·i, (group+1)·i)` (§V-C).
+    pub group: usize,
+}
+
+impl SliceKey {
+    /// Relative file path of this slice within a partition directory.
+    pub fn rel_path(&self) -> std::path::PathBuf {
+        let kind = if self.vertex { 'v' } else { 'e' };
+        std::path::PathBuf::from(format!(
+            "attr/{kind}{}/b{:03}-g{:04}.slice",
+            self.attr, self.bin, self.group
+        ))
+    }
+}

@@ -1,0 +1,664 @@
+//! GoFS reader: the per-host store API used by Gopher (§V-B).
+//!
+//! The API is subgraph-centric and strictly host-local: "The API only
+//! operates on slices present on the local host and partition. This
+//! eliminates network transfer at the GoFS layer at runtime and pushes
+//! cross-machine coordination to the Gopher application."
+//!
+//! * iterators over subgraphs in **bin-major order** (§V-D);
+//! * per-subgraph **time-ordered instance iterators** with start/end
+//!   filtering resolved through the metadata index (§V-B);
+//! * **attribute projection** — only projected attributes' slices are
+//!   read (§V-B);
+//! * transparent **constant/default inheritance** from the template;
+//! * transparent **LRU slice caching** (§V-E).
+
+use crate::graph::instance::{resolve, ValueRef};
+use crate::graph::{AttrColumn, Schema, SubgraphId, TimeWindow, Timestep};
+use crate::gofs::cache::SliceCache;
+use crate::gofs::disk::{DiskClock, DiskModel};
+use crate::gofs::slice::{SliceFile, SliceKind};
+use crate::gofs::writer::{decode_meta_slice, part_dir, PartMeta};
+use crate::gofs::SliceKey;
+use crate::metrics::{keys, Metrics};
+use crate::partition::{BinPacking, RemoteEdge, Subgraph};
+use crate::util::wire::Dec;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Which attributes to load for subgraph instances (§V-B projection).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Projection {
+    pub vertex_attrs: Vec<usize>,
+    pub edge_attrs: Vec<usize>,
+}
+
+impl Projection {
+    pub fn none() -> Self {
+        Projection::default()
+    }
+
+    pub fn all(vs: &Schema, es: &Schema) -> Self {
+        Projection {
+            vertex_attrs: (0..vs.len()).collect(),
+            edge_attrs: (0..es.len()).collect(),
+        }
+    }
+
+    /// Project by attribute names (unknown names are an error).
+    pub fn named(vs: &Schema, es: &Schema, vnames: &[&str], enames: &[&str]) -> Result<Self> {
+        let mut p = Projection::default();
+        for n in vnames {
+            p.vertex_attrs
+                .push(vs.index_of(n).with_context(|| format!("no vertex attr {n}"))?);
+        }
+        for n in enames {
+            p.edge_attrs
+                .push(es.index_of(n).with_context(|| format!("no edge attr {n}"))?);
+        }
+        Ok(p)
+    }
+}
+
+/// A decoded attribute slice: columns per (timestep-in-group, pos-in-bin).
+struct DecodedAttrSlice {
+    t_lo: Timestep,
+    n_pos: usize,
+    /// Row-major: `cols[(t - t_lo) * n_pos + pos]`.
+    cols: Vec<Option<Arc<AttrColumn>>>,
+}
+
+impl DecodedAttrSlice {
+    fn get(&self, t: Timestep, pos: usize) -> Option<Arc<AttrColumn>> {
+        self.cols[(t - self.t_lo) * self.n_pos + pos].clone()
+    }
+}
+
+/// Template-derived shared state for a partition.
+pub struct PartShared {
+    pub part_id: usize,
+    pub vertex_schema: Schema,
+    pub edge_schema: Schema,
+    pub subgraphs: Vec<Arc<Subgraph>>,
+    pub bins: BinPacking,
+    /// subgraph local idx -> (bin, position within bin)
+    pub bin_pos: Vec<(usize, usize)>,
+}
+
+/// A subgraph instance handed to application `Compute` methods: the
+/// time-invariant topology plus this timestep's projected attribute values.
+pub struct SubgraphInstance {
+    pub shared: Arc<PartShared>,
+    pub sg: Arc<Subgraph>,
+    pub timestep: Timestep,
+    pub window: TimeWindow,
+    /// Projected vertex columns (indexed by schema attr; None = not
+    /// projected or no values). Column indices are subgraph-local.
+    vcols: Vec<Option<Arc<AttrColumn>>>,
+    /// Projected edge columns (indexed by schema attr; column indices are
+    /// positions in `sg.edges_sorted`).
+    ecols: Vec<Option<Arc<AttrColumn>>>,
+}
+
+impl SubgraphInstance {
+    /// Values of vertex attribute `attr` at local vertex `v`, with
+    /// template inheritance.
+    pub fn vertex_values(&self, attr: usize, v: u32) -> ValueRef<'_> {
+        resolve(
+            &self.shared.vertex_schema.attrs[attr].binding,
+            self.vcols[attr].as_deref(),
+            v,
+        )
+    }
+
+    /// Values of edge attribute `attr` for the owned edge at position
+    /// `edge_pos` in the subgraph's edge list (`sg.edges`).
+    pub fn edge_values(&self, attr: usize, edge_pos: usize) -> ValueRef<'_> {
+        let sorted = self.sg.edge_attr_pos(edge_pos);
+        resolve(
+            &self.shared.edge_schema.attrs[attr].binding,
+            self.ecols[attr].as_deref(),
+            sorted,
+        )
+    }
+
+    /// First float value of an edge attribute (common hot path: weights).
+    pub fn edge_f64(&self, attr: usize, edge_pos: usize) -> Option<f64> {
+        self.edge_values(attr, edge_pos).first().and_then(|v| v.as_float())
+    }
+
+    /// True when the instance has any value for this vertex attribute
+    /// (before inheritance).
+    pub fn vertex_has_value(&self, attr: usize, v: u32) -> bool {
+        self.vcols[attr].as_ref().map(|c| !c.get(v).is_empty()).unwrap_or(false)
+    }
+
+    /// Iterate (local vertex, values) for a projected vertex attribute.
+    pub fn vertex_column(&self, attr: usize) -> Option<&AttrColumn> {
+        self.vcols[attr].as_deref()
+    }
+
+    pub fn edge_column(&self, attr: usize) -> Option<&AttrColumn> {
+        self.ecols[attr].as_deref()
+    }
+}
+
+/// Runtime options for a [`Store`].
+#[derive(Clone)]
+pub struct StoreOptions {
+    /// LRU cache slots (`c`); 0 disables caching.
+    pub cache_slots: usize,
+    pub disk: DiskModel,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Default for StoreOptions {
+    fn default() -> Self {
+        StoreOptions {
+            cache_slots: 14,
+            disk: DiskModel::default(),
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+}
+
+/// A host-local GoFS partition store.
+pub struct Store {
+    dir: PathBuf,
+    shared: Arc<PartShared>,
+    meta: PartMeta,
+    cache: SliceCache<SliceKey, DecodedAttrSlice>,
+    opts: StoreOptions,
+    disk_clock: DiskClock,
+}
+
+impl Store {
+    /// Open partition `part` of the collection rooted at `root`. Loads the
+    /// template and metadata slices eagerly ("the graph template is loaded
+    /// once and retained in memory" — §V-E).
+    pub fn open(root: &Path, part: usize, opts: StoreOptions) -> Result<Store> {
+        let dir = part_dir(root, part);
+        let (tslice, tbytes) = SliceFile::read_from(&dir.join("template.slice"))?;
+        if tslice.kind != SliceKind::Template {
+            bail!("template.slice has wrong kind");
+        }
+        let shared = decode_template_slice(&tslice.body)?;
+        if shared.part_id != part {
+            bail!("partition id mismatch: dir {part}, slice {}", shared.part_id);
+        }
+        let (mslice, mbytes) = SliceFile::read_from(&dir.join("meta.slice"))?;
+        let meta = decode_meta_slice(&mslice.body)?;
+        opts.metrics.add(keys::SLICES_READ, 2);
+        opts.metrics.add(keys::SLICE_BYTES, tbytes + mbytes);
+        let disk_clock = DiskClock::default();
+        let sim = disk_clock.charge(&opts.disk, tbytes) + disk_clock.charge(&opts.disk, mbytes);
+        opts.metrics.add(keys::SIM_DISK_NS, sim);
+        Ok(Store {
+            dir,
+            shared: Arc::new(shared),
+            meta,
+            cache: SliceCache::new(opts.cache_slots),
+            opts,
+            disk_clock,
+        })
+    }
+
+    pub fn part_id(&self) -> usize {
+        self.shared.part_id
+    }
+
+    pub fn shared(&self) -> &Arc<PartShared> {
+        &self.shared
+    }
+
+    pub fn n_instances(&self) -> usize {
+        self.meta.n_instances
+    }
+
+    pub fn window(&self, t: Timestep) -> TimeWindow {
+        self.meta.windows[t]
+    }
+
+    pub fn vertex_schema(&self) -> &Schema {
+        &self.shared.vertex_schema
+    }
+
+    pub fn edge_schema(&self) -> &Schema {
+        &self.shared.edge_schema
+    }
+
+    /// Total modeled disk time so far (ns).
+    pub fn sim_disk_ns(&self) -> u64 {
+        self.disk_clock.total_ns()
+    }
+
+    /// Cache statistics `(hits, misses, evictions)`.
+    pub fn cache_stats(&self) -> (u64, u64, u64) {
+        self.cache.stats()
+    }
+
+    /// Subgraphs in bin-major order — the balanced execution order the
+    /// partition iterator suggests (§V-D).
+    pub fn subgraphs(&self) -> Vec<Arc<Subgraph>> {
+        self.shared
+            .bins
+            .bin_major_order()
+            .into_iter()
+            .map(|i| self.shared.subgraphs[i].clone())
+            .collect()
+    }
+
+    /// Timesteps whose windows overlap `[start, end)` — the §V-B temporal
+    /// filter, resolved from the metadata index without touching data.
+    pub fn filter_time(&self, start: i64, end: i64) -> Vec<Timestep> {
+        let q = TimeWindow::new(start, end);
+        (0..self.meta.n_instances)
+            .filter(|&t| self.meta.windows[t].overlaps(&q))
+            .collect()
+    }
+
+    /// Read one subgraph instance with the given projection.
+    pub fn read_instance(
+        &self,
+        sg_local: usize,
+        t: Timestep,
+        proj: &Projection,
+    ) -> Result<SubgraphInstance> {
+        if t >= self.meta.n_instances {
+            bail!("timestep {t} out of range ({} instances)", self.meta.n_instances);
+        }
+        let sg = self
+            .shared
+            .subgraphs
+            .get(sg_local)
+            .with_context(|| format!("no subgraph {sg_local}"))?
+            .clone();
+        let (bin, pos) = self.shared.bin_pos[sg_local];
+        let group = t / self.meta.pack;
+
+        let mut vcols = vec![None; self.shared.vertex_schema.len()];
+        for &a in &proj.vertex_attrs {
+            vcols[a] = self.attr_column(true, a, bin, group, t, pos)?;
+        }
+        let mut ecols = vec![None; self.shared.edge_schema.len()];
+        for &a in &proj.edge_attrs {
+            ecols[a] = self.attr_column(false, a, bin, group, t, pos)?;
+        }
+        Ok(SubgraphInstance {
+            shared: self.shared.clone(),
+            sg,
+            timestep: t,
+            window: self.meta.windows[t],
+            vcols,
+            ecols,
+        })
+    }
+
+    /// Iterate instances of a subgraph over a time range (time-ordered).
+    pub fn instances<'a>(
+        &'a self,
+        sg_local: usize,
+        timesteps: &'a [Timestep],
+        proj: &'a Projection,
+    ) -> impl Iterator<Item = Result<SubgraphInstance>> + 'a {
+        timesteps.iter().map(move |&t| self.read_instance(sg_local, t, proj))
+    }
+
+    fn attr_column(
+        &self,
+        vertex: bool,
+        attr: usize,
+        bin: usize,
+        group: usize,
+        t: Timestep,
+        pos: usize,
+    ) -> Result<Option<Arc<AttrColumn>>> {
+        let slot = if vertex { attr } else { self.shared.vertex_schema.len() + attr };
+        if !self.meta.presence[slot][bin][group] {
+            return Ok(None); // slice was never written: no values
+        }
+        let key = SliceKey { vertex, attr, bin, group };
+        let ty = if vertex {
+            self.shared.vertex_schema.attrs[attr].ty
+        } else {
+            self.shared.edge_schema.attrs[attr].ty
+        };
+        let t_lo = group * self.meta.pack;
+        let (h0, m0, e0) = self.cache.stats();
+        let decoded = self.cache.get_or_load(&key, || -> Result<DecodedAttrSlice> {
+            let path = self.dir.join(key.rel_path());
+            let m = &self.opts.metrics;
+            let ((slice, bytes), real_ns) = {
+                let t0 = std::time::Instant::now();
+                let r = SliceFile::read_from(&path)?;
+                (r, t0.elapsed().as_nanos() as u64)
+            };
+            m.incr(keys::SLICES_READ);
+            m.add(keys::SLICE_BYTES, bytes);
+            m.add(keys::SLICE_READ_NS, real_ns);
+            m.add(keys::SIM_DISK_NS, self.disk_clock.charge(&self.opts.disk, bytes));
+            decode_attr_slice(&slice, ty, t_lo)
+        })?;
+        // Mirror cache effectiveness into the shared metrics registry.
+        let (h1, m1, e1) = self.cache.stats();
+        self.opts.metrics.add(keys::CACHE_HITS, h1 - h0);
+        self.opts.metrics.add(keys::CACHE_MISSES, m1 - m0);
+        self.opts.metrics.add(keys::CACHE_EVICTIONS, e1 - e0);
+        Ok(decoded.get(t, pos))
+    }
+}
+
+fn decode_attr_slice(slice: &SliceFile, ty: crate::graph::AttrType, t_lo: usize) -> Result<DecodedAttrSlice> {
+    if slice.kind != SliceKind::Attribute {
+        bail!("expected attribute slice");
+    }
+    let mut d = Dec::new(&slice.body);
+    let n_ts = d.varint()? as usize;
+    let n_pos = d.varint()? as usize;
+    let mut cols = Vec::with_capacity(n_ts * n_pos);
+    for _ in 0..n_ts {
+        for _ in 0..n_pos {
+            match d.u8()? {
+                0 => cols.push(None),
+                1 => cols.push(Some(Arc::new(AttrColumn::decode_from(ty, &mut d)?))),
+                x => bail!("bad cell tag {x}"),
+            }
+        }
+    }
+    Ok(DecodedAttrSlice { t_lo, n_pos, cols })
+}
+
+fn decode_template_slice(body: &[u8]) -> Result<PartShared> {
+    use crate::graph::Csr;
+    let mut d = Dec::new(body);
+    let part_id = d.varint()? as usize;
+    let n_bins = d.varint()? as usize;
+    let _pack = d.varint()? as usize;
+    let vertex_schema = Schema::decode_from(&mut d)?;
+    let edge_schema = Schema::decode_from(&mut d)?;
+    let n_sg = d.varint()? as usize;
+    let mut subgraphs = Vec::with_capacity(n_sg);
+    for _ in 0..n_sg {
+        let id = SubgraphId(d.u64()?);
+        let nv = d.varint()? as usize;
+        let mut vertices = Vec::with_capacity(nv);
+        let mut prev = 0u32;
+        for k in 0..nv {
+            let delta = d.varint()? as u32;
+            let v = if k == 0 { delta } else { prev + delta };
+            vertices.push(v);
+            prev = v;
+        }
+        let mut ext_ids = Vec::with_capacity(nv);
+        for _ in 0..nv {
+            ext_ids.push(d.varint()?);
+        }
+        let nl = d.varint()? as usize;
+        let mut local_edges = Vec::with_capacity(nl);
+        for pos in 0..nl {
+            let s = d.varint()? as u32;
+            let t = d.varint()? as u32;
+            local_edges.push((s, t, pos as u32));
+        }
+        let ne = d.varint()? as usize;
+        let mut edges = Vec::with_capacity(ne);
+        for _ in 0..ne {
+            edges.push(d.varint()? as u32);
+        }
+        let nr = d.varint()? as usize;
+        let mut remote = Vec::with_capacity(nr);
+        for _ in 0..nr {
+            remote.push(RemoteEdge {
+                src_local: d.varint()? as u32,
+                eidx: d.varint()? as u32,
+                dst_global: d.varint()? as u32,
+                dst_ext: d.varint()?,
+                dst_subgraph: SubgraphId(d.u64()?),
+            });
+        }
+        // Recompute sorted edge view.
+        let mut order: Vec<u32> = (0..edges.len() as u32).collect();
+        order.sort_by_key(|&i| edges[i as usize]);
+        let edges_sorted: Vec<u32> = order.iter().map(|&i| edges[i as usize]).collect();
+        let mut edge_sorted_pos = vec![0u32; edges.len()];
+        for (sp, &orig) in order.iter().enumerate() {
+            edge_sorted_pos[orig as usize] = sp as u32;
+        }
+        subgraphs.push(Arc::new(Subgraph {
+            id,
+            local: Csr::from_edges(nv, &local_edges),
+            vertices,
+            ext_ids,
+            edges,
+            edges_sorted,
+            edge_sorted_pos,
+            remote,
+        }));
+    }
+    let nb = d.varint()? as usize;
+    if nb != n_bins {
+        bail!("bin count mismatch");
+    }
+    let mut bins = Vec::with_capacity(nb);
+    for _ in 0..nb {
+        let k = d.varint()? as usize;
+        let mut b = Vec::with_capacity(k);
+        for _ in 0..k {
+            b.push(d.varint()? as usize);
+        }
+        bins.push(b);
+    }
+    let weights: Vec<usize> = bins
+        .iter()
+        .map(|b: &Vec<usize>| b.iter().map(|&i| subgraphs[i].weight()).sum())
+        .collect();
+    let mut bin_pos = vec![(usize::MAX, usize::MAX); subgraphs.len()];
+    for (bi, b) in bins.iter().enumerate() {
+        for (pos, &sgi) in b.iter().enumerate() {
+            bin_pos[sgi] = (bi, pos);
+        }
+    }
+    if bin_pos.iter().any(|&(b, _)| b == usize::MAX) {
+        bail!("subgraph missing from bin assignment");
+    }
+    Ok(PartShared {
+        part_id,
+        vertex_schema,
+        edge_schema,
+        subgraphs,
+        bins: BinPacking { n_bins: nb, bins, weights },
+        bin_pos,
+    })
+}
+
+/// Open every partition of a deployed collection.
+pub fn open_collection(root: &Path, opts: &StoreOptions) -> Result<Vec<Store>> {
+    let n = crate::gofs::writer::collection_parts(root)?;
+    (0..n).map(|p| Store::open(root, p, opts.clone())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::traceroute::{eattr, vattr};
+    use crate::datagen::{CollectionSource, TraceRouteGenerator, TraceRouteParams};
+    use crate::gofs::writer::{deploy, DeployConfig};
+
+    fn deployed(tag: &str, cfg: DeployConfig) -> (TraceRouteGenerator, PathBuf) {
+        let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+        let dir = std::env::temp_dir().join(format!("gofs-reader-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        deploy(&gen, &cfg, &dir).unwrap();
+        (gen, dir)
+    }
+
+    fn opts(cache: usize) -> StoreOptions {
+        StoreOptions {
+            cache_slots: cache,
+            disk: DiskModel::instant(),
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    #[test]
+    fn subgraphs_in_bin_major_order_cover_partition() {
+        let (_, dir) = deployed("order", DeployConfig::new(2, 3, 4));
+        for p in 0..2 {
+            let store = Store::open(&dir, p, opts(8)).unwrap();
+            let sgs = store.subgraphs();
+            assert_eq!(sgs.len(), store.shared().subgraphs.len());
+            // bin-major: consecutive runs share bins
+            let mut seen_bins = Vec::new();
+            for sg in &sgs {
+                let (bin, _) = store.shared().bin_pos[sg.id.local()];
+                if seen_bins.last() != Some(&bin) {
+                    assert!(!seen_bins.contains(&bin), "bin revisited: not bin-major");
+                    seen_bins.push(bin);
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn values_roundtrip_through_store() {
+        let (gen, dir) = deployed("values", DeployConfig::new(2, 3, 4));
+        let t = 5usize;
+        let gi = gen.instance(t);
+        let proj = Projection::all(&gen.template().vertex_schema, &gen.template().edge_schema);
+        let mut checked_v = 0usize;
+        let mut checked_e = 0usize;
+        for p in 0..2 {
+            let store = Store::open(&dir, p, opts(16)).unwrap();
+            for sg in store.subgraphs() {
+                let sgi = store.read_instance(sg.id.local(), t, &proj).unwrap();
+                assert_eq!(sgi.window, gi.window);
+                // vertex attr values match the generator's instance
+                for (local, &global) in sg.vertices.iter().enumerate() {
+                    let got = sgi.vertex_values(vattr::RTT_MS, local as u32);
+                    let want = gi.vertex_values(gen.template(), vattr::RTT_MS, global);
+                    assert_eq!(got.len(), want.len(), "rtt count v{global}");
+                    if got.len() > 0 {
+                        checked_v += 1;
+                        assert_eq!(got.first(), want.first());
+                    }
+                }
+                // edge attr values (latency) match per owned edge
+                for (pos, &eidx) in sg.edges.iter().enumerate() {
+                    let got = sgi.edge_values(eattr::LATENCY_MS, pos);
+                    let want = gi.edge_values(gen.template(), eattr::LATENCY_MS, eidx);
+                    assert_eq!(got.len(), want.len(), "lat count e{eidx}");
+                    if got.len() > 0 {
+                        checked_e += 1;
+                    }
+                }
+            }
+        }
+        assert!(checked_v > 10, "too few vertex values checked ({checked_v})");
+        assert!(checked_e > 10, "too few edge values checked ({checked_e})");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn inheritance_is_transparent() {
+        let (gen, dir) = deployed("inherit", DeployConfig::new(1, 2, 3));
+        let store = Store::open(&dir, 0, opts(4)).unwrap();
+        let proj = Projection::all(&gen.template().vertex_schema, &gen.template().edge_schema);
+        let sgi = store.read_instance(0, 0, &proj).unwrap();
+        // isExists has a default of true and instances never override it.
+        let v = sgi.vertex_values(vattr::ISEXISTS, 0);
+        assert_eq!(v.first().and_then(|x| x.as_bool()), Some(true));
+        // kind is constant
+        let k = sgi.vertex_values(vattr::KIND, 0);
+        assert_eq!(k.first().and_then(|x| x.as_str().map(String::from)), Some("router".into()));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn projection_skips_unrequested_slices() {
+        let (gen, dir) = deployed("proj", DeployConfig::new(1, 2, 2));
+        let store = Store::open(&dir, 0, opts(0)).unwrap();
+        let m0 = store.opts.metrics.snapshot();
+        let proj = Projection::named(
+            &gen.template().vertex_schema,
+            &gen.template().edge_schema,
+            &["rtt_ms"],
+            &[],
+        )
+        .unwrap();
+        let sgs = store.subgraphs();
+        let _ = store.read_instance(sgs[0].id.local(), 0, &proj).unwrap();
+        let d = store.opts.metrics.snapshot().since(&m0);
+        // at most one attribute slice read (the projected one; maybe absent)
+        assert!(d.get(keys::SLICES_READ) <= 1, "read {}", d.get(keys::SLICES_READ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn temporal_packing_amortizes_reads() {
+        let (gen, dir) = deployed("amortize", DeployConfig::new(1, 2, 4));
+        let store = Store::open(&dir, 0, opts(32)).unwrap();
+        let proj = Projection::named(
+            &gen.template().vertex_schema,
+            &gen.template().edge_schema,
+            &["rtt_ms"],
+            &[],
+        )
+        .unwrap();
+        let m0 = store.opts.metrics.snapshot();
+        // Read 4 consecutive instances of subgraph 0 (one pack group).
+        for t in 0..4 {
+            let _ = store.read_instance(0, t, &proj).unwrap();
+        }
+        let d = store.opts.metrics.snapshot().since(&m0);
+        assert!(
+            d.get(keys::SLICES_READ) <= 1,
+            "packed group should need one read, got {}",
+            d.get(keys::SLICES_READ)
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn cache_disabled_rereads_every_time() {
+        let (gen, dir) = deployed("nocache", DeployConfig::new(1, 2, 4));
+        let store = Store::open(&dir, 0, opts(0)).unwrap();
+        let proj = Projection::named(
+            &gen.template().vertex_schema,
+            &gen.template().edge_schema,
+            &["rtt_ms"],
+            &[],
+        )
+        .unwrap();
+        let m0 = store.opts.metrics.snapshot();
+        for _ in 0..3 {
+            let _ = store.read_instance(0, 0, &proj).unwrap();
+        }
+        let d = store.opts.metrics.snapshot().since(&m0);
+        assert_eq!(d.get(keys::SLICES_READ), 3);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn time_filter_uses_windows() {
+        let (_, dir) = deployed("filter", DeployConfig::new(1, 2, 3));
+        let store = Store::open(&dir, 0, opts(4)).unwrap();
+        // Windows are 2h each; filter for [2h, 8h) -> timesteps 1,2,3.
+        let ts = store.filter_time(2 * 3600, 8 * 3600);
+        assert_eq!(ts, vec![1, 2, 3]);
+        let all = store.filter_time(i64::MIN / 2, i64::MAX / 2);
+        assert_eq!(all.len(), store.n_instances());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn open_collection_opens_all_parts() {
+        let (_, dir) = deployed("collection", DeployConfig::new(3, 2, 4));
+        let stores = open_collection(&dir, &opts(4)).unwrap();
+        assert_eq!(stores.len(), 3);
+        let total: usize = stores.iter().map(|s| s.shared().subgraphs.len()).sum();
+        assert!(total >= 3);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,215 @@
+//! Slice file format.
+//!
+//! A slice is a single file with a fixed header and an optionally
+//! deflate-compressed body, integrity-checked with CRC32:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "GOFS"
+//! 4       1     format version (1)
+//! 5       1     kind (SliceKind)
+//! 6       1     flags (bit 0: body is deflate-compressed)
+//! 7       1     reserved
+//! 8       4     crc32 of the *uncompressed* body
+//! 12      4     uncompressed body length (LE u32)
+//! 16      ...   body
+//! ```
+//!
+//! "Bulk reading of a slice at a time ensures that the disk latency is
+//! amortized across a chunk of logically related bytes" (§V-A): the format
+//! is deliberately single-read — no internal random access.
+
+use anyhow::{bail, Context, Result};
+use flate2::read::DeflateDecoder;
+use flate2::write::DeflateEncoder;
+use flate2::Compression;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"GOFS";
+const VERSION: u8 = 1;
+const FLAG_DEFLATE: u8 = 1;
+
+/// What a slice contains (§V-A "slice types vary").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SliceKind {
+    /// Subgraph topology + schemas + layout parameters for a partition.
+    Template,
+    /// Partition metadata: windows, packing parameters, slice index.
+    Metadata,
+    /// Attribute values for (attr, bin, instance group).
+    Attribute,
+}
+
+impl SliceKind {
+    fn tag(self) -> u8 {
+        match self {
+            SliceKind::Template => 0,
+            SliceKind::Metadata => 1,
+            SliceKind::Attribute => 2,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Self> {
+        Ok(match t {
+            0 => SliceKind::Template,
+            1 => SliceKind::Metadata,
+            2 => SliceKind::Attribute,
+            _ => bail!("unknown slice kind {t}"),
+        })
+    }
+}
+
+/// An in-memory slice: kind + raw body bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SliceFile {
+    pub kind: SliceKind,
+    pub body: Vec<u8>,
+}
+
+impl SliceFile {
+    pub fn new(kind: SliceKind, body: Vec<u8>) -> Self {
+        SliceFile { kind, body }
+    }
+
+    /// Serialize to bytes, optionally compressing the body.
+    pub fn to_bytes(&self, compress: bool) -> Result<Vec<u8>> {
+        let crc = crc32fast::hash(&self.body);
+        let (payload, flags) = if compress {
+            let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
+            enc.write_all(&self.body)?;
+            (enc.finish()?, FLAG_DEFLATE)
+        } else {
+            (self.body.clone(), 0)
+        };
+        let mut out = Vec::with_capacity(16 + payload.len());
+        out.extend_from_slice(MAGIC);
+        out.push(VERSION);
+        out.push(self.kind.tag());
+        out.push(flags);
+        out.push(0);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out.extend_from_slice(&(self.body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        Ok(out)
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Result<SliceFile> {
+        if data.len() < 16 {
+            bail!("slice too short ({} bytes)", data.len());
+        }
+        if &data[0..4] != MAGIC {
+            bail!("bad slice magic");
+        }
+        if data[4] != VERSION {
+            bail!("unsupported slice version {}", data[4]);
+        }
+        let kind = SliceKind::from_tag(data[5])?;
+        let flags = data[6];
+        let crc = u32::from_le_bytes(data[8..12].try_into().unwrap());
+        let len = u32::from_le_bytes(data[12..16].try_into().unwrap()) as usize;
+        let body = if flags & FLAG_DEFLATE != 0 {
+            let mut dec = DeflateDecoder::new(&data[16..]);
+            let mut body = Vec::with_capacity(len);
+            dec.read_to_end(&mut body).context("slice: deflate error")?;
+            body
+        } else {
+            data[16..].to_vec()
+        };
+        if body.len() != len {
+            bail!("slice body length mismatch: header {len}, got {}", body.len());
+        }
+        if crc32fast::hash(&body) != crc {
+            bail!("slice CRC mismatch (corrupt file)");
+        }
+        Ok(SliceFile { kind, body })
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn write_to(&self, path: &Path, compress: bool) -> Result<u64> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let bytes = self.to_bytes(compress)?;
+        std::fs::write(path, &bytes)
+            .with_context(|| format!("writing slice {}", path.display()))?;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Read and validate a slice from a file. Returns the slice and the
+    /// on-disk byte count (for the disk model).
+    pub fn read_from(path: &Path) -> Result<(SliceFile, u64)> {
+        let data = std::fs::read(path)
+            .with_context(|| format!("reading slice {}", path.display()))?;
+        let n = data.len() as u64;
+        Ok((SliceFile::from_bytes(&data)?, n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn roundtrip_uncompressed_and_compressed() {
+        let body: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        for compress in [false, true] {
+            let s = SliceFile::new(SliceKind::Attribute, body.clone());
+            let bytes = s.to_bytes(compress).unwrap();
+            let s2 = SliceFile::from_bytes(&bytes).unwrap();
+            assert_eq!(s, s2);
+        }
+    }
+
+    #[test]
+    fn compression_shrinks_redundant_bodies() {
+        let body = vec![7u8; 100_000];
+        let s = SliceFile::new(SliceKind::Template, body);
+        let raw = s.to_bytes(false).unwrap().len();
+        let comp = s.to_bytes(true).unwrap().len();
+        assert!(comp * 10 < raw, "deflate ineffective: {comp} vs {raw}");
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let s = SliceFile::new(SliceKind::Metadata, b"hello world, this is a body".to_vec());
+        let mut bytes = s.to_bytes(false).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        assert!(SliceFile::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn header_corruption_rejected() {
+        let s = SliceFile::new(SliceKind::Metadata, b"body".to_vec());
+        let mut bytes = s.to_bytes(false).unwrap();
+        bytes[0] = b'X';
+        assert!(SliceFile::from_bytes(&bytes).is_err());
+        assert!(SliceFile::from_bytes(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("gofs-slice-test-{}", std::process::id()));
+        let path = dir.join("nested/dir/test.slice");
+        let s = SliceFile::new(SliceKind::Attribute, vec![1, 2, 3, 4, 5]);
+        let written = s.write_to(&path, true).unwrap();
+        assert!(written >= 16);
+        let (s2, n) = SliceFile::read_from(&path).unwrap();
+        assert_eq!(s, s2);
+        assert_eq!(n, written);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn arbitrary_bodies_roundtrip() {
+        forall(60, |g| {
+            let body = g.vec(0..=2000, |g| g.u64(0..256) as u8);
+            let compress = g.bool(0.5);
+            let s = SliceFile::new(SliceKind::Attribute, body);
+            let s2 = SliceFile::from_bytes(&s.to_bytes(compress).unwrap()).unwrap();
+            assert_eq!(s, s2);
+        });
+    }
+}

@@ -1,0 +1,468 @@
+//! GoFS deployment: partition a collection and lay slices out on disk.
+//!
+//! Deployment is the write-once half of the store (§V: "Given the write
+//! once/read many model of GoFS, we trade off data layout cost against
+//! improved runtime performance"). The two layout parameters fixed at
+//! deploy time are the subgraph bin count `s` (§V-D) and the temporal
+//! packing factor `i` (§V-C); the cache size `c` is a runtime parameter.
+//!
+//! Instances are streamed from the [`CollectionSource`] one at a time and
+//! projected straight into per-(attr, bin) group buffers, so deployment
+//! memory is O(one instance group), never the whole series.
+
+use crate::datagen::CollectionSource;
+use crate::graph::{AttrColumn, Schema, TimeWindow};
+use crate::gofs::slice::{SliceFile, SliceKind};
+use crate::gofs::SliceKey;
+use crate::partition::{
+    binpack_subgraphs, extract_partitions, partition_graph, BinPacking, Partition,
+    PartitionOptions, Subgraph,
+};
+use crate::util::wire::{Dec, Enc};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Deployment parameters.
+#[derive(Debug, Clone)]
+pub struct DeployConfig {
+    /// Number of partitions (hosts). Paper testbed: 12.
+    pub n_parts: usize,
+    /// Subgraph bins per partition (`s`). Paper: 20 or 40.
+    pub n_bins: usize,
+    /// Instances packed per attribute slice (`i`). Paper: 1 or 20.
+    pub pack: usize,
+    /// Deflate-compress slice bodies.
+    pub compress: bool,
+    /// Partitioner options (seed, slack, refinement).
+    pub partition: PartitionOptions,
+}
+
+impl DeployConfig {
+    pub fn new(n_parts: usize, n_bins: usize, pack: usize) -> Self {
+        DeployConfig {
+            n_parts,
+            n_bins,
+            pack,
+            compress: true,
+            partition: PartitionOptions::new(n_parts),
+        }
+    }
+
+    /// Paper's deployment label, e.g. `s20-i20`.
+    pub fn label(&self) -> String {
+        format!("s{}-i{}", self.n_bins, self.pack)
+    }
+}
+
+/// What `deploy` did (sizes feed Fig. 5 and EXPERIMENTS.md).
+#[derive(Debug, Clone, Default)]
+pub struct DeployReport {
+    pub n_parts: usize,
+    pub n_instances: usize,
+    pub n_vertices: usize,
+    pub n_edges: usize,
+    /// Subgraph count per partition.
+    pub subgraphs_per_partition: Vec<usize>,
+    /// (vertices, edges) per subgraph, all partitions.
+    pub subgraph_sizes: Vec<(usize, usize)>,
+    pub slices_written: usize,
+    pub bytes_written: u64,
+}
+
+/// Partition-level deployment state shared with the reader.
+pub(crate) struct PartLayout {
+    pub part_id: usize,
+    #[allow(dead_code)] // recorded for layout introspection/debugging
+    pub n_bins: usize,
+    pub pack: usize,
+    pub subgraphs: Vec<Subgraph>,
+    pub bins: BinPacking,
+}
+
+/// Deploy `source` into `out_dir/part-<k>/` directories.
+pub fn deploy(
+    source: &dyn CollectionSource,
+    cfg: &DeployConfig,
+    out_dir: &Path,
+) -> Result<DeployReport> {
+    if cfg.n_bins == 0 || cfg.pack == 0 || cfg.n_parts == 0 {
+        bail!("deploy: n_parts, n_bins and pack must be >= 1");
+    }
+    let template = source.template();
+    let n_instances = source.n_instances();
+    std::fs::create_dir_all(out_dir)?;
+
+    // --- Partition + extract + bin-pack. ---
+    let partitioning = partition_graph(template, &cfg.partition);
+    let partitions = extract_partitions(template, &partitioning);
+    let layouts: Vec<PartLayout> = partitions
+        .into_iter()
+        .map(|p: Partition| {
+            let bins = binpack_subgraphs(&p, cfg.n_bins);
+            PartLayout {
+                part_id: p.part_id,
+                n_bins: cfg.n_bins,
+                pack: cfg.pack,
+                subgraphs: p.subgraphs,
+                bins,
+            }
+        })
+        .collect();
+
+    let mut report = DeployReport {
+        n_parts: cfg.n_parts,
+        n_instances,
+        n_vertices: template.n_vertices(),
+        n_edges: template.n_edges(),
+        ..Default::default()
+    };
+    for l in &layouts {
+        report.subgraphs_per_partition.push(l.subgraphs.len());
+        for sg in &l.subgraphs {
+            report.subgraph_sizes.push((sg.n_vertices(), sg.n_edges()));
+        }
+    }
+
+    // --- Template slices. ---
+    for l in &layouts {
+        let body = encode_template_slice(l, &template.vertex_schema, &template.edge_schema);
+        let path = part_dir(out_dir, l.part_id).join("template.slice");
+        report.bytes_written +=
+            SliceFile::new(SliceKind::Template, body).write_to(&path, cfg.compress)?;
+        report.slices_written += 1;
+    }
+
+    // --- Attribute slices, streamed group by group. ---
+    let n_groups = n_instances.div_ceil(cfg.pack);
+    let va = template.vertex_schema.len();
+    let ea = template.edge_schema.len();
+    let mut windows: Vec<TimeWindow> = Vec::with_capacity(n_instances);
+    // presence[part][attr_slot][bin] -> bitmask over groups (Vec<bool>)
+    let attr_slots = va + ea;
+    let mut presence: Vec<Vec<Vec<Vec<bool>>>> =
+        vec![vec![vec![vec![false; n_groups]; cfg.n_bins]; attr_slots]; cfg.n_parts];
+
+    for g in 0..n_groups {
+        let t_lo = g * cfg.pack;
+        let t_hi = ((g + 1) * cfg.pack).min(n_instances);
+        // buffers[part][attr_slot][bin][t - t_lo][pos_in_bin]
+        let mut buffers: Vec<Vec<Vec<Vec<Vec<Option<AttrColumn>>>>>> = layouts
+            .iter()
+            .map(|l| {
+                (0..attr_slots)
+                    .map(|_| {
+                        l.bins
+                            .bins
+                            .iter()
+                            .map(|b| vec![vec![None; b.len()]; t_hi - t_lo])
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+
+        for t in t_lo..t_hi {
+            let gi = source.instance(t);
+            windows.push(gi.window);
+            for l in &layouts {
+                for (bin, members) in l.bins.bins.iter().enumerate() {
+                    for (pos, &sg_local) in members.iter().enumerate() {
+                        let sg = &l.subgraphs[sg_local];
+                        for a in 0..va {
+                            if let Some(col) = gi.vcols[a].as_ref() {
+                                let proj = col.project(&sg.vertices);
+                                if proj.n_elements() > 0 {
+                                    buffers[l.part_id][a][bin][t - t_lo][pos] = Some(proj);
+                                }
+                            }
+                        }
+                        for a in 0..ea {
+                            if let Some(col) = gi.ecols[a].as_ref() {
+                                let proj = col.project(&sg.edges_sorted);
+                                if proj.n_elements() > 0 {
+                                    buffers[l.part_id][va + a][bin][t - t_lo][pos] = Some(proj);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Flush this group's slices.
+        for l in &layouts {
+            for slot in 0..attr_slots {
+                let (vertex, attr) = if slot < va { (true, slot) } else { (false, slot - va) };
+                let ty = if vertex {
+                    template.vertex_schema.attrs[attr].ty
+                } else {
+                    template.edge_schema.attrs[attr].ty
+                };
+                for bin in 0..cfg.n_bins {
+                    let cells = &buffers[l.part_id][slot][bin];
+                    if cells.iter().all(|ts| ts.iter().all(|c| c.is_none())) {
+                        continue; // nothing to store for this slice
+                    }
+                    let key = SliceKey { vertex, attr, bin, group: g };
+                    let mut e = Enc::new();
+                    e.varint((t_hi - t_lo) as u64);
+                    e.varint(cells[0].len() as u64);
+                    for ts in cells {
+                        for cell in ts {
+                            match cell {
+                                Some(col) => {
+                                    e.u8(1);
+                                    col.encode_into(ty, &mut e);
+                                }
+                                None => e.u8(0),
+                            }
+                        }
+                    }
+                    let path = part_dir(out_dir, l.part_id).join(key.rel_path());
+                    report.bytes_written += SliceFile::new(SliceKind::Attribute, e.finish())
+                        .write_to(&path, cfg.compress)?;
+                    report.slices_written += 1;
+                    presence[l.part_id][slot][bin][g] = true;
+                }
+            }
+        }
+    }
+
+    // --- Metadata slices. ---
+    for l in &layouts {
+        let body = encode_meta_slice(cfg, n_instances, &windows, &presence[l.part_id]);
+        let path = part_dir(out_dir, l.part_id).join("meta.slice");
+        report.bytes_written +=
+            SliceFile::new(SliceKind::Metadata, body).write_to(&path, cfg.compress)?;
+        report.slices_written += 1;
+    }
+
+    // --- Root manifest. ---
+    let mut e = Enc::new();
+    e.varint(cfg.n_parts as u64);
+    e.varint(n_instances as u64);
+    SliceFile::new(SliceKind::Metadata, e.finish())
+        .write_to(&out_dir.join("collection.meta"), false)?;
+
+    Ok(report)
+}
+
+pub(crate) fn part_dir(root: &Path, part: usize) -> PathBuf {
+    root.join(format!("part-{part}"))
+}
+
+/// Number of partitions recorded in a deployed collection root.
+pub fn collection_parts(root: &Path) -> Result<usize> {
+    let (s, _) = SliceFile::read_from(&root.join("collection.meta"))
+        .context("not a GoFS collection root (missing collection.meta)")?;
+    let mut d = Dec::new(&s.body);
+    Ok(d.varint()? as usize)
+}
+
+fn encode_template_slice(l: &PartLayout, vs: &Schema, es: &Schema) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.varint(l.part_id as u64);
+    e.varint(l.n_bins as u64);
+    e.varint(l.pack as u64);
+    vs.encode_into(&mut e);
+    es.encode_into(&mut e);
+    e.varint(l.subgraphs.len() as u64);
+    for sg in &l.subgraphs {
+        e.u64(sg.id.0);
+        // vertices (delta) + ext ids
+        e.varint(sg.vertices.len() as u64);
+        let mut prev = 0u32;
+        for (k, &v) in sg.vertices.iter().enumerate() {
+            e.varint(if k == 0 { v as u64 } else { (v - prev) as u64 });
+            prev = v;
+        }
+        for &x in &sg.ext_ids {
+            e.varint(x);
+        }
+        // local edges in owned-edge order (positions 0..n_local)
+        e.varint(sg.local.n_edges() as u64);
+        let mut local_pairs: Vec<(u32, u32, u32)> = Vec::with_capacity(sg.local.n_edges());
+        for v in 0..sg.n_vertices() as u32 {
+            for (d, pos) in sg.local.out_edges(v) {
+                local_pairs.push((pos, v, d));
+            }
+        }
+        local_pairs.sort_unstable();
+        for &(_, s, d) in &local_pairs {
+            e.varint(s as u64);
+            e.varint(d as u64);
+        }
+        // owned template edge indices (local first then remote)
+        e.varint(sg.edges.len() as u64);
+        for &ei in &sg.edges {
+            e.varint(ei as u64);
+        }
+        // remote edges
+        e.varint(sg.remote.len() as u64);
+        for r in &sg.remote {
+            e.varint(r.src_local as u64);
+            e.varint(r.eidx as u64);
+            e.varint(r.dst_global as u64);
+            e.varint(r.dst_ext);
+            e.u64(r.dst_subgraph.0);
+        }
+    }
+    // bins
+    e.varint(l.bins.n_bins as u64);
+    for b in &l.bins.bins {
+        e.varint(b.len() as u64);
+        for &sgi in b {
+            e.varint(sgi as u64);
+        }
+    }
+    e.finish()
+}
+
+fn encode_meta_slice(
+    cfg: &DeployConfig,
+    n_instances: usize,
+    windows: &[TimeWindow],
+    presence: &[Vec<Vec<bool>>],
+) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.varint(n_instances as u64);
+    e.varint(cfg.pack as u64);
+    e.varint(cfg.n_bins as u64);
+    for w in windows {
+        e.varint(w.start as u64);
+        e.varint(w.end as u64);
+    }
+    e.varint(presence.len() as u64); // attr slots
+    for slot in presence {
+        for bin in slot {
+            // pack group bits into bytes
+            for chunk in bin.chunks(8) {
+                let mut byte = 0u8;
+                for (i, &b) in chunk.iter().enumerate() {
+                    if b {
+                        byte |= 1 << i;
+                    }
+                }
+                e.u8(byte);
+            }
+        }
+    }
+    e.finish()
+}
+
+/// Decoded metadata (reader side).
+pub(crate) struct PartMeta {
+    pub n_instances: usize,
+    pub pack: usize,
+    #[allow(dead_code)] // layout introspection
+    pub n_bins: usize,
+    pub windows: Vec<TimeWindow>,
+    /// presence[attr_slot][bin][group]
+    pub presence: Vec<Vec<Vec<bool>>>,
+}
+
+pub(crate) fn decode_meta_slice(body: &[u8]) -> Result<PartMeta> {
+    let mut d = Dec::new(body);
+    let n_instances = d.varint()? as usize;
+    let pack = d.varint()? as usize;
+    let n_bins = d.varint()? as usize;
+    let mut windows = Vec::with_capacity(n_instances);
+    for _ in 0..n_instances {
+        let start = d.varint()? as i64;
+        let end = d.varint()? as i64;
+        windows.push(TimeWindow::new(start, end));
+    }
+    let n_groups = n_instances.div_ceil(pack);
+    let slots = d.varint()? as usize;
+    let mut presence = vec![vec![vec![false; n_groups]; n_bins]; slots];
+    for slot in presence.iter_mut() {
+        for bin in slot.iter_mut() {
+            for chunk_start in (0..n_groups).step_by(8) {
+                let byte = d.u8()?;
+                for i in 0..8 {
+                    if chunk_start + i < n_groups {
+                        bin[chunk_start + i] = byte & (1 << i) != 0;
+                    }
+                }
+            }
+        }
+    }
+    Ok(PartMeta { n_instances, pack, n_bins, windows, presence })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{TraceRouteGenerator, TraceRouteParams};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("gofs-writer-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn deploy_writes_expected_layout() {
+        let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+        let dir = tmpdir("layout");
+        let cfg = DeployConfig::new(3, 4, 5);
+        let report = deploy(&gen, &cfg, &dir).unwrap();
+        assert_eq!(report.n_parts, 3);
+        assert_eq!(report.n_instances, 12);
+        assert_eq!(report.subgraphs_per_partition.len(), 3);
+        assert!(report.slices_written > 3 + 3); // template + meta + attrs
+        for p in 0..3 {
+            assert!(part_dir(&dir, p).join("template.slice").exists());
+            assert!(part_dir(&dir, p).join("meta.slice").exists());
+        }
+        assert_eq!(collection_parts(&dir).unwrap(), 3);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn meta_roundtrip() {
+        let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+        let dir = tmpdir("meta");
+        let cfg = DeployConfig::new(2, 3, 4);
+        deploy(&gen, &cfg, &dir).unwrap();
+        let (s, _) = SliceFile::read_from(&part_dir(&dir, 0).join("meta.slice")).unwrap();
+        let meta = decode_meta_slice(&s.body).unwrap();
+        assert_eq!(meta.n_instances, 12);
+        assert_eq!(meta.pack, 4);
+        assert_eq!(meta.n_bins, 3);
+        assert_eq!(meta.windows.len(), 12);
+        assert_eq!(meta.windows[1].start, 2 * 3600 * 1);
+        // Some attribute slice must be present somewhere.
+        assert!(meta
+            .presence
+            .iter()
+            .any(|slot| slot.iter().any(|bin| bin.iter().any(|&b| b))));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn pack_one_creates_more_slices_than_pack_many() {
+        let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+        let d1 = tmpdir("i1");
+        let d20 = tmpdir("i20");
+        let r1 = deploy(&gen, &DeployConfig::new(2, 3, 1), &d1).unwrap();
+        let r20 = deploy(&gen, &DeployConfig::new(2, 3, 12), &d20).unwrap();
+        assert!(
+            r1.slices_written > r20.slices_written * 3,
+            "i1 {} vs i12 {}",
+            r1.slices_written,
+            r20.slices_written
+        );
+        std::fs::remove_dir_all(&d1).unwrap();
+        std::fs::remove_dir_all(&d20).unwrap();
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+        let dir = tmpdir("bad");
+        assert!(deploy(&gen, &DeployConfig::new(2, 0, 1), &dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,158 @@
+//! Typed message codecs over opaque payloads.
+//!
+//! Gopher messages are raw bytes (what would cross the wire); apps encode
+//! and decode with these helpers, which wrap [`crate::util::wire`] with a
+//! fluent API. Keeping serialization explicit lets the network model
+//! charge true message sizes — one of the quantities the paper's
+//! subgraph-vs-vertex-centric argument is about.
+
+use crate::graph::SubgraphId;
+use crate::util::wire::{Dec, Enc};
+use anyhow::Result;
+
+/// Builder for a message payload.
+#[derive(Default)]
+pub struct MsgWriter {
+    e: Enc,
+}
+
+impl MsgWriter {
+    pub fn new() -> Self {
+        MsgWriter { e: Enc::new() }
+    }
+
+    pub fn tag(mut self, t: u8) -> Self {
+        self.e.u8(t);
+        self
+    }
+
+    pub fn u32(mut self, v: u32) -> Self {
+        self.e.varint(v as u64);
+        self
+    }
+
+    pub fn u64(mut self, v: u64) -> Self {
+        self.e.varint(v);
+        self
+    }
+
+    pub fn f64(mut self, v: f64) -> Self {
+        self.e.f64(v);
+        self
+    }
+
+    pub fn sgid(mut self, id: SubgraphId) -> Self {
+        self.e.u64(id.0);
+        self
+    }
+
+    pub fn str(mut self, s: &str) -> Self {
+        self.e.str(s);
+        self
+    }
+
+    pub fn bytes(mut self, b: &[u8]) -> Self {
+        self.e.bytes(b);
+        self
+    }
+
+    /// Append a (u32, f64) list — the common "vertex updates" shape.
+    pub fn pairs_u32_f64(mut self, pairs: &[(u32, f64)]) -> Self {
+        self.e.varint(pairs.len() as u64);
+        for &(k, v) in pairs {
+            self.e.varint(k as u64);
+            self.e.f64(v);
+        }
+        self
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.e.finish()
+    }
+}
+
+/// Cursor over a received payload.
+pub struct MsgReader<'a> {
+    d: Dec<'a>,
+}
+
+impl<'a> MsgReader<'a> {
+    pub fn new(payload: &'a [u8]) -> Self {
+        MsgReader { d: Dec::new(payload) }
+    }
+
+    pub fn tag(&mut self) -> Result<u8> {
+        self.d.u8()
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(self.d.varint()? as u32)
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        self.d.varint()
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        self.d.f64()
+    }
+
+    pub fn sgid(&mut self) -> Result<SubgraphId> {
+        Ok(SubgraphId(self.d.u64()?))
+    }
+
+    pub fn str(&mut self) -> Result<&'a str> {
+        self.d.str()
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        self.d.bytes()
+    }
+
+    pub fn pairs_u32_f64(&mut self) -> Result<Vec<(u32, f64)>> {
+        let n = self.d.varint()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let k = self.d.varint()? as u32;
+            let v = self.d.f64()?;
+            out.push((k, v));
+        }
+        Ok(out)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.d.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let payload = MsgWriter::new()
+            .tag(3)
+            .u32(42)
+            .f64(-1.5)
+            .sgid(SubgraphId::new(2, 7))
+            .str("plate")
+            .pairs_u32_f64(&[(1, 0.5), (9, 2.25)])
+            .finish();
+        let mut r = MsgReader::new(&payload);
+        assert_eq!(r.tag().unwrap(), 3);
+        assert_eq!(r.u32().unwrap(), 42);
+        assert_eq!(r.f64().unwrap(), -1.5);
+        assert_eq!(r.sgid().unwrap(), SubgraphId::new(2, 7));
+        assert_eq!(r.str().unwrap(), "plate");
+        assert_eq!(r.pairs_u32_f64().unwrap(), vec![(1, 0.5), (9, 2.25)]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn small_messages_are_compact() {
+        // A (vertex, distance) update should be well under 16 bytes.
+        let payload = MsgWriter::new().tag(0).u32(1000).f64(3.25).finish();
+        assert!(payload.len() <= 12, "payload {} bytes", payload.len());
+    }
+}

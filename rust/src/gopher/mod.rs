@@ -1,0 +1,191 @@
+//! Gopher — the sub-graph-centric iterative-BSP engine (paper §IV).
+//!
+//! Users implement [`Application`] (a factory for per-subgraph
+//! [`SubgraphProgram`]s plus pattern metadata) and run it through
+//! [`engine::GopherEngine`]. Execution is an *iterative BSP*: an outer
+//! loop of **timesteps** (one per graph instance) whose ordering is
+//! governed by the [`Pattern`], each timestep an inner BSP of
+//! **supersteps** over all subgraphs with bulk message passing, vote-to-
+//! halt semantics, and (for the eventually-dependent pattern) a final
+//! Merge step.
+
+pub mod engine;
+pub mod messages;
+pub mod vertex_centric;
+
+pub use engine::{GopherEngine, RunOptions, RunStats, TimestepStats};
+pub use messages::{MsgReader, MsgWriter};
+
+use crate::gofs::{Projection, SubgraphInstance};
+use crate::graph::{Schema, SubgraphId, Timestep};
+use crate::partition::Subgraph;
+
+/// Message payload. Gopher treats payloads as opaque bytes — exactly what
+/// would cross the wire on a real deployment — so the network model can
+/// charge real sizes. [`messages`] provides the codec helpers.
+pub type Payload = Vec<u8>;
+
+/// The three composition patterns for temporal analytics (paper §III-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    /// Analysis over every instance is independent (Parallel For-Each).
+    Independent,
+    /// Instances run independently, then a Merge folds their results
+    /// (Fork-Join).
+    EventuallyDependent,
+    /// Instance `t+1` cannot start before `t` completes; state flows via
+    /// `send_to_next_timestep`.
+    Sequential,
+}
+
+/// Context handed to `compute`; carries identity and messaging APIs
+/// (paper §IV-B "Message Passing").
+pub struct ComputeCtx<'a> {
+    /// This subgraph's id.
+    pub sgid: SubgraphId,
+    /// Timestep (graph-instance index) of the current BSP.
+    pub timestep: Timestep,
+    /// Superstep within the current BSP, starting at 1.
+    pub superstep: usize,
+    /// Total timesteps in this run.
+    pub n_timesteps: usize,
+    pub(crate) pattern: Pattern,
+    pub(crate) outbox: &'a mut Outbox,
+    pub(crate) halted: &'a mut bool,
+}
+
+impl<'a> ComputeCtx<'a> {
+    /// True when this is the first superstep of the first timestep (where
+    /// messages are the application inputs).
+    pub fn is_start(&self) -> bool {
+        self.timestep == 0 && self.superstep == 1
+    }
+
+    /// Send to another subgraph; delivered at the next superstep.
+    pub fn send_to_subgraph(&mut self, to: SubgraphId, data: Payload) {
+        self.outbox.superstep.push((to, data));
+    }
+
+    /// `SendToNextTimeStep`: deliver to the *same* subgraph at superstep 1
+    /// of the next timestep (sequential pattern only — §IV-B).
+    pub fn send_to_next_timestep(&mut self, data: Payload) {
+        assert_eq!(
+            self.pattern,
+            Pattern::Sequential,
+            "send_to_next_timestep requires the sequentially-dependent pattern"
+        );
+        self.outbox.next_timestep.push((self.sgid, data));
+    }
+
+    /// `SendToSubgraphInNextTimeStep` (§IV-B).
+    pub fn send_to_subgraph_in_next_timestep(&mut self, to: SubgraphId, data: Payload) {
+        assert_eq!(
+            self.pattern,
+            Pattern::Sequential,
+            "send_to_subgraph_in_next_timestep requires the sequentially-dependent pattern"
+        );
+        self.outbox.next_timestep.push((to, data));
+    }
+
+    /// `SendMessageToMerge`: available from any timestep in the
+    /// eventually-dependent pattern (§IV-B).
+    pub fn send_to_merge(&mut self, data: Payload) {
+        assert_eq!(
+            self.pattern,
+            Pattern::EventuallyDependent,
+            "send_to_merge requires the eventually-dependent pattern"
+        );
+        self.outbox.merge.push(data);
+    }
+
+    /// `VoteToHalt`: this subgraph is done for this BSP unless reactivated
+    /// by an incoming message.
+    pub fn vote_to_halt(&mut self) {
+        *self.halted = true;
+    }
+}
+
+/// Per-compute-invocation output buffers.
+#[derive(Default)]
+pub struct Outbox {
+    pub superstep: Vec<(SubgraphId, Payload)>,
+    pub next_timestep: Vec<(SubgraphId, Payload)>,
+    pub merge: Vec<Payload>,
+}
+
+/// User logic for one subgraph within one BSP timestep. A fresh program is
+/// created per (subgraph, timestep); state that must survive across
+/// timesteps travels via `send_to_next_timestep` — exactly the paper's
+/// model of explicit state hand-off between instances.
+pub trait SubgraphProgram: Send {
+    fn compute(&mut self, ctx: &mut ComputeCtx<'_>, sgi: &SubgraphInstance, msgs: &[Payload]);
+}
+
+/// An iBSP application: pattern metadata plus per-subgraph program factory.
+pub trait Application: Send + Sync {
+    fn name(&self) -> &str;
+
+    fn pattern(&self) -> Pattern;
+
+    /// Which attributes `compute` needs (GoFS reads only these — §V-B).
+    fn projection(&self, vertex_schema: &Schema, edge_schema: &Schema) -> Projection;
+
+    /// Create the program for one subgraph (invoked once per timestep).
+    fn create(&self, sg: &Subgraph) -> Box<dyn SubgraphProgram>;
+
+    /// Application input messages, delivered at superstep 1 of a
+    /// subgraph's first timestep.
+    fn initial_messages(&self, _sg: &Subgraph, _timestep: Timestep) -> Vec<Payload> {
+        Vec::new()
+    }
+
+    /// Merge step for the eventually-dependent pattern: called once after
+    /// all timesteps complete, with every `send_to_merge` payload.
+    fn merge(&self, _msgs: Vec<Payload>) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_messaging_fills_outbox() {
+        let mut outbox = Outbox::default();
+        let mut halted = false;
+        let mut ctx = ComputeCtx {
+            sgid: SubgraphId::new(0, 0),
+            timestep: 0,
+            superstep: 1,
+            n_timesteps: 3,
+            pattern: Pattern::Sequential,
+            outbox: &mut outbox,
+            halted: &mut halted,
+        };
+        assert!(ctx.is_start());
+        ctx.send_to_subgraph(SubgraphId::new(1, 0), vec![1]);
+        ctx.send_to_next_timestep(vec![2]);
+        ctx.send_to_subgraph_in_next_timestep(SubgraphId::new(1, 1), vec![3]);
+        ctx.vote_to_halt();
+        assert!(halted);
+        assert_eq!(outbox.superstep.len(), 1);
+        assert_eq!(outbox.next_timestep.len(), 2);
+        assert_eq!(outbox.next_timestep[0].0, SubgraphId::new(0, 0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_send_requires_eventually_dependent() {
+        let mut outbox = Outbox::default();
+        let mut halted = false;
+        let mut ctx = ComputeCtx {
+            sgid: SubgraphId::new(0, 0),
+            timestep: 0,
+            superstep: 1,
+            n_timesteps: 1,
+            pattern: Pattern::Independent,
+            outbox: &mut outbox,
+            halted: &mut halted,
+        };
+        ctx.send_to_merge(vec![]);
+    }
+}

@@ -1,0 +1,257 @@
+//! Vertex-centric (Pregel-style) baseline engine.
+//!
+//! The paper's core prior-work claim ([6], recapped in §II) is that the
+//! sub-graph-centric model needs far fewer supersteps and messages than
+//! Pregel's vertex-centric model. This module is an in-memory
+//! vertex-centric BSP over the template used by the
+//! `ablation_subgraph_vs_vertex` bench to regenerate that comparison:
+//! it counts supersteps, messages and message bytes under identical
+//! partitioning (messages between co-located vertices are "local").
+
+use crate::graph::{GraphTemplate, VIdx};
+use crate::partition::Partitioning;
+
+/// Context for one vertex's compute call.
+pub struct VertexCtx<'a> {
+    pub vertex: VIdx,
+    pub superstep: usize,
+    outbox: &'a mut Vec<(VIdx, Vec<u8>)>,
+    halted: &'a mut bool,
+}
+
+impl<'a> VertexCtx<'a> {
+    pub fn send(&mut self, to: VIdx, data: Vec<u8>) {
+        self.outbox.push((to, data));
+    }
+
+    pub fn vote_to_halt(&mut self) {
+        *self.halted = true;
+    }
+}
+
+/// Vertex-centric user program.
+pub trait VertexProgram {
+    /// Per-vertex state.
+    type State: Clone + Send;
+
+    fn init(&self, v: VIdx, template: &GraphTemplate) -> Self::State;
+
+    fn compute(
+        &self,
+        state: &mut Self::State,
+        ctx: &mut VertexCtx<'_>,
+        template: &GraphTemplate,
+        msgs: &[Vec<u8>],
+    );
+}
+
+/// Counters mirroring the Gopher engine's observables.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct VcStats {
+    pub supersteps: usize,
+    pub msgs_local: u64,
+    pub msgs_remote: u64,
+    pub msg_bytes: u64,
+    pub compute_calls: u64,
+}
+
+/// Run a vertex-centric BSP to convergence (all halted, no messages).
+pub fn run_vertex_centric<P: VertexProgram>(
+    program: &P,
+    template: &GraphTemplate,
+    partitioning: &Partitioning,
+    max_supersteps: usize,
+) -> (Vec<P::State>, VcStats) {
+    let n = template.n_vertices();
+    let mut states: Vec<P::State> = (0..n as VIdx).map(|v| program.init(v, template)).collect();
+    let mut halted = vec![false; n];
+    let mut inbox: Vec<Vec<Vec<u8>>> = vec![Vec::new(); n];
+    let mut stats = VcStats::default();
+
+    for superstep in 1..=max_supersteps {
+        stats.supersteps = superstep;
+        let mut next_inbox: Vec<Vec<Vec<u8>>> = vec![Vec::new(); n];
+        let mut any_message = false;
+        for v in 0..n {
+            let active = !halted[v] || !inbox[v].is_empty();
+            if !active {
+                continue;
+            }
+            stats.compute_calls += 1;
+            let msgs = std::mem::take(&mut inbox[v]);
+            halted[v] = false;
+            let mut outbox = Vec::new();
+            let mut h = false;
+            let mut ctx = VertexCtx {
+                vertex: v as VIdx,
+                superstep,
+                outbox: &mut outbox,
+                halted: &mut h,
+            };
+            program.compute(&mut states[v], &mut ctx, template, &msgs);
+            halted[v] = h;
+            for (to, data) in outbox {
+                if partitioning.assign[v] == partitioning.assign[to as usize] {
+                    stats.msgs_local += 1;
+                } else {
+                    stats.msgs_remote += 1;
+                }
+                stats.msg_bytes += data.len() as u64;
+                next_inbox[to as usize].push(data);
+                any_message = true;
+            }
+        }
+        inbox = next_inbox;
+        if !any_message && halted.iter().all(|&h| h) {
+            break;
+        }
+    }
+    (states, stats)
+}
+
+/// Vertex-centric single-source shortest path (the classic Pregel example)
+/// over uniform edge weights — used by the ablation bench.
+pub struct VcSssp {
+    pub source: VIdx,
+}
+
+impl VertexProgram for VcSssp {
+    type State = f64;
+
+    fn init(&self, v: VIdx, _t: &GraphTemplate) -> f64 {
+        if v == self.source {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    fn compute(
+        &self,
+        state: &mut f64,
+        ctx: &mut VertexCtx<'_>,
+        template: &GraphTemplate,
+        msgs: &[Vec<u8>],
+    ) {
+        let incoming = msgs
+            .iter()
+            .filter_map(|m| m.as_slice().try_into().ok().map(f64::from_le_bytes))
+            .fold(f64::INFINITY, f64::min);
+        let best = if ctx.superstep == 1 { *state } else { incoming.min(*state) };
+        if best < *state || (ctx.superstep == 1 && best == 0.0) {
+            *state = best;
+            if best.is_finite() {
+                for &u in template.out.neighbors(ctx.vertex) {
+                    ctx.send(u, (best + 1.0).to_le_bytes().to_vec());
+                }
+            }
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+/// Vertex-centric connected components by min-label propagation
+/// (undirected view), as in the GPS/Giraph benchmarks.
+pub struct VcWcc {
+    /// Undirected adjacency (built by the caller once).
+    pub undirected: std::sync::Arc<crate::graph::Csr>,
+}
+
+impl VertexProgram for VcWcc {
+    type State = u32;
+
+    fn init(&self, v: VIdx, _t: &GraphTemplate) -> u32 {
+        v
+    }
+
+    fn compute(
+        &self,
+        state: &mut u32,
+        ctx: &mut VertexCtx<'_>,
+        _template: &GraphTemplate,
+        msgs: &[Vec<u8>],
+    ) {
+        let incoming = msgs
+            .iter()
+            .filter_map(|m| m.as_slice().try_into().ok().map(u32::from_le_bytes))
+            .min();
+        let new = incoming.unwrap_or(*state).min(*state);
+        if new < *state || ctx.superstep == 1 {
+            *state = new;
+            for &u in self.undirected.neighbors(ctx.vertex) {
+                ctx.send(u, new.to_le_bytes().to_vec());
+            }
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+/// Build the undirected CSR for [`VcWcc`].
+pub fn undirected_of(template: &GraphTemplate) -> crate::graph::Csr {
+    let mut edges = Vec::with_capacity(template.n_edges() * 2);
+    for e in 0..template.n_edges() {
+        let (s, d) = (template.edge_src[e], template.edge_dst[e]);
+        edges.push((s, d, e as u32));
+        edges.push((d, s, e as u32));
+    }
+    crate::graph::Csr::from_edges(template.n_vertices(), &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Schema, TemplateBuilder};
+
+    fn path_graph(n: usize) -> GraphTemplate {
+        let mut b = TemplateBuilder::new(Schema::new(vec![]), Schema::new(vec![]));
+        for i in 0..n {
+            b.vertex(i as u64);
+        }
+        for i in 0..n - 1 {
+            b.edge(i as u32, i as u32 + 1);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn vc_sssp_distances_on_path() {
+        let t = path_graph(10);
+        let p = Partitioning { n_parts: 2, assign: (0..10).map(|i| (i / 5) as u32).collect() };
+        let (dist, stats) = run_vertex_centric(&VcSssp { source: 0 }, &t, &p, 100);
+        for (v, &d) in dist.iter().enumerate() {
+            assert_eq!(d, v as f64);
+        }
+        // Pregel needs ~diameter supersteps: 10 hops -> >= 10.
+        assert!(stats.supersteps >= 10, "supersteps {}", stats.supersteps);
+        assert!(stats.msgs_remote > 0);
+    }
+
+    #[test]
+    fn vc_wcc_labels_components() {
+        let mut b = TemplateBuilder::new(Schema::new(vec![]), Schema::new(vec![]));
+        for i in 0..6 {
+            b.vertex(i);
+        }
+        b.edge(0, 1);
+        b.edge(1, 2);
+        b.edge(4, 5);
+        let t = b.build();
+        let p = Partitioning { n_parts: 1, assign: vec![0; 6] };
+        let undirected = std::sync::Arc::new(undirected_of(&t));
+        let (labels, _) = run_vertex_centric(&VcWcc { undirected }, &t, &p, 100);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[1], labels[2]);
+        assert_eq!(labels[4], labels[5]);
+        assert_ne!(labels[0], labels[4]);
+        assert_eq!(labels[3], 3);
+    }
+
+    #[test]
+    fn message_counts_scale_with_edges() {
+        let t = path_graph(50);
+        let p = Partitioning { n_parts: 5, assign: (0..50).map(|i| (i / 10) as u32).collect() };
+        let (_, stats) = run_vertex_centric(&VcSssp { source: 0 }, &t, &p, 200);
+        // each relaxation sends along each edge once => >= 49 messages
+        assert!(stats.msgs_local + stats.msgs_remote >= 49);
+    }
+}

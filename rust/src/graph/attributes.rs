@@ -1,0 +1,445 @@
+//! Typed attribute schemas and sparse, multi-valued attribute columns.
+//!
+//! The paper's data model (§III-A): every vertex/edge shares a fixed set
+//! of typed attributes; an instance holds **zero or more** values per
+//! attribute per element; templates may declare *constant* values (stored
+//! once, never overridden) and *default* values (overridable per instance)
+//! — §V-B. The GoFS reader makes this inheritance transparent.
+
+use crate::util::wire::{Dec, Enc};
+use anyhow::{bail, Result};
+
+/// Name of the special existence flag attribute (§III-A).
+pub const ISEXISTS: &str = "isExists";
+
+/// Attribute value types supported by the TR dataset (§VI-A: "boolean,
+/// integer, float and string types").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AttrType {
+    Bool,
+    Int,
+    Float,
+    Str,
+}
+
+impl AttrType {
+    pub fn tag(self) -> u8 {
+        match self {
+            AttrType::Bool => 0,
+            AttrType::Int => 1,
+            AttrType::Float => 2,
+            AttrType::Str => 3,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Result<Self> {
+        Ok(match t {
+            0 => AttrType::Bool,
+            1 => AttrType::Int,
+            2 => AttrType::Float,
+            3 => AttrType::Str,
+            _ => bail!("unknown AttrType tag {t}"),
+        })
+    }
+}
+
+/// A single attribute value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttrValue {
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+}
+
+impl AttrValue {
+    pub fn ty(&self) -> AttrType {
+        match self {
+            AttrValue::Bool(_) => AttrType::Bool,
+            AttrValue::Int(_) => AttrType::Int,
+            AttrValue::Float(_) => AttrType::Float,
+            AttrValue::Str(_) => AttrType::Str,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            AttrValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            AttrValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            AttrValue::Float(f) => Some(*f),
+            AttrValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            AttrValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Encode without a type tag (the column knows its type).
+    pub fn encode_into(&self, e: &mut Enc) {
+        match self {
+            AttrValue::Bool(b) => e.u8(*b as u8),
+            AttrValue::Int(i) => e.i64(*i),
+            AttrValue::Float(f) => e.f64(*f),
+            AttrValue::Str(s) => e.str(s),
+        }
+    }
+
+    pub fn decode_from(ty: AttrType, d: &mut Dec) -> Result<AttrValue> {
+        Ok(match ty {
+            AttrType::Bool => AttrValue::Bool(d.u8()? != 0),
+            AttrType::Int => AttrValue::Int(d.i64()?),
+            AttrType::Float => AttrValue::Float(d.f64()?),
+            AttrType::Str => AttrValue::Str(d.str()?.to_string()),
+        })
+    }
+}
+
+/// How an attribute sources its value when an instance has none (§V-B).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttrBinding {
+    /// Values come only from instances.
+    Plain,
+    /// Template-level value used when an instance has none; overridable.
+    Default(AttrValue),
+    /// Template-level value stored once; instances may NOT override it.
+    Constant(AttrValue),
+}
+
+/// Schema entry for one attribute.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AttrSchema {
+    pub name: String,
+    pub ty: AttrType,
+    pub binding: AttrBinding,
+}
+
+impl AttrSchema {
+    pub fn plain(name: &str, ty: AttrType) -> Self {
+        AttrSchema { name: name.to_string(), ty, binding: AttrBinding::Plain }
+    }
+
+    pub fn with_default(name: &str, value: AttrValue) -> Self {
+        AttrSchema { name: name.to_string(), ty: value.ty(), binding: AttrBinding::Default(value) }
+    }
+
+    pub fn constant(name: &str, value: AttrValue) -> Self {
+        AttrSchema { name: name.to_string(), ty: value.ty(), binding: AttrBinding::Constant(value) }
+    }
+
+    pub fn encode_into(&self, e: &mut Enc) {
+        e.str(&self.name);
+        e.u8(self.ty.tag());
+        match &self.binding {
+            AttrBinding::Plain => e.u8(0),
+            AttrBinding::Default(v) => {
+                e.u8(1);
+                v.encode_into(e);
+            }
+            AttrBinding::Constant(v) => {
+                e.u8(2);
+                v.encode_into(e);
+            }
+        }
+    }
+
+    pub fn decode_from(d: &mut Dec) -> Result<AttrSchema> {
+        let name = d.str()?.to_string();
+        let ty = AttrType::from_tag(d.u8()?)?;
+        let binding = match d.u8()? {
+            0 => AttrBinding::Plain,
+            1 => AttrBinding::Default(AttrValue::decode_from(ty, d)?),
+            2 => AttrBinding::Constant(AttrValue::decode_from(ty, d)?),
+            t => bail!("unknown AttrBinding tag {t}"),
+        };
+        Ok(AttrSchema { name, ty, binding })
+    }
+}
+
+/// Ordered attribute schema for vertices or edges, with name lookup.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Schema {
+    pub attrs: Vec<AttrSchema>,
+}
+
+impl Schema {
+    pub fn new(attrs: Vec<AttrSchema>) -> Self {
+        let mut names = std::collections::HashSet::new();
+        for a in &attrs {
+            assert!(names.insert(a.name.clone()), "duplicate attribute {}", a.name);
+        }
+        Schema { attrs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.attrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.attrs.is_empty()
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.attrs.iter().position(|a| a.name == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&AttrSchema> {
+        self.attrs.iter().find(|a| a.name == name)
+    }
+
+    pub fn encode_into(&self, e: &mut Enc) {
+        e.varint(self.attrs.len() as u64);
+        for a in &self.attrs {
+            a.encode_into(e);
+        }
+    }
+
+    pub fn decode_from(d: &mut Dec) -> Result<Schema> {
+        let n = d.varint()? as usize;
+        let mut attrs = Vec::with_capacity(n);
+        for _ in 0..n {
+            attrs.push(AttrSchema::decode_from(d)?);
+        }
+        Ok(Schema { attrs })
+    }
+}
+
+/// Sparse multi-valued attribute column over dense element indices.
+///
+/// Stores, for the subset of elements that have values in an instance, a
+/// CSR-like (index, offsets, values) layout. Lookup is by binary search;
+/// construction requires strictly increasing indices (builders sort).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct AttrColumn {
+    idx: Vec<u32>,
+    /// `off.len() == idx.len() + 1`; values for `idx[k]` are
+    /// `vals[off[k]..off[k+1]]`.
+    off: Vec<u32>,
+    vals: Vec<AttrValue>,
+}
+
+impl AttrColumn {
+    pub fn new() -> Self {
+        AttrColumn { idx: Vec::new(), off: vec![0], vals: Vec::new() }
+    }
+
+    /// Append values for element `i`; `i` must exceed all prior indices.
+    pub fn push(&mut self, i: u32, values: impl IntoIterator<Item = AttrValue>) {
+        if let Some(&last) = self.idx.last() {
+            assert!(i > last, "AttrColumn indices must be strictly increasing");
+        }
+        let before = self.vals.len();
+        self.vals.extend(values);
+        if self.vals.len() == before {
+            return; // zero values — treat as absent
+        }
+        self.idx.push(i);
+        self.off.push(self.vals.len() as u32);
+    }
+
+    /// All values for element `i` (empty slice if absent).
+    pub fn get(&self, i: u32) -> &[AttrValue] {
+        match self.idx.binary_search(&i) {
+            Ok(k) => &self.vals[self.off[k] as usize..self.off[k + 1] as usize],
+            Err(_) => &[],
+        }
+    }
+
+    /// First value for element `i`, if any.
+    pub fn first(&self, i: u32) -> Option<&AttrValue> {
+        self.get(i).first()
+    }
+
+    /// Number of elements that carry at least one value.
+    pub fn n_elements(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn n_values(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Iterate `(element index, values)` pairs in index order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, &[AttrValue])> + '_ {
+        self.idx.iter().enumerate().map(move |(k, &i)| {
+            (i, &self.vals[self.off[k] as usize..self.off[k + 1] as usize])
+        })
+    }
+
+    pub fn encode_into(&self, ty: AttrType, e: &mut Enc) {
+        e.varint(self.idx.len() as u64);
+        let mut prev = 0u32;
+        for (k, &i) in self.idx.iter().enumerate() {
+            e.varint((i - prev) as u64); // delta-coded indices
+            prev = i;
+            let lo = self.off[k] as usize;
+            let hi = self.off[k + 1] as usize;
+            e.varint((hi - lo) as u64);
+            for v in &self.vals[lo..hi] {
+                debug_assert_eq!(v.ty(), ty);
+                v.encode_into(e);
+            }
+        }
+    }
+
+    pub fn decode_from(ty: AttrType, d: &mut Dec) -> Result<AttrColumn> {
+        let n = d.varint()? as usize;
+        let mut col = AttrColumn::new();
+        let mut prev = 0u32;
+        for k in 0..n {
+            let delta = d.varint()? as u32;
+            let i = if k == 0 { delta } else { prev + delta };
+            prev = i;
+            let m = d.varint()? as usize;
+            let mut vals = Vec::with_capacity(m);
+            for _ in 0..m {
+                vals.push(AttrValue::decode_from(ty, d)?);
+            }
+            col.idx.push(i);
+            col.vals.extend(vals);
+            col.off.push(col.vals.len() as u32);
+        }
+        Ok(col)
+    }
+
+    /// Restrict the column to the given sorted, deduplicated global
+    /// indices, remapping to their positions (used when deploying a
+    /// partition's subgraph out of a whole-graph instance).
+    pub fn project(&self, sorted_indices: &[u32]) -> AttrColumn {
+        let mut out = AttrColumn::new();
+        let mut k = 0usize; // cursor into self.idx
+        for (local, &global) in sorted_indices.iter().enumerate() {
+            while k < self.idx.len() && self.idx[k] < global {
+                k += 1;
+            }
+            if k < self.idx.len() && self.idx[k] == global {
+                let lo = self.off[k] as usize;
+                let hi = self.off[k + 1] as usize;
+                out.push(local as u32, self.vals[lo..hi].iter().cloned());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{forall, Gen};
+
+    fn arb_value(g: &mut Gen, ty: AttrType) -> AttrValue {
+        match ty {
+            AttrType::Bool => AttrValue::Bool(g.bool(0.5)),
+            AttrType::Int => AttrValue::Int(g.i64(-1_000_000..1_000_000)),
+            AttrType::Float => AttrValue::Float(g.f64(-1e6, 1e6)),
+            AttrType::Str => AttrValue::Str(g.string(0..=12)),
+        }
+    }
+
+    #[test]
+    fn column_push_get() {
+        let mut c = AttrColumn::new();
+        c.push(2, [AttrValue::Int(5), AttrValue::Int(6)]);
+        c.push(9, [AttrValue::Int(-1)]);
+        assert_eq!(c.get(2), &[AttrValue::Int(5), AttrValue::Int(6)]);
+        assert_eq!(c.get(9), &[AttrValue::Int(-1)]);
+        assert!(c.get(3).is_empty());
+        assert_eq!(c.n_elements(), 2);
+        assert_eq!(c.n_values(), 3);
+    }
+
+    #[test]
+    fn zero_values_treated_as_absent() {
+        let mut c = AttrColumn::new();
+        c.push(1, std::iter::empty());
+        assert_eq!(c.n_elements(), 0);
+        // Index 1 can be reused since the empty push did not register it.
+        c.push(1, [AttrValue::Bool(true)]);
+        assert_eq!(c.n_elements(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_increasing_indices_panic() {
+        let mut c = AttrColumn::new();
+        c.push(5, [AttrValue::Bool(true)]);
+        c.push(5, [AttrValue::Bool(false)]);
+    }
+
+    #[test]
+    fn column_roundtrip_property() {
+        for ty in [AttrType::Bool, AttrType::Int, AttrType::Float, AttrType::Str] {
+            forall(60, move |g| {
+                let mut col = AttrColumn::new();
+                let mut i = 0u32;
+                let n = g.usize(0..20);
+                for _ in 0..n {
+                    i += g.u64(1..50) as u32;
+                    let m = g.usize(1..4);
+                    col.push(i, (0..m).map(|_| arb_value(g, ty)));
+                }
+                let mut e = Enc::new();
+                col.encode_into(ty, &mut e);
+                let buf = e.finish();
+                let mut d = Dec::new(&buf);
+                let col2 = AttrColumn::decode_from(ty, &mut d).unwrap();
+                assert_eq!(col, col2);
+                assert!(d.is_empty());
+            });
+        }
+    }
+
+    #[test]
+    fn projection_remaps_indices() {
+        let mut c = AttrColumn::new();
+        c.push(3, [AttrValue::Int(30)]);
+        c.push(7, [AttrValue::Int(70)]);
+        c.push(12, [AttrValue::Int(120)]);
+        let p = c.project(&[3, 5, 12]);
+        assert_eq!(p.get(0), &[AttrValue::Int(30)]); // global 3 -> local 0
+        assert!(p.get(1).is_empty()); // global 5 had no values
+        assert_eq!(p.get(2), &[AttrValue::Int(120)]);
+    }
+
+    #[test]
+    fn schema_roundtrip_and_lookup() {
+        let s = Schema::new(vec![
+            AttrSchema::plain("latency", AttrType::Float),
+            AttrSchema::with_default(ISEXISTS, AttrValue::Bool(true)),
+            AttrSchema::constant("ip", AttrValue::Str("0.0.0.0".into())),
+        ]);
+        let mut e = Enc::new();
+        s.encode_into(&mut e);
+        let buf = e.finish();
+        let s2 = Schema::decode_from(&mut Dec::new(&buf)).unwrap();
+        assert_eq!(s, s2);
+        assert_eq!(s.index_of("latency"), Some(0));
+        assert_eq!(s.index_of("nope"), None);
+        assert!(matches!(s.get(ISEXISTS).unwrap().binding, AttrBinding::Default(_)));
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_attribute_names_rejected() {
+        Schema::new(vec![
+            AttrSchema::plain("a", AttrType::Int),
+            AttrSchema::plain("a", AttrType::Bool),
+        ]);
+    }
+}

@@ -1,0 +1,146 @@
+//! Compressed sparse row adjacency used by templates and subgraphs.
+
+use crate::graph::{EIdx, VIdx};
+
+/// Directed CSR adjacency: for each source vertex, the out-neighbors and
+/// the template edge index of each out-edge.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Csr {
+    off: Vec<u64>,
+    dst: Vec<VIdx>,
+    eid: Vec<EIdx>,
+}
+
+impl Csr {
+    /// Build from an unsorted edge list `(src, dst, edge_index)` over `n`
+    /// vertices, via counting sort — O(V + E).
+    pub fn from_edges(n: usize, edges: &[(VIdx, VIdx, EIdx)]) -> Self {
+        let mut off = vec![0u64; n + 1];
+        for &(s, _, _) in edges {
+            off[s as usize + 1] += 1;
+        }
+        for i in 0..n {
+            off[i + 1] += off[i];
+        }
+        let mut dst = vec![0 as VIdx; edges.len()];
+        let mut eid = vec![0 as EIdx; edges.len()];
+        let mut cursor = off.clone();
+        for &(s, d, e) in edges {
+            let k = cursor[s as usize] as usize;
+            dst[k] = d;
+            eid[k] = e;
+            cursor[s as usize] += 1;
+        }
+        Csr { off, dst, eid }
+    }
+
+    pub fn n_vertices(&self) -> usize {
+        self.off.len() - 1
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.dst.len()
+    }
+
+    #[inline]
+    pub fn degree(&self, v: VIdx) -> usize {
+        (self.off[v as usize + 1] - self.off[v as usize]) as usize
+    }
+
+    /// Out-neighbors of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: VIdx) -> &[VIdx] {
+        &self.dst[self.off[v as usize] as usize..self.off[v as usize + 1] as usize]
+    }
+
+    /// Template edge indices of `v`'s out-edges, parallel to `neighbors`.
+    #[inline]
+    pub fn edge_ids(&self, v: VIdx) -> &[EIdx] {
+        &self.eid[self.off[v as usize] as usize..self.off[v as usize + 1] as usize]
+    }
+
+    /// Iterate `(dst, edge_index)` pairs for `v`.
+    #[inline]
+    pub fn out_edges(&self, v: VIdx) -> impl Iterator<Item = (VIdx, EIdx)> + '_ {
+        self.neighbors(v).iter().copied().zip(self.edge_ids(v).iter().copied())
+    }
+
+    /// Reverse this adjacency (in-edges become out-edges), preserving
+    /// template edge indices.
+    pub fn reversed(&self) -> Csr {
+        let n = self.n_vertices();
+        let mut edges = Vec::with_capacity(self.n_edges());
+        for v in 0..n as VIdx {
+            for (d, e) in self.out_edges(v) {
+                edges.push((d, v, e));
+            }
+        }
+        Csr::from_edges(n, &edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn from_edges_builds_adjacency() {
+        // 0 -> 1, 0 -> 2, 2 -> 0
+        let csr = Csr::from_edges(3, &[(2, 0, 2), (0, 1, 0), (0, 2, 1)]);
+        assert_eq!(csr.n_vertices(), 3);
+        assert_eq!(csr.n_edges(), 3);
+        assert_eq!(csr.degree(0), 2);
+        assert_eq!(csr.degree(1), 0);
+        let mut n0: Vec<_> = csr.out_edges(0).collect();
+        n0.sort_unstable();
+        assert_eq!(n0, vec![(1, 0), (2, 1)]);
+        assert_eq!(csr.neighbors(2), &[0]);
+        assert_eq!(csr.edge_ids(2), &[2]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let csr = Csr::from_edges(0, &[]);
+        assert_eq!(csr.n_vertices(), 0);
+        assert_eq!(csr.n_edges(), 0);
+    }
+
+    #[test]
+    fn reversed_preserves_edges() {
+        forall(50, |g| {
+            let n = g.usize(1..30);
+            let edges: Vec<(VIdx, VIdx, EIdx)> = {
+                let m = g.usize(0..80);
+                (0..m)
+                    .map(|e| (g.usize(0..n) as VIdx, g.usize(0..n) as VIdx, e as EIdx))
+                    .collect()
+            };
+            let csr = Csr::from_edges(n, &edges);
+            let rev = csr.reversed();
+            let mut fwd: Vec<(VIdx, VIdx, EIdx)> = (0..n as VIdx)
+                .flat_map(|v| csr.out_edges(v).map(move |(d, e)| (v, d, e)).collect::<Vec<_>>())
+                .collect();
+            let mut bwd: Vec<(VIdx, VIdx, EIdx)> = (0..n as VIdx)
+                .flat_map(|v| rev.out_edges(v).map(move |(d, e)| (d, v, e)).collect::<Vec<_>>())
+                .collect();
+            fwd.sort_unstable();
+            bwd.sort_unstable();
+            assert_eq!(fwd, bwd);
+        });
+    }
+
+    #[test]
+    fn degrees_sum_to_edge_count() {
+        forall(50, |g| {
+            let n = g.usize(1..40);
+            let m = g.usize(0..100);
+            let edges: Vec<(VIdx, VIdx, EIdx)> = (0..m)
+                .map(|e| (g.usize(0..n) as VIdx, g.usize(0..n) as VIdx, e as EIdx))
+                .collect();
+            let csr = Csr::from_edges(n, &edges);
+            let total: usize = (0..n as VIdx).map(|v| csr.degree(v)).sum();
+            assert_eq!(total, m);
+        });
+    }
+}

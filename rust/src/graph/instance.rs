@@ -1,0 +1,223 @@
+//! Graph instances: time-variant attribute values over the template.
+
+use crate::graph::attributes::AttrBinding;
+use crate::graph::{AttrColumn, AttrValue, GraphTemplate, Timestep};
+
+/// Half-open time window `[start, end)` in epoch seconds. Paper instances
+/// capture durations (e.g. a 2-hour traceroute window), not moments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TimeWindow {
+    pub start: i64,
+    pub end: i64,
+}
+
+impl TimeWindow {
+    pub fn new(start: i64, end: i64) -> Self {
+        assert!(end > start, "empty time window");
+        TimeWindow { start, end }
+    }
+
+    pub fn duration(&self) -> i64 {
+        self.end - self.start
+    }
+
+    pub fn overlaps(&self, other: &TimeWindow) -> bool {
+        self.start < other.end && other.start < self.end
+    }
+
+    pub fn contains(&self, t: i64) -> bool {
+        (self.start..self.end).contains(&t)
+    }
+}
+
+/// A whole-graph instance: one sparse multi-valued column per schema
+/// attribute, for vertices and for edges. Columns are `None` when no
+/// element carries a value for that attribute in this window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphInstance {
+    pub timestep: Timestep,
+    pub window: TimeWindow,
+    /// Parallel to `template.vertex_schema.attrs`.
+    pub vcols: Vec<Option<AttrColumn>>,
+    /// Parallel to `template.edge_schema.attrs`.
+    pub ecols: Vec<Option<AttrColumn>>,
+}
+
+impl GraphInstance {
+    pub fn empty(template: &GraphTemplate, timestep: Timestep, window: TimeWindow) -> Self {
+        GraphInstance {
+            timestep,
+            window,
+            vcols: vec![None; template.vertex_schema.len()],
+            ecols: vec![None; template.edge_schema.len()],
+        }
+    }
+
+    /// Vertex attribute values with template inheritance (§V-B): instance
+    /// values win unless the attribute is `Constant`; otherwise fall back
+    /// to the `Default`/`Constant` template value; else empty.
+    pub fn vertex_values<'a>(
+        &'a self,
+        template: &'a GraphTemplate,
+        attr: usize,
+        v: u32,
+    ) -> ValueRef<'a> {
+        let schema = &template.vertex_schema.attrs[attr];
+        resolve(&schema.binding, self.vcols[attr].as_ref(), v)
+    }
+
+    /// Edge attribute values with template inheritance.
+    pub fn edge_values<'a>(
+        &'a self,
+        template: &'a GraphTemplate,
+        attr: usize,
+        e: u32,
+    ) -> ValueRef<'a> {
+        let schema = &template.edge_schema.attrs[attr];
+        resolve(&schema.binding, self.ecols[attr].as_ref(), e)
+    }
+}
+
+/// Resolved attribute values: either a slice from the instance column or a
+/// single inherited template value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ValueRef<'a> {
+    Many(&'a [AttrValue]),
+    Inherited(&'a AttrValue),
+    Absent,
+}
+
+impl<'a> ValueRef<'a> {
+    pub fn first(&self) -> Option<&'a AttrValue> {
+        match self {
+            ValueRef::Many(vs) => vs.first(),
+            ValueRef::Inherited(v) => Some(v),
+            ValueRef::Absent => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            ValueRef::Many(vs) => vs.len(),
+            ValueRef::Inherited(_) => 1,
+            ValueRef::Absent => 0,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &'a AttrValue> + '_ {
+        let (many, one): (&[AttrValue], Option<&AttrValue>) = match self {
+            ValueRef::Many(vs) => (vs, None),
+            ValueRef::Inherited(v) => (&[], Some(*v)),
+            ValueRef::Absent => (&[], None),
+        };
+        many.iter().chain(one)
+    }
+}
+
+pub(crate) fn resolve<'a>(
+    binding: &'a AttrBinding,
+    col: Option<&'a AttrColumn>,
+    idx: u32,
+) -> ValueRef<'a> {
+    match binding {
+        // Constants can never be overridden by instances.
+        AttrBinding::Constant(v) => ValueRef::Inherited(v),
+        AttrBinding::Default(v) => match col.map(|c| c.get(idx)).filter(|s| !s.is_empty()) {
+            Some(s) => ValueRef::Many(s),
+            None => ValueRef::Inherited(v),
+        },
+        AttrBinding::Plain => match col.map(|c| c.get(idx)).filter(|s| !s.is_empty()) {
+            Some(s) => ValueRef::Many(s),
+            None => ValueRef::Absent,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{AttrSchema, AttrType, Schema, TemplateBuilder};
+
+    fn template() -> GraphTemplate {
+        let vs = Schema::new(vec![
+            AttrSchema::plain("plate", AttrType::Str),
+            AttrSchema::with_default("open", AttrValue::Bool(true)),
+            AttrSchema::constant("kind", AttrValue::Str("router".into())),
+        ]);
+        let es = Schema::new(vec![AttrSchema::plain("latency", AttrType::Float)]);
+        let mut b = TemplateBuilder::new(vs, es);
+        let v0 = b.vertex(0);
+        let v1 = b.vertex(1);
+        b.edge(v0, v1);
+        b.build()
+    }
+
+    #[test]
+    fn plain_attribute_absent_without_instance_value() {
+        let t = template();
+        let gi = GraphInstance::empty(&t, 0, TimeWindow::new(0, 7200));
+        assert_eq!(gi.vertex_values(&t, 0, 0), ValueRef::Absent);
+    }
+
+    #[test]
+    fn default_attribute_inherits_then_overrides() {
+        let t = template();
+        let mut gi = GraphInstance::empty(&t, 0, TimeWindow::new(0, 7200));
+        assert_eq!(
+            gi.vertex_values(&t, 1, 0).first(),
+            Some(&AttrValue::Bool(true))
+        );
+        let mut col = AttrColumn::new();
+        col.push(0, [AttrValue::Bool(false)]);
+        gi.vcols[1] = Some(col);
+        assert_eq!(
+            gi.vertex_values(&t, 1, 0).first(),
+            Some(&AttrValue::Bool(false))
+        );
+        // Vertex 1 still inherits.
+        assert_eq!(
+            gi.vertex_values(&t, 1, 1).first(),
+            Some(&AttrValue::Bool(true))
+        );
+    }
+
+    #[test]
+    fn constant_attribute_cannot_be_overridden() {
+        let t = template();
+        let mut gi = GraphInstance::empty(&t, 0, TimeWindow::new(0, 7200));
+        let mut col = AttrColumn::new();
+        col.push(0, [AttrValue::Str("hacked".into())]);
+        gi.vcols[2] = Some(col);
+        assert_eq!(
+            gi.vertex_values(&t, 2, 0).first(),
+            Some(&AttrValue::Str("router".into()))
+        );
+    }
+
+    #[test]
+    fn multivalued_edge_attribute() {
+        let t = template();
+        let mut gi = GraphInstance::empty(&t, 3, TimeWindow::new(0, 7200));
+        let mut col = AttrColumn::new();
+        col.push(0, [AttrValue::Float(1.5), AttrValue::Float(2.5)]);
+        gi.ecols[0] = Some(col);
+        let vals = gi.edge_values(&t, 0, 0);
+        assert_eq!(vals.len(), 2);
+        let collected: Vec<f64> = vals.iter().map(|v| v.as_float().unwrap()).collect();
+        assert_eq!(collected, vec![1.5, 2.5]);
+    }
+
+    #[test]
+    fn window_overlap_semantics() {
+        let a = TimeWindow::new(0, 10);
+        let b = TimeWindow::new(10, 20);
+        let c = TimeWindow::new(9, 11);
+        assert!(!a.overlaps(&b));
+        assert!(a.overlaps(&c) && c.overlaps(&b));
+        assert!(a.contains(0) && !a.contains(10));
+    }
+}

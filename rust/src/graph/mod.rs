@@ -1,0 +1,65 @@
+//! Time-series graph data model (paper §III).
+//!
+//! A collection Γ = ⟨Ĝ, G⟩ is a *template* Ĝ — the slow-changing topology
+//! plus attribute schemas — and a time-ordered list of *instances* G, each
+//! carrying the attribute values of every vertex/edge for one time window.
+//! Vertices and edges may have **zero or more** values per attribute per
+//! instance (e.g. all hop latencies observed in a 2-hour window), and the
+//! special boolean `isExists` attribute simulates appearance/disappearance
+//! of elements over a slow-changing topology.
+
+pub mod attributes;
+pub mod csr;
+pub mod instance;
+pub mod template;
+
+pub use attributes::{AttrColumn, AttrSchema, AttrType, AttrValue, Schema, ISEXISTS};
+pub use csr::Csr;
+pub use instance::{GraphInstance, TimeWindow};
+pub use template::{GraphTemplate, TemplateBuilder};
+
+/// External vertex identifier (e.g. an IPv4 address widened to 64 bits).
+pub type VertexId = u64;
+/// Dense template vertex index.
+pub type VIdx = u32;
+/// Dense template edge index (insertion order).
+pub type EIdx = u32;
+/// Timestep index into the ordered instance list.
+pub type Timestep = usize;
+
+/// Globally unique subgraph id: `(partition << 32) | local index`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SubgraphId(pub u64);
+
+impl SubgraphId {
+    pub fn new(partition: usize, local: usize) -> Self {
+        SubgraphId(((partition as u64) << 32) | local as u64)
+    }
+
+    pub fn partition(&self) -> usize {
+        (self.0 >> 32) as usize
+    }
+
+    pub fn local(&self) -> usize {
+        (self.0 & 0xffff_ffff) as usize
+    }
+}
+
+impl std::fmt::Display for SubgraphId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "sg{}:{}", self.partition(), self.local())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subgraph_id_packs_and_unpacks() {
+        let id = SubgraphId::new(11, 284);
+        assert_eq!(id.partition(), 11);
+        assert_eq!(id.local(), 284);
+        assert_eq!(format!("{id}"), "sg11:284");
+    }
+}

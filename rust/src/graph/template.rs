@@ -1,0 +1,283 @@
+//! Graph template Ĝ: the time-invariant topology and attribute schemas.
+
+use crate::graph::{Csr, EIdx, Schema, VIdx, VertexId};
+use crate::util::wire::{Dec, Enc};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// The template of a time-series graph collection: vertices with external
+/// ids, directed edges in insertion order, and vertex/edge schemas.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphTemplate {
+    /// External id per dense vertex index.
+    pub ext_ids: Vec<VertexId>,
+    /// Edge endpoints per dense edge index.
+    pub edge_src: Vec<VIdx>,
+    pub edge_dst: Vec<VIdx>,
+    /// Out-adjacency.
+    pub out: Csr,
+    pub vertex_schema: Schema,
+    pub edge_schema: Schema,
+}
+
+impl GraphTemplate {
+    pub fn n_vertices(&self) -> usize {
+        self.ext_ids.len()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edge_src.len()
+    }
+
+    /// Map external ids back to dense indices (built on demand; the
+    /// builder keeps one during construction).
+    pub fn id_index(&self) -> HashMap<VertexId, VIdx> {
+        self.ext_ids.iter().enumerate().map(|(i, &id)| (id, i as VIdx)).collect()
+    }
+
+    /// Estimate the diameter with a double-sweep BFS heuristic over the
+    /// undirected view (exact on trees, a tight lower bound in practice;
+    /// §VI-A reports diameter 25 for TR).
+    pub fn estimate_diameter(&self, seed_vertex: VIdx) -> usize {
+        let rev = self.out.reversed();
+        let (far, _) = self.bfs_farthest(&rev, seed_vertex);
+        let (_, dist) = self.bfs_farthest(&rev, far);
+        dist
+    }
+
+    fn bfs_farthest(&self, rev: &Csr, start: VIdx) -> (VIdx, usize) {
+        let n = self.n_vertices();
+        let mut dist = vec![usize::MAX; n];
+        let mut q = std::collections::VecDeque::new();
+        dist[start as usize] = 0;
+        q.push_back(start);
+        let (mut far, mut fd) = (start, 0);
+        while let Some(v) = q.pop_front() {
+            let fwd = self.out.neighbors(v).iter();
+            let bwd = rev.neighbors(v).iter();
+            for &u in fwd.chain(bwd) {
+                if dist[u as usize] == usize::MAX {
+                    dist[u as usize] = dist[v as usize] + 1;
+                    if dist[u as usize] > fd {
+                        fd = dist[u as usize];
+                        far = u;
+                    }
+                    q.push_back(u);
+                }
+            }
+        }
+        (far, fd)
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::with_capacity(self.n_vertices() * 10 + self.n_edges() * 6);
+        e.varint(self.n_vertices() as u64);
+        for &id in &self.ext_ids {
+            e.varint(id);
+        }
+        e.varint(self.n_edges() as u64);
+        for i in 0..self.n_edges() {
+            e.varint(self.edge_src[i] as u64);
+            e.varint(self.edge_dst[i] as u64);
+        }
+        self.vertex_schema.encode_into(&mut e);
+        self.edge_schema.encode_into(&mut e);
+        e.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<GraphTemplate> {
+        let mut d = Dec::new(buf);
+        let n = d.varint()? as usize;
+        let mut ext_ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            ext_ids.push(d.varint()?);
+        }
+        let m = d.varint()? as usize;
+        let mut edge_src = Vec::with_capacity(m);
+        let mut edge_dst = Vec::with_capacity(m);
+        let mut edges = Vec::with_capacity(m);
+        for e_idx in 0..m {
+            let s = d.varint()? as VIdx;
+            let t = d.varint()? as VIdx;
+            if s as usize >= n || t as usize >= n {
+                bail!("template: edge endpoint out of range");
+            }
+            edge_src.push(s);
+            edge_dst.push(t);
+            edges.push((s, t, e_idx as EIdx));
+        }
+        let vertex_schema = Schema::decode_from(&mut d)?;
+        let edge_schema = Schema::decode_from(&mut d)?;
+        Ok(GraphTemplate {
+            ext_ids,
+            edge_src,
+            edge_dst,
+            out: Csr::from_edges(n, &edges),
+            vertex_schema,
+            edge_schema,
+        })
+    }
+}
+
+/// Incremental template construction (used by generators and loaders).
+pub struct TemplateBuilder {
+    ext_ids: Vec<VertexId>,
+    id2idx: HashMap<VertexId, VIdx>,
+    edges: Vec<(VIdx, VIdx)>,
+    vertex_schema: Schema,
+    edge_schema: Schema,
+}
+
+impl TemplateBuilder {
+    pub fn new(vertex_schema: Schema, edge_schema: Schema) -> Self {
+        TemplateBuilder {
+            ext_ids: Vec::new(),
+            id2idx: HashMap::new(),
+            edges: Vec::new(),
+            vertex_schema,
+            edge_schema,
+        }
+    }
+
+    /// Add (or find) a vertex by external id; returns its dense index.
+    pub fn vertex(&mut self, ext_id: VertexId) -> VIdx {
+        if let Some(&i) = self.id2idx.get(&ext_id) {
+            return i;
+        }
+        let i = self.ext_ids.len() as VIdx;
+        self.ext_ids.push(ext_id);
+        self.id2idx.insert(ext_id, i);
+        i
+    }
+
+    pub fn has_vertex(&self, ext_id: VertexId) -> bool {
+        self.id2idx.contains_key(&ext_id)
+    }
+
+    /// Add a directed edge; returns its dense edge index.
+    pub fn edge(&mut self, src: VIdx, dst: VIdx) -> EIdx {
+        debug_assert!((src as usize) < self.ext_ids.len());
+        debug_assert!((dst as usize) < self.ext_ids.len());
+        self.edges.push((src, dst));
+        (self.edges.len() - 1) as EIdx
+    }
+
+    pub fn n_vertices(&self) -> usize {
+        self.ext_ids.len()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn build(self) -> GraphTemplate {
+        let n = self.ext_ids.len();
+        let edges: Vec<(VIdx, VIdx, EIdx)> = self
+            .edges
+            .iter()
+            .enumerate()
+            .map(|(i, &(s, t))| (s, t, i as EIdx))
+            .collect();
+        GraphTemplate {
+            ext_ids: self.ext_ids,
+            edge_src: edges.iter().map(|e| e.0).collect(),
+            edge_dst: edges.iter().map(|e| e.1).collect(),
+            out: Csr::from_edges(n, &edges),
+            vertex_schema: self.vertex_schema,
+            edge_schema: self.edge_schema,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{AttrSchema, AttrType};
+
+    fn schema() -> (Schema, Schema) {
+        (
+            Schema::new(vec![AttrSchema::plain("x", AttrType::Int)]),
+            Schema::new(vec![AttrSchema::plain("w", AttrType::Float)]),
+        )
+    }
+
+    #[test]
+    fn builder_dedups_vertices() {
+        let (vs, es) = schema();
+        let mut b = TemplateBuilder::new(vs, es);
+        let a = b.vertex(100);
+        let a2 = b.vertex(100);
+        let c = b.vertex(200);
+        assert_eq!(a, a2);
+        assert_ne!(a, c);
+        b.edge(a, c);
+        let t = b.build();
+        assert_eq!(t.n_vertices(), 2);
+        assert_eq!(t.n_edges(), 1);
+        assert_eq!(t.out.neighbors(a), &[c]);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let (vs, es) = schema();
+        let mut b = TemplateBuilder::new(vs, es);
+        let v0 = b.vertex(10);
+        let v1 = b.vertex(20);
+        let v2 = b.vertex(30);
+        b.edge(v0, v1);
+        b.edge(v1, v2);
+        b.edge(v2, v0);
+        let t = b.build();
+        let t2 = GraphTemplate::decode(&t.encode()).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn decode_rejects_out_of_range_edges() {
+        let (vs, es) = schema();
+        let mut b = TemplateBuilder::new(vs, es);
+        let v0 = b.vertex(1);
+        let v1 = b.vertex(2);
+        b.edge(v0, v1);
+        let t = b.build();
+        let mut buf = t.encode();
+        // Corrupt: bump vertex count down by re-encoding a smaller header is
+        // complex; instead corrupt an edge endpoint varint (value 1 -> 9).
+        let pos = buf.len() - t.vertex_schema.encode_len_probe() - 1;
+        let _ = pos; // structural corruption below:
+        // Simpler: decode a handcrafted buffer with edge endpoint >= n.
+        let mut e = Enc::new();
+        e.varint(1); // one vertex
+        e.varint(42);
+        e.varint(1); // one edge
+        e.varint(0);
+        e.varint(5); // dst out of range
+        t.vertex_schema.encode_into(&mut e);
+        t.edge_schema.encode_into(&mut e);
+        buf = e.finish();
+        assert!(GraphTemplate::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn diameter_on_path_graph() {
+        let (vs, es) = schema();
+        let mut b = TemplateBuilder::new(vs, es);
+        let idx: Vec<_> = (0..10).map(|i| b.vertex(i)).collect();
+        for w in idx.windows(2) {
+            b.edge(w[0], w[1]);
+            b.edge(w[1], w[0]);
+        }
+        let t = b.build();
+        assert_eq!(t.estimate_diameter(idx[3]), 9);
+    }
+}
+
+#[cfg(test)]
+impl Schema {
+    /// Test helper: length of this schema's encoding.
+    fn encode_len_probe(&self) -> usize {
+        let mut e = Enc::new();
+        self.encode_into(&mut e);
+        e.finish().len()
+    }
+}

@@ -1,0 +1,34 @@
+//! # GoFFish-RS
+//!
+//! A Rust + JAX + Pallas reproduction of *"Scalable Analytics over
+//! Distributed Time-series Graphs using GoFFish"* (Simmhan et al., 2014):
+//! the **Gopher** sub-graph-centric iterative-BSP analytics engine and the
+//! **GoFS** distributed time-series-graph store, plus the paper's
+//! applications, datasets (synthesized) and every evaluation figure.
+//!
+//! Layering (see DESIGN.md):
+//! * [`graph`] — time-series graph model Γ = ⟨Ĝ, G⟩;
+//! * [`partition`] — partitioner, subgraph extraction, bin packing;
+//! * [`gofs`] — slice-based distributed store with temporal packing,
+//!   projection/filtering and LRU caching;
+//! * [`gopher`] — the sub-graph-centric BSP engine and iBSP patterns;
+//! * [`cluster`] — in-process multi-host simulation (threads + network
+//!   cost model);
+//! * [`apps`] — SSSP, PageRank, N-hop latency, temporal vehicle tracking;
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas kernels;
+//! * [`datagen`] — synthetic traceroute (TR) and road-network datasets;
+//! * [`metrics`], [`util`], [`config`] — supporting substrates.
+
+pub mod apps;
+pub mod cluster;
+pub mod config;
+pub mod datagen;
+pub mod gofs;
+pub mod gopher;
+pub mod graph;
+pub mod metrics;
+pub mod partition;
+pub mod runtime;
+pub mod util;
+
+pub use graph::{GraphInstance, GraphTemplate, SubgraphId, TimeWindow};

@@ -1,0 +1,300 @@
+//! `goffish` — the GoFFish-RS launcher.
+//!
+//! ```text
+//! goffish deploy  --dataset tr|roadnet --out DIR [--parts 12 --bins 20
+//!                 --pack 20 --vertices N --instances T --seed S]
+//! goffish run     --store DIR --app sssp|pagerank|nhop|track|wcc
+//!                 [--cache 14 --hosts <parts> --source EXT --plate P
+//!                  --backend scalar|pjrt --artifacts DIR --from T --to T]
+//! goffish inspect --store DIR
+//! ```
+
+use anyhow::{bail, Context, Result};
+use goffish::apps::{NHopApp, PageRankApp, SsspApp, VehicleTrackApp, WccApp};
+use goffish::config::Args;
+use goffish::datagen::{
+    CollectionSource, RoadNetGenerator, RoadNetParams, TraceRouteGenerator, TraceRouteParams,
+};
+use goffish::gofs::{deploy, open_collection, DeployConfig, DiskModel, StoreOptions};
+use goffish::gopher::{GopherEngine, RunOptions, RunStats};
+use goffish::metrics::Metrics;
+use goffish::runtime::pjrt::{PjrtBackend, PjrtEngine};
+use goffish::runtime::{LocalSpmv, ScalarBackend};
+use goffish::util::histogram::LogHistogram;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.command.as_deref() {
+        Some("deploy") => cmd_deploy(&args),
+        Some("run") => cmd_run(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown command: {other}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "\
+goffish — scalable analytics over distributed time-series graphs
+
+USAGE:
+  goffish deploy  --dataset tr|roadnet --out DIR
+                  [--parts 12 --bins 20 --pack 20 --vertices 50000
+                   --instances 146 --seed 48879 --no-compress]
+  goffish run     --store DIR --app sssp|pagerank|nhop|track|wcc
+                  [--cache 14 --hosts <auto> --source <ext-id>
+                   --plate CA-00007 --nhops 6 --backend scalar|pjrt
+                   --artifacts artifacts --from <ts> --to <ts> --real-disk]
+  goffish inspect --store DIR
+";
+
+fn make_source(args: &Args) -> Result<Box<dyn CollectionSource>> {
+    match args.str("dataset", "tr").as_str() {
+        "tr" => {
+            let p = TraceRouteParams {
+                n_vertices: args.usize("vertices", 50_000),
+                n_vantage: args.usize("vantage", 12),
+                n_instances: args.usize("instances", 146),
+                traces_per_instance: args.usize("traces", 2_000),
+                seed: args.u64("seed", 0x7EAC_E201),
+                ..Default::default()
+            };
+            Ok(Box::new(TraceRouteGenerator::new(p)))
+        }
+        "roadnet" => {
+            let p = RoadNetParams {
+                width: args.usize("width", 64),
+                height: args.usize("height", 64),
+                n_vehicles: args.usize("vehicles", 500),
+                n_instances: args.usize("instances", 24),
+                seed: args.u64("seed", 0x0AD5_EED),
+                ..Default::default()
+            };
+            Ok(Box::new(RoadNetGenerator::new(p)))
+        }
+        other => bail!("unknown dataset {other} (expected tr|roadnet)"),
+    }
+}
+
+fn cmd_deploy(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.require("out")?);
+    let source = make_source(args)?;
+    let mut cfg = DeployConfig::new(
+        args.usize("parts", 12),
+        args.usize("bins", 20),
+        args.usize("pack", 20),
+    );
+    cfg.compress = !args.switch("no-compress");
+    cfg.partition.seed = args.u64("seed", 0xBEEF);
+    let t0 = std::time::Instant::now();
+    let report = deploy(source.as_ref(), &cfg, &out)?;
+    println!(
+        "deployed {} ({}): {} vertices, {} edges, {} instances",
+        out.display(),
+        cfg.label(),
+        report.n_vertices,
+        report.n_edges,
+        report.n_instances
+    );
+    println!(
+        "  {} partitions, subgraphs/partition {:?}",
+        report.n_parts, report.subgraphs_per_partition
+    );
+    println!(
+        "  {} slices, {:.1} MB, {:.1}s",
+        report.slices_written,
+        report.bytes_written as f64 / 1e6,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn print_stats(stats: &RunStats) {
+    println!(
+        "done: {} timesteps, {} supersteps, {:.2}s wall ({:.3}s merge)",
+        stats.per_timestep.len(),
+        stats.total_supersteps(),
+        stats.total_wall_s,
+        stats.merge_wall_s
+    );
+    let slices: u64 = stats.per_timestep.iter().map(|t| t.slices_read).sum();
+    let remote: u64 = stats.per_timestep.iter().map(|t| t.msgs_remote).sum();
+    let local: u64 = stats.per_timestep.iter().map(|t| t.msgs_local).sum();
+    let sim_disk: u64 = stats.per_timestep.iter().map(|t| t.sim_disk_ns).sum();
+    let sim_net: u64 = stats.per_timestep.iter().map(|t| t.sim_net_ns).sum();
+    println!(
+        "  slices read {slices}, msgs local/remote {local}/{remote}, sim disk {:.2}s, sim net {:.2}s",
+        sim_disk as f64 / 1e9,
+        sim_net as f64 / 1e9
+    );
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let store_dir = PathBuf::from(args.require("store")?);
+    let metrics = Arc::new(Metrics::new());
+    let disk = if args.switch("real-disk") { DiskModel::instant() } else { DiskModel::default() };
+    let opts =
+        StoreOptions { cache_slots: args.usize("cache", 14), disk, metrics: metrics.clone() };
+    let stores = open_collection(&store_dir, &opts)?;
+    let n_hosts = stores.len();
+    let eng = GopherEngine::new(
+        stores,
+        goffish::cluster::ClusterSpec::new(args.usize("hosts", n_hosts)),
+        metrics.clone(),
+    );
+
+    let mut run_opts = RunOptions::default();
+    if args.get("from").is_some() || args.get("to").is_some() {
+        let from = args.usize("from", 0);
+        let to = args.usize("to", eng.n_instances());
+        run_opts.timesteps = Some((from..to.min(eng.n_instances())).collect());
+    }
+
+    let vs = eng.stores()[0].vertex_schema().clone();
+    let es = eng.stores()[0].edge_schema().clone();
+    let total_vertices: usize = eng
+        .stores()
+        .iter()
+        .map(|s| s.shared().subgraphs.iter().map(|g| g.n_vertices()).sum::<usize>())
+        .sum();
+
+    let backend: Arc<dyn LocalSpmv> = match args.str("backend", "scalar").as_str() {
+        "scalar" => Arc::new(ScalarBackend),
+        "pjrt" => {
+            let dir = PathBuf::from(args.str("artifacts", "artifacts"));
+            let engine = PjrtEngine::load(&dir, None, metrics.clone())
+                .context("loading PJRT artifacts (run `make artifacts`)")?;
+            Arc::new(PjrtBackend::new(engine))
+        }
+        other => bail!("unknown backend {other}"),
+    };
+
+    let app_name = args.str("app", "sssp");
+    match app_name.as_str() {
+        "sssp" => {
+            let attr = es
+                .index_of("latency_ms")
+                .or_else(|| es.index_of("travel_time"))
+                .context("no latency-like edge attribute")?;
+            let source = args.u64("source", default_source(&eng));
+            let app = SsspApp::new(source, attr);
+            let stats = eng.run(&app, &run_opts)?;
+            print_stats(&stats);
+            let reached = app.results.reached.lock().unwrap();
+            let last_t = stats.per_timestep.last().unwrap().timestep;
+            let total: usize =
+                reached.iter().filter(|((t, _), _)| *t == last_t).map(|(_, &c)| c).sum();
+            println!("  sssp from {source}: {total}/{total_vertices} reachable by t={last_t}");
+        }
+        "pagerank" => {
+            let active = es.index_of("active");
+            let app = PageRankApp::new(total_vertices, active, backend);
+            let stats = eng.run(&app, &run_opts)?;
+            print_stats(&stats);
+            let t = stats.per_timestep.last().unwrap().timestep;
+            println!("  pagerank top-5 at t={t} (backend {}):", args.str("backend", "scalar"));
+            for (ext, r) in app.results.top_k(t, 5) {
+                println!("    v{ext}: {r:.3e}");
+            }
+        }
+        "nhop" => {
+            let attr = es.index_of("latency_ms").context("nhop needs latency_ms")?;
+            let source = args.u64("source", default_source(&eng));
+            let mut app = NHopApp::new(source, args.usize("nhops", 6) as u32, attr);
+            app.hist_hi = args.f64("hist-hi", 500.0);
+            let stats = eng.run(&app, &run_opts)?;
+            print_stats(&stats);
+            let composite = app.results.composite.lock().unwrap();
+            if let Some(h) = composite.as_ref() {
+                println!("  nhop composite: {} arrivals", h.total());
+            }
+        }
+        "track" => {
+            let attr = vs.index_of("plates").context("track needs a roadnet store")?;
+            let plate = args.str("plate", "CA-00007");
+            let source = args.u64("source", default_source(&eng));
+            let app = VehicleTrackApp::new(&plate, source, attr);
+            let stats = eng.run(&app, &run_opts)?;
+            print_stats(&stats);
+            let traj = app.results.trajectory();
+            println!("  {} sightings of {plate}:", traj.len());
+            for (t, v) in traj.iter().take(20) {
+                println!("    t={t} at v{v}");
+            }
+        }
+        "wcc" => {
+            run_opts.timesteps = Some(vec![0]);
+            let app = WccApp::new();
+            let stats = eng.run(&app, &run_opts)?;
+            print_stats(&stats);
+            println!("  wcc: {} components", app.results.n_components());
+        }
+        other => bail!("unknown app {other}"),
+    }
+    Ok(())
+}
+
+fn default_source(eng: &GopherEngine) -> u64 {
+    eng.stores()[0].shared().subgraphs[0].ext_ids[0]
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let store_dir = PathBuf::from(args.require("store")?);
+    let metrics = Arc::new(Metrics::new());
+    let opts = StoreOptions { cache_slots: 0, disk: DiskModel::instant(), metrics };
+    let stores = open_collection(&store_dir, &opts)?;
+    println!("collection {} — {} partitions", store_dir.display(), stores.len());
+    let mut whist = LogHistogram::new();
+    let mut total_v = 0usize;
+    let mut total_e = 0usize;
+    for s in &stores {
+        let shared = s.shared();
+        let nv: usize = shared.subgraphs.iter().map(|g| g.n_vertices()).sum();
+        let ne: usize = shared.subgraphs.iter().map(|g| g.n_edges()).sum();
+        total_v += nv;
+        total_e += ne;
+        for sg in &shared.subgraphs {
+            whist.record((sg.n_vertices() + sg.n_edges()) as u64);
+        }
+        println!(
+            "  part-{}: {} subgraphs, {} vertices, {} edges, bins {}",
+            s.part_id(),
+            shared.subgraphs.len(),
+            nv,
+            ne,
+            shared.bins.n_bins
+        );
+    }
+    println!(
+        "total: {} vertices, {} edges, {} instances",
+        total_v,
+        total_e,
+        stores[0].n_instances()
+    );
+    println!("subgraph size (v+e) distribution (log2 buckets):");
+    for (lo, hi, c) in whist.rows() {
+        if c > 0 {
+            println!("  [{lo}, {hi}): {c}");
+        }
+    }
+    println!(
+        "vertex attrs: {:?}",
+        stores[0].vertex_schema().attrs.iter().map(|a| a.name.clone()).collect::<Vec<_>>()
+    );
+    println!(
+        "edge attrs:   {:?}",
+        stores[0].edge_schema().attrs.iter().map(|a| a.name.clone()).collect::<Vec<_>>()
+    );
+    Ok(())
+}

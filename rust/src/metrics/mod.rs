@@ -1,0 +1,168 @@
+//! Runtime metrics: counters and phase timers.
+//!
+//! The paper's evaluation is driven by exactly these observables — slice
+//! reads (Fig. 8), read time (Fig. 6), per-timestep BSP time (Fig. 7),
+//! message counts (subgraph- vs vertex-centric comparison). Components
+//! record into a [`Metrics`] registry; benches snapshot/diff it.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Counter identifiers used across the platform.
+pub mod keys {
+    pub const SLICES_READ: &str = "gofs.slices_read";
+    pub const SLICE_BYTES: &str = "gofs.slice_bytes";
+    pub const SLICE_READ_NS: &str = "gofs.slice_read_ns";
+    pub const SIM_DISK_NS: &str = "gofs.sim_disk_ns";
+    pub const CACHE_HITS: &str = "gofs.cache_hits";
+    pub const CACHE_MISSES: &str = "gofs.cache_misses";
+    pub const CACHE_EVICTIONS: &str = "gofs.cache_evictions";
+    pub const MSGS_LOCAL: &str = "gopher.msgs_local";
+    pub const MSGS_REMOTE: &str = "gopher.msgs_remote";
+    pub const MSG_BYTES_REMOTE: &str = "gopher.msg_bytes_remote";
+    pub const SUPERSTEPS: &str = "gopher.supersteps";
+    pub const TIMESTEPS: &str = "gopher.timesteps";
+    pub const SIM_NET_NS: &str = "cluster.sim_net_ns";
+    pub const KERNEL_CALLS: &str = "runtime.kernel_calls";
+    pub const KERNEL_NS: &str = "runtime.kernel_ns";
+}
+
+/// A thread-safe metrics registry. Cheap to clone (Arc inside callers);
+/// counters are lock-free, the name table is a mutex-protected map.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<AtomicU64>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    fn counter(&self, key: &str) -> std::sync::Arc<AtomicU64> {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(key.to_string())
+            .or_insert_with(|| std::sync::Arc::new(AtomicU64::new(0)))
+            .clone()
+    }
+
+    /// Add `n` to counter `key`.
+    pub fn add(&self, key: &str, n: u64) {
+        self.counter(key).fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn incr(&self, key: &str) {
+        self.add(key, 1);
+    }
+
+    pub fn get(&self, key: &str) -> u64 {
+        self.counter(key).load(Ordering::Relaxed)
+    }
+
+    /// Time a closure, accumulating nanoseconds into `key`.
+    pub fn time<T>(&self, key: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(key, t0.elapsed().as_nanos() as u64);
+        out
+    }
+
+    /// A point-in-time snapshot of all counters.
+    pub fn snapshot(&self) -> Snapshot {
+        let map = self.counters.lock().unwrap();
+        Snapshot {
+            values: map.iter().map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed))).collect(),
+        }
+    }
+
+    /// Reset all counters to zero.
+    pub fn reset(&self) {
+        let map = self.counters.lock().unwrap();
+        for v in map.values() {
+            v.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Immutable snapshot, with diffing for bench phases.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Snapshot {
+    pub values: BTreeMap<String, u64>,
+}
+
+impl Snapshot {
+    pub fn get(&self, key: &str) -> u64 {
+        self.values.get(key).copied().unwrap_or(0)
+    }
+
+    /// Counter-wise `self - earlier` (saturating).
+    pub fn since(&self, earlier: &Snapshot) -> Snapshot {
+        let mut values = BTreeMap::new();
+        for (k, &v) in &self.values {
+            values.insert(k.clone(), v.saturating_sub(earlier.get(k)));
+        }
+        Snapshot { values }
+    }
+
+    pub fn render(&self) -> String {
+        self.values
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr(keys::SLICES_READ);
+        m.add(keys::SLICES_READ, 4);
+        assert_eq!(m.get(keys::SLICES_READ), 5);
+        assert_eq!(m.get("unset"), 0);
+    }
+
+    #[test]
+    fn snapshot_diff() {
+        let m = Metrics::new();
+        m.add("a", 10);
+        let s1 = m.snapshot();
+        m.add("a", 7);
+        m.add("b", 2);
+        let d = m.snapshot().since(&s1);
+        assert_eq!(d.get("a"), 7);
+        assert_eq!(d.get("b"), 2);
+    }
+
+    #[test]
+    fn time_accumulates_nanos() {
+        let m = Metrics::new();
+        let x = m.time("t", || 21 * 2);
+        assert_eq!(x, 42);
+        assert!(m.get("t") > 0);
+    }
+
+    #[test]
+    fn concurrent_increments_are_not_lost() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    m.incr("c");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.get("c"), 80_000);
+    }
+}

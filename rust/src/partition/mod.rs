@@ -1,0 +1,15 @@
+//! Graph partitioning and subgraph extraction (paper §IV-A, §V-A).
+//!
+//! The template is partitioned into as many partitions as hosts, balancing
+//! vertex counts and minimizing remote (cut) edges. Within a partition, a
+//! *subgraph* is a maximal set of vertices connected through local edges —
+//! the unit of computation for the sub-graph-centric BSP model. Subgraphs
+//! are then bin-packed into a fixed number of slices per partition (§V-D).
+
+pub mod binpack;
+pub mod partitioner;
+pub mod subgraph;
+
+pub use binpack::{binpack_subgraphs, BinPacking};
+pub use partitioner::{partition_graph, PartitionOptions, Partitioning};
+pub use subgraph::{extract_partitions, Partition, RemoteEdge, Subgraph};

@@ -1,0 +1,369 @@
+//! Subgraph extraction: maximal connected components over local edges.
+//!
+//! Per the paper (§IV-A): within a partition, a *sub-graph* is a maximal
+//! set of vertices connected through local edges. An edge belongs to the
+//! partition of its source vertex; edges whose destination lies in a
+//! different partition are *remote* edges, and carry the destination's
+//! subgraph id so Gopher can route messages without a directory lookup.
+
+use crate::graph::{Csr, EIdx, GraphTemplate, SubgraphId, VIdx, VertexId};
+use crate::partition::Partitioning;
+
+/// A remote (cut) edge sourced in this subgraph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RemoteEdge {
+    /// Source vertex, local index within the subgraph.
+    pub src_local: u32,
+    /// Template edge index (for attribute lookup).
+    pub eidx: EIdx,
+    /// Destination vertex, global template index.
+    pub dst_global: VIdx,
+    /// Destination vertex's external id.
+    pub dst_ext: VertexId,
+    /// Destination subgraph (resolved in a global pass).
+    pub dst_subgraph: SubgraphId,
+}
+
+/// One subgraph: the unit of computation of the sub-graph-centric model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Subgraph {
+    pub id: SubgraphId,
+    /// Global template vertex indices, sorted ascending; position = local
+    /// vertex index.
+    pub vertices: Vec<VIdx>,
+    /// External ids, parallel to `vertices`.
+    pub ext_ids: Vec<VertexId>,
+    /// Local adjacency over local vertex indices. Edge ids in this CSR are
+    /// *positions into `edges`* (not template indices) so edge-attribute
+    /// lookups after projection are O(1).
+    pub local: Csr,
+    /// Template edge indices owned by this subgraph (local edges first,
+    /// then remote), sorted ascending within each group... see `edges_sorted`.
+    pub edges: Vec<EIdx>,
+    /// Sorted copy of `edges` used for attribute projection.
+    pub edges_sorted: Vec<EIdx>,
+    /// Position of `edges[i]` within `edges_sorted` (local edge attr index).
+    pub edge_sorted_pos: Vec<u32>,
+    /// Remote edges sourced at this subgraph's vertices.
+    pub remote: Vec<RemoteEdge>,
+}
+
+impl Subgraph {
+    pub fn n_vertices(&self) -> usize {
+        self.vertices.len()
+    }
+
+    pub fn n_local_edges(&self) -> usize {
+        self.local.n_edges()
+    }
+
+    pub fn n_remote_edges(&self) -> usize {
+        self.remote.len()
+    }
+
+    /// Total owned edges (local + remote).
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Computation weight used for bin packing (vertices + edges).
+    pub fn weight(&self) -> usize {
+        self.n_vertices() + self.n_edges()
+    }
+
+    /// Local index of a global template vertex, if present.
+    pub fn local_of(&self, global: VIdx) -> Option<u32> {
+        self.vertices.binary_search(&global).ok().map(|i| i as u32)
+    }
+
+    /// Attribute-column position of owned edge list position `i`
+    /// (i.e. index into columns projected over `edges_sorted`).
+    pub fn edge_attr_pos(&self, edge_list_pos: usize) -> u32 {
+        self.edge_sorted_pos[edge_list_pos]
+    }
+
+    /// Remote edges grouped by destination subgraph (routing aid).
+    pub fn remote_by_target(&self) -> std::collections::HashMap<SubgraphId, Vec<&RemoteEdge>> {
+        let mut m: std::collections::HashMap<SubgraphId, Vec<&RemoteEdge>> =
+            std::collections::HashMap::new();
+        for r in &self.remote {
+            m.entry(r.dst_subgraph).or_default().push(r);
+        }
+        m
+    }
+}
+
+/// A host's partition: its subgraphs plus lookup tables.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partition {
+    pub part_id: usize,
+    pub subgraphs: Vec<Subgraph>,
+}
+
+impl Partition {
+    pub fn n_vertices(&self) -> usize {
+        self.subgraphs.iter().map(|s| s.n_vertices()).sum()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.subgraphs.iter().map(|s| s.n_edges()).sum()
+    }
+}
+
+/// Disjoint-set forest with path halving + union by size.
+struct Dsu {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+}
+
+impl Dsu {
+    fn new(n: usize) -> Self {
+        Dsu { parent: (0..n as u32).collect(), size: vec![1; n] }
+    }
+
+    fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            self.parent[x as usize] = self.parent[self.parent[x as usize] as usize];
+            x = self.parent[x as usize];
+        }
+        x
+    }
+
+    fn union(&mut self, a: u32, b: u32) {
+        let (mut ra, mut rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return;
+        }
+        if self.size[ra as usize] < self.size[rb as usize] {
+            std::mem::swap(&mut ra, &mut rb);
+        }
+        self.parent[rb as usize] = ra;
+        self.size[ra as usize] += self.size[rb as usize];
+    }
+}
+
+/// Extract all partitions' subgraphs from a template + partitioning, and
+/// resolve remote-edge target subgraph ids globally.
+pub fn extract_partitions(template: &GraphTemplate, part: &Partitioning) -> Vec<Partition> {
+    let n = template.n_vertices();
+    assert_eq!(part.assign.len(), n);
+
+    // 1. Union-find over local edges (same-partition endpoints).
+    let mut dsu = Dsu::new(n);
+    for e in 0..template.n_edges() {
+        let (s, d) = (template.edge_src[e], template.edge_dst[e]);
+        if part.assign[s as usize] == part.assign[d as usize] {
+            dsu.union(s, d);
+        }
+    }
+
+    // 2. Number components per partition -> (partition, local subgraph idx).
+    let mut comp_of = vec![u32::MAX; n]; // vertex -> local subgraph index
+    let mut counts = vec![0u32; part.n_parts]; // subgraphs per partition
+    let mut root_comp: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    for v in 0..n as u32 {
+        let r = dsu.find(v);
+        let p = part.assign[v as usize] as usize;
+        let c = *root_comp.entry(r).or_insert_with(|| {
+            let c = counts[p];
+            counts[p] += 1;
+            c
+        });
+        comp_of[v as usize] = c;
+    }
+    let sg_of = |v: VIdx, assign: &[u32], comp_of: &[u32]| -> SubgraphId {
+        SubgraphId::new(assign[v as usize] as usize, comp_of[v as usize] as usize)
+    };
+
+    // 3. Collect vertices per (partition, subgraph).
+    let mut partitions: Vec<Partition> = (0..part.n_parts)
+        .map(|p| Partition { part_id: p, subgraphs: Vec::new() })
+        .collect();
+    let mut sg_vertices: Vec<Vec<Vec<VIdx>>> =
+        counts.iter().map(|&c| vec![Vec::new(); c as usize]).collect();
+    for v in 0..n as VIdx {
+        let p = part.assign[v as usize] as usize;
+        sg_vertices[p][comp_of[v as usize] as usize].push(v);
+    }
+
+    // 4. Build each subgraph: local CSR + owned edge lists + remote edges.
+    for p in 0..part.n_parts {
+        for (c, mut verts) in std::mem::take(&mut sg_vertices[p]).into_iter().enumerate() {
+            verts.sort_unstable();
+            let id = SubgraphId::new(p, c);
+            let n_local = verts.len();
+            // global -> local map via binary search on the sorted list.
+            let local_of = |g: VIdx| verts.binary_search(&g).ok().map(|i| i as u32);
+
+            let mut edges: Vec<EIdx> = Vec::new();
+            let mut local_edges: Vec<(VIdx, VIdx, EIdx)> = Vec::new();
+            let mut remote: Vec<RemoteEdge> = Vec::new();
+            for (li, &g) in verts.iter().enumerate() {
+                for (dst, eidx) in template.out.out_edges(g) {
+                    if part.assign[dst as usize] as usize == p {
+                        // Local edge: same component by construction.
+                        let ld = local_of(dst).expect("local edge dst in same subgraph");
+                        // CSR edge id = position into `edges`.
+                        local_edges.push((li as VIdx, ld, edges.len() as EIdx));
+                        edges.push(eidx);
+                    } else {
+                        remote.push(RemoteEdge {
+                            src_local: li as u32,
+                            eidx,
+                            dst_global: dst,
+                            dst_ext: template.ext_ids[dst as usize],
+                            dst_subgraph: sg_of(dst, &part.assign, &comp_of),
+                        });
+                    }
+                }
+            }
+            for r in &remote {
+                edges.push(r.eidx);
+            }
+            // Sorted edge view for attribute projection.
+            let mut order: Vec<u32> = (0..edges.len() as u32).collect();
+            order.sort_by_key(|&i| edges[i as usize]);
+            let edges_sorted: Vec<EIdx> = order.iter().map(|&i| edges[i as usize]).collect();
+            let mut edge_sorted_pos = vec![0u32; edges.len()];
+            for (sorted_pos, &orig) in order.iter().enumerate() {
+                edge_sorted_pos[orig as usize] = sorted_pos as u32;
+            }
+
+            partitions[p].subgraphs.push(Subgraph {
+                id,
+                ext_ids: verts.iter().map(|&v| template.ext_ids[v as usize]).collect(),
+                local: Csr::from_edges(n_local, &local_edges),
+                vertices: verts,
+                edges,
+                edges_sorted,
+                edge_sorted_pos,
+                remote,
+            });
+        }
+    }
+    partitions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Schema, TemplateBuilder};
+    use crate::partition::{partition_graph, PartitionOptions};
+    use crate::util::propcheck::forall;
+
+    fn build(n: usize, edges: &[(u32, u32)]) -> GraphTemplate {
+        let mut b = TemplateBuilder::new(Schema::new(vec![]), Schema::new(vec![]));
+        for i in 0..n {
+            b.vertex(i as u64);
+        }
+        for &(s, d) in edges {
+            b.edge(s, d);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn two_components_one_partition() {
+        let t = build(5, &[(0, 1), (1, 2), (3, 4)]);
+        let p = Partitioning { n_parts: 1, assign: vec![0; 5] };
+        let parts = extract_partitions(&t, &p);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].subgraphs.len(), 2);
+        let sizes: Vec<usize> =
+            parts[0].subgraphs.iter().map(|s| s.n_vertices()).collect();
+        assert!(sizes.contains(&3) && sizes.contains(&2));
+        assert!(parts[0].subgraphs.iter().all(|s| s.remote.is_empty()));
+    }
+
+    #[test]
+    fn cut_edge_becomes_remote_with_resolved_target() {
+        // 0-1 in part 0; 2-3 in part 1; edge 1->2 crosses.
+        let t = build(4, &[(0, 1), (1, 2), (2, 3)]);
+        let p = Partitioning { n_parts: 2, assign: vec![0, 0, 1, 1] };
+        let parts = extract_partitions(&t, &p);
+        assert_eq!(parts[0].subgraphs.len(), 1);
+        assert_eq!(parts[1].subgraphs.len(), 1);
+        let sg0 = &parts[0].subgraphs[0];
+        assert_eq!(sg0.n_local_edges(), 1);
+        assert_eq!(sg0.remote.len(), 1);
+        let r = &sg0.remote[0];
+        assert_eq!(r.dst_global, 2);
+        assert_eq!(r.dst_subgraph, parts[1].subgraphs[0].id);
+        assert_eq!(r.src_local, sg0.local_of(1).unwrap());
+    }
+
+    #[test]
+    fn edge_attr_positions_are_consistent() {
+        let t = build(4, &[(1, 0), (0, 1), (2, 0), (0, 3)]);
+        let p = Partitioning { n_parts: 2, assign: vec![0, 0, 0, 1] };
+        let parts = extract_partitions(&t, &p);
+        for sg in &parts[0].subgraphs {
+            for (pos, &eidx) in sg.edges.iter().enumerate() {
+                let sorted_pos = sg.edge_attr_pos(pos) as usize;
+                assert_eq!(sg.edges_sorted[sorted_pos], eidx);
+            }
+            // sorted view must be ascending
+            assert!(sg.edges_sorted.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+
+    #[test]
+    fn subgraph_invariants_property() {
+        forall(30, |g| {
+            let n = g.usize(1..50);
+            let m = g.usize(0..120);
+            let edges: Vec<(u32, u32)> =
+                (0..m).map(|_| (g.usize(0..n) as u32, g.usize(0..n) as u32)).collect();
+            let t = build(n, &edges);
+            let k = g.usize(1..5);
+            let p = partition_graph(&t, &PartitionOptions::new(k));
+            let parts = extract_partitions(&t, &p);
+
+            // (a) vertices partition V.
+            let mut seen = vec![false; n];
+            for part in &parts {
+                for sg in &part.subgraphs {
+                    for &v in &sg.vertices {
+                        assert!(!seen[v as usize], "vertex in two subgraphs");
+                        seen[v as usize] = true;
+                        assert_eq!(p.assign[v as usize] as usize, part.part_id);
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&b| b), "vertex missing from all subgraphs");
+
+            // (b) every template edge owned exactly once (by its source).
+            let mut edge_seen = vec![0usize; t.n_edges()];
+            for part in &parts {
+                for sg in &part.subgraphs {
+                    for &e in &sg.edges {
+                        edge_seen[e as usize] += 1;
+                    }
+                    // local + remote == owned
+                    assert_eq!(sg.n_local_edges() + sg.n_remote_edges(), sg.n_edges());
+                }
+            }
+            assert!(edge_seen.iter().all(|&c| c == 1), "edge ownership not exactly-once");
+
+            // (c) maximality: no local edge crosses subgraphs; every remote
+            // edge crosses partitions.
+            for part in &parts {
+                for sg in &part.subgraphs {
+                    for r in &sg.remote {
+                        assert_ne!(
+                            p.assign[r.dst_global as usize] as usize,
+                            part.part_id,
+                            "remote edge within partition"
+                        );
+                        // target subgraph resolves correctly
+                        let tp = r.dst_subgraph.partition();
+                        let ts = r.dst_subgraph.local();
+                        assert!(parts[tp].subgraphs[ts]
+                            .local_of(r.dst_global)
+                            .is_some());
+                    }
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,48 @@
+//! Numeric runtime: pluggable per-subgraph linear-algebra backends.
+//!
+//! The compute hot-spot of the centrality apps (PageRank's rank-update,
+//! min-plus SSSP relaxation) is expressed behind the [`LocalSpmv`] /
+//! [`MinPlus`] traits so Gopher applications stay engine-agnostic:
+//!
+//! * [`scalar`] — straightforward CSR loops (always available; the
+//!   correctness oracle);
+//! * [`pjrt`] — executes the AOT-compiled JAX/Pallas kernels from
+//!   `artifacts/*.hlo.txt` on the PJRT CPU client via the `xla` crate
+//!   (L1/L2 of the three-layer architecture; see `python/compile/`).
+
+pub mod pjrt;
+pub mod scalar;
+pub mod tiles;
+
+pub use scalar::ScalarBackend;
+
+use crate::partition::Subgraph;
+
+/// Factory for per-(subgraph, instance) prepared operators. `prepare` is
+/// called once per BSP timestep (when edge activity is known); `apply`
+/// runs every superstep — the hot path.
+pub trait LocalSpmv: Send + Sync {
+    /// Build the operator for `sg` restricted to `edge_active[pos]` local
+    /// edges (pos indexes `sg.local` CSR edge ids).
+    fn prepare(&self, sg: &Subgraph, edge_active: &[bool]) -> Box<dyn PreparedSpmv>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// `y[dst] += x[src]` over the prepared (active) local edges.
+pub trait PreparedSpmv: Send {
+    fn apply(&self, x: &[f32], y: &mut [f32]);
+}
+
+/// Min-plus relaxation backend: `out[v] = min(dist[v], min over active
+/// local edges (u,v) of dist[u] + w[edge])`.
+pub trait MinPlus: Send + Sync {
+    fn prepare(&self, sg: &Subgraph, weights: &[f32]) -> Box<dyn PreparedMinPlus>;
+
+    fn name(&self) -> &'static str;
+}
+
+pub trait PreparedMinPlus: Send {
+    /// One relaxation sweep; returns true if any distance improved.
+    fn relax(&self, dist: &mut [f32]) -> bool;
+}

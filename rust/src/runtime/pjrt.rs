@@ -1,0 +1,589 @@
+//! PJRT execution of the AOT-compiled JAX/Pallas kernels.
+//!
+//! The three-layer hot path: `python/compile/aot.py` lowers the L2 JAX
+//! functions (which call the L1 Pallas tile kernels) to **HLO text** in
+//! `artifacts/`, once, at build time; this module loads them with
+//! `HloModuleProto::from_text_file`, compiles them on the PJRT CPU client
+//! and executes them from Gopher's superstep hot loop. Python never runs
+//! at request time.
+//!
+//! ### Threading
+//! The `xla` crate's handles hold raw pointers (`!Send + !Sync`), so a
+//! dedicated **executor thread** owns the client and all compiled
+//! executables; callers submit jobs over a channel and block on the
+//! response — the same structure as one accelerator queue per host.
+//!
+//! ### Kernels (see `python/compile/kernels/`)
+//! * `pagerank_b{B}_k{K}`: `(A[K,B,B], x[K,B]) -> y[K,B]`,
+//!   `y[k,d] = Σ_s A[k,s,d] · x[k,s]` — batched dense-tile SpMV.
+//! * `minplus_b{B}_k{K}`: `(W[K,B,B], d[K,B]) -> o[K,B]`,
+//!   `o[k,j] = min_s (d[k,s] + W[k,s,j])` — batched min-plus product.
+
+use super::tiles::Tiling;
+use super::{LocalSpmv, MinPlus, PreparedMinPlus, PreparedSpmv};
+use crate::metrics::{keys, Metrics};
+use crate::partition::Subgraph;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc};
+
+/// Requests to the executor thread.
+enum Job {
+    /// One-shot execution with host literals.
+    Exec {
+        kernel: String,
+        /// (flattened f32 data, shape) per input.
+        inputs: Vec<(Vec<f32>, Vec<usize>)>,
+        resp: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    /// Upload a constant first argument (the tile batch) to a
+    /// device-resident buffer, reused across supersteps (§Perf: this cut
+    /// PageRank kernel traffic from O(tiles·B²) to O(B) per superstep).
+    CreateSession {
+        kernel: String,
+        a: Arc<Vec<f32>>,
+        a_shape: Vec<usize>,
+        resp: mpsc::Sender<Result<u64>>,
+    },
+    /// Execute a session kernel with a fresh second argument.
+    ExecSession {
+        id: u64,
+        x: Vec<f32>,
+        x_shape: Vec<usize>,
+        resp: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    DropSession { id: u64 },
+}
+
+/// Kernel variant descriptor from `artifacts/manifest.txt`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KernelSpec {
+    pub name: String,
+    pub b: usize,
+    pub k: usize,
+    pub path: PathBuf,
+}
+
+/// Parse `artifacts/manifest.txt`: lines `name b=<B> k=<K> path=<file>`.
+pub fn parse_manifest(dir: &Path) -> Result<Vec<KernelSpec>> {
+    let text = std::fs::read_to_string(dir.join("manifest.txt"))
+        .with_context(|| format!("no manifest in {}; run `make artifacts`", dir.display()))?;
+    let mut specs = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut name = None;
+        let mut b = None;
+        let mut k = None;
+        let mut path = None;
+        for (i, tok) in line.split_whitespace().enumerate() {
+            if i == 0 {
+                name = Some(tok.to_string());
+            } else if let Some(v) = tok.strip_prefix("b=") {
+                b = v.parse().ok();
+            } else if let Some(v) = tok.strip_prefix("k=") {
+                k = v.parse().ok();
+            } else if let Some(v) = tok.strip_prefix("path=") {
+                path = Some(dir.join(v));
+            }
+        }
+        match (name, b, k, path) {
+            (Some(name), Some(b), Some(k), Some(path)) => {
+                specs.push(KernelSpec { name, b, k, path })
+            }
+            _ => bail!("manifest: cannot parse line {line:?}"),
+        }
+    }
+    if specs.is_empty() {
+        bail!("manifest is empty");
+    }
+    Ok(specs)
+}
+
+/// The PJRT engine: a handle to the executor thread.
+pub struct PjrtEngine {
+    /// `mpsc::Sender` is !Sync; the mutex makes the engine shareable
+    /// across BSP worker threads (send is O(1), uncontended in practice).
+    tx: std::sync::Mutex<mpsc::Sender<Job>>,
+    specs: Vec<KernelSpec>,
+    /// Chosen variant (b, k) for tile ops.
+    pub b: usize,
+    pub k: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl PjrtEngine {
+    /// Load kernels from an artifacts directory, picking the variant with
+    /// block size `prefer_b` (or the largest available).
+    pub fn load(artifacts: &Path, prefer_b: Option<usize>, metrics: Arc<Metrics>) -> Result<Arc<Self>> {
+        let specs = parse_manifest(artifacts)?;
+        let pick = |name: &str| -> Option<&KernelSpec> {
+            let mut candidates: Vec<&KernelSpec> =
+                specs.iter().filter(|s| s.name == name).collect();
+            candidates.sort_by_key(|s| s.b);
+            match prefer_b {
+                Some(b) => candidates.into_iter().find(|s| s.b == b),
+                None => candidates.into_iter().last(),
+            }
+        };
+        let pr = pick("pagerank").ok_or_else(|| anyhow!("no pagerank kernel in manifest"))?;
+        let (b, k) = (pr.b, pr.k);
+
+        let (tx, rx) = mpsc::channel::<Job>();
+        let thread_specs = specs.clone();
+        std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || executor_thread(thread_specs, rx))
+            .context("spawning pjrt executor")?;
+        Ok(Arc::new(PjrtEngine { tx: std::sync::Mutex::new(tx), specs, b, k, metrics }))
+    }
+
+    pub fn specs(&self) -> &[KernelSpec] {
+        &self.specs
+    }
+
+    fn kernel_key(&self, name: &str) -> String {
+        format!("{name}_b{}_k{}", self.b, self.k)
+    }
+
+    fn submit(&self, job: Job) -> Result<()> {
+        self.tx.lock().unwrap().send(job).map_err(|_| anyhow!("pjrt executor thread is gone"))
+    }
+
+    /// Execute a kernel synchronously; `inputs` are (data, shape) pairs.
+    pub fn execute(&self, kernel: &str, inputs: Vec<(Vec<f32>, Vec<usize>)>) -> Result<Vec<f32>> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        self.metrics.incr(keys::KERNEL_CALLS);
+        let t0 = std::time::Instant::now();
+        self.submit(Job::Exec { kernel: kernel.to_string(), inputs, resp: resp_tx })?;
+        let out = resp_rx.recv().map_err(|_| anyhow!("pjrt executor dropped response"))?;
+        self.metrics.add(keys::KERNEL_NS, t0.elapsed().as_nanos() as u64);
+        out
+    }
+
+    /// Upload a constant tile batch once; returns a session handle.
+    pub fn create_session(
+        &self,
+        kernel: &str,
+        a: Arc<Vec<f32>>,
+        a_shape: Vec<usize>,
+    ) -> Result<u64> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        self.submit(Job::CreateSession {
+            kernel: kernel.to_string(),
+            a,
+            a_shape,
+            resp: resp_tx,
+        })?;
+        resp_rx.recv().map_err(|_| anyhow!("pjrt executor dropped response"))?
+    }
+
+    /// Execute with the session's device-resident tile batch.
+    pub fn execute_session(&self, id: u64, x: Vec<f32>, x_shape: Vec<usize>) -> Result<Vec<f32>> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        self.metrics.incr(keys::KERNEL_CALLS);
+        let t0 = std::time::Instant::now();
+        self.submit(Job::ExecSession { id, x, x_shape, resp: resp_tx })?;
+        let out = resp_rx.recv().map_err(|_| anyhow!("pjrt executor dropped response"))?;
+        self.metrics.add(keys::KERNEL_NS, t0.elapsed().as_nanos() as u64);
+        out
+    }
+
+    pub fn drop_session(&self, id: u64) {
+        let _ = self.submit(Job::DropSession { id });
+    }
+}
+
+/// Build an f32 literal from host data.
+fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("input shape {shape:?} != data len {}", data.len());
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+        .map_err(|e| anyhow!("building literal: {e}"))
+}
+
+/// Unwrap a 1-tuple execution result into a host Vec<f32>.
+fn fetch_f32(outputs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<f32>> {
+    let result = outputs[0][0].to_literal_sync().map_err(|e| anyhow!("fetching result: {e}"))?;
+    // aot.py lowers with return_tuple=True -> 1-tuple.
+    let out = result.to_tuple1().map_err(|e| anyhow!("untupling: {e}"))?;
+    out.to_vec::<f32>().map_err(|e| anyhow!("reading result: {e}"))
+}
+
+/// Executor thread body: owns the (!Send) client, executables, and
+/// device-resident session buffers.
+fn executor_thread(specs: Vec<KernelSpec>, rx: mpsc::Receiver<Job>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Poison every request with the startup error.
+            while let Ok(job) = rx.recv() {
+                let err = || Err(anyhow!("PJRT client failed to start: {e}"));
+                match job {
+                    Job::Exec { resp, .. } => drop(resp.send(err())),
+                    Job::CreateSession { resp, .. } => {
+                        drop(resp.send(Err(anyhow!("PJRT client failed to start: {e}"))))
+                    }
+                    Job::ExecSession { resp, .. } => drop(resp.send(err())),
+                    Job::DropSession { .. } => {}
+                }
+            }
+            return;
+        }
+    };
+    let by_key: HashMap<String, &KernelSpec> = specs
+        .iter()
+        .map(|s| (format!("{}_b{}_k{}", s.name, s.b, s.k), s))
+        .collect();
+    let mut compiled: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    let mut sessions: HashMap<u64, (String, xla::PjRtBuffer)> = HashMap::new();
+    let mut next_session = 1u64;
+
+    // Compile-on-demand helper (returns a key into `compiled`).
+    let ensure_compiled = |kernel: &str,
+                               compiled: &mut HashMap<String, xla::PjRtLoadedExecutable>|
+     -> Result<()> {
+        if compiled.contains_key(kernel) {
+            return Ok(());
+        }
+        let spec =
+            by_key.get(kernel).ok_or_else(|| anyhow!("unknown kernel {kernel}"))?;
+        let proto = xla::HloModuleProto::from_text_file(&spec.path)
+            .map_err(|e| anyhow!("loading {}: {e}", spec.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {kernel}: {e}"))?;
+        compiled.insert(kernel.to_string(), exe);
+        Ok(())
+    };
+
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Exec { kernel, inputs, resp } => {
+                let result = (|| -> Result<Vec<f32>> {
+                    ensure_compiled(&kernel, &mut compiled)?;
+                    let exe = &compiled[&kernel];
+                    let mut literals = Vec::with_capacity(inputs.len());
+                    for (data, shape) in &inputs {
+                        literals.push(literal_f32(data, shape)?);
+                    }
+                    fetch_f32(
+                        exe.execute::<xla::Literal>(&literals)
+                            .map_err(|e| anyhow!("executing {kernel}: {e}"))?,
+                    )
+                })();
+                let _ = resp.send(result);
+            }
+            Job::CreateSession { kernel, a, a_shape, resp } => {
+                let result = (|| -> Result<u64> {
+                    ensure_compiled(&kernel, &mut compiled)?;
+                    let buf = client
+                        .buffer_from_host_buffer::<f32>(&a, &a_shape, None)
+                        .map_err(|e| anyhow!("uploading session buffer: {e}"))?;
+                    let id = next_session;
+                    next_session += 1;
+                    sessions.insert(id, (kernel, buf));
+                    Ok(id)
+                })();
+                let _ = resp.send(result);
+            }
+            Job::ExecSession { id, x, x_shape, resp } => {
+                let result = (|| -> Result<Vec<f32>> {
+                    let (kernel, a_buf) =
+                        sessions.get(&id).ok_or_else(|| anyhow!("no session {id}"))?;
+                    let exe = &compiled[kernel];
+                    let x_buf = client
+                        .buffer_from_host_buffer::<f32>(&x, &x_shape, None)
+                        .map_err(|e| anyhow!("uploading x: {e}"))?;
+                    fetch_f32(
+                        exe.execute_b::<&xla::PjRtBuffer>(&[a_buf, &x_buf])
+                            .map_err(|e| anyhow!("executing session {id}: {e}"))?,
+                    )
+                })();
+                let _ = resp.send(result);
+            }
+            Job::DropSession { id } => {
+                sessions.remove(&id);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Backend trait implementations (dense-tile operators).
+// ---------------------------------------------------------------------
+
+/// [`LocalSpmv`]/[`MinPlus`] backend over a shared engine.
+pub struct PjrtBackend {
+    pub engine: Arc<PjrtEngine>,
+    /// Subgraphs smaller than this fall back to scalar loops (dense tiles
+    /// don't pay off below ~1 block).
+    pub min_vertices: usize,
+    /// Skip the density guard (tests/benches of the tile path).
+    pub force_tiles: bool,
+    scalar: super::scalar::ScalarBackend,
+}
+
+impl PjrtBackend {
+    pub fn new(engine: Arc<PjrtEngine>) -> Self {
+        PjrtBackend {
+            engine,
+            min_vertices: 64,
+            force_tiles: false,
+            scalar: super::scalar::ScalarBackend,
+        }
+    }
+}
+
+struct PjrtSpmv {
+    engine: Arc<PjrtEngine>,
+    tiling: Tiling,
+    /// Pre-batched tile data: chunks of K tiles, flattened [K,B,B].
+    batches: Vec<Batch>,
+}
+
+struct Batch {
+    /// Host copy kept alive for the session's lifetime (also handy when
+    /// debugging numeric mismatches).
+    #[allow(dead_code)]
+    a: Arc<Vec<f32>>,
+    /// (src_block, dst_block) per slot; u32::MAX = padding.
+    slots: Vec<(u32, u32)>,
+    /// Device-resident handle for `a` (uploaded once at prepare).
+    session: u64,
+}
+
+/// Split tiles into K-sized batches, upload each as a device-resident
+/// session buffer (reused every superstep), clamping values with `clamp`.
+fn make_batches(
+    engine: &Arc<PjrtEngine>,
+    kernel: &str,
+    tiling: &Tiling,
+    fill: f32,
+    clamp: impl Fn(f32) -> f32,
+) -> Result<Vec<Batch>> {
+    let b = tiling.b;
+    let k = engine.k;
+    tiling
+        .tiles
+        .chunks(k)
+        .map(|chunk| {
+            let mut a = vec![fill; k * b * b];
+            let mut slots = vec![(u32::MAX, u32::MAX); k];
+            for (i, t) in chunk.iter().enumerate() {
+                for (dst, &src) in a[i * b * b..(i + 1) * b * b].iter_mut().zip(&t.data) {
+                    *dst = clamp(src);
+                }
+                slots[i] = (t.src_block, t.dst_block);
+            }
+            let a = Arc::new(a);
+            let session = engine.create_session(kernel, a.clone(), vec![k, b, b])?;
+            Ok(Batch { a, slots, session })
+        })
+        .collect()
+}
+
+/// Arithmetic-intensity guard: dense tiles only pay off when each B×B tile
+/// carries enough edges; ultra-sparse subgraphs (like TR, |E|/|V|≈1.17)
+/// stay on the scalar CSR path (DESIGN.md §Hardware-Adaptation).
+fn dense_enough(tiling: &Tiling, n_edges: usize) -> bool {
+    !tiling.tiles.is_empty() && n_edges >= tiling.tiles.len() * tiling.b / 4
+}
+
+impl LocalSpmv for PjrtBackend {
+    fn prepare(&self, sg: &Subgraph, edge_active: &[bool]) -> Box<dyn PreparedSpmv> {
+        if sg.n_vertices() < self.min_vertices {
+            return LocalSpmv::prepare(&self.scalar, sg, edge_active);
+        }
+        let values: Vec<f32> = edge_active.iter().map(|&a| if a { 1.0 } else { 0.0 }).collect();
+        let tiling = Tiling::build(sg, self.engine.b, &values, 0.0);
+        let n_active = edge_active.iter().filter(|&&a| a).count();
+        if !dense_enough(&tiling, n_active) && !self.force_tiles {
+            return LocalSpmv::prepare(&self.scalar, sg, edge_active);
+        }
+        let kernel = self.engine.kernel_key("pagerank");
+        let batches = make_batches(&self.engine, &kernel, &tiling, 0.0, |v| v)
+            .expect("uploading pagerank tile sessions");
+        Box::new(PjrtSpmv { engine: self.engine.clone(), tiling, batches })
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+impl PreparedSpmv for PjrtSpmv {
+    fn apply(&self, x: &[f32], y: &mut [f32]) {
+        let b = self.tiling.b;
+        let k = self.engine.k;
+        for batch in &self.batches {
+            // Gather x blocks.
+            let mut xb = vec![0.0f32; k * b];
+            for (i, &(sb, _)) in batch.slots.iter().enumerate() {
+                if sb == u32::MAX {
+                    continue;
+                }
+                let off = sb as usize * b;
+                for j in 0..b {
+                    if off + j < x.len() {
+                        xb[i * b + j] = x[off + j];
+                    }
+                }
+            }
+            let out = self
+                .engine
+                .execute_session(batch.session, xb, vec![k, b])
+                .expect("pagerank kernel execution failed");
+            // Scatter-add y blocks.
+            for (i, &(_, db)) in batch.slots.iter().enumerate() {
+                if db == u32::MAX {
+                    continue;
+                }
+                let off = db as usize * b;
+                for j in 0..b {
+                    if off + j < y.len() {
+                        y[off + j] += out[i * b + j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Drop for PjrtSpmv {
+    fn drop(&mut self) {
+        for b in &self.batches {
+            self.engine.drop_session(b.session);
+        }
+    }
+}
+
+struct PjrtMinPlus {
+    engine: Arc<PjrtEngine>,
+    tiling: Tiling,
+    batches: Vec<Batch>,
+}
+
+impl Drop for PjrtMinPlus {
+    fn drop(&mut self) {
+        for b in &self.batches {
+            self.engine.drop_session(b.session);
+        }
+    }
+}
+
+impl MinPlus for PjrtBackend {
+    fn prepare(&self, sg: &Subgraph, weights: &[f32]) -> Box<dyn PreparedMinPlus> {
+        if sg.n_vertices() < self.min_vertices {
+            return MinPlus::prepare(&self.scalar, sg, weights);
+        }
+        let tiling = Tiling::build(sg, self.engine.b, weights, f32::INFINITY);
+        let n_finite = weights.iter().filter(|w| w.is_finite()).count();
+        if !dense_enough(&tiling, n_finite) && !self.force_tiles {
+            return MinPlus::prepare(&self.scalar, sg, weights);
+        }
+        // +inf padding breaks XLA min on some paths; use a huge finite fill.
+        let kernel = self.engine.kernel_key("minplus");
+        let clamp = |v: f32| if v.is_finite() { v.min(BIG) } else { BIG };
+        let batches = make_batches(&self.engine, &kernel, &tiling, BIG, clamp)
+            .expect("uploading minplus tile sessions");
+        Box::new(PjrtMinPlus { engine: self.engine.clone(), tiling, batches })
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Stand-in for +inf inside kernels (finite to keep min/plus well-defined).
+pub const BIG: f32 = 1e30;
+
+impl PreparedMinPlus for PjrtMinPlus {
+    fn relax(&self, dist: &mut [f32]) -> bool {
+        let b = self.tiling.b;
+        let k = self.engine.k;
+        let clamp = |v: f32| if v.is_finite() { v.min(BIG) } else { BIG };
+        let mut improved = false;
+        for batch in &self.batches {
+            let mut db_in = vec![BIG; k * b];
+            for (i, &(sb, _)) in batch.slots.iter().enumerate() {
+                if sb == u32::MAX {
+                    continue;
+                }
+                let off = sb as usize * b;
+                for j in 0..b {
+                    if off + j < dist.len() {
+                        db_in[i * b + j] = clamp(dist[off + j]);
+                    }
+                }
+            }
+            let out = self
+                .engine
+                .execute_session(batch.session, db_in, vec![k, b])
+                .expect("minplus kernel execution failed");
+            for (i, &(_, dstb)) in batch.slots.iter().enumerate() {
+                if dstb == u32::MAX {
+                    continue;
+                }
+                let off = dstb as usize * b;
+                for j in 0..b {
+                    let idx = off + j;
+                    if idx < dist.len() && out[i * b + j] < dist[idx] {
+                        dist[idx] = out[i * b + j];
+                        improved = true;
+                    }
+                }
+            }
+        }
+        improved
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join(format!("pjrt-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "# comment\npagerank b=32 k=4 path=pagerank_b32_k4.hlo.txt\nminplus b=32 k=4 path=minplus_b32_k4.hlo.txt\n",
+        )
+        .unwrap();
+        let specs = parse_manifest(&dir).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "pagerank");
+        assert_eq!(specs[0].b, 32);
+        assert_eq!(specs[0].k, 4);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn manifest_missing_is_helpful_error() {
+        let dir = std::env::temp_dir().join("pjrt-nonexistent-dir-xyz");
+        let err = parse_manifest(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "err: {err}");
+    }
+
+    #[test]
+    fn density_guard_rejects_sparse_tilings() {
+        use crate::runtime::tiles::Tiling;
+        // A long chain at B=32: ~n/32 tiles with ~32 edges each -> dense
+        // enough; a star-free random sprinkle is not.
+        let sg = crate::runtime::scalar::tests::chain_subgraph(256);
+        let vals = vec![1.0f32; sg.n_local_edges()];
+        let tiling = Tiling::build(&sg, 32, &vals, 0.0);
+        assert!(dense_enough(&tiling, sg.n_local_edges()));
+        // One edge per tile: 255 edges over 255 tiles at b=32 -> sparse.
+        let empty = Tiling { b: 32, n_blocks: 8, n_vertices: 256, tiles: vec![] };
+        assert!(!dense_enough(&empty, 0));
+    }
+}

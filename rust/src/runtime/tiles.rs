@@ -1,0 +1,202 @@
+//! Block tiling of subgraph-local adjacency for the dense-tile kernels.
+//!
+//! DESIGN.md §Hardware-Adaptation: instead of porting the paper's scalar
+//! Java loops, the per-subgraph hot loop is re-thought for a TPU MXU —
+//! the local adjacency is carved into dense `B×B` tiles (only non-empty
+//! tiles materialized), and the AOT kernel processes batches of `K` tiles
+//! per call. Rust owns the sparsity structure (gather/scatter across
+//! tiles); the kernel does the dense math.
+
+use crate::partition::Subgraph;
+
+/// One dense tile: rows = source block, cols = destination block.
+#[derive(Debug, Clone)]
+pub struct Tile {
+    pub src_block: u32,
+    pub dst_block: u32,
+    /// Row-major `B×B` values; `data[s*B + d]`.
+    pub data: Vec<f32>,
+}
+
+/// A tiled view of a subgraph's (filtered/weighted) local edges.
+#[derive(Debug, Clone)]
+pub struct Tiling {
+    pub b: usize,
+    pub n_blocks: usize,
+    pub n_vertices: usize,
+    pub tiles: Vec<Tile>,
+}
+
+impl Tiling {
+    /// Build from per-local-edge values; edges with value `fill` are
+    /// treated as absent. For PageRank-style SpMV use `value[pos] = 1.0`
+    /// for active edges and `fill = 0.0`; for min-plus use weights with
+    /// `fill = +inf`.
+    pub fn build(sg: &Subgraph, b: usize, values: &[f32], fill: f32) -> Tiling {
+        assert!(b > 0);
+        let n = sg.n_vertices();
+        let n_blocks = n.div_ceil(b).max(1);
+        let mut tile_index: std::collections::HashMap<(u32, u32), usize> = Default::default();
+        let mut tiles: Vec<Tile> = Vec::new();
+        for v in 0..n as u32 {
+            for (d, pos) in sg.local.out_edges(v) {
+                let val = values[pos as usize];
+                if val == fill || (fill.is_infinite() && val.is_infinite()) {
+                    continue;
+                }
+                let (sb, db) = (v as usize / b, d as usize / b);
+                let key = (sb as u32, db as u32);
+                let idx = *tile_index.entry(key).or_insert_with(|| {
+                    tiles.push(Tile {
+                        src_block: sb as u32,
+                        dst_block: db as u32,
+                        data: vec![fill; b * b],
+                    });
+                    tiles.len() - 1
+                });
+                let (ls, ld) = (v as usize % b, d as usize % b);
+                let cell = &mut tiles[idx].data[ls * b + ld];
+                // Multi-edges: accumulate for SpMV (fill 0), min for min-plus.
+                if fill == 0.0 {
+                    *cell += val;
+                } else {
+                    *cell = cell.min(val);
+                }
+            }
+        }
+        Tiling { b, n_blocks, n_vertices: n, tiles }
+    }
+
+    /// Density diagnostics: (non-empty tiles, total possible tiles).
+    pub fn density(&self) -> (usize, usize) {
+        (self.tiles.len(), self.n_blocks * self.n_blocks)
+    }
+
+    /// Pad a vertex-indexed vector out to `n_blocks * b` (kernel shape).
+    pub fn pad(&self, x: &[f32], fill: f32) -> Vec<f32> {
+        let mut out = vec![fill; self.n_blocks * self.b];
+        out[..x.len()].copy_from_slice(x);
+        out
+    }
+
+    /// Scalar oracle for the SpMV kernel: `y[dst] += sum_src tile[s,d]*x[src]`.
+    pub fn apply_spmv_scalar(&self, x: &[f32], y: &mut [f32]) {
+        let b = self.b;
+        for t in &self.tiles {
+            let xo = t.src_block as usize * b;
+            let yo = t.dst_block as usize * b;
+            for s in 0..b {
+                let xv = if xo + s < x.len() { x[xo + s] } else { 0.0 };
+                if xv == 0.0 {
+                    continue;
+                }
+                for d in 0..b {
+                    if yo + d < y.len() {
+                        y[yo + d] += t.data[s * b + d] * xv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Scalar oracle for the min-plus kernel: one relaxation sweep.
+    /// Returns true if any entry improved.
+    pub fn apply_minplus_scalar(&self, dist: &mut [f32]) -> bool {
+        let b = self.b;
+        let mut improved = false;
+        for t in &self.tiles {
+            let so = t.src_block as usize * b;
+            let do_ = t.dst_block as usize * b;
+            for s in 0..b {
+                let ds = if so + s < dist.len() { dist[so + s] } else { f32::INFINITY };
+                if !ds.is_finite() {
+                    continue;
+                }
+                for d in 0..b {
+                    let w = t.data[s * b + d];
+                    if w.is_finite() && do_ + d < dist.len() {
+                        let cand = ds + w;
+                        if cand < dist[do_ + d] {
+                            dist[do_ + d] = cand;
+                            improved = true;
+                        }
+                    }
+                }
+            }
+        }
+        improved
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Schema, TemplateBuilder};
+    use crate::partition::{extract_partitions, Partitioning};
+
+    fn chain(n: usize) -> Subgraph {
+        let mut bld = TemplateBuilder::new(Schema::new(vec![]), Schema::new(vec![]));
+        for i in 0..n {
+            bld.vertex(i as u64);
+        }
+        for i in 0..n - 1 {
+            bld.edge(i as u32, i as u32 + 1);
+        }
+        let t = bld.build();
+        let p = Partitioning { n_parts: 1, assign: vec![0; n] };
+        extract_partitions(&t, &p).remove(0).subgraphs.remove(0)
+    }
+
+    #[test]
+    fn tiling_matches_scalar_spmv() {
+        let sg = chain(10);
+        let vals = vec![1.0f32; sg.n_local_edges()];
+        let tiling = Tiling::build(&sg, 4, &vals, 0.0);
+        assert_eq!(tiling.n_blocks, 3);
+        let x: Vec<f32> = (0..10).map(|i| i as f32 + 1.0).collect();
+        let xp = tiling.pad(&x, 0.0);
+        let mut y = vec![0.0f32; tiling.n_blocks * 4];
+        tiling.apply_spmv_scalar(&xp, &mut y);
+        // chain: y[v+1] = x[v]
+        for v in 0..9 {
+            assert_eq!(y[v + 1], x[v], "y[{}]", v + 1);
+        }
+        assert_eq!(y[0], 0.0);
+    }
+
+    #[test]
+    fn minplus_tiling_relaxes() {
+        let sg = chain(9);
+        let w = vec![1.5f32; sg.n_local_edges()];
+        let tiling = Tiling::build(&sg, 4, &w, f32::INFINITY);
+        let mut dist = tiling.pad(&vec![f32::INFINITY; 9], f32::INFINITY);
+        dist[0] = 0.0;
+        while tiling.apply_minplus_scalar(&mut dist) {}
+        for v in 0..9 {
+            assert!((dist[v] - 1.5 * v as f32).abs() < 1e-5, "dist[{v}]={}", dist[v]);
+        }
+    }
+
+    #[test]
+    fn only_nonempty_tiles_materialize() {
+        let sg = chain(64);
+        let vals = vec![1.0f32; sg.n_local_edges()];
+        let tiling = Tiling::build(&sg, 8, &vals, 0.0);
+        let (nonempty, total) = tiling.density();
+        // A chain only touches diagonal and super-diagonal blocks.
+        assert!(nonempty <= 2 * tiling.n_blocks);
+        assert_eq!(total, tiling.n_blocks * tiling.n_blocks);
+    }
+
+    #[test]
+    fn inactive_edges_skipped() {
+        let sg = chain(6);
+        let mut vals = vec![1.0f32; sg.n_local_edges()];
+        vals[0] = 0.0; // deactivate one edge
+        let tiling = Tiling::build(&sg, 8, &vals, 0.0);
+        let x = tiling.pad(&vec![1.0; 6], 0.0);
+        let mut y = vec![0.0; 8];
+        tiling.apply_spmv_scalar(&x, &mut y);
+        assert_eq!(y.iter().filter(|&&v| v != 0.0).count(), 4);
+    }
+}

@@ -1,0 +1,176 @@
+//! Benchmark harness (criterion is unavailable offline — DESIGN.md §2.4).
+//!
+//! Benches are `harness = false` binaries that use [`Bencher`] for
+//! timed sections and [`Table`] to print the paper-figure series as
+//! aligned markdown, which EXPERIMENTS.md records verbatim.
+
+use super::stats::Stats;
+use std::time::Instant;
+
+/// Times repeated runs of a closure with warmup, reporting summary stats.
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 1, iters: 5 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bencher { warmup, iters }
+    }
+
+    /// Run `f` `warmup + iters` times; return stats (seconds) over the
+    /// measured iterations.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut stats = Stats::new();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            stats.push(t0.elapsed().as_secs_f64());
+        }
+        println!("bench {name}: {}", stats.summary());
+        stats
+    }
+
+    /// Time a single run (for end-to-end sections where repetition is
+    /// handled by the caller, e.g. one bar per timestep).
+    pub fn once<T>(mut f: impl FnMut() -> T) -> (T, f64) {
+        let t0 = Instant::now();
+        let out = f();
+        (out, t0.elapsed().as_secs_f64())
+    }
+}
+
+/// Markdown table builder for figure/table regeneration output.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            s
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        for r in &self.rows {
+            out.push('\n');
+            out.push_str(&fmt_row(r));
+        }
+        out
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n### {title}\n\n{}\n", self.render());
+    }
+}
+
+/// Parse trailing `--key value` style bench arguments (after cargo bench
+/// passes `--bench`), with defaults.
+pub struct BenchArgs {
+    args: Vec<String>,
+}
+
+impl BenchArgs {
+    pub fn from_env() -> Self {
+        BenchArgs { args: std::env::args().skip(1).filter(|a| a != "--bench").collect() }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        let flag = format!("--{key}");
+        self.args
+            .iter()
+            .position(|a| a == &flag)
+            .and_then(|i| self.args.get(i + 1))
+            .map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        let flag = format!("--{key}");
+        self.args.iter().any(|a| a == &flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned_markdown() {
+        let mut t = Table::new(&["config", "time_s"]);
+        t.row(&["s20-i20-c14".into(), "1.25".into()]);
+        t.row(&["s20-i1-c14".into(), "2.50".into()]);
+        let s = t.render();
+        assert!(s.starts_with("| config"));
+        assert_eq!(s.lines().count(), 4);
+        for line in s.lines() {
+            assert_eq!(line.len(), s.lines().next().unwrap().len());
+        }
+    }
+
+    #[test]
+    fn bencher_measures_positive_times() {
+        let b = Bencher::new(0, 3);
+        let stats = b.bench("noop-ish", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(stats.len(), 3);
+        assert!(stats.min() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,188 @@
+//! Fixed- and log-bucketed histograms.
+//!
+//! Used both by applications (the N-hop latency app folds per-instance
+//! latency histograms in its Merge step) and by the benchmark harness
+//! (Fig. 5 frequency distributions are log-scale histograms).
+
+/// A histogram over `f64` values with uniform buckets in `[lo, hi)` plus
+/// underflow/overflow buckets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, buckets: usize) -> Self {
+        assert!(hi > lo && buckets > 0);
+        Histogram { lo, hi, counts: vec![0; buckets], underflow: 0, overflow: 0 }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.counts.len();
+            let b = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.counts[b.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn bucket_bounds(&self, i: usize) -> (f64, f64) {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (self.lo + w * i as f64, self.lo + w * (i + 1) as f64)
+    }
+
+    /// Pointwise fold of another histogram into this one (the Merge-step
+    /// operation of the eventually-dependent pattern). Shapes must match.
+    pub fn fold(&mut self, other: &Histogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        assert_eq!((self.lo, self.hi), (other.lo, other.hi));
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+    }
+
+    /// Serialize to a compact binary form (for message passing).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 * (self.counts.len() + 4) + 4);
+        out.extend_from_slice(&self.lo.to_le_bytes());
+        out.extend_from_slice(&self.hi.to_le_bytes());
+        out.extend_from_slice(&(self.counts.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.underflow.to_le_bytes());
+        out.extend_from_slice(&self.overflow.to_le_bytes());
+        for c in &self.counts {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Option<Histogram> {
+        let f8 = |i: usize| -> Option<[u8; 8]> { b.get(i..i + 8)?.try_into().ok() };
+        let lo = f64::from_le_bytes(f8(0)?);
+        let hi = f64::from_le_bytes(f8(8)?);
+        let n = u32::from_le_bytes(b.get(16..20)?.try_into().ok()?) as usize;
+        let underflow = u64::from_le_bytes(f8(20)?);
+        let overflow = u64::from_le_bytes(f8(28)?);
+        let mut counts = Vec::with_capacity(n);
+        for i in 0..n {
+            counts.push(u64::from_le_bytes(f8(36 + 8 * i)?));
+        }
+        Some(Histogram { lo, hi, counts, underflow, overflow })
+    }
+}
+
+/// Log2-bucketed frequency count over `u64` values (Fig. 5 style
+/// "frequency distribution, log scale" plots).
+#[derive(Debug, Clone, Default)]
+pub struct LogHistogram {
+    counts: Vec<u64>, // bucket i counts values in [2^i, 2^(i+1))
+    zeros: u64,
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram::default()
+    }
+
+    pub fn record(&mut self, x: u64) {
+        if x == 0 {
+            self.zeros += 1;
+            return;
+        }
+        let b = 63 - x.leading_zeros() as usize;
+        if self.counts.len() <= b {
+            self.counts.resize(b + 1, 0);
+        }
+        self.counts[b] += 1;
+    }
+
+    pub fn zeros(&self) -> u64 {
+        self.zeros
+    }
+
+    /// (bucket_lo, bucket_hi_exclusive, count) rows for reporting.
+    pub fn rows(&self) -> Vec<(u64, u64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (1u64 << i, 1u64 << (i + 1), c))
+            .collect()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.zeros
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_bounds() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.record(-1.0);
+        h.record(0.0);
+        h.record(9.999);
+        h.record(10.0);
+        h.record(5.5);
+        assert_eq!(h.total(), 5);
+        assert_eq!(h.counts()[0], 1);
+        assert_eq!(h.counts()[9], 1);
+        assert_eq!(h.counts()[5], 1);
+        assert_eq!(h.bucket_bounds(5), (5.0, 6.0));
+    }
+
+    #[test]
+    fn fold_adds_counts() {
+        let mut a = Histogram::new(0.0, 4.0, 4);
+        let mut b = Histogram::new(0.0, 4.0, 4);
+        a.record(1.0);
+        b.record(1.5);
+        b.record(3.0);
+        a.fold(&b);
+        assert_eq!(a.counts(), &[0, 2, 0, 1]);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut h = Histogram::new(-2.0, 8.0, 7);
+        for x in [-3.0, -1.0, 0.0, 3.3, 7.9, 100.0] {
+            h.record(x);
+        }
+        let h2 = Histogram::from_bytes(&h.to_bytes()).unwrap();
+        assert_eq!(h, h2);
+    }
+
+    #[test]
+    fn log_histogram_buckets() {
+        let mut h = LogHistogram::new();
+        for x in [0, 1, 2, 3, 4, 7, 8, 1024] {
+            h.record(x);
+        }
+        assert_eq!(h.zeros(), 1);
+        let rows = h.rows();
+        assert_eq!(rows[0], (1, 2, 1)); // {1}
+        assert_eq!(rows[1], (2, 4, 2)); // {2,3}
+        assert_eq!(rows[2], (4, 8, 2)); // {4,7}
+        assert_eq!(rows[3], (8, 16, 1)); // {8}
+        assert_eq!(rows[10], (1024, 2048, 1));
+        assert_eq!(h.total(), 8);
+    }
+}

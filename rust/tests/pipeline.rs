@@ -1,0 +1,115 @@
+//! Whole-pipeline invariants: deployment determinism, config equivalence
+//! (results must not depend on s/i/c layout parameters), and host-count
+//! independence (distribution must not change answers).
+
+use goffish::apps::SsspApp;
+use goffish::cluster::ClusterSpec;
+use goffish::datagen::{traceroute, CollectionSource, TraceRouteGenerator, TraceRouteParams};
+use goffish::gofs::{deploy, open_collection, DeployConfig, DiskModel, StoreOptions};
+use goffish::gopher::{GopherEngine, RunOptions};
+use goffish::metrics::Metrics;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("goffish-pipe-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Run SSSP over a deployment; return distances keyed by external id.
+fn sssp_distances(dir: &PathBuf, n_parts: usize, cache: usize) -> BTreeMap<u64, i64> {
+    let metrics = Arc::new(Metrics::new());
+    let opts =
+        StoreOptions { cache_slots: cache, disk: DiskModel::instant(), metrics: metrics.clone() };
+    let stores = open_collection(dir, &opts).unwrap();
+    let eng = GopherEngine::new(stores, ClusterSpec::new(n_parts), metrics);
+    let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+    let app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
+    eng.run(&app, &RunOptions { timesteps: Some((0..3).collect()), ..Default::default() })
+        .unwrap();
+    let mut out = BTreeMap::new();
+    let distances = app.results.distances.lock().unwrap();
+    for store in eng.stores() {
+        for sg in &store.shared().subgraphs {
+            if let Some((_, d)) = distances.get(&sg.id) {
+                for (lv, &ext) in sg.ext_ids.iter().enumerate() {
+                    // Quantize to compare across runs robustly.
+                    let q = if d[lv].is_finite() { (d[lv] * 100.0).round() as i64 } else { -1 };
+                    out.insert(ext, q);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn results_independent_of_layout_parameters() {
+    let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+    let d1 = tmp("layout-a");
+    let d2 = tmp("layout-b");
+    // Same partitions, different bins/packing.
+    deploy(&gen, &DeployConfig::new(2, 2, 1), &d1).unwrap();
+    deploy(&gen, &DeployConfig::new(2, 5, 6), &d2).unwrap();
+    let r1 = sssp_distances(&d1, 2, 0);
+    let r2 = sssp_distances(&d2, 2, 14);
+    assert_eq!(r1, r2, "layout parameters changed application results");
+    std::fs::remove_dir_all(&d1).unwrap();
+    std::fs::remove_dir_all(&d2).unwrap();
+}
+
+#[test]
+fn results_independent_of_host_count() {
+    let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+    let d1 = tmp("hosts-1");
+    let d4 = tmp("hosts-4");
+    deploy(&gen, &DeployConfig::new(1, 3, 4), &d1).unwrap();
+    deploy(&gen, &DeployConfig::new(4, 3, 4), &d4).unwrap();
+    let r1 = sssp_distances(&d1, 1, 8);
+    let r4 = sssp_distances(&d4, 4, 8);
+    assert_eq!(
+        r1.len(),
+        r4.len(),
+        "different vertex coverage: {} vs {}",
+        r1.len(),
+        r4.len()
+    );
+    assert_eq!(r1, r4, "host count changed application results");
+    std::fs::remove_dir_all(&d1).unwrap();
+    std::fs::remove_dir_all(&d4).unwrap();
+}
+
+#[test]
+fn deployment_is_deterministic() {
+    let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+    let d1 = tmp("det-1");
+    let d2 = tmp("det-2");
+    let r1 = deploy(&gen, &DeployConfig::new(3, 4, 5), &d1).unwrap();
+    let r2 = deploy(&gen, &DeployConfig::new(3, 4, 5), &d2).unwrap();
+    assert_eq!(r1.subgraphs_per_partition, r2.subgraphs_per_partition);
+    assert_eq!(r1.subgraph_sizes, r2.subgraph_sizes);
+    assert_eq!(r1.slices_written, r2.slices_written);
+    assert_eq!(r1.bytes_written, r2.bytes_written);
+    // Byte-identical template slices.
+    let t1 = std::fs::read(d1.join("part-0/template.slice")).unwrap();
+    let t2 = std::fs::read(d2.join("part-0/template.slice")).unwrap();
+    assert_eq!(t1, t2);
+    std::fs::remove_dir_all(&d1).unwrap();
+    std::fs::remove_dir_all(&d2).unwrap();
+}
+
+#[test]
+fn uncompressed_deployment_also_loads() {
+    let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+    let dir = tmp("nocomp");
+    let mut cfg = DeployConfig::new(2, 3, 4);
+    cfg.compress = false;
+    let report = deploy(&gen, &cfg, &dir).unwrap();
+    assert!(report.bytes_written > 0);
+    let r = sssp_distances(&dir, 2, 8);
+    assert_eq!(r.len(), gen.template().n_vertices());
+    std::fs::remove_dir_all(&dir).unwrap();
+}

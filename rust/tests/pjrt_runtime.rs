@@ -1,0 +1,133 @@
+//! Integration: AOT artifacts load, compile and match the scalar oracles.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use goffish::graph::{Schema, TemplateBuilder};
+use goffish::metrics::Metrics;
+use goffish::partition::{extract_partitions, Partitioning, Subgraph};
+use goffish::runtime::pjrt::{PjrtBackend, PjrtEngine, BIG};
+use goffish::runtime::{LocalSpmv, MinPlus, ScalarBackend};
+use goffish::util::Prng;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("GOFFISH_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn engine(prefer_b: Option<usize>) -> Arc<PjrtEngine> {
+    PjrtEngine::load(&artifacts_dir(), prefer_b, Arc::new(Metrics::new()))
+        .expect("run `make artifacts` before cargo test")
+}
+
+/// A random connected-ish subgraph with `n` vertices and ~3n edges.
+fn random_subgraph(n: usize, seed: u64) -> Subgraph {
+    let mut rng = Prng::new(seed);
+    let mut b = TemplateBuilder::new(Schema::new(vec![]), Schema::new(vec![]));
+    for i in 0..n {
+        b.vertex(i as u64);
+    }
+    // Spanning chain keeps it one subgraph.
+    for i in 0..n - 1 {
+        b.edge(i as u32, i as u32 + 1);
+    }
+    for _ in 0..3 * n {
+        let s = rng.gen_range(n as u64) as u32;
+        let d = rng.gen_range(n as u64) as u32;
+        b.edge(s, d);
+    }
+    let t = b.build();
+    let p = Partitioning { n_parts: 1, assign: vec![0; n] };
+    extract_partitions(&t, &p).remove(0).subgraphs.remove(0)
+}
+
+#[test]
+fn pjrt_kernels_match_scalar_backends() {
+    let eng = engine(Some(32));
+    let mut backend = PjrtBackend::new(eng);
+    backend.min_vertices = 0; // force the PJRT path even for small graphs
+    backend.force_tiles = true; // bypass the density guard: we WANT the tile path
+    let scalar = ScalarBackend;
+
+    for (n, seed) in [(50usize, 1u64), (130, 2), (300, 3)] {
+        let sg = random_subgraph(n, seed);
+        let mut rng = Prng::new(seed ^ 0xFF);
+        // --- SpMV ---
+        let active: Vec<bool> =
+            (0..sg.n_local_edges()).map(|_| rng.gen_bool(0.7)).collect();
+        let x: Vec<f32> = (0..n).map(|_| rng.gen_f64() as f32).collect();
+        let op_p = LocalSpmv::prepare(&backend, &sg, &active);
+        let op_s = LocalSpmv::prepare(&scalar, &sg, &active);
+        let mut y_p = vec![0.0f32; n];
+        let mut y_s = vec![0.0f32; n];
+        op_p.apply(&x, &mut y_p);
+        op_s.apply(&x, &mut y_s);
+        for v in 0..n {
+            assert!(
+                (y_p[v] - y_s[v]).abs() <= 1e-4 * (1.0 + y_s[v].abs()),
+                "n={n} spmv mismatch at {v}: pjrt={} scalar={}",
+                y_p[v],
+                y_s[v]
+            );
+        }
+
+        // --- MinPlus ---
+        let weights: Vec<f32> = (0..sg.n_local_edges())
+            .map(|_| if rng.gen_bool(0.8) { 1.0 + rng.gen_f64() as f32 * 9.0 } else { f32::INFINITY })
+            .collect();
+        let mp_p = MinPlus::prepare(&backend, &sg, &weights);
+        let mp_s = MinPlus::prepare(&scalar, &sg, &weights);
+        let mut d_p = vec![f32::INFINITY; n];
+        let mut d_s = vec![f32::INFINITY; n];
+        d_p[0] = 0.0;
+        d_s[0] = 0.0;
+        while mp_p.relax(&mut d_p) {}
+        while mp_s.relax(&mut d_s) {}
+        for v in 0..n {
+            let (a, b) = (d_p[v], d_s[v]);
+            let a = if a >= BIG * 0.5 { f32::INFINITY } else { a };
+            match (a.is_finite(), b.is_finite()) {
+                (true, true) => assert!(
+                    (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+                    "n={n} minplus mismatch at {v}: pjrt={a} scalar={b}"
+                ),
+                (fa, fb) => assert_eq!(fa, fb, "n={n} reachability mismatch at {v}: {a} vs {b}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_engine_reports_kernel_metrics() {
+    let metrics = Arc::new(Metrics::new());
+    let eng = PjrtEngine::load(&artifacts_dir(), Some(32), metrics.clone()).unwrap();
+    let k = eng.k;
+    let b = eng.b;
+    let a = vec![0.0f32; k * b * b];
+    let x = vec![1.0f32; k * b];
+    let out = eng
+        .execute(&format!("pagerank_b{b}_k{k}"), vec![(a, vec![k, b, b]), (x, vec![k, b])])
+        .unwrap();
+    assert_eq!(out.len(), k * b);
+    assert!(out.iter().all(|&v| v == 0.0));
+    assert_eq!(metrics.get(goffish::metrics::keys::KERNEL_CALLS), 1);
+    assert!(metrics.get(goffish::metrics::keys::KERNEL_NS) > 0);
+}
+
+#[test]
+fn pjrt_variant_selection() {
+    let eng = engine(None); // largest available
+    assert!(eng.b >= 64, "expected a large-block variant, got b={}", eng.b);
+    let eng32 = engine(Some(32));
+    assert_eq!(eng32.b, 32);
+    assert!(eng32.specs().iter().any(|s| s.name == "minplus"));
+}
+
+#[test]
+fn unknown_kernel_is_a_clean_error() {
+    let eng = engine(Some(32));
+    let err = eng.execute("nope_b32_k4", vec![]).unwrap_err().to_string();
+    assert!(err.contains("unknown kernel"), "{err}");
+}
