@@ -28,6 +28,9 @@ fn main() {
     // of this reproduction); 28 slots >= bins shows the §V-C effect.
     let configs: Vec<(usize, usize, usize)> = vec![(20, 20, 0), (20, 1, 14), (20, 20, 14), (20, 20, 28)];
     let mut all: Vec<(String, Vec<f64>, f64)> = Vec::new(); // per-ts seconds + template load
+    // (mean load wall, mean overlap) per config — the pipelined-loader
+    // split added to TimestepStats.
+    let mut load_splits: Vec<(String, (f64, f64))> = Vec::new();
 
     for &(bins, pack, cache) in &configs {
         let (dir, _) = deploy_cached(&gen, &scale, bins, pack);
@@ -47,6 +50,14 @@ fn main() {
             .iter()
             .map(|t| t.wall_s + t.sim_disk_ns as f64 / 1e9 + t.sim_net_ns as f64 / 1e9)
             .collect();
+        let n = stats.per_timestep.len() as f64;
+        load_splits.push((
+            cfg_label(bins, pack, cache),
+            (
+                stats.per_timestep.iter().map(|t| t.load_wall_s).sum::<f64>() / n,
+                stats.per_timestep.iter().map(|t| t.overlap_s).sum::<f64>() / n,
+            ),
+        ));
         all.push((cfg_label(bins, pack, cache), per_ts, template_load_s));
     }
 
@@ -74,6 +85,14 @@ fn main() {
         let rest: f64 = per_ts[1..].iter().sum::<f64>() / (per_ts.len() - 1) as f64;
         println!("shape [{label}]: timestep0 = {t0:.3}s vs later mean {rest:.3}s (t0 dominates: {})",
             t0 > rest);
+    }
+    for (label, load) in &load_splits {
+        println!(
+            "load split [{label}]: {:.1} ms load wall/timestep, {:.1} ms overlapped by prefetch, {:.1} ms blocking",
+            load.0 * 1e3,
+            load.1 * 1e3,
+            (load.0 - load.1).max(0.0) * 1e3
+        );
     }
     let t_c0: f64 = all[0].1[1..].iter().sum();
     let t_c14: f64 = all[2].1[1..].iter().sum();

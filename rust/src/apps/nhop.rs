@@ -206,7 +206,8 @@ impl SubgraphProgram for NHopProgram {
             }
         }
         if recorded > 0 {
-            ctx.send_to_merge(hist.to_bytes());
+            ctx.send_to_merge(hist.to_bytes())
+                .expect("NHopApp declares the eventually-dependent pattern");
         }
         ctx.vote_to_halt();
     }

@@ -233,7 +233,8 @@ impl SubgraphProgram for PrStabilityProgram {
                     .u64(ctx.timestep as u64)
                     .f64(mass)
                     .finish(),
-            );
+            )
+            .expect("PrStabilityApp declares the eventually-dependent pattern");
             ctx.vote_to_halt();
         }
     }

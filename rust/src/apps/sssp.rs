@@ -231,7 +231,8 @@ impl SubgraphProgram for SsspProgram {
                         .iter()
                         .map(|&lv| (sg.vertices[lv as usize], self.dist[lv as usize] as f64))
                         .collect();
-                    ctx.send_to_next_timestep(MsgWriter::new().pairs_u32_f64(&pairs).finish());
+                    ctx.send_to_next_timestep(MsgWriter::new().pairs_u32_f64(&pairs).finish())
+                        .expect("SsspApp declares the sequential pattern");
                 }
             }
         }

@@ -170,7 +170,8 @@ impl SubgraphProgram for TrackProgram {
                 for &v in &found {
                     ctx.send_to_next_timestep(
                         MsgWriter::new().u32(sg.vertices[v as usize]).finish(),
-                    );
+                    )
+                    .expect("VehicleTrackApp declares the sequential pattern");
                 }
                 // Also wake neighbors' next instances: the vehicle may have
                 // crossed a partition boundary between windows.
@@ -179,7 +180,8 @@ impl SubgraphProgram for TrackProgram {
                         ctx.send_to_subgraph_in_next_timestep(
                             r.dst_subgraph,
                             MsgWriter::new().u32(r.dst_global).finish(),
-                        );
+                        )
+                        .expect("VehicleTrackApp declares the sequential pattern");
                     }
                 }
             }

@@ -5,23 +5,150 @@
 //! cache size is configurable [at runtime] and the API makes the caching
 //! transparent." Keys are slice identities; values are decoded slices
 //! behind `Arc` so readers keep columns alive across eviction.
+//!
+//! ### Concurrency (pipelined-loader rework)
+//!
+//! The engine's BSP-start loader now decodes subgraph instances from many
+//! worker threads at once (and, under the sequential pattern, prefetches
+//! the next timestep while the current one computes), so this cache is on
+//! a genuinely concurrent path:
+//!
+//! * `load()` runs **outside** the cache lock — a slow disk read/decode
+//!   for one slice never blocks hits or loads of other slices;
+//! * concurrent misses on the **same** key are deduplicated through a
+//!   per-key in-flight table: one thread loads, the rest block on that
+//!   key's condvar and share the decoded `Arc` (a slice is never decoded
+//!   twice concurrently);
+//! * misses on **distinct** keys proceed fully in parallel;
+//! * recency is a doubly-linked LRU list over an index arena, so both the
+//!   hit path and eviction are O(1) (the previous implementation scanned
+//!   all entries with `min_by_key` on every eviction).
 
 use std::collections::HashMap;
 use std::hash::Hash;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
-struct Entry<V> {
+const NIL: usize = usize::MAX;
+
+struct Node<K, V> {
+    key: K,
     value: Arc<V>,
-    /// Monotonic last-use tick.
-    used: u64,
+    prev: usize,
+    next: usize,
+}
+
+/// Doubly-linked LRU list over an index arena (head = most recent).
+struct Lru<K, V> {
+    nodes: Vec<Option<Node<K, V>>>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+}
+
+impl<K, V> Lru<K, V> {
+    fn new() -> Self {
+        Lru { nodes: Vec::new(), free: Vec::new(), head: NIL, tail: NIL }
+    }
+
+    /// Insert at the front; returns the arena slot.
+    fn push_front(&mut self, key: K, value: Arc<V>) -> usize {
+        let slot = self.free.pop().unwrap_or_else(|| {
+            self.nodes.push(None);
+            self.nodes.len() - 1
+        });
+        self.nodes[slot] = Some(Node { key, value, prev: NIL, next: self.head });
+        if self.head != NIL {
+            self.nodes[self.head].as_mut().unwrap().prev = slot;
+        }
+        self.head = slot;
+        if self.tail == NIL {
+            self.tail = slot;
+        }
+        slot
+    }
+
+    /// Detach a node, returning it; its slot goes back on the free list.
+    fn unlink(&mut self, slot: usize) -> Node<K, V> {
+        let node = self.nodes[slot].take().expect("unlink of empty LRU slot");
+        if node.prev == NIL {
+            self.head = node.next;
+        } else {
+            self.nodes[node.prev].as_mut().unwrap().next = node.next;
+        }
+        if node.next == NIL {
+            self.tail = node.prev;
+        } else {
+            self.nodes[node.next].as_mut().unwrap().prev = node.prev;
+        }
+        self.free.push(slot);
+        node
+    }
+
+    /// Move `slot` to the front (most recent) and return its value. The
+    /// node is re-inserted into the same arena slot, so indices held in
+    /// the key map stay valid.
+    fn touch(&mut self, slot: usize) -> Arc<V> {
+        if self.head == slot {
+            return self.nodes[slot].as_ref().unwrap().value.clone();
+        }
+        let node = self.unlink(slot);
+        let value = node.value.clone();
+        let reinserted = self.push_front(node.key, node.value);
+        debug_assert_eq!(reinserted, slot);
+        value
+    }
+
+    /// Remove and return the least-recently-used node.
+    fn pop_lru(&mut self) -> Option<Node<K, V>> {
+        if self.tail == NIL {
+            None
+        } else {
+            Some(self.unlink(self.tail))
+        }
+    }
+
+    fn clear(&mut self) {
+        self.nodes.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+    }
+}
+
+/// State of one in-flight load, shared between the loading thread and any
+/// waiters on the same key.
+enum InflightState<V> {
+    Pending,
+    Ready(Arc<V>),
+    Failed,
+}
+
+struct Inflight<V> {
+    state: Mutex<InflightState<V>>,
+    cv: Condvar,
 }
 
 struct Inner<K, V> {
-    map: HashMap<K, Entry<V>>,
-    tick: u64,
+    /// key -> LRU arena slot.
+    map: HashMap<K, usize>,
+    lru: Lru<K, V>,
+    /// Keys currently being loaded by some thread.
+    inflight: HashMap<K, Arc<Inflight<V>>>,
     hits: u64,
     misses: u64,
     evictions: u64,
+}
+
+/// What a [`SliceCache::get_or_load_traced`] call did — lets callers
+/// mirror cache effectiveness into metrics exactly, without racy
+/// before/after snapshots of the shared counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LoadOutcome {
+    /// Value came from the cache (or from another thread's in-flight
+    /// load) — this call performed no decode.
+    pub hit: bool,
+    /// This call's insert evicted the LRU entry.
+    pub evicted: bool,
 }
 
 /// A thread-safe LRU cache with a fixed number of slots (`0` disables
@@ -37,7 +164,8 @@ impl<K: Eq + Hash + Clone, V> SliceCache<K, V> {
             slots,
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
-                tick: 0,
+                lru: Lru::new(),
+                inflight: HashMap::new(),
                 hits: 0,
                 misses: 0,
                 evictions: 0,
@@ -50,41 +178,115 @@ impl<K: Eq + Hash + Clone, V> SliceCache<K, V> {
     }
 
     /// Look up `key`, or load it with `load` on a miss (caching the result
-    /// unless slots == 0). `load` runs outside the lock is *not* needed at
-    /// this scale; we hold the lock for simplicity and correctness of the
-    /// hit/miss accounting — contention is measured in the perf pass.
+    /// unless slots == 0). See [`SliceCache::get_or_load_traced`] for the
+    /// locking discipline.
     pub fn get_or_load<E>(
         &self,
         key: &K,
         load: impl FnOnce() -> Result<V, E>,
     ) -> Result<Arc<V>, E> {
-        let mut inner = self.inner.lock().unwrap();
-        inner.tick += 1;
-        let tick = inner.tick;
-        if let Some(e) = inner.map.get_mut(key) {
-            e.used = tick;
-            let value = e.value.clone();
-            inner.hits += 1;
-            return Ok(value);
-        }
-        inner.misses += 1;
-        let value = Arc::new(load()?);
-        if self.slots > 0 {
-            if inner.map.len() >= self.slots {
-                // Evict the least-recently-used entry.
-                if let Some(victim) = inner
-                    .map
-                    .iter()
-                    .min_by_key(|(_, e)| e.used)
-                    .map(|(k, _)| k.clone())
-                {
-                    inner.map.remove(&victim);
-                    inner.evictions += 1;
+        self.get_or_load_traced(key, load).map(|(v, _)| v)
+    }
+
+    /// Like [`SliceCache::get_or_load`], also reporting what happened.
+    ///
+    /// `load` always runs with no cache lock held. If another thread is
+    /// already loading the same key, this call blocks on that key's
+    /// condvar and shares the result (`hit` in the outcome); if that
+    /// thread's load fails, one waiter retries as the new loader. Loads of
+    /// distinct keys never wait on each other.
+    pub fn get_or_load_traced<E>(
+        &self,
+        key: &K,
+        load: impl FnOnce() -> Result<V, E>,
+    ) -> Result<(Arc<V>, LoadOutcome), E> {
+        loop {
+            // Fast path / in-flight registration, under the cache lock.
+            let waiter = {
+                let mut inner = self.inner.lock().unwrap();
+                if let Some(&slot) = inner.map.get(key) {
+                    inner.hits += 1;
+                    let value = inner.lru.touch(slot);
+                    return Ok((value, LoadOutcome { hit: true, evicted: false }));
                 }
+                match inner.inflight.get(key) {
+                    Some(w) if self.slots > 0 => w.clone(),
+                    _ => {
+                        inner.misses += 1;
+                        if self.slots > 0 {
+                            inner.inflight.insert(
+                                key.clone(),
+                                Arc::new(Inflight {
+                                    state: Mutex::new(InflightState::Pending),
+                                    cv: Condvar::new(),
+                                }),
+                            );
+                        }
+                        break; // this thread is the loader
+                    }
+                }
+            };
+
+            // Wait for the loading thread, outside the cache lock.
+            let mut state = waiter.state.lock().unwrap();
+            loop {
+                let ready: Option<Arc<V>> = match &*state {
+                    InflightState::Pending => None,
+                    InflightState::Ready(v) => Some(v.clone()),
+                    InflightState::Failed => break,
+                };
+                if let Some(value) = ready {
+                    drop(state);
+                    self.inner.lock().unwrap().hits += 1;
+                    return Ok((value, LoadOutcome { hit: true, evicted: false }));
+                }
+                state = waiter.cv.wait(state).unwrap();
             }
-            inner.map.insert(key.clone(), Entry { value: value.clone(), used: tick });
+            // The loader failed; loop back and race to become the next
+            // loader (or hit a value someone else cached meanwhile).
         }
-        Ok(value)
+
+        // Loader path: run the (possibly slow) load with no lock held. The
+        // guard publishes `Failed` if `load` panics, so waiters never hang.
+        let guard = InflightGuard { cache: self, key, armed: self.slots > 0 };
+        let result = load();
+        match result {
+            Ok(value) => {
+                let value = Arc::new(value);
+                let mut evicted = false;
+                if self.slots > 0 {
+                    let mut inner = self.inner.lock().unwrap();
+                    if inner.map.len() >= self.slots {
+                        if let Some(victim) = inner.lru.pop_lru() {
+                            inner.map.remove(&victim.key);
+                            inner.evictions += 1;
+                            evicted = true;
+                        }
+                    }
+                    let slot = inner.lru.push_front(key.clone(), value.clone());
+                    inner.map.insert(key.clone(), slot);
+                    if let Some(w) = inner.inflight.remove(key) {
+                        *w.state.lock().unwrap() = InflightState::Ready(value.clone());
+                        w.cv.notify_all();
+                    }
+                }
+                guard.disarm();
+                Ok((value, LoadOutcome { hit: false, evicted }))
+            }
+            Err(e) => {
+                drop(guard); // publishes Failed + wakes waiters
+                Err(e)
+            }
+        }
+    }
+
+    /// Mark an in-flight load as failed and wake its waiters.
+    fn fail_inflight(&self, key: &K) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(w) = inner.inflight.remove(key) {
+            *w.state.lock().unwrap() = InflightState::Failed;
+            w.cv.notify_all();
+        }
     }
 
     /// (hits, misses, evictions)
@@ -102,13 +304,41 @@ impl<K: Eq + Hash + Clone, V> SliceCache<K, V> {
     }
 
     pub fn clear(&self) {
-        self.inner.lock().unwrap().map.clear();
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.clear();
+        inner.lru.clear();
+    }
+}
+
+/// Drop guard for the loader: if the load unwinds (or errors) before a
+/// value is published, fail the in-flight entry so waiters retry instead
+/// of blocking forever.
+struct InflightGuard<'a, K: Eq + Hash + Clone, V> {
+    cache: &'a SliceCache<K, V>,
+    key: &'a K,
+    armed: bool,
+}
+
+impl<'a, K: Eq + Hash + Clone, V> InflightGuard<'a, K, V> {
+    fn disarm(mut self) {
+        self.armed = false;
+    }
+}
+
+impl<'a, K: Eq + Hash + Clone, V> Drop for InflightGuard<'a, K, V> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.cache.fail_inflight(self.key);
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc;
+    use std::time::Duration;
 
     fn ok_load(v: u32) -> impl FnOnce() -> Result<u32, std::convert::Infallible> {
         move || Ok(v)
@@ -179,5 +409,134 @@ mod tests {
         let (_, _, e) = c.stats();
         assert_eq!(e, 7);
         assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn traced_outcomes_report_hit_miss_evicted() {
+        let c: SliceCache<u32, u32> = SliceCache::new(1);
+        let (_, o) = c.get_or_load_traced(&1, ok_load(1)).unwrap();
+        assert!(!o.hit && !o.evicted);
+        let (_, o) = c.get_or_load_traced(&1, ok_load(1)).unwrap();
+        assert!(o.hit && !o.evicted);
+        let (_, o) = c.get_or_load_traced(&2, ok_load(2)).unwrap();
+        assert!(!o.hit && o.evicted);
+    }
+
+    /// Tentpole regression: N threads racing on the same key must decode
+    /// exactly once; every thread still observes the value.
+    #[test]
+    fn concurrent_same_key_decodes_once() {
+        let c: Arc<SliceCache<u32, u64>> = Arc::new(SliceCache::new(8));
+        let decodes = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..16 {
+            let c = c.clone();
+            let decodes = decodes.clone();
+            handles.push(std::thread::spawn(move || {
+                let v = c
+                    .get_or_load(&42, || {
+                        decodes.fetch_add(1, Ordering::SeqCst);
+                        // Hold the load open long enough for the other
+                        // threads to pile up on the in-flight entry.
+                        std::thread::sleep(Duration::from_millis(30));
+                        Ok::<_, std::convert::Infallible>(0xBEEFu64)
+                    })
+                    .unwrap();
+                assert_eq!(*v, 0xBEEF);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(decodes.load(Ordering::SeqCst), 1, "same-key loads were not deduplicated");
+        let (h, m, _) = c.stats();
+        assert_eq!(m, 1);
+        assert_eq!(h, 15);
+    }
+
+    /// Tentpole regression: loads of distinct keys must run concurrently —
+    /// each loader signals the other and then waits for the counterpart's
+    /// signal, which deadlocks (-> recv_timeout fails) if the cache still
+    /// serialized loads under one lock.
+    #[test]
+    fn concurrent_distinct_keys_do_not_serialize() {
+        let c: Arc<SliceCache<u32, u32>> = Arc::new(SliceCache::new(8));
+        let (tx_a, rx_a) = mpsc::channel::<()>();
+        let (tx_b, rx_b) = mpsc::channel::<()>();
+
+        let ca = c.clone();
+        let a = std::thread::spawn(move || {
+            ca.get_or_load(&1, || {
+                tx_a.send(()).unwrap(); // "A's load is running"
+                rx_b.recv_timeout(Duration::from_secs(10))
+                    .expect("distinct-key loads serialized: B never started while A held its load");
+                Ok::<_, std::convert::Infallible>(1)
+            })
+            .unwrap();
+        });
+        let cb = c.clone();
+        let b = std::thread::spawn(move || {
+            cb.get_or_load(&2, || {
+                tx_b.send(()).unwrap(); // "B's load is running"
+                rx_a.recv_timeout(Duration::from_secs(10))
+                    .expect("distinct-key loads serialized: A never started while B held its load");
+                Ok::<_, std::convert::Infallible>(2)
+            })
+            .unwrap();
+        });
+        a.join().unwrap();
+        b.join().unwrap();
+        let (_, m, _) = c.stats();
+        assert_eq!(m, 2);
+    }
+
+    /// A failing loader must wake same-key waiters, and one of them must
+    /// take over (total decodes = number of attempts until success).
+    #[test]
+    fn failed_load_hands_off_to_waiter() {
+        let c: Arc<SliceCache<u32, u32>> = Arc::new(SliceCache::new(4));
+        let attempts = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = c.clone();
+            let attempts = attempts.clone();
+            handles.push(std::thread::spawn(move || {
+                let r: Result<Arc<u32>, String> = c.get_or_load(&7, || {
+                    let n = attempts.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(10));
+                    if n == 0 {
+                        Err("first load fails".into())
+                    } else {
+                        Ok(7)
+                    }
+                });
+                r.map(|v| *v)
+            }));
+        }
+        let results: Vec<Result<u32, String>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(results.iter().filter(|r| r.is_err()).count(), 1, "exactly one caller fails");
+        assert!(results.iter().filter_map(|r| r.as_ref().ok()).all(|&v| v == 7));
+        assert!(attempts.load(Ordering::SeqCst) <= 2, "retry stampede");
+    }
+
+    #[test]
+    fn lru_order_is_exact_under_interleaved_touches() {
+        let c: SliceCache<u32, u32> = SliceCache::new(3);
+        for i in 0..3u32 {
+            c.get_or_load(&i, ok_load(i)).unwrap();
+        }
+        // Recency now 2 > 1 > 0; touch 0 -> 0 > 2 > 1; insert 3 evicts 1.
+        c.get_or_load(&0, ok_load(0)).unwrap();
+        c.get_or_load(&3, ok_load(3)).unwrap();
+        let (_, m0, _) = c.stats();
+        c.get_or_load(&0, ok_load(0)).unwrap();
+        c.get_or_load(&2, ok_load(2)).unwrap();
+        c.get_or_load(&3, ok_load(3)).unwrap();
+        let (_, m1, _) = c.stats();
+        assert_eq!(m1, m0, "0/2/3 should all be resident");
+        c.get_or_load(&1, ok_load(1)).unwrap();
+        let (_, m2, _) = c.stats();
+        assert_eq!(m2, m1 + 1, "1 was the LRU victim");
     }
 }

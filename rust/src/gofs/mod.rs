@@ -16,7 +16,13 @@
 //!   partition bounds slice count/size skew; iterators return subgraphs in
 //!   bin-major order.
 //! * **Slice caching** (§V-E): a runtime-configurable LRU cache of decoded
-//!   slices (`c` slots).
+//!   slices (`c` slots). The cache is engineered for the engine's
+//!   pipelined loader (see `gopher::engine` module docs): decodes run
+//!   outside the cache lock with per-key in-flight deduplication, so the
+//!   BSP-start parallel load and the sequential-pattern prefetcher can
+//!   pull many slices concurrently — concurrent readers of distinct
+//!   slices never serialize, concurrent readers of the same slice decode
+//!   it once, and eviction is O(1).
 //!
 //! Layout on disk (one directory per partition/host):
 //! ```text

@@ -70,8 +70,18 @@ struct DecodedAttrSlice {
 }
 
 impl DecodedAttrSlice {
+    /// Column for `(t, pos)`, or `None` when the slice has no value there.
+    ///
+    /// `t` before the group's window (`t < t_lo`) or an out-of-range
+    /// position returns `None` instead of panicking — `(t - self.t_lo)`
+    /// on `usize` used to underflow when a caller asked for a timestep
+    /// before the slice's packed group.
     fn get(&self, t: Timestep, pos: usize) -> Option<Arc<AttrColumn>> {
-        self.cols[(t - self.t_lo) * self.n_pos + pos].clone()
+        if t < self.t_lo || pos >= self.n_pos {
+            return None;
+        }
+        let idx = (t - self.t_lo) * self.n_pos + pos;
+        self.cols.get(idx)?.clone()
     }
 }
 
@@ -325,8 +335,7 @@ impl Store {
             self.shared.edge_schema.attrs[attr].ty
         };
         let t_lo = group * self.meta.pack;
-        let (h0, m0, e0) = self.cache.stats();
-        let decoded = self.cache.get_or_load(&key, || -> Result<DecodedAttrSlice> {
+        let (decoded, outcome) = self.cache.get_or_load_traced(&key, || -> Result<DecodedAttrSlice> {
             let path = self.dir.join(key.rel_path());
             let m = &self.opts.metrics;
             let ((slice, bytes), real_ns) = {
@@ -340,11 +349,19 @@ impl Store {
             m.add(keys::SIM_DISK_NS, self.disk_clock.charge(&self.opts.disk, bytes));
             decode_attr_slice(&slice, ty, t_lo)
         })?;
-        // Mirror cache effectiveness into the shared metrics registry.
-        let (h1, m1, e1) = self.cache.stats();
-        self.opts.metrics.add(keys::CACHE_HITS, h1 - h0);
-        self.opts.metrics.add(keys::CACHE_MISSES, m1 - m0);
-        self.opts.metrics.add(keys::CACHE_EVICTIONS, e1 - e0);
+        // Mirror cache effectiveness into the shared metrics registry from
+        // this call's own outcome. (Diffing the cache's global counters
+        // around the call — as the pre-pipelining code did — double-counts
+        // under the concurrent loader, where many reads are in flight.)
+        let m = &self.opts.metrics;
+        if outcome.hit {
+            m.incr(keys::CACHE_HITS);
+        } else {
+            m.incr(keys::CACHE_MISSES);
+        }
+        if outcome.evicted {
+            m.incr(keys::CACHE_EVICTIONS);
+        }
         Ok(decoded.get(t, pos))
     }
 }
@@ -499,6 +516,34 @@ mod tests {
             disk: DiskModel::instant(),
             metrics: Arc::new(Metrics::new()),
         }
+    }
+
+    /// Regression: asking a decoded slice for a timestep before its packed
+    /// group's window used to underflow `(t - t_lo)` and panic; it must
+    /// simply report "no value".
+    #[test]
+    fn decoded_slice_get_is_total_over_timesteps_and_positions() {
+        let slice = DecodedAttrSlice {
+            t_lo: 4,
+            n_pos: 2,
+            cols: vec![
+                Some(Arc::new(crate::graph::AttrColumn::new())),
+                None,
+                None,
+                Some(Arc::new(crate::graph::AttrColumn::new())),
+            ],
+        };
+        // Before the group window: None, not a panic.
+        assert!(slice.get(0, 0).is_none());
+        assert!(slice.get(3, 1).is_none());
+        // Out-of-range position: None.
+        assert!(slice.get(4, 2).is_none());
+        // Past the packed rows: None.
+        assert!(slice.get(6, 0).is_none());
+        // In range behaves as before.
+        assert!(slice.get(4, 0).is_some());
+        assert!(slice.get(4, 1).is_none());
+        assert!(slice.get(5, 1).is_some());
     }
 
     #[test]

@@ -117,7 +117,7 @@ impl SliceFile {
             data[16..].to_vec()
         };
         if body.len() != len {
-            bail!("slice body length mismatch: header {len}, got {}", body.len());
+            bail!("slice body truncated or corrupt: header says {len} bytes, got {}", body.len());
         }
         if crc32fast::hash(&body) != crc {
             bail!("slice CRC mismatch (corrupt file)");

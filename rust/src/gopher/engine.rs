@@ -18,13 +18,47 @@
 //! Messages to the next timestep are buffered by the driver and delivered
 //! at superstep 1 of timestep t+1; merge messages accumulate across all
 //! timesteps and feed `Application::merge` at the end.
+//!
+//! ### Pipelined instance loading (paper Fig. 7 bottleneck)
+//!
+//! The paper's Fig. 7 shows GoFS load time dominating per-timestep Gopher
+//! runtime — the motivation for §V-C temporal packing. The engine attacks
+//! the same bottleneck at runtime in two ways:
+//!
+//! 1. **Parallel load**: at each BSP start, `read_instance` runs across
+//!    subgraphs on the worker pool instead of serially on the driver
+//!    thread. The [`crate::gofs::SliceCache`] runs its loads outside its
+//!    lock with per-key in-flight dedup, so concurrent readers of
+//!    distinct slices never serialize and shared slices decode once.
+//! 2. **Prefetch (double buffering, sequential pattern)**: while timestep
+//!    `t`'s supersteps run, a background loader reads timestep `t+1`'s
+//!    projected slices. The BSP then starts on warm data; only the part
+//!    of the load that did not fit under the compute window blocks.
+//!
+//! [`TimestepStats`] reports the split: `load_wall_s` is the full wall
+//! time of the load, `overlap_s` the portion hidden under the previous
+//! timestep's compute; `wall_s` only includes the blocking remainder.
+//! `RunOptions { prefetch: false, .. }` restores the unpipelined
+//! behavior (benches compare both).
+//!
+//! ### Message routing
+//!
+//! At each superstep barrier the driver drains every subgraph's outbox,
+//! groups messages per destination subgraph, and delivers each group with
+//! one bulk `extend` (the pre-pipelining engine locked the destination
+//! once per message). Destination *hosts* are resolved through the
+//! engine's directory — `SubgraphId::partition()` encodes the partition
+//! id, which is not necessarily the host index a store was opened under —
+//! so the network model always charges the true (src host, dst host)
+//! pair, and an unknown destination is a clean error.
 
 use crate::cluster::{ClusterSpec, NetworkClock};
 use crate::gofs::{Projection, Store, SubgraphInstance};
 use crate::graph::{SubgraphId, Timestep};
 use crate::gopher::{Application, ComputeCtx, Outbox, Pattern, Payload, SubgraphProgram};
 use crate::metrics::{keys, Metrics};
-use anyhow::{bail, Result};
+use crate::partition::Subgraph;
+use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -39,11 +73,15 @@ pub struct RunOptions {
     pub time_range: Option<(i64, i64)>,
     /// Safety bound on supersteps per timestep.
     pub max_supersteps: usize,
-    /// Worker threads for BSP compute.
+    /// Worker threads for BSP compute and instance loading.
     pub workers: usize,
     /// Concurrent timesteps for the independent/eventually-dependent
     /// patterns ("temporal concurrency", §IV-B).
     pub temporal_workers: usize,
+    /// Load timestep t+1's instances while timestep t computes
+    /// (sequential pattern; see the module docs). Results are identical
+    /// with or without prefetching — only the wall-clock split changes.
+    pub prefetch: bool,
 }
 
 impl Default for RunOptions {
@@ -54,6 +92,7 @@ impl Default for RunOptions {
             max_supersteps: 10_000,
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             temporal_workers: 4,
+            prefetch: true,
         }
     }
 }
@@ -63,7 +102,16 @@ impl Default for RunOptions {
 pub struct TimestepStats {
     pub timestep: Timestep,
     pub supersteps: usize,
+    /// Wall time on the critical path of this timestep: the *blocking*
+    /// part of the instance load plus the BSP supersteps.
     pub wall_s: f64,
+    /// Total wall time the instance load took (including any part that
+    /// ran concurrently with the previous timestep's compute).
+    pub load_wall_s: f64,
+    /// Portion of `load_wall_s` hidden under the previous timestep's
+    /// compute by the prefetcher (0 when prefetching is off or for the
+    /// first timestep).
+    pub overlap_s: f64,
     pub slices_read: u64,
     pub slice_bytes: u64,
     pub cache_hits: u64,
@@ -73,6 +121,13 @@ pub struct TimestepStats {
     pub msg_bytes_remote: u64,
     pub sim_net_ns: u64,
     pub sim_disk_ns: u64,
+}
+
+impl TimestepStats {
+    /// Load wall time on the critical path (`load_wall_s - overlap_s`).
+    pub fn load_blocking_s(&self) -> f64 {
+        (self.load_wall_s - self.overlap_s).max(0.0)
+    }
 }
 
 /// Whole-run result.
@@ -91,6 +146,28 @@ impl RunStats {
     pub fn total_msgs(&self) -> u64 {
         self.per_timestep.iter().map(|t| t.msgs_local + t.msgs_remote).sum()
     }
+
+    /// Total blocking load time across timesteps (what prefetch shrinks).
+    pub fn total_load_blocking_s(&self) -> f64 {
+        self.per_timestep.iter().map(|t| t.load_blocking_s()).sum()
+    }
+}
+
+/// One timestep's instances, loaded ahead of its BSP, plus the GoFS
+/// counters attributed to the load. Counters are measured inside the
+/// loader (loads never overlap each other under the sequential pattern,
+/// and BSP compute touches no GoFS counters, so the attribution is exact
+/// even while a prefetch overlaps compute).
+struct LoadedTimestep {
+    /// (host, subgraph, instance) in (host-major, bin-major) order — the
+    /// deterministic execution and routing order.
+    items: Vec<(usize, Arc<Subgraph>, SubgraphInstance)>,
+    slices_read: u64,
+    slice_bytes: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+    sim_disk_ns: u64,
+    load_wall_s: f64,
 }
 
 /// The distributed Gopher runtime over one deployed collection.
@@ -149,34 +226,76 @@ impl GopherEngine {
 
         match app.pattern() {
             Pattern::Sequential => {
-                // One BSP at a time; cross-timestep mailbox threads through.
+                // One BSP at a time; cross-timestep mailbox threads
+                // through. The double-buffered prefetcher loads t+1's
+                // instances on a scoped thread while t's BSP runs.
                 let mut carry: HashMap<SubgraphId, Vec<Payload>> = HashMap::new();
-                for (i, &t) in timesteps.iter().enumerate() {
-                    let first = i == 0;
-                    let (ts_stats, next) = self.run_timestep(
-                        app,
-                        &proj,
-                        t,
-                        timesteps.len(),
-                        std::mem::take(&mut carry),
-                        first,
-                        opts.workers,
-                        opts.max_supersteps,
-                        &merge_msgs,
-                    )?;
-                    carry = next;
-                    stats.per_timestep.push(ts_stats);
-                    self.metrics.incr(keys::TIMESTEPS);
-                }
+                let proj_ref = &proj;
+                let load_workers = opts.workers;
+                let n_ts = timesteps.len();
+                let result: Result<()> = std::thread::scope(|scope| {
+                    let mut pending = None;
+                    for (i, &t) in timesteps.iter().enumerate() {
+                        let (loaded, overlap_s) = match pending.take() {
+                            Some((pt, handle)) if pt == t => {
+                                let wait0 = Instant::now();
+                                let joined: Result<LoadedTimestep> = match handle.join() {
+                                    Ok(r) => r,
+                                    Err(_) => Err(anyhow!("prefetch loader thread panicked")),
+                                };
+                                let loaded = joined?;
+                                let blocked_s = wait0.elapsed().as_secs_f64();
+                                let overlap_s = (loaded.load_wall_s - blocked_s).max(0.0);
+                                self.metrics.incr(keys::PREFETCHED_TIMESTEPS);
+                                self.metrics
+                                    .add(keys::LOAD_OVERLAP_NS, (overlap_s * 1e9) as u64);
+                                (loaded, overlap_s)
+                            }
+                            _ => (self.load_timestep(t, proj_ref, load_workers)?, 0.0),
+                        };
+                        self.metrics.add(keys::LOAD_NS, (loaded.load_wall_s * 1e9) as u64);
+                        if opts.prefetch {
+                            if let Some(&tn) = timesteps.get(i + 1) {
+                                let engine = self;
+                                pending = Some((
+                                    tn,
+                                    scope.spawn(move || {
+                                        engine.load_timestep(tn, proj_ref, load_workers)
+                                    }),
+                                ));
+                            }
+                        }
+                        let (ts_stats, next) = self.run_timestep(
+                            app,
+                            t,
+                            n_ts,
+                            loaded,
+                            overlap_s,
+                            std::mem::take(&mut carry),
+                            i == 0,
+                            opts.workers,
+                            opts.max_supersteps,
+                            &merge_msgs,
+                        )?;
+                        carry = next;
+                        stats.per_timestep.push(ts_stats);
+                        self.metrics.incr(keys::TIMESTEPS);
+                    }
+                    Ok(())
+                });
+                result?;
             }
             Pattern::Independent | Pattern::EventuallyDependent => {
                 // Temporal concurrency: a pool of timestep workers, each
-                // running a whole BSP (spatial workers divided among them).
+                // loading and running a whole BSP (spatial workers divided
+                // among them).
                 let tw = opts.temporal_workers.max(1).min(timesteps.len());
                 let inner_workers = (opts.workers / tw).max(1);
                 let next_idx = AtomicUsize::new(0);
                 let results: Mutex<Vec<TimestepStats>> = Mutex::new(Vec::new());
                 let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+                let n_ts = timesteps.len();
+                let pattern = app.pattern();
                 std::thread::scope(|scope| {
                     for _ in 0..tw {
                         scope.spawn(|| loop {
@@ -185,19 +304,39 @@ impl GopherEngine {
                                 break;
                             }
                             let t = timesteps[i];
-                            match self.run_timestep(
-                                app,
-                                &proj,
-                                t,
-                                timesteps.len(),
-                                HashMap::new(),
-                                true, // every instance gets app inputs
-                                inner_workers,
-                                opts.max_supersteps,
-                                &merge_msgs,
-                            ) {
-                                Ok((ts_stats, next)) => {
-                                    debug_assert!(next.is_empty());
+                            let run_one = || -> Result<TimestepStats> {
+                                let loaded = self.load_timestep(t, &proj, inner_workers)?;
+                                self.metrics
+                                    .add(keys::LOAD_NS, (loaded.load_wall_s * 1e9) as u64);
+                                let (ts_stats, next) = self.run_timestep(
+                                    app,
+                                    t,
+                                    n_ts,
+                                    loaded,
+                                    0.0,
+                                    HashMap::new(),
+                                    true, // every instance gets app inputs
+                                    inner_workers,
+                                    opts.max_supersteps,
+                                    &merge_msgs,
+                                )?;
+                                // ComputeCtx refuses cross-timestep sends
+                                // under these patterns, so this is a
+                                // should-never-happen backstop — but a hard
+                                // one: silently dropping the mailbox (the
+                                // old debug_assert!) loses messages in
+                                // release builds.
+                                if !next.is_empty() {
+                                    bail!(
+                                        "internal error: {} next-timestep message(s) buffered \
+                                         under the {pattern:?} pattern at timestep {t}",
+                                        next.values().map(Vec::len).sum::<usize>()
+                                    );
+                                }
+                                Ok(ts_stats)
+                            };
+                            match run_one() {
+                                Ok(ts_stats) => {
                                     results.lock().unwrap().push(ts_stats);
                                     self.metrics.incr(keys::TIMESTEPS);
                                 }
@@ -227,15 +366,81 @@ impl GopherEngine {
         Ok(stats)
     }
 
-    /// Run one BSP timestep. Returns its stats and the next-timestep
-    /// mailbox (sequential pattern).
+    /// Load every subgraph's instance for timestep `t`, fanned out over
+    /// `workers` threads (BSP-start parallel load; see module docs).
+    /// Items come back in (host-major, bin-major) order regardless of
+    /// which worker loaded them.
+    fn load_timestep(
+        &self,
+        t: Timestep,
+        proj: &Projection,
+        workers: usize,
+    ) -> Result<LoadedTimestep> {
+        let t0 = Instant::now();
+        let m0 = self.metrics.snapshot();
+        let work: Vec<(usize, Arc<Subgraph>)> = self
+            .stores
+            .iter()
+            .enumerate()
+            .flat_map(|(h, s)| s.subgraphs().into_iter().map(move |sg| (h, sg)))
+            .collect();
+        let n = work.len();
+        let mut slots: Vec<Mutex<Option<Result<SubgraphInstance>>>> = Vec::with_capacity(n);
+        slots.resize_with(n, || Mutex::new(None));
+
+        let workers = workers.max(1).min(n.max(1));
+        if workers <= 1 {
+            for (i, (h, sg)) in work.iter().enumerate() {
+                *slots[i].lock().unwrap() =
+                    Some(self.stores[*h].read_instance(sg.id.local(), t, proj));
+            }
+        } else {
+            let cursor = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    scope.spawn(|| loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let (h, sg) = &work[i];
+                        let r = self.stores[*h].read_instance(sg.id.local(), t, proj);
+                        *slots[i].lock().unwrap() = Some(r);
+                    });
+                }
+            });
+        }
+
+        let mut items = Vec::with_capacity(n);
+        for (slot, (h, sg)) in slots.into_iter().zip(work) {
+            let sgi = slot
+                .into_inner()
+                .unwrap()
+                .expect("loader worker left a slot unfilled")?;
+            items.push((h, sg, sgi));
+        }
+        let d = self.metrics.snapshot().since(&m0);
+        Ok(LoadedTimestep {
+            items,
+            slices_read: d.get(keys::SLICES_READ),
+            slice_bytes: d.get(keys::SLICE_BYTES),
+            cache_hits: d.get(keys::CACHE_HITS),
+            cache_misses: d.get(keys::CACHE_MISSES),
+            sim_disk_ns: d.get(keys::SIM_DISK_NS),
+            load_wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Run one BSP timestep over pre-loaded instances. Returns its stats
+    /// and the next-timestep mailbox (sequential pattern).
     #[allow(clippy::too_many_arguments)]
     fn run_timestep(
         &self,
         app: &dyn Application,
-        proj: &Projection,
         t: Timestep,
         n_timesteps: usize,
+        loaded: LoadedTimestep,
+        overlap_s: f64,
         carry_in: HashMap<SubgraphId, Vec<Payload>>,
         with_inputs: bool,
         workers: usize,
@@ -243,10 +448,18 @@ impl GopherEngine {
         merge_sink: &Mutex<Vec<Payload>>,
     ) -> Result<(TimestepStats, HashMap<SubgraphId, Vec<Payload>>)> {
         let t_start = Instant::now();
-        let m0 = self.metrics.snapshot();
         let net_clock = NetworkClock::default();
+        let LoadedTimestep {
+            items: loaded_items,
+            slices_read,
+            slice_bytes,
+            cache_hits,
+            cache_misses,
+            sim_disk_ns,
+            load_wall_s,
+        } = loaded;
 
-        // --- Load instance data + create programs (BSP start; Fig. 3). ---
+        // --- Create programs over the pre-loaded instances (Fig. 3). ---
         struct Item {
             sgid: SubgraphId,
             host: usize,
@@ -257,36 +470,36 @@ impl GopherEngine {
             outbox: Outbox,
         }
         // Items in (host-major, bin-major) order — the execution and
-        // message-routing order is deterministic.
-        let mut items: Vec<Mutex<Item>> = Vec::with_capacity(self.n_subgraphs());
-        let mut index_of: HashMap<SubgraphId, usize> = HashMap::new();
-        for (h, store) in self.stores.iter().enumerate() {
-            for sg in store.subgraphs() {
-                let sgi = store.read_instance(sg.id.local(), t, proj)?;
-                let program = app.create(&sg);
-                let mut inbox = Vec::new();
-                if with_inputs {
-                    inbox.extend(app.initial_messages(&sg, t));
-                }
-                if let Some(c) = carry_in.get(&sg.id) {
-                    inbox.extend(c.iter().cloned());
-                }
-                index_of.insert(sg.id, items.len());
-                items.push(Mutex::new(Item {
-                    sgid: sg.id,
-                    host: h,
-                    program,
-                    sgi,
-                    halted: false,
-                    inbox,
-                    outbox: Outbox::default(),
-                }));
+        // message-routing order is deterministic. `index_of` carries the
+        // destination host alongside the item index so routing resolves
+        // both with one lookup.
+        let mut items: Vec<Mutex<Item>> = Vec::with_capacity(loaded_items.len());
+        let mut index_of: HashMap<SubgraphId, (usize, usize)> = HashMap::new();
+        for (h, sg, sgi) in loaded_items {
+            let program = app.create(&sg);
+            let mut inbox = Vec::new();
+            if with_inputs {
+                inbox.extend(app.initial_messages(&sg, t));
             }
+            if let Some(c) = carry_in.get(&sg.id) {
+                inbox.extend(c.iter().cloned());
+            }
+            index_of.insert(sg.id, (items.len(), h));
+            items.push(Mutex::new(Item {
+                sgid: sg.id,
+                host: h,
+                program,
+                sgi,
+                halted: false,
+                inbox,
+                outbox: Outbox::default(),
+            }));
         }
 
         let pattern = app.pattern();
         let mut supersteps = 0usize;
         let mut carry_out: HashMap<SubgraphId, Vec<Payload>> = HashMap::new();
+        let (mut ts_msgs_local, mut ts_msgs_remote, mut ts_msg_bytes_remote) = (0u64, 0u64, 0u64);
 
         for superstep in 1..=max_supersteps {
             supersteps = superstep;
@@ -323,36 +536,49 @@ impl GopherEngine {
             });
             self.metrics.incr(keys::SUPERSTEPS);
 
-            // --- Barrier: route messages in bulk (deterministic order). ---
-            let mut any_inflight = false;
+            // --- Barrier: drain outboxes (single-threaded; `get_mut`
+            // needs no lock), surface pattern violations, then route
+            // messages grouped per destination subgraph. ---
             let mut all_halted = true;
+            let mut staged: Vec<(usize, Outbox)> = Vec::with_capacity(items.len());
+            for item in items.iter_mut() {
+                let it = item.get_mut().unwrap();
+                if !it.halted {
+                    all_halted = false;
+                }
+                staged.push((it.host, std::mem::take(&mut it.outbox)));
+            }
+            for (_, outbox) in staged.iter_mut() {
+                if let Some(msg) = outbox.error.take() {
+                    bail!("timestep {t}, superstep {superstep}: {msg}");
+                }
+            }
+
+            let mut any_inflight = false;
             // (src host, dst host) -> (n msgs, bytes) for the net model.
             let mut batches: HashMap<(usize, usize), (u64, u64)> = HashMap::new();
             let mut merge_local: Vec<Payload> = Vec::new();
-            for i in 0..items.len() {
-                let mut item = items[i].lock().unwrap();
-                let host = item.host;
-                let halted = item.halted;
-                let outbox = std::mem::take(&mut item.outbox);
-                drop(item);
-                if !halted {
-                    all_halted = false;
-                }
+            // Per-destination-subgraph message groups, filled in source
+            // order so delivery order stays deterministic.
+            let mut grouped: Vec<Vec<Payload>> = (0..items.len()).map(|_| Vec::new()).collect();
+            for (src_host, outbox) in staged {
                 for (to, payload) in outbox.superstep {
-                    let &target = index_of
+                    // The destination HOST comes from the engine's view of
+                    // where the subgraph actually lives, never from
+                    // `to.partition()` — see module docs.
+                    let &(target, dst_host) = index_of
                         .get(&to)
-                        .ok_or_else(|| anyhow::anyhow!("message to unknown subgraph {to}"))?;
-                    let dst_host = to.partition();
-                    if dst_host == host {
-                        self.metrics.incr(keys::MSGS_LOCAL);
+                        .ok_or_else(|| anyhow!("message to unknown subgraph {to}"))?;
+                    if dst_host == src_host {
+                        ts_msgs_local += 1;
                     } else {
-                        self.metrics.incr(keys::MSGS_REMOTE);
-                        self.metrics.add(keys::MSG_BYTES_REMOTE, payload.len() as u64);
-                        let b = batches.entry((host, dst_host)).or_insert((0, 0));
+                        ts_msgs_remote += 1;
+                        ts_msg_bytes_remote += payload.len() as u64;
+                        let b = batches.entry((src_host, dst_host)).or_insert((0, 0));
                         b.0 += 1;
                         b.1 += payload.len() as u64;
                     }
-                    items[target].lock().unwrap().inbox.push(payload);
+                    grouped[target].push(payload);
                     any_inflight = true;
                 }
                 for (to, payload) in outbox.next_timestep {
@@ -360,6 +586,12 @@ impl GopherEngine {
                 }
                 if !outbox.merge.is_empty() {
                     merge_local.extend(outbox.merge);
+                }
+            }
+            // Deliver each group with one bulk extend per destination.
+            for (target, msgs) in grouped.into_iter().enumerate() {
+                if !msgs.is_empty() {
+                    items[target].get_mut().unwrap().inbox.extend(msgs);
                 }
             }
             if !merge_local.is_empty() {
@@ -377,20 +609,29 @@ impl GopherEngine {
             }
         }
 
-        let d = self.metrics.snapshot().since(&m0);
+        // Flush this timestep's message counters to the global registry in
+        // bulk (exact per-timestep attribution even under temporal
+        // concurrency, where the old snapshot-diff approach mixed
+        // concurrent timesteps' counts).
+        self.metrics.add(keys::MSGS_LOCAL, ts_msgs_local);
+        self.metrics.add(keys::MSGS_REMOTE, ts_msgs_remote);
+        self.metrics.add(keys::MSG_BYTES_REMOTE, ts_msg_bytes_remote);
+
         let stats = TimestepStats {
             timestep: t,
             supersteps,
-            wall_s: t_start.elapsed().as_secs_f64(),
-            slices_read: d.get(keys::SLICES_READ),
-            slice_bytes: d.get(keys::SLICE_BYTES),
-            cache_hits: d.get(keys::CACHE_HITS),
-            cache_misses: d.get(keys::CACHE_MISSES),
-            msgs_local: d.get(keys::MSGS_LOCAL),
-            msgs_remote: d.get(keys::MSGS_REMOTE),
-            msg_bytes_remote: d.get(keys::MSG_BYTES_REMOTE),
+            wall_s: (load_wall_s - overlap_s).max(0.0) + t_start.elapsed().as_secs_f64(),
+            load_wall_s,
+            overlap_s,
+            slices_read,
+            slice_bytes,
+            cache_hits,
+            cache_misses,
+            msgs_local: ts_msgs_local,
+            msgs_remote: ts_msgs_remote,
+            msg_bytes_remote: ts_msg_bytes_remote,
             sim_net_ns: net_clock.total_ns(),
-            sim_disk_ns: d.get(keys::SIM_DISK_NS),
+            sim_disk_ns,
         };
         Ok((stats, carry_out))
     }
@@ -550,7 +791,7 @@ mod tests {
                 .unwrap_or(0);
             self.seen.lock().unwrap().push((ctx.timestep, prev));
             if ctx.timestep + 1 < ctx.n_timesteps {
-                ctx.send_to_next_timestep((prev + 1).to_le_bytes().to_vec());
+                ctx.send_to_next_timestep((prev + 1).to_le_bytes().to_vec()).unwrap();
             }
             ctx.vote_to_halt();
         }
@@ -571,17 +812,88 @@ mod tests {
         }
     }
 
-    #[test]
-    fn state_flows_across_timesteps() {
-        let (eng, dir) = engine("carry");
+    fn assert_carry_monotone(eng: &GopherEngine, opts: &RunOptions) {
         let seen = Arc::new(Mutex::new(Vec::new()));
         let app = CarryApp { seen: seen.clone() };
-        eng.run(&app, &RunOptions::default()).unwrap();
+        eng.run(&app, opts).unwrap();
         let seen = seen.lock().unwrap();
         // At timestep t every subgraph must have received counter == t.
         for &(t, v) in seen.iter() {
             assert_eq!(v as usize, t, "timestep {t} carried {v}");
         }
+    }
+
+    #[test]
+    fn state_flows_across_timesteps() {
+        let (eng, dir) = engine("carry");
+        assert_carry_monotone(&eng, &RunOptions::default());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Same invariant with the prefetcher disabled: the pipeline must not
+    /// change delivery semantics in either mode.
+    #[test]
+    fn state_flows_across_timesteps_without_prefetch() {
+        let (eng, dir) = engine("carry-noprefetch");
+        assert_carry_monotone(&eng, &RunOptions { prefetch: false, ..Default::default() });
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Release-build regression for the silent-drop bug: under the
+    /// independent pattern `send_to_next_timestep` must (a) return an
+    /// error to the caller at send time and (b) fail the whole run — it
+    /// must never buffer a message into a mailbox that is then quietly
+    /// discarded. This test is assertion-free at the engine layer, so it
+    /// proves the behavior in `--release` (where `debug_assert!` — the
+    /// old "protection" — compiles out) as well as in debug builds.
+    struct RogueSendApp {
+        send_results: Arc<Mutex<Vec<bool>>>,
+    }
+
+    struct RogueSendProgram {
+        send_results: Arc<Mutex<Vec<bool>>>,
+    }
+
+    impl SubgraphProgram for RogueSendProgram {
+        fn compute(&mut self, ctx: &mut ComputeCtx<'_>, _sgi: &crate::gofs::SubgraphInstance, _msgs: &[Payload]) {
+            let r = ctx.send_to_next_timestep(vec![1, 2, 3]);
+            self.send_results.lock().unwrap().push(r.is_err());
+            ctx.vote_to_halt();
+        }
+    }
+
+    impl Application for RogueSendApp {
+        fn name(&self) -> &str {
+            "rogue-send"
+        }
+        fn pattern(&self) -> Pattern {
+            Pattern::Independent
+        }
+        fn projection(&self, _: &Schema, _: &Schema) -> Projection {
+            Projection::none()
+        }
+        fn create(&self, _sg: &Subgraph) -> Box<dyn SubgraphProgram> {
+            Box::new(RogueSendProgram { send_results: self.send_results.clone() })
+        }
+    }
+
+    #[test]
+    fn next_timestep_send_under_independent_fails_the_run() {
+        let (eng, dir) = engine("rogue");
+        let send_results = Arc::new(Mutex::new(Vec::new()));
+        let app = RogueSendApp { send_results: send_results.clone() };
+        let err = eng
+            .run(&app, &RunOptions { timesteps: Some(vec![0, 1]), ..Default::default() })
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("Sequential") && msg.contains("Independent"),
+            "error should name both patterns: {msg}"
+        );
+        // Every program that got to send observed a hard Err.
+        let results = send_results.lock().unwrap();
+        assert!(!results.is_empty());
+        assert!(results.iter().all(|&is_err| is_err), "some send silently succeeded");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -594,7 +906,7 @@ mod tests {
 
     impl SubgraphProgram for MergeProgram {
         fn compute(&mut self, ctx: &mut ComputeCtx<'_>, sgi: &crate::gofs::SubgraphInstance, _msgs: &[Payload]) {
-            ctx.send_to_merge((sgi.sg.n_vertices() as u64).to_le_bytes().to_vec());
+            ctx.send_to_merge((sgi.sg.n_vertices() as u64).to_le_bytes().to_vec()).unwrap();
             ctx.vote_to_halt();
         }
     }
@@ -644,6 +956,31 @@ mod tests {
             )
             .unwrap();
         assert_eq!(stats.per_timestep.len(), 2); // two 2h windows
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// The prefetch pipeline accounts load time coherently: overlap never
+    /// exceeds the measured load wall time, and every timestep reports a
+    /// load split.
+    #[test]
+    fn load_split_is_reported_and_bounded() {
+        let (eng, dir) = engine("load-split");
+        let inv = Arc::new(Mutex::new(Vec::new()));
+        let app = CountApp { pattern: Pattern::Sequential, invocations: inv };
+        let stats = eng.run(&app, &RunOptions::default()).unwrap();
+        for ts in &stats.per_timestep {
+            assert!(ts.load_wall_s >= 0.0);
+            assert!(ts.overlap_s >= 0.0);
+            assert!(
+                ts.overlap_s <= ts.load_wall_s + 1e-9,
+                "overlap {} > load wall {}",
+                ts.overlap_s,
+                ts.load_wall_s
+            );
+            assert!(ts.load_blocking_s() >= 0.0);
+        }
+        // Timestep 0 can never overlap (nothing to hide it under).
+        assert_eq!(stats.per_timestep[0].overlap_s, 0.0);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

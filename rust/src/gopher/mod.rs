@@ -19,6 +19,7 @@ pub use messages::{MsgReader, MsgWriter};
 use crate::gofs::{Projection, SubgraphInstance};
 use crate::graph::{Schema, SubgraphId, Timestep};
 use crate::partition::Subgraph;
+use anyhow::Result;
 
 /// Message payload. Gopher treats payloads as opaque bytes — exactly what
 /// would cross the wire on a real deployment — so the network model can
@@ -66,36 +67,57 @@ impl<'a> ComputeCtx<'a> {
         self.outbox.superstep.push((to, data));
     }
 
-    /// `SendToNextTimeStep`: deliver to the *same* subgraph at superstep 1
-    /// of the next timestep (sequential pattern only — §IV-B).
-    pub fn send_to_next_timestep(&mut self, data: Payload) {
-        assert_eq!(
-            self.pattern,
-            Pattern::Sequential,
-            "send_to_next_timestep requires the sequentially-dependent pattern"
+    /// Record a pattern violation: the send returns `Err` to the caller
+    /// AND the engine fails the timestep after the compute phase, so the
+    /// message can never be silently dropped even if the application
+    /// ignores the `Result`. (These used to be `assert!`s; the engine
+    /// additionally only `debug_assert!`ed that the non-sequential
+    /// patterns produced no next-timestep messages, which in release
+    /// builds dropped them on the floor.)
+    fn pattern_violation(&mut self, what: &str, needs: Pattern) -> anyhow::Error {
+        let msg = format!(
+            "{what} requires the {needs:?} pattern, but the application declared {:?} \
+             (subgraph {}, timestep {}, superstep {})",
+            self.pattern, self.sgid, self.timestep, self.superstep
         );
-        self.outbox.next_timestep.push((self.sgid, data));
+        if self.outbox.error.is_none() {
+            self.outbox.error = Some(msg.clone());
+        }
+        anyhow::Error::msg(msg)
     }
 
-    /// `SendToSubgraphInNextTimeStep` (§IV-B).
-    pub fn send_to_subgraph_in_next_timestep(&mut self, to: SubgraphId, data: Payload) {
-        assert_eq!(
-            self.pattern,
-            Pattern::Sequential,
-            "send_to_subgraph_in_next_timestep requires the sequentially-dependent pattern"
-        );
+    /// `SendToNextTimeStep`: deliver to the *same* subgraph at superstep 1
+    /// of the next timestep (sequential pattern only — §IV-B). Under any
+    /// other pattern there is no next BSP to deliver into, so the send is
+    /// a hard error (and the engine fails the run).
+    pub fn send_to_next_timestep(&mut self, data: Payload) -> Result<()> {
+        let me = self.sgid;
+        self.push_next_timestep("send_to_next_timestep", me, data)
+    }
+
+    /// `SendToSubgraphInNextTimeStep` (§IV-B). Sequential pattern only;
+    /// see [`ComputeCtx::send_to_next_timestep`].
+    pub fn send_to_subgraph_in_next_timestep(&mut self, to: SubgraphId, data: Payload) -> Result<()> {
+        self.push_next_timestep("send_to_subgraph_in_next_timestep", to, data)
+    }
+
+    fn push_next_timestep(&mut self, what: &str, to: SubgraphId, data: Payload) -> Result<()> {
+        if self.pattern != Pattern::Sequential {
+            return Err(self.pattern_violation(what, Pattern::Sequential));
+        }
         self.outbox.next_timestep.push((to, data));
+        Ok(())
     }
 
     /// `SendMessageToMerge`: available from any timestep in the
-    /// eventually-dependent pattern (§IV-B).
-    pub fn send_to_merge(&mut self, data: Payload) {
-        assert_eq!(
-            self.pattern,
-            Pattern::EventuallyDependent,
-            "send_to_merge requires the eventually-dependent pattern"
-        );
+    /// eventually-dependent pattern (§IV-B). Under any other pattern no
+    /// Merge step will run, so the send is a hard error.
+    pub fn send_to_merge(&mut self, data: Payload) -> Result<()> {
+        if self.pattern != Pattern::EventuallyDependent {
+            return Err(self.pattern_violation("send_to_merge", Pattern::EventuallyDependent));
+        }
         self.outbox.merge.push(data);
+        Ok(())
     }
 
     /// `VoteToHalt`: this subgraph is done for this BSP unless reactivated
@@ -111,6 +133,9 @@ pub struct Outbox {
     pub superstep: Vec<(SubgraphId, Payload)>,
     pub next_timestep: Vec<(SubgraphId, Payload)>,
     pub merge: Vec<Payload>,
+    /// First pattern violation raised through this outbox's [`ComputeCtx`];
+    /// the engine turns it into a run-level error at the superstep barrier.
+    pub(crate) error: Option<String>,
 }
 
 /// User logic for one subgraph within one BSP timestep. A fresh program is
@@ -163,17 +188,17 @@ mod tests {
         };
         assert!(ctx.is_start());
         ctx.send_to_subgraph(SubgraphId::new(1, 0), vec![1]);
-        ctx.send_to_next_timestep(vec![2]);
-        ctx.send_to_subgraph_in_next_timestep(SubgraphId::new(1, 1), vec![3]);
+        ctx.send_to_next_timestep(vec![2]).unwrap();
+        ctx.send_to_subgraph_in_next_timestep(SubgraphId::new(1, 1), vec![3]).unwrap();
         ctx.vote_to_halt();
         assert!(halted);
         assert_eq!(outbox.superstep.len(), 1);
         assert_eq!(outbox.next_timestep.len(), 2);
         assert_eq!(outbox.next_timestep[0].0, SubgraphId::new(0, 0));
+        assert!(outbox.error.is_none());
     }
 
     #[test]
-    #[should_panic]
     fn merge_send_requires_eventually_dependent() {
         let mut outbox = Outbox::default();
         let mut halted = false;
@@ -186,6 +211,35 @@ mod tests {
             outbox: &mut outbox,
             halted: &mut halted,
         };
-        ctx.send_to_merge(vec![]);
+        let err = ctx.send_to_merge(vec![]).unwrap_err();
+        assert!(err.to_string().contains("EventuallyDependent"), "{err}");
+        // The violation is also recorded for the engine to surface, so the
+        // message cannot be silently dropped when callers ignore the Result.
+        assert!(outbox.error.is_some());
+        assert!(outbox.merge.is_empty());
+    }
+
+    /// The drop-prone case from the release-build bug: under the
+    /// independent pattern, cross-timestep sends must be rejected at send
+    /// time with an error, not buffered into a mailbox nobody delivers.
+    #[test]
+    fn next_timestep_send_requires_sequential() {
+        let mut outbox = Outbox::default();
+        let mut halted = false;
+        let mut ctx = ComputeCtx {
+            sgid: SubgraphId::new(2, 5),
+            timestep: 3,
+            superstep: 2,
+            n_timesteps: 8,
+            pattern: Pattern::Independent,
+            outbox: &mut outbox,
+            halted: &mut halted,
+        };
+        let err = ctx.send_to_next_timestep(vec![9]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("Sequential") && msg.contains("Independent"), "{msg}");
+        assert!(msg.contains("sg2:5"), "{msg}");
+        assert!(outbox.next_timestep.is_empty(), "message must not be buffered");
+        assert!(outbox.error.is_some());
     }
 }

@@ -24,6 +24,13 @@ pub mod keys {
     pub const MSG_BYTES_REMOTE: &str = "gopher.msg_bytes_remote";
     pub const SUPERSTEPS: &str = "gopher.supersteps";
     pub const TIMESTEPS: &str = "gopher.timesteps";
+    /// Wall nanoseconds spent loading subgraph instances at BSP starts.
+    pub const LOAD_NS: &str = "gopher.load_ns";
+    /// Portion of `LOAD_NS` that overlapped the previous timestep's
+    /// compute (sequential-pattern prefetcher).
+    pub const LOAD_OVERLAP_NS: &str = "gopher.load_overlap_ns";
+    /// Timesteps whose instances were prefetched before their BSP began.
+    pub const PREFETCHED_TIMESTEPS: &str = "gopher.prefetched_timesteps";
     pub const SIM_NET_NS: &str = "cluster.sim_net_ns";
     pub const KERNEL_CALLS: &str = "runtime.kernel_calls";
     pub const KERNEL_NS: &str = "runtime.kernel_ns";

@@ -2,7 +2,7 @@
 //! results must not depend on worker counts, temporal parallelism, or
 //! cache configuration — only on the data and the algorithm.
 
-use goffish::apps::{NHopApp, PageRankApp};
+use goffish::apps::{NHopApp, PageRankApp, SsspApp};
 use goffish::cluster::ClusterSpec;
 use goffish::datagen::{traceroute, CollectionSource, TraceRouteGenerator, TraceRouteParams};
 use goffish::gofs::{deploy, open_collection, DeployConfig, DiskModel, StoreOptions};
@@ -91,6 +91,61 @@ fn nhop_composite_invariant_to_temporal_parallelism() {
         })
         .collect();
     assert_eq!(totals[0], totals[1], "temporal parallelism changed merge result");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Quantized final SSSP distances keyed (subgraph, local vertex) — the
+/// sequential pattern exercises the cross-timestep carry that the
+/// prefetcher pipelines around.
+fn sssp_fingerprint(eng: &GopherEngine, gen: &TraceRouteGenerator, opts: &RunOptions) -> Vec<(u64, u32, i64)> {
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+    let app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
+    eng.run(&app, opts).unwrap();
+    let distances = app.results.distances.lock().unwrap();
+    let mut out: Vec<(u64, u32, i64)> = distances
+        .iter()
+        .flat_map(|(sgid, (_, d))| {
+            d.iter().enumerate().map(move |(lv, &x)| {
+                let q = if x.is_finite() { (x as f64 * 1e6).round() as i64 } else { -1 };
+                (sgid.0, lv as u32, q)
+            })
+        })
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+/// Loading timestep t+1 while t computes must not change any result —
+/// prefetching only moves work earlier in wall-clock, never reorders
+/// message delivery or carried state.
+#[test]
+fn prefetching_does_not_change_sequential_results() {
+    let (gen, dir) = deployed("prefetch");
+    let base = RunOptions { timesteps: Some((0..6).collect()), ..Default::default() };
+    let with = sssp_fingerprint(
+        &engine(&dir),
+        &gen,
+        &RunOptions { prefetch: true, ..base.clone() },
+    );
+    let without = sssp_fingerprint(
+        &engine(&dir),
+        &gen,
+        &RunOptions { prefetch: false, workers: 1, ..base.clone() },
+    );
+    assert!(!with.is_empty());
+    assert_eq!(with, without, "prefetch/parallel load changed SSSP results");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Prefetching must also leave the independent-pattern merge/fingerprint
+/// machinery untouched (it only engages for the sequential pattern).
+#[test]
+fn prefetch_flag_is_inert_for_independent_pattern() {
+    let (gen, dir) = deployed("prefetch-ind");
+    let base = RunOptions { timesteps: Some(vec![0, 1, 2]), ..Default::default() };
+    let a = pagerank_fingerprint(&engine(&dir), &gen, &RunOptions { prefetch: true, ..base.clone() });
+    let b = pagerank_fingerprint(&engine(&dir), &gen, &RunOptions { prefetch: false, ..base.clone() });
+    assert_eq!(a, b);
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

@@ -1,6 +1,10 @@
 //! Integration: AOT artifacts load, compile and match the scalar oracles.
 //!
-//! Requires `make artifacts` (the Makefile test target guarantees it).
+//! Requires AOT artifacts (`python/compile/aot.py` writes
+//! `artifacts/manifest.txt` + per-kernel HLO files). When they have not
+//! been generated — the common case on machines without the Python
+//! toolchain — these tests SKIP (pass vacuously with a note on stderr)
+//! rather than failing `cargo test` for an optional backend.
 
 use goffish::graph::{Schema, TemplateBuilder};
 use goffish::metrics::Metrics;
@@ -17,9 +21,29 @@ fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
 }
 
-fn engine(prefer_b: Option<usize>) -> Arc<PjrtEngine> {
-    PjrtEngine::load(&artifacts_dir(), prefer_b, Arc::new(Metrics::new()))
-        .expect("run `make artifacts` before cargo test")
+/// Cheap skip check: have the AOT artifacts been generated?
+fn artifacts_present() -> bool {
+    let dir = artifacts_dir();
+    let present = dir.join("manifest.txt").exists();
+    if !present {
+        eprintln!(
+            "skipping PJRT test: no artifacts at {} (generate with python/compile/aot.py)",
+            dir.display()
+        );
+    }
+    present
+}
+
+/// `None` (skip) when the artifacts are absent; panic on any *other*
+/// load failure — a present-but-broken artifacts dir is a real bug.
+fn engine(prefer_b: Option<usize>) -> Option<Arc<PjrtEngine>> {
+    if !artifacts_present() {
+        return None;
+    }
+    Some(
+        PjrtEngine::load(&artifacts_dir(), prefer_b, Arc::new(Metrics::new()))
+            .expect("artifacts present but failed to load"),
+    )
 }
 
 /// A random connected-ish subgraph with `n` vertices and ~3n edges.
@@ -45,7 +69,7 @@ fn random_subgraph(n: usize, seed: u64) -> Subgraph {
 
 #[test]
 fn pjrt_kernels_match_scalar_backends() {
-    let eng = engine(Some(32));
+    let Some(eng) = engine(Some(32)) else { return };
     let mut backend = PjrtBackend::new(eng);
     backend.min_vertices = 0; // force the PJRT path even for small graphs
     backend.force_tiles = true; // bypass the density guard: we WANT the tile path
@@ -101,6 +125,9 @@ fn pjrt_kernels_match_scalar_backends() {
 
 #[test]
 fn pjrt_engine_reports_kernel_metrics() {
+    if !artifacts_present() {
+        return;
+    }
     let metrics = Arc::new(Metrics::new());
     let eng = PjrtEngine::load(&artifacts_dir(), Some(32), metrics.clone()).unwrap();
     let k = eng.k;
@@ -118,16 +145,16 @@ fn pjrt_engine_reports_kernel_metrics() {
 
 #[test]
 fn pjrt_variant_selection() {
-    let eng = engine(None); // largest available
+    let Some(eng) = engine(None) else { return }; // largest available
     assert!(eng.b >= 64, "expected a large-block variant, got b={}", eng.b);
-    let eng32 = engine(Some(32));
+    let eng32 = engine(Some(32)).unwrap();
     assert_eq!(eng32.b, 32);
     assert!(eng32.specs().iter().any(|s| s.name == "minplus"));
 }
 
 #[test]
 fn unknown_kernel_is_a_clean_error() {
-    let eng = engine(Some(32));
+    let Some(eng) = engine(Some(32)) else { return };
     let err = eng.execute("nope_b32_k4", vec![]).unwrap_err().to_string();
     assert!(err.contains("unknown kernel"), "{err}");
 }

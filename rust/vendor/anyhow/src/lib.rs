@@ -1,0 +1,234 @@
+//! Offline, API-compatible subset of the `anyhow` crate.
+//!
+//! This image has no crates.io access (see DESIGN.md §2.4), so the few
+//! ecosystem crates the repo depends on are vendored as minimal
+//! implementations under `rust/vendor/`. This one covers the surface the
+//! codebase uses: [`Error`], [`Result`], the [`anyhow!`]/[`bail!`]/
+//! [`ensure!`] macros, and the [`Context`] extension trait for `Result`
+//! and `Option`. Error values render their full context chain with the
+//! `{:#}` alternate format, exactly like upstream `anyhow`.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the same default-parameter shape as
+/// upstream.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: an outermost message plus the chain of causes that
+/// produced it (outermost first).
+pub struct Error {
+    /// Context chain, outermost message first.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    fn from_std<E: std::error::Error>(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+
+    /// Wrap with an outer context message (upstream `Error::context`).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first (upstream returns an iterator of
+    /// `dyn Error`; strings carry the same information here).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// Root cause message (innermost entry of the chain).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` renders the whole context chain, as upstream does.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?` conversion from any std error. `Error` itself deliberately does NOT
+// implement `std::error::Error` (same as upstream), which keeps this
+// blanket impl coherent next to the reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error::from_std(err)
+    }
+}
+
+/// Internal bridge so [`Context`] applies both to std errors and to
+/// [`Error`] itself (mirrors upstream's private `ext::StdError`).
+pub trait IntoAnyhow: Sized {
+    fn into_anyhow(self) -> Error;
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> IntoAnyhow for E {
+    fn into_anyhow(self) -> Error {
+        Error::from_std(self)
+    }
+}
+
+impl IntoAnyhow for Error {
+    fn into_anyhow(self) -> Error {
+        self
+    }
+}
+
+/// The `.context(..)` / `.with_context(|| ..)` extension trait.
+pub trait Context<T, E>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: IntoAnyhow> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_anyhow().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_anyhow().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "missing file");
+    }
+
+    #[test]
+    fn context_chain_renders_in_alternate_format() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening the store").unwrap_err();
+        assert_eq!(format!("{e}"), "opening the store");
+        assert_eq!(format!("{e:#}"), "opening the store: missing file");
+        assert_eq!(e.root_cause(), "missing file");
+    }
+
+    #[test]
+    fn option_context_and_with_context() {
+        let none: Option<u32> = None;
+        let e = none.context("no value").unwrap_err();
+        assert_eq!(e.to_string(), "no value");
+        let some = Some(7u32).with_context(|| "unused").unwrap();
+        assert_eq!(some, 7);
+    }
+
+    #[test]
+    fn context_on_anyhow_result_stacks() {
+        let r: Result<()> = Err(anyhow!("inner {}", 42));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 0 {
+                bail!("zero not allowed");
+            }
+            Ok(x)
+        }
+        assert!(f(5).is_ok());
+        assert_eq!(f(0).unwrap_err().to_string(), "zero not allowed");
+        assert_eq!(f(11).unwrap_err().to_string(), "too big: 11");
+    }
+}

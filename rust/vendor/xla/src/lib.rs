@@ -1,0 +1,393 @@
+//! Offline stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The real crate links the XLA C++ runtime, which is not available in
+//! this image. This stand-in keeps `runtime/pjrt.rs` compiling and
+//! *functional* by recognizing the two kernels this repo AOT-compiles
+//! (`python/compile/kernels/`) from their artifact file names and
+//! executing their documented semantics with plain CPU loops:
+//!
+//! * `pagerank_b{B}_k{K}`: `y[k,d] = Σ_s A[k,s,d] · x[k,s]`
+//! * `minplus_b{B}_k{K}`:  `o[k,j] = min_s (d[k,s] + W[k,s,j])`
+//!
+//! Numerically these match the Pallas kernels (same reduction order per
+//! element, f32 throughout), so the `pjrt_kernels_match_scalar_backends`
+//! oracle tests remain meaningful. Swap the path dependency back to the
+//! real `xla` crate to run on an actual PJRT client; the call sites do
+//! not change.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Error type with the Display surface `pjrt.rs` formats with `{e}`.
+#[derive(Debug)]
+pub struct XlaError(String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(XlaError(msg.into()))
+}
+
+/// Element types (only F32 is used by this repo).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+}
+
+/// Which builtin kernel an HLO artifact lowers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum KernelKind {
+    PageRank,
+    MinPlus,
+}
+
+/// Parsed handle to an HLO text artifact. The stand-in identifies the
+/// kernel from the file name (`<name>_b<B>_k<K>.hlo.txt`), which is how
+/// `python/compile/aot.py` names its outputs.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    kind: KernelKind,
+    b: usize,
+    k: usize,
+    #[allow(dead_code)]
+    path: PathBuf,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto> {
+        if !path.exists() {
+            return err(format!("no such HLO artifact: {}", path.display()));
+        }
+        let stem = path
+            .file_name()
+            .and_then(|s| s.to_str())
+            .map(|s| s.split('.').next().unwrap_or(s))
+            .unwrap_or_default();
+        let mut parts = stem.split('_');
+        let name = parts.next().unwrap_or_default();
+        let kind = match name {
+            "pagerank" => KernelKind::PageRank,
+            "minplus" => KernelKind::MinPlus,
+            other => return err(format!("stand-in xla: unknown kernel family {other:?} in {stem}")),
+        };
+        let mut b = None;
+        let mut k = None;
+        for p in parts {
+            if let Some(v) = p.strip_prefix('b') {
+                b = v.parse().ok();
+            } else if let Some(v) = p.strip_prefix('k') {
+                k = v.parse().ok();
+            }
+        }
+        match (b, k) {
+            (Some(b), Some(k)) if b > 0 && k > 0 => {
+                Ok(HloModuleProto { kind, b, k, path: path.to_path_buf() })
+            }
+            _ => err(format!("stand-in xla: cannot parse b/k from artifact name {stem:?}")),
+        }
+    }
+}
+
+/// A "computation" — carries the parsed kernel identity.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+}
+
+/// Host/device buffer (device == host here).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    data: Vec<f32>,
+    shape: Vec<usize>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        // Executions return 1-tuples (aot.py lowers with return_tuple).
+        Ok(Literal { data: self.data.clone(), shape: self.shape.clone(), tupled: true })
+    }
+}
+
+/// A typed host literal.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    shape: Vec<usize>,
+    tupled: bool,
+}
+
+/// Conversion support for `Literal::to_vec::<T>()` /
+/// `buffer_from_host_buffer::<T>`.
+pub trait NativeType: Copy {
+    fn from_f32(v: f32) -> Self;
+    fn into_f32(self) -> f32;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+    fn into_f32(self) -> f32 {
+        self
+    }
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        match ty {
+            ElementType::F32 => {}
+        }
+        if data.len() % 4 != 0 {
+            return err("untyped f32 data length not a multiple of 4");
+        }
+        let n: usize = shape.iter().product();
+        if n * 4 != data.len() {
+            return err(format!("shape {shape:?} does not match {} bytes", data.len()));
+        }
+        let floats: Vec<f32> = data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Literal { data: floats, shape: shape.to_vec(), tupled: false })
+    }
+
+    /// Unwrap a 1-tuple result literal.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        if !self.tupled {
+            return err("literal is not a tuple");
+        }
+        Ok(Literal { tupled: false, ..self })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+}
+
+/// Compiled executable: the kernel identity plus its (B, K) variant.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable {
+    kind: KernelKind,
+    b: usize,
+    k: usize,
+}
+
+impl PjRtLoadedExecutable {
+    fn run(&self, a: (&[f32], &[usize]), x: (&[f32], &[usize])) -> Result<PjRtBuffer> {
+        let (b, k) = (self.b, self.k);
+        let (tiles, tiles_shape) = a;
+        let (vec_in, vec_shape) = x;
+        if tiles_shape != [k, b, b] {
+            return err(format!("tile argument shape {tiles_shape:?} != [{k}, {b}, {b}]"));
+        }
+        if vec_shape != [k, b] {
+            return err(format!("vector argument shape {vec_shape:?} != [{k}, {b}]"));
+        }
+        if tiles.len() != k * b * b || vec_in.len() != k * b {
+            return err("argument data does not match its shape");
+        }
+        let mut out = vec![0.0f32; k * b];
+        match self.kind {
+            KernelKind::PageRank => {
+                // y[k,d] = sum_s A[k,s,d] * x[k,s]
+                for kk in 0..k {
+                    let tile = &tiles[kk * b * b..(kk + 1) * b * b];
+                    let xv = &vec_in[kk * b..(kk + 1) * b];
+                    let yv = &mut out[kk * b..(kk + 1) * b];
+                    for s in 0..b {
+                        let xs = xv[s];
+                        if xs == 0.0 {
+                            continue;
+                        }
+                        let row = &tile[s * b..(s + 1) * b];
+                        for d in 0..b {
+                            yv[d] += row[d] * xs;
+                        }
+                    }
+                }
+            }
+            KernelKind::MinPlus => {
+                // o[k,j] = min_s (d[k,s] + W[k,s,j])
+                for kk in 0..k {
+                    let tile = &tiles[kk * b * b..(kk + 1) * b * b];
+                    let dv = &vec_in[kk * b..(kk + 1) * b];
+                    let ov = &mut out[kk * b..(kk + 1) * b];
+                    for v in ov.iter_mut() {
+                        *v = f32::INFINITY;
+                    }
+                    for s in 0..b {
+                        let ds = dv[s];
+                        let row = &tile[s * b..(s + 1) * b];
+                        for j in 0..b {
+                            let cand = ds + row[j];
+                            if cand < ov[j] {
+                                ov[j] = cand;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(PjRtBuffer { data: out, shape: vec![k, b] })
+    }
+
+    fn classify<'s>(
+        args: &[(&'s [f32], &'s [usize])],
+    ) -> Result<((&'s [f32], &'s [usize]), (&'s [f32], &'s [usize]))> {
+        if args.len() != 2 {
+            return err(format!("expected 2 arguments, got {}", args.len()));
+        }
+        // Tile batch is the rank-3 argument, the vector is rank-2; accept
+        // either order.
+        match (args[0].1.len(), args[1].1.len()) {
+            (3, 2) => Ok((args[0], args[1])),
+            (2, 3) => Ok((args[1], args[0])),
+            _ => err("expected one [K,B,B] and one [K,B] argument"),
+        }
+    }
+
+    /// Execute with host literals.
+    pub fn execute<T: Borrow<Literal>>(&self, args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let views: Vec<(&[f32], &[usize])> = args
+            .iter()
+            .map(|l| {
+                let l = l.borrow();
+                (l.data.as_slice(), l.shape.as_slice())
+            })
+            .collect();
+        let (a, x) = Self::classify(&views)?;
+        Ok(vec![vec![self.run(a, x)?]])
+    }
+
+    /// Execute with device-resident buffers.
+    pub fn execute_b<T: Borrow<PjRtBuffer>>(&self, args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let views: Vec<(&[f32], &[usize])> = args
+            .iter()
+            .map(|l| {
+                let l = l.borrow();
+                (l.data.as_slice(), l.shape.as_slice())
+            })
+            .collect();
+        let (a, x) = Self::classify(&views)?;
+        Ok(vec![vec![self.run(a, x)?]])
+    }
+}
+
+/// The "client": compiles computations and uploads buffers.
+#[derive(Debug, Default)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        let p = &computation.proto;
+        Ok(PjRtLoadedExecutable { kind: p.kind, b: p.b, k: p.k })
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        shape: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return err(format!("shape {shape:?} != data length {}", data.len()));
+        }
+        Ok(PjRtBuffer {
+            data: data.iter().map(|v| v.into_f32()).collect(),
+            shape: shape.to_vec(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("xla-standin-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, "HloModule standin").unwrap();
+        p
+    }
+
+    fn exe(name: &str) -> PjRtLoadedExecutable {
+        let proto = HloModuleProto::from_text_file(&artifact(name)).unwrap();
+        PjRtClient::cpu().unwrap().compile(&XlaComputation::from_proto(&proto)).unwrap()
+    }
+
+    fn literal(data: Vec<f32>, shape: Vec<usize>) -> Literal {
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        Literal::create_from_shape_and_untyped_data(ElementType::F32, &shape, &bytes).unwrap()
+    }
+
+    #[test]
+    fn pagerank_kernel_sums_products() {
+        let e = exe("pagerank_b2_k1.hlo.txt");
+        // A[0] = [[1, 2], [3, 4]] (rows = source s, cols = dest d), x = [10, 100].
+        let a = literal(vec![1.0, 2.0, 3.0, 4.0], vec![1, 2, 2]);
+        let x = literal(vec![10.0, 100.0], vec![1, 2]);
+        let out = e.execute::<Literal>(&[a, x]).unwrap();
+        let y = out[0][0].to_literal_sync().unwrap().to_tuple1().unwrap().to_vec::<f32>().unwrap();
+        // y[d] = sum_s A[s,d]*x[s] -> y[0] = 1*10 + 3*100 = 310; y[1] = 2*10 + 4*100 = 420
+        assert_eq!(y, vec![310.0, 420.0]);
+    }
+
+    #[test]
+    fn minplus_kernel_takes_min_of_sums() {
+        let e = exe("minplus_b2_k1.hlo.txt");
+        let w = literal(vec![5.0, 1.0, 2.0, 9.0], vec![1, 2, 2]);
+        let d = literal(vec![0.0, 10.0], vec![1, 2]);
+        let out = e.execute::<Literal>(&[w, d]).unwrap();
+        let o = out[0][0].to_literal_sync().unwrap().to_tuple1().unwrap().to_vec::<f32>().unwrap();
+        // o[j] = min_s d[s] + W[s,j] -> o[0] = min(0+5, 10+2) = 5; o[1] = min(0+1, 10+9) = 1
+        assert_eq!(o, vec![5.0, 1.0]);
+    }
+
+    #[test]
+    fn session_buffers_match_literals() {
+        let e = exe("pagerank_b2_k1.hlo.txt");
+        let client = PjRtClient::cpu().unwrap();
+        let a = client
+            .buffer_from_host_buffer::<f32>(&[1.0, 2.0, 3.0, 4.0], &[1, 2, 2], None)
+            .unwrap();
+        let x = client.buffer_from_host_buffer::<f32>(&[10.0, 100.0], &[1, 2], None).unwrap();
+        let out = e.execute_b::<&PjRtBuffer>(&[&a, &x]).unwrap();
+        let y = out[0][0].to_literal_sync().unwrap().to_tuple1().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(y, vec![310.0, 420.0]);
+    }
+
+    #[test]
+    fn unknown_artifact_names_error() {
+        assert!(HloModuleProto::from_text_file(&artifact("mystery_b8_k2.hlo.txt")).is_err());
+        assert!(HloModuleProto::from_text_file(Path::new("/nonexistent/x.hlo.txt")).is_err());
+    }
+}
