@@ -55,25 +55,28 @@ pub fn deploy_cached(
     bins: usize,
     pack: usize,
 ) -> (PathBuf, DeployReport) {
+    let cfg = DeployConfig::new(scale.hosts, bins, pack);
+    // Cache key includes the slice format version: deployments written by
+    // an older binary are not silently reused after a format change.
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("target/bench-deployments")
         .join(format!(
-            "tr-v{}-t{}-p{}-s{bins}-i{pack}",
-            scale.vertices, scale.instances, scale.hosts
+            "tr-v{}-t{}-p{}-s{bins}-i{pack}-f{}",
+            scale.vertices, scale.instances, scale.hosts, cfg.slice_version
         ));
     let stamp = root.join("deploy-report.txt");
-    let cfg = DeployConfig::new(scale.hosts, bins, pack);
     if !stamp.exists() {
         let _ = std::fs::remove_dir_all(&root);
         let report = deploy(gen, &cfg, &root).expect("deploy failed");
         std::fs::write(
             &stamp,
             format!(
-                "{} {} {} {}\n{}\n{}",
+                "{} {} {} {} {}\n{}\n{}",
                 report.n_vertices,
                 report.n_edges,
                 report.slices_written,
                 report.bytes_written,
+                report.attr_body_bytes,
                 report
                     .subgraphs_per_partition
                     .iter()
@@ -115,6 +118,7 @@ pub fn deploy_cached(
             subgraph_sizes: sizes,
             slices_written: head[2] as usize,
             bytes_written: head[3],
+            attr_body_bytes: head.get(4).copied().unwrap_or(0),
         };
         (root, report)
     }

@@ -3,28 +3,33 @@
 //! Measures each layer's critical operation in isolation so before/after
 //! deltas in EXPERIMENTS.md §Perf are attributable:
 //!   L3: slice decode, cache hit path, superstep barrier overhead,
-//!       message routing;
+//!       message routing, v1-vs-v2 attribute codec (bytes on disk,
+//!       decode ns/column, typed-access ns/edge), pipelined loading;
 //!   L1/L2 via PJRT: kernel dispatch latency + tile throughput vs the
 //!       scalar backend at several subgraph sizes.
+//!
+//! Besides the human-readable tables, emits `BENCH_hotpath.json` (cwd, or
+//! `--json PATH`) with the machine-readable series CI tracks over time.
 
 #[path = "common.rs"]
 mod common;
 
 use common::*;
 use goffish::apps::SsspApp;
-use goffish::datagen::{traceroute, CollectionSource};
-use goffish::gofs::{Projection, SliceFile};
+use goffish::datagen::{traceroute, CollectionSource, TraceRouteGenerator, TraceRouteParams};
+use goffish::gofs::{deploy, DeployConfig, Projection, SliceFile};
 use goffish::graph::Schema;
 use goffish::gopher::{
     Application, ComputeCtx, GopherEngine, Pattern, Payload, RunOptions, RunStats,
     SubgraphProgram,
 };
-use goffish::metrics::Metrics;
+use goffish::metrics::{keys, Metrics};
 use goffish::partition::Subgraph;
 use goffish::runtime::pjrt::{PjrtBackend, PjrtEngine};
 use goffish::runtime::{LocalSpmv, ScalarBackend};
 use goffish::util::bench::{BenchArgs, Bencher, Table};
 use goffish::util::Prng;
+use std::path::PathBuf;
 use std::sync::Arc;
 
 /// No-op app used to time pure engine overhead.
@@ -56,6 +61,43 @@ impl Application for NoopApp {
     }
 }
 
+/// Run temporal SSSP over `dir`, returning stats plus a quantized output
+/// fingerprint (sorted (sgid, vertex-key, q-distance)).
+fn sssp_fingerprint(
+    dir: &PathBuf,
+    hosts: usize,
+    source: u64,
+    n_ts: usize,
+    prefetch: bool,
+    workers: usize,
+) -> (RunStats, Vec<(u64, usize, i64)>) {
+    let (eng, _m) = engine(dir, hosts, 28);
+    let app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
+    let stats = eng
+        .run(
+            &app,
+            &RunOptions {
+                timesteps: Some((0..n_ts).collect()),
+                prefetch,
+                workers,
+                ..Default::default()
+            },
+        )
+        .expect("sssp run");
+    let distances = app.results.distances.lock().unwrap();
+    let mut fp: Vec<(u64, usize, i64)> = distances
+        .iter()
+        .flat_map(|(sgid, (t, d))| {
+            d.iter().enumerate().map(move |(lv, &x)| {
+                let q = if x.is_finite() { (x as f64 * 1e4).round() as i64 } else { -1 };
+                (sgid.0, *t * 1_000_000 + lv, q)
+            })
+        })
+        .collect();
+    fp.sort_unstable();
+    (stats, fp)
+}
+
 fn main() {
     let args = BenchArgs::from_env();
     let scale = BenchScale::from_args(&args);
@@ -63,6 +105,7 @@ fn main() {
     let (dir, _) = deploy_cached(&gen, &scale, 20, 20);
     let b = Bencher::new(1, args.usize("iters", 5));
     let mut report = Table::new(&["probe", "value", "unit"]);
+    let mut json: Vec<(String, f64)> = Vec::new();
 
     // --- L3: slice decode throughput. ---
     let sample = {
@@ -91,6 +134,7 @@ fn main() {
         format!("{:.1}", sample.1 as f64 / stats.min() / 1e6),
         "MB/s (on-disk bytes)".into(),
     ]);
+    json.push(("slice_container_decode_mbps".into(), sample.1 as f64 / stats.min() / 1e6));
 
     // --- L3: cache hit path. ---
     let stores = open_stores(&dir, 1, 64, Arc::new(Metrics::new()));
@@ -104,6 +148,122 @@ fn main() {
         format!("{:.1}", stats.min() * 1e6),
         "us".into(),
     ]);
+    json.push(("cached_read_instance_us".into(), stats.min() * 1e6));
+
+    // --- L3: v1 vs v2 attribute slice format (tentpole probe). ---
+    // Fresh small deployments in both formats: bytes on disk, cold decode
+    // per column, typed access per edge, and identical SSSP outputs.
+    {
+        let mini_gen = TraceRouteGenerator::new(TraceRouteParams {
+            n_vertices: scale.vertices.min(10_000),
+            n_instances: scale.instances.min(12),
+            traces_per_instance: scale.traces.min(800),
+            ..Default::default()
+        });
+        let mini_hosts = 4usize;
+        let mini_ts = mini_gen.n_instances();
+        let deploy_mini = |version: u8| -> (PathBuf, u64, u64) {
+            let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+                .join("target/bench-deployments")
+                .join(format!("hotpath-codec-f{version}"));
+            let _ = std::fs::remove_dir_all(&root);
+            let mut cfg = DeployConfig::new(mini_hosts, 20, 20);
+            cfg.slice_version = version;
+            let rep = deploy(&mini_gen, &cfg, &root).expect("mini deploy");
+            (root, rep.bytes_written, rep.attr_body_bytes)
+        };
+        let (d1, disk1, body1) = deploy_mini(1);
+        let (d2, disk2, body2) = deploy_mini(2);
+        let body_ratio = body1 as f64 / body2.max(1) as f64;
+        report.row(&[
+            "attr body bytes v1 -> v2".into(),
+            format!("{:.2} -> {:.2} MB ({body_ratio:.2}x)", body1 as f64 / 1e6, body2 as f64 / 1e6),
+            "uncompressed bodies".into(),
+        ]);
+        report.row(&[
+            "deployment on disk v1 -> v2".into(),
+            format!("{:.2} -> {:.2} MB", disk1 as f64 / 1e6, disk2 as f64 / 1e6),
+            "deflated slices".into(),
+        ]);
+        json.push(("attr_body_bytes_v1".into(), body1 as f64));
+        json.push(("attr_body_bytes_v2".into(), body2 as f64));
+        json.push(("attr_body_reduction_x".into(), body_ratio));
+        json.push(("bytes_on_disk_v1".into(), disk1 as f64));
+        json.push(("bytes_on_disk_v2".into(), disk2 as f64));
+
+        // Cold decode cost per attribute column (cache off: every
+        // read_instance re-reads + decodes its projected slices).
+        for (tag, d) in [("v1", &d1), ("v2", &d2)] {
+            let metrics = Arc::new(Metrics::new());
+            let stores = open_stores(d, mini_hosts, 0, metrics.clone());
+            let m0 = metrics.snapshot();
+            let (_, wall) = Bencher::once(|| {
+                for s in &stores {
+                    for sg in s.subgraphs() {
+                        let p = Projection::all(s.vertex_schema(), s.edge_schema());
+                        for t in 0..mini_ts.min(4) {
+                            let _ = s.read_instance(sg.id.local(), t, &p).unwrap();
+                        }
+                    }
+                }
+            });
+            let cols = metrics.snapshot().since(&m0).get(keys::SLICES_READ).max(1);
+            let ns_per_col = wall * 1e9 / cols as f64;
+            report.row(&[
+                format!("cold column read+decode ({tag})"),
+                format!("{:.1}", ns_per_col / 1e3),
+                format!("us/column ({cols} columns)"),
+            ]);
+            json.push((format!("decode_ns_per_column_{tag}"), ns_per_col));
+        }
+
+        // Typed access: mean latency over every owned edge, warm cache.
+        for (tag, d) in [("v1", &d1), ("v2", &d2)] {
+            let stores = open_stores(d, mini_hosts, 64, Arc::new(Metrics::new()));
+            let mut insts = Vec::new();
+            let mut n_edges = 0usize;
+            for s in &stores {
+                let p = Projection::all(s.vertex_schema(), s.edge_schema());
+                for sg in s.subgraphs() {
+                    n_edges += sg.edges.len();
+                    insts.push(s.read_instance(sg.id.local(), 0, &p).unwrap());
+                }
+            }
+            let stats = b.bench(&format!("edge access {tag}"), || {
+                let mut acc = 0.0f64;
+                for sgi in &insts {
+                    for e in 0..sgi.sg.edges.len() {
+                        if let Some(x) = sgi.edge_f64(traceroute::eattr::LATENCY_MS, e) {
+                            acc += x;
+                        }
+                    }
+                }
+                acc
+            });
+            let ns_per_edge = stats.min() * 1e9 / n_edges.max(1) as f64;
+            report.row(&[
+                format!("edge_f64 access ({tag})"),
+                format!("{ns_per_edge:.1}"),
+                format!("ns/edge ({n_edges} edges, warm)"),
+            ]);
+            json.push((format!("access_ns_per_edge_{tag}"), ns_per_edge));
+        }
+
+        // Outputs must be bit-identical across formats and prefetch modes.
+        let src = mini_gen.template().ext_ids[mini_gen.vantages()[0] as usize];
+        let n_ts = mini_ts.min(6);
+        let workers = RunOptions::default().workers;
+        let (_, fp_v1) = sssp_fingerprint(&d1, mini_hosts, src, n_ts, true, workers);
+        let (_, fp_v2) = sssp_fingerprint(&d2, mini_hosts, src, n_ts, true, workers);
+        let (_, fp_v2_np) = sssp_fingerprint(&d2, mini_hosts, src, n_ts, false, 1);
+        assert_eq!(fp_v1, fp_v2, "v1/v2 slice formats changed SSSP outputs");
+        assert_eq!(fp_v2, fp_v2_np, "prefetch changed SSSP outputs");
+        println!(
+            "codec probe: v1/v2 SSSP outputs identical; body bytes {body1} -> {body2} ({body_ratio:.2}x)"
+        );
+        let _ = std::fs::remove_dir_all(&d1);
+        let _ = std::fs::remove_dir_all(&d2);
+    }
 
     // --- L3: superstep barrier overhead (noop app, many supersteps). ---
     let (eng, _m) = engine(&dir, scale.hosts, 28);
@@ -121,6 +281,7 @@ fn main() {
         format!("{:.1}", stats.min() / supersteps as f64 * 1e6),
         format!("us/superstep ({n_sg} subgraphs)"),
     ]);
+    json.push(("superstep_us".into(), stats.min() / supersteps as f64 * 1e6));
 
     // --- L3: message routing throughput. ---
     let routing = bench_message_routing(&eng, &b);
@@ -129,6 +290,7 @@ fn main() {
         format!("{:.2}", routing / 1e6),
         "M msgs/s".into(),
     ]);
+    json.push(("routing_msgs_per_s".into(), routing));
 
     // --- L3: pipelined instance loading (prefetch + parallel load). ---
     // Per-timestep *blocking* load wall time for the temporal SSSP app,
@@ -138,36 +300,9 @@ fn main() {
     {
         let n_ts = args.usize("timesteps", 8).min(scale.instances);
         let source = gen.template().ext_ids[gen.vantages()[0] as usize];
-        let run_sssp = |prefetch: bool, workers: usize| -> (RunStats, Vec<(u64, usize, i64)>) {
-            let (eng, _m) = engine(&dir, scale.hosts, 28);
-            let app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
-            let stats = eng
-                .run(
-                    &app,
-                    &RunOptions {
-                        timesteps: Some((0..n_ts).collect()),
-                        prefetch,
-                        workers,
-                        ..Default::default()
-                    },
-                )
-                .expect("sssp run");
-            // Output fingerprint: quantized final distance per vertex.
-            let distances = app.results.distances.lock().unwrap();
-            let mut fp: Vec<(u64, usize, i64)> = distances
-                .iter()
-                .flat_map(|(sgid, (t, d))| {
-                    d.iter().enumerate().map(move |(lv, &x)| {
-                        let q = if x.is_finite() { (x as f64 * 1e4).round() as i64 } else { -1 };
-                        (sgid.0, *t * 1_000_000 + lv, q)
-                    })
-                })
-                .collect();
-            fp.sort_unstable();
-            (stats, fp)
-        };
-        let (off, fp_off) = run_sssp(false, 1);
-        let (on, fp_on) = run_sssp(true, RunOptions::default().workers);
+        let (off, fp_off) = sssp_fingerprint(&dir, scale.hosts, source, n_ts, false, 1);
+        let (on, fp_on) =
+            sssp_fingerprint(&dir, scale.hosts, source, n_ts, true, RunOptions::default().workers);
         assert_eq!(fp_off, fp_on, "prefetch/parallel load changed SSSP outputs");
         let block_off = off.total_load_blocking_s() / n_ts as f64;
         let block_on = on.total_load_blocking_s() / n_ts as f64;
@@ -194,6 +329,10 @@ fn main() {
             block_off * 1e3,
             block_on * 1e3
         );
+        json.push(("blocking_load_ms_per_timestep_off".into(), block_off * 1e3));
+        json.push(("blocking_load_ms_per_timestep_on".into(), block_on * 1e3));
+        json.push(("load_pipeline_speedup_x".into(), speedup));
+        json.push(("fig7_wall_s".into(), on.total_wall_s));
     }
 
     // --- L1/L2: kernel dispatch + throughput vs scalar. ---
@@ -220,6 +359,7 @@ fn main() {
                 format!("{:.2}", flops / stats.min() / 1e9),
                 "GFLOP/s (dispatch incl.)".into(),
             ]);
+            json.push(("pjrt_gflops".into(), flops / stats.min() / 1e9));
 
             // End-to-end prepared-op apply: pjrt vs scalar on a dense-ish subgraph.
             for n in [512usize, 2048] {
@@ -243,6 +383,20 @@ fn main() {
     }
 
     report.print("P1 — hot-path probes");
+
+    // --- Machine-readable series for CI (BENCH_hotpath.json). ---
+    let json_path = PathBuf::from(
+        args.get("json").unwrap_or("BENCH_hotpath.json").to_string(),
+    );
+    let mut out = String::from("{\n");
+    for (i, (k, v)) in json.iter().enumerate() {
+        let sep = if i + 1 == json.len() { "" } else { "," };
+        let v = if v.is_finite() { *v } else { -1.0 };
+        out.push_str(&format!("  \"{k}\": {v:.3}{sep}\n"));
+    }
+    out.push_str("}\n");
+    std::fs::write(&json_path, &out).expect("write BENCH_hotpath.json");
+    println!("wrote {}", json_path.display());
 }
 
 /// A single-subgraph graph with average degree `deg` (for kernel benches).

@@ -179,11 +179,7 @@ impl SubgraphProgram for PageRankProgram {
             let is_active = |pos: usize| -> bool {
                 match self.active_attr {
                     None => true,
-                    Some(a) => sgi
-                        .edge_values(a, pos)
-                        .first()
-                        .and_then(|v| v.as_bool())
-                        .unwrap_or(false),
+                    Some(a) => sgi.edge_bool(a, pos).unwrap_or(false),
                 }
             };
             let mut local_active = vec![false; n_local];

@@ -88,25 +88,10 @@ struct SsspProgram {
     remote_w: Vec<f32>,
 }
 
-/// Mean of an edge attribute's multi-values; ∞ when absent.
+/// Mean of an edge attribute's multi-values; ∞ when absent. Runs on the
+/// typed-slab fast path — no per-value `AttrValue` materialization.
 pub(crate) fn mean_weight(sgi: &SubgraphInstance, attr: usize, edge_pos: usize) -> f32 {
-    let vals = sgi.edge_values(attr, edge_pos);
-    if vals.is_empty() {
-        return f32::INFINITY;
-    }
-    let mut sum = 0.0f64;
-    let mut n = 0usize;
-    for v in vals.iter() {
-        if let Some(f) = v.as_float() {
-            sum += f;
-            n += 1;
-        }
-    }
-    if n == 0 {
-        f32::INFINITY
-    } else {
-        (sum / n as f64) as f32
-    }
+    sgi.edge_mean_f64(attr, edge_pos).map(|m| m as f32).unwrap_or(f32::INFINITY)
 }
 
 /// Ordering shim for the Dijkstra heap.

@@ -87,9 +87,9 @@ struct TrackProgram {
 
 impl TrackProgram {
     fn seen_here(&self, sgi: &SubgraphInstance, lv: u32) -> bool {
-        sgi.vertex_values(self.plates_attr, lv)
-            .iter()
-            .any(|v| v.as_str() == Some(self.plate.as_str()))
+        // Typed fast path: scans the column's string dictionary slice
+        // without materializing an AttrValue per sighting.
+        sgi.vertex_values(self.plates_attr, lv).contains_str(&self.plate)
     }
 }
 

@@ -223,6 +223,16 @@ fn ip_of(i: u64) -> u64 {
     0x0A00_0000u64 + i
 }
 
+/// Quantize a millisecond measurement to the generator's reporting
+/// resolution: 2⁻¹⁰ ms ≈ 0.98 µs, matching the ~µs precision traceroute
+/// tools actually report. The grid is exact in binary, so cumulative RTTs
+/// (sums of quantized hops) stay on it — like real measured data, these
+/// floats carry short mantissas instead of 52 random bits, which the v2
+/// XOR codec turns into a multi-x on-disk reduction.
+fn quantize_ms(x: f64) -> f64 {
+    (x * 1024.0).round() / 1024.0
+}
+
 impl CollectionSource for TraceRouteGenerator {
     fn template(&self) -> &GraphTemplate {
         &self.template
@@ -254,8 +264,10 @@ impl CollectionSource for TraceRouteGenerator {
             let mut rtt = 0.0f64;
             for &(v, e_in) in &path {
                 if e_in != u32::MAX {
-                    let lat = self.base_latency[e_in as usize] as f64 * congestion
-                        * (0.9 + 0.2 * rng.gen_f64());
+                    let lat = quantize_ms(
+                        self.base_latency[e_in as usize] as f64 * congestion
+                            * (0.9 + 0.2 * rng.gen_f64()),
+                    );
                     rtt += lat;
                     e_lat.entry(e_in).or_default().push(lat);
                     if rng.gen_bool(0.01) {
@@ -291,7 +303,7 @@ impl CollectionSource for TraceRouteGenerator {
             lat_col.push(*e, lats.iter().map(|&l| AttrValue::Float(l)));
             active_col.push(*e, [AttrValue::Bool(true)]);
             // Bandwidth estimate inversely related to congestion + noise.
-            let bw = 1000.0 / (1.0 + lats.iter().sum::<f64>() / lats.len() as f64);
+            let bw = quantize_ms(1000.0 / (1.0 + lats.iter().sum::<f64>() / lats.len() as f64));
             bw_col.push(*e, [AttrValue::Float(bw)]);
         }
         let mut drops_col = AttrColumn::new();
@@ -350,7 +362,7 @@ mod tests {
         assert!(lat.n_values() > lat.n_elements());
         // Latency values positive.
         for (_, vals) in lat.iter() {
-            for v in vals {
+            for v in vals.iter() {
                 assert!(v.as_float().unwrap() > 0.0);
             }
         }
@@ -367,10 +379,9 @@ mod tests {
             let mut sum = 0.0;
             let mut cnt = 0usize;
             for (_, vals) in col.iter() {
-                for v in vals {
-                    sum += v.as_float().unwrap();
-                    cnt += 1;
-                }
+                let (s, n) = vals.sum_count_f64();
+                sum += s;
+                cnt += n;
             }
             sum / cnt as f64
         };

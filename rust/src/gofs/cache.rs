@@ -33,6 +33,8 @@ const NIL: usize = usize::MAX;
 struct Node<K, V> {
     key: K,
     value: Arc<V>,
+    /// Weigher-reported size at insert time (0 without a weigher).
+    weight: u64,
     prev: usize,
     next: usize,
 }
@@ -51,12 +53,12 @@ impl<K, V> Lru<K, V> {
     }
 
     /// Insert at the front; returns the arena slot.
-    fn push_front(&mut self, key: K, value: Arc<V>) -> usize {
+    fn push_front(&mut self, key: K, value: Arc<V>, weight: u64) -> usize {
         let slot = self.free.pop().unwrap_or_else(|| {
             self.nodes.push(None);
             self.nodes.len() - 1
         });
-        self.nodes[slot] = Some(Node { key, value, prev: NIL, next: self.head });
+        self.nodes[slot] = Some(Node { key, value, weight, prev: NIL, next: self.head });
         if self.head != NIL {
             self.nodes[self.head].as_mut().unwrap().prev = slot;
         }
@@ -93,7 +95,7 @@ impl<K, V> Lru<K, V> {
         }
         let node = self.unlink(slot);
         let value = node.value.clone();
-        let reinserted = self.push_front(node.key, node.value);
+        let reinserted = self.push_front(node.key, node.value, node.weight);
         debug_assert_eq!(reinserted, slot);
         value
     }
@@ -137,6 +139,9 @@ struct Inner<K, V> {
     hits: u64,
     misses: u64,
     evictions: u64,
+    /// Sum of resident entries' weigher-reported sizes (0 without a
+    /// weigher) — size-aware accounting of decoded slabs.
+    resident_bytes: u64,
 }
 
 /// What a [`SliceCache::get_or_load_traced`] call did — lets callers
@@ -155,13 +160,26 @@ pub struct LoadOutcome {
 /// caching entirely — the paper's `c0` configuration).
 pub struct SliceCache<K, V> {
     slots: usize,
+    /// Optional per-entry size function for resident-byte accounting.
+    weigher: Option<fn(&V) -> u64>,
     inner: Mutex<Inner<K, V>>,
 }
 
 impl<K: Eq + Hash + Clone, V> SliceCache<K, V> {
     pub fn new(slots: usize) -> Self {
+        Self::build(slots, None)
+    }
+
+    /// A cache that also tracks the byte footprint of resident values, as
+    /// reported by `weigher` at insert time.
+    pub fn with_weigher(slots: usize, weigher: fn(&V) -> u64) -> Self {
+        Self::build(slots, Some(weigher))
+    }
+
+    fn build(slots: usize, weigher: Option<fn(&V) -> u64>) -> Self {
         SliceCache {
             slots,
+            weigher,
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
                 lru: Lru::new(),
@@ -169,12 +187,18 @@ impl<K: Eq + Hash + Clone, V> SliceCache<K, V> {
                 hits: 0,
                 misses: 0,
                 evictions: 0,
+                resident_bytes: 0,
             }),
         }
     }
 
     pub fn slots(&self) -> usize {
         self.slots
+    }
+
+    /// Weigher-reported bytes currently resident (0 without a weigher).
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().resident_bytes
     }
 
     /// Look up `key`, or load it with `load` on a miss (caching the result
@@ -255,16 +279,21 @@ impl<K: Eq + Hash + Clone, V> SliceCache<K, V> {
                 let value = Arc::new(value);
                 let mut evicted = false;
                 if self.slots > 0 {
+                    // Weigh outside the lock; decoded-slab sizing can walk
+                    // the value.
+                    let weight = self.weigher.map(|w| w(value.as_ref())).unwrap_or(0);
                     let mut inner = self.inner.lock().unwrap();
                     if inner.map.len() >= self.slots {
                         if let Some(victim) = inner.lru.pop_lru() {
                             inner.map.remove(&victim.key);
                             inner.evictions += 1;
+                            inner.resident_bytes -= victim.weight;
                             evicted = true;
                         }
                     }
-                    let slot = inner.lru.push_front(key.clone(), value.clone());
+                    let slot = inner.lru.push_front(key.clone(), value.clone(), weight);
                     inner.map.insert(key.clone(), slot);
+                    inner.resident_bytes += weight;
                     if let Some(w) = inner.inflight.remove(key) {
                         *w.state.lock().unwrap() = InflightState::Ready(value.clone());
                         w.cv.notify_all();
@@ -307,6 +336,7 @@ impl<K: Eq + Hash + Clone, V> SliceCache<K, V> {
         let mut inner = self.inner.lock().unwrap();
         inner.map.clear();
         inner.lru.clear();
+        inner.resident_bytes = 0;
     }
 }
 
@@ -518,6 +548,31 @@ mod tests {
         assert_eq!(results.iter().filter(|r| r.is_err()).count(), 1, "exactly one caller fails");
         assert!(results.iter().filter_map(|r| r.as_ref().ok()).all(|&v| v == 7));
         assert!(attempts.load(Ordering::SeqCst) <= 2, "retry stampede");
+    }
+
+    #[test]
+    fn weigher_tracks_resident_bytes_across_insert_evict_clear() {
+        let c: SliceCache<u32, Vec<u8>> =
+            SliceCache::with_weigher(2, |v: &Vec<u8>| v.len() as u64);
+        assert_eq!(c.resident_bytes(), 0);
+        c.get_or_load(&1, || Ok::<_, std::convert::Infallible>(vec![0u8; 100])).unwrap();
+        c.get_or_load(&2, || Ok::<_, std::convert::Infallible>(vec![0u8; 50])).unwrap();
+        assert_eq!(c.resident_bytes(), 150);
+        // Hitting does not change accounting.
+        c.get_or_load(&1, || Ok::<_, std::convert::Infallible>(vec![])).unwrap();
+        assert_eq!(c.resident_bytes(), 150);
+        // Evicting key 2 (LRU) swaps 50 for 30.
+        c.get_or_load(&3, || Ok::<_, std::convert::Infallible>(vec![0u8; 30])).unwrap();
+        assert_eq!(c.resident_bytes(), 130);
+        c.clear();
+        assert_eq!(c.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn caches_without_weigher_report_zero_bytes() {
+        let c: SliceCache<u32, u32> = SliceCache::new(2);
+        c.get_or_load(&1, ok_load(1)).unwrap();
+        assert_eq!(c.resident_bytes(), 0);
     }
 
     #[test]

@@ -1,0 +1,997 @@
+//! Columnar codecs for format-v2 attribute slice bodies.
+//!
+//! A v2 attribute slice groups values **by bin position** (one packed
+//! series per subgraph position across the group's timesteps) and encodes
+//! each position's typed value stream with the best of several codecs,
+//! chosen at deploy time (per-column codec tag; raw fallback when a codec
+//! does not win):
+//!
+//! | tag | name        | types | scheme                                        |
+//! |-----|-------------|-------|-----------------------------------------------|
+//! | 0   | raw         | all   | v1 per-value encoding, back to back           |
+//! | 1   | i64-dod     | Int   | zigzag varint delta-of-delta (wrapping, so    |
+//! |     |             |       | `i64::MIN/MAX` are lossless)                  |
+//! | 2   | f64-xor     | Float | Gorilla-style XOR with leading/meaningful     |
+//! |     |             |       | window reuse (Pelkonen et al., VLDB 2015)     |
+//! | 3   | bool-rle    | Bool  | first value + alternating varint run lengths  |
+//! | 4   | str-dict    | Str   | first-occurrence dictionary + varint codes    |
+//! | 5   | f64-dict    | Float | bit-pattern dictionary + varint codes (wins   |
+//! |     |             |       | on columns of few distinct values)            |
+//! | 6   | bool-bitset | Bool  | packed bitset, LSB-first per byte             |
+//!
+//! Codecs operate on raw bit patterns (`f64::to_bits`), so NaN, ±inf and
+//! −0.0 round-trip exactly. See `gofs::slice` for the surrounding wire
+//! layout.
+
+use crate::graph::attributes::{AttrColumn, AttrType, Slab};
+use crate::util::wire::{Dec, Enc};
+use anyhow::{bail, Context, Result};
+
+pub(crate) const TAG_RAW: u8 = 0;
+pub(crate) const TAG_I64_DOD: u8 = 1;
+pub(crate) const TAG_F64_XOR: u8 = 2;
+pub(crate) const TAG_BOOL_RLE: u8 = 3;
+pub(crate) const TAG_STR_DICT: u8 = 4;
+pub(crate) const TAG_F64_DICT: u8 = 5;
+pub(crate) const TAG_BOOL_BITSET: u8 = 6;
+
+// ---------------------------------------------------------------- bits --
+
+/// MSB-first bit appender over a byte vector.
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits used in the last byte (8 = full / no byte yet).
+    used: u8,
+}
+
+impl Default for BitWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        BitWriter { buf: Vec::new(), used: 8 }
+    }
+
+    #[inline]
+    pub fn write_bit(&mut self, b: bool) {
+        if self.used == 8 {
+            self.buf.push(0);
+            self.used = 0;
+        }
+        if b {
+            let last = self.buf.len() - 1;
+            self.buf[last] |= 1 << (7 - self.used);
+        }
+        self.used += 1;
+    }
+
+    /// Write the low `n` bits of `v`, most significant first.
+    #[inline]
+    pub fn write_bits(&mut self, v: u64, n: u8) {
+        debug_assert!(n <= 64);
+        for i in (0..n).rev() {
+            self.write_bit((v >> i) & 1 == 1);
+        }
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// MSB-first bit cursor over a byte slice.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // in bits
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> Result<bool> {
+        let byte = self.pos / 8;
+        if byte >= self.buf.len() {
+            bail!("bitstream exhausted");
+        }
+        let b = (self.buf[byte] >> (7 - (self.pos % 8))) & 1 == 1;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    #[inline]
+    pub fn read_bits(&mut self, n: u8) -> Result<u64> {
+        debug_assert!(n <= 64);
+        let mut v = 0u64;
+        for _ in 0..n {
+            v = (v << 1) | self.read_bit()? as u64;
+        }
+        Ok(v)
+    }
+}
+
+// -------------------------------------------------------------- zigzag --
+
+#[inline]
+fn zigzag(v: i64) -> u64 {
+    (v.wrapping_shl(1) ^ (v >> 63)) as u64
+}
+
+#[inline]
+fn unzigzag(z: u64) -> i64 {
+    ((z >> 1) as i64) ^ -((z & 1) as i64)
+}
+
+// ------------------------------------------------------------ int codec --
+
+/// Delta-of-delta zigzag varints. All arithmetic wraps, so every `i64`
+/// (including `MIN`/`MAX`) round-trips.
+fn encode_ints_dod(xs: &[i64], e: &mut Enc) {
+    let mut prev = 0i64;
+    let mut prev_delta = 0i64;
+    for (k, &x) in xs.iter().enumerate() {
+        if k == 0 {
+            e.varint(zigzag(x));
+            prev = x;
+        } else {
+            let delta = x.wrapping_sub(prev);
+            e.varint(zigzag(delta.wrapping_sub(prev_delta)));
+            prev = x;
+            prev_delta = delta;
+        }
+    }
+}
+
+fn decode_ints_dod(d: &mut Dec, n: usize) -> Result<Vec<i64>> {
+    let mut out = Vec::with_capacity(n);
+    let mut prev = 0i64;
+    let mut prev_delta = 0i64;
+    for k in 0..n {
+        if k == 0 {
+            prev = unzigzag(d.varint()?);
+        } else {
+            let delta = prev_delta.wrapping_add(unzigzag(d.varint()?));
+            prev = prev.wrapping_add(delta);
+            prev_delta = delta;
+        }
+        out.push(prev);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------- float codec --
+
+/// Gorilla-style XOR float encoding: 1 bit for repeats, else the XOR's
+/// meaningful bits with leading/length window reuse. The meaningful-bit
+/// length is stored as `len - 1` in 6 bits so a full 64-bit XOR (sign flip
+/// with max-entropy mantissa) is representable.
+fn encode_floats_xor(xs: &[f64], w: &mut BitWriter) {
+    let mut prev = 0u64;
+    let mut win_lead = 65u32; // 65 = no window yet
+    let mut win_mean = 0u32;
+    for (k, &x) in xs.iter().enumerate() {
+        let bits = x.to_bits();
+        if k == 0 {
+            w.write_bits(bits, 64);
+            prev = bits;
+            continue;
+        }
+        let xor = bits ^ prev;
+        prev = bits;
+        if xor == 0 {
+            w.write_bit(false);
+            continue;
+        }
+        w.write_bit(true);
+        let lead = xor.leading_zeros().min(31); // 5-bit field
+        let trail = xor.trailing_zeros();
+        let mean = 64 - lead - trail;
+        if win_lead <= 64 && lead >= win_lead && trail >= 64 - win_lead - win_mean {
+            // Fits the previous window: '0' + window-width bits.
+            w.write_bit(false);
+            w.write_bits(xor >> (64 - win_lead - win_mean), win_mean as u8);
+        } else {
+            // New window: '1' + 5-bit lead + 6-bit (len-1) + bits.
+            w.write_bit(true);
+            w.write_bits(lead as u64, 5);
+            w.write_bits((mean - 1) as u64, 6);
+            w.write_bits(xor >> trail, mean as u8);
+            win_lead = lead;
+            win_mean = mean;
+        }
+    }
+}
+
+fn decode_floats_xor(r: &mut BitReader<'_>, n: usize) -> Result<Vec<f64>> {
+    let mut out = Vec::with_capacity(n);
+    if n == 0 {
+        return Ok(out);
+    }
+    let mut prev = r.read_bits(64)?;
+    out.push(f64::from_bits(prev));
+    let mut lead = 0u32;
+    let mut mean = 0u32;
+    for _ in 1..n {
+        if !r.read_bit()? {
+            out.push(f64::from_bits(prev));
+            continue;
+        }
+        if r.read_bit()? {
+            lead = r.read_bits(5)? as u32;
+            mean = r.read_bits(6)? as u32 + 1;
+        }
+        if mean == 0 {
+            bail!("xor stream: window bits before any window definition");
+        }
+        let shift =
+            64u32.checked_sub(lead + mean).context("xor stream: bad window")?;
+        let v = r.read_bits(mean as u8)?;
+        prev ^= v << shift;
+        out.push(f64::from_bits(prev));
+    }
+    Ok(out)
+}
+
+/// First-occurrence dictionary over f64 *bit patterns* (NaN-safe).
+/// Returns `None` when the column has too many distinct values to win.
+fn encode_floats_dict(xs: &[f64]) -> Option<Vec<u8>> {
+    let mut dict: Vec<u64> = Vec::new();
+    let mut codes: Vec<u32> = Vec::with_capacity(xs.len());
+    let mut map: std::collections::HashMap<u64, u32> = std::collections::HashMap::new();
+    for &x in xs {
+        let bits = x.to_bits();
+        match map.get(&bits) {
+            Some(&p) => codes.push(p),
+            None => {
+                if dict.len() >= 255 {
+                    return None; // not dictionary-friendly
+                }
+                map.insert(bits, dict.len() as u32);
+                codes.push(dict.len() as u32);
+                dict.push(bits);
+            }
+        }
+    }
+    let mut e = Enc::new();
+    e.varint(dict.len() as u64);
+    for &dv in &dict {
+        e.u64(dv);
+    }
+    for &c in &codes {
+        e.varint(c as u64);
+    }
+    Some(e.finish())
+}
+
+fn decode_floats_dict(d: &mut Dec, n: usize) -> Result<Vec<f64>> {
+    let k = d.varint()? as usize;
+    let mut dict = Vec::with_capacity(k);
+    for _ in 0..k {
+        dict.push(d.u64()?);
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = d.varint()? as usize;
+        let bits = *dict.get(c).context("f64 dict: code out of range")?;
+        out.push(f64::from_bits(bits));
+    }
+    Ok(out)
+}
+
+// ----------------------------------------------------------- bool codec --
+
+fn encode_bools_rle(xs: &[bool], e: &mut Enc) {
+    if xs.is_empty() {
+        return;
+    }
+    e.u8(xs[0] as u8);
+    let mut cur = xs[0];
+    let mut run = 1u64;
+    for &b in &xs[1..] {
+        if b == cur {
+            run += 1;
+        } else {
+            e.varint(run);
+            cur = b;
+            run = 1;
+        }
+    }
+    e.varint(run);
+}
+
+fn decode_bools_rle(d: &mut Dec, n: usize) -> Result<Vec<bool>> {
+    let mut out = Vec::with_capacity(n);
+    if n == 0 {
+        return Ok(out);
+    }
+    let mut cur = d.u8()? != 0;
+    while out.len() < n {
+        let run = d.varint()? as usize;
+        if run == 0 || out.len() + run > n {
+            bail!("bool RLE: bad run length");
+        }
+        out.resize(out.len() + run, cur);
+        cur = !cur;
+    }
+    Ok(out)
+}
+
+fn encode_bools_bitset(xs: &[bool], e: &mut Enc) {
+    let mut byte = 0u8;
+    for (i, &b) in xs.iter().enumerate() {
+        if b {
+            byte |= 1 << (i % 8);
+        }
+        if i % 8 == 7 {
+            e.u8(byte);
+            byte = 0;
+        }
+    }
+    if xs.len() % 8 != 0 {
+        e.u8(byte);
+    }
+}
+
+fn decode_bools_bitset(d: &mut Dec, n: usize) -> Result<Vec<bool>> {
+    let mut out = Vec::with_capacity(n);
+    for chunk in 0..n.div_ceil(8) {
+        let byte = d.u8()?;
+        for i in 0..8 {
+            if chunk * 8 + i < n {
+                out.push(byte & (1 << i) != 0);
+            }
+        }
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------------ str codec --
+
+fn encode_strs_dict(xs: &[String], e: &mut Enc) {
+    let mut dict: Vec<&str> = Vec::new();
+    let mut codes: Vec<u32> = Vec::with_capacity(xs.len());
+    let mut map: std::collections::HashMap<&str, u32> = std::collections::HashMap::new();
+    for s in xs {
+        let code = *map.entry(s.as_str()).or_insert_with(|| {
+            dict.push(s.as_str());
+            (dict.len() - 1) as u32
+        });
+        codes.push(code);
+    }
+    e.varint(dict.len() as u64);
+    for s in &dict {
+        e.str(s);
+    }
+    for &c in &codes {
+        e.varint(c as u64);
+    }
+}
+
+fn decode_strs_dict(d: &mut Dec, n: usize) -> Result<Vec<String>> {
+    let k = d.varint()? as usize;
+    let mut dict = Vec::with_capacity(k);
+    for _ in 0..k {
+        dict.push(d.str()?.to_string());
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = d.varint()? as usize;
+        out.push(dict.get(c).context("str dict: code out of range")?.clone());
+    }
+    Ok(out)
+}
+
+// --------------------------------------------- per-type stream encoders --
+
+fn encode_float_stream(xs: &[f64], e: &mut Enc) {
+    let mut xw = BitWriter::new();
+    encode_floats_xor(xs, &mut xw);
+    let xor = xw.finish();
+    let dict = encode_floats_dict(xs);
+    let raw_len = xs.len() * 8;
+    if let Some(dd) = &dict {
+        if dd.len() < xor.len() && dd.len() < raw_len {
+            e.u8(TAG_F64_DICT);
+            e.buf.extend_from_slice(dd);
+            return;
+        }
+    }
+    if xor.len() < raw_len {
+        e.u8(TAG_F64_XOR);
+        e.buf.extend_from_slice(&xor);
+    } else {
+        e.u8(TAG_RAW);
+        for &x in xs {
+            e.f64(x);
+        }
+    }
+}
+
+fn encode_int_stream(xs: &[i64], e: &mut Enc) {
+    let mut dod = Enc::new();
+    encode_ints_dod(xs, &mut dod);
+    let dod = dod.finish();
+    if dod.len() < xs.len() * 8 {
+        e.u8(TAG_I64_DOD);
+        e.buf.extend_from_slice(&dod);
+    } else {
+        e.u8(TAG_RAW);
+        for &x in xs {
+            e.i64(x);
+        }
+    }
+}
+
+fn encode_bool_stream(xs: &[bool], e: &mut Enc) {
+    let mut rle = Enc::new();
+    encode_bools_rle(xs, &mut rle);
+    let rle = rle.finish();
+    let bitset_len = xs.len().div_ceil(8);
+    if rle.len() < bitset_len {
+        e.u8(TAG_BOOL_RLE);
+        e.buf.extend_from_slice(&rle);
+    } else {
+        e.u8(TAG_BOOL_BITSET);
+        encode_bools_bitset(xs, e);
+    }
+}
+
+fn encode_str_stream(xs: &[String], e: &mut Enc) {
+    let mut dict = Enc::new();
+    encode_strs_dict(xs, &mut dict);
+    let dict = dict.finish();
+    let mut raw = Enc::new();
+    for s in xs {
+        raw.str(s);
+    }
+    let raw = raw.finish();
+    if dict.len() < raw.len() {
+        e.u8(TAG_STR_DICT);
+        e.buf.extend_from_slice(&dict);
+    } else {
+        e.u8(TAG_RAW);
+        e.buf.extend_from_slice(&raw);
+    }
+}
+
+fn decode_value_stream(d: &mut Dec<'_>, ty: AttrType, n: usize) -> Result<Slab> {
+    let tag = d.u8()?;
+    Ok(match (ty, tag) {
+        (AttrType::Float, TAG_RAW) => {
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                xs.push(d.f64()?);
+            }
+            Slab::Float(xs)
+        }
+        (AttrType::Float, TAG_F64_XOR) => {
+            let mut r = BitReader::new(d.take_rest());
+            Slab::Float(decode_floats_xor(&mut r, n)?)
+        }
+        (AttrType::Float, TAG_F64_DICT) => Slab::Float(decode_floats_dict(d, n)?),
+        (AttrType::Int, TAG_RAW) => {
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                xs.push(d.i64()?);
+            }
+            Slab::Int(xs)
+        }
+        (AttrType::Int, TAG_I64_DOD) => Slab::Int(decode_ints_dod(d, n)?),
+        (AttrType::Bool, TAG_RAW) => {
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                xs.push(d.u8()? != 0);
+            }
+            Slab::Bool(xs)
+        }
+        (AttrType::Bool, TAG_BOOL_RLE) => Slab::Bool(decode_bools_rle(d, n)?),
+        (AttrType::Bool, TAG_BOOL_BITSET) => Slab::Bool(decode_bools_bitset(d, n)?),
+        (AttrType::Str, TAG_RAW) => {
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                xs.push(d.str()?.to_string());
+            }
+            Slab::Str(xs)
+        }
+        (AttrType::Str, TAG_STR_DICT) => Slab::Str(decode_strs_dict(d, n)?),
+        (ty, tag) => bail!("v2 slice: codec tag {tag} invalid for {ty:?} column"),
+    })
+}
+
+// ------------------------------------------------------- v2 body layout --
+
+/// Encode a packed group's cells (`cells[t - t_lo][pos]`) as a v2
+/// attribute body. See the `gofs::slice` module docs for the layout table.
+pub(crate) fn encode_attr_body_v2(cells: &[Vec<Option<AttrColumn>>], ty: AttrType) -> Vec<u8> {
+    let n_ts = cells.len();
+    let n_pos = if n_ts == 0 { 0 } else { cells[0].len() };
+    let blocks: Vec<Vec<u8>> =
+        (0..n_pos).map(|pos| encode_pos_block(cells, pos, ty)).collect();
+    let mut e = Enc::new();
+    e.varint(n_ts as u64);
+    e.varint(n_pos as u64);
+    for b in &blocks {
+        e.varint(b.len() as u64);
+    }
+    for b in &blocks {
+        e.buf.extend_from_slice(b);
+    }
+    e.finish()
+}
+
+fn encode_pos_block(cells: &[Vec<Option<AttrColumn>>], pos: usize, ty: AttrType) -> Vec<u8> {
+    let n_ts = cells.len();
+    let present: Vec<bool> = (0..n_ts)
+        .map(|t| cells[t][pos].as_ref().map(|c| c.n_elements() > 0).unwrap_or(false))
+        .collect();
+    if !present.iter().any(|&p| p) {
+        return Vec::new();
+    }
+    let mut e = Enc::new();
+    // Presence bitmap over timesteps (the bool-bitset codec's layout:
+    // LSB-first per byte).
+    encode_bools_bitset(&present, &mut e);
+    // Structure streams per present cell: idx deltas + multiplicities
+    // (uniform multiplicity collapses to one varint — the common
+    // single-valued case).
+    for (t, &p) in present.iter().enumerate() {
+        if !p {
+            continue;
+        }
+        let col = cells[t][pos].as_ref().expect("present cell");
+        let (idx, off, _) = col.parts();
+        e.varint(idx.len() as u64);
+        let mut prev = 0u32;
+        for &i in idx {
+            e.varint((i - prev) as u64);
+            prev = i;
+        }
+        let counts: Vec<u32> = (0..idx.len()).map(|k| off[k + 1] - off[k]).collect();
+        if counts.iter().all(|&c| c == counts[0]) {
+            e.u8(1);
+            e.varint(counts[0] as u64);
+        } else {
+            e.u8(0);
+            for &c in &counts {
+                e.varint(c as u64);
+            }
+        }
+    }
+    // One typed value stream for the whole block, in timestep order.
+    match ty {
+        AttrType::Float => {
+            let mut xs: Vec<f64> = Vec::new();
+            for (t, &p) in present.iter().enumerate() {
+                if p {
+                    match cells[t][pos].as_ref().expect("present cell").parts().2 {
+                        Slab::Float(v) => xs.extend_from_slice(v),
+                        other => panic!("Float column with {:?} slab", other.ty()),
+                    }
+                }
+            }
+            encode_float_stream(&xs, &mut e);
+        }
+        AttrType::Int => {
+            let mut xs: Vec<i64> = Vec::new();
+            for (t, &p) in present.iter().enumerate() {
+                if p {
+                    match cells[t][pos].as_ref().expect("present cell").parts().2 {
+                        Slab::Int(v) => xs.extend_from_slice(v),
+                        other => panic!("Int column with {:?} slab", other.ty()),
+                    }
+                }
+            }
+            encode_int_stream(&xs, &mut e);
+        }
+        AttrType::Bool => {
+            let mut xs: Vec<bool> = Vec::new();
+            for (t, &p) in present.iter().enumerate() {
+                if p {
+                    match cells[t][pos].as_ref().expect("present cell").parts().2 {
+                        Slab::Bool(v) => xs.extend_from_slice(v),
+                        other => panic!("Bool column with {:?} slab", other.ty()),
+                    }
+                }
+            }
+            encode_bool_stream(&xs, &mut e);
+        }
+        AttrType::Str => {
+            let mut xs: Vec<String> = Vec::new();
+            for (t, &p) in present.iter().enumerate() {
+                if p {
+                    match cells[t][pos].as_ref().expect("present cell").parts().2 {
+                        Slab::Str(v) => xs.extend_from_slice(v),
+                        other => panic!("Str column with {:?} slab", other.ty()),
+                    }
+                }
+            }
+            encode_str_stream(&xs, &mut e);
+        }
+    }
+    e.finish()
+}
+
+/// Parse a v2 body's header: `(n_ts, n_pos, per-pos byte ranges)`. Blocks
+/// are decoded lazily, one position at a time, via [`decode_pos_block`].
+pub(crate) fn parse_v2_layout(body: &[u8]) -> Result<(usize, usize, Vec<(usize, usize)>)> {
+    let mut d = Dec::new(body);
+    let n_ts = d.varint()? as usize;
+    let n_pos = d.varint()? as usize;
+    let mut lens = Vec::with_capacity(n_pos);
+    for _ in 0..n_pos {
+        lens.push(d.varint()? as usize);
+    }
+    let mut cursor = body.len() - d.remaining();
+    let mut ranges = Vec::with_capacity(n_pos);
+    for &l in &lens {
+        if cursor + l > body.len() {
+            bail!("v2 slice: truncated position block");
+        }
+        ranges.push((cursor, cursor + l));
+        cursor += l;
+    }
+    if cursor != body.len() {
+        bail!("v2 slice: {} trailing bytes", body.len() - cursor);
+    }
+    Ok((n_ts, n_pos, ranges))
+}
+
+/// Decode one position's block into its per-timestep columns (`None` for
+/// timesteps with no values). An empty block means "never present".
+pub(crate) fn decode_pos_block(
+    block: &[u8],
+    ty: AttrType,
+    n_ts: usize,
+) -> Result<Vec<Option<AttrColumn>>> {
+    if block.is_empty() {
+        return Ok(vec![None; n_ts]);
+    }
+    let mut d = Dec::new(block);
+    let present = decode_bools_bitset(&mut d, n_ts)?;
+    struct CellStruct {
+        idx: Vec<u32>,
+        counts: Vec<u32>,
+        n_vals: usize,
+    }
+    let mut structs: Vec<Option<CellStruct>> = Vec::with_capacity(n_ts);
+    let mut total_vals = 0usize;
+    for &p in &present {
+        if !p {
+            structs.push(None);
+            continue;
+        }
+        let n = d.varint()? as usize;
+        if n == 0 {
+            bail!("v2 slice: present cell with zero elements");
+        }
+        let mut idx = Vec::with_capacity(n);
+        let mut prev = 0u32;
+        for _ in 0..n {
+            let i = prev + d.varint()? as u32;
+            idx.push(i);
+            prev = i;
+        }
+        let counts: Vec<u32> = if d.u8()? == 1 {
+            vec![d.varint()? as u32; n]
+        } else {
+            let mut cs = Vec::with_capacity(n);
+            for _ in 0..n {
+                cs.push(d.varint()? as u32);
+            }
+            cs
+        };
+        let n_vals: usize = counts.iter().map(|&c| c as usize).sum();
+        total_vals += n_vals;
+        structs.push(Some(CellStruct { idx, counts, n_vals }));
+    }
+    let slab = decode_value_stream(&mut d, ty, total_vals)?;
+    if slab.len() != total_vals {
+        bail!("v2 slice: value stream produced {} of {total_vals} values", slab.len());
+    }
+    let mut out = Vec::with_capacity(n_ts);
+    let mut base = 0usize;
+    for s in structs {
+        match s {
+            None => out.push(None),
+            Some(cs) => {
+                let vals = slab.sub_slab(base, base + cs.n_vals);
+                base += cs.n_vals;
+                let mut off = Vec::with_capacity(cs.idx.len() + 1);
+                off.push(0u32);
+                let mut acc = 0u32;
+                for &c in &cs.counts {
+                    acc += c;
+                    off.push(acc);
+                }
+                out.push(Some(AttrColumn::from_parts(cs.idx, off, vals)));
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::AttrValue;
+    use crate::util::propcheck::{forall, Gen};
+
+    fn roundtrip_floats_xor(xs: &[f64]) -> Vec<f64> {
+        let mut w = BitWriter::new();
+        encode_floats_xor(xs, &mut w);
+        let buf = w.finish();
+        decode_floats_xor(&mut BitReader::new(&buf), xs.len()).unwrap()
+    }
+
+    /// Bit-exact comparison (NaN-safe).
+    fn assert_bits_eq(a: &[f64], b: &[f64]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn xor_roundtrips_special_floats() {
+        let xs = vec![
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            -0.0,
+            0.0,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            -f64::MAX,
+            1.0,
+            1.0,
+            -1.0,
+        ];
+        assert_bits_eq(&xs, &roundtrip_floats_xor(&xs));
+    }
+
+    #[test]
+    fn xor_roundtrips_full_width_xor() {
+        // Sign flip with max-entropy mantissa: 64 meaningful XOR bits —
+        // exercises the (len - 1) 6-bit length field at its limit.
+        let a = f64::from_bits(0x8000_0000_0000_0000 | 0x000F_FFFF_FFFF_FFFF);
+        let xs = vec![f64::from_bits(0x7FFF_FFFF_FFFF_FFFF), a, 0.0, f64::from_bits(u64::MAX)];
+        assert_bits_eq(&xs, &roundtrip_floats_xor(&xs));
+    }
+
+    #[test]
+    fn xor_compresses_repeats_and_quantized_series() {
+        // Identical values: 64 + (n-1) bits.
+        let same = vec![42.5; 100];
+        let mut w = BitWriter::new();
+        encode_floats_xor(&same, &mut w);
+        assert!(w.byte_len() <= 8 + 100 / 8 + 1);
+        // Quantized measurement-like series (multiples of 2^-10).
+        let q: Vec<f64> = (0..200).map(|i| (i % 17 + 3) as f64 * (1.0 / 1024.0) * 13.0).collect();
+        let mut w = BitWriter::new();
+        encode_floats_xor(&q, &mut w);
+        assert!(
+            w.byte_len() < q.len() * 6,
+            "xor should clearly beat raw on quantized data: {} vs {}",
+            w.byte_len(),
+            q.len() * 8
+        );
+        assert_bits_eq(&q, &roundtrip_floats_xor(&q));
+    }
+
+    #[test]
+    fn dod_roundtrips_extremes() {
+        let xs = vec![i64::MIN, i64::MAX, 0, -1, 1, i64::MAX, i64::MIN, 7, 7, 7];
+        let mut e = Enc::new();
+        encode_ints_dod(&xs, &mut e);
+        let buf = e.finish();
+        let got = decode_ints_dod(&mut Dec::new(&buf), xs.len()).unwrap();
+        assert_eq!(xs, got);
+    }
+
+    #[test]
+    fn dod_compresses_counters() {
+        let xs: Vec<i64> = (0..500).map(|i| 1000 + i * 3).collect();
+        let mut e = Enc::new();
+        encode_ints_dod(&xs, &mut e);
+        // After the first two values every delta-of-delta is 0 → 1 byte.
+        assert!(e.buf.len() < 520, "{} bytes", e.buf.len());
+        let buf = e.finish();
+        assert_eq!(decode_ints_dod(&mut Dec::new(&buf), xs.len()).unwrap(), xs);
+    }
+
+    #[test]
+    fn bool_rle_and_bitset_roundtrip() {
+        forall(100, |g| {
+            let xs = g.vec(0..=200, |g| g.bool(0.8));
+            let mut e = Enc::new();
+            encode_bool_stream(&xs, &mut e);
+            let buf = e.finish();
+            let mut d = Dec::new(&buf);
+            let slab = decode_value_stream(&mut d, AttrType::Bool, xs.len()).unwrap();
+            assert_eq!(slab, Slab::Bool(xs));
+        });
+    }
+
+    #[test]
+    fn str_dict_roundtrip_and_wins_on_repeats() {
+        let xs: Vec<String> = (0..100).map(|i| format!("plate-{}", i % 5)).collect();
+        let mut e = Enc::new();
+        encode_str_stream(&xs, &mut e);
+        let buf = e.finish();
+        assert_eq!(buf[0], TAG_STR_DICT);
+        assert!(buf.len() < 100 * 8);
+        let mut d = Dec::new(&buf);
+        assert_eq!(decode_value_stream(&mut d, AttrType::Str, xs.len()).unwrap(), Slab::Str(xs));
+    }
+
+    #[test]
+    fn f64_dict_wins_on_few_distinct_values() {
+        let xs: Vec<f64> = (0..300).map(|i| [0.25, 0.5, f64::NAN][i % 3]).collect();
+        let mut e = Enc::new();
+        encode_float_stream(&xs, &mut e);
+        let buf = e.finish();
+        assert_eq!(buf[0], TAG_F64_DICT);
+        assert!(buf.len() < xs.len() * 8 / 4);
+        let mut d = Dec::new(&buf);
+        let got = match decode_value_stream(&mut d, AttrType::Float, xs.len()).unwrap() {
+            Slab::Float(v) => v,
+            _ => unreachable!(),
+        };
+        assert_bits_eq(&xs, &got);
+    }
+
+    fn arb_cell(g: &mut Gen, ty: AttrType, max_idx: u32) -> AttrColumn {
+        let mut col = AttrColumn::new_typed(ty);
+        let n = g.usize(1..8);
+        let mut i = 0u32;
+        for _ in 0..n {
+            i += g.u64(1..(max_idx as u64 / 8).max(2)) as u32;
+            let m = g.usize(1..4);
+            col.push(
+                i,
+                (0..m).map(|_| match ty {
+                    AttrType::Bool => AttrValue::Bool(g.bool(0.5)),
+                    AttrType::Int => AttrValue::Int(g.i64(-1_000_000..1_000_000)),
+                    AttrType::Float => AttrValue::Float(g.f64(-1e9, 1e9)),
+                    AttrType::Str => AttrValue::Str(g.string(0..=10)),
+                }),
+            );
+        }
+        col
+    }
+
+    /// Satellite: propcheck roundtrip over random typed columns through
+    /// the full v2 body encode/decode, including empty groups, absent
+    /// cells and single-timestep groups.
+    #[test]
+    fn v2_body_roundtrip_property() {
+        for ty in [AttrType::Bool, AttrType::Int, AttrType::Float, AttrType::Str] {
+            forall(40, move |g| {
+                let n_ts = g.usize(1..6);
+                let n_pos = g.usize(1..5);
+                let cells: Vec<Vec<Option<AttrColumn>>> = (0..n_ts)
+                    .map(|_| {
+                        (0..n_pos)
+                            .map(|_| {
+                                if g.bool(0.6) {
+                                    Some(arb_cell(g, ty, 64))
+                                } else {
+                                    None
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let body = encode_attr_body_v2(&cells, ty);
+                let (d_ts, d_pos, ranges) = parse_v2_layout(&body).unwrap();
+                assert_eq!((d_ts, d_pos), (n_ts, n_pos));
+                for (pos, &(lo, hi)) in ranges.iter().enumerate() {
+                    let cols = decode_pos_block(&body[lo..hi], ty, n_ts).unwrap();
+                    assert_eq!(cols.len(), n_ts);
+                    for (t, got) in cols.iter().enumerate() {
+                        match (&cells[t][pos], got) {
+                            (Some(want), Some(got)) => assert_eq!(want, got),
+                            (None, None) => {}
+                            (want, got) => panic!(
+                                "t={t} pos={pos}: want {:?}, got {:?}",
+                                want.is_some(),
+                                got.is_some()
+                            ),
+                        }
+                    }
+                }
+            });
+        }
+    }
+
+    /// Satellite: empty groups (all-None) and single-timestep groups.
+    #[test]
+    fn v2_body_empty_and_single_timestep_groups() {
+        // Entirely empty group.
+        let cells: Vec<Vec<Option<AttrColumn>>> = vec![vec![None, None]; 3];
+        let body = encode_attr_body_v2(&cells, AttrType::Float);
+        let (n_ts, n_pos, ranges) = parse_v2_layout(&body).unwrap();
+        assert_eq!((n_ts, n_pos), (3, 2));
+        for &(lo, hi) in &ranges {
+            assert_eq!(lo, hi, "empty pos block must be zero bytes");
+            let cols = decode_pos_block(&body[lo..hi], AttrType::Float, n_ts).unwrap();
+            assert!(cols.iter().all(|c| c.is_none()));
+        }
+
+        // Single-timestep group (pack = 1 shape).
+        let mut col = AttrColumn::new();
+        col.push(0, [AttrValue::Float(3.5), AttrValue::Float(4.5)]);
+        let cells = vec![vec![Some(col.clone()), None]];
+        let body = encode_attr_body_v2(&cells, AttrType::Float);
+        let (n_ts, _, ranges) = parse_v2_layout(&body).unwrap();
+        assert_eq!(n_ts, 1);
+        let got = decode_pos_block(&body[ranges[0].0..ranges[0].1], AttrType::Float, 1).unwrap();
+        assert_eq!(got[0].as_ref(), Some(&col));
+        let got1 = decode_pos_block(&body[ranges[1].0..ranges[1].1], AttrType::Float, 1).unwrap();
+        assert!(got1[0].is_none());
+    }
+
+    /// NaN / ±inf / −0.0 survive the whole v2 body path bit-exactly.
+    #[test]
+    fn v2_body_special_floats() {
+        let mut col = AttrColumn::new();
+        col.push(2, [AttrValue::Float(f64::NAN), AttrValue::Float(-0.0)]);
+        col.push(5, [AttrValue::Float(f64::INFINITY), AttrValue::Float(f64::NEG_INFINITY)]);
+        let cells = vec![vec![Some(col)], vec![None]];
+        let body = encode_attr_body_v2(&cells, AttrType::Float);
+        let (_, _, ranges) = parse_v2_layout(&body).unwrap();
+        let got = decode_pos_block(&body[ranges[0].0..ranges[0].1], AttrType::Float, 2).unwrap();
+        let c = got[0].as_ref().unwrap();
+        match c.values(2).unwrap() {
+            crate::graph::ValuesRef::Floats(xs) => {
+                assert!(xs[0].is_nan());
+                assert_eq!(xs[1].to_bits(), (-0.0f64).to_bits());
+            }
+            _ => panic!("wrong slab type"),
+        }
+        assert_eq!(c.f64_at(5), Some(f64::INFINITY));
+        match c.values(5).unwrap() {
+            crate::graph::ValuesRef::Floats(xs) => {
+                assert_eq!(xs[1], f64::NEG_INFINITY);
+            }
+            _ => panic!("wrong slab type"),
+        }
+        assert!(got[1].is_none());
+    }
+
+    /// i64::MIN / MAX survive the v2 body path (wrapping delta-of-delta).
+    #[test]
+    fn v2_body_extreme_ints() {
+        let mut col = AttrColumn::new();
+        col.push(0, [AttrValue::Int(i64::MIN)]);
+        col.push(1, [AttrValue::Int(i64::MAX)]);
+        col.push(9, [AttrValue::Int(0)]);
+        let cells = vec![vec![Some(col.clone())]];
+        let body = encode_attr_body_v2(&cells, AttrType::Int);
+        let (_, _, ranges) = parse_v2_layout(&body).unwrap();
+        let got = decode_pos_block(&body[ranges[0].0..ranges[0].1], AttrType::Int, 1).unwrap();
+        assert_eq!(got[0].as_ref(), Some(&col));
+    }
+
+    #[test]
+    fn truncated_v2_bodies_error_cleanly() {
+        let mut col = AttrColumn::new();
+        col.push(0, [AttrValue::Float(1.0), AttrValue::Float(2.0)]);
+        let cells = vec![vec![Some(col)]];
+        let body = encode_attr_body_v2(&cells, AttrType::Float);
+        assert!(parse_v2_layout(&body[..body.len() - 1]).is_err());
+        let (_, _, ranges) = parse_v2_layout(&body).unwrap();
+        let (lo, hi) = ranges[0];
+        // Chop the value stream: decode must error, not panic.
+        assert!(decode_pos_block(&body[lo..hi - 1], AttrType::Float, 1).is_err());
+    }
+}

@@ -34,6 +34,7 @@
 //! ```
 
 pub mod cache;
+pub(crate) mod colcodec;
 pub mod disk;
 pub mod reader;
 pub mod slice;
@@ -41,8 +42,8 @@ pub mod writer;
 
 pub use cache::SliceCache;
 pub use disk::DiskModel;
-pub use reader::{open_collection, Projection, Store, StoreOptions, SubgraphInstance};
-pub use slice::{SliceFile, SliceKind};
+pub use reader::{open_collection, Projection, ReadTrace, Store, StoreOptions, SubgraphInstance};
+pub use slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};
 pub use writer::{deploy, DeployConfig, DeployReport};
 
 /// Identifies one attribute slice within a partition.

@@ -14,10 +14,11 @@
 //! * transparent **LRU slice caching** (§V-E).
 
 use crate::graph::instance::{resolve, ValueRef};
-use crate::graph::{AttrColumn, Schema, SubgraphId, TimeWindow, Timestep};
+use crate::graph::{AttrColumn, AttrType, Schema, SubgraphId, TimeWindow, Timestep};
 use crate::gofs::cache::SliceCache;
+use crate::gofs::colcodec;
 use crate::gofs::disk::{DiskClock, DiskModel};
-use crate::gofs::slice::{SliceFile, SliceKind};
+use crate::gofs::slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};
 use crate::gofs::writer::{decode_meta_slice, part_dir, PartMeta};
 use crate::gofs::SliceKey;
 use crate::metrics::{keys, Metrics};
@@ -25,7 +26,7 @@ use crate::partition::{BinPacking, RemoteEdge, Subgraph};
 use crate::util::wire::Dec;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Which attributes to load for subgraph instances (§V-B projection).
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
@@ -61,12 +62,57 @@ impl Projection {
     }
 }
 
+/// Per-call GoFS load counters. Threading one of these through
+/// [`Store::read_instance_traced`] gives callers (the engine's pipelined
+/// loader in particular) exact per-timestep attribution even when loads
+/// overlap under temporal concurrency — global-counter snapshot diffs
+/// mixed concurrent timesteps' counts.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReadTrace {
+    pub slices_read: u64,
+    pub slice_bytes: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub sim_disk_ns: u64,
+}
+
+impl ReadTrace {
+    pub fn merge(&mut self, other: &ReadTrace) {
+        self.slices_read += other.slices_read;
+        self.slice_bytes += other.slice_bytes;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.sim_disk_ns += other.sim_disk_ns;
+    }
+}
+
 /// A decoded attribute slice: columns per (timestep-in-group, pos-in-bin).
+///
+/// v1 bodies decode eagerly (their cells interleave, so decoding is
+/// all-or-nothing). v2 bodies keep the raw body and decode **lazily per
+/// position column**, so projection and cache hits never pay for cells no
+/// subgraph in this run touches; each position decodes at most once
+/// (`OnceLock`) and its cells are shared via `Arc` as before.
 struct DecodedAttrSlice {
     t_lo: Timestep,
+    n_ts: usize,
     n_pos: usize,
-    /// Row-major: `cols[(t - t_lo) * n_pos + pos]`.
-    cols: Vec<Option<Arc<AttrColumn>>>,
+    repr: SliceRepr,
+}
+
+enum SliceRepr {
+    /// v1: row-major `cols[(t - t_lo) * n_pos + pos]`.
+    Eager(Vec<Option<Arc<AttrColumn>>>),
+    /// v2: per-position byte ranges into `body`, decoded on first touch.
+    Lazy { body: Vec<u8>, ty: AttrType, blocks: Vec<LazyBlock> },
+}
+
+struct LazyBlock {
+    lo: usize,
+    hi: usize,
+    /// Decoded cells for this position (`n_ts` entries), or the decode
+    /// error message (stored so every reader observes the same failure).
+    cells: OnceLock<std::result::Result<Vec<Option<Arc<AttrColumn>>>, String>>,
 }
 
 impl DecodedAttrSlice {
@@ -76,12 +122,44 @@ impl DecodedAttrSlice {
     /// position returns `None` instead of panicking — `(t - self.t_lo)`
     /// on `usize` used to underflow when a caller asked for a timestep
     /// before the slice's packed group.
-    fn get(&self, t: Timestep, pos: usize) -> Option<Arc<AttrColumn>> {
+    fn get(&self, t: Timestep, pos: usize) -> Result<Option<Arc<AttrColumn>>> {
         if t < self.t_lo || pos >= self.n_pos {
-            return None;
+            return Ok(None);
         }
-        let idx = (t - self.t_lo) * self.n_pos + pos;
-        self.cols.get(idx)?.clone()
+        let ti = t - self.t_lo;
+        if ti >= self.n_ts {
+            return Ok(None);
+        }
+        match &self.repr {
+            SliceRepr::Eager(cols) => Ok(cols.get(ti * self.n_pos + pos).and_then(|c| c.clone())),
+            SliceRepr::Lazy { body, ty, blocks } => {
+                let block = &blocks[pos];
+                let cells = block.cells.get_or_init(|| {
+                    colcodec::decode_pos_block(&body[block.lo..block.hi], *ty, self.n_ts)
+                        .map(|cols| cols.into_iter().map(|c| c.map(Arc::new)).collect())
+                        .map_err(|e| format!("{e:#}"))
+                });
+                match cells {
+                    Ok(cols) => Ok(cols[ti].clone()),
+                    Err(msg) => bail!("v2 attribute slice decode: {msg}"),
+                }
+            }
+        }
+    }
+
+    /// Approximate resident bytes for cache accounting. Eager slices are
+    /// weighed exactly; lazy v2 slices are weighed as their encoded body
+    /// plus a decode-expansion allowance (entries are weighed once, at
+    /// insert, before any lazy decode has run).
+    fn weight_bytes(&self) -> u64 {
+        match &self.repr {
+            SliceRepr::Eager(cols) => {
+                (64 + cols.len() * 16
+                    + cols.iter().flatten().map(|c| c.mem_bytes()).sum::<usize>())
+                    as u64
+            }
+            SliceRepr::Lazy { body, blocks, .. } => (body.len() * 3 + blocks.len() * 48) as u64,
+        }
     }
 }
 
@@ -134,14 +212,57 @@ impl SubgraphInstance {
     }
 
     /// First float value of an edge attribute (common hot path: weights).
+    /// Zero-copy: reads straight out of the typed slab, no `AttrValue`.
+    #[inline]
     pub fn edge_f64(&self, attr: usize, edge_pos: usize) -> Option<f64> {
-        self.edge_values(attr, edge_pos).first().and_then(|v| v.as_float())
+        self.edge_values(attr, edge_pos).first_f64()
+    }
+
+    /// First boolean value of an edge attribute (e.g. `active` flags).
+    #[inline]
+    pub fn edge_bool(&self, attr: usize, edge_pos: usize) -> Option<bool> {
+        self.edge_values(attr, edge_pos).first_bool()
+    }
+
+    /// First integer value of an edge attribute.
+    #[inline]
+    pub fn edge_i64(&self, attr: usize, edge_pos: usize) -> Option<i64> {
+        self.edge_values(attr, edge_pos).first_i64()
+    }
+
+    /// Mean of an edge attribute's float-coercible values (hot path for
+    /// weight aggregation; no per-value materialization).
+    #[inline]
+    pub fn edge_mean_f64(&self, attr: usize, edge_pos: usize) -> Option<f64> {
+        self.edge_values(attr, edge_pos).mean_f64()
+    }
+
+    /// First float value of a vertex attribute.
+    #[inline]
+    pub fn vertex_f64(&self, attr: usize, v: u32) -> Option<f64> {
+        self.vertex_values(attr, v).first_f64()
+    }
+
+    /// First integer value of a vertex attribute.
+    #[inline]
+    pub fn vertex_i64(&self, attr: usize, v: u32) -> Option<i64> {
+        self.vertex_values(attr, v).first_i64()
+    }
+
+    /// First boolean value of a vertex attribute.
+    #[inline]
+    pub fn vertex_bool(&self, attr: usize, v: u32) -> Option<bool> {
+        self.vertex_values(attr, v).first_bool()
     }
 
     /// True when the instance has any value for this vertex attribute
     /// (before inheritance).
     pub fn vertex_has_value(&self, attr: usize, v: u32) -> bool {
-        self.vcols[attr].as_ref().map(|c| !c.get(v).is_empty()).unwrap_or(false)
+        self.vcols[attr]
+            .as_ref()
+            .and_then(|c| c.values(v))
+            .map(|s| !s.is_empty())
+            .unwrap_or(false)
     }
 
     /// Iterate (local vertex, values) for a projected vertex attribute.
@@ -208,7 +329,7 @@ impl Store {
             dir,
             shared: Arc::new(shared),
             meta,
-            cache: SliceCache::new(opts.cache_slots),
+            cache: SliceCache::with_weigher(opts.cache_slots, DecodedAttrSlice::weight_bytes),
             opts,
             disk_clock,
         })
@@ -248,6 +369,11 @@ impl Store {
         self.cache.stats()
     }
 
+    /// Approximate bytes of decoded slices resident in the cache.
+    pub fn cache_resident_bytes(&self) -> u64 {
+        self.cache.resident_bytes()
+    }
+
     /// Subgraphs in bin-major order — the balanced execution order the
     /// partition iterator suggests (§V-D).
     pub fn subgraphs(&self) -> Vec<Arc<Subgraph>> {
@@ -275,6 +401,19 @@ impl Store {
         t: Timestep,
         proj: &Projection,
     ) -> Result<SubgraphInstance> {
+        let mut trace = ReadTrace::default();
+        self.read_instance_traced(sg_local, t, proj, &mut trace)
+    }
+
+    /// Like [`Store::read_instance`], also accumulating this call's GoFS
+    /// counters into `trace` (exact attribution under concurrent loads).
+    pub fn read_instance_traced(
+        &self,
+        sg_local: usize,
+        t: Timestep,
+        proj: &Projection,
+        trace: &mut ReadTrace,
+    ) -> Result<SubgraphInstance> {
         if t >= self.meta.n_instances {
             bail!("timestep {t} out of range ({} instances)", self.meta.n_instances);
         }
@@ -289,11 +428,11 @@ impl Store {
 
         let mut vcols = vec![None; self.shared.vertex_schema.len()];
         for &a in &proj.vertex_attrs {
-            vcols[a] = self.attr_column(true, a, bin, group, t, pos)?;
+            vcols[a] = self.attr_column(true, a, bin, group, t, pos, trace)?;
         }
         let mut ecols = vec![None; self.shared.edge_schema.len()];
         for &a in &proj.edge_attrs {
-            ecols[a] = self.attr_column(false, a, bin, group, t, pos)?;
+            ecols[a] = self.attr_column(false, a, bin, group, t, pos, trace)?;
         }
         Ok(SubgraphInstance {
             shared: self.shared.clone(),
@@ -315,6 +454,7 @@ impl Store {
         timesteps.iter().map(move |&t| self.read_instance(sg_local, t, proj))
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn attr_column(
         &self,
         vertex: bool,
@@ -323,6 +463,7 @@ impl Store {
         group: usize,
         t: Timestep,
         pos: usize,
+        trace: &mut ReadTrace,
     ) -> Result<Option<Arc<AttrColumn>>> {
         let slot = if vertex { attr } else { self.shared.vertex_schema.len() + attr };
         if !self.meta.presence[slot][bin][group] {
@@ -335,6 +476,9 @@ impl Store {
             self.shared.edge_schema.attrs[attr].ty
         };
         let t_lo = group * self.meta.pack;
+        let mut read_bytes = 0u64;
+        let mut read_disk_ns = 0u64;
+        let mut did_read = false;
         let (decoded, outcome) = self.cache.get_or_load_traced(&key, || -> Result<DecodedAttrSlice> {
             let path = self.dir.join(key.rel_path());
             let m = &self.opts.metrics;
@@ -343,11 +487,15 @@ impl Store {
                 let r = SliceFile::read_from(&path)?;
                 (r, t0.elapsed().as_nanos() as u64)
             };
+            let sim = self.disk_clock.charge(&self.opts.disk, bytes);
             m.incr(keys::SLICES_READ);
             m.add(keys::SLICE_BYTES, bytes);
             m.add(keys::SLICE_READ_NS, real_ns);
-            m.add(keys::SIM_DISK_NS, self.disk_clock.charge(&self.opts.disk, bytes));
-            decode_attr_slice(&slice, ty, t_lo)
+            m.add(keys::SIM_DISK_NS, sim);
+            did_read = true;
+            read_bytes = bytes;
+            read_disk_ns = sim;
+            decode_attr_slice(slice, ty, t_lo)
         })?;
         // Mirror cache effectiveness into the shared metrics registry from
         // this call's own outcome. (Diffing the cache's global counters
@@ -356,34 +504,62 @@ impl Store {
         let m = &self.opts.metrics;
         if outcome.hit {
             m.incr(keys::CACHE_HITS);
+            trace.cache_hits += 1;
         } else {
             m.incr(keys::CACHE_MISSES);
+            trace.cache_misses += 1;
         }
         if outcome.evicted {
             m.incr(keys::CACHE_EVICTIONS);
         }
-        Ok(decoded.get(t, pos))
+        if did_read {
+            trace.slices_read += 1;
+            trace.slice_bytes += read_bytes;
+            trace.sim_disk_ns += read_disk_ns;
+        }
+        decoded.get(t, pos)
     }
 }
 
-fn decode_attr_slice(slice: &SliceFile, ty: crate::graph::AttrType, t_lo: usize) -> Result<DecodedAttrSlice> {
+/// Decode an attribute slice container into the cacheable representation.
+/// v1 decodes all cells eagerly; v2 only parses the header (per-position
+/// blocks decode lazily on first touch — see [`DecodedAttrSlice`]).
+fn decode_attr_slice(slice: SliceFile, ty: AttrType, t_lo: usize) -> Result<DecodedAttrSlice> {
     if slice.kind != SliceKind::Attribute {
         bail!("expected attribute slice");
     }
-    let mut d = Dec::new(&slice.body);
-    let n_ts = d.varint()? as usize;
-    let n_pos = d.varint()? as usize;
-    let mut cols = Vec::with_capacity(n_ts * n_pos);
-    for _ in 0..n_ts {
-        for _ in 0..n_pos {
-            match d.u8()? {
-                0 => cols.push(None),
-                1 => cols.push(Some(Arc::new(AttrColumn::decode_from(ty, &mut d)?))),
-                x => bail!("bad cell tag {x}"),
+    match slice.version {
+        VERSION_V1 => {
+            let mut d = Dec::new(&slice.body);
+            let n_ts = d.varint()? as usize;
+            let n_pos = d.varint()? as usize;
+            let mut cols = Vec::with_capacity(n_ts * n_pos);
+            for _ in 0..n_ts {
+                for _ in 0..n_pos {
+                    match d.u8()? {
+                        0 => cols.push(None),
+                        1 => cols.push(Some(Arc::new(AttrColumn::decode_from(ty, &mut d)?))),
+                        x => bail!("bad cell tag {x}"),
+                    }
+                }
             }
+            Ok(DecodedAttrSlice { t_lo, n_ts, n_pos, repr: SliceRepr::Eager(cols) })
         }
+        VERSION_V2 => {
+            let (n_ts, n_pos, ranges) = colcodec::parse_v2_layout(&slice.body)?;
+            let blocks = ranges
+                .into_iter()
+                .map(|(lo, hi)| LazyBlock { lo, hi, cells: OnceLock::new() })
+                .collect();
+            Ok(DecodedAttrSlice {
+                t_lo,
+                n_ts,
+                n_pos,
+                repr: SliceRepr::Lazy { body: slice.body, ty, blocks },
+            })
+        }
+        v => bail!("unsupported attribute slice version {v}"),
     }
-    Ok(DecodedAttrSlice { t_lo, n_pos, cols })
 }
 
 fn decode_template_slice(body: &[u8]) -> Result<PartShared> {
@@ -525,25 +701,26 @@ mod tests {
     fn decoded_slice_get_is_total_over_timesteps_and_positions() {
         let slice = DecodedAttrSlice {
             t_lo: 4,
+            n_ts: 2,
             n_pos: 2,
-            cols: vec![
+            repr: SliceRepr::Eager(vec![
                 Some(Arc::new(crate::graph::AttrColumn::new())),
                 None,
                 None,
                 Some(Arc::new(crate::graph::AttrColumn::new())),
-            ],
+            ]),
         };
         // Before the group window: None, not a panic.
-        assert!(slice.get(0, 0).is_none());
-        assert!(slice.get(3, 1).is_none());
+        assert!(slice.get(0, 0).unwrap().is_none());
+        assert!(slice.get(3, 1).unwrap().is_none());
         // Out-of-range position: None.
-        assert!(slice.get(4, 2).is_none());
+        assert!(slice.get(4, 2).unwrap().is_none());
         // Past the packed rows: None.
-        assert!(slice.get(6, 0).is_none());
+        assert!(slice.get(6, 0).unwrap().is_none());
         // In range behaves as before.
-        assert!(slice.get(4, 0).is_some());
-        assert!(slice.get(4, 1).is_none());
-        assert!(slice.get(5, 1).is_some());
+        assert!(slice.get(4, 0).unwrap().is_some());
+        assert!(slice.get(4, 1).unwrap().is_none());
+        assert!(slice.get(5, 1).unwrap().is_some());
     }
 
     #[test]
@@ -694,6 +871,129 @@ mod tests {
         assert_eq!(ts, vec![1, 2, 3]);
         let all = store.filter_time(i64::MIN / 2, i64::MAX / 2);
         assert_eq!(all.len(), store.n_instances());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Per-call traces must account exactly for what the store did —
+    /// summing them equals the global counters for a serial workload.
+    #[test]
+    fn read_trace_matches_global_counters() {
+        let (gen, dir) = deployed("trace", DeployConfig::new(1, 2, 4));
+        let store = Store::open(&dir, 0, opts(8)).unwrap();
+        let proj = Projection::all(&gen.template().vertex_schema, &gen.template().edge_schema);
+        let m0 = store.opts.metrics.snapshot();
+        let mut total = ReadTrace::default();
+        for t in 0..store.n_instances() {
+            let mut tr = ReadTrace::default();
+            store.read_instance_traced(0, t, &proj, &mut tr).unwrap();
+            total.merge(&tr);
+        }
+        let d = store.opts.metrics.snapshot().since(&m0);
+        assert_eq!(total.slices_read, d.get(keys::SLICES_READ));
+        assert_eq!(total.slice_bytes, d.get(keys::SLICE_BYTES));
+        assert_eq!(total.cache_hits, d.get(keys::CACHE_HITS));
+        assert_eq!(total.cache_misses, d.get(keys::CACHE_MISSES));
+        assert_eq!(total.sim_disk_ns, d.get(keys::SIM_DISK_NS));
+        assert!(total.slices_read > 0);
+        assert!(total.cache_hits > 0, "packed groups should hit");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// v1-format deployments (the backward-compat path) must read
+    /// identically to v2 ones, value for value.
+    #[test]
+    fn v1_and_v2_deployments_read_identically() {
+        let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+        let mk = |tag: &str, version: u8| {
+            let dir = std::env::temp_dir()
+                .join(format!("gofs-reader-vcmp-{tag}-{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&dir);
+            let mut cfg = DeployConfig::new(2, 3, 4);
+            cfg.slice_version = version;
+            deploy(&gen, &cfg, &dir).unwrap();
+            dir
+        };
+        let d1 = mk("v1", 1);
+        let d2 = mk("v2", 2);
+        let proj = Projection::all(&gen.template().vertex_schema, &gen.template().edge_schema);
+        for p in 0..2 {
+            let s1 = Store::open(&d1, p, opts(16)).unwrap();
+            let s2 = Store::open(&d2, p, opts(16)).unwrap();
+            for sg in s1.subgraphs() {
+                for t in [0usize, 5, 11] {
+                    let i1 = s1.read_instance(sg.id.local(), t, &proj).unwrap();
+                    let i2 = s2.read_instance(sg.id.local(), t, &proj).unwrap();
+                    for a in 0..gen.template().vertex_schema.len() {
+                        for v in 0..sg.n_vertices() as u32 {
+                            assert_eq!(
+                                i1.vertex_values(a, v),
+                                i2.vertex_values(a, v),
+                                "vattr {a} v{v} t{t}"
+                            );
+                        }
+                    }
+                    for a in 0..gen.template().edge_schema.len() {
+                        for e in 0..sg.edges.len() {
+                            assert_eq!(
+                                i1.edge_values(a, e),
+                                i2.edge_values(a, e),
+                                "eattr {a} e{e} t{t}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        std::fs::remove_dir_all(&d1).unwrap();
+        std::fs::remove_dir_all(&d2).unwrap();
+    }
+
+    /// Typed accessors agree with the generic resolution path.
+    #[test]
+    fn typed_accessors_match_value_refs() {
+        let (gen, dir) = deployed("typed", DeployConfig::new(1, 2, 3));
+        let store = Store::open(&dir, 0, opts(8)).unwrap();
+        let proj = Projection::all(&gen.template().vertex_schema, &gen.template().edge_schema);
+        for sg in store.subgraphs() {
+            let sgi = store.read_instance(sg.id.local(), 2, &proj).unwrap();
+            for v in 0..sg.n_vertices() as u32 {
+                assert_eq!(
+                    sgi.vertex_f64(vattr::RTT_MS, v),
+                    sgi.vertex_values(vattr::RTT_MS, v).first().and_then(|x| x.as_float())
+                );
+                assert_eq!(
+                    sgi.vertex_i64(vattr::TRACES_SEEN, v),
+                    sgi.vertex_values(vattr::TRACES_SEEN, v).first().and_then(|x| x.as_int())
+                );
+                assert_eq!(sgi.vertex_bool(vattr::ISEXISTS, v), Some(true));
+            }
+            for e in 0..sg.edges.len() {
+                assert_eq!(
+                    sgi.edge_f64(eattr::LATENCY_MS, e),
+                    sgi.edge_values(eattr::LATENCY_MS, e).first().and_then(|x| x.as_float())
+                );
+                let vals = sgi.edge_values(eattr::LATENCY_MS, e);
+                if !vals.is_empty() {
+                    let mean = sgi.edge_mean_f64(eattr::LATENCY_MS, e).unwrap();
+                    let manual: Vec<f64> =
+                        vals.iter().filter_map(|x| x.as_float()).collect();
+                    let want = manual.iter().sum::<f64>() / manual.len() as f64;
+                    assert!((mean - want).abs() < 1e-12);
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// The weighed cache reports resident decoded bytes.
+    #[test]
+    fn cache_reports_resident_bytes() {
+        let (gen, dir) = deployed("weigh", DeployConfig::new(1, 2, 4));
+        let store = Store::open(&dir, 0, opts(8)).unwrap();
+        assert_eq!(store.cache_resident_bytes(), 0);
+        let proj = Projection::all(&gen.template().vertex_schema, &gen.template().edge_schema);
+        let _ = store.read_instance(0, 0, &proj).unwrap();
+        assert!(store.cache_resident_bytes() > 0);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

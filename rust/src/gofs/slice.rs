@@ -6,7 +6,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic "GOFS"
-//! 4       1     format version (1)
+//! 4       1     format version (1 or 2)
 //! 5       1     kind (SliceKind)
 //! 6       1     flags (bit 0: body is deflate-compressed)
 //! 7       1     reserved
@@ -18,6 +18,41 @@
 //! "Bulk reading of a slice at a time ensures that the disk latency is
 //! amortized across a chunk of logically related bytes" (§V-A): the format
 //! is deliberately single-read — no internal random access.
+//!
+//! ### Attribute body, format v1
+//!
+//! Interleaved cells, timestep-major:
+//!
+//! ```text
+//! varint n_ts · varint n_pos
+//! per (t, pos) cell:  u8 tag (0 = absent, 1 = present)
+//!                     present: varint n · per row (varint idx delta,
+//!                     varint count, count raw values)
+//! ```
+//!
+//! ### Attribute body, format v2 (typed columnar, temporal codecs)
+//!
+//! Values are grouped **per bin position** so each position's series
+//! across the packed timesteps compresses as one typed column:
+//!
+//! ```text
+//! varint n_ts · varint n_pos
+//! per pos:   varint block_len        (0 = no values in any timestep)
+//! blocks, concatenated in pos order:
+//!   presence bitmap     ceil(n_ts/8) bytes, LSB-first
+//!   per present cell:   varint n · n varint idx deltas ·
+//!                       u8 uniform? (1: varint count — the common
+//!                       single-valued case; 0: n varint counts)
+//!   value stream:       u8 codec tag · codec payload (all of the
+//!                       block's values, timestep order)
+//! ```
+//!
+//! Codec tags (see `gofs::colcodec` for the encodings): 0 = raw,
+//! 1 = i64 delta-of-delta, 2 = f64 XOR (Gorilla), 3 = bool RLE,
+//! 4 = string dictionary, 5 = f64 dictionary, 6 = bool bitset. The writer
+//! picks the smallest candidate per column and falls back to raw when no
+//! codec wins. v1 slices remain fully readable; the reader dispatches on
+//! the header version.
 
 use anyhow::{bail, Context, Result};
 use flate2::read::DeflateDecoder;
@@ -27,7 +62,10 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"GOFS";
-const VERSION: u8 = 1;
+/// Original interleaved-cell attribute bodies.
+pub const VERSION_V1: u8 = 1;
+/// Typed columnar attribute bodies with temporal codecs.
+pub const VERSION_V2: u8 = 2;
 const FLAG_DEFLATE: u8 = 1;
 
 /// What a slice contains (§V-A "slice types vary").
@@ -60,80 +98,97 @@ impl SliceKind {
     }
 }
 
-/// An in-memory slice: kind + raw body bytes.
+/// An in-memory slice: kind + format version + raw body bytes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SliceFile {
     pub kind: SliceKind,
+    pub version: u8,
     pub body: Vec<u8>,
 }
 
 impl SliceFile {
+    /// A version-1 slice (template/metadata bodies are version-agnostic
+    /// and stay on v1).
     pub fn new(kind: SliceKind, body: Vec<u8>) -> Self {
-        SliceFile { kind, body }
+        SliceFile { kind, version: VERSION_V1, body }
     }
 
-    /// Serialize to bytes, optionally compressing the body.
-    pub fn to_bytes(&self, compress: bool) -> Result<Vec<u8>> {
+    pub fn with_version(kind: SliceKind, body: Vec<u8>, version: u8) -> Self {
+        debug_assert!((VERSION_V1..=VERSION_V2).contains(&version));
+        SliceFile { kind, version, body }
+    }
+
+    fn header(&self, flags: u8) -> [u8; 16] {
         let crc = crc32fast::hash(&self.body);
-        let (payload, flags) = if compress {
-            let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
-            enc.write_all(&self.body)?;
-            (enc.finish()?, FLAG_DEFLATE)
-        } else {
-            (self.body.clone(), 0)
-        };
+        let mut h = [0u8; 16];
+        h[..4].copy_from_slice(MAGIC);
+        h[4] = self.version;
+        h[5] = self.kind.tag();
+        h[6] = flags;
+        h[7] = 0;
+        h[8..12].copy_from_slice(&crc.to_le_bytes());
+        h[12..16].copy_from_slice(&(self.body.len() as u32).to_le_bytes());
+        h
+    }
+
+    fn compressed_body(&self) -> Result<Vec<u8>> {
+        let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(&self.body)?;
+        Ok(enc.finish()?)
+    }
+
+    /// Serialize to bytes, optionally compressing the body. The
+    /// uncompressed path writes header + body straight into the output
+    /// buffer (no intermediate full-body clone).
+    pub fn to_bytes(&self, compress: bool) -> Result<Vec<u8>> {
+        let (compressed, flags) =
+            if compress { (Some(self.compressed_body()?), FLAG_DEFLATE) } else { (None, 0) };
+        let payload: &[u8] = compressed.as_deref().unwrap_or(&self.body);
         let mut out = Vec::with_capacity(16 + payload.len());
-        out.extend_from_slice(MAGIC);
-        out.push(VERSION);
-        out.push(self.kind.tag());
-        out.push(flags);
-        out.push(0);
-        out.extend_from_slice(&crc.to_le_bytes());
-        out.extend_from_slice(&(self.body.len() as u32).to_le_bytes());
-        out.extend_from_slice(&payload);
+        out.extend_from_slice(&self.header(flags));
+        out.extend_from_slice(payload);
         Ok(out)
     }
 
+    /// Parse from a borrowed buffer (copies the body).
     pub fn from_bytes(data: &[u8]) -> Result<SliceFile> {
-        if data.len() < 16 {
-            bail!("slice too short ({} bytes)", data.len());
-        }
-        if &data[0..4] != MAGIC {
-            bail!("bad slice magic");
-        }
-        if data[4] != VERSION {
-            bail!("unsupported slice version {}", data[4]);
-        }
-        let kind = SliceKind::from_tag(data[5])?;
-        let flags = data[6];
-        let crc = u32::from_le_bytes(data[8..12].try_into().unwrap());
-        let len = u32::from_le_bytes(data[12..16].try_into().unwrap()) as usize;
-        let body = if flags & FLAG_DEFLATE != 0 {
-            let mut dec = DeflateDecoder::new(&data[16..]);
-            let mut body = Vec::with_capacity(len);
-            dec.read_to_end(&mut body).context("slice: deflate error")?;
-            body
+        let h = parse_header(data)?;
+        let body = if h.flags & FLAG_DEFLATE != 0 {
+            inflate_body(&data[16..], h.len)?
         } else {
             data[16..].to_vec()
         };
-        if body.len() != len {
-            bail!("slice body truncated or corrupt: header says {len} bytes, got {}", body.len());
-        }
-        if crc32fast::hash(&body) != crc {
-            bail!("slice CRC mismatch (corrupt file)");
-        }
-        Ok(SliceFile { kind, body })
+        finish_parse(h, body)
     }
 
-    /// Write to a file, creating parent directories.
+    /// Parse from an owned buffer. The uncompressed path strips the
+    /// header in place and reuses the allocation — no body copy.
+    pub fn from_vec(mut data: Vec<u8>) -> Result<SliceFile> {
+        let h = parse_header(&data)?;
+        let body = if h.flags & FLAG_DEFLATE != 0 {
+            inflate_body(&data[16..], h.len)?
+        } else {
+            data.drain(..16);
+            data
+        };
+        finish_parse(h, body)
+    }
+
+    /// Write to a file, creating parent directories. Streams header and
+    /// payload separately — no combined buffer is built.
     pub fn write_to(&self, path: &Path, compress: bool) -> Result<u64> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
-        let bytes = self.to_bytes(compress)?;
-        std::fs::write(path, &bytes)
+        let (compressed, flags) =
+            if compress { (Some(self.compressed_body()?), FLAG_DEFLATE) } else { (None, 0) };
+        let payload: &[u8] = compressed.as_deref().unwrap_or(&self.body);
+        let mut f = std::fs::File::create(path)
             .with_context(|| format!("writing slice {}", path.display()))?;
-        Ok(bytes.len() as u64)
+        f.write_all(&self.header(flags))
+            .and_then(|_| f.write_all(payload))
+            .with_context(|| format!("writing slice {}", path.display()))?;
+        Ok(16 + payload.len() as u64)
     }
 
     /// Read and validate a slice from a file. Returns the slice and the
@@ -142,8 +197,53 @@ impl SliceFile {
         let data = std::fs::read(path)
             .with_context(|| format!("reading slice {}", path.display()))?;
         let n = data.len() as u64;
-        Ok((SliceFile::from_bytes(&data)?, n))
+        Ok((SliceFile::from_vec(data)?, n))
     }
+}
+
+struct Header {
+    kind: SliceKind,
+    version: u8,
+    flags: u8,
+    crc: u32,
+    len: usize,
+}
+
+fn parse_header(data: &[u8]) -> Result<Header> {
+    if data.len() < 16 {
+        bail!("slice too short ({} bytes)", data.len());
+    }
+    if &data[0..4] != MAGIC {
+        bail!("bad slice magic");
+    }
+    let version = data[4];
+    if !(VERSION_V1..=VERSION_V2).contains(&version) {
+        bail!("unsupported slice version {version}");
+    }
+    Ok(Header {
+        kind: SliceKind::from_tag(data[5])?,
+        version,
+        flags: data[6],
+        crc: u32::from_le_bytes(data[8..12].try_into().unwrap()),
+        len: u32::from_le_bytes(data[12..16].try_into().unwrap()) as usize,
+    })
+}
+
+fn inflate_body(payload: &[u8], len: usize) -> Result<Vec<u8>> {
+    let mut dec = DeflateDecoder::new(payload);
+    let mut body = Vec::with_capacity(len);
+    dec.read_to_end(&mut body).context("slice: deflate error")?;
+    Ok(body)
+}
+
+fn finish_parse(h: Header, body: Vec<u8>) -> Result<SliceFile> {
+    if body.len() != h.len {
+        bail!("slice body truncated or corrupt: header says {} bytes, got {}", h.len, body.len());
+    }
+    if crc32fast::hash(&body) != h.crc {
+        bail!("slice CRC mismatch (corrupt file)");
+    }
+    Ok(SliceFile { kind: h.kind, version: h.version, body })
 }
 
 #[cfg(test)]
@@ -155,11 +255,24 @@ mod tests {
     fn roundtrip_uncompressed_and_compressed() {
         let body: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
         for compress in [false, true] {
-            let s = SliceFile::new(SliceKind::Attribute, body.clone());
-            let bytes = s.to_bytes(compress).unwrap();
-            let s2 = SliceFile::from_bytes(&bytes).unwrap();
-            assert_eq!(s, s2);
+            for version in [VERSION_V1, VERSION_V2] {
+                let s = SliceFile::with_version(SliceKind::Attribute, body.clone(), version);
+                let bytes = s.to_bytes(compress).unwrap();
+                let s2 = SliceFile::from_bytes(&bytes).unwrap();
+                assert_eq!(s, s2);
+                let s3 = SliceFile::from_vec(bytes).unwrap();
+                assert_eq!(s, s3);
+            }
         }
+    }
+
+    #[test]
+    fn unknown_version_rejected() {
+        let s = SliceFile::new(SliceKind::Attribute, vec![1, 2, 3]);
+        let mut bytes = s.to_bytes(false).unwrap();
+        bytes[4] = 9;
+        let err = SliceFile::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("version"));
     }
 
     #[test]
@@ -178,6 +291,7 @@ mod tests {
         let last = bytes.len() - 1;
         bytes[last] ^= 0xFF;
         assert!(SliceFile::from_bytes(&bytes).is_err());
+        assert!(SliceFile::from_vec(bytes).is_err());
     }
 
     #[test]
@@ -193,12 +307,17 @@ mod tests {
     fn file_roundtrip() {
         let dir = std::env::temp_dir().join(format!("gofs-slice-test-{}", std::process::id()));
         let path = dir.join("nested/dir/test.slice");
-        let s = SliceFile::new(SliceKind::Attribute, vec![1, 2, 3, 4, 5]);
+        let s = SliceFile::with_version(SliceKind::Attribute, vec![1, 2, 3, 4, 5], VERSION_V2);
         let written = s.write_to(&path, true).unwrap();
         assert!(written >= 16);
         let (s2, n) = SliceFile::read_from(&path).unwrap();
         assert_eq!(s, s2);
         assert_eq!(n, written);
+        // Uncompressed write streams header + body; same on-disk layout.
+        let written_raw = s.write_to(&path, false).unwrap();
+        assert_eq!(written_raw, 16 + 5);
+        let (s3, _) = SliceFile::read_from(&path).unwrap();
+        assert_eq!(s, s3);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -11,8 +11,9 @@
 //! memory is O(one instance group), never the whole series.
 
 use crate::datagen::CollectionSource;
-use crate::graph::{AttrColumn, Schema, TimeWindow};
-use crate::gofs::slice::{SliceFile, SliceKind};
+use crate::graph::{AttrColumn, AttrType, Schema, TimeWindow};
+use crate::gofs::colcodec::encode_attr_body_v2;
+use crate::gofs::slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};
 use crate::gofs::SliceKey;
 use crate::partition::{
     binpack_subgraphs, extract_partitions, partition_graph, BinPacking, Partition,
@@ -33,6 +34,10 @@ pub struct DeployConfig {
     pub pack: usize,
     /// Deflate-compress slice bodies.
     pub compress: bool,
+    /// Attribute slice body format: [`VERSION_V2`] (typed columnar with
+    /// temporal codecs, the default) or [`VERSION_V1`] (interleaved
+    /// cells; kept writable for compatibility tests and rollback).
+    pub slice_version: u8,
     /// Partitioner options (seed, slack, refinement).
     pub partition: PartitionOptions,
 }
@@ -44,6 +49,7 @@ impl DeployConfig {
             n_bins,
             pack,
             compress: true,
+            slice_version: VERSION_V2,
             partition: PartitionOptions::new(n_parts),
         }
     }
@@ -67,6 +73,9 @@ pub struct DeployReport {
     pub subgraph_sizes: Vec<(usize, usize)>,
     pub slices_written: usize,
     pub bytes_written: u64,
+    /// Uncompressed attribute-slice body bytes (isolates the v1→v2 codec
+    /// effect from deflate and fixed headers).
+    pub attr_body_bytes: u64,
 }
 
 /// Partition-level deployment state shared with the reader.
@@ -87,6 +96,9 @@ pub fn deploy(
 ) -> Result<DeployReport> {
     if cfg.n_bins == 0 || cfg.pack == 0 || cfg.n_parts == 0 {
         bail!("deploy: n_parts, n_bins and pack must be >= 1");
+    }
+    if !(VERSION_V1..=VERSION_V2).contains(&cfg.slice_version) {
+        bail!("deploy: unsupported slice_version {}", cfg.slice_version);
     }
     let template = source.template();
     let n_instances = source.n_instances();
@@ -204,23 +216,12 @@ pub fn deploy(
                         continue; // nothing to store for this slice
                     }
                     let key = SliceKey { vertex, attr, bin, group: g };
-                    let mut e = Enc::new();
-                    e.varint((t_hi - t_lo) as u64);
-                    e.varint(cells[0].len() as u64);
-                    for ts in cells {
-                        for cell in ts {
-                            match cell {
-                                Some(col) => {
-                                    e.u8(1);
-                                    col.encode_into(ty, &mut e);
-                                }
-                                None => e.u8(0),
-                            }
-                        }
-                    }
+                    let body = encode_attr_body(cells, ty, cfg.slice_version);
+                    report.attr_body_bytes += body.len() as u64;
                     let path = part_dir(out_dir, l.part_id).join(key.rel_path());
-                    report.bytes_written += SliceFile::new(SliceKind::Attribute, e.finish())
-                        .write_to(&path, cfg.compress)?;
+                    report.bytes_written +=
+                        SliceFile::with_version(SliceKind::Attribute, body, cfg.slice_version)
+                            .write_to(&path, cfg.compress)?;
                     report.slices_written += 1;
                     presence[l.part_id][slot][bin][g] = true;
                 }
@@ -245,6 +246,30 @@ pub fn deploy(
         .write_to(&out_dir.join("collection.meta"), false)?;
 
     Ok(report)
+}
+
+/// Encode one packed group's cells (`cells[t - t_lo][pos]`) at the
+/// requested attribute-body format version.
+fn encode_attr_body(cells: &[Vec<Option<AttrColumn>>], ty: AttrType, version: u8) -> Vec<u8> {
+    if version == VERSION_V1 {
+        let mut e = Enc::new();
+        e.varint(cells.len() as u64);
+        e.varint(cells[0].len() as u64);
+        for ts in cells {
+            for cell in ts {
+                match cell {
+                    Some(col) => {
+                        e.u8(1);
+                        col.encode_into(ty, &mut e);
+                    }
+                    None => e.u8(0),
+                }
+            }
+        }
+        e.finish()
+    } else {
+        encode_attr_body_v2(cells, ty)
+    }
 }
 
 pub(crate) fn part_dir(root: &Path, part: usize) -> PathBuf {

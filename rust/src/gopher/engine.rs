@@ -53,7 +53,7 @@
 //! pair, and an unknown destination is a clean error.
 
 use crate::cluster::{ClusterSpec, NetworkClock};
-use crate::gofs::{Projection, Store, SubgraphInstance};
+use crate::gofs::{Projection, ReadTrace, Store, SubgraphInstance};
 use crate::graph::{SubgraphId, Timestep};
 use crate::gopher::{Application, ComputeCtx, Outbox, Pattern, Payload, SubgraphProgram};
 use crate::metrics::{keys, Metrics};
@@ -154,19 +154,16 @@ impl RunStats {
 }
 
 /// One timestep's instances, loaded ahead of its BSP, plus the GoFS
-/// counters attributed to the load. Counters are measured inside the
-/// loader (loads never overlap each other under the sequential pattern,
-/// and BSP compute touches no GoFS counters, so the attribution is exact
-/// even while a prefetch overlaps compute).
+/// counters attributed to the load. Counters come from per-call
+/// [`ReadTrace`]s summed over this timestep's reads, so the attribution
+/// is exact even when loads of different timesteps overlap (temporal
+/// pools, `temporal_workers > 1`) — the old global-snapshot diff mixed
+/// concurrent loads' counts.
 struct LoadedTimestep {
     /// (host, subgraph, instance) in (host-major, bin-major) order — the
     /// deterministic execution and routing order.
     items: Vec<(usize, Arc<Subgraph>, SubgraphInstance)>,
-    slices_read: u64,
-    slice_bytes: u64,
-    cache_hits: u64,
-    cache_misses: u64,
-    sim_disk_ns: u64,
+    trace: ReadTrace,
     load_wall_s: f64,
 }
 
@@ -377,7 +374,6 @@ impl GopherEngine {
         workers: usize,
     ) -> Result<LoadedTimestep> {
         let t0 = Instant::now();
-        let m0 = self.metrics.snapshot();
         let work: Vec<(usize, Arc<Subgraph>)> = self
             .stores
             .iter()
@@ -385,14 +381,19 @@ impl GopherEngine {
             .flat_map(|(h, s)| s.subgraphs().into_iter().map(move |sg| (h, sg)))
             .collect();
         let n = work.len();
-        let mut slots: Vec<Mutex<Option<Result<SubgraphInstance>>>> = Vec::with_capacity(n);
+        let mut slots: Vec<Mutex<Option<Result<(SubgraphInstance, ReadTrace)>>>> =
+            Vec::with_capacity(n);
         slots.resize_with(n, || Mutex::new(None));
 
+        let load_one = |h: usize, sg: &Arc<Subgraph>| -> Result<(SubgraphInstance, ReadTrace)> {
+            let mut tr = ReadTrace::default();
+            let sgi = self.stores[h].read_instance_traced(sg.id.local(), t, proj, &mut tr)?;
+            Ok((sgi, tr))
+        };
         let workers = workers.max(1).min(n.max(1));
         if workers <= 1 {
             for (i, (h, sg)) in work.iter().enumerate() {
-                *slots[i].lock().unwrap() =
-                    Some(self.stores[*h].read_instance(sg.id.local(), t, proj));
+                *slots[i].lock().unwrap() = Some(load_one(*h, sg));
             }
         } else {
             let cursor = AtomicUsize::new(0);
@@ -404,7 +405,7 @@ impl GopherEngine {
                             break;
                         }
                         let (h, sg) = &work[i];
-                        let r = self.stores[*h].read_instance(sg.id.local(), t, proj);
+                        let r = load_one(*h, sg);
                         *slots[i].lock().unwrap() = Some(r);
                     });
                 }
@@ -412,23 +413,16 @@ impl GopherEngine {
         }
 
         let mut items = Vec::with_capacity(n);
+        let mut trace = ReadTrace::default();
         for (slot, (h, sg)) in slots.into_iter().zip(work) {
-            let sgi = slot
+            let (sgi, tr) = slot
                 .into_inner()
                 .unwrap()
                 .expect("loader worker left a slot unfilled")?;
+            trace.merge(&tr);
             items.push((h, sg, sgi));
         }
-        let d = self.metrics.snapshot().since(&m0);
-        Ok(LoadedTimestep {
-            items,
-            slices_read: d.get(keys::SLICES_READ),
-            slice_bytes: d.get(keys::SLICE_BYTES),
-            cache_hits: d.get(keys::CACHE_HITS),
-            cache_misses: d.get(keys::CACHE_MISSES),
-            sim_disk_ns: d.get(keys::SIM_DISK_NS),
-            load_wall_s: t0.elapsed().as_secs_f64(),
-        })
+        Ok(LoadedTimestep { items, trace, load_wall_s: t0.elapsed().as_secs_f64() })
     }
 
     /// Run one BSP timestep over pre-loaded instances. Returns its stats
@@ -449,15 +443,7 @@ impl GopherEngine {
     ) -> Result<(TimestepStats, HashMap<SubgraphId, Vec<Payload>>)> {
         let t_start = Instant::now();
         let net_clock = NetworkClock::default();
-        let LoadedTimestep {
-            items: loaded_items,
-            slices_read,
-            slice_bytes,
-            cache_hits,
-            cache_misses,
-            sim_disk_ns,
-            load_wall_s,
-        } = loaded;
+        let LoadedTimestep { items: loaded_items, trace, load_wall_s } = loaded;
 
         // --- Create programs over the pre-loaded instances (Fig. 3). ---
         struct Item {
@@ -623,15 +609,15 @@ impl GopherEngine {
             wall_s: (load_wall_s - overlap_s).max(0.0) + t_start.elapsed().as_secs_f64(),
             load_wall_s,
             overlap_s,
-            slices_read,
-            slice_bytes,
-            cache_hits,
-            cache_misses,
+            slices_read: trace.slices_read,
+            slice_bytes: trace.slice_bytes,
+            cache_hits: trace.cache_hits,
+            cache_misses: trace.cache_misses,
             msgs_local: ts_msgs_local,
             msgs_remote: ts_msgs_remote,
             msg_bytes_remote: ts_msg_bytes_remote,
             sim_net_ns: net_clock.total_ns(),
-            sim_disk_ns,
+            sim_disk_ns: trace.sim_disk_ns,
         };
         Ok((stats, carry_out))
     }
@@ -716,6 +702,63 @@ mod tests {
         // sorted by timestep regardless of completion order
         let ts: Vec<usize> = stats.per_timestep.iter().map(|s| s.timestep).collect();
         assert_eq!(ts, (0..12).collect::<Vec<_>>());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// App with a real projection, for load-attribution tests.
+    struct ProjApp {
+        pattern: Pattern,
+    }
+
+    impl Application for ProjApp {
+        fn name(&self) -> &str {
+            "proj"
+        }
+        fn pattern(&self) -> Pattern {
+            self.pattern
+        }
+        fn projection(&self, vs: &Schema, es: &Schema) -> Projection {
+            Projection::all(vs, es)
+        }
+        fn create(&self, _sg: &Subgraph) -> Box<dyn SubgraphProgram> {
+            struct Halt;
+            impl SubgraphProgram for Halt {
+                fn compute(
+                    &mut self,
+                    ctx: &mut ComputeCtx<'_>,
+                    _sgi: &crate::gofs::SubgraphInstance,
+                    _msgs: &[Payload],
+                ) {
+                    ctx.vote_to_halt();
+                }
+            }
+            Box::new(Halt)
+        }
+    }
+
+    /// Satellite regression: per-timestep GoFS counters must sum exactly
+    /// to the global registry even when timestep loads overlap under the
+    /// temporal pool (the old snapshot-diff attribution mixed them).
+    #[test]
+    fn per_timestep_load_counters_are_exact_under_temporal_concurrency() {
+        let (eng, dir) = engine("trace-attr");
+        let m0 = eng.metrics().snapshot();
+        let stats = eng
+            .run(
+                &ProjApp { pattern: Pattern::Independent },
+                &RunOptions { temporal_workers: 4, ..Default::default() },
+            )
+            .unwrap();
+        let d = eng.metrics().snapshot().since(&m0);
+        let per_ts_reads: u64 = stats.per_timestep.iter().map(|s| s.slices_read).sum();
+        let per_ts_bytes: u64 = stats.per_timestep.iter().map(|s| s.slice_bytes).sum();
+        let per_ts_hits: u64 = stats.per_timestep.iter().map(|s| s.cache_hits).sum();
+        let per_ts_misses: u64 = stats.per_timestep.iter().map(|s| s.cache_misses).sum();
+        assert_eq!(per_ts_reads, d.get(keys::SLICES_READ));
+        assert_eq!(per_ts_bytes, d.get(keys::SLICE_BYTES));
+        assert_eq!(per_ts_hits, d.get(keys::CACHE_HITS));
+        assert_eq!(per_ts_misses, d.get(keys::CACHE_MISSES));
+        assert!(per_ts_reads > 0, "projection should touch slices");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

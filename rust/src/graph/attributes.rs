@@ -5,6 +5,17 @@
 //! attribute per element; templates may declare *constant* values (stored
 //! once, never overridden) and *default* values (overridable per instance)
 //! — §V-B. The GoFS reader makes this inheritance transparent.
+//!
+//! ### Storage layout
+//!
+//! A column stores its values in a single typed [`Slab`] (`Vec<f64>`,
+//! `Vec<i64>`, …) instead of a `Vec<AttrValue>`: readers get contiguous
+//! typed slices with no per-value enum materialization, and the hot
+//! accessors ([`AttrColumn::f64_at`] and friends) are a row lookup plus an
+//! indexed load. Row lookup is O(1) through a cached dense `element → row`
+//! map when the column covers most of its index space (the common case for
+//! decoded instance columns), falling back to binary search over the
+//! sparse index otherwise.
 
 use crate::util::wire::{Dec, Enc};
 use anyhow::{bail, Result};
@@ -43,7 +54,9 @@ impl AttrType {
     }
 }
 
-/// A single attribute value.
+/// A single materialized attribute value. Columns no longer store these;
+/// they remain the "any value" type for schema defaults/constants and for
+/// cold-path materialization.
 #[derive(Debug, Clone, PartialEq)]
 pub enum AttrValue {
     Bool(bool),
@@ -220,23 +233,260 @@ impl Schema {
     }
 }
 
+/// Typed contiguous value storage backing one [`AttrColumn`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Slab {
+    Bool(Vec<bool>),
+    Int(Vec<i64>),
+    Float(Vec<f64>),
+    Str(Vec<String>),
+}
+
+impl Slab {
+    pub fn empty(ty: AttrType) -> Slab {
+        match ty {
+            AttrType::Bool => Slab::Bool(Vec::new()),
+            AttrType::Int => Slab::Int(Vec::new()),
+            AttrType::Float => Slab::Float(Vec::new()),
+            AttrType::Str => Slab::Str(Vec::new()),
+        }
+    }
+
+    pub fn ty(&self) -> AttrType {
+        match self {
+            Slab::Bool(_) => AttrType::Bool,
+            Slab::Int(_) => AttrType::Int,
+            Slab::Float(_) => AttrType::Float,
+            Slab::Str(_) => AttrType::Str,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Slab::Bool(xs) => xs.len(),
+            Slab::Int(xs) => xs.len(),
+            Slab::Float(xs) => xs.len(),
+            Slab::Str(xs) => xs.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn push_value(&mut self, v: &AttrValue) {
+        match (self, v) {
+            (Slab::Bool(xs), AttrValue::Bool(b)) => xs.push(*b),
+            (Slab::Int(xs), AttrValue::Int(i)) => xs.push(*i),
+            (Slab::Float(xs), AttrValue::Float(f)) => xs.push(*f),
+            (Slab::Str(xs), AttrValue::Str(s)) => xs.push(s.clone()),
+            (slab, v) => panic!(
+                "AttrColumn: value type {:?} does not match column type {:?}",
+                v.ty(),
+                slab.ty()
+            ),
+        }
+    }
+
+    fn decode_push(&mut self, ty: AttrType, d: &mut Dec) -> Result<()> {
+        match (self, ty) {
+            (Slab::Bool(xs), AttrType::Bool) => xs.push(d.u8()? != 0),
+            (Slab::Int(xs), AttrType::Int) => xs.push(d.i64()?),
+            (Slab::Float(xs), AttrType::Float) => xs.push(d.f64()?),
+            (Slab::Str(xs), AttrType::Str) => xs.push(d.str()?.to_string()),
+            _ => bail!("slab/type mismatch while decoding"),
+        }
+        Ok(())
+    }
+
+    fn extend_range_from(&mut self, other: &Slab, lo: usize, hi: usize) {
+        match (self, other) {
+            (Slab::Bool(a), Slab::Bool(b)) => a.extend_from_slice(&b[lo..hi]),
+            (Slab::Int(a), Slab::Int(b)) => a.extend_from_slice(&b[lo..hi]),
+            (Slab::Float(a), Slab::Float(b)) => a.extend_from_slice(&b[lo..hi]),
+            (Slab::Str(a), Slab::Str(b)) => a.extend_from_slice(&b[lo..hi]),
+            _ => panic!("AttrColumn: projecting between differently typed slabs"),
+        }
+    }
+
+    /// Borrow `lo..hi` as a typed slice view.
+    pub fn slice(&self, lo: usize, hi: usize) -> ValuesRef<'_> {
+        match self {
+            Slab::Bool(xs) => ValuesRef::Bools(&xs[lo..hi]),
+            Slab::Int(xs) => ValuesRef::Ints(&xs[lo..hi]),
+            Slab::Float(xs) => ValuesRef::Floats(&xs[lo..hi]),
+            Slab::Str(xs) => ValuesRef::Strs(&xs[lo..hi]),
+        }
+    }
+
+    /// Copy out `lo..hi` as an owned slab of the same type.
+    pub(crate) fn sub_slab(&self, lo: usize, hi: usize) -> Slab {
+        match self {
+            Slab::Bool(xs) => Slab::Bool(xs[lo..hi].to_vec()),
+            Slab::Int(xs) => Slab::Int(xs[lo..hi].to_vec()),
+            Slab::Float(xs) => Slab::Float(xs[lo..hi].to_vec()),
+            Slab::Str(xs) => Slab::Str(xs[lo..hi].to_vec()),
+        }
+    }
+
+    /// Approximate heap footprint in bytes (cache accounting).
+    pub fn mem_bytes(&self) -> usize {
+        match self {
+            Slab::Bool(xs) => xs.len(),
+            Slab::Int(xs) => xs.len() * 8,
+            Slab::Float(xs) => xs.len() * 8,
+            Slab::Str(xs) => xs.iter().map(|s| s.len() + 24).sum(),
+        }
+    }
+}
+
+/// Borrowed, typed values of one element — the zero-copy view the hot
+/// paths consume (no `AttrValue` is materialized unless asked for).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ValuesRef<'a> {
+    Bools(&'a [bool]),
+    Ints(&'a [i64]),
+    Floats(&'a [f64]),
+    Strs(&'a [String]),
+}
+
+impl<'a> ValuesRef<'a> {
+    pub fn len(&self) -> usize {
+        match self {
+            ValuesRef::Bools(xs) => xs.len(),
+            ValuesRef::Ints(xs) => xs.len(),
+            ValuesRef::Floats(xs) => xs.len(),
+            ValuesRef::Strs(xs) => xs.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize value `k` (cold path).
+    pub fn value(&self, k: usize) -> Option<AttrValue> {
+        match self {
+            ValuesRef::Bools(xs) => xs.get(k).map(|&b| AttrValue::Bool(b)),
+            ValuesRef::Ints(xs) => xs.get(k).map(|&x| AttrValue::Int(x)),
+            ValuesRef::Floats(xs) => xs.get(k).map(|&x| AttrValue::Float(x)),
+            ValuesRef::Strs(xs) => xs.get(k).map(|s| AttrValue::Str(s.clone())),
+        }
+    }
+
+    pub fn first(&self) -> Option<AttrValue> {
+        self.value(0)
+    }
+
+    /// First value coerced to f64 (`Float` or `Int` columns).
+    pub fn first_f64(&self) -> Option<f64> {
+        match self {
+            ValuesRef::Floats(xs) => xs.first().copied(),
+            ValuesRef::Ints(xs) => xs.first().map(|&x| x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn first_i64(&self) -> Option<i64> {
+        match self {
+            ValuesRef::Ints(xs) => xs.first().copied(),
+            _ => None,
+        }
+    }
+
+    pub fn first_bool(&self) -> Option<bool> {
+        match self {
+            ValuesRef::Bools(xs) => xs.first().copied(),
+            _ => None,
+        }
+    }
+
+    pub fn first_str(&self) -> Option<&'a str> {
+        match self {
+            ValuesRef::Strs(xs) => xs.first().map(|s| s.as_str()),
+            _ => None,
+        }
+    }
+
+    /// Sum and count of float-coercible values (mean aggregation helper).
+    pub fn sum_count_f64(&self) -> (f64, usize) {
+        match self {
+            ValuesRef::Floats(xs) => (xs.iter().sum(), xs.len()),
+            ValuesRef::Ints(xs) => (xs.iter().map(|&x| x as f64).sum(), xs.len()),
+            _ => (0.0, 0),
+        }
+    }
+
+    pub fn contains_str(&self, s: &str) -> bool {
+        match self {
+            ValuesRef::Strs(xs) => xs.iter().any(|x| x == s),
+            _ => false,
+        }
+    }
+
+    /// Materializing iterator (cold path; hot paths use the typed views).
+    pub fn iter(&self) -> impl Iterator<Item = AttrValue> + 'a {
+        let me = *self;
+        (0..me.len()).map(move |k| me.value(k).expect("k < len"))
+    }
+}
+
 /// Sparse multi-valued attribute column over dense element indices.
 ///
 /// Stores, for the subset of elements that have values in an instance, a
-/// CSR-like (index, offsets, values) layout. Lookup is by binary search;
-/// construction requires strictly increasing indices (builders sort).
-#[derive(Debug, Clone, PartialEq, Default)]
+/// CSR-like (index, offsets, typed slab) layout. Lookup goes through the
+/// cached dense row map when present, else binary search; construction
+/// requires strictly increasing indices (builders sort).
+#[derive(Debug, Clone)]
 pub struct AttrColumn {
-    idx: Vec<u32>,
-    /// `off.len() == idx.len() + 1`; values for `idx[k]` are
-    /// `vals[off[k]..off[k+1]]`.
-    off: Vec<u32>,
-    vals: Vec<AttrValue>,
+    pub(crate) idx: Vec<u32>,
+    /// `off.len() == idx.len() + 1`; values for `idx[k]` are slab rows
+    /// `off[k]..off[k+1]`.
+    pub(crate) off: Vec<u32>,
+    pub(crate) vals: Slab,
+    /// `element index -> row + 1` (0 = absent). Built after decode when
+    /// the column covers enough of its index space; purely a lookup cache,
+    /// so it does not participate in equality.
+    dense: Option<Vec<u32>>,
+}
+
+impl PartialEq for AttrColumn {
+    fn eq(&self, other: &Self) -> bool {
+        self.idx == other.idx && self.off == other.off && self.vals == other.vals
+    }
+}
+
+impl Default for AttrColumn {
+    fn default() -> Self {
+        AttrColumn::new()
+    }
 }
 
 impl AttrColumn {
+    /// An empty column; its type is fixed by the first value pushed
+    /// (defaults to `Float` while untouched).
     pub fn new() -> Self {
-        AttrColumn { idx: Vec::new(), off: vec![0], vals: Vec::new() }
+        AttrColumn::new_typed(AttrType::Float)
+    }
+
+    pub fn new_typed(ty: AttrType) -> Self {
+        AttrColumn { idx: Vec::new(), off: vec![0], vals: Slab::empty(ty), dense: None }
+    }
+
+    pub fn ty(&self) -> AttrType {
+        self.vals.ty()
+    }
+
+    /// Assemble a column from decoded parts, building the dense row map.
+    pub(crate) fn from_parts(idx: Vec<u32>, off: Vec<u32>, vals: Slab) -> AttrColumn {
+        debug_assert_eq!(off.len(), idx.len() + 1);
+        let mut col = AttrColumn { idx, off, vals, dense: None };
+        col.build_dense();
+        col
+    }
+
+    pub(crate) fn parts(&self) -> (&[u32], &[u32], &Slab) {
+        (&self.idx, &self.off, &self.vals)
     }
 
     /// Append values for element `i`; `i` must exceed all prior indices.
@@ -245,25 +495,82 @@ impl AttrColumn {
             assert!(i > last, "AttrColumn indices must be strictly increasing");
         }
         let before = self.vals.len();
-        self.vals.extend(values);
+        for v in values {
+            if self.idx.is_empty() && self.vals.is_empty() && self.vals.ty() != v.ty() {
+                // Retype an untouched column on its first value.
+                self.vals = Slab::empty(v.ty());
+            }
+            self.vals.push_value(&v);
+        }
         if self.vals.len() == before {
             return; // zero values — treat as absent
         }
         self.idx.push(i);
         self.off.push(self.vals.len() as u32);
+        self.dense = None; // row map (if any) is stale
     }
 
-    /// All values for element `i` (empty slice if absent).
-    pub fn get(&self, i: u32) -> &[AttrValue] {
-        match self.idx.binary_search(&i) {
-            Ok(k) => &self.vals[self.off[k] as usize..self.off[k + 1] as usize],
-            Err(_) => &[],
+    /// Row index for element `i`: O(1) via the dense map when built,
+    /// binary search otherwise.
+    #[inline]
+    fn row(&self, i: u32) -> Option<usize> {
+        if let Some(d) = &self.dense {
+            match d.get(i as usize) {
+                Some(&k) if k != 0 => Some((k - 1) as usize),
+                _ => None,
+            }
+        } else {
+            self.idx.binary_search(&i).ok()
         }
     }
 
-    /// First value for element `i`, if any.
-    pub fn first(&self, i: u32) -> Option<&AttrValue> {
-        self.get(i).first()
+    /// Typed values of element `i` (`None` when the element has no row).
+    pub fn values(&self, i: u32) -> Option<ValuesRef<'_>> {
+        let k = self.row(i)?;
+        Some(self.vals.slice(self.off[k] as usize, self.off[k + 1] as usize))
+    }
+
+    /// First value of element `i` coerced to f64 (hot path: weights).
+    #[inline]
+    pub fn f64_at(&self, i: u32) -> Option<f64> {
+        let k = self.row(i)?;
+        let lo = self.off[k] as usize;
+        if lo == self.off[k + 1] as usize {
+            return None;
+        }
+        match &self.vals {
+            Slab::Float(xs) => Some(xs[lo]),
+            Slab::Int(xs) => Some(xs[lo] as f64),
+            _ => None,
+        }
+    }
+
+    /// First integer value of element `i`.
+    #[inline]
+    pub fn i64_at(&self, i: u32) -> Option<i64> {
+        let k = self.row(i)?;
+        let lo = self.off[k] as usize;
+        if lo == self.off[k + 1] as usize {
+            return None;
+        }
+        match &self.vals {
+            Slab::Int(xs) => Some(xs[lo]),
+            _ => None,
+        }
+    }
+
+    /// First boolean value of element `i`.
+    #[inline]
+    pub fn bool_at(&self, i: u32) -> Option<bool> {
+        let k = self.row(i)?;
+        let lo = self.off[k] as usize;
+        if lo == self.off[k + 1] as usize {
+            return None;
+        }
+        match &self.vals {
+            Slab::Bool(xs) => Some(xs[lo]),
+            _ => None,
+        }
     }
 
     /// Number of elements that carry at least one value.
@@ -275,14 +582,42 @@ impl AttrColumn {
         self.vals.len()
     }
 
-    /// Iterate `(element index, values)` pairs in index order.
-    pub fn iter(&self) -> impl Iterator<Item = (u32, &[AttrValue])> + '_ {
+    /// Iterate `(element index, typed values)` pairs in index order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, ValuesRef<'_>)> + '_ {
         self.idx.iter().enumerate().map(move |(k, &i)| {
-            (i, &self.vals[self.off[k] as usize..self.off[k + 1] as usize])
+            (i, self.vals.slice(self.off[k] as usize, self.off[k + 1] as usize))
         })
     }
 
+    /// Approximate heap footprint in bytes (cache accounting).
+    pub fn mem_bytes(&self) -> usize {
+        self.idx.len() * 4
+            + self.off.len() * 4
+            + self.vals.mem_bytes()
+            + self.dense.as_ref().map(|d| d.len() * 4).unwrap_or(0)
+    }
+
+    /// Build the dense `element -> row` map when the column covers at
+    /// least a quarter of `0..=max_index` (bounded so pathological sparse
+    /// columns never allocate huge maps).
+    pub(crate) fn build_dense(&mut self) {
+        self.dense = None;
+        let Some(&max) = self.idx.last() else { return };
+        let span = max as usize + 1;
+        if span > 4 * self.idx.len() || span > (1 << 22) {
+            return;
+        }
+        let mut d = vec![0u32; span];
+        for (k, &i) in self.idx.iter().enumerate() {
+            d[i as usize] = k as u32 + 1;
+        }
+        self.dense = Some(d);
+    }
+
+    /// v1 wire encoding: interleaved per-row `(idx delta, count, values)`.
+    /// Kept byte-compatible with pre-v2 slices.
     pub fn encode_into(&self, ty: AttrType, e: &mut Enc) {
+        debug_assert!(self.vals.is_empty() || self.ty() == ty);
         e.varint(self.idx.len() as u64);
         let mut prev = 0u32;
         for (k, &i) in self.idx.iter().enumerate() {
@@ -291,30 +626,33 @@ impl AttrColumn {
             let lo = self.off[k] as usize;
             let hi = self.off[k + 1] as usize;
             e.varint((hi - lo) as u64);
-            for v in &self.vals[lo..hi] {
-                debug_assert_eq!(v.ty(), ty);
-                v.encode_into(e);
+            for j in lo..hi {
+                match &self.vals {
+                    Slab::Bool(xs) => e.u8(xs[j] as u8),
+                    Slab::Int(xs) => e.i64(xs[j]),
+                    Slab::Float(xs) => e.f64(xs[j]),
+                    Slab::Str(xs) => e.str(&xs[j]),
+                }
             }
         }
     }
 
     pub fn decode_from(ty: AttrType, d: &mut Dec) -> Result<AttrColumn> {
         let n = d.varint()? as usize;
-        let mut col = AttrColumn::new();
+        let mut col = AttrColumn::new_typed(ty);
         let mut prev = 0u32;
-        for k in 0..n {
+        for _ in 0..n {
             let delta = d.varint()? as u32;
-            let i = if k == 0 { delta } else { prev + delta };
+            let i = prev + delta;
             prev = i;
             let m = d.varint()? as usize;
-            let mut vals = Vec::with_capacity(m);
             for _ in 0..m {
-                vals.push(AttrValue::decode_from(ty, d)?);
+                col.vals.decode_push(ty, d)?;
             }
             col.idx.push(i);
-            col.vals.extend(vals);
             col.off.push(col.vals.len() as u32);
         }
+        col.build_dense();
         Ok(col)
     }
 
@@ -322,7 +660,7 @@ impl AttrColumn {
     /// indices, remapping to their positions (used when deploying a
     /// partition's subgraph out of a whole-graph instance).
     pub fn project(&self, sorted_indices: &[u32]) -> AttrColumn {
-        let mut out = AttrColumn::new();
+        let mut out = AttrColumn::new_typed(self.ty());
         let mut k = 0usize; // cursor into self.idx
         for (local, &global) in sorted_indices.iter().enumerate() {
             while k < self.idx.len() && self.idx[k] < global {
@@ -331,7 +669,11 @@ impl AttrColumn {
             if k < self.idx.len() && self.idx[k] == global {
                 let lo = self.off[k] as usize;
                 let hi = self.off[k + 1] as usize;
-                out.push(local as u32, self.vals[lo..hi].iter().cloned());
+                if hi > lo {
+                    out.vals.extend_range_from(&self.vals, lo, hi);
+                    out.idx.push(local as u32);
+                    out.off.push(out.vals.len() as u32);
+                }
             }
         }
         out
@@ -357,11 +699,66 @@ mod tests {
         let mut c = AttrColumn::new();
         c.push(2, [AttrValue::Int(5), AttrValue::Int(6)]);
         c.push(9, [AttrValue::Int(-1)]);
-        assert_eq!(c.get(2), &[AttrValue::Int(5), AttrValue::Int(6)]);
-        assert_eq!(c.get(9), &[AttrValue::Int(-1)]);
-        assert!(c.get(3).is_empty());
+        assert_eq!(c.ty(), AttrType::Int);
+        assert_eq!(c.values(2), Some(ValuesRef::Ints(&[5, 6])));
+        assert_eq!(c.values(9), Some(ValuesRef::Ints(&[-1])));
+        assert!(c.values(3).is_none());
+        assert_eq!(c.i64_at(2), Some(5));
+        assert_eq!(c.f64_at(9), Some(-1.0)); // int coerces
+        assert_eq!(c.bool_at(2), None); // wrong type
         assert_eq!(c.n_elements(), 2);
         assert_eq!(c.n_values(), 3);
+    }
+
+    #[test]
+    fn typed_accessors_on_each_slab() {
+        let mut f = AttrColumn::new();
+        f.push(0, [AttrValue::Float(1.5)]);
+        assert_eq!(f.f64_at(0), Some(1.5));
+        assert_eq!(f.i64_at(0), None);
+        let mut b = AttrColumn::new();
+        b.push(4, [AttrValue::Bool(true)]);
+        assert_eq!(b.bool_at(4), Some(true));
+        assert_eq!(b.bool_at(3), None);
+        let mut s = AttrColumn::new();
+        s.push(1, [AttrValue::Str("x".into())]);
+        assert!(s.values(1).unwrap().contains_str("x"));
+        assert!(!s.values(1).unwrap().contains_str("y"));
+        assert_eq!(s.values(1).unwrap().first_str(), Some("x"));
+    }
+
+    #[test]
+    fn dense_lookup_matches_binary_search() {
+        // Column covering most of 0..100 -> dense map gets built on decode.
+        let mut c = AttrColumn::new();
+        for i in 0..100u32 {
+            if i % 3 != 0 {
+                c.push(i, [AttrValue::Int(i as i64)]);
+            }
+        }
+        let mut e = Enc::new();
+        c.encode_into(AttrType::Int, &mut e);
+        let buf = e.finish();
+        let decoded = AttrColumn::decode_from(AttrType::Int, &mut Dec::new(&buf)).unwrap();
+        assert!(decoded.dense.is_some(), "dense map should be built at 2/3 coverage");
+        for i in 0..110u32 {
+            assert_eq!(decoded.values(i), c.values(i), "element {i}");
+            assert_eq!(decoded.i64_at(i), c.i64_at(i), "element {i}");
+        }
+    }
+
+    #[test]
+    fn sparse_columns_skip_the_dense_map() {
+        let mut c = AttrColumn::new();
+        c.push(10_000, [AttrValue::Int(1)]);
+        c.push(500_000, [AttrValue::Int(2)]);
+        let mut e = Enc::new();
+        c.encode_into(AttrType::Int, &mut e);
+        let buf = e.finish();
+        let decoded = AttrColumn::decode_from(AttrType::Int, &mut Dec::new(&buf)).unwrap();
+        assert!(decoded.dense.is_none());
+        assert_eq!(decoded.i64_at(500_000), Some(2));
+        assert_eq!(decoded.i64_at(499_999), None);
     }
 
     #[test]
@@ -372,6 +769,7 @@ mod tests {
         // Index 1 can be reused since the empty push did not register it.
         c.push(1, [AttrValue::Bool(true)]);
         assert_eq!(c.n_elements(), 1);
+        assert_eq!(c.ty(), AttrType::Bool); // retyped on first real value
     }
 
     #[test]
@@ -383,10 +781,18 @@ mod tests {
     }
 
     #[test]
+    #[should_panic]
+    fn mixed_value_types_panic() {
+        let mut c = AttrColumn::new();
+        c.push(1, [AttrValue::Int(1)]);
+        c.push(2, [AttrValue::Float(2.0)]);
+    }
+
+    #[test]
     fn column_roundtrip_property() {
         for ty in [AttrType::Bool, AttrType::Int, AttrType::Float, AttrType::Str] {
             forall(60, move |g| {
-                let mut col = AttrColumn::new();
+                let mut col = AttrColumn::new_typed(ty);
                 let mut i = 0u32;
                 let n = g.usize(0..20);
                 for _ in 0..n {
@@ -412,9 +818,19 @@ mod tests {
         c.push(7, [AttrValue::Int(70)]);
         c.push(12, [AttrValue::Int(120)]);
         let p = c.project(&[3, 5, 12]);
-        assert_eq!(p.get(0), &[AttrValue::Int(30)]); // global 3 -> local 0
-        assert!(p.get(1).is_empty()); // global 5 had no values
-        assert_eq!(p.get(2), &[AttrValue::Int(120)]);
+        assert_eq!(p.values(0), Some(ValuesRef::Ints(&[30]))); // global 3 -> local 0
+        assert!(p.values(1).is_none()); // global 5 had no values
+        assert_eq!(p.values(2), Some(ValuesRef::Ints(&[120])));
+    }
+
+    #[test]
+    fn values_iter_materializes_in_order() {
+        let mut c = AttrColumn::new();
+        c.push(2, [AttrValue::Float(1.0), AttrValue::Float(2.0)]);
+        let vals: Vec<AttrValue> = c.values(2).unwrap().iter().collect();
+        assert_eq!(vals, vec![AttrValue::Float(1.0), AttrValue::Float(2.0)]);
+        let (sum, n) = c.values(2).unwrap().sum_count_f64();
+        assert_eq!((sum, n), (3.0, 2));
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Graph instances: time-variant attribute values over the template.
 
 use crate::graph::attributes::AttrBinding;
-use crate::graph::{AttrColumn, AttrValue, GraphTemplate, Timestep};
+use crate::graph::{AttrColumn, AttrValue, GraphTemplate, Timestep, ValuesRef};
 
 /// Half-open time window `[start, end)` in epoch seconds. Paper instances
 /// capture durations (e.g. a 2-hour traceroute window), not moments.
@@ -78,21 +78,81 @@ impl GraphInstance {
     }
 }
 
-/// Resolved attribute values: either a slice from the instance column or a
-/// single inherited template value.
-#[derive(Debug, Clone, PartialEq)]
+/// Resolved attribute values: a typed view into the instance column, or a
+/// single inherited template value. Hot paths use the typed `first_*` /
+/// `mean_f64` accessors, which never materialize an [`AttrValue`].
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ValueRef<'a> {
-    Many(&'a [AttrValue]),
+    Many(ValuesRef<'a>),
     Inherited(&'a AttrValue),
     Absent,
 }
 
 impl<'a> ValueRef<'a> {
-    pub fn first(&self) -> Option<&'a AttrValue> {
+    /// First value, materialized (cold path).
+    pub fn first(&self) -> Option<AttrValue> {
         match self {
             ValueRef::Many(vs) => vs.first(),
-            ValueRef::Inherited(v) => Some(v),
+            ValueRef::Inherited(v) => Some((*v).clone()),
             ValueRef::Absent => None,
+        }
+    }
+
+    /// First value coerced to f64 (`Float`/`Int`); zero-copy.
+    pub fn first_f64(&self) -> Option<f64> {
+        match self {
+            ValueRef::Many(vs) => vs.first_f64(),
+            ValueRef::Inherited(v) => v.as_float(),
+            ValueRef::Absent => None,
+        }
+    }
+
+    pub fn first_i64(&self) -> Option<i64> {
+        match self {
+            ValueRef::Many(vs) => vs.first_i64(),
+            ValueRef::Inherited(v) => v.as_int(),
+            ValueRef::Absent => None,
+        }
+    }
+
+    pub fn first_bool(&self) -> Option<bool> {
+        match self {
+            ValueRef::Many(vs) => vs.first_bool(),
+            ValueRef::Inherited(v) => v.as_bool(),
+            ValueRef::Absent => None,
+        }
+    }
+
+    pub fn first_str(&self) -> Option<&'a str> {
+        match self {
+            ValueRef::Many(vs) => vs.first_str(),
+            ValueRef::Inherited(v) => v.as_str(),
+            ValueRef::Absent => None,
+        }
+    }
+
+    /// Mean of the float-coercible values (`None` when there are none).
+    pub fn mean_f64(&self) -> Option<f64> {
+        match self {
+            ValueRef::Many(vs) => {
+                let (sum, n) = vs.sum_count_f64();
+                if n == 0 {
+                    None
+                } else {
+                    Some(sum / n as f64)
+                }
+            }
+            ValueRef::Inherited(v) => v.as_float(),
+            ValueRef::Absent => None,
+        }
+    }
+
+    /// True when any value is the given string.
+    pub fn contains_str(&self, s: &str) -> bool {
+        match self {
+            ValueRef::Many(vs) => vs.contains_str(s),
+            ValueRef::Inherited(v) => v.as_str() == Some(s),
+            ValueRef::Absent => false,
         }
     }
 
@@ -108,13 +168,14 @@ impl<'a> ValueRef<'a> {
         self.len() == 0
     }
 
-    pub fn iter(&self) -> impl Iterator<Item = &'a AttrValue> + '_ {
-        let (many, one): (&[AttrValue], Option<&AttrValue>) = match self {
-            ValueRef::Many(vs) => (vs, None),
-            ValueRef::Inherited(v) => (&[], Some(*v)),
-            ValueRef::Absent => (&[], None),
+    /// Materializing iterator (cold path).
+    pub fn iter(&self) -> impl Iterator<Item = AttrValue> + 'a {
+        let (many, one): (Option<ValuesRef<'a>>, Option<&'a AttrValue>) = match self {
+            ValueRef::Many(vs) => (Some(*vs), None),
+            ValueRef::Inherited(v) => (None, Some(*v)),
+            ValueRef::Absent => (None, None),
         };
-        many.iter().chain(one)
+        many.into_iter().flat_map(|vs| vs.iter()).chain(one.into_iter().cloned())
     }
 }
 
@@ -126,11 +187,13 @@ pub(crate) fn resolve<'a>(
     match binding {
         // Constants can never be overridden by instances.
         AttrBinding::Constant(v) => ValueRef::Inherited(v),
-        AttrBinding::Default(v) => match col.map(|c| c.get(idx)).filter(|s| !s.is_empty()) {
-            Some(s) => ValueRef::Many(s),
-            None => ValueRef::Inherited(v),
-        },
-        AttrBinding::Plain => match col.map(|c| c.get(idx)).filter(|s| !s.is_empty()) {
+        AttrBinding::Default(v) => {
+            match col.and_then(|c| c.values(idx)).filter(|s| !s.is_empty()) {
+                Some(s) => ValueRef::Many(s),
+                None => ValueRef::Inherited(v),
+            }
+        }
+        AttrBinding::Plain => match col.and_then(|c| c.values(idx)).filter(|s| !s.is_empty()) {
             Some(s) => ValueRef::Many(s),
             None => ValueRef::Absent,
         },
@@ -167,22 +230,14 @@ mod tests {
     fn default_attribute_inherits_then_overrides() {
         let t = template();
         let mut gi = GraphInstance::empty(&t, 0, TimeWindow::new(0, 7200));
-        assert_eq!(
-            gi.vertex_values(&t, 1, 0).first(),
-            Some(&AttrValue::Bool(true))
-        );
+        assert_eq!(gi.vertex_values(&t, 1, 0).first(), Some(AttrValue::Bool(true)));
+        assert_eq!(gi.vertex_values(&t, 1, 0).first_bool(), Some(true));
         let mut col = AttrColumn::new();
         col.push(0, [AttrValue::Bool(false)]);
         gi.vcols[1] = Some(col);
-        assert_eq!(
-            gi.vertex_values(&t, 1, 0).first(),
-            Some(&AttrValue::Bool(false))
-        );
+        assert_eq!(gi.vertex_values(&t, 1, 0).first_bool(), Some(false));
         // Vertex 1 still inherits.
-        assert_eq!(
-            gi.vertex_values(&t, 1, 1).first(),
-            Some(&AttrValue::Bool(true))
-        );
+        assert_eq!(gi.vertex_values(&t, 1, 1).first_bool(), Some(true));
     }
 
     #[test]
@@ -192,10 +247,9 @@ mod tests {
         let mut col = AttrColumn::new();
         col.push(0, [AttrValue::Str("hacked".into())]);
         gi.vcols[2] = Some(col);
-        assert_eq!(
-            gi.vertex_values(&t, 2, 0).first(),
-            Some(&AttrValue::Str("router".into()))
-        );
+        assert_eq!(gi.vertex_values(&t, 2, 0).first_str(), Some("router"));
+        assert!(gi.vertex_values(&t, 2, 0).contains_str("router"));
+        assert!(!gi.vertex_values(&t, 2, 0).contains_str("hacked"));
     }
 
     #[test]
@@ -209,6 +263,18 @@ mod tests {
         assert_eq!(vals.len(), 2);
         let collected: Vec<f64> = vals.iter().map(|v| v.as_float().unwrap()).collect();
         assert_eq!(collected, vec![1.5, 2.5]);
+        assert_eq!(vals.mean_f64(), Some(2.0));
+        assert_eq!(vals.first_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn inherited_iter_yields_one_value() {
+        let t = template();
+        let gi = GraphInstance::empty(&t, 0, TimeWindow::new(0, 7200));
+        let vals = gi.vertex_values(&t, 1, 0);
+        let collected: Vec<AttrValue> = vals.iter().collect();
+        assert_eq!(collected, vec![AttrValue::Bool(true)]);
+        assert_eq!(vals.mean_f64(), None); // bool default is not float-coercible
     }
 
     #[test]

@@ -13,9 +13,9 @@ pub mod csr;
 pub mod instance;
 pub mod template;
 
-pub use attributes::{AttrColumn, AttrSchema, AttrType, AttrValue, Schema, ISEXISTS};
+pub use attributes::{AttrColumn, AttrSchema, AttrType, AttrValue, Schema, Slab, ValuesRef, ISEXISTS};
 pub use csr::Csr;
-pub use instance::{GraphInstance, TimeWindow};
+pub use instance::{GraphInstance, TimeWindow, ValueRef};
 pub use template::{GraphTemplate, TemplateBuilder};
 
 /// External vertex identifier (e.g. an IPv4 address widened to 64 bits).

@@ -51,7 +51,7 @@ goffish — scalable analytics over distributed time-series graphs
 USAGE:
   goffish deploy  --dataset tr|roadnet --out DIR
                   [--parts 12 --bins 20 --pack 20 --vertices 50000
-                   --instances 146 --seed 48879 --no-compress]
+                   --instances 146 --seed 48879 --no-compress --slice-v1]
   goffish run     --store DIR --app sssp|pagerank|nhop|track|wcc
                   [--cache 14 --hosts <auto> --source <ext-id>
                    --plate CA-00007 --nhops 6 --backend scalar|pjrt
@@ -96,6 +96,9 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         args.usize("pack", 20),
     );
     cfg.compress = !args.switch("no-compress");
+    if args.switch("slice-v1") {
+        cfg.slice_version = 1; // legacy interleaved attribute bodies
+    }
     cfg.partition.seed = args.u64("seed", 0xBEEF);
     let t0 = std::time::Instant::now();
     let report = deploy(source.as_ref(), &cfg, &out)?;

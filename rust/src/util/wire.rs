@@ -150,6 +150,14 @@ impl<'a> Dec<'a> {
         self.take(n)
     }
 
+    /// Consume and return everything after the cursor (used by bit-level
+    /// codecs that take over from the byte-aligned stream).
+    pub fn take_rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
     pub fn str(&mut self) -> Result<&'a str> {
         std::str::from_utf8(self.bytes()?).context("wire: invalid utf8")
     }

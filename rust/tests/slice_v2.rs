@@ -1,0 +1,193 @@
+//! Format-v2 attribute slices: compression acceptance, v1 backward
+//! compatibility, and bit-identical app outputs across formats and
+//! prefetch modes.
+
+use goffish::apps::{PageRankApp, SsspApp};
+use goffish::cluster::ClusterSpec;
+use goffish::datagen::{traceroute, CollectionSource, TraceRouteGenerator, TraceRouteParams};
+use goffish::gofs::{deploy, open_collection, DeployConfig, DiskModel, StoreOptions};
+use goffish::gopher::{GopherEngine, RunOptions};
+use goffish::metrics::Metrics;
+use goffish::runtime::ScalarBackend;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gofs-v2-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn tr_gen(instances: usize) -> TraceRouteGenerator {
+    TraceRouteGenerator::new(TraceRouteParams {
+        n_instances: instances,
+        ..TraceRouteParams::tiny()
+    })
+}
+
+fn deploy_version(
+    gen: &TraceRouteGenerator,
+    tag: &str,
+    version: u8,
+    bins: usize,
+    pack: usize,
+    compress: bool,
+) -> (PathBuf, goffish::gofs::DeployReport) {
+    let dir = tmpdir(tag);
+    let mut cfg = DeployConfig::new(2, bins, pack);
+    cfg.slice_version = version;
+    cfg.compress = compress;
+    let report = deploy(gen, &cfg, &dir).unwrap();
+    (dir, report)
+}
+
+fn make_engine(dir: &PathBuf, cache: usize) -> GopherEngine {
+    let metrics = Arc::new(Metrics::new());
+    let opts = StoreOptions {
+        cache_slots: cache,
+        disk: DiskModel::instant(),
+        metrics: metrics.clone(),
+    };
+    let stores = open_collection(dir, &opts).unwrap();
+    let n = stores.len();
+    GopherEngine::new(stores, ClusterSpec::new(n), metrics)
+}
+
+/// Acceptance: at the paper's s20-i20 layout, v2 attribute bodies must be
+/// at least 1.5x smaller than v1 for the traceroute dataset, and the
+/// deployment must be smaller on disk.
+#[test]
+fn v2_shrinks_traceroute_s20_i20_bodies_at_least_1_5x() {
+    let gen = tr_gen(20);
+    let (d1, r1) = deploy_version(&gen, "ratio-v1", 1, 20, 20, false);
+    let (d2, r2) = deploy_version(&gen, "ratio-v2", 2, 20, 20, false);
+    assert!(r1.attr_body_bytes > 0 && r2.attr_body_bytes > 0);
+    let ratio = r1.attr_body_bytes as f64 / r2.attr_body_bytes as f64;
+    assert!(
+        ratio >= 1.5,
+        "v2 body reduction only {ratio:.2}x (v1 {} vs v2 {})",
+        r1.attr_body_bytes,
+        r2.attr_body_bytes
+    );
+    assert!(
+        r2.bytes_written < r1.bytes_written,
+        "v2 on-disk {} not smaller than v1 {}",
+        r2.bytes_written,
+        r1.bytes_written
+    );
+    std::fs::remove_dir_all(&d1).unwrap();
+    std::fs::remove_dir_all(&d2).unwrap();
+}
+
+/// Backward compatibility: a v1-format deployment (the wire fixture) must
+/// read back exactly the generator's values through the new reader.
+#[test]
+fn v1_fixture_reads_back_generator_values() {
+    let gen = tr_gen(8);
+    let (dir, _) = deploy_version(&gen, "fixture-v1", 1, 3, 4, true);
+    let opts = StoreOptions {
+        cache_slots: 8,
+        disk: DiskModel::instant(),
+        metrics: Arc::new(Metrics::new()),
+    };
+    let stores = open_collection(&dir, &opts).unwrap();
+    let t = 3usize;
+    let gi = gen.instance(t);
+    let proj = goffish::gofs::Projection::all(
+        &gen.template().vertex_schema,
+        &gen.template().edge_schema,
+    );
+    let mut checked = 0usize;
+    for store in &stores {
+        for sg in store.subgraphs() {
+            let sgi = store.read_instance(sg.id.local(), t, &proj).unwrap();
+            for (local, &global) in sg.vertices.iter().enumerate() {
+                let got = sgi.vertex_values(traceroute::vattr::RTT_MS, local as u32);
+                let want = gi.vertex_values(gen.template(), traceroute::vattr::RTT_MS, global);
+                assert_eq!(got.len(), want.len(), "rtt count v{global}");
+                assert_eq!(got.first(), want.first(), "rtt first v{global}");
+                if !got.is_empty() {
+                    checked += 1;
+                }
+            }
+            for (pos, &eidx) in sg.edges.iter().enumerate() {
+                let got = sgi.edge_values(traceroute::eattr::LATENCY_MS, pos);
+                let want = gi.edge_values(gen.template(), traceroute::eattr::LATENCY_MS, eidx);
+                assert_eq!(got.len(), want.len(), "lat count e{eidx}");
+                assert_eq!(got.first(), want.first(), "lat first e{eidx}");
+            }
+        }
+    }
+    assert!(checked > 10, "too few values checked ({checked})");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+fn sssp_fp(dir: &PathBuf, prefetch: bool) -> Vec<(u64, usize, u64)> {
+    let eng = make_engine(dir, 14);
+    let gen = tr_gen(8);
+    let src = gen.template().ext_ids[gen.vantages()[0] as usize];
+    let app = SsspApp::new(src, traceroute::eattr::LATENCY_MS);
+    eng.run(&app, &RunOptions { prefetch, ..Default::default() }).unwrap();
+    let distances = app.results.distances.lock().unwrap();
+    let mut fp: Vec<(u64, usize, u64)> = distances
+        .iter()
+        .flat_map(|(sgid, (t, d))| {
+            d.iter()
+                .enumerate()
+                .map(move |(lv, &x)| (sgid.0, *t * 1_000_000 + lv, x.to_bits() as u64))
+        })
+        .collect();
+    fp.sort_unstable();
+    fp
+}
+
+fn pagerank_fp(dir: &PathBuf) -> Vec<(usize, u64, u64, Vec<(u64, u32)>)> {
+    let eng = make_engine(dir, 14);
+    let gen = tr_gen(8);
+    let app = PageRankApp::new(
+        gen.template().n_vertices(),
+        Some(traceroute::eattr::ACTIVE),
+        Arc::new(ScalarBackend),
+    );
+    eng.run(&app, &RunOptions::default()).unwrap();
+    let by_sg = app.results.by_subgraph.lock().unwrap();
+    let mut fp: Vec<(usize, u64, u64, Vec<(u64, u32)>)> = by_sg
+        .iter()
+        .map(|((t, sgid), s)| {
+            (
+                *t,
+                sgid.0,
+                s.mass.to_bits(),
+                s.top.iter().map(|&(v, r)| (v, r.to_bits())).collect(),
+            )
+        })
+        .collect();
+    fp.sort();
+    fp
+}
+
+/// Acceptance: SSSP and PageRank outputs are bit-identical across v1/v2
+/// slice formats and prefetch on/off.
+#[test]
+fn sssp_and_pagerank_outputs_bit_identical_across_formats_and_prefetch() {
+    let gen = tr_gen(8);
+    let (d1, _) = deploy_version(&gen, "apps-v1", 1, 4, 3, true);
+    let (d2, _) = deploy_version(&gen, "apps-v2", 2, 4, 3, true);
+
+    let s_v1_pf = sssp_fp(&d1, true);
+    let s_v1_np = sssp_fp(&d1, false);
+    let s_v2_pf = sssp_fp(&d2, true);
+    let s_v2_np = sssp_fp(&d2, false);
+    assert!(!s_v1_pf.is_empty());
+    assert_eq!(s_v1_pf, s_v1_np, "prefetch changed SSSP outputs (v1)");
+    assert_eq!(s_v2_pf, s_v2_np, "prefetch changed SSSP outputs (v2)");
+    assert_eq!(s_v1_pf, s_v2_pf, "slice format changed SSSP outputs");
+
+    let p_v1 = pagerank_fp(&d1);
+    let p_v2 = pagerank_fp(&d2);
+    assert!(!p_v1.is_empty());
+    assert_eq!(p_v1, p_v2, "slice format changed PageRank outputs");
+
+    std::fs::remove_dir_all(&d1).unwrap();
+    std::fs::remove_dir_all(&d2).unwrap();
+}
