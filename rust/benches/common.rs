@@ -126,7 +126,7 @@ pub fn deploy_cached(
 
 /// Open all partitions with a given cache size and the HDD disk model.
 pub fn open_stores(dir: &PathBuf, hosts: usize, cache: usize, metrics: Arc<Metrics>) -> Vec<Store> {
-    let opts = StoreOptions { cache_slots: cache, disk: DiskModel::default(), metrics };
+    let opts = StoreOptions { cache_slots: cache, disk: DiskModel::default(), metrics, ..Default::default() };
     (0..hosts).map(|p| Store::open(dir, p, opts.clone()).expect("open store")).collect()
 }
 

@@ -17,7 +17,10 @@ mod common;
 use common::*;
 use goffish::apps::SsspApp;
 use goffish::datagen::{traceroute, CollectionSource, TraceRouteGenerator, TraceRouteParams};
-use goffish::gofs::{deploy, DeployConfig, Projection, SliceFile};
+use goffish::gofs::{
+    deploy, deploy_template, CollectionAppender, DeployConfig, IngestOptions, Projection,
+    SliceFile,
+};
 use goffish::graph::Schema;
 use goffish::gopher::{
     Application, ComputeCtx, GopherEngine, Pattern, Payload, RunOptions, RunStats,
@@ -333,6 +336,156 @@ fn main() {
         json.push(("blocking_load_ms_per_timestep_on".into(), block_on * 1e3));
         json.push(("load_pipeline_speedup_x".into(), speedup));
         json.push(("fig7_wall_s".into(), on.total_wall_s));
+    }
+
+    // --- L3: streaming ingest (WAL append -> seal -> follow). ---
+    // Append throughput and seal latency on a fresh template-only
+    // deployment, then follow-mode lag: how long after an append the
+    // BSP actually computes that timestep.
+    {
+        let ing_gen = TraceRouteGenerator::new(TraceRouteParams {
+            n_vertices: scale.vertices.min(10_000),
+            n_instances: scale.instances.clamp(4, 12),
+            traces_per_instance: scale.traces.min(800),
+            ..Default::default()
+        });
+        let hosts = 2usize;
+        let pack = 4usize;
+        let n_inst = ing_gen.n_instances();
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("target/bench-deployments/hotpath-ingest");
+        let _ = std::fs::remove_dir_all(&root);
+        deploy_template(&ing_gen, &DeployConfig::new(hosts, 8, pack), &root)
+            .expect("ingest probe: template deploy");
+
+        let mut appender =
+            CollectionAppender::open(&root, IngestOptions::default()).expect("appender");
+        for t in 0..n_inst {
+            appender.append(&ing_gen.instance(t)).expect("append");
+        }
+        let ing = appender.finish().expect("finish");
+        let inst_per_s = ing.appended as f64 / ing.append_wall_s.max(1e-9);
+        let seal_ms = ing.seal_wall_s * 1e3 / ing.sealed_groups.max(1) as f64;
+        report.row(&[
+            "ingest append".into(),
+            format!("{inst_per_s:.1}"),
+            format!("inst/s ({} instances, WAL fsync on)", ing.appended),
+        ]);
+        report.row(&[
+            "ingest seal".into(),
+            format!("{seal_ms:.2}"),
+            format!("ms/group ({} groups of {pack})", ing.sealed_groups),
+        ]);
+        json.push(("ingest_append_inst_per_s".into(), inst_per_s));
+        json.push(("ingest_seal_ms_per_group".into(), seal_ms));
+        json.push(("ingest_wal_mb".into(), ing.wal_bytes as f64 / 1e6));
+
+        // Follow-mode lag over a fresh feed.
+        let _ = std::fs::remove_dir_all(&root);
+        deploy_template(&ing_gen, &DeployConfig::new(hosts, 8, pack), &root)
+            .expect("ingest probe: template redeploy");
+        let appended: Arc<std::sync::Mutex<Vec<(usize, std::time::Instant)>>> =
+            Arc::new(std::sync::Mutex::new(Vec::new()));
+        let computed: Arc<std::sync::Mutex<std::collections::HashMap<usize, std::time::Instant>>> =
+            Arc::new(std::sync::Mutex::new(std::collections::HashMap::new()));
+        let feed_root = root.clone();
+        let feed_stamps = appended.clone();
+        let feed_params = (
+            ing_gen.params().n_vertices,
+            n_inst,
+            ing_gen.params().traces_per_instance,
+        );
+        let feeder = std::thread::spawn(move || {
+            let gen = TraceRouteGenerator::new(TraceRouteParams {
+                n_vertices: feed_params.0,
+                n_instances: feed_params.1,
+                traces_per_instance: feed_params.2,
+                ..Default::default()
+            });
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            let mut app = CollectionAppender::open(&feed_root, IngestOptions::default())
+                .expect("feeder appender");
+            for t in 0..gen.n_instances() {
+                app.append(&gen.instance(t)).expect("feeder append");
+                feed_stamps.lock().unwrap().push((t, std::time::Instant::now()));
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        });
+        struct StampApp {
+            computed: Arc<std::sync::Mutex<std::collections::HashMap<usize, std::time::Instant>>>,
+        }
+        struct StampProgram {
+            computed: Arc<std::sync::Mutex<std::collections::HashMap<usize, std::time::Instant>>>,
+        }
+        impl SubgraphProgram for StampProgram {
+            fn compute(
+                &mut self,
+                ctx: &mut ComputeCtx<'_>,
+                _sgi: &goffish::gofs::SubgraphInstance,
+                _msgs: &[Payload],
+            ) {
+                if ctx.superstep == 1 {
+                    self.computed
+                        .lock()
+                        .unwrap()
+                        .entry(ctx.timestep)
+                        .or_insert_with(std::time::Instant::now);
+                }
+                ctx.vote_to_halt();
+            }
+        }
+        impl Application for StampApp {
+            fn name(&self) -> &str {
+                "stamp"
+            }
+            fn pattern(&self) -> Pattern {
+                Pattern::Sequential
+            }
+            fn projection(&self, vs: &Schema, es: &Schema) -> Projection {
+                Projection::all(vs, es) // realistic load per timestep
+            }
+            fn create(&self, _sg: &Subgraph) -> Box<dyn SubgraphProgram> {
+                Box::new(StampProgram { computed: self.computed.clone() })
+            }
+        }
+        let (eng, _m) = engine(&root, hosts, 28);
+        let stats = eng
+            .run(
+                &StampApp { computed: computed.clone() },
+                &RunOptions {
+                    follow: true,
+                    follow_poll_ms: 2,
+                    follow_idle_polls: 500,
+                    ..Default::default()
+                },
+            )
+            .expect("follow run");
+        feeder.join().expect("feeder thread");
+        let appended = appended.lock().unwrap();
+        let computed = computed.lock().unwrap();
+        let lags: Vec<f64> = appended
+            .iter()
+            .filter_map(|&(t, at)| {
+                computed.get(&t).map(|&ct| ct.saturating_duration_since(at).as_secs_f64())
+            })
+            .collect();
+        let lag_ms = if lags.is_empty() {
+            -1.0
+        } else {
+            lags.iter().sum::<f64>() / lags.len() as f64 * 1e3
+        };
+        report.row(&[
+            "follow-mode lag".into(),
+            format!("{lag_ms:.1}"),
+            format!("ms append->compute ({} timesteps live)", stats.per_timestep.len()),
+        ]);
+        json.push(("ingest_follow_lag_ms".into(), lag_ms));
+        assert_eq!(
+            stats.per_timestep.len(),
+            n_inst,
+            "follow run missed appended timesteps"
+        );
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     // --- L1/L2: kernel dispatch + throughput vs scalar. ---

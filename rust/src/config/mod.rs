@@ -19,6 +19,8 @@ use std::sync::Arc;
 pub struct RunConfig {
     pub store_dir: std::path::PathBuf,
     pub cache_slots: usize,
+    /// Decoded-slice byte budget per store (0 = slot count only).
+    pub cache_bytes: u64,
     pub n_hosts: usize,
     pub disk: DiskModel,
     pub metrics: Arc<Metrics>,
@@ -28,6 +30,7 @@ impl RunConfig {
     pub fn store_options(&self) -> StoreOptions {
         StoreOptions {
             cache_slots: self.cache_slots,
+            cache_bytes: self.cache_bytes,
             disk: self.disk.clone(),
             metrics: self.metrics.clone(),
         }

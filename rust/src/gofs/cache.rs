@@ -23,6 +23,14 @@
 //! * recency is a doubly-linked LRU list over an index arena, so both the
 //!   hit path and eviction are O(1) (the previous implementation scanned
 //!   all entries with `min_by_key` on every eviction).
+//!
+//! ### Byte-budget eviction
+//!
+//! On top of the slot count, [`SliceCache::with_weigher_and_budget`] adds
+//! a resident-byte ceiling: inserts (and post-insert growth reported via
+//! [`SliceCache::add_weight`], used when lazily-decoded v2 slices grow
+//! on first touch) evict LRU entries until the weigher-reported total
+//! fits. This bounds memory when ingest and analytics share a host.
 
 use std::collections::HashMap;
 use std::hash::Hash;
@@ -157,29 +165,49 @@ pub struct LoadOutcome {
 }
 
 /// A thread-safe LRU cache with a fixed number of slots (`0` disables
-/// caching entirely — the paper's `c0` configuration).
+/// caching entirely — the paper's `c0` configuration) and an optional
+/// resident-byte budget on top (see [`SliceCache::with_weigher_and_budget`]).
 pub struct SliceCache<K, V> {
     slots: usize,
     /// Optional per-entry size function for resident-byte accounting.
     weigher: Option<fn(&V) -> u64>,
+    /// Evict LRU entries while weigher-reported resident bytes exceed
+    /// this (0 = slot-count eviction only).
+    byte_budget: u64,
     inner: Mutex<Inner<K, V>>,
 }
 
 impl<K: Eq + Hash + Clone, V> SliceCache<K, V> {
     pub fn new(slots: usize) -> Self {
-        Self::build(slots, None)
+        Self::build(slots, None, 0)
     }
 
     /// A cache that also tracks the byte footprint of resident values, as
     /// reported by `weigher` at insert time.
     pub fn with_weigher(slots: usize, weigher: fn(&V) -> u64) -> Self {
-        Self::build(slots, Some(weigher))
+        Self::build(slots, Some(weigher), 0)
     }
 
-    fn build(slots: usize, weigher: Option<fn(&V) -> u64>) -> Self {
+    /// Size-aware mode: besides the slot count, evict LRU entries while
+    /// the weigher-reported resident bytes exceed `byte_budget` (0 =
+    /// unlimited). The most recent entry is never evicted on its own
+    /// account, so a single value larger than the whole budget still
+    /// caches (and is reclaimed by the next insert). Weights are taken at
+    /// insert time; values that grow later (lazily-decoded v2 slices)
+    /// report the growth via [`SliceCache::add_weight`].
+    pub fn with_weigher_and_budget(
+        slots: usize,
+        weigher: fn(&V) -> u64,
+        byte_budget: u64,
+    ) -> Self {
+        Self::build(slots, Some(weigher), byte_budget)
+    }
+
+    fn build(slots: usize, weigher: Option<fn(&V) -> u64>, byte_budget: u64) -> Self {
         SliceCache {
             slots,
             weigher,
+            byte_budget,
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
                 lru: Lru::new(),
@@ -283,17 +311,10 @@ impl<K: Eq + Hash + Clone, V> SliceCache<K, V> {
                     // the value.
                     let weight = self.weigher.map(|w| w(value.as_ref())).unwrap_or(0);
                     let mut inner = self.inner.lock().unwrap();
-                    if inner.map.len() >= self.slots {
-                        if let Some(victim) = inner.lru.pop_lru() {
-                            inner.map.remove(&victim.key);
-                            inner.evictions += 1;
-                            inner.resident_bytes -= victim.weight;
-                            evicted = true;
-                        }
-                    }
                     let slot = inner.lru.push_front(key.clone(), value.clone(), weight);
                     inner.map.insert(key.clone(), slot);
                     inner.resident_bytes += weight;
+                    evicted = self.enforce_budgets(&mut inner) > 0;
                     if let Some(w) = inner.inflight.remove(key) {
                         *w.state.lock().unwrap() = InflightState::Ready(value.clone());
                         w.cv.notify_all();
@@ -307,6 +328,58 @@ impl<K: Eq + Hash + Clone, V> SliceCache<K, V> {
                 Err(e)
             }
         }
+    }
+
+    /// Evict LRU entries until both budgets hold: at most `slots` entries,
+    /// and (when a byte budget is set) at most `byte_budget` resident
+    /// bytes. The head (most recent) entry is never evicted, so the entry
+    /// just inserted/re-weighed survives its own enforcement pass.
+    /// Returns the number of evictions performed.
+    fn enforce_budgets(&self, inner: &mut Inner<K, V>) -> usize {
+        let mut n = 0usize;
+        while inner.map.len() > self.slots
+            || (self.byte_budget > 0
+                && inner.resident_bytes > self.byte_budget
+                && inner.map.len() > 1)
+        {
+            match inner.lru.pop_lru() {
+                Some(victim) => {
+                    inner.map.remove(&victim.key);
+                    inner.evictions += 1;
+                    inner.resident_bytes -= victim.weight;
+                    n += 1;
+                }
+                None => break,
+            }
+        }
+        n
+    }
+
+    /// Add `delta` bytes to a resident entry's recorded weight (no-op
+    /// for absent keys), then re-enforce the byte budget. Used when a
+    /// value grows after insert — a lazily-decoded v2 slice adds each
+    /// position column's footprint on its first touch. Incremental by
+    /// design: callers report just the newly materialized bytes, so the
+    /// hot path never rescans the whole value.
+    pub fn add_weight(&self, key: &K, delta: u64) {
+        if delta == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let Some(&slot) = inner.map.get(key) else { return };
+        let node = inner.lru.nodes[slot].as_mut().expect("mapped LRU slot is live");
+        node.weight += delta;
+        inner.resident_bytes += delta;
+        // Protect the growing entry itself: it is in active use.
+        if inner.lru.head != slot {
+            inner.lru.touch(slot);
+        }
+        self.enforce_budgets(&mut inner);
+    }
+
+    /// Configured byte budget (0 = unlimited).
+    pub fn byte_budget(&self) -> u64 {
+        self.byte_budget
     }
 
     /// Mark an in-flight load as failed and wake its waiters.
@@ -566,6 +639,67 @@ mod tests {
         assert_eq!(c.resident_bytes(), 130);
         c.clear();
         assert_eq!(c.resident_bytes(), 0);
+    }
+
+    /// Satellite: byte-budget mode — inserts evict LRU entries until the
+    /// resident total fits, independent of the slot count.
+    #[test]
+    fn byte_budget_evicts_by_size_not_just_slots() {
+        let c: SliceCache<u32, Vec<u8>> =
+            SliceCache::with_weigher_and_budget(100, |v: &Vec<u8>| v.len() as u64, 100);
+        c.get_or_load(&1, || Ok::<_, std::convert::Infallible>(vec![0u8; 40])).unwrap();
+        c.get_or_load(&2, || Ok::<_, std::convert::Infallible>(vec![0u8; 40])).unwrap();
+        assert_eq!((c.len(), c.resident_bytes()), (2, 80));
+        // 40 + 40 + 40 > 100 -> LRU (key 1) goes.
+        c.get_or_load(&3, || Ok::<_, std::convert::Infallible>(vec![0u8; 40])).unwrap();
+        assert_eq!((c.len(), c.resident_bytes()), (2, 80));
+        let (_, m0, _) = c.stats();
+        c.get_or_load(&2, || Ok::<_, std::convert::Infallible>(vec![])).unwrap();
+        let (_, m1, _) = c.stats();
+        assert_eq!(m1, m0, "key 2 should still be resident");
+        c.get_or_load(&1, || Ok::<_, std::convert::Infallible>(vec![0u8; 40])).unwrap();
+        let (_, m2, _) = c.stats();
+        assert_eq!(m2, m1 + 1, "key 1 was evicted by byte pressure");
+    }
+
+    /// A value bigger than the whole budget still caches (the most recent
+    /// entry is never evicted on its own account) and is reclaimed by the
+    /// next insert.
+    #[test]
+    fn byte_budget_tolerates_single_oversized_entry() {
+        let c: SliceCache<u32, Vec<u8>> =
+            SliceCache::with_weigher_and_budget(8, |v: &Vec<u8>| v.len() as u64, 10);
+        c.get_or_load(&1, || Ok::<_, std::convert::Infallible>(vec![0u8; 1000])).unwrap();
+        assert_eq!((c.len(), c.resident_bytes()), (1, 1000));
+        c.get_or_load(&2, || Ok::<_, std::convert::Infallible>(vec![0u8; 4])).unwrap();
+        assert_eq!((c.len(), c.resident_bytes()), (1, 4), "oversized entry reclaimed");
+    }
+
+    /// Satellite: growth reporting (the lazy-decode path) updates the
+    /// accounting incrementally and re-enforces the budget.
+    #[test]
+    fn add_weight_grows_entry_and_enforces_budget() {
+        let c: SliceCache<u32, Vec<u8>> =
+            SliceCache::with_weigher_and_budget(8, |v: &Vec<u8>| v.len() as u64, 100);
+        for k in 0..4u32 {
+            c.get_or_load(&k, || Ok::<_, std::convert::Infallible>(vec![0u8; 10])).unwrap();
+        }
+        assert_eq!((c.len(), c.resident_bytes()), (4, 40));
+        // Key 3 "lazily decodes" +75 bytes (10 -> 85): 85 + 3*10 > 100
+        // and 85 + 2*10 > 100, so the two least recent entries (0, 1)
+        // go; the growing entry itself survives.
+        c.add_weight(&3, 75);
+        assert_eq!(c.resident_bytes(), 85 + 10);
+        assert_eq!(c.len(), 2);
+        let (_, m0, _) = c.stats();
+        c.get_or_load(&3, || Ok::<_, std::convert::Infallible>(vec![])).unwrap();
+        c.get_or_load(&2, || Ok::<_, std::convert::Infallible>(vec![])).unwrap();
+        let (_, m1, _) = c.stats();
+        assert_eq!(m1, m0, "2 and 3 should have survived the growth");
+        // Absent keys and zero deltas are no-ops.
+        c.add_weight(&99, 1 << 30);
+        c.add_weight(&3, 0);
+        assert_eq!(c.resident_bytes(), 95);
     }
 
     #[test]

@@ -1,0 +1,446 @@
+//! Streaming appenders: one [`GraphInstance`] at a time into a deployed
+//! collection, with a WAL-backed open tail and pack-aligned sealing.
+//!
+//! See the parent module docs for the append → seal → publish lifecycle
+//! and the crash-ordering argument.
+
+use crate::gofs::ingest::wal::{self, WalRecord, WalWriter, WAL_FILE};
+use crate::gofs::reader::{decode_template_slice, PartShared};
+use crate::gofs::slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};
+use crate::gofs::writer::{
+    decode_meta_slice, encode_attr_body, encode_meta_slice, part_dir, project_instance_cells,
+    write_collection_manifest, PartMeta,
+};
+use crate::gofs::SliceKey;
+use crate::graph::{AttrColumn, GraphInstance, Timestep};
+use crate::partition::Subgraph;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Ingest-side knobs. Layout parameters (`pack`, `n_bins`, partitioning)
+/// are fixed by the deployed collection; these only shape how sealed
+/// groups are written and how durable appends are.
+#[derive(Debug, Clone)]
+pub struct IngestOptions {
+    /// Deflate-compress sealed slice bodies (mirrors `DeployConfig`).
+    pub compress: bool,
+    /// Attribute body format for sealed groups (v2 default). Readers
+    /// dispatch on the per-slice version byte, so mixing with a v1
+    /// history is fine.
+    pub slice_version: u8,
+    /// fsync the WAL after every append (default). Turning this off
+    /// trades the crash guarantee of the unsynced suffix for append
+    /// throughput; replay still never yields corrupt instances.
+    pub sync: bool,
+}
+
+impl Default for IngestOptions {
+    fn default() -> Self {
+        IngestOptions { compress: true, slice_version: VERSION_V2, sync: true }
+    }
+}
+
+/// What an appender has done so far (the bench ingest probe reads this).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IngestStats {
+    /// Instances appended through this handle (excludes replayed ones).
+    pub appended: u64,
+    /// Groups sealed (including catch-up seals at open and `finish`).
+    pub sealed_groups: u64,
+    /// WAL bytes written by this handle.
+    pub wal_bytes: u64,
+    /// Wall time inside `append`, excluding seals.
+    pub append_wall_s: f64,
+    /// Wall time inside seals (encode + write + fsync + publish).
+    pub seal_wall_s: f64,
+}
+
+/// Per-partition ingest state: the decoded template layout, the sealed
+/// metadata, the WAL handle and the decoded open tail.
+struct PartIngest {
+    dir: PathBuf,
+    shared: PartShared,
+    meta: PartMeta,
+    wal: WalWriter,
+    tail: Vec<WalRecord>,
+}
+
+/// Streaming writer for a whole collection: fans each appended instance
+/// out to every partition's WAL, seals full groups into ordinary slice
+/// groups, and publishes them atomically for concurrent readers.
+pub struct CollectionAppender {
+    root: PathBuf,
+    pack: usize,
+    parts: Vec<PartIngest>,
+    opts: IngestOptions,
+    stats: IngestStats,
+    /// Set when an append or seal failed part-way through its
+    /// partition fan-out: the in-memory state may disagree with disk
+    /// and across partitions, so further appends are refused. Reopening
+    /// reconciles from the WALs (common-prefix rule + catch-up seals).
+    poisoned: bool,
+}
+
+impl CollectionAppender {
+    /// Open the collection rooted at `root` for appending. Replays each
+    /// partition's WAL (dropping any torn tail frame and any records an
+    /// already-published seal covers) and finishes partially-completed
+    /// seals so every partition agrees on the sealed prefix.
+    pub fn open(root: &Path, opts: IngestOptions) -> Result<CollectionAppender> {
+        if !(VERSION_V1..=VERSION_V2).contains(&opts.slice_version) {
+            bail!("ingest: unsupported slice_version {}", opts.slice_version);
+        }
+        let n_parts = crate::gofs::writer::collection_parts(root)?;
+        let mut parts = Vec::with_capacity(n_parts);
+        for p in 0..n_parts {
+            let dir = part_dir(root, p);
+            let (tslice, _) = SliceFile::read_from(&dir.join("template.slice"))?;
+            if tslice.kind != SliceKind::Template {
+                bail!("part {p}: template.slice has wrong kind");
+            }
+            let shared = decode_template_slice(&tslice.body)?;
+            let (mslice, _) = SliceFile::read_from(&dir.join("meta.slice"))?;
+            let meta = decode_meta_slice(&mslice.body)?;
+            let wal_path = dir.join(WAL_FILE);
+            let (records, valid_len) = wal::replay(&wal_path, &shared)?;
+            // Drop records an earlier seal already published (crash
+            // between publish and WAL truncate), keep the open tail.
+            let mut tail: Vec<WalRecord> = records
+                .into_iter()
+                .filter(|r| r.timestep >= meta.n_instances)
+                .collect();
+            tail.sort_by_key(|r| r.timestep);
+            for (k, r) in tail.iter().enumerate() {
+                if r.timestep != meta.n_instances + k {
+                    bail!(
+                        "part {p}: WAL gap — sealed {} instances but replay yields t{}",
+                        meta.n_instances,
+                        r.timestep
+                    );
+                }
+            }
+            let wal = WalWriter::open(&wal_path, valid_len, opts.sync)?;
+            parts.push(PartIngest { dir, shared, meta, wal, tail });
+        }
+        let pack = parts.first().map(|p| p.meta.pack).unwrap_or(0);
+        if pack == 0 {
+            bail!("ingest: collection has no partitions or pack = 0");
+        }
+        if parts.iter().any(|p| p.meta.pack != pack) {
+            bail!("ingest: partitions disagree on pack");
+        }
+        let mut app = CollectionAppender {
+            root: root.to_path_buf(),
+            pack,
+            parts,
+            opts,
+            stats: IngestStats::default(),
+            poisoned: false,
+        };
+        app.catch_up()?;
+        let sealed = app.parts[0].meta.n_instances;
+        if sealed % pack != 0 {
+            bail!(
+                "ingest: collection holds {sealed} sealed instances with pack {pack} — \
+                 the final sealed group is partial, so no further timesteps can be appended \
+                 (batch-deploy a pack-aligned history, or a multiple of pack, to keep it open)"
+            );
+        }
+        // A crash mid-append can leave the newest record on only a subset
+        // of partitions (appends fan out partition by partition). An
+        // append counts only once *every* partition holds it: reconcile
+        // to the common visible prefix, dropping orphaned records.
+        let visible =
+            app.parts.iter().map(|p| p.meta.n_instances + p.tail.len()).min().unwrap_or(0);
+        for (p, part) in app.parts.iter_mut().enumerate() {
+            let keep = visible - part.meta.n_instances; // sealed counts agree post catch-up
+            if part.tail.len() > keep {
+                part.tail.truncate(keep);
+                let payloads: Vec<Vec<u8>> = part
+                    .tail
+                    .iter()
+                    .map(|r| wal::encode_record(r.timestep, r.window, &r.cells, &part.shared))
+                    .collect();
+                part.wal
+                    .rewrite(&payloads)
+                    .with_context(|| format!("part {p}: dropping orphaned tail"))?;
+            }
+        }
+        Ok(app)
+    }
+
+    /// Finish seals a crash interrupted mid-way across partitions: if any
+    /// partition published a group, every other partition has the same
+    /// records still in its WAL (truncation strictly follows publish), so
+    /// it can seal up to the same point.
+    fn catch_up(&mut self) -> Result<()> {
+        let target = self.parts.iter().map(|p| p.meta.n_instances).max().unwrap_or(0);
+        let min_sealed = self.parts.iter().map(|p| p.meta.n_instances).min().unwrap_or(0);
+        let pack = self.pack;
+        let opts = self.opts.clone();
+        for p in 0..self.parts.len() {
+            while self.parts[p].meta.n_instances < target {
+                let missing = target - self.parts[p].meta.n_instances;
+                let group_len = missing.min(pack);
+                if self.parts[p].tail.len() < group_len {
+                    bail!(
+                        "part {p}: cannot catch up to {target} sealed instances — \
+                         only {} open records in its WAL",
+                        self.parts[p].tail.len()
+                    );
+                }
+                seal_part_group(&mut self.parts[p], group_len, &opts)?;
+            }
+        }
+        if target > min_sealed {
+            // Count *groups* completed (a group many partitions finished
+            // is still one group — matching seal_open_group's accounting).
+            self.stats.sealed_groups += (target - min_sealed).div_ceil(pack) as u64;
+            write_collection_manifest(&self.root, self.parts.len(), target)?;
+        }
+        Ok(())
+    }
+
+    /// Timesteps visible through this appender: sealed plus open tail.
+    pub fn n_instances(&self) -> usize {
+        self.parts[0].meta.n_instances + self.parts[0].tail.len()
+    }
+
+    /// Timesteps sealed into published slice groups.
+    pub fn sealed_instances(&self) -> usize {
+        self.parts[0].meta.n_instances
+    }
+
+    /// Temporal packing factor `i` the collection was deployed with.
+    pub fn pack(&self) -> usize {
+        self.pack
+    }
+
+    pub fn stats(&self) -> IngestStats {
+        self.stats
+    }
+
+    /// Append one instance as the next timestep: project it onto every
+    /// partition, WAL it durably, and — once `pack` timesteps are open —
+    /// seal them into a slice group and publish. Returns the timestep the
+    /// instance was assigned.
+    ///
+    /// The fan-out is not atomic across partitions: on `Err` the append
+    /// was NOT committed (some partitions may hold an orphaned record),
+    /// the appender is poisoned against further use, and the caller must
+    /// reopen — `open` drops orphans by reconciling every partition to
+    /// the common visible prefix.
+    pub fn append(&mut self, gi: &GraphInstance) -> Result<Timestep> {
+        if self.poisoned {
+            bail!(
+                "appender poisoned by an earlier mid-fan-out failure; \
+                 reopen the collection to reconcile from the WALs"
+            );
+        }
+        let t0 = Instant::now();
+        let t = self.n_instances();
+        self.validate_types(gi)?;
+        if let Err(e) = self.fan_out(gi, t) {
+            self.poisoned = true;
+            return Err(e);
+        }
+        self.stats.appended += 1;
+        self.stats.append_wall_s += t0.elapsed().as_secs_f64();
+        if self.parts[0].tail.len() >= self.pack {
+            if let Err(e) = self.seal_open_group(self.pack) {
+                self.poisoned = true;
+                return Err(e);
+            }
+        }
+        Ok(t)
+    }
+
+    fn fan_out(&mut self, gi: &GraphInstance, t: Timestep) -> Result<()> {
+        for part in self.parts.iter_mut() {
+            let cells = project_instance(&part.shared, gi);
+            let payload = wal::encode_record(t, gi.window, &cells, &part.shared);
+            self.stats.wal_bytes += part.wal.append(&payload)?;
+            part.tail.push(WalRecord { timestep: t, window: gi.window, cells });
+        }
+        Ok(())
+    }
+
+    /// Seal any open (partial) tail as a final short group and close the
+    /// appender. After this the collection reads like a batch-deployed
+    /// one whose last group packs fewer than `pack` timesteps — which
+    /// also means it can no longer accept appends (hence `self` by
+    /// value).
+    pub fn finish(mut self) -> Result<IngestStats> {
+        if self.poisoned {
+            bail!(
+                "appender poisoned by an earlier mid-fan-out failure; \
+                 reopen the collection before finishing it"
+            );
+        }
+        let open = self.parts[0].tail.len();
+        if open > 0 {
+            self.seal_open_group(open)?;
+        }
+        Ok(self.stats)
+    }
+
+    fn seal_open_group(&mut self, group_len: usize) -> Result<()> {
+        let t0 = Instant::now();
+        let opts = self.opts.clone();
+        for part in self.parts.iter_mut() {
+            seal_part_group(part, group_len, &opts)?;
+        }
+        write_collection_manifest(
+            &self.root,
+            self.parts.len(),
+            self.parts[0].meta.n_instances,
+        )?;
+        self.stats.sealed_groups += 1;
+        self.stats.seal_wall_s += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Non-empty instance columns must match the schema's declared types;
+    /// a mismatch would otherwise surface as a panic deep in the codec.
+    fn validate_types(&self, gi: &GraphInstance) -> Result<()> {
+        let shared = &self.parts[0].shared;
+        if gi.vcols.len() != shared.vertex_schema.len()
+            || gi.ecols.len() != shared.edge_schema.len()
+        {
+            bail!(
+                "append: instance has {}v/{}e attribute columns, schema declares {}v/{}e",
+                gi.vcols.len(),
+                gi.ecols.len(),
+                shared.vertex_schema.len(),
+                shared.edge_schema.len()
+            );
+        }
+        for (a, col) in gi.vcols.iter().enumerate() {
+            if let Some(c) = col {
+                let want = shared.vertex_schema.attrs[a].ty;
+                if c.n_elements() > 0 && c.ty() != want {
+                    bail!("append: vertex attr {a} is {:?}, schema says {want:?}", c.ty());
+                }
+            }
+        }
+        for (a, col) in gi.ecols.iter().enumerate() {
+            if let Some(c) = col {
+                let want = shared.edge_schema.attrs[a].ty;
+                if c.n_elements() > 0 && c.ty() != want {
+                    bail!("append: edge attr {a} is {:?}, schema says {want:?}", c.ty());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Project a whole-graph instance into one partition's seal-time buffer
+/// layout `cells[attr_slot][bin][pos]` — the exact projection batch
+/// deployment applies (one shared implementation in `gofs::writer`), so
+/// sealed groups are indistinguishable from deployed ones.
+fn project_instance(
+    shared: &PartShared,
+    gi: &GraphInstance,
+) -> Vec<Vec<Vec<Option<AttrColumn>>>> {
+    let sgs: Vec<&Subgraph> = shared.subgraphs.iter().map(|a| a.as_ref()).collect();
+    project_instance_cells(
+        gi,
+        &sgs,
+        &shared.bins,
+        shared.vertex_schema.len(),
+        shared.edge_schema.len(),
+    )
+}
+
+/// Seal the first `group_len` open records of one partition into a slice
+/// group. Ordering is the crash-safety argument:
+///
+/// 1. write + fsync every attribute slice of the group (rename from a
+///    temp file, so readers never observe a torn slice);
+/// 2. write + fsync + rename the updated `meta.slice` — the atomic
+///    publish that makes the group (and nothing earlier) visible;
+/// 3. rewrite the WAL without the sealed records.
+///
+/// A crash before (2) leaves the old metadata and a full WAL: replay
+/// restores the tail and the seal redoes from scratch. A crash between
+/// (2) and (3) leaves sealed records in the WAL: replay skips them by
+/// timestep.
+fn seal_part_group(part: &mut PartIngest, group_len: usize, opts: &IngestOptions) -> Result<()> {
+    assert!(group_len > 0 && group_len <= part.tail.len());
+    let shared = &part.shared;
+    let va = shared.vertex_schema.len();
+    let ea = shared.edge_schema.len();
+    let n_bins = shared.bins.n_bins;
+    let pack = part.meta.pack;
+    let group = part.meta.n_instances / pack;
+    debug_assert_eq!(part.meta.n_instances % pack, 0, "appends require a pack-aligned prefix");
+
+    let mut sealed: Vec<WalRecord> = part.tail.drain(..group_len).collect();
+    // (1) attribute slices.
+    for slot in 0..va + ea {
+        let (vertex, attr) = if slot < va { (true, slot) } else { (false, slot - va) };
+        let ty = if vertex {
+            shared.vertex_schema.attrs[attr].ty
+        } else {
+            shared.edge_schema.attrs[attr].ty
+        };
+        for bin in 0..n_bins {
+            // cells[t - t_lo][pos], taken (not cloned) out of the records.
+            let cells: Vec<Vec<Option<AttrColumn>>> = sealed
+                .iter_mut()
+                .map(|r| std::mem::take(&mut r.cells[slot][bin]))
+                .collect();
+            let present = cells.iter().any(|ts| ts.iter().any(|c| c.is_some()));
+            part.meta.presence[slot][bin].push(present);
+            if !present {
+                continue;
+            }
+            let key = SliceKey { vertex, attr, bin, group };
+            let body = encode_attr_body(&cells, ty, opts.slice_version);
+            let slice = SliceFile::with_version(SliceKind::Attribute, body, opts.slice_version);
+            write_slice_durable(&slice, &part.dir.join(key.rel_path()), opts.compress)?;
+        }
+    }
+    // (2) metadata publish.
+    for r in &sealed {
+        part.meta.windows.push(r.window);
+    }
+    part.meta.n_instances += group_len;
+    let body = encode_meta_slice(
+        part.meta.pack,
+        part.meta.n_bins,
+        part.meta.n_instances,
+        &part.meta.windows,
+        &part.meta.presence,
+    );
+    write_slice_durable(
+        &SliceFile::new(SliceKind::Metadata, body),
+        &part.dir.join("meta.slice"),
+        opts.compress,
+    )?;
+    // (3) drop the sealed records from the WAL, atomically (temp file +
+    // rename): the remainder's already-fsynced records must survive a
+    // crash at any point in this step.
+    let payloads: Vec<Vec<u8>> = part
+        .tail
+        .iter()
+        .map(|r| wal::encode_record(r.timestep, r.window, &r.cells, shared))
+        .collect();
+    part.wal.rewrite(&payloads)?;
+    Ok(())
+}
+
+/// Write a slice through the shared durable-replace helper (same-dir
+/// temp file + fsync + rename), so a concurrent or post-crash reader
+/// sees either the old file or the complete new one, never a torn write.
+fn write_slice_durable(slice: &SliceFile, path: &Path, compress: bool) -> Result<u64> {
+    let bytes = slice.to_bytes(compress)?;
+    wal::replace_file_durable(path, |f| {
+        use std::io::Write;
+        f.write_all(&bytes)
+    })
+    .with_context(|| format!("publishing slice {}", path.display()))?;
+    Ok(bytes.len() as u64)
+}

@@ -1,0 +1,38 @@
+//! Streaming ingestion: WAL-backed timestep append with sealed groups.
+//!
+//! Batch [`crate::gofs::deploy`] is the write-once half of GoFS; this
+//! module is the *growing collection* half the paper's premise implies
+//! (graph data that accumulates over time). The lifecycle, per partition:
+//!
+//! ```text
+//! append(GraphInstance)                       (one timestep at a time)
+//!   └─ project onto the partition's bins ──▶ wal.log   (CRC frame + fsync)
+//!        open tail: ≤ pack timesteps, served to readers from the WAL
+//! seal (tail reaches pack timesteps)
+//!   1. encode the group with the deploy-time codecs (colcodec v2),
+//!      write each attr/<a>/b<bin>-g<group>.slice via tmp + fsync + rename
+//!   2. publish: rewrite meta.slice (windows, presence, n_instances)
+//!      via tmp + fsync + rename — readers atomically gain the group
+//!   3. rewrite wal.log without the sealed records — atomically, via
+//!      temp file + rename, so open-tail records that were already
+//!      fsynced can never be lost; replay is idempotent if a crash
+//!      lands between 2 and 3 (sealed records skip by timestep)
+//! ```
+//!
+//! A sealed group is byte-compatible with a batch-deployed one — the
+//! sealer reuses the deploy encoders — so an ingested collection is
+//! indistinguishable from a deployed one to every reader, codec, and
+//! cache key (groups are append-only; a `SliceKey` never changes meaning,
+//! which is what keeps [`crate::gofs::SliceCache`] coherent across seals
+//! with no invalidation protocol).
+//!
+//! The read side pairs with this through [`crate::gofs::Store::refresh`]:
+//! re-reading `meta.slice` picks up newly sealed groups, replaying the
+//! WAL serves the open tail as decoded instances, and
+//! `gopher::RunOptions::follow` turns that into a continuous analytics
+//! loop over timesteps as they land.
+
+pub mod appender;
+pub(crate) mod wal;
+
+pub use appender::{CollectionAppender, IngestOptions, IngestStats};

@@ -1,0 +1,267 @@
+//! Write-ahead log for streaming timestep ingestion.
+//!
+//! Each partition directory carries one `wal.log` holding the *open*
+//! (not yet sealed) timesteps as a sequence of CRC-framed records:
+//!
+//! ```text
+//! record:  offset  size  field
+//!          0       4     magic "GWAL"
+//!          4       4     payload length (LE u32)
+//!          8       4     crc32 of payload (LE u32)
+//!          12      ...   payload
+//! ```
+//!
+//! The payload is this partition's projection of one appended
+//! [`crate::graph::GraphInstance`] (encoded with `util/wire`):
+//!
+//! ```text
+//! varint timestep · varint window.start · varint window.end
+//! per attr slot (vertex attrs then edge attrs):
+//!   per bin: per position in bin:
+//!     u8 present? (1: AttrColumn body, v1 per-value encoding)
+//! ```
+//!
+//! ### Crash semantics
+//!
+//! Appends write one whole frame then fsync, so after a crash the log is
+//! a prefix of valid frames followed by at most one torn frame (plus
+//! whatever preallocated garbage the filesystem left). [`replay`] stops
+//! at the first frame whose magic, length bound, or CRC fails and reports
+//! the byte offset of the valid prefix; the writer reopens by truncating
+//! to that offset. Records whose timestep is already covered by the
+//! partition's sealed `meta.slice` are skipped (a crash between "publish
+//! sealed group" and "truncate WAL" makes replay idempotent, not lossy).
+
+use crate::gofs::reader::PartShared;
+use crate::graph::{AttrColumn, TimeWindow, Timestep};
+use crate::util::wire::{Dec, Enc};
+use anyhow::{bail, Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// WAL file name within a partition directory.
+pub(crate) const WAL_FILE: &str = "wal.log";
+
+const FRAME_MAGIC: &[u8; 4] = b"GWAL";
+const FRAME_HEADER: usize = 12;
+
+/// One replayed WAL record: a partition's projection of a single appended
+/// instance. `cells[attr_slot][bin][pos]` mirrors the seal-time buffer
+/// layout (vertex attr slots first, then edge attrs).
+pub(crate) struct WalRecord {
+    pub timestep: Timestep,
+    pub window: TimeWindow,
+    pub cells: Vec<Vec<Vec<Option<AttrColumn>>>>,
+}
+
+/// Encode one record payload for `shared`'s partition layout.
+pub(crate) fn encode_record(
+    timestep: Timestep,
+    window: TimeWindow,
+    cells: &[Vec<Vec<Option<AttrColumn>>>],
+    shared: &PartShared,
+) -> Vec<u8> {
+    let va = shared.vertex_schema.len();
+    let mut e = Enc::new();
+    e.varint(timestep as u64);
+    e.varint(window.start as u64);
+    e.varint(window.end as u64);
+    for (slot, per_bin) in cells.iter().enumerate() {
+        let ty = if slot < va {
+            shared.vertex_schema.attrs[slot].ty
+        } else {
+            shared.edge_schema.attrs[slot - va].ty
+        };
+        for per_pos in per_bin {
+            for cell in per_pos {
+                match cell {
+                    Some(col) => {
+                        e.u8(1);
+                        col.encode_into(ty, &mut e);
+                    }
+                    None => e.u8(0),
+                }
+            }
+        }
+    }
+    e.finish()
+}
+
+/// Decode one record payload against `shared`'s partition layout.
+pub(crate) fn decode_record(payload: &[u8], shared: &PartShared) -> Result<WalRecord> {
+    let va = shared.vertex_schema.len();
+    let ea = shared.edge_schema.len();
+    let mut d = Dec::new(payload);
+    let timestep = d.varint()? as usize;
+    let start = d.varint()? as i64;
+    let end = d.varint()? as i64;
+    if end <= start {
+        bail!("wal record t{timestep}: empty time window [{start}, {end})");
+    }
+    let mut cells = Vec::with_capacity(va + ea);
+    for slot in 0..va + ea {
+        let ty = if slot < va {
+            shared.vertex_schema.attrs[slot].ty
+        } else {
+            shared.edge_schema.attrs[slot - va].ty
+        };
+        let mut per_bin = Vec::with_capacity(shared.bins.n_bins);
+        for members in &shared.bins.bins {
+            let mut per_pos = Vec::with_capacity(members.len());
+            for _ in 0..members.len() {
+                per_pos.push(match d.u8()? {
+                    0 => None,
+                    1 => Some(AttrColumn::decode_from(ty, &mut d)?),
+                    x => bail!("wal record t{timestep}: bad cell tag {x}"),
+                });
+            }
+            per_bin.push(per_pos);
+        }
+        cells.push(per_bin);
+    }
+    if !d.is_empty() {
+        bail!("wal record t{timestep}: {} trailing bytes", d.remaining());
+    }
+    Ok(WalRecord { timestep, window: TimeWindow::new(start, end), cells })
+}
+
+/// Scan `path` and decode every intact frame, stopping (not erroring) at
+/// the first torn or corrupt tail frame. Returns the records plus the
+/// byte length of the valid prefix. A missing file is an empty log.
+pub(crate) fn replay(path: &Path, shared: &PartShared) -> Result<(Vec<WalRecord>, u64)> {
+    let data = match std::fs::read(path) {
+        Ok(d) => d,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok((Vec::new(), 0)),
+        Err(e) => return Err(e).with_context(|| format!("reading WAL {}", path.display())),
+    };
+    let mut records = Vec::new();
+    let mut off = 0usize;
+    while off + FRAME_HEADER <= data.len() {
+        if &data[off..off + 4] != FRAME_MAGIC {
+            break; // garbage tail
+        }
+        let len = u32::from_le_bytes(data[off + 4..off + 8].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(data[off + 8..off + 12].try_into().unwrap());
+        let Some(end) = (off + FRAME_HEADER).checked_add(len) else { break };
+        if end > data.len() {
+            break; // torn tail frame
+        }
+        let payload = &data[off + FRAME_HEADER..end];
+        if crc32fast::hash(payload) != crc {
+            break; // corrupt tail frame
+        }
+        // A CRC-valid frame that fails to decode is real corruption (or a
+        // layout mismatch), not a torn write: surface it.
+        records.push(
+            decode_record(payload, shared)
+                .with_context(|| format!("WAL {} frame at byte {off}", path.display()))?,
+        );
+        off = end;
+    }
+    Ok((records, off as u64))
+}
+
+/// Durably replace `path`'s contents: stream them into a same-directory
+/// `.tmp` sibling via `write`, fsync, rename over `path`, and fsync the
+/// directory (unix). A concurrent or post-crash reader sees either the
+/// old file or the complete new one, never a torn write. Shared by the
+/// WAL rewrite and the appender's slice/metadata publishes so the
+/// crash-safety details live in exactly one place.
+pub(crate) fn replace_file_durable(
+    path: &Path,
+    write: impl FnOnce(&mut File) -> std::io::Result<()>,
+) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    let tmp = path.with_file_name(name);
+    {
+        let mut f =
+            File::create(&tmp).with_context(|| format!("writing {}", tmp.display()))?;
+        write(&mut f).with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("publishing {}", path.display()))?;
+    #[cfg(unix)]
+    if let Some(parent) = path.parent() {
+        // Make the rename itself durable.
+        if let Ok(d) = File::open(parent) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER + payload.len());
+    out.extend_from_slice(FRAME_MAGIC);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32fast::hash(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Append-side handle: truncates the log to its valid prefix on open,
+/// then appends one fsynced frame per record.
+pub(crate) struct WalWriter {
+    file: File,
+    path: PathBuf,
+    /// fsync after every append (off only for throughput experiments —
+    /// a crash may then lose the unsynced suffix, never corrupt it).
+    sync: bool,
+}
+
+impl WalWriter {
+    pub fn open(path: &Path, valid_len: u64, sync: bool) -> Result<WalWriter> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)
+            .with_context(|| format!("opening WAL {}", path.display()))?;
+        file.set_len(valid_len)
+            .with_context(|| format!("truncating WAL {} to {valid_len}", path.display()))?;
+        let mut w = WalWriter { file, path: path.to_path_buf(), sync };
+        w.file.seek(SeekFrom::End(0))?;
+        Ok(w)
+    }
+
+    /// Frame and append one payload; returns the frame's on-disk bytes.
+    pub fn append(&mut self, payload: &[u8]) -> Result<u64> {
+        let buf = frame(payload);
+        self.file
+            .write_all(&buf)
+            .with_context(|| format!("appending to WAL {}", self.path.display()))?;
+        if self.sync {
+            self.file.sync_data()?;
+        }
+        Ok(buf.len() as u64)
+    }
+
+    /// Atomically replace the log's contents with `payloads` (temp file +
+    /// fsync + rename), reopening the handle on the new file. This is how
+    /// sealed records are dropped: truncate-then-reappend would open a
+    /// crash window in which already-fsynced records are gone, whereas
+    /// rename leaves either the old log (sealed records are skipped on
+    /// replay) or the complete new one.
+    pub fn rewrite(&mut self, payloads: &[Vec<u8>]) -> Result<()> {
+        replace_file_durable(&self.path, |f| {
+            for p in payloads {
+                f.write_all(&frame(p))?;
+            }
+            Ok(())
+        })?;
+        self.file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .truncate(false)
+            .open(&self.path)
+            .with_context(|| format!("reopening WAL {}", self.path.display()))?;
+        self.file.seek(SeekFrom::End(0))?;
+        Ok(())
+    }
+}

@@ -31,20 +31,55 @@
 //!   meta.slice                # windows, packing params, slice index
 //!   attr/v3/b07-g002.slice    # vertex attr 3, bin 7, instance group 2
 //!   attr/e0/b00-g000.slice    # edge attr 0, bin 0, instance group 0
+//!   wal.log                   # open (unsealed) timesteps, CRC-framed
 //! ```
+//!
+//! ### Streaming ingestion: append → seal → publish (`gofs::ingest`)
+//!
+//! Collections are no longer write-once. A [`CollectionAppender`] accepts
+//! one `GraphInstance` (timestep) at a time: each append projects the
+//! instance onto every partition's bins and fsyncs it into that
+//! partition's `wal.log` (CRC-framed records; a torn trailing frame is
+//! dropped on replay, so a crash never corrupts earlier timesteps). Once
+//! `pack` timesteps are open, they seal into a normal v2 columnar slice
+//! group — written through temp-file + fsync + rename — and become
+//! visible when the rewritten `meta.slice` lands (the atomic publish);
+//! only then is the WAL truncated, which makes replay idempotent across
+//! every crash point. Sealed-by-ingest groups are byte-compatible with
+//! batch-deployed ones (same encoders), so readers cannot tell the two
+//! histories apart.
+//!
+//! Readers follow growth with [`Store::refresh`]: newly sealed groups
+//! join the metadata index (slice-group cache keys never change meaning,
+//! so the cache stays coherent with no invalidation), and the open tail
+//! is decoded from the WAL and served from memory.
+//!
+//! The follow-mode visibility contract: an append is *committed* only
+//! once every partition holds its record (the appender fans out
+//! partition by partition, so a crash mid-append can leave an orphaned
+//! record on a prefix of the partitions; the appender's reopen drops
+//! such orphans by reconciling to the common prefix). A single
+//! partition's tail may therefore briefly show an uncommitted timestep —
+//! which is why cross-host consumers take the **minimum** visible count
+//! over all hosts, exactly what `GopherEngine::refresh` does. Under that
+//! rule every scheduled timestep is immutable: a sealed group never
+//! changes, and a committed tail timestep can only transition to an
+//! identical sealed form.
 
 pub mod cache;
 pub(crate) mod colcodec;
 pub mod disk;
+pub mod ingest;
 pub mod reader;
 pub mod slice;
 pub mod writer;
 
 pub use cache::SliceCache;
 pub use disk::DiskModel;
+pub use ingest::{CollectionAppender, IngestOptions, IngestStats};
 pub use reader::{open_collection, Projection, ReadTrace, Store, StoreOptions, SubgraphInstance};
 pub use slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};
-pub use writer::{deploy, DeployConfig, DeployReport};
+pub use writer::{deploy, deploy_template, DeployConfig, DeployReport};
 
 /// Identifies one attribute slice within a partition.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]

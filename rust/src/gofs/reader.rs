@@ -12,12 +12,29 @@
 //!   read (§V-B);
 //! * transparent **constant/default inheritance** from the template;
 //! * transparent **LRU slice caching** (§V-E).
+//!
+//! ### Growing collections (streaming ingestion)
+//!
+//! A store opened on a collection that a [`crate::gofs::ingest`] appender
+//! is feeding serves three tiers with one API:
+//!
+//! * **sealed groups** — ordinary attribute slices, read through the
+//!   cache as always (a group, once published, never changes, so cache
+//!   keys stay valid across seals with no invalidation);
+//! * **the open tail** — timesteps still in the partition WAL, decoded at
+//!   [`Store::refresh`] time and served from memory (zero slice reads,
+//!   zero cache traffic);
+//! * [`Store::refresh`] — incremental: re-reads only `meta.slice` and the
+//!   WAL, never touches sealed data, and atomically swaps in the new
+//!   index so concurrent `read_instance` calls see either the old or the
+//!   new view.
 
 use crate::graph::instance::{resolve, ValueRef};
 use crate::graph::{AttrColumn, AttrType, Schema, SubgraphId, TimeWindow, Timestep};
 use crate::gofs::cache::SliceCache;
 use crate::gofs::colcodec;
 use crate::gofs::disk::{DiskClock, DiskModel};
+use crate::gofs::ingest::wal;
 use crate::gofs::slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};
 use crate::gofs::writer::{decode_meta_slice, part_dir, PartMeta};
 use crate::gofs::SliceKey;
@@ -26,7 +43,7 @@ use crate::partition::{BinPacking, RemoteEdge, Subgraph};
 use crate::util::wire::Dec;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, OnceLock, RwLock};
 
 /// Which attributes to load for subgraph instances (§V-B projection).
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
@@ -116,51 +133,66 @@ struct LazyBlock {
 }
 
 impl DecodedAttrSlice {
-    /// Column for `(t, pos)`, or `None` when the slice has no value there.
+    /// Column for `(t, pos)`, or `None` when the slice has no value
+    /// there; the second element is the byte footprint this call just
+    /// materialized (non-zero only for the one caller that performed the
+    /// position's lazy decode — it reports the growth to the cache via
+    /// `SliceCache::add_weight`, incrementally, never rescanning the
+    /// whole slice).
     ///
     /// `t` before the group's window (`t < t_lo`) or an out-of-range
     /// position returns `None` instead of panicking — `(t - self.t_lo)`
     /// on `usize` used to underflow when a caller asked for a timestep
     /// before the slice's packed group.
-    fn get(&self, t: Timestep, pos: usize) -> Result<Option<Arc<AttrColumn>>> {
+    fn get_noting(&self, t: Timestep, pos: usize) -> Result<(Option<Arc<AttrColumn>>, u64)> {
         if t < self.t_lo || pos >= self.n_pos {
-            return Ok(None);
+            return Ok((None, 0));
         }
         let ti = t - self.t_lo;
         if ti >= self.n_ts {
-            return Ok(None);
+            return Ok((None, 0));
         }
         match &self.repr {
-            SliceRepr::Eager(cols) => Ok(cols.get(ti * self.n_pos + pos).and_then(|c| c.clone())),
+            SliceRepr::Eager(cols) => {
+                Ok((cols.get(ti * self.n_pos + pos).and_then(|c| c.clone()), 0))
+            }
             SliceRepr::Lazy { body, ty, blocks } => {
                 let block = &blocks[pos];
+                let mut decoded_now = false;
                 let cells = block.cells.get_or_init(|| {
+                    decoded_now = true;
                     colcodec::decode_pos_block(&body[block.lo..block.hi], *ty, self.n_ts)
                         .map(|cols| cols.into_iter().map(|c| c.map(Arc::new)).collect())
                         .map_err(|e| format!("{e:#}"))
                 });
                 match cells {
-                    Ok(cols) => Ok(cols[ti].clone()),
+                    Ok(cols) => {
+                        let grown = if decoded_now { block_bytes(cols) } else { 0 };
+                        Ok((cols[ti].clone(), grown))
+                    }
                     Err(msg) => bail!("v2 attribute slice decode: {msg}"),
                 }
             }
         }
     }
 
-    /// Approximate resident bytes for cache accounting. Eager slices are
-    /// weighed exactly; lazy v2 slices are weighed as their encoded body
-    /// plus a decode-expansion allowance (entries are weighed once, at
-    /// insert, before any lazy decode has run).
+    /// Resident bytes for cache accounting at insert time. Eager slices
+    /// are weighed exactly. Lazy v2 slices start at their encoded body
+    /// (nothing is decoded yet); each position column's footprint is
+    /// added incrementally when its lazy decode runs
+    /// (`SliceCache::add_weight`), so byte-budget eviction tracks the
+    /// real footprint without rescans.
     fn weight_bytes(&self) -> u64 {
         match &self.repr {
-            SliceRepr::Eager(cols) => {
-                (64 + cols.len() * 16
-                    + cols.iter().flatten().map(|c| c.mem_bytes()).sum::<usize>())
-                    as u64
-            }
-            SliceRepr::Lazy { body, blocks, .. } => (body.len() * 3 + blocks.len() * 48) as u64,
+            SliceRepr::Eager(cols) => 64 + block_bytes(cols),
+            SliceRepr::Lazy { body, blocks, .. } => (64 + body.len() + blocks.len() * 48) as u64,
         }
     }
+}
+
+/// Decoded footprint of one position block's cells.
+fn block_bytes(cols: &[Option<Arc<AttrColumn>>]) -> u64 {
+    (cols.len() * 16 + cols.iter().flatten().map(|c| c.mem_bytes()).sum::<usize>()) as u64
 }
 
 /// Template-derived shared state for a partition.
@@ -280,6 +312,10 @@ impl SubgraphInstance {
 pub struct StoreOptions {
     /// LRU cache slots (`c`); 0 disables caching.
     pub cache_slots: usize,
+    /// Resident-byte ceiling for decoded slices (0 = slot count only).
+    /// Bounds memory when ingest and analytics share a host; see
+    /// `SliceCache::with_weigher_and_budget`.
+    pub cache_bytes: u64,
     pub disk: DiskModel,
     pub metrics: Arc<Metrics>,
 }
@@ -288,9 +324,43 @@ impl Default for StoreOptions {
     fn default() -> Self {
         StoreOptions {
             cache_slots: 14,
+            cache_bytes: 0,
             disk: DiskModel::default(),
             metrics: Arc::new(Metrics::new()),
         }
+    }
+}
+
+/// The unsealed tail of a growing collection: timesteps replayed from the
+/// partition WAL at open/refresh time, served from memory.
+struct TailState {
+    /// Timestep of `instances[0]` — equals the sealed instance count the
+    /// tail was replayed against.
+    base: usize,
+    instances: Vec<TailInstance>,
+    /// WAL file size observed just before this replay — lets refresh
+    /// skip the decode when neither the metadata nor the WAL moved.
+    wal_len: u64,
+}
+
+struct TailInstance {
+    window: TimeWindow,
+    /// cells[attr_slot][bin][pos] (vertex attr slots first, then edge).
+    cells: Vec<Vec<Vec<Option<Arc<AttrColumn>>>>>,
+}
+
+/// The store's view of the collection's timeline: the sealed-prefix
+/// metadata plus the open tail. One lock holds both so readers always
+/// observe a consistent pair ([`Store::refresh`] swaps it wholesale;
+/// `tail.base == meta.n_instances` is invariant).
+struct StoreIndex {
+    meta: PartMeta,
+    tail: TailState,
+}
+
+impl StoreIndex {
+    fn n_instances(&self) -> usize {
+        self.meta.n_instances + self.tail.instances.len()
     }
 }
 
@@ -298,7 +368,8 @@ impl Default for StoreOptions {
 pub struct Store {
     dir: PathBuf,
     shared: Arc<PartShared>,
-    meta: PartMeta,
+    /// Timeline index; swapped wholesale by [`Store::refresh`].
+    index: RwLock<StoreIndex>,
     cache: SliceCache<SliceKey, DecodedAttrSlice>,
     opts: StoreOptions,
     disk_clock: DiskClock,
@@ -325,14 +396,59 @@ impl Store {
         let disk_clock = DiskClock::default();
         let sim = disk_clock.charge(&opts.disk, tbytes) + disk_clock.charge(&opts.disk, mbytes);
         opts.metrics.add(keys::SIM_DISK_NS, sim);
+        let tail = load_tail(&dir, &shared, meta.n_instances)?;
         Ok(Store {
             dir,
             shared: Arc::new(shared),
-            meta,
-            cache: SliceCache::with_weigher(opts.cache_slots, DecodedAttrSlice::weight_bytes),
+            index: RwLock::new(StoreIndex { meta, tail }),
+            cache: SliceCache::with_weigher_and_budget(
+                opts.cache_slots,
+                DecodedAttrSlice::weight_bytes,
+                opts.cache_bytes,
+            ),
             opts,
             disk_clock,
         })
+    }
+
+    /// Re-scan this partition's metadata and WAL for timesteps that
+    /// arrived after open (or the last refresh): newly sealed groups
+    /// become ordinary slice reads, the open tail is decoded and served
+    /// from memory. Incremental — touches only `meta.slice` and the WAL,
+    /// never sealed attribute slices — and atomic with respect to
+    /// concurrent `read_instance` calls. Returns the number of newly
+    /// visible timesteps.
+    ///
+    /// Cache coherence needs no invalidation: groups are append-only, so
+    /// every `SliceKey` resident in the cache still names exactly the
+    /// bytes it was decoded from.
+    pub fn refresh(&self) -> Result<usize> {
+        let (mslice, _) = SliceFile::read_from(&self.dir.join("meta.slice"))?;
+        let new_meta = decode_meta_slice(&mslice.body)?;
+        {
+            // Idle polls are the common case in follow mode: when neither
+            // the sealed count nor the WAL file moved, skip the tail
+            // replay entirely. (The stat is taken before each replay, so
+            // a grow-after-stat race only costs one extra reload later.)
+            let index = self.index.read().unwrap();
+            if new_meta.n_instances == index.meta.n_instances
+                && wal_file_len(&self.dir) == index.tail.wal_len
+            {
+                return Ok(0);
+            }
+        }
+        let new_tail = load_tail(&self.dir, &self.shared, new_meta.n_instances)?;
+        let mut index = self.index.write().unwrap();
+        let before = index.n_instances();
+        let after = new_meta.n_instances + new_tail.instances.len();
+        if after < before {
+            // A seal raced between our meta read and our WAL read (the
+            // records moved from the WAL into a group we haven't seen).
+            // Keep the current consistent view; the next refresh wins.
+            return Ok(0);
+        }
+        *index = StoreIndex { meta: new_meta, tail: new_tail };
+        Ok(after - before)
     }
 
     pub fn part_id(&self) -> usize {
@@ -343,12 +459,28 @@ impl Store {
         &self.shared
     }
 
+    /// Timesteps currently visible: sealed groups plus the open tail.
     pub fn n_instances(&self) -> usize {
-        self.meta.n_instances
+        self.index.read().unwrap().n_instances()
+    }
+
+    /// Timesteps sealed into published slice groups.
+    pub fn sealed_instances(&self) -> usize {
+        self.index.read().unwrap().meta.n_instances
+    }
+
+    /// Timesteps served from the in-memory WAL tail.
+    pub fn tail_instances(&self) -> usize {
+        self.index.read().unwrap().tail.instances.len()
     }
 
     pub fn window(&self, t: Timestep) -> TimeWindow {
-        self.meta.windows[t]
+        let index = self.index.read().unwrap();
+        if t < index.meta.n_instances {
+            index.meta.windows[t]
+        } else {
+            index.tail.instances[t - index.tail.base].window
+        }
     }
 
     pub fn vertex_schema(&self) -> &Schema {
@@ -369,6 +501,16 @@ impl Store {
         self.cache.stats()
     }
 
+    /// Configured cache slot count (`c`).
+    pub fn cache_slots(&self) -> usize {
+        self.cache.slots()
+    }
+
+    /// Configured cache byte budget (0 = unlimited).
+    pub fn cache_byte_budget(&self) -> u64 {
+        self.cache.byte_budget()
+    }
+
     /// Approximate bytes of decoded slices resident in the cache.
     pub fn cache_resident_bytes(&self) -> u64 {
         self.cache.resident_bytes()
@@ -386,12 +528,24 @@ impl Store {
     }
 
     /// Timesteps whose windows overlap `[start, end)` — the §V-B temporal
-    /// filter, resolved from the metadata index without touching data.
+    /// filter, resolved from the metadata index (and the open tail)
+    /// without touching data.
     pub fn filter_time(&self, start: i64, end: i64) -> Vec<Timestep> {
         let q = TimeWindow::new(start, end);
-        (0..self.meta.n_instances)
-            .filter(|&t| self.meta.windows[t].overlaps(&q))
-            .collect()
+        let index = self.index.read().unwrap();
+        let mut out: Vec<Timestep> = (0..index.meta.n_instances)
+            .filter(|&t| index.meta.windows[t].overlaps(&q))
+            .collect();
+        out.extend(
+            index
+                .tail
+                .instances
+                .iter()
+                .enumerate()
+                .filter(|(_, ti)| ti.window.overlaps(&q))
+                .map(|(k, _)| index.tail.base + k),
+        );
+        out
     }
 
     /// Read one subgraph instance with the given projection.
@@ -407,6 +561,11 @@ impl Store {
 
     /// Like [`Store::read_instance`], also accumulating this call's GoFS
     /// counters into `trace` (exact attribution under concurrent loads).
+    ///
+    /// Sealed timesteps read through the slice cache as always; timesteps
+    /// still in the open tail are served from the decoded WAL replay —
+    /// zero slice reads, zero cache traffic (the counters in `trace`
+    /// reflect that).
     pub fn read_instance_traced(
         &self,
         sg_local: usize,
@@ -414,9 +573,6 @@ impl Store {
         proj: &Projection,
         trace: &mut ReadTrace,
     ) -> Result<SubgraphInstance> {
-        if t >= self.meta.n_instances {
-            bail!("timestep {t} out of range ({} instances)", self.meta.n_instances);
-        }
         let sg = self
             .shared
             .subgraphs
@@ -424,21 +580,48 @@ impl Store {
             .with_context(|| format!("no subgraph {sg_local}"))?
             .clone();
         let (bin, pos) = self.shared.bin_pos[sg_local];
-        let group = t / self.meta.pack;
+        let index = self.index.read().unwrap();
 
+        if t >= index.meta.n_instances {
+            // Tail path: the timestep is not sealed (yet).
+            let total = index.n_instances();
+            if t >= total {
+                bail!("timestep {t} out of range ({total} instances)");
+            }
+            let ti = &index.tail.instances[t - index.tail.base];
+            let va = self.shared.vertex_schema.len();
+            let mut vcols = vec![None; va];
+            for &a in &proj.vertex_attrs {
+                vcols[a] = ti.cells[a][bin][pos].clone();
+            }
+            let mut ecols = vec![None; self.shared.edge_schema.len()];
+            for &a in &proj.edge_attrs {
+                ecols[a] = ti.cells[va + a][bin][pos].clone();
+            }
+            return Ok(SubgraphInstance {
+                shared: self.shared.clone(),
+                sg,
+                timestep: t,
+                window: ti.window,
+                vcols,
+                ecols,
+            });
+        }
+
+        let group = t / index.meta.pack;
         let mut vcols = vec![None; self.shared.vertex_schema.len()];
         for &a in &proj.vertex_attrs {
-            vcols[a] = self.attr_column(true, a, bin, group, t, pos, trace)?;
+            vcols[a] = self.attr_column(&index.meta, true, a, bin, group, t, pos, trace)?;
         }
         let mut ecols = vec![None; self.shared.edge_schema.len()];
         for &a in &proj.edge_attrs {
-            ecols[a] = self.attr_column(false, a, bin, group, t, pos, trace)?;
+            ecols[a] = self.attr_column(&index.meta, false, a, bin, group, t, pos, trace)?;
         }
         Ok(SubgraphInstance {
             shared: self.shared.clone(),
             sg,
             timestep: t,
-            window: self.meta.windows[t],
+            window: index.meta.windows[t],
             vcols,
             ecols,
         })
@@ -457,6 +640,7 @@ impl Store {
     #[allow(clippy::too_many_arguments)]
     fn attr_column(
         &self,
+        meta: &PartMeta,
         vertex: bool,
         attr: usize,
         bin: usize,
@@ -466,7 +650,7 @@ impl Store {
         trace: &mut ReadTrace,
     ) -> Result<Option<Arc<AttrColumn>>> {
         let slot = if vertex { attr } else { self.shared.vertex_schema.len() + attr };
-        if !self.meta.presence[slot][bin][group] {
+        if !meta.presence[slot][bin][group] {
             return Ok(None); // slice was never written: no values
         }
         let key = SliceKey { vertex, attr, bin, group };
@@ -475,7 +659,7 @@ impl Store {
         } else {
             self.shared.edge_schema.attrs[attr].ty
         };
-        let t_lo = group * self.meta.pack;
+        let t_lo = group * meta.pack;
         let mut read_bytes = 0u64;
         let mut read_disk_ns = 0u64;
         let mut did_read = false;
@@ -517,8 +701,49 @@ impl Store {
             trace.slice_bytes += read_bytes;
             trace.sim_disk_ns += read_disk_ns;
         }
-        decoded.get(t, pos)
+        let (col, grown_bytes) = decoded.get_noting(t, pos)?;
+        if grown_bytes > 0 {
+            // A v2 position column just materialized: report the growth
+            // so byte-budget eviction sees the entry's real footprint.
+            self.cache.add_weight(&key, grown_bytes);
+        }
+        Ok(col)
     }
+}
+
+/// Decode the partition WAL into the in-memory tail view past `sealed`
+/// instances. Records a published seal already covers are skipped; a
+/// torn trailing frame is dropped by the WAL replay itself.
+fn wal_file_len(dir: &Path) -> u64 {
+    std::fs::metadata(dir.join(wal::WAL_FILE)).map(|m| m.len()).unwrap_or(0)
+}
+
+fn load_tail(dir: &Path, shared: &PartShared, sealed: usize) -> Result<TailState> {
+    let wal_len = wal_file_len(dir);
+    let (records, _) = wal::replay(&dir.join(wal::WAL_FILE), shared)?;
+    let mut open: Vec<wal::WalRecord> =
+        records.into_iter().filter(|r| r.timestep >= sealed).collect();
+    open.sort_by_key(|r| r.timestep);
+    let mut instances = Vec::with_capacity(open.len());
+    for (k, r) in open.into_iter().enumerate() {
+        if r.timestep != sealed + k {
+            break; // gap: serve the contiguous prefix only
+        }
+        instances.push(TailInstance {
+            window: r.window,
+            cells: r
+                .cells
+                .into_iter()
+                .map(|per_bin| {
+                    per_bin
+                        .into_iter()
+                        .map(|per_pos| per_pos.into_iter().map(|c| c.map(Arc::new)).collect())
+                        .collect()
+                })
+                .collect(),
+        });
+    }
+    Ok(TailState { base: sealed, instances, wal_len })
 }
 
 /// Decode an attribute slice container into the cacheable representation.
@@ -562,7 +787,7 @@ fn decode_attr_slice(slice: SliceFile, ty: AttrType, t_lo: usize) -> Result<Deco
     }
 }
 
-fn decode_template_slice(body: &[u8]) -> Result<PartShared> {
+pub(crate) fn decode_template_slice(body: &[u8]) -> Result<PartShared> {
     use crate::graph::Csr;
     let mut d = Dec::new(body);
     let part_id = d.varint()? as usize;
@@ -691,6 +916,7 @@ mod tests {
             cache_slots: cache,
             disk: DiskModel::instant(),
             metrics: Arc::new(Metrics::new()),
+            ..Default::default()
         }
     }
 
@@ -710,17 +936,18 @@ mod tests {
                 Some(Arc::new(crate::graph::AttrColumn::new())),
             ]),
         };
+        let get = |t, pos| slice.get_noting(t, pos).unwrap().0;
         // Before the group window: None, not a panic.
-        assert!(slice.get(0, 0).unwrap().is_none());
-        assert!(slice.get(3, 1).unwrap().is_none());
+        assert!(get(0, 0).is_none());
+        assert!(get(3, 1).is_none());
         // Out-of-range position: None.
-        assert!(slice.get(4, 2).unwrap().is_none());
+        assert!(get(4, 2).is_none());
         // Past the packed rows: None.
-        assert!(slice.get(6, 0).unwrap().is_none());
+        assert!(get(6, 0).is_none());
         // In range behaves as before.
-        assert!(slice.get(4, 0).unwrap().is_some());
-        assert!(slice.get(4, 1).unwrap().is_none());
-        assert!(slice.get(5, 1).unwrap().is_some());
+        assert!(get(4, 0).is_some());
+        assert!(get(4, 1).is_none());
+        assert!(get(5, 1).is_some());
     }
 
     #[test]

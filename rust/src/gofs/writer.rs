@@ -11,7 +11,7 @@
 //! memory is O(one instance group), never the whole series.
 
 use crate::datagen::CollectionSource;
-use crate::graph::{AttrColumn, AttrType, Schema, TimeWindow};
+use crate::graph::{AttrColumn, AttrType, GraphInstance, GraphTemplate, Schema, TimeWindow, Timestep};
 use crate::gofs::colcodec::encode_attr_body_v2;
 use crate::gofs::slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};
 use crate::gofs::SliceKey;
@@ -177,24 +177,12 @@ pub fn deploy(
             let gi = source.instance(t);
             windows.push(gi.window);
             for l in &layouts {
-                for (bin, members) in l.bins.bins.iter().enumerate() {
-                    for (pos, &sg_local) in members.iter().enumerate() {
-                        let sg = &l.subgraphs[sg_local];
-                        for a in 0..va {
-                            if let Some(col) = gi.vcols[a].as_ref() {
-                                let proj = col.project(&sg.vertices);
-                                if proj.n_elements() > 0 {
-                                    buffers[l.part_id][a][bin][t - t_lo][pos] = Some(proj);
-                                }
-                            }
-                        }
-                        for a in 0..ea {
-                            if let Some(col) = gi.ecols[a].as_ref() {
-                                let proj = col.project(&sg.edges_sorted);
-                                if proj.n_elements() > 0 {
-                                    buffers[l.part_id][va + a][bin][t - t_lo][pos] = Some(proj);
-                                }
-                            }
+                let sgs: Vec<&Subgraph> = l.subgraphs.iter().collect();
+                let cells = project_instance_cells(&gi, &sgs, &l.bins, va, ea);
+                for (slot, per_bin) in cells.into_iter().enumerate() {
+                    for (bin, per_pos) in per_bin.into_iter().enumerate() {
+                        for (pos, cell) in per_pos.into_iter().enumerate() {
+                            buffers[l.part_id][slot][bin][t - t_lo][pos] = cell;
                         }
                     }
                 }
@@ -231,7 +219,8 @@ pub fn deploy(
 
     // --- Metadata slices. ---
     for l in &layouts {
-        let body = encode_meta_slice(cfg, n_instances, &windows, &presence[l.part_id]);
+        let body =
+            encode_meta_slice(cfg.pack, cfg.n_bins, n_instances, &windows, &presence[l.part_id]);
         let path = part_dir(out_dir, l.part_id).join("meta.slice");
         report.bytes_written +=
             SliceFile::new(SliceKind::Metadata, body).write_to(&path, cfg.compress)?;
@@ -239,18 +228,96 @@ pub fn deploy(
     }
 
     // --- Root manifest. ---
-    let mut e = Enc::new();
-    e.varint(cfg.n_parts as u64);
-    e.varint(n_instances as u64);
-    SliceFile::new(SliceKind::Metadata, e.finish())
-        .write_to(&out_dir.join("collection.meta"), false)?;
+    write_collection_manifest(out_dir, cfg.n_parts, n_instances)?;
 
     Ok(report)
 }
 
+/// (Re)write the root `collection.meta` manifest. The partition count is
+/// load-bearing (`open_collection` fans out over it); the instance count
+/// is informational — readers take the authoritative count from each
+/// partition's `meta.slice`, which the ingest sealer publishes atomically.
+pub(crate) fn write_collection_manifest(
+    root: &Path,
+    n_parts: usize,
+    n_instances: usize,
+) -> Result<()> {
+    let mut e = Enc::new();
+    e.varint(n_parts as u64);
+    e.varint(n_instances as u64);
+    SliceFile::new(SliceKind::Metadata, e.finish())
+        .write_to(&root.join("collection.meta"), false)?;
+    Ok(())
+}
+
+/// Deploy only the template/metadata skeleton of `source` — zero sealed
+/// instances. This is the starting point for streaming ingestion
+/// ([`crate::gofs::ingest`]): timesteps then arrive one at a time through
+/// a [`crate::gofs::CollectionAppender`] instead of the batch loop above.
+pub fn deploy_template(
+    source: &dyn CollectionSource,
+    cfg: &DeployConfig,
+    out_dir: &Path,
+) -> Result<DeployReport> {
+    struct TemplateOnly<'a>(&'a dyn CollectionSource);
+    impl CollectionSource for TemplateOnly<'_> {
+        fn template(&self) -> &GraphTemplate {
+            self.0.template()
+        }
+        fn n_instances(&self) -> usize {
+            0
+        }
+        fn instance(&self, t: Timestep) -> GraphInstance {
+            unreachable!("template-only deployment asked for instance {t}")
+        }
+    }
+    deploy(&TemplateOnly(source), cfg, out_dir)
+}
+
+/// Project one whole-graph instance onto a partition's bins:
+/// `cells[attr_slot][bin][pos]` (vertex attr slots first, then edge
+/// attrs; a cell is `Some` only when the projection is non-empty, which
+/// is also the presence rule). Batch deployment and the ingest appender
+/// both route through this, so an ingested collection is bit-compatible
+/// with a deployed one by construction.
+pub(crate) fn project_instance_cells(
+    gi: &GraphInstance,
+    subgraphs: &[&Subgraph],
+    bins: &BinPacking,
+    va: usize,
+    ea: usize,
+) -> Vec<Vec<Vec<Option<AttrColumn>>>> {
+    let mut cells: Vec<Vec<Vec<Option<AttrColumn>>>> =
+        (0..va + ea).map(|_| bins.bins.iter().map(|b| vec![None; b.len()]).collect()).collect();
+    for (bin, members) in bins.bins.iter().enumerate() {
+        for (pos, &sg_local) in members.iter().enumerate() {
+            let sg = subgraphs[sg_local];
+            for a in 0..va {
+                if let Some(col) = gi.vcols[a].as_ref() {
+                    let proj = col.project(&sg.vertices);
+                    if proj.n_elements() > 0 {
+                        cells[a][bin][pos] = Some(proj);
+                    }
+                }
+            }
+            for a in 0..ea {
+                if let Some(col) = gi.ecols[a].as_ref() {
+                    let proj = col.project(&sg.edges_sorted);
+                    if proj.n_elements() > 0 {
+                        cells[va + a][bin][pos] = Some(proj);
+                    }
+                }
+            }
+        }
+    }
+    cells
+}
+
 /// Encode one packed group's cells (`cells[t - t_lo][pos]`) at the
-/// requested attribute-body format version.
-fn encode_attr_body(cells: &[Vec<Option<AttrColumn>>], ty: AttrType, version: u8) -> Vec<u8> {
+/// requested attribute-body format version. Shared by batch deployment
+/// and the ingest sealer, so sealed groups are byte-compatible with
+/// deployed ones.
+pub(crate) fn encode_attr_body(cells: &[Vec<Option<AttrColumn>>], ty: AttrType, version: u8) -> Vec<u8> {
     if version == VERSION_V1 {
         let mut e = Enc::new();
         e.varint(cells.len() as u64);
@@ -343,16 +410,19 @@ fn encode_template_slice(l: &PartLayout, vs: &Schema, es: &Schema) -> Vec<u8> {
     e.finish()
 }
 
-fn encode_meta_slice(
-    cfg: &DeployConfig,
+/// Encode a partition's metadata slice. Shared by batch deployment and
+/// the ingest sealer (which republishes it after every sealed group).
+pub(crate) fn encode_meta_slice(
+    pack: usize,
+    n_bins: usize,
     n_instances: usize,
     windows: &[TimeWindow],
     presence: &[Vec<Vec<bool>>],
 ) -> Vec<u8> {
     let mut e = Enc::new();
     e.varint(n_instances as u64);
-    e.varint(cfg.pack as u64);
-    e.varint(cfg.n_bins as u64);
+    e.varint(pack as u64);
+    e.varint(n_bins as u64);
     for w in windows {
         e.varint(w.start as u64);
         e.varint(w.end as u64);

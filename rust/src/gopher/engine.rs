@@ -30,16 +30,37 @@
 //!    thread. The [`crate::gofs::SliceCache`] runs its loads outside its
 //!    lock with per-key in-flight dedup, so concurrent readers of
 //!    distinct slices never serialize and shared slices decode once.
-//! 2. **Prefetch (double buffering, sequential pattern)**: while timestep
-//!    `t`'s supersteps run, a background loader reads timestep `t+1`'s
-//!    projected slices. The BSP then starts on warm data; only the part
-//!    of the load that did not fit under the compute window blocks.
+//! 2. **Prefetch (depth-k ring, sequential pattern)**: while timestep
+//!    `t`'s supersteps run, background loaders read the next up-to-`k`
+//!    timesteps' projected slices ([`RunOptions::prefetch_depth`]). The
+//!    ring never runs ahead of cache pressure: its effective depth is
+//!    capped so the in-flight timesteps' slice footprint (estimated from
+//!    the most recent cold load) fits each store's slot count and byte
+//!    budget — prefetching past the cache would evict the very slices
+//!    the current BSP is using. The BSP then starts on warm data; only
+//!    the part of the load that did not fit under the compute window
+//!    blocks.
 //!
 //! [`TimestepStats`] reports the split: `load_wall_s` is the full wall
 //! time of the load, `overlap_s` the portion hidden under the previous
 //! timestep's compute; `wall_s` only includes the blocking remainder.
 //! `RunOptions { prefetch: false, .. }` restores the unpipelined
 //! behavior (benches compare both).
+//!
+//! ### Continuous runs over growing collections (`RunOptions::follow`)
+//!
+//! With [`RunOptions::follow`], a sequential run does not stop at the
+//! collection's current end: when it drains the known timesteps it calls
+//! [`GopherEngine::refresh`] — which re-reads each store's metadata and
+//! WAL tail (`gofs::ingest`) — and keeps executing timesteps as they
+//! become visible on *every* host, reusing the prefetch ring. Contract:
+//! every timestep the minimum-across-hosts instance count ever covered
+//! is processed exactly once, in order; already-sealed groups are never
+//! re-read for tail growth (their cache keys are immutable); and the run
+//! ends after [`RunOptions::follow_idle_polls`] consecutive empty polls
+//! spaced [`RunOptions::follow_poll_ms`] apart (0 = poll forever).
+//! Cross-timestep messages flow exactly as in a batch sequential run;
+//! `ctx.n_timesteps` reports `usize::MAX` since the series is unbounded.
 //!
 //! ### Message routing
 //!
@@ -59,7 +80,7 @@ use crate::gopher::{Application, ComputeCtx, Outbox, Pattern, Payload, SubgraphP
 use crate::metrics::{keys, Metrics};
 use crate::partition::Subgraph;
 use anyhow::{anyhow, bail, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -78,10 +99,21 @@ pub struct RunOptions {
     /// Concurrent timesteps for the independent/eventually-dependent
     /// patterns ("temporal concurrency", §IV-B).
     pub temporal_workers: usize,
-    /// Load timestep t+1's instances while timestep t computes
+    /// Load upcoming timesteps' instances while the current one computes
     /// (sequential pattern; see the module docs). Results are identical
     /// with or without prefetching — only the wall-clock split changes.
     pub prefetch: bool,
+    /// Requested prefetch ring depth `k` (effective depth is additionally
+    /// capped by cache pressure; 1 restores the old double buffer).
+    pub prefetch_depth: usize,
+    /// Keep running past the collection's current end, polling
+    /// [`GopherEngine::refresh`] for timesteps a `gofs::ingest` appender
+    /// publishes while the run is live. Sequential pattern only.
+    pub follow: bool,
+    /// Delay between refresh polls when no new timesteps are visible.
+    pub follow_poll_ms: u64,
+    /// Stop after this many consecutive empty polls (0 = poll forever).
+    pub follow_idle_polls: usize,
 }
 
 impl Default for RunOptions {
@@ -93,6 +125,10 @@ impl Default for RunOptions {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             temporal_workers: 4,
             prefetch: true,
+            prefetch_depth: 2,
+            follow: false,
+            follow_poll_ms: 25,
+            follow_idle_polls: 40,
         }
     }
 }
@@ -208,12 +244,30 @@ impl GopherEngine {
     /// Run `app` to completion. Returns per-timestep stats.
     pub fn run(&self, app: &dyn Application, opts: &RunOptions) -> Result<RunStats> {
         let t0 = Instant::now();
+        if opts.follow {
+            if app.pattern() != Pattern::Sequential {
+                bail!(
+                    "RunOptions::follow requires the Sequential pattern (got {:?})",
+                    app.pattern()
+                );
+            }
+            if opts.timesteps.is_some() || opts.time_range.is_some() {
+                bail!("RunOptions::follow cannot combine with explicit timesteps or a time range");
+            }
+        }
         let timesteps: Vec<Timestep> = match (&opts.timesteps, &opts.time_range) {
             (Some(ts), _) => ts.clone(),
             (None, Some((lo, hi))) => self.stores[0].filter_time(*lo, *hi),
-            (None, None) => (0..self.n_instances()).collect(),
+            // Schedule only what every host can serve: partitions of a
+            // growing collection publish independently, so per-host
+            // visible counts can be briefly skewed (mid-append crash, or
+            // a run concurrent with a live appender).
+            (None, None) => {
+                let n = self.stores.iter().map(|s| s.n_instances()).min().unwrap_or(0);
+                (0..n).collect()
+            }
         };
-        if timesteps.is_empty() {
+        if timesteps.is_empty() && !opts.follow {
             bail!("no timesteps selected");
         }
         let proj = app.projection(self.stores[0].vertex_schema(), self.stores[0].edge_schema());
@@ -224,16 +278,51 @@ impl GopherEngine {
         match app.pattern() {
             Pattern::Sequential => {
                 // One BSP at a time; cross-timestep mailbox threads
-                // through. The double-buffered prefetcher loads t+1's
-                // instances on a scoped thread while t's BSP runs.
+                // through. A depth-k ring of scoped loader threads reads
+                // upcoming timesteps while the current BSP runs; under
+                // follow mode the queue grows as refresh() finds newly
+                // published timesteps.
                 let mut carry: HashMap<SubgraphId, Vec<Payload>> = HashMap::new();
                 let proj_ref = &proj;
                 let load_workers = opts.workers;
-                let n_ts = timesteps.len();
+                let n_ts_known = timesteps.len();
                 let result: Result<()> = std::thread::scope(|scope| {
-                    let mut pending = None;
-                    for (i, &t) in timesteps.iter().enumerate() {
-                        let (loaded, overlap_s) = match pending.take() {
+                    let mut queue = timesteps;
+                    let mut i = 0usize;
+                    let mut idle_polls = 0usize;
+                    let mut ring: VecDeque<(
+                        Timestep,
+                        std::thread::ScopedJoinHandle<'_, Result<LoadedTimestep>>,
+                    )> = VecDeque::new();
+                    let mut next_spawn = 0usize; // queue index the ring has reached
+                    // Per-timestep slice footprint, estimated from the
+                    // most recent load that actually hit disk — feeds the
+                    // cache-pressure cap on the ring depth.
+                    let (mut per_ts_slices, mut per_ts_bytes) = (0u64, 0u64);
+                    loop {
+                        if i == queue.len() {
+                            if !opts.follow {
+                                break;
+                            }
+                            debug_assert!(ring.is_empty(), "ring ahead of the known queue");
+                            let visible = self.refresh()?;
+                            if visible > queue.len() {
+                                queue.extend(queue.len()..visible);
+                                idle_polls = 0;
+                                continue;
+                            }
+                            idle_polls += 1;
+                            if opts.follow_idle_polls > 0 && idle_polls >= opts.follow_idle_polls
+                            {
+                                break;
+                            }
+                            std::thread::sleep(std::time::Duration::from_millis(
+                                opts.follow_poll_ms.max(1),
+                            ));
+                            continue;
+                        }
+                        let t = queue[i];
+                        let (loaded, overlap_s) = match ring.pop_front() {
                             Some((pt, handle)) if pt == t => {
                                 let wait0 = Instant::now();
                                 let joined: Result<LoadedTimestep> = match handle.join() {
@@ -248,24 +337,42 @@ impl GopherEngine {
                                     .add(keys::LOAD_OVERLAP_NS, (overlap_s * 1e9) as u64);
                                 (loaded, overlap_s)
                             }
-                            _ => (self.load_timestep(t, proj_ref, load_workers)?, 0.0),
+                            Some((_, handle)) => {
+                                // Defensive: cannot happen while the ring
+                                // is fed from this in-order queue.
+                                let _ = handle.join();
+                                (self.load_timestep(t, proj_ref, load_workers)?, 0.0)
+                            }
+                            None => (self.load_timestep(t, proj_ref, load_workers)?, 0.0),
                         };
                         self.metrics.add(keys::LOAD_NS, (loaded.load_wall_s * 1e9) as u64);
+                        if loaded.trace.slices_read > 0 {
+                            per_ts_slices = loaded.trace.cache_misses.max(1);
+                            per_ts_bytes = loaded.trace.slice_bytes.max(1);
+                        }
                         if opts.prefetch {
-                            if let Some(&tn) = timesteps.get(i + 1) {
+                            let depth =
+                                self.prefetch_cap(opts.prefetch_depth, per_ts_slices, per_ts_bytes);
+                            next_spawn = next_spawn.max(i + 1);
+                            while ring.len() < depth && next_spawn < queue.len() {
+                                let tn = queue[next_spawn];
                                 let engine = self;
-                                pending = Some((
+                                ring.push_back((
                                     tn,
                                     scope.spawn(move || {
                                         engine.load_timestep(tn, proj_ref, load_workers)
                                     }),
                                 ));
+                                next_spawn += 1;
                             }
                         }
+                        // An open-ended follow run never has a "last"
+                        // timestep for apps to special-case.
+                        let n_ts_ctx = if opts.follow { usize::MAX } else { n_ts_known };
                         let (ts_stats, next) = self.run_timestep(
                             app,
                             t,
-                            n_ts,
+                            n_ts_ctx,
                             loaded,
                             overlap_s,
                             std::mem::take(&mut carry),
@@ -277,6 +384,7 @@ impl GopherEngine {
                         carry = next;
                         stats.per_timestep.push(ts_stats);
                         self.metrics.incr(keys::TIMESTEPS);
+                        i += 1;
                     }
                     Ok(())
                 });
@@ -361,6 +469,53 @@ impl GopherEngine {
         }
         stats.total_wall_s = t0.elapsed().as_secs_f64();
         Ok(stats)
+    }
+
+    /// Refresh every store's view of a growing collection (newly sealed
+    /// groups plus each partition's WAL tail — see `gofs::ingest`).
+    /// Returns the instance count visible on *every* host; follow mode
+    /// only schedules timesteps all hosts can serve, since partitions
+    /// publish their seals independently.
+    pub fn refresh(&self) -> Result<usize> {
+        let mut visible = usize::MAX;
+        for s in &self.stores {
+            s.refresh()?;
+            visible = visible.min(s.n_instances());
+        }
+        Ok(if visible == usize::MAX { 0 } else { visible })
+    }
+
+    /// Cap the prefetch ring depth by cache pressure: never keep more
+    /// upcoming timesteps in flight than the per-host slice caches can
+    /// hold alongside the executing timestep's working set, by slot count
+    /// and (when configured) byte budget. The footprint estimate comes
+    /// from the most recent load that touched disk (`cache_misses` ≈
+    /// distinct slices per cold timestep); with no estimate — e.g. an
+    /// empty projection — there is no cache pressure to respect.
+    fn prefetch_cap(&self, requested: usize, per_ts_slices: u64, per_ts_bytes: u64) -> usize {
+        let mut cap = requested.max(1);
+        if per_ts_slices == 0 {
+            return cap;
+        }
+        let n_stores = self.stores.len().max(1) as u64;
+        let slices_per_store = per_ts_slices.div_ceil(n_stores);
+        // `trace.slice_bytes` counts *encoded* on-disk bytes while the
+        // budget is in decoded resident bytes; apply a ~3x decode
+        // expansion allowance, erring toward a shallower ring.
+        let bytes_per_store = per_ts_bytes.div_ceil(n_stores).saturating_mul(3);
+        for s in &self.stores {
+            let slots = s.cache_slots() as u64;
+            if slots > 0 {
+                let fit = (slots / slices_per_store).saturating_sub(1).max(1);
+                cap = cap.min(fit as usize);
+            }
+            let budget = s.cache_byte_budget();
+            if budget > 0 && bytes_per_store > 0 {
+                let fit = (budget / bytes_per_store).saturating_sub(1).max(1);
+                cap = cap.min(fit as usize);
+            }
+        }
+        cap
     }
 
     /// Load every subgraph's instance for timestep `t`, fanned out over
@@ -642,6 +797,7 @@ mod tests {
             cache_slots: 16,
             disk: DiskModel::instant(),
             metrics: metrics.clone(),
+            ..Default::default()
         };
         let stores = crate::gofs::open_collection(&dir, &opts).unwrap();
         (GopherEngine::new(stores, ClusterSpec::new(2), metrics), dir)
@@ -879,6 +1035,75 @@ mod tests {
     fn state_flows_across_timesteps_without_prefetch() {
         let (eng, dir) = engine("carry-noprefetch");
         assert_carry_monotone(&eng, &RunOptions { prefetch: false, ..Default::default() });
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Satellite (depth-k ring): a deep prefetch ring must not change
+    /// delivery semantics either, including when the requested depth
+    /// exceeds the number of remaining timesteps.
+    #[test]
+    fn state_flows_across_timesteps_with_deep_prefetch_ring() {
+        let (eng, dir) = engine("carry-deep");
+        assert_carry_monotone(&eng, &RunOptions { prefetch_depth: 5, ..Default::default() });
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// The cache-pressure cap never prefetches past what the smallest
+    /// cache can hold, and always allows the depth-1 double buffer.
+    #[test]
+    fn prefetch_cap_respects_cache_pressure() {
+        let (eng, dir) = engine("cap"); // stores opened with 16 slots
+        // No estimate yet: no pressure to respect.
+        assert_eq!(eng.prefetch_cap(4, 0, 0), 4);
+        // 16 slots, ~2 slices/timestep/store -> at most 7 ahead.
+        assert_eq!(eng.prefetch_cap(64, 4, 0), 7);
+        // Footprint larger than the cache: still depth 1.
+        assert_eq!(eng.prefetch_cap(8, 1000, 0), 1);
+        assert_eq!(eng.prefetch_cap(0, 4, 0), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Follow mode on a static collection behaves like a normal run and
+    /// terminates after the idle-poll budget.
+    #[test]
+    fn follow_mode_processes_everything_then_stops_when_idle() {
+        let (eng, dir) = engine("follow-static");
+        let inv = Arc::new(Mutex::new(Vec::new()));
+        let app = CountApp { pattern: Pattern::Sequential, invocations: inv.clone() };
+        let stats = eng
+            .run(
+                &app,
+                &RunOptions {
+                    follow: true,
+                    follow_poll_ms: 1,
+                    follow_idle_polls: 3,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(stats.per_timestep.len(), 12);
+        assert_eq!(inv.lock().unwrap().len(), 12 * eng.n_subgraphs());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Follow is a sequential-pattern contract.
+    #[test]
+    fn follow_mode_rejects_non_sequential_patterns_and_explicit_ranges() {
+        let (eng, dir) = engine("follow-reject");
+        let inv = Arc::new(Mutex::new(Vec::new()));
+        let app = CountApp { pattern: Pattern::Independent, invocations: inv.clone() };
+        let err = eng
+            .run(&app, &RunOptions { follow: true, ..Default::default() })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("Sequential"));
+        let app = CountApp { pattern: Pattern::Sequential, invocations: inv };
+        let err = eng
+            .run(
+                &app,
+                &RunOptions { follow: true, timesteps: Some(vec![0]), ..Default::default() },
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("explicit timesteps"));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -2,10 +2,15 @@
 //!
 //! ```text
 //! goffish deploy  --dataset tr|roadnet --out DIR [--parts 12 --bins 20
-//!                 --pack 20 --vertices N --instances T --seed S]
+//!                 --pack 20 --vertices N --instances T --seed S
+//!                 --template-only]
+//! goffish ingest  --store DIR --dataset tr|roadnet [--from <auto> --to T
+//!                 --sleep-ms 0 --no-compress --no-sync --finish]
 //! goffish run     --store DIR --app sssp|pagerank|nhop|track|wcc
-//!                 [--cache 14 --hosts <parts> --source EXT --plate P
-//!                  --backend scalar|pjrt --artifacts DIR --from T --to T]
+//!                 [--cache 14 --cache-bytes 0 --hosts <parts>
+//!                  --source EXT --plate P --backend scalar|pjrt
+//!                  --artifacts DIR --from T --to T --prefetch-depth 2
+//!                  --poll-ms 25 --idle-polls 40 --follow]
 //! goffish inspect --store DIR
 //! ```
 
@@ -15,7 +20,10 @@ use goffish::config::Args;
 use goffish::datagen::{
     CollectionSource, RoadNetGenerator, RoadNetParams, TraceRouteGenerator, TraceRouteParams,
 };
-use goffish::gofs::{deploy, open_collection, DeployConfig, DiskModel, StoreOptions};
+use goffish::gofs::{
+    deploy, deploy_template, open_collection, CollectionAppender, DeployConfig, DiskModel,
+    IngestOptions, StoreOptions,
+};
 use goffish::gopher::{GopherEngine, RunOptions, RunStats};
 use goffish::metrics::Metrics;
 use goffish::runtime::pjrt::{PjrtBackend, PjrtEngine};
@@ -28,6 +36,7 @@ fn main() {
     let args = Args::from_env();
     let result = match args.command.as_deref() {
         Some("deploy") => cmd_deploy(&args),
+        Some("ingest") => cmd_ingest(&args),
         Some("run") => cmd_run(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("help") | None => {
@@ -51,12 +60,23 @@ goffish — scalable analytics over distributed time-series graphs
 USAGE:
   goffish deploy  --dataset tr|roadnet --out DIR
                   [--parts 12 --bins 20 --pack 20 --vertices 50000
-                   --instances 146 --seed 48879 --no-compress --slice-v1]
+                   --instances 146 --seed 48879 --no-compress --slice-v1
+                   --template-only]
+  goffish ingest  --store DIR --dataset tr|roadnet
+                  [--from <appender resume point> --to <dataset end>
+                   --sleep-ms 0 --no-compress --no-sync --finish]
   goffish run     --store DIR --app sssp|pagerank|nhop|track|wcc
-                  [--cache 14 --hosts <auto> --source <ext-id>
-                   --plate CA-00007 --nhops 6 --backend scalar|pjrt
-                   --artifacts artifacts --from <ts> --to <ts> --real-disk]
+                  [--cache 14 --cache-bytes 0 --hosts <auto>
+                   --source <ext-id> --plate CA-00007 --nhops 6
+                   --backend scalar|pjrt --artifacts artifacts
+                   --from <ts> --to <ts> --prefetch-depth 2
+                   --poll-ms 25 --idle-polls 40 --real-disk --follow]
   goffish inspect --store DIR
+
+  `deploy --template-only` lays out an empty collection; `ingest` streams
+  timesteps into it (or any pack-aligned collection) through the WAL-backed
+  appender; `run --follow` keeps the BSP loop live over timesteps as they
+  are published (sequential-pattern apps).
 ";
 
 fn make_source(args: &Args) -> Result<Box<dyn CollectionSource>> {
@@ -101,7 +121,11 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     }
     cfg.partition.seed = args.u64("seed", 0xBEEF);
     let t0 = std::time::Instant::now();
-    let report = deploy(source.as_ref(), &cfg, &out)?;
+    let report = if args.switch("template-only") {
+        deploy_template(source.as_ref(), &cfg, &out)?
+    } else {
+        deploy(source.as_ref(), &cfg, &out)?
+    };
     println!(
         "deployed {} ({}): {} vertices, {} edges, {} instances",
         out.display(),
@@ -119,6 +143,63 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         report.slices_written,
         report.bytes_written as f64 / 1e6,
         t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+/// Stream dataset instances into a deployed collection through the
+/// WAL-backed appender (`gofs::ingest`): each instance is fsynced into
+/// every partition's WAL, and every `pack` timesteps seal into a normal
+/// slice group that `run --follow` picks up live.
+fn cmd_ingest(args: &Args) -> Result<()> {
+    let store_dir = PathBuf::from(args.require("store")?);
+    let source = make_source(args)?;
+    let opts = IngestOptions {
+        compress: !args.switch("no-compress"),
+        sync: !args.switch("no-sync"),
+        ..Default::default()
+    };
+    let mut appender = CollectionAppender::open(&store_dir, opts)?;
+    let from = args.usize("from", appender.n_instances());
+    let to = args.usize("to", source.n_instances()).min(source.n_instances());
+    if from != appender.n_instances() {
+        bail!(
+            "--from {from} does not match the collection's next timestep {} \
+             (the appender resumes where the collection ends)",
+            appender.n_instances()
+        );
+    }
+    let sleep_ms = args.u64("sleep-ms", 0);
+    let t0 = std::time::Instant::now();
+    for t in from..to {
+        let assigned = appender.append(&source.instance(t))?;
+        println!(
+            "  t={assigned} appended ({} sealed, {} open)",
+            appender.sealed_instances(),
+            appender.n_instances() - appender.sealed_instances()
+        );
+        if sleep_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(sleep_ms));
+        }
+    }
+    let stats = if args.switch("finish") {
+        appender.finish()?
+    } else {
+        appender.stats()
+    };
+    println!(
+        "ingested {} instances into {} in {:.2}s: {} groups sealed \
+         ({:.1} ms/group), {:.1} MB WAL traffic",
+        stats.appended,
+        store_dir.display(),
+        t0.elapsed().as_secs_f64(),
+        stats.sealed_groups,
+        if stats.sealed_groups > 0 {
+            stats.seal_wall_s * 1e3 / stats.sealed_groups as f64
+        } else {
+            0.0
+        },
+        stats.wal_bytes as f64 / 1e6
     );
     Ok(())
 }
@@ -147,8 +228,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     let store_dir = PathBuf::from(args.require("store")?);
     let metrics = Arc::new(Metrics::new());
     let disk = if args.switch("real-disk") { DiskModel::instant() } else { DiskModel::default() };
-    let opts =
-        StoreOptions { cache_slots: args.usize("cache", 14), disk, metrics: metrics.clone() };
+    let opts = StoreOptions {
+        cache_slots: args.usize("cache", 14),
+        cache_bytes: args.u64("cache-bytes", 0),
+        disk,
+        metrics: metrics.clone(),
+    };
     let stores = open_collection(&store_dir, &opts)?;
     let n_hosts = stores.len();
     let eng = GopherEngine::new(
@@ -157,8 +242,19 @@ fn cmd_run(args: &Args) -> Result<()> {
         metrics.clone(),
     );
 
-    let mut run_opts = RunOptions::default();
-    if args.get("from").is_some() || args.get("to").is_some() {
+    let defaults = RunOptions::default();
+    let mut run_opts = RunOptions {
+        prefetch_depth: args.usize("prefetch-depth", defaults.prefetch_depth),
+        ..defaults
+    };
+    if args.switch("follow") {
+        if args.get("from").is_some() || args.get("to").is_some() {
+            bail!("--follow tracks the growing collection end-to-end; drop --from/--to");
+        }
+        run_opts.follow = true;
+        run_opts.follow_poll_ms = args.u64("poll-ms", run_opts.follow_poll_ms);
+        run_opts.follow_idle_polls = args.usize("idle-polls", run_opts.follow_idle_polls);
+    } else if args.get("from").is_some() || args.get("to").is_some() {
         let from = args.usize("from", 0);
         let to = args.usize("to", eng.n_instances());
         run_opts.timesteps = Some((from..to.min(eng.n_instances())).collect());
@@ -255,7 +351,7 @@ fn default_source(eng: &GopherEngine) -> u64 {
 fn cmd_inspect(args: &Args) -> Result<()> {
     let store_dir = PathBuf::from(args.require("store")?);
     let metrics = Arc::new(Metrics::new());
-    let opts = StoreOptions { cache_slots: 0, disk: DiskModel::instant(), metrics };
+    let opts = StoreOptions { cache_slots: 0, disk: DiskModel::instant(), metrics, ..Default::default() };
     let stores = open_collection(&store_dir, &opts)?;
     println!("collection {} — {} partitions", store_dir.display(), stores.len());
     let mut whist = LogHistogram::new();

@@ -22,7 +22,7 @@ fn deployed(tag: &str) -> (TraceRouteGenerator, PathBuf) {
 
 fn engine(dir: &PathBuf) -> GopherEngine {
     let metrics = Arc::new(Metrics::new());
-    let o = StoreOptions { cache_slots: 16, disk: DiskModel::instant(), metrics: metrics.clone() };
+    let o = StoreOptions { cache_slots: 16, disk: DiskModel::instant(), metrics: metrics.clone(), ..Default::default() };
     GopherEngine::new(open_collection(dir, &o).unwrap(), ClusterSpec::new(3), metrics)
 }
 

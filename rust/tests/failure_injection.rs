@@ -24,7 +24,7 @@ fn deployed(tag: &str) -> PathBuf {
 }
 
 fn opts() -> StoreOptions {
-    StoreOptions { cache_slots: 8, disk: DiskModel::instant(), metrics: Arc::new(Metrics::new()) }
+    StoreOptions { cache_slots: 8, disk: DiskModel::instant(), metrics: Arc::new(Metrics::new()), ..Default::default() }
 }
 
 /// Find some attribute slice file in a partition dir.
@@ -160,7 +160,7 @@ impl Application for BadRouteApp {
 fn message_to_unknown_subgraph_is_an_error() {
     let dir = deployed("badroute");
     let metrics = Arc::new(Metrics::new());
-    let o = StoreOptions { cache_slots: 8, disk: DiskModel::instant(), metrics: metrics.clone() };
+    let o = StoreOptions { cache_slots: 8, disk: DiskModel::instant(), metrics: metrics.clone(), ..Default::default() };
     let stores = open_collection(&dir, &o).unwrap();
     let eng = GopherEngine::new(stores, ClusterSpec::new(2), metrics);
     let err = eng
@@ -210,7 +210,7 @@ impl Application for SpinApp {
 fn runaway_bsp_hits_superstep_bound() {
     let dir = deployed("spin");
     let metrics = Arc::new(Metrics::new());
-    let o = StoreOptions { cache_slots: 8, disk: DiskModel::instant(), metrics: metrics.clone() };
+    let o = StoreOptions { cache_slots: 8, disk: DiskModel::instant(), metrics: metrics.clone(), ..Default::default() };
     let stores = open_collection(&dir, &o).unwrap();
     let eng = GopherEngine::new(stores, ClusterSpec::new(2), metrics);
     let err = eng

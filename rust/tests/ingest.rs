@@ -1,0 +1,452 @@
+//! Streaming ingestion (gofs::ingest): crash recovery through the WAL,
+//! deploy-vs-ingest equivalence down to the bit level, follow-mode
+//! analytics over a live feed, and the byte-budgeted cache envelope.
+
+use goffish::apps::{PageRankApp, SsspApp};
+use goffish::cluster::ClusterSpec;
+use goffish::datagen::{traceroute, CollectionSource, TraceRouteGenerator, TraceRouteParams};
+use goffish::gofs::{
+    deploy, deploy_template, open_collection, CollectionAppender, DeployConfig, DiskModel,
+    IngestOptions, Projection, StoreOptions,
+};
+use goffish::gopher::{GopherEngine, RunOptions};
+use goffish::metrics::Metrics;
+use goffish::runtime::ScalarBackend;
+use goffish::util::propcheck::forall;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const PARTS: usize = 2;
+const BINS: usize = 3;
+const PACK: usize = 4;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gofs-ingest-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn tr_gen() -> TraceRouteGenerator {
+    TraceRouteGenerator::new(TraceRouteParams::tiny())
+}
+
+fn opts(cache: usize) -> StoreOptions {
+    StoreOptions {
+        cache_slots: cache,
+        disk: DiskModel::instant(),
+        metrics: Arc::new(Metrics::new()),
+        ..Default::default()
+    }
+}
+
+fn engine(dir: &PathBuf, cache: usize) -> GopherEngine {
+    let metrics = Arc::new(Metrics::new());
+    let o = StoreOptions {
+        cache_slots: cache,
+        disk: DiskModel::instant(),
+        metrics: metrics.clone(),
+        ..Default::default()
+    };
+    GopherEngine::new(open_collection(dir, &o).unwrap(), ClusterSpec::new(PARTS), metrics)
+}
+
+/// Quantized final SSSP distances keyed (subgraph, local vertex).
+fn sssp_fingerprint(eng: &GopherEngine, gen: &TraceRouteGenerator, opts: &RunOptions) -> Vec<(u64, u32, i64)> {
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+    let app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
+    let stats = eng.run(&app, opts).unwrap();
+    assert!(!stats.per_timestep.is_empty());
+    let distances = app.results.distances.lock().unwrap();
+    let mut out: Vec<(u64, u32, i64)> = distances
+        .iter()
+        .flat_map(|(sgid, (_, d))| {
+            d.iter().enumerate().map(move |(lv, &x)| {
+                let q = if x.is_finite() { (x as f64 * 1e6).round() as i64 } else { -1 };
+                (sgid.0, lv as u32, q)
+            })
+        })
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+fn pagerank_fingerprint(eng: &GopherEngine, gen: &TraceRouteGenerator, opts: &RunOptions) -> Vec<(u64, i64)> {
+    let app = PageRankApp::new(
+        gen.template().n_vertices(),
+        Some(traceroute::eattr::ACTIVE),
+        Arc::new(ScalarBackend),
+    );
+    eng.run(&app, opts).unwrap();
+    let mut out: Vec<(u64, i64)> = (0..3)
+        .flat_map(|t| {
+            app.results
+                .top_k(t, 10)
+                .into_iter()
+                .map(move |(v, r)| (v, (r as f64 * 1e12).round() as i64))
+        })
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+/// Every value of every instance must read back identically from the two
+/// collections (generic resolution path, so all types are covered).
+fn assert_stores_identical(da: &PathBuf, db: &PathBuf, n_ts: usize) {
+    let sa = open_collection(da, &opts(16)).unwrap();
+    let sb = open_collection(db, &opts(16)).unwrap();
+    assert_eq!(sa.len(), sb.len());
+    for (a, b) in sa.iter().zip(&sb) {
+        assert_eq!(a.n_instances(), n_ts, "store A instance count");
+        assert_eq!(b.n_instances(), n_ts, "store B instance count");
+        let proj = Projection::all(a.vertex_schema(), a.edge_schema());
+        for sg in a.subgraphs() {
+            for t in 0..n_ts {
+                let ia = a.read_instance(sg.id.local(), t, &proj).unwrap();
+                let ib = b.read_instance(sg.id.local(), t, &proj).unwrap();
+                assert_eq!(ia.window, ib.window, "window t{t}");
+                for attr in 0..a.vertex_schema().len() {
+                    for v in 0..sg.n_vertices() as u32 {
+                        assert_eq!(
+                            ia.vertex_values(attr, v),
+                            ib.vertex_values(attr, v),
+                            "vattr {attr} v{v} t{t}"
+                        );
+                    }
+                }
+                for attr in 0..a.edge_schema().len() {
+                    for e in 0..sg.edges.len() {
+                        assert_eq!(
+                            ia.edge_values(attr, e),
+                            ib.edge_values(attr, e),
+                            "eattr {attr} e{e} t{t}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Stream `gen`'s instances `[from, to)` through an appender opened
+/// fresh on `dir` (reopening is the crash-recovery path).
+fn ingest_range(dir: &PathBuf, gen: &TraceRouteGenerator, from: usize, to: usize) {
+    let mut app = CollectionAppender::open(dir, IngestOptions::default()).unwrap();
+    assert_eq!(app.n_instances(), from, "appender resumes at the collection's end");
+    for t in from..to {
+        assert_eq!(app.append(&gen.instance(t)).unwrap(), t);
+    }
+}
+
+/// Acceptance: an ingested collection is indistinguishable from a
+/// batch-deployed one — including a simulated crash mid-group (appender
+/// dropped with an unsealed WAL tail, then reopened) — with bit-identical
+/// SSSP and PageRank outputs.
+#[test]
+fn streamed_ingest_is_bit_identical_to_batch_deploy() {
+    let gen = tr_gen();
+    let n = gen.n_instances(); // 12 = 3 full groups at pack 4
+    let cfg = DeployConfig::new(PARTS, BINS, PACK);
+    let d_batch = tmpdir("eq-batch");
+    deploy(&gen, &cfg, &d_batch).unwrap();
+    let d_feed = tmpdir("eq-feed");
+    deploy_template(&gen, &cfg, &d_feed).unwrap();
+
+    // First session appends 0..6: one sealed group (0..4) plus two open
+    // WAL records, then "crashes" (drop without seal).
+    ingest_range(&d_feed, &gen, 0, 6);
+    // Recovery session replays the WAL tail and streams the rest.
+    ingest_range(&d_feed, &gen, 6, n);
+
+    assert_stores_identical(&d_batch, &d_feed, n);
+
+    let run = RunOptions::default();
+    assert_eq!(
+        sssp_fingerprint(&engine(&d_batch, 28), &gen, &run),
+        sssp_fingerprint(&engine(&d_feed, 28), &gen, &run),
+        "SSSP outputs differ between batch deploy and streamed ingest"
+    );
+    let pr = RunOptions { timesteps: Some(vec![0, 1, 2]), ..Default::default() };
+    assert_eq!(
+        pagerank_fingerprint(&engine(&d_batch, 28), &gen, &pr),
+        pagerank_fingerprint(&engine(&d_feed, 28), &gen, &pr),
+        "PageRank outputs differ between batch deploy and streamed ingest"
+    );
+    std::fs::remove_dir_all(&d_batch).unwrap();
+    std::fs::remove_dir_all(&d_feed).unwrap();
+}
+
+/// A torn trailing WAL frame (partial write, no fsync completion) is
+/// dropped on replay; partitions that did get the record reconcile to
+/// the common prefix, and the lost timestep can simply be re-appended.
+#[test]
+fn torn_wal_record_recovers_to_common_prefix() {
+    let gen = tr_gen();
+    let cfg = DeployConfig::new(PARTS, BINS, 8); // pack 8: nothing seals
+    let d = tmpdir("torn");
+    deploy_template(&gen, &cfg, &d).unwrap();
+    ingest_range(&d, &gen, 0, 3);
+
+    // Tear the last frame of part-0's WAL mid-payload.
+    let wal = d.join("part-0").join("wal.log");
+    let bytes = std::fs::read(&wal).unwrap();
+    std::fs::write(&wal, &bytes[..bytes.len() - 7]).unwrap();
+
+    let app = CollectionAppender::open(&d, IngestOptions::default()).unwrap();
+    assert_eq!(app.n_instances(), 2, "torn record dropped everywhere");
+    assert_eq!(app.sealed_instances(), 0);
+    drop(app);
+
+    // Re-append the lost timestep (and one more), then compare against a
+    // 4-instance batch deployment of the same generator stream.
+    ingest_range(&d, &gen, 2, 4);
+    let gen4 = TraceRouteGenerator::new(TraceRouteParams {
+        n_instances: 4,
+        ..TraceRouteParams::tiny()
+    });
+    let d_batch = tmpdir("torn-batch");
+    deploy(&gen4, &cfg, &d_batch).unwrap();
+    // Seal the feed's partial tail so both ends are slice-backed.
+    let app = CollectionAppender::open(&d, IngestOptions::default()).unwrap();
+    let stats = app.finish().unwrap();
+    assert_eq!(stats.sealed_groups, 1);
+    assert_stores_identical(&d_batch, &d, 4);
+    std::fs::remove_dir_all(&d).unwrap();
+    std::fs::remove_dir_all(&d_batch).unwrap();
+}
+
+/// A corrupted (bit-flipped) trailing record fails its CRC and is
+/// dropped, same as a torn one — earlier records survive.
+#[test]
+fn corrupt_wal_tail_crc_is_dropped() {
+    let gen = tr_gen();
+    let cfg = DeployConfig::new(PARTS, BINS, 8);
+    let d = tmpdir("crc");
+    deploy_template(&gen, &cfg, &d).unwrap();
+    ingest_range(&d, &gen, 0, 3);
+    for p in 0..PARTS {
+        let wal = d.join(format!("part-{p}")).join("wal.log");
+        let mut bytes = std::fs::read(&wal).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&wal, &bytes).unwrap();
+    }
+    let app = CollectionAppender::open(&d, IngestOptions::default()).unwrap();
+    assert_eq!(app.n_instances(), 2, "corrupt record must not replay");
+    std::fs::remove_dir_all(&d).unwrap();
+}
+
+/// Crash window between "publish sealed group" and "truncate WAL":
+/// sealed records still in the WAL are skipped on replay (idempotent),
+/// never re-applied or double-counted.
+#[test]
+fn replay_after_publish_before_truncate_is_idempotent() {
+    let gen = tr_gen();
+    let cfg = DeployConfig::new(PARTS, BINS, PACK);
+    let d = tmpdir("idem");
+    deploy_template(&gen, &cfg, &d).unwrap();
+    ingest_range(&d, &gen, 0, 3);
+    // Stash the WALs holding t0..t2, let t3 trigger the seal (which
+    // truncates them), then restore the stale WALs — exactly the state a
+    // crash between publish and truncate leaves behind.
+    let stashed: Vec<(PathBuf, Vec<u8>)> = (0..PARTS)
+        .map(|p| {
+            let path = d.join(format!("part-{p}")).join("wal.log");
+            let bytes = std::fs::read(&path).unwrap();
+            (path, bytes)
+        })
+        .collect();
+    ingest_range(&d, &gen, 3, 4);
+    for (path, bytes) in &stashed {
+        std::fs::write(path, bytes).unwrap();
+    }
+    let app = CollectionAppender::open(&d, IngestOptions::default()).unwrap();
+    assert_eq!(app.sealed_instances(), PACK);
+    assert_eq!(app.n_instances(), PACK, "stale WAL records must be skipped");
+    drop(app);
+    let d_batch = tmpdir("idem-batch");
+    let gen4 = TraceRouteGenerator::new(TraceRouteParams {
+        n_instances: 4,
+        ..TraceRouteParams::tiny()
+    });
+    deploy(&gen4, &cfg, &d_batch).unwrap();
+    assert_stores_identical(&d_batch, &d, 4);
+    std::fs::remove_dir_all(&d).unwrap();
+    std::fs::remove_dir_all(&d_batch).unwrap();
+}
+
+/// Acceptance: `RunOptions::follow` processes timesteps appended after
+/// the run started, produces outputs bit-identical to a batch run over
+/// the final collection, and never re-reads already-sealed groups (its
+/// total slice reads cannot exceed the batch run's — tail-served
+/// timesteps cost zero reads, asserted via the ReadTrace-backed
+/// per-timestep counters).
+#[test]
+fn follow_mode_tracks_live_ingest_without_rereading_sealed_groups() {
+    let gen = tr_gen();
+    let n = gen.n_instances();
+    let cfg = DeployConfig::new(PARTS, BINS, PACK);
+    let d_feed = tmpdir("follow-feed");
+    deploy_template(&gen, &cfg, &d_feed).unwrap();
+    let d_batch = tmpdir("follow-batch");
+    deploy(&gen, &cfg, &d_batch).unwrap();
+
+    let feed_dir = d_feed.clone();
+    let feeder = std::thread::spawn(move || {
+        let gen = tr_gen();
+        // Give the follow run a head start so every timestep arrives
+        // after it is already polling.
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let mut app = CollectionAppender::open(&feed_dir, IngestOptions::default()).unwrap();
+        for t in 0..gen.n_instances() {
+            app.append(&gen.instance(t)).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(15));
+        }
+    });
+
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+    let eng = engine(&d_feed, 64);
+    let app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
+    let follow_opts = RunOptions {
+        follow: true,
+        follow_poll_ms: 10,
+        follow_idle_polls: 300, // 3s of slack over the feed cadence
+        prefetch_depth: 3,
+        ..Default::default()
+    };
+    let stats = eng.run(&app, &follow_opts).unwrap();
+    feeder.join().unwrap();
+    assert_eq!(stats.per_timestep.len(), n, "follow run missed timesteps");
+    let follow_reads: u64 = stats.per_timestep.iter().map(|t| t.slices_read).sum();
+    let follow_fp = {
+        let distances = app.results.distances.lock().unwrap();
+        let mut out: Vec<(u64, u32, i64)> = distances
+            .iter()
+            .flat_map(|(sgid, (_, d))| {
+                d.iter().enumerate().map(move |(lv, &x)| {
+                    let q = if x.is_finite() { (x as f64 * 1e6).round() as i64 } else { -1 };
+                    (sgid.0, lv as u32, q)
+                })
+            })
+            .collect();
+        out.sort_unstable();
+        out
+    };
+
+    let eng_batch = engine(&d_batch, 64);
+    let batch_app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
+    let batch_stats = eng_batch.run(&batch_app, &RunOptions::default()).unwrap();
+    let batch_reads: u64 = batch_stats.per_timestep.iter().map(|t| t.slices_read).sum();
+    let batch_fp = {
+        let distances = batch_app.results.distances.lock().unwrap();
+        let mut out: Vec<(u64, u32, i64)> = distances
+            .iter()
+            .flat_map(|(sgid, (_, d))| {
+                d.iter().enumerate().map(move |(lv, &x)| {
+                    let q = if x.is_finite() { (x as f64 * 1e6).round() as i64 } else { -1 };
+                    (sgid.0, lv as u32, q)
+                })
+            })
+            .collect();
+        out.sort_unstable();
+        out
+    };
+
+    assert_eq!(follow_fp, batch_fp, "follow-mode SSSP diverged from the batch run");
+    assert!(batch_reads > 0);
+    assert!(
+        follow_reads <= batch_reads,
+        "follow mode re-read sealed groups: {follow_reads} reads vs batch {batch_reads}"
+    );
+    std::fs::remove_dir_all(&d_feed).unwrap();
+    std::fs::remove_dir_all(&d_batch).unwrap();
+}
+
+/// Satellite: the byte-budgeted cache keeps the decoded-slice footprint
+/// inside the envelope while a whole-series scan (the ingest+analytics
+/// co-residence scenario) streams through it — and reads stay correct.
+#[test]
+fn byte_budget_bounds_resident_bytes_during_scan() {
+    let gen = tr_gen();
+    let d = tmpdir("budget");
+    deploy(&gen, &DeployConfig::new(1, BINS, PACK), &d).unwrap();
+
+    // Measure the full decoded footprint first (slots sized so nothing
+    // evicts), then re-run under a budget of a third of it: big enough
+    // for any single slice, small enough that eviction must engage.
+    let reference_stores = open_collection(&d, &opts(4096)).unwrap();
+    let reference = &reference_stores[0];
+    let proj = Projection::all(reference.vertex_schema(), reference.edge_schema());
+    let scan = |store: &goffish::gofs::Store| {
+        for t in 0..store.n_instances() {
+            for sg in store.subgraphs() {
+                let _ = store.read_instance(sg.id.local(), t, &proj).unwrap();
+            }
+        }
+    };
+    scan(reference);
+    let full = reference.cache_resident_bytes();
+    assert!(full > 0);
+    let budget = (full / 3).max(1);
+
+    let bounded = StoreOptions {
+        cache_slots: 4096,
+        cache_bytes: budget,
+        disk: DiskModel::instant(),
+        metrics: Arc::new(Metrics::new()),
+    };
+    let bounded_stores = open_collection(&d, &bounded).unwrap();
+    let store = &bounded_stores[0];
+    let mut checked = 0usize;
+    for t in 0..store.n_instances() {
+        for sg in store.subgraphs() {
+            let got = store.read_instance(sg.id.local(), t, &proj).unwrap();
+            let want = reference.read_instance(sg.id.local(), t, &proj).unwrap();
+            for e in 0..sg.edges.len() {
+                assert_eq!(
+                    got.edge_values(traceroute::eattr::LATENCY_MS, e),
+                    want.edge_values(traceroute::eattr::LATENCY_MS, e)
+                );
+                checked += 1;
+            }
+        }
+        assert!(
+            store.cache_resident_bytes() <= budget,
+            "resident {} exceeds budget {budget} at t{t}",
+            store.cache_resident_bytes()
+        );
+    }
+    assert!(checked > 100);
+    let (_, _, evictions) = store.cache_stats();
+    assert!(evictions > 0, "a third of the full footprint should force eviction");
+    std::fs::remove_dir_all(&d).unwrap();
+}
+
+/// Property: for random layouts, crash points and partial final groups,
+/// ingest-then-seal reads back exactly what batch deploy writes.
+#[test]
+fn ingest_matches_deploy_property() {
+    forall(6, |g| {
+        let parts = g.usize(1..3);
+        let bins = g.usize(1..4);
+        let pack = g.usize(1..5);
+        let n = g.usize(1..9);
+        let crash_at = g.usize(0..n + 1);
+        let gen = TraceRouteGenerator::new(TraceRouteParams {
+            n_instances: n,
+            ..TraceRouteParams::tiny()
+        });
+        let cfg = DeployConfig::new(parts, bins, pack);
+        let d_batch = tmpdir(&format!("prop-batch-{parts}-{bins}-{pack}-{n}-{crash_at}"));
+        deploy(&gen, &cfg, &d_batch).unwrap();
+        let d_feed = tmpdir(&format!("prop-feed-{parts}-{bins}-{pack}-{n}-{crash_at}"));
+        deploy_template(&gen, &cfg, &d_feed).unwrap();
+        ingest_range(&d_feed, &gen, 0, crash_at);
+        ingest_range(&d_feed, &gen, crash_at, n);
+        // Batch deploy seals a partial final group; match it.
+        let app = CollectionAppender::open(&d_feed, IngestOptions::default()).unwrap();
+        app.finish().unwrap();
+        assert_stores_identical(&d_batch, &d_feed, n);
+        std::fs::remove_dir_all(&d_batch).unwrap();
+        std::fs::remove_dir_all(&d_feed).unwrap();
+    });
+}

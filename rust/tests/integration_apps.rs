@@ -24,7 +24,7 @@ fn tmp(tag: &str) -> PathBuf {
 
 fn engine_over(dir: &PathBuf, n_parts: usize) -> GopherEngine {
     let metrics = Arc::new(Metrics::new());
-    let opts = StoreOptions { cache_slots: 28, disk: DiskModel::instant(), metrics: metrics.clone() };
+    let opts = StoreOptions { cache_slots: 28, disk: DiskModel::instant(), metrics: metrics.clone(), ..Default::default() };
     let stores = open_collection(dir, &opts).unwrap();
     GopherEngine::new(stores, ClusterSpec::new(n_parts), metrics)
 }

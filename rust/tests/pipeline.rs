@@ -22,7 +22,7 @@ fn tmp(tag: &str) -> PathBuf {
 fn sssp_distances(dir: &PathBuf, n_parts: usize, cache: usize) -> BTreeMap<u64, i64> {
     let metrics = Arc::new(Metrics::new());
     let opts =
-        StoreOptions { cache_slots: cache, disk: DiskModel::instant(), metrics: metrics.clone() };
+        StoreOptions { cache_slots: cache, disk: DiskModel::instant(), metrics: metrics.clone(), ..Default::default() };
     let stores = open_collection(dir, &opts).unwrap();
     let eng = GopherEngine::new(stores, ClusterSpec::new(n_parts), metrics);
     let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());

@@ -47,6 +47,7 @@ fn make_engine(dir: &PathBuf, cache: usize) -> GopherEngine {
         cache_slots: cache,
         disk: DiskModel::instant(),
         metrics: metrics.clone(),
+        ..Default::default()
     };
     let stores = open_collection(dir, &opts).unwrap();
     let n = stores.len();
@@ -89,6 +90,7 @@ fn v1_fixture_reads_back_generator_values() {
         cache_slots: 8,
         disk: DiskModel::instant(),
         metrics: Arc::new(Metrics::new()),
+        ..Default::default()
     };
     let stores = open_collection(&dir, &opts).unwrap();
     let t = 3usize;
