@@ -73,6 +73,7 @@ fn sssp_fingerprint(
     n_ts: usize,
     prefetch: bool,
     workers: usize,
+    overlap_routing: bool,
 ) -> (RunStats, Vec<(u64, usize, i64)>) {
     let (eng, _m) = engine(dir, hosts, 28);
     let app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
@@ -83,6 +84,7 @@ fn sssp_fingerprint(
                 timesteps: Some((0..n_ts).collect()),
                 prefetch,
                 workers,
+                overlap_routing,
                 ..Default::default()
             },
         )
@@ -256,9 +258,9 @@ fn main() {
         let src = mini_gen.template().ext_ids[mini_gen.vantages()[0] as usize];
         let n_ts = mini_ts.min(6);
         let workers = RunOptions::default().workers;
-        let (_, fp_v1) = sssp_fingerprint(&d1, mini_hosts, src, n_ts, true, workers);
-        let (_, fp_v2) = sssp_fingerprint(&d2, mini_hosts, src, n_ts, true, workers);
-        let (_, fp_v2_np) = sssp_fingerprint(&d2, mini_hosts, src, n_ts, false, 1);
+        let (_, fp_v1) = sssp_fingerprint(&d1, mini_hosts, src, n_ts, true, workers, true);
+        let (_, fp_v2) = sssp_fingerprint(&d2, mini_hosts, src, n_ts, true, workers, true);
+        let (_, fp_v2_np) = sssp_fingerprint(&d2, mini_hosts, src, n_ts, false, 1, true);
         assert_eq!(fp_v1, fp_v2, "v1/v2 slice formats changed SSSP outputs");
         assert_eq!(fp_v2, fp_v2_np, "prefetch changed SSSP outputs");
         println!(
@@ -266,6 +268,105 @@ fn main() {
         );
         let _ = std::fs::remove_dir_all(&d1);
         let _ = std::fs::remove_dir_all(&d2);
+    }
+
+    // --- L3: zero-copy cell slabs (tentpole probe). ---
+    // One packed v2 group shaped like the traceroute edge-latency column
+    // (quantized floats, a handful of values per present cell). "Warm"
+    // means the slice bytes are resident; the probe measures the path
+    // from a decoded position block to typed values in the app's hands —
+    // the per-cell split (one sub_slab memcpy + alloc per cell on the
+    // copying path, an offset view on the shared path) plus an
+    // `f64_at` read of every element, i.e. the edge_f64 hot path.
+    {
+        use goffish::gofs::colcodec::{
+            decode_pos_block, decode_pos_block_copied, encode_attr_body_v2, parse_v2_layout,
+        };
+        use goffish::graph::{AttrColumn, AttrType, AttrValue};
+        let mut rng = Prng::new(0xC0FFEE);
+        let n_ts = 20usize;
+        let n_pos = 64usize;
+        let cells: Vec<Vec<Option<AttrColumn>>> = (0..n_ts)
+            .map(|t| {
+                (0..n_pos)
+                    .map(|p| {
+                        if (t + p) % 5 == 0 {
+                            return None; // absent cells, like real groups
+                        }
+                        let mut col = AttrColumn::new();
+                        let n_elem = 4 + rng.gen_range(8) as usize;
+                        let mut i = 0u32;
+                        for _ in 0..n_elem {
+                            i += 1 + rng.gen_range(3) as u32;
+                            let v = rng.gen_range(1 << 14) as f64 / 1024.0;
+                            col.push(i, [AttrValue::Float(v)]);
+                        }
+                        Some(col)
+                    })
+                    .collect()
+            })
+            .collect();
+        let body = encode_attr_body_v2(&cells, AttrType::Float);
+        let (_, _, ranges) = parse_v2_layout(&body).expect("v2 layout");
+        let scan = |copied: bool| -> (f64, usize) {
+            let mut acc = 0.0f64;
+            let mut reads = 0usize;
+            for &(lo, hi) in &ranges {
+                let cols = if copied {
+                    decode_pos_block_copied(&body[lo..hi], AttrType::Float, n_ts).unwrap()
+                } else {
+                    decode_pos_block(&body[lo..hi], AttrType::Float, n_ts).unwrap()
+                };
+                for c in cols.iter().flatten() {
+                    for (i, _) in c.iter() {
+                        acc += c.f64_at(i).unwrap_or(0.0);
+                        reads += 1;
+                    }
+                }
+            }
+            (acc, reads)
+        };
+        // Both paths must agree value-for-value, and the shared path
+        // must actually alias one slab per block.
+        for &(lo, hi) in &ranges {
+            let shared = decode_pos_block(&body[lo..hi], AttrType::Float, n_ts).unwrap();
+            let copied = decode_pos_block_copied(&body[lo..hi], AttrType::Float, n_ts).unwrap();
+            assert_eq!(shared, copied, "shared/copied cell decodes diverged");
+            let present: Vec<&AttrColumn> = shared.iter().flatten().collect();
+            for w in present.windows(2) {
+                assert!(w[0].shares_backing(w[1]), "cells must share one slab");
+            }
+        }
+        let (acc_s, n_reads) = scan(false);
+        let (acc_c, n_reads_c) = scan(true);
+        assert_eq!((acc_s.to_bits(), n_reads), (acc_c.to_bits(), n_reads_c));
+        let shared_stats = b.bench("slab split+scan (shared)", || scan(false));
+        let copied_stats = b.bench("slab split+scan (copied)", || scan(true));
+        let ns_shared = shared_stats.min() * 1e9 / n_reads.max(1) as f64;
+        let ns_copied = copied_stats.min() * 1e9 / n_reads.max(1) as f64;
+        let speedup = ns_copied / ns_shared.max(1e-12);
+        report.row(&[
+            "edge_f64 warm (shared slab)".into(),
+            format!("{ns_shared:.1}"),
+            format!("ns/edge ({n_reads} reads, decode+scan)"),
+        ]);
+        report.row(&[
+            "edge_f64 warm (copied slab)".into(),
+            format!("{ns_copied:.1}"),
+            "ns/edge (pre-zero-copy reference path)".into(),
+        ]);
+        report.row(&[
+            "zero-copy slab speedup".into(),
+            format!("{speedup:.2}x"),
+            "copied/shared (>= 1.3x expected)".into(),
+        ]);
+        println!(
+            "slab probe: {ns_copied:.1} -> {ns_shared:.1} ns/edge warm ({speedup:.2}x, \
+             outputs identical)"
+        );
+        json.push(("edge_f64_ns_warm_shared".into(), ns_shared));
+        json.push(("edge_f64_ns_warm_copied".into(), ns_copied));
+        json.push(("slab_share_speedup_x".into(), speedup));
     }
 
     // --- L3: superstep barrier overhead (noop app, many supersteps). ---
@@ -295,6 +396,45 @@ fn main() {
     ]);
     json.push(("routing_msgs_per_s".into(), routing));
 
+    // --- L3: overlapped superstep routing (tentpole probe). ---
+    // Message-heavy SSSP run with routing staged from compute workers
+    // (default) vs the same staging run single-threaded at the barrier
+    // (isolates the scheduling change, not an implementation
+    // difference); outputs asserted bit-identical in the same probe,
+    // per the determinism contract.
+    {
+        let n_ts = args.usize("timesteps", 8).min(scale.instances);
+        let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+        let workers = RunOptions::default().workers;
+        let (ov, fp_ov) = sssp_fingerprint(&dir, scale.hosts, source, n_ts, true, workers, true);
+        let (sq, fp_sq) = sssp_fingerprint(&dir, scale.hosts, source, n_ts, true, workers, false);
+        assert_eq!(fp_ov, fp_sq, "overlapped routing changed SSSP outputs");
+        let supersteps = ov.total_supersteps().max(1) as f64;
+        let route_ov_ms = ov.per_timestep.iter().map(|t| t.route_s).sum::<f64>() * 1e3;
+        let route_sq_ms = sq.per_timestep.iter().map(|t| t.route_s).sum::<f64>() * 1e3;
+        let overlap_s = ov.per_timestep.iter().map(|t| t.route_overlap_s).sum::<f64>();
+        report.row(&[
+            "route barrier (barrier-staged)".into(),
+            format!("{:.3}", route_sq_ms / supersteps),
+            "ms/superstep".into(),
+        ]);
+        report.row(&[
+            "route barrier (overlapped)".into(),
+            format!("{:.3}", route_ov_ms / supersteps),
+            format!("ms/superstep ({:.3} ms staged under compute)", overlap_s * 1e3 / supersteps),
+        ]);
+        println!(
+            "route probe: {:.3} -> {:.3} ms barrier/superstep, {:.2} ms routed under compute \
+             (outputs identical)",
+            route_sq_ms / supersteps,
+            route_ov_ms / supersteps,
+            overlap_s * 1e3
+        );
+        json.push(("route_ms_per_superstep_barrier".into(), route_sq_ms / supersteps));
+        json.push(("route_ms_per_superstep".into(), route_ov_ms / supersteps));
+        json.push(("route_overlap_s".into(), overlap_s));
+    }
+
     // --- L3: pipelined instance loading (prefetch + parallel load). ---
     // Per-timestep *blocking* load wall time for the temporal SSSP app,
     // with the pipeline off (serial load on the driver thread, no
@@ -303,9 +443,16 @@ fn main() {
     {
         let n_ts = args.usize("timesteps", 8).min(scale.instances);
         let source = gen.template().ext_ids[gen.vantages()[0] as usize];
-        let (off, fp_off) = sssp_fingerprint(&dir, scale.hosts, source, n_ts, false, 1);
-        let (on, fp_on) =
-            sssp_fingerprint(&dir, scale.hosts, source, n_ts, true, RunOptions::default().workers);
+        let (off, fp_off) = sssp_fingerprint(&dir, scale.hosts, source, n_ts, false, 1, true);
+        let (on, fp_on) = sssp_fingerprint(
+            &dir,
+            scale.hosts,
+            source,
+            n_ts,
+            true,
+            RunOptions::default().workers,
+            true,
+        );
         assert_eq!(fp_off, fp_on, "prefetch/parallel load changed SSSP outputs");
         let block_off = off.total_load_blocking_s() / n_ts as f64;
         let block_on = on.total_load_blocking_s() / n_ts as f64;
@@ -336,6 +483,71 @@ fn main() {
         json.push(("blocking_load_ms_per_timestep_on".into(), block_on * 1e3));
         json.push(("load_pipeline_speedup_x".into(), speedup));
         json.push(("fig7_wall_s".into(), on.total_wall_s));
+    }
+
+    // --- L3: temporal-pool prefetch (tentpole probe). ---
+    // PageRank (Independent pattern) over the temporal pool: shared
+    // prefetch queue vs serial load-then-compute per worker; outputs
+    // asserted identical, blocking-load split and overlap reported.
+    {
+        use goffish::apps::PageRankApp;
+        let n_ts = args.usize("timesteps", 8).min(scale.instances);
+        let run_pool = |prefetch: bool| {
+            let (eng, _m) = engine(&dir, scale.hosts, 28);
+            let app = PageRankApp::new(
+                gen.template().n_vertices(),
+                Some(traceroute::eattr::ACTIVE),
+                Arc::new(ScalarBackend),
+            );
+            let stats = eng
+                .run(
+                    &app,
+                    &RunOptions {
+                        timesteps: Some((0..n_ts).collect()),
+                        temporal_workers: 4,
+                        prefetch,
+                        ..Default::default()
+                    },
+                )
+                .expect("pool run");
+            let mut fp: Vec<(u64, i64)> = (0..n_ts)
+                .flat_map(|t| {
+                    app.results
+                        .top_k(t, 10)
+                        .into_iter()
+                        .map(move |(v, r)| (v, (r as f64 * 1e12).round() as i64))
+                })
+                .collect();
+            fp.sort_unstable();
+            (stats, fp)
+        };
+        let (pool_off, fp_off) = run_pool(false);
+        let (pool_on, fp_on) = run_pool(true);
+        assert_eq!(fp_off, fp_on, "temporal-pool prefetch changed PageRank outputs");
+        let block = |s: &RunStats| {
+            s.per_timestep.iter().map(|t| t.load_blocking_s()).sum::<f64>() / n_ts as f64
+        };
+        let pool_overlap_s: f64 = pool_on.per_timestep.iter().map(|t| t.overlap_s).sum();
+        report.row(&[
+            "pool blocking load (serial)".into(),
+            format!("{:.2}", block(&pool_off) * 1e3),
+            "ms/timestep (load-then-compute per worker)".into(),
+        ]);
+        report.row(&[
+            "pool blocking load (prefetch queue)".into(),
+            format!("{:.2}", block(&pool_on) * 1e3),
+            format!("ms/timestep ({:.2} ms load hidden)", pool_overlap_s * 1e3 / n_ts as f64),
+        ]);
+        println!(
+            "pool probe: {:.2} -> {:.2} ms blocking load/timestep, {:.2} ms overlapped \
+             (outputs identical)",
+            block(&pool_off) * 1e3,
+            block(&pool_on) * 1e3,
+            pool_overlap_s * 1e3
+        );
+        json.push(("pool_blocking_load_ms_per_ts_off".into(), block(&pool_off) * 1e3));
+        json.push(("pool_blocking_load_ms_per_ts_on".into(), block(&pool_on) * 1e3));
+        json.push(("pool_load_overlap_s".into(), pool_overlap_s));
     }
 
     // --- L3: streaming ingest (WAL append -> seal -> follow). ---
@@ -379,6 +591,32 @@ fn main() {
         json.push(("ingest_append_inst_per_s".into(), inst_per_s));
         json.push(("ingest_seal_ms_per_group".into(), seal_ms));
         json.push(("ingest_wal_mb".into(), ing.wal_bytes as f64 / 1e6));
+
+        // Satellite: WAL group commit — one fsync per 8 appends instead
+        // of per append (seals still flush durably).
+        let _ = std::fs::remove_dir_all(&root);
+        deploy_template(&ing_gen, &DeployConfig::new(hosts, 8, pack), &root)
+            .expect("ingest probe: gc template deploy");
+        let mut appender =
+            CollectionAppender::open(&root, IngestOptions::default().group_commit(8))
+                .expect("gc appender");
+        for t in 0..n_inst {
+            appender.append(&ing_gen.instance(t)).expect("gc append");
+        }
+        let gc = appender.finish().expect("gc finish");
+        let gc_inst_per_s = gc.appended as f64 / gc.append_wall_s.max(1e-9);
+        report.row(&[
+            "ingest append (group commit 8)".into(),
+            format!("{gc_inst_per_s:.1}"),
+            format!("inst/s ({} WAL fsyncs vs {})", gc.wal_syncs, ing.wal_syncs),
+        ]);
+        println!(
+            "group commit: {inst_per_s:.1} -> {gc_inst_per_s:.1} inst/s \
+             ({} -> {} WAL fsyncs)",
+            ing.wal_syncs, gc.wal_syncs
+        );
+        json.push(("ingest_append_inst_per_s_gc8".into(), gc_inst_per_s));
+        json.push(("ingest_wal_syncs_gc8".into(), gc.wal_syncs as f64));
 
         // Follow-mode lag over a fresh feed.
         let _ = std::fs::remove_dir_all(&root);

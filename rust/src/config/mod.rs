@@ -33,6 +33,7 @@ impl RunConfig {
             cache_bytes: self.cache_bytes,
             disk: self.disk.clone(),
             metrics: self.metrics.clone(),
+            ..Default::default()
         }
     }
 

@@ -22,10 +22,22 @@
 //! Codecs operate on raw bit patterns (`f64::to_bits`), so NaN, ±inf and
 //! −0.0 round-trip exactly. See `gofs::slice` for the surrounding wire
 //! layout.
+//!
+//! ### Zero-copy cell slabs (decode side)
+//!
+//! [`decode_pos_block`] decodes a position's whole value stream into ONE
+//! typed slab behind an `Arc` and hands every per-timestep cell back as
+//! an **offset view** into it ([`AttrColumn::from_shared_parts`]): the
+//! split from group to cells copies no values. The pre-view behavior —
+//! one `sub_slab` memcpy + allocation per cell — is preserved as
+//! [`decode_pos_block_copied`] so the `perf_hotpath` probe and the
+//! aliasing property tests can compare both paths on identical bytes.
 
 use crate::graph::attributes::{AttrColumn, AttrType, Slab};
+use crate::graph::ValuesRef;
 use crate::util::wire::{Dec, Enc};
 use anyhow::{bail, Context, Result};
+use std::sync::Arc;
 
 pub(crate) const TAG_RAW: u8 = 0;
 pub(crate) const TAG_I64_DOD: u8 = 1;
@@ -555,7 +567,7 @@ fn decode_value_stream(d: &mut Dec<'_>, ty: AttrType, n: usize) -> Result<Slab> 
 
 /// Encode a packed group's cells (`cells[t - t_lo][pos]`) as a v2
 /// attribute body. See the `gofs::slice` module docs for the layout table.
-pub(crate) fn encode_attr_body_v2(cells: &[Vec<Option<AttrColumn>>], ty: AttrType) -> Vec<u8> {
+pub fn encode_attr_body_v2(cells: &[Vec<Option<AttrColumn>>], ty: AttrType) -> Vec<u8> {
     let n_ts = cells.len();
     let n_pos = if n_ts == 0 { 0 } else { cells[0].len() };
     let blocks: Vec<Vec<u8>> =
@@ -611,14 +623,17 @@ fn encode_pos_block(cells: &[Vec<Option<AttrColumn>>], pos: usize, ty: AttrType)
         }
     }
     // One typed value stream for the whole block, in timestep order.
+    // `value_rows` covers exactly the cell's own rows, so re-encoding
+    // shared-backing views (e.g. cells replayed out of a decoded group)
+    // never leaks sibling cells' values.
     match ty {
         AttrType::Float => {
             let mut xs: Vec<f64> = Vec::new();
             for (t, &p) in present.iter().enumerate() {
                 if p {
-                    match cells[t][pos].as_ref().expect("present cell").parts().2 {
-                        Slab::Float(v) => xs.extend_from_slice(v),
-                        other => panic!("Float column with {:?} slab", other.ty()),
+                    match cells[t][pos].as_ref().expect("present cell").value_rows() {
+                        ValuesRef::Floats(v) => xs.extend_from_slice(v),
+                        other => panic!("Float column with {other:?} values"),
                     }
                 }
             }
@@ -628,9 +643,9 @@ fn encode_pos_block(cells: &[Vec<Option<AttrColumn>>], pos: usize, ty: AttrType)
             let mut xs: Vec<i64> = Vec::new();
             for (t, &p) in present.iter().enumerate() {
                 if p {
-                    match cells[t][pos].as_ref().expect("present cell").parts().2 {
-                        Slab::Int(v) => xs.extend_from_slice(v),
-                        other => panic!("Int column with {:?} slab", other.ty()),
+                    match cells[t][pos].as_ref().expect("present cell").value_rows() {
+                        ValuesRef::Ints(v) => xs.extend_from_slice(v),
+                        other => panic!("Int column with {other:?} values"),
                     }
                 }
             }
@@ -640,9 +655,9 @@ fn encode_pos_block(cells: &[Vec<Option<AttrColumn>>], pos: usize, ty: AttrType)
             let mut xs: Vec<bool> = Vec::new();
             for (t, &p) in present.iter().enumerate() {
                 if p {
-                    match cells[t][pos].as_ref().expect("present cell").parts().2 {
-                        Slab::Bool(v) => xs.extend_from_slice(v),
-                        other => panic!("Bool column with {:?} slab", other.ty()),
+                    match cells[t][pos].as_ref().expect("present cell").value_rows() {
+                        ValuesRef::Bools(v) => xs.extend_from_slice(v),
+                        other => panic!("Bool column with {other:?} values"),
                     }
                 }
             }
@@ -652,9 +667,9 @@ fn encode_pos_block(cells: &[Vec<Option<AttrColumn>>], pos: usize, ty: AttrType)
             let mut xs: Vec<String> = Vec::new();
             for (t, &p) in present.iter().enumerate() {
                 if p {
-                    match cells[t][pos].as_ref().expect("present cell").parts().2 {
-                        Slab::Str(v) => xs.extend_from_slice(v),
-                        other => panic!("Str column with {:?} slab", other.ty()),
+                    match cells[t][pos].as_ref().expect("present cell").value_rows() {
+                        ValuesRef::Strs(v) => xs.extend_from_slice(v),
+                        other => panic!("Str column with {other:?} values"),
                     }
                 }
             }
@@ -666,7 +681,7 @@ fn encode_pos_block(cells: &[Vec<Option<AttrColumn>>], pos: usize, ty: AttrType)
 
 /// Parse a v2 body's header: `(n_ts, n_pos, per-pos byte ranges)`. Blocks
 /// are decoded lazily, one position at a time, via [`decode_pos_block`].
-pub(crate) fn parse_v2_layout(body: &[u8]) -> Result<(usize, usize, Vec<(usize, usize)>)> {
+pub fn parse_v2_layout(body: &[u8]) -> Result<(usize, usize, Vec<(usize, usize)>)> {
     let mut d = Dec::new(body);
     let n_ts = d.varint()? as usize;
     let n_pos = d.varint()? as usize;
@@ -691,10 +706,36 @@ pub(crate) fn parse_v2_layout(body: &[u8]) -> Result<(usize, usize, Vec<(usize, 
 
 /// Decode one position's block into its per-timestep columns (`None` for
 /// timesteps with no values). An empty block means "never present".
-pub(crate) fn decode_pos_block(
+///
+/// Zero-copy: the block's value stream decodes into ONE `Arc`-shared
+/// typed slab, and every returned cell is an offset view into it —
+/// nothing is copied per cell.
+pub fn decode_pos_block(
     block: &[u8],
     ty: AttrType,
     n_ts: usize,
+) -> Result<Vec<Option<AttrColumn>>> {
+    decode_pos_block_inner(block, ty, n_ts, true)
+}
+
+/// The pre-zero-copy reference split: identical parse, but every cell's
+/// values are copied into their own freshly allocated slab (one
+/// `sub_slab` memcpy per cell). Kept so the `perf_hotpath` probe and the
+/// aliasing property tests can compare both paths on identical bytes;
+/// the store never calls this.
+pub fn decode_pos_block_copied(
+    block: &[u8],
+    ty: AttrType,
+    n_ts: usize,
+) -> Result<Vec<Option<AttrColumn>>> {
+    decode_pos_block_inner(block, ty, n_ts, false)
+}
+
+fn decode_pos_block_inner(
+    block: &[u8],
+    ty: AttrType,
+    n_ts: usize,
+    share: bool,
 ) -> Result<Vec<Option<AttrColumn>>> {
     if block.is_empty() {
         return Ok(vec![None; n_ts]);
@@ -741,22 +782,31 @@ pub(crate) fn decode_pos_block(
     if slab.len() != total_vals {
         bail!("v2 slice: value stream produced {} of {total_vals} values", slab.len());
     }
+    let slab = Arc::new(slab);
     let mut out = Vec::with_capacity(n_ts);
-    let mut base = 0usize;
+    let mut base = 0u32;
     for s in structs {
         match s {
             None => out.push(None),
             Some(cs) => {
-                let vals = slab.sub_slab(base, base + cs.n_vals);
-                base += cs.n_vals;
+                // Absolute row offsets into the shared slab.
                 let mut off = Vec::with_capacity(cs.idx.len() + 1);
-                off.push(0u32);
-                let mut acc = 0u32;
+                off.push(base);
+                let mut acc = base;
                 for &c in &cs.counts {
                     acc += c;
                     off.push(acc);
                 }
-                out.push(Some(AttrColumn::from_parts(cs.idx, off, vals)));
+                let col = if share {
+                    AttrColumn::from_shared_parts(cs.idx, off, Arc::clone(&slab))
+                } else {
+                    // Reference path: rebase to 0 and copy the rows out.
+                    let rebased: Vec<u32> = off.iter().map(|&o| o - base).collect();
+                    let owned = slab.sub_slab(base as usize, (base as usize) + cs.n_vals);
+                    AttrColumn::from_parts(cs.idx, rebased, owned)
+                };
+                base = acc;
+                out.push(Some(col));
             }
         }
     }
@@ -1048,6 +1098,51 @@ mod tests {
                                 want.is_some(),
                                 got.is_some()
                             ),
+                        }
+                    }
+                }
+            });
+        }
+    }
+
+    /// Tentpole: the zero-copy split must (a) return cells value-equal to
+    /// the copying reference split on identical bytes, (b) actually share
+    /// ONE slab across all of a block's cells, and (c) hold the block's
+    /// exact value total so views cover the slab end to end.
+    #[test]
+    fn shared_and_copied_pos_block_decodes_agree() {
+        for ty in [AttrType::Bool, AttrType::Int, AttrType::Float, AttrType::Str] {
+            forall(30, move |g| {
+                let n_ts = g.usize(1..6);
+                let n_pos = g.usize(1..4);
+                let cells: Vec<Vec<Option<AttrColumn>>> = (0..n_ts)
+                    .map(|_| {
+                        (0..n_pos)
+                            .map(|_| g.bool(0.7).then(|| arb_cell(g, ty, 64)))
+                            .collect()
+                    })
+                    .collect();
+                let body = encode_attr_body_v2(&cells, ty);
+                let (_, _, ranges) = parse_v2_layout(&body).unwrap();
+                for &(lo, hi) in &ranges {
+                    let shared = decode_pos_block(&body[lo..hi], ty, n_ts).unwrap();
+                    let copied = decode_pos_block_copied(&body[lo..hi], ty, n_ts).unwrap();
+                    assert_eq!(shared, copied);
+                    let present: Vec<&AttrColumn> = shared.iter().flatten().collect();
+                    if let Some(first) = present.first() {
+                        let n_vals: usize = present.iter().map(|c| c.n_values()).sum();
+                        assert_eq!(first.backing().len(), n_vals, "slab != sum of views");
+                        for c in &present {
+                            assert!(
+                                Arc::ptr_eq(c.backing(), first.backing()),
+                                "cells of one block must share one slab"
+                            );
+                        }
+                        // The copying path allocates per cell instead.
+                        let cfirst = copied.iter().flatten().next().unwrap();
+                        if present.len() > 1 {
+                            let csecond = copied.iter().flatten().nth(1).unwrap();
+                            assert!(!Arc::ptr_eq(cfirst.backing(), csecond.backing()));
                         }
                     }
                 }

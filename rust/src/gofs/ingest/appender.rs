@@ -29,15 +29,31 @@ pub struct IngestOptions {
     /// dispatch on the per-slice version byte, so mixing with a v1
     /// history is fine.
     pub slice_version: u8,
-    /// fsync the WAL after every append (default). Turning this off
+    /// fsync the WAL after appends (default). Turning this off
     /// trades the crash guarantee of the unsynced suffix for append
     /// throughput; replay still never yields corrupt instances.
     pub sync: bool,
+    /// Group commit: fsync once per this many appends instead of after
+    /// every one (1 = the per-append default). A crash may lose up to
+    /// `group_commit - 1` of the newest timesteps (never corrupt older
+    /// ones — the WAL replay drops the torn/unsynced suffix as usual);
+    /// seals and `finish` always flush durably regardless. Only
+    /// meaningful while `sync` is on.
+    pub group_commit: usize,
 }
 
 impl Default for IngestOptions {
     fn default() -> Self {
-        IngestOptions { compress: true, slice_version: VERSION_V2, sync: true }
+        IngestOptions { compress: true, slice_version: VERSION_V2, sync: true, group_commit: 1 }
+    }
+}
+
+impl IngestOptions {
+    /// fsync once per `k` appends (clamped to at least 1); see the
+    /// `group_commit` field for the durability trade.
+    pub fn group_commit(mut self, k: usize) -> Self {
+        self.group_commit = k.max(1);
+        self
     }
 }
 
@@ -50,6 +66,14 @@ pub struct IngestStats {
     pub sealed_groups: u64,
     /// WAL bytes written by this handle.
     pub wal_bytes: u64,
+    /// Per-partition WAL fsyncs issued by appends/flushes (group commit
+    /// shrinks this relative to `appended * n_parts`).
+    pub wal_syncs: u64,
+    /// Appends that blocked on the follow-mode flow gate (backpressure
+    /// probe; see `gofs::ingest::FlowGate`).
+    pub backpressure_blocks: u64,
+    /// Wall time spent blocked on the flow gate.
+    pub backpressure_wall_s: f64,
     /// Wall time inside `append`, excluding seals.
     pub append_wall_s: f64,
     /// Wall time inside seals (encode + write + fsync + publish).
@@ -75,6 +99,13 @@ pub struct CollectionAppender {
     parts: Vec<PartIngest>,
     opts: IngestOptions,
     stats: IngestStats,
+    /// Appends since the last WAL fsync (group commit bookkeeping;
+    /// always 0 when `group_commit == 1` or `sync` is off).
+    unsynced_appends: usize,
+    /// Follow-mode backpressure gate, when attached; `append` blocks
+    /// while the consuming run's published lag exceeds the high-water
+    /// mark. See `gofs::ingest::FlowGate`.
+    gate: Option<std::sync::Arc<crate::gofs::ingest::FlowGate>>,
     /// Set when an append or seal failed part-way through its
     /// partition fan-out: the in-memory state may disagree with disk
     /// and across partitions, so further appends are refused. Reopening
@@ -120,7 +151,7 @@ impl CollectionAppender {
                     );
                 }
             }
-            let wal = WalWriter::open(&wal_path, valid_len, opts.sync)?;
+            let wal = WalWriter::open(&wal_path, valid_len)?;
             parts.push(PartIngest { dir, shared, meta, wal, tail });
         }
         let pack = parts.first().map(|p| p.meta.pack).unwrap_or(0);
@@ -136,6 +167,8 @@ impl CollectionAppender {
             parts,
             opts,
             stats: IngestStats::default(),
+            unsynced_appends: 0,
+            gate: None,
             poisoned: false,
         };
         app.catch_up()?;
@@ -221,6 +254,27 @@ impl CollectionAppender {
         self.stats
     }
 
+    /// Attach a follow-mode backpressure gate: every subsequent `append`
+    /// first waits for the consuming run's published lag to drop below
+    /// the gate's high-water mark (see `GopherEngine::flow_gate`).
+    pub fn attach_gate(&mut self, gate: std::sync::Arc<crate::gofs::ingest::FlowGate>) {
+        self.gate = Some(gate);
+    }
+
+    /// fsync every partition's WAL now (group-commit flush point).
+    /// No-op when nothing is pending.
+    pub fn flush(&mut self) -> Result<()> {
+        if self.unsynced_appends == 0 {
+            return Ok(());
+        }
+        for part in self.parts.iter_mut() {
+            part.wal.sync()?;
+            self.stats.wal_syncs += 1;
+        }
+        self.unsynced_appends = 0;
+        Ok(())
+    }
+
     /// Append one instance as the next timestep: project it onto every
     /// partition, WAL it durably, and — once `pack` timesteps are open —
     /// seal them into a slice group and publish. Returns the timestep the
@@ -237,6 +291,15 @@ impl CollectionAppender {
                 "appender poisoned by an earlier mid-fan-out failure; \
                  reopen the collection to reconcile from the WALs"
             );
+        }
+        // Backpressure: hold here (outside any disk work) while the
+        // consuming follow run lags past the gate's high-water mark.
+        if let Some(gate) = self.gate.clone() {
+            let b0 = Instant::now();
+            if gate.wait_below_hwm() {
+                self.stats.backpressure_blocks += 1;
+                self.stats.backpressure_wall_s += b0.elapsed().as_secs_f64();
+            }
         }
         let t0 = Instant::now();
         let t = self.n_instances();
@@ -257,12 +320,24 @@ impl CollectionAppender {
     }
 
     fn fan_out(&mut self, gi: &GraphInstance, t: Timestep) -> Result<()> {
+        // Group commit: fsync only every `group_commit`-th append; the
+        // in-between appends stay buffered (a crash loses at most that
+        // unsynced suffix, replay-safe as ever).
+        let sync_now = self.opts.sync && self.unsynced_appends + 1 >= self.opts.group_commit;
         for part in self.parts.iter_mut() {
             let cells = project_instance(&part.shared, gi);
             let payload = wal::encode_record(t, gi.window, &cells, &part.shared);
-            self.stats.wal_bytes += part.wal.append(&payload)?;
+            self.stats.wal_bytes += part.wal.append(&payload, sync_now)?;
+            if sync_now {
+                self.stats.wal_syncs += 1;
+            }
             part.tail.push(WalRecord { timestep: t, window: gi.window, cells });
         }
+        // Track pending-fsync appends only while syncing is on at all:
+        // a no-sync appender must keep the counter at 0 so `flush` stays
+        // a no-op and `wal_syncs` keeps measuring group-commit cadence.
+        self.unsynced_appends =
+            if self.opts.sync && !sync_now { self.unsynced_appends + 1 } else { 0 };
         Ok(())
     }
 
@@ -291,6 +366,10 @@ impl CollectionAppender {
         for part in self.parts.iter_mut() {
             seal_part_group(part, group_len, &opts)?;
         }
+        // The seal's atomic WAL rewrite fsyncs the remaining tail, so
+        // every append up to here is now durable regardless of group
+        // commit (the seal is a flush point).
+        self.unsynced_appends = 0;
         write_collection_manifest(
             &self.root,
             self.parts.len(),

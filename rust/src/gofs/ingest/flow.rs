@@ -1,0 +1,154 @@
+//! Follow-mode backpressure: a flow gate between a live analytics run
+//! and a [`crate::gofs::ingest::CollectionAppender`] feeding it.
+//!
+//! The open WAL tail is served to readers fully decoded in memory
+//! ([`crate::gofs::Store`]), so when analytics falls behind ingest the
+//! not-yet-computed tail is pinned RAM that only grows with every
+//! append. The gate closes that loop: the engine's follow run publishes
+//! its *lag* — decoded bytes of appended-but-not-yet-computed tail
+//! timesteps, summed over hosts — after every timestep and refresh, and
+//! an appender with the gate attached blocks inside `append` while the
+//! published lag exceeds the high-water mark
+//! (`StoreOptions::tail_high_water_bytes`).
+//!
+//! The gate is advisory, in-process plumbing (the appender and the run
+//! share a process in every follow deployment this repo models); it
+//! carries a probe counter so benches and tests can assert the
+//! backpressure actually engaged. `close` (called by the engine when the
+//! run ends, success or error) releases blocked appenders permanently so
+//! a dead consumer can never wedge a producer.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+struct GateState {
+    /// Last published lag in decoded tail bytes.
+    lag_bytes: u64,
+    /// Set when the consuming run ended; waiters release immediately.
+    closed: bool,
+}
+
+/// Shared producer/consumer gate; see the module docs.
+pub struct FlowGate {
+    /// High-water mark on decoded tail bytes (0 = never block).
+    hwm_bytes: u64,
+    state: Mutex<GateState>,
+    cv: Condvar,
+    /// Times an appender actually blocked (the backpressure probe).
+    blocks: AtomicU64,
+}
+
+impl FlowGate {
+    pub fn new(hwm_bytes: u64) -> FlowGate {
+        FlowGate {
+            hwm_bytes,
+            state: Mutex::new(GateState { lag_bytes: 0, closed: false }),
+            cv: Condvar::new(),
+            blocks: AtomicU64::new(0),
+        }
+    }
+
+    /// Configured high-water mark (0 = the gate never blocks).
+    pub fn hwm_bytes(&self) -> u64 {
+        self.hwm_bytes
+    }
+
+    /// Consumer side: publish the current analytics lag in decoded tail
+    /// bytes; wakes any appender blocked past the high-water mark.
+    pub fn publish_lag(&self, bytes: u64) {
+        let mut s = self.state.lock().unwrap();
+        s.lag_bytes = bytes;
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Consumer side: the run is over — release every waiter for good.
+    pub fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Re-arm a closed gate: a new follow run took over as consumer, so
+    /// backpressure applies again (the engine calls this when a follow
+    /// run starts).
+    pub fn reopen(&self) {
+        self.state.lock().unwrap().closed = false;
+    }
+
+    /// Producer side: block while the published lag exceeds the
+    /// high-water mark (no-op for `hwm == 0` or a closed gate). Returns
+    /// whether the call actually blocked; each blocking call counts once
+    /// in [`FlowGate::blocks`]. The wait re-checks on a 50 ms tick as a
+    /// lost-wakeup guard; the engine closes the gate on every exit path
+    /// of a follow run (success or error), so a blocked appender always
+    /// releases when its consumer goes away.
+    pub fn wait_below_hwm(&self) -> bool {
+        if self.hwm_bytes == 0 {
+            return false;
+        }
+        let mut s = self.state.lock().unwrap();
+        if s.closed || s.lag_bytes <= self.hwm_bytes {
+            return false;
+        }
+        self.blocks.fetch_add(1, Ordering::Relaxed);
+        while !s.closed && s.lag_bytes > self.hwm_bytes {
+            let (guard, _timeout) =
+                self.cv.wait_timeout(s, Duration::from_millis(50)).unwrap();
+            s = guard;
+        }
+        true
+    }
+
+    /// How many `append` calls blocked on this gate so far.
+    pub fn blocks(&self) -> u64 {
+        self.blocks.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn gate_passes_under_hwm_and_blocks_over_it() {
+        let g = Arc::new(FlowGate::new(100));
+        assert!(!g.wait_below_hwm());
+        g.publish_lag(100);
+        assert!(!g.wait_below_hwm()); // at the mark: pass
+        g.publish_lag(101);
+        let g2 = g.clone();
+        let t = std::thread::spawn(move || g2.wait_below_hwm());
+        // Let the waiter block, then drain the lag.
+        while g.blocks() == 0 {
+            std::thread::yield_now();
+        }
+        g.publish_lag(40);
+        assert!(t.join().unwrap(), "waiter should report it blocked");
+        assert_eq!(g.blocks(), 1);
+    }
+
+    #[test]
+    fn disabled_and_closed_gates_never_block() {
+        let off = FlowGate::new(0);
+        off.publish_lag(u64::MAX);
+        assert!(!off.wait_below_hwm());
+        let g = Arc::new(FlowGate::new(10));
+        g.publish_lag(1_000);
+        g.close();
+        assert!(!g.wait_below_hwm(), "closed gate releases immediately");
+        // Close also releases an already-blocked waiter.
+        let g = Arc::new(FlowGate::new(10));
+        g.publish_lag(1_000);
+        let g2 = g.clone();
+        let t = std::thread::spawn(move || g2.wait_below_hwm());
+        while g.blocks() == 0 {
+            std::thread::yield_now();
+        }
+        g.close();
+        assert!(t.join().unwrap());
+    }
+}

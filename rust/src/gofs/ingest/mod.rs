@@ -32,7 +32,20 @@
 //! `gopher::RunOptions::follow` turns that into a continuous analytics
 //! loop over timesteps as they land.
 
+//! ### Durability knobs and backpressure
+//!
+//! By default every `append` fsyncs every partition's WAL (crash loses
+//! at most a torn trailing frame). [`IngestOptions::group_commit`]
+//! relaxes that to one fsync per `k` appends — seals and `finish` still
+//! flush everything durably — trading a bounded window of the most
+//! recent unsynced timesteps for append throughput. In the other
+//! direction, [`FlowGate`] (wired up by `GopherEngine::flow_gate` from
+//! `StoreOptions::tail_high_water_bytes`) blocks `append` when a live
+//! follow run lags ingest by too many decoded tail bytes.
+
 pub mod appender;
+pub mod flow;
 pub(crate) mod wal;
 
 pub use appender::{CollectionAppender, IngestOptions, IngestStats};
+pub use flow::FlowGate;

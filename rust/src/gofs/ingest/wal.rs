@@ -205,17 +205,15 @@ fn frame(payload: &[u8]) -> Vec<u8> {
 }
 
 /// Append-side handle: truncates the log to its valid prefix on open,
-/// then appends one fsynced frame per record.
+/// then appends framed records. Durability cadence (per-append fsync vs
+/// group commit) is the caller's call, per append.
 pub(crate) struct WalWriter {
     file: File,
     path: PathBuf,
-    /// fsync after every append (off only for throughput experiments —
-    /// a crash may then lose the unsynced suffix, never corrupt it).
-    sync: bool,
 }
 
 impl WalWriter {
-    pub fn open(path: &Path, valid_len: u64, sync: bool) -> Result<WalWriter> {
+    pub fn open(path: &Path, valid_len: u64) -> Result<WalWriter> {
         let file = OpenOptions::new()
             .read(true)
             .write(true)
@@ -225,21 +223,32 @@ impl WalWriter {
             .with_context(|| format!("opening WAL {}", path.display()))?;
         file.set_len(valid_len)
             .with_context(|| format!("truncating WAL {} to {valid_len}", path.display()))?;
-        let mut w = WalWriter { file, path: path.to_path_buf(), sync };
+        let mut w = WalWriter { file, path: path.to_path_buf() };
         w.file.seek(SeekFrom::End(0))?;
         Ok(w)
     }
 
     /// Frame and append one payload; returns the frame's on-disk bytes.
-    pub fn append(&mut self, payload: &[u8]) -> Result<u64> {
+    /// With `sync` off, the frame stays buffered until a later synced
+    /// append, [`WalWriter::sync`], or a seal's atomic rewrite — a crash
+    /// loses the unsynced suffix (replay truncates to the valid prefix),
+    /// never corrupts earlier records.
+    pub fn append(&mut self, payload: &[u8], sync: bool) -> Result<u64> {
         let buf = frame(payload);
         self.file
             .write_all(&buf)
             .with_context(|| format!("appending to WAL {}", self.path.display()))?;
-        if self.sync {
+        if sync {
             self.file.sync_data()?;
         }
         Ok(buf.len() as u64)
+    }
+
+    /// Flush every buffered append to disk (group-commit flush point).
+    pub fn sync(&mut self) -> Result<()> {
+        self.file
+            .sync_data()
+            .with_context(|| format!("fsyncing WAL {}", self.path.display()))
     }
 
     /// Atomically replace the log's contents with `payloads` (temp file +

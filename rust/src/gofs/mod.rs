@@ -22,7 +22,10 @@
 //!   BSP-start parallel load and the sequential-pattern prefetcher can
 //!   pull many slices concurrently — concurrent readers of distinct
 //!   slices never serialize, concurrent readers of the same slice decode
-//!   it once, and eviction is O(1).
+//!   it once, and eviction is O(1). Decoded v2 position blocks hold ONE
+//!   `Arc`-shared typed slab whose per-timestep cells are zero-copy
+//!   offset views; the cache weigher charges each shared slab once per
+//!   block (see the slab-sharing contract in `gofs::reader`).
 //!
 //! Layout on disk (one directory per partition/host):
 //! ```text
@@ -67,7 +70,7 @@
 //! identical sealed form.
 
 pub mod cache;
-pub(crate) mod colcodec;
+pub mod colcodec;
 pub mod disk;
 pub mod ingest;
 pub mod reader;
@@ -76,7 +79,7 @@ pub mod writer;
 
 pub use cache::SliceCache;
 pub use disk::DiskModel;
-pub use ingest::{CollectionAppender, IngestOptions, IngestStats};
+pub use ingest::{CollectionAppender, FlowGate, IngestOptions, IngestStats};
 pub use reader::{open_collection, Projection, ReadTrace, Store, StoreOptions, SubgraphInstance};
 pub use slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};
 pub use writer::{deploy, deploy_template, DeployConfig, DeployReport};

@@ -109,7 +109,16 @@ impl ReadTrace {
 /// all-or-nothing). v2 bodies keep the raw body and decode **lazily per
 /// position column**, so projection and cache hits never pay for cells no
 /// subgraph in this run touches; each position decodes at most once
-/// (`OnceLock`) and its cells are shared via `Arc` as before.
+/// (`OnceLock`).
+///
+/// Slab-sharing contract (zero-copy cells): a decoded v2 position block
+/// holds ONE `Arc`-shared typed slab with the block's whole value
+/// stream, and each per-timestep cell is an offset view into it
+/// (`AttrColumn::from_shared_parts`) — no per-cell copy. Cells handed to
+/// applications keep the slab alive past cache eviction exactly like
+/// before (the `Arc<AttrColumn>` holds the `Arc<Slab>`), and the cache
+/// weigher charges the shared slab once per block (`block_bytes`), not
+/// once per cell.
 struct DecodedAttrSlice {
     t_lo: Timestep,
     n_ts: usize,
@@ -190,9 +199,22 @@ impl DecodedAttrSlice {
     }
 }
 
-/// Decoded footprint of one position block's cells.
+/// Decoded footprint of one position block's cells. Cells of a lazily
+/// decoded v2 block are offset views into ONE `Arc`-shared slab, so the
+/// backing is charged once per distinct slab (pointer identity), not once
+/// per cell — the weigher must not multiply-count shared bytes.
 fn block_bytes(cols: &[Option<Arc<AttrColumn>>]) -> u64 {
-    (cols.len() * 16 + cols.iter().flatten().map(|c| c.mem_bytes()).sum::<usize>()) as u64
+    let mut total = cols.len() * 16;
+    let mut seen: Vec<*const ()> = Vec::new();
+    for c in cols.iter().flatten() {
+        total += c.view_mem_bytes();
+        let p = Arc::as_ptr(c.backing()) as *const ();
+        if !seen.contains(&p) {
+            seen.push(p);
+            total += c.backing().mem_bytes();
+        }
+    }
+    total as u64
 }
 
 /// Template-derived shared state for a partition.
@@ -316,6 +338,13 @@ pub struct StoreOptions {
     /// Bounds memory when ingest and analytics share a host; see
     /// `SliceCache::with_weigher_and_budget`.
     pub cache_bytes: u64,
+    /// Follow-mode backpressure high-water mark on *decoded WAL tail*
+    /// bytes (0 = unbounded). When analytics lags a live
+    /// `gofs::ingest` appender by more than this many not-yet-computed
+    /// tail bytes, the engine's flow gate holds the appender's
+    /// `append` until the run catches up — closing the unbounded-tail
+    /// loop. See `GopherEngine::flow_gate`.
+    pub tail_high_water_bytes: u64,
     pub disk: DiskModel,
     pub metrics: Arc<Metrics>,
 }
@@ -325,6 +354,7 @@ impl Default for StoreOptions {
         StoreOptions {
             cache_slots: 14,
             cache_bytes: 0,
+            tail_high_water_bytes: 0,
             disk: DiskModel::default(),
             metrics: Arc::new(Metrics::new()),
         }
@@ -472,6 +502,36 @@ impl Store {
     /// Timesteps served from the in-memory WAL tail.
     pub fn tail_instances(&self) -> usize {
         self.index.read().unwrap().tail.instances.len()
+    }
+
+    /// Decoded bytes of tail timesteps at or after `from` — the
+    /// follow-mode backpressure lag signal (appended but not yet
+    /// computed). Sealed timesteps never count: they live on disk behind
+    /// the byte-budgeted cache, not pinned in the tail.
+    pub fn tail_bytes_from(&self, from: Timestep) -> u64 {
+        let index = self.index.read().unwrap();
+        let base = index.tail.base;
+        index
+            .tail
+            .instances
+            .iter()
+            .enumerate()
+            .filter(|(k, _)| base + k >= from)
+            .map(|(_, ti)| {
+                ti.cells
+                    .iter()
+                    .flat_map(|per_bin| per_bin.iter())
+                    .flat_map(|per_pos| per_pos.iter())
+                    .flatten()
+                    .map(|c| c.mem_bytes() as u64)
+                    .sum::<u64>()
+            })
+            .sum()
+    }
+
+    /// Configured follow-mode tail high-water mark (0 = unbounded).
+    pub fn tail_high_water_bytes(&self) -> u64 {
+        self.opts.tail_high_water_bytes
     }
 
     pub fn window(&self, t: Timestep) -> TimeWindow {
@@ -918,6 +978,42 @@ mod tests {
             metrics: Arc::new(Metrics::new()),
             ..Default::default()
         }
+    }
+
+    /// Tentpole: the weigher charges a slab shared by several cells once
+    /// (pointer-dedup), while per-cell `mem_bytes` would multiply-count
+    /// it; distinct backings still count individually.
+    #[test]
+    fn block_bytes_charges_shared_slabs_once() {
+        use crate::graph::attributes::Slab;
+        let slab = Arc::new(Slab::Float(vec![1.0; 100]));
+        let a = AttrColumn::from_shared_parts(vec![0], vec![0, 50], slab.clone());
+        let b = AttrColumn::from_shared_parts(vec![0, 1], vec![50, 75, 100], slab.clone());
+        let shared_cols = vec![Some(Arc::new(a.clone())), None, Some(Arc::new(b.clone()))];
+        let got = block_bytes(&shared_cols);
+        let want =
+            (3 * 16 + a.view_mem_bytes() + b.view_mem_bytes() + slab.mem_bytes()) as u64;
+        assert_eq!(got, want);
+        // The naive per-cell sum counts the 800-byte slab twice.
+        let naive = (3 * 16 + a.mem_bytes() + b.mem_bytes()) as u64;
+        assert_eq!(naive - got, slab.mem_bytes() as u64);
+        // Cells with their own backings are charged individually.
+        let owned = vec![
+            Some(Arc::new(AttrColumn::from_parts(
+                vec![0],
+                vec![0, 10],
+                Slab::Float(vec![2.0; 10]),
+            ))),
+            Some(Arc::new(AttrColumn::from_parts(
+                vec![0],
+                vec![0, 10],
+                Slab::Float(vec![3.0; 10]),
+            ))),
+        ];
+        let got = block_bytes(&owned);
+        let want = (2 * 16
+            + owned.iter().flatten().map(|c| c.mem_bytes()).sum::<usize>()) as u64;
+        assert_eq!(got, want);
     }
 
     /// Regression: asking a decoded slice for a timestep before its packed

@@ -53,6 +53,12 @@
 //! picks the smallest candidate per column and falls back to raw when no
 //! codec wins. v1 slices remain fully readable; the reader dispatches on
 //! the header version.
+//!
+//! Decode side: a position block's value stream decodes into ONE
+//! `Arc`-shared typed slab; the per-timestep cells are offset views into
+//! it, so splitting a packed group costs no per-cell copy (see
+//! `gofs::colcodec::decode_pos_block` and the slab-sharing contract in
+//! `gofs::reader`).
 
 use anyhow::{bail, Context, Result};
 use flate2::read::DeflateDecoder;

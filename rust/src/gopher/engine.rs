@@ -62,27 +62,71 @@
 //! Cross-timestep messages flow exactly as in a batch sequential run;
 //! `ctx.n_timesteps` reports `usize::MAX` since the series is unbounded.
 //!
-//! ### Message routing
+//! ### Message routing (overlapped with compute)
 //!
-//! At each superstep barrier the driver drains every subgraph's outbox,
-//! groups messages per destination subgraph, and delivers each group with
-//! one bulk `extend` (the pre-pipelining engine locked the destination
-//! once per message). Destination *hosts* are resolved through the
-//! engine's directory — `SubgraphId::partition()` encodes the partition
-//! id, which is not necessarily the host index a store was opened under —
-//! so the network model always charges the true (src host, dst host)
-//! pair, and an unknown destination is a clean error.
+//! Routing is two-phase. **Staging** ([`stage_outbox`]) groups one
+//! subgraph's outbox per destination subgraph and pushes the groups —
+//! tagged with the source's item index — into per-destination shards;
+//! with [`RunOptions::overlap_routing`] (default) each compute worker
+//! stages its subgraph the moment that subgraph's `compute` returns, so
+//! early finishers' messages route while stragglers still compute (the
+//! same overlap idea as the instance prefetcher, one level down). The
+//! **barrier** then folds the per-item audits in item order, sorts each
+//! destination's chunks by source index, and delivers each group with
+//! one bulk `extend`.
+//!
+//! Determinism contract: delivery order per destination is (source item
+//! index, send order within that source) — exactly the order a
+//! single-threaded in-item-order drain produces — and error precedence,
+//! next-timestep carry order, merge order, message counts and network
+//! charges are folded in item order, so every observable (stats and app
+//! outputs) is bit-identical whether routing overlaps or not.
+//! `overlap_routing: false` runs the SAME staging machinery, just
+//! entirely at the barrier on one thread — so the on/off comparison
+//! isolates the scheduling change (where staging runs), not an
+//! implementation difference; the determinism suite and the
+//! `perf_hotpath` probe assert output equality.
+//!
+//! Destination *hosts* are resolved through the engine's directory —
+//! `SubgraphId::partition()` encodes the partition id, which is not
+//! necessarily the host index a store was opened under — so the network
+//! model always charges the true (src host, dst host) pair, and an
+//! unknown destination is a clean error.
+//!
+//! ### Temporal-pool prefetch (Independent / EventuallyDependent)
+//!
+//! Under temporal concurrency each pool worker used to load its own
+//! timestep serially before computing it. With [`RunOptions::prefetch`]
+//! (default) a shared prefetch queue decouples the two: dedicated
+//! loader threads pull upcoming timesteps into a bounded ready set that
+//! compute workers consume in claim order, so one timestep's load
+//! overlaps other timesteps' compute across the whole pool. The bound
+//! reuses the depth-k ring's cache-pressure cap (`prefetch_cap`) on top
+//! of the pool width, so prefetch never thrashes the slice caches.
+//! Per-timestep stats report the overlap exactly as the sequential
+//! prefetcher does: `overlap_s` is the part of the load hidden under
+//! the pool's compute.
+//!
+//! ### Follow-mode backpressure (`gofs::ingest::FlowGate`)
+//!
+//! A follow run publishes its lag — decoded bytes of
+//! appended-but-not-yet-computed WAL-tail timesteps, summed over hosts —
+//! through [`GopherEngine::flow_gate`] after every loop turn, and closes
+//! the gate on every exit path. An appender with the gate attached
+//! blocks in `append` while the lag exceeds
+//! `StoreOptions::tail_high_water_bytes`, closing the unbounded-tail
+//! loop.
 
 use crate::cluster::{ClusterSpec, NetworkClock};
-use crate::gofs::{Projection, ReadTrace, Store, SubgraphInstance};
+use crate::gofs::{FlowGate, Projection, ReadTrace, Store, SubgraphInstance};
 use crate::graph::{SubgraphId, Timestep};
 use crate::gopher::{Application, ComputeCtx, Outbox, Pattern, Payload, SubgraphProgram};
 use crate::metrics::{keys, Metrics};
 use crate::partition::Subgraph;
 use anyhow::{anyhow, bail, Result};
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
 /// Per-run options.
@@ -99,13 +143,20 @@ pub struct RunOptions {
     /// Concurrent timesteps for the independent/eventually-dependent
     /// patterns ("temporal concurrency", §IV-B).
     pub temporal_workers: usize,
-    /// Load upcoming timesteps' instances while the current one computes
-    /// (sequential pattern; see the module docs). Results are identical
-    /// with or without prefetching — only the wall-clock split changes.
+    /// Load upcoming timesteps' instances while others compute: the
+    /// sequential pattern's depth-k ring, and the temporal pool's shared
+    /// prefetch queue (see the module docs). Results are identical with
+    /// or without prefetching — only the wall-clock split changes.
     pub prefetch: bool,
     /// Requested prefetch ring depth `k` (effective depth is additionally
     /// capped by cache pressure; 1 restores the old double buffer).
     pub prefetch_depth: usize,
+    /// Stage each subgraph's outbox as soon as its compute finishes
+    /// instead of staging every outbox single-threaded at the barrier.
+    /// Observables are bit-identical either way (see the module docs);
+    /// `false` runs the *same* staging machinery entirely barrier-side,
+    /// isolating the scheduling difference for comparison.
+    pub overlap_routing: bool,
     /// Keep running past the collection's current end, polling
     /// [`GopherEngine::refresh`] for timesteps a `gofs::ingest` appender
     /// publishes while the run is live. Sequential pattern only.
@@ -126,6 +177,7 @@ impl Default for RunOptions {
             temporal_workers: 4,
             prefetch: true,
             prefetch_depth: 2,
+            overlap_routing: true,
             follow: false,
             follow_poll_ms: 25,
             follow_idle_polls: 40,
@@ -144,10 +196,20 @@ pub struct TimestepStats {
     /// Total wall time the instance load took (including any part that
     /// ran concurrently with the previous timestep's compute).
     pub load_wall_s: f64,
-    /// Portion of `load_wall_s` hidden under the previous timestep's
-    /// compute by the prefetcher (0 when prefetching is off or for the
-    /// first timestep).
+    /// Portion of `load_wall_s` hidden under compute by a prefetcher (0
+    /// when prefetching is off or for the first timestep): the previous
+    /// timestep's compute for the sequential ring, the pool's concurrent
+    /// timesteps for the temporal prefetch queue.
     pub overlap_s: f64,
+    /// Barrier-side message routing wall time summed over this
+    /// timestep's supersteps — the part of routing that could NOT be
+    /// hidden under compute.
+    pub route_s: f64,
+    /// Routing (staging) wall time that ran while another worker was
+    /// inside `compute` (a sampled lower bound). 0 when
+    /// `overlap_routing` is off, with a single worker, or when staging
+    /// only drained after the last compute finished.
+    pub route_overlap_s: f64,
     pub slices_read: u64,
     pub slice_bytes: u64,
     pub cache_hits: u64,
@@ -203,6 +265,189 @@ struct LoadedTimestep {
     load_wall_s: f64,
 }
 
+/// One destination's staging shard: message chunks tagged with their
+/// source item index, pushed by whoever stages (compute workers under
+/// overlapped routing, the barrier otherwise) and drained sorted by tag.
+type RouteShard = Mutex<Vec<(u32, Vec<Payload>)>>;
+
+/// Per-item routing audit produced by [`stage_outbox`]. The barrier
+/// folds these in item order, so counts, carry order, merge order and
+/// error precedence are identical whether staging ran overlapped (from
+/// compute workers) or sequentially (at the barrier).
+struct StagedAux {
+    halted: bool,
+    /// First pattern violation this outbox recorded.
+    error: Option<String>,
+    /// First destination the directory could not resolve.
+    unknown_dest: Option<SubgraphId>,
+    any_inflight: bool,
+    msgs_local: u64,
+    msgs_remote: u64,
+    bytes_remote: u64,
+    /// (src host, dst host) -> (msgs, bytes) for the network model.
+    batches: Vec<((usize, usize), (u64, u64))>,
+    next: Vec<(SubgraphId, Payload)>,
+    merge: Vec<Payload>,
+}
+
+/// Route one subgraph's outbox: resolve each destination through the
+/// directory, group messages per destination preserving send order, and
+/// push each group — tagged with the source's item index — into that
+/// destination's staging shard. Runs either from a compute worker the
+/// moment its subgraph finishes (overlapped routing) or single-threaded
+/// at the barrier; the tag makes delivery order independent of which.
+fn stage_outbox(
+    src_item: usize,
+    src_host: usize,
+    halted: bool,
+    outbox: Outbox,
+    index_of: &HashMap<SubgraphId, (usize, usize)>,
+    shards: &[RouteShard],
+) -> StagedAux {
+    let Outbox { superstep, next_timestep, merge, error } = outbox;
+    let mut aux = StagedAux {
+        halted,
+        error,
+        unknown_dest: None,
+        any_inflight: false,
+        msgs_local: 0,
+        msgs_remote: 0,
+        bytes_remote: 0,
+        batches: Vec::new(),
+        next: next_timestep,
+        merge,
+    };
+    // Group per destination, preserving this source's send order: O(1)
+    // per message via a target-keyed map (a wide fan-out would make a
+    // linear destination scan quadratic in the routing hot path). The
+    // map's iteration order when pushing chunks below is irrelevant —
+    // each (source, target) produces exactly one chunk, and delivery
+    // sorts chunks by source. Host-pair batches stay a linear scan
+    // (host counts are tiny).
+    let mut per_target: HashMap<usize, Vec<Payload>> = HashMap::new();
+    for (to, payload) in superstep {
+        // The destination HOST comes from the engine's view of where the
+        // subgraph actually lives, never from `to.partition()` — see the
+        // module docs.
+        let Some(&(target, dst_host)) = index_of.get(&to) else {
+            aux.unknown_dest = Some(to);
+            break; // the barrier fails the run; no point routing on
+        };
+        if dst_host == src_host {
+            aux.msgs_local += 1;
+        } else {
+            aux.msgs_remote += 1;
+            aux.bytes_remote += payload.len() as u64;
+            match aux.batches.iter_mut().find(|(p, _)| *p == (src_host, dst_host)) {
+                Some((_, b)) => {
+                    b.0 += 1;
+                    b.1 += payload.len() as u64;
+                }
+                None => aux.batches.push(((src_host, dst_host), (1, payload.len() as u64))),
+            }
+        }
+        per_target.entry(target).or_default().push(payload);
+        aux.any_inflight = true;
+    }
+    for (target, msgs) in per_target {
+        shards[target].lock().unwrap().push((src_item as u32, msgs));
+    }
+    aux
+}
+
+/// Shared prefetch queue between the temporal pool's loader threads and
+/// its compute workers: loaders `admit` (bounded in-flight), load, then
+/// `publish`; compute workers `take` their claim-order timestep. `abort`
+/// releases everyone after an error.
+struct PoolQueue {
+    state: Mutex<PoolState>,
+    /// Signaled when a load is published (or the queue aborts).
+    ready_cv: Condvar,
+    /// Signaled when a loaded timestep is taken (or the queue aborts).
+    space_cv: Condvar,
+}
+
+struct PoolState {
+    /// Completed loads keyed by timestep-queue index, awaiting compute.
+    ready: HashMap<usize, Result<LoadedTimestep>>,
+    /// Indices claimed by a loader and not yet taken by a computer.
+    inflight: usize,
+    abort: bool,
+}
+
+impl PoolQueue {
+    fn new() -> PoolQueue {
+        PoolQueue {
+            state: Mutex::new(PoolState { ready: HashMap::new(), inflight: 0, abort: false }),
+            ready_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+        }
+    }
+
+    /// Claim an in-flight slot, waiting while `cap` are already in
+    /// flight. Returns false if the queue aborted instead.
+    fn admit(&self, cap: usize) -> bool {
+        let mut s = self.state.lock().unwrap();
+        while !s.abort && s.inflight >= cap.max(1) {
+            s = self.space_cv.wait(s).unwrap();
+        }
+        if s.abort {
+            return false;
+        }
+        s.inflight += 1;
+        true
+    }
+
+    /// Give back an admitted slot that will never publish (the loader
+    /// found the queue drained).
+    fn withdraw(&self) {
+        self.state.lock().unwrap().inflight -= 1;
+        self.space_cv.notify_all();
+    }
+
+    fn publish(&self, i: usize, r: Result<LoadedTimestep>) {
+        self.state.lock().unwrap().ready.insert(i, r);
+        self.ready_cv.notify_all();
+    }
+
+    /// Block until index `i` is loaded and take it; None if aborted.
+    fn take(&self, i: usize) -> Option<Result<LoadedTimestep>> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.abort {
+                return None;
+            }
+            if let Some(r) = s.ready.remove(&i) {
+                s.inflight -= 1;
+                drop(s);
+                self.space_cv.notify_all();
+                return Some(r);
+            }
+            s = self.ready_cv.wait(s).unwrap();
+        }
+    }
+
+    fn abort(&self) {
+        self.state.lock().unwrap().abort = true;
+        self.ready_cv.notify_all();
+        self.space_cv.notify_all();
+    }
+}
+
+/// Scope guard for pool threads: a loader or computer that panics must
+/// abort the queue on its way out, or its peers would block forever on
+/// a publish/take that never comes (and `thread::scope` would then wait
+/// forever instead of propagating the panic).
+struct PoolAbortOnPanic<'a>(&'a PoolQueue);
+
+impl Drop for PoolAbortOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.abort();
+        }
+    }
+}
+
 /// The distributed Gopher runtime over one deployed collection.
 pub struct GopherEngine {
     stores: Vec<Arc<Store>>,
@@ -210,6 +455,9 @@ pub struct GopherEngine {
     metrics: Arc<Metrics>,
     /// sgid -> (host, subgraph local index)
     directory: HashMap<SubgraphId, (usize, usize)>,
+    /// Follow-mode backpressure gate, created lazily (see
+    /// [`GopherEngine::flow_gate`]).
+    flow_gate: OnceLock<Arc<FlowGate>>,
 }
 
 impl GopherEngine {
@@ -221,7 +469,30 @@ impl GopherEngine {
                 directory.insert(sg.id, (h, sg.id.local()));
             }
         }
-        GopherEngine { stores, spec, metrics, directory }
+        GopherEngine { stores, spec, metrics, directory, flow_gate: OnceLock::new() }
+    }
+
+    /// The follow-mode backpressure gate for this engine's collection,
+    /// created on first call with the strictest (smallest non-zero)
+    /// `StoreOptions::tail_high_water_bytes` across hosts. Attach it to
+    /// the `CollectionAppender` feeding the collection
+    /// (`CollectionAppender::attach_gate`); a follow run publishes its
+    /// lag through it after every loop turn and closes it on exit, so
+    /// an attached appender blocks while analytics lags past the mark
+    /// and always releases when the run ends.
+    pub fn flow_gate(&self) -> Arc<FlowGate> {
+        self.flow_gate
+            .get_or_init(|| {
+                let hwm = self
+                    .stores
+                    .iter()
+                    .map(|s| s.tail_high_water_bytes())
+                    .filter(|&b| b > 0)
+                    .min()
+                    .unwrap_or(0);
+                Arc::new(FlowGate::new(hwm))
+            })
+            .clone()
     }
 
     pub fn stores(&self) -> &[Arc<Store>] {
@@ -286,6 +557,27 @@ impl GopherEngine {
                 let proj_ref = &proj;
                 let load_workers = opts.workers;
                 let n_ts_known = timesteps.len();
+                if opts.follow {
+                    // A previous follow run may have closed the gate on
+                    // its way out; this run is the consumer now.
+                    if let Some(gate) = self.flow_gate.get() {
+                        gate.reopen();
+                    }
+                }
+                // Whatever happens below — clean end, error, or a panic
+                // unwinding out of the compute scope — a consumer that
+                // stops consuming must release any appender blocked on
+                // the gate. Drop guard, re-resolved at drop time so an
+                // appender that attached mid-run is covered too.
+                struct FollowGateGuard<'a>(&'a GopherEngine);
+                impl Drop for FollowGateGuard<'_> {
+                    fn drop(&mut self) {
+                        if let Some(gate) = self.0.flow_gate.get() {
+                            gate.close();
+                        }
+                    }
+                }
+                let _gate_guard = opts.follow.then(|| FollowGateGuard(self));
                 let result: Result<()> = std::thread::scope(|scope| {
                     let mut queue = timesteps;
                     let mut i = 0usize;
@@ -300,6 +592,23 @@ impl GopherEngine {
                     // cache-pressure cap on the ring depth.
                     let (mut per_ts_slices, mut per_ts_bytes) = (0u64, 0u64);
                     loop {
+                        if opts.follow {
+                            // Publish this run's lag (decoded tail bytes
+                            // not yet computed) for an appender blocked
+                            // on the flow gate. Follow runs reject
+                            // explicit timesteps/time ranges at entry,
+                            // so the queue is dense from 0 and queue
+                            // index == timestep.
+                            debug_assert!(
+                                i >= queue.len() || queue[i] == i,
+                                "follow queue must be dense from 0"
+                            );
+                            if let Some(gate) = self.flow_gate.get() {
+                                let lag: u64 =
+                                    self.stores.iter().map(|s| s.tail_bytes_from(i)).sum();
+                                gate.publish_lag(lag);
+                            }
+                        }
                         if i == queue.len() {
                             if !opts.follow {
                                 break;
@@ -379,6 +688,7 @@ impl GopherEngine {
                             i == 0,
                             opts.workers,
                             opts.max_supersteps,
+                            opts.overlap_routing,
                             &merge_msgs,
                         )?;
                         carry = next;
@@ -391,67 +701,166 @@ impl GopherEngine {
                 result?;
             }
             Pattern::Independent | Pattern::EventuallyDependent => {
-                // Temporal concurrency: a pool of timestep workers, each
-                // loading and running a whole BSP (spatial workers divided
-                // among them).
+                // Temporal concurrency: a pool of timestep workers
+                // (spatial workers divided among them), fed — when
+                // prefetch is on — by a shared queue of pre-loaded
+                // timesteps so loads overlap the pool's compute instead
+                // of serializing load-then-compute inside each worker.
                 let tw = opts.temporal_workers.max(1).min(timesteps.len());
                 let inner_workers = (opts.workers / tw).max(1);
-                let next_idx = AtomicUsize::new(0);
                 let results: Mutex<Vec<TimestepStats>> = Mutex::new(Vec::new());
                 let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
                 let n_ts = timesteps.len();
                 let pattern = app.pattern();
-                std::thread::scope(|scope| {
-                    for _ in 0..tw {
-                        scope.spawn(|| loop {
-                            let i = next_idx.fetch_add(1, Ordering::Relaxed);
-                            if i >= timesteps.len() || err.lock().unwrap().is_some() {
-                                break;
-                            }
-                            let t = timesteps[i];
-                            let run_one = || -> Result<TimestepStats> {
-                                let loaded = self.load_timestep(t, &proj, inner_workers)?;
-                                self.metrics
-                                    .add(keys::LOAD_NS, (loaded.load_wall_s * 1e9) as u64);
-                                let (ts_stats, next) = self.run_timestep(
-                                    app,
-                                    t,
-                                    n_ts,
-                                    loaded,
-                                    0.0,
-                                    HashMap::new(),
-                                    true, // every instance gets app inputs
-                                    inner_workers,
-                                    opts.max_supersteps,
-                                    &merge_msgs,
-                                )?;
-                                // ComputeCtx refuses cross-timestep sends
-                                // under these patterns, so this is a
-                                // should-never-happen backstop — but a hard
-                                // one: silently dropping the mailbox (the
-                                // old debug_assert!) loses messages in
-                                // release builds.
-                                if !next.is_empty() {
-                                    bail!(
-                                        "internal error: {} next-timestep message(s) buffered \
-                                         under the {pattern:?} pattern at timestep {t}",
-                                        next.values().map(Vec::len).sum::<usize>()
-                                    );
-                                }
-                                Ok(ts_stats)
-                            };
-                            match run_one() {
-                                Ok(ts_stats) => {
-                                    results.lock().unwrap().push(ts_stats);
-                                    self.metrics.incr(keys::TIMESTEPS);
-                                }
-                                Err(e) => {
-                                    *err.lock().unwrap() = Some(e);
-                                }
-                            }
-                        });
+                let run_one = |i: usize,
+                               loaded: LoadedTimestep,
+                               overlap_s: f64|
+                 -> Result<TimestepStats> {
+                    let t = timesteps[i];
+                    self.metrics.add(keys::LOAD_NS, (loaded.load_wall_s * 1e9) as u64);
+                    if overlap_s > 0.0 {
+                        self.metrics.incr(keys::PREFETCHED_TIMESTEPS);
+                        self.metrics.add(keys::LOAD_OVERLAP_NS, (overlap_s * 1e9) as u64);
                     }
-                });
+                    let (ts_stats, next) = self.run_timestep(
+                        app,
+                        t,
+                        n_ts,
+                        loaded,
+                        overlap_s,
+                        HashMap::new(),
+                        true, // every instance gets app inputs
+                        inner_workers,
+                        opts.max_supersteps,
+                        opts.overlap_routing,
+                        &merge_msgs,
+                    )?;
+                    // ComputeCtx refuses cross-timestep sends under these
+                    // patterns, so this is a should-never-happen backstop
+                    // — but a hard one: silently dropping the mailbox
+                    // (the old debug_assert!) loses messages in release
+                    // builds.
+                    if !next.is_empty() {
+                        bail!(
+                            "internal error: {} next-timestep message(s) buffered \
+                             under the {pattern:?} pattern at timestep {t}",
+                            next.values().map(Vec::len).sum::<usize>()
+                        );
+                    }
+                    Ok(ts_stats)
+                };
+                if opts.prefetch {
+                    let queue = PoolQueue::new();
+                    let next_load = AtomicUsize::new(0);
+                    let next_compute = AtomicUsize::new(0);
+                    // Footprint estimate from the latest load that hit
+                    // disk, feeding the cache-pressure cap.
+                    let est_slices = AtomicU64::new(0);
+                    let est_bytes = AtomicU64::new(0);
+                    let n_loaders = tw.min(opts.prefetch_depth.max(1));
+                    std::thread::scope(|scope| {
+                        for _ in 0..n_loaders {
+                            scope.spawn(|| {
+                                // A panicking pool thread must abort the
+                                // queue, or its peers (and the scope
+                                // join) would block forever.
+                                let _guard = PoolAbortOnPanic(&queue);
+                                loop {
+                                    // Admission: never keep more
+                                    // timesteps in flight than the pool
+                                    // plus what the slice caches can
+                                    // absorb.
+                                    let cap = tw
+                                        + self.prefetch_cap(
+                                            opts.prefetch_depth,
+                                            est_slices.load(Ordering::Relaxed),
+                                            est_bytes.load(Ordering::Relaxed),
+                                        );
+                                    if !queue.admit(cap) {
+                                        return; // aborted
+                                    }
+                                    let i = next_load.fetch_add(1, Ordering::Relaxed);
+                                    if i >= n_ts {
+                                        queue.withdraw();
+                                        return;
+                                    }
+                                    let r =
+                                        self.load_timestep(timesteps[i], &proj, inner_workers);
+                                    if let Ok(l) = &r {
+                                        if l.trace.slices_read > 0 {
+                                            est_slices.store(
+                                                l.trace.cache_misses.max(1),
+                                                Ordering::Relaxed,
+                                            );
+                                            est_bytes.store(
+                                                l.trace.slice_bytes.max(1),
+                                                Ordering::Relaxed,
+                                            );
+                                        }
+                                    }
+                                    queue.publish(i, r);
+                                }
+                            });
+                        }
+                        for _ in 0..tw {
+                            scope.spawn(|| {
+                                let _guard = PoolAbortOnPanic(&queue);
+                                loop {
+                                    let i = next_compute.fetch_add(1, Ordering::Relaxed);
+                                    if i >= n_ts {
+                                        break;
+                                    }
+                                    let wait0 = Instant::now();
+                                    let Some(loaded) = queue.take(i) else {
+                                        break; // aborted
+                                    };
+                                    let blocked_s = wait0.elapsed().as_secs_f64();
+                                    let outcome = loaded.and_then(|l| {
+                                        let overlap_s = (l.load_wall_s - blocked_s).max(0.0);
+                                        run_one(i, l, overlap_s)
+                                    });
+                                    match outcome {
+                                        Ok(ts_stats) => {
+                                            results.lock().unwrap().push(ts_stats);
+                                            self.metrics.incr(keys::TIMESTEPS);
+                                        }
+                                        Err(e) => {
+                                            *err.lock().unwrap() = Some(e);
+                                            queue.abort();
+                                            break;
+                                        }
+                                    }
+                                }
+                            });
+                        }
+                    });
+                } else {
+                    // Serial load-then-compute per worker (the
+                    // pre-prefetch pool; benches compare both).
+                    let next_idx = AtomicUsize::new(0);
+                    std::thread::scope(|scope| {
+                        for _ in 0..tw {
+                            scope.spawn(|| loop {
+                                let i = next_idx.fetch_add(1, Ordering::Relaxed);
+                                if i >= n_ts || err.lock().unwrap().is_some() {
+                                    break;
+                                }
+                                let outcome = self
+                                    .load_timestep(timesteps[i], &proj, inner_workers)
+                                    .and_then(|l| run_one(i, l, 0.0));
+                                match outcome {
+                                    Ok(ts_stats) => {
+                                        results.lock().unwrap().push(ts_stats);
+                                        self.metrics.incr(keys::TIMESTEPS);
+                                    }
+                                    Err(e) => {
+                                        *err.lock().unwrap() = Some(e);
+                                    }
+                                }
+                            });
+                        }
+                    });
+                }
                 if let Some(e) = err.into_inner().unwrap() {
                     return Err(e);
                 }
@@ -594,6 +1003,7 @@ impl GopherEngine {
         with_inputs: bool,
         workers: usize,
         max_supersteps: usize,
+        overlap_routing: bool,
         merge_sink: &Mutex<Vec<Payload>>,
     ) -> Result<(TimestepStats, HashMap<SubgraphId, Vec<Payload>>)> {
         let t_start = Instant::now();
@@ -641,13 +1051,30 @@ impl GopherEngine {
         let mut supersteps = 0usize;
         let mut carry_out: HashMap<SubgraphId, Vec<Payload>> = HashMap::new();
         let (mut ts_msgs_local, mut ts_msgs_remote, mut ts_msg_bytes_remote) = (0u64, 0u64, 0u64);
+        let (mut ts_route_s, mut ts_route_overlap_s) = (0.0f64, 0.0f64);
 
         for superstep in 1..=max_supersteps {
             supersteps = superstep;
-            // --- Compute phase (parallel over subgraphs). ---
+            // Per-destination staging shards plus one routing audit slot
+            // per item (see `stage_outbox` / the module's routing docs).
+            let shards: Vec<RouteShard> =
+                (0..items.len()).map(|_| Mutex::new(Vec::new())).collect();
+            let mut aux_slots: Vec<Mutex<Option<StagedAux>>> =
+                (0..items.len()).map(|_| Mutex::new(None)).collect();
+            let route_overlap_ns = AtomicU64::new(0);
+            // Workers currently inside `program.compute` — the signal
+            // that staging time genuinely overlaps compute.
+            let active_compute = AtomicUsize::new(0);
+
+            // --- Compute phase (parallel over subgraphs). Under
+            // overlapped routing, each worker stages its subgraph's
+            // outbox the moment that subgraph's compute returns, so
+            // early finishers' messages route while stragglers still
+            // compute. ---
             let cursor = AtomicUsize::new(0);
             let workers = workers.max(1).min(items.len().max(1));
             std::thread::scope(|scope| {
+                let aux_slots = &aux_slots;
                 for _ in 0..workers {
                     scope.spawn(|| loop {
                         let i = cursor.fetch_add(1, Ordering::Relaxed);
@@ -656,83 +1083,119 @@ impl GopherEngine {
                         }
                         let mut item = items[i].lock().unwrap();
                         let active = !item.halted || !item.inbox.is_empty();
-                        if !active {
-                            continue;
+                        if active {
+                            let msgs = std::mem::take(&mut item.inbox);
+                            item.halted = false;
+                            let Item { sgid, program, sgi, halted, outbox, .. } = &mut *item;
+                            let mut ctx = ComputeCtx {
+                                sgid: *sgid,
+                                timestep: t,
+                                superstep,
+                                n_timesteps,
+                                pattern,
+                                outbox,
+                                halted,
+                            };
+                            active_compute.fetch_add(1, Ordering::Relaxed);
+                            program.compute(&mut ctx, sgi, &msgs);
+                            active_compute.fetch_sub(1, Ordering::Relaxed);
                         }
-                        let msgs = std::mem::take(&mut item.inbox);
-                        item.halted = false;
-                        let Item { sgid, program, sgi, halted, outbox, .. } = &mut *item;
-                        let mut ctx = ComputeCtx {
-                            sgid: *sgid,
-                            timestep: t,
-                            superstep,
-                            n_timesteps,
-                            pattern,
-                            outbox,
-                            halted,
-                        };
-                        program.compute(&mut ctx, sgi, &msgs);
+                        if overlap_routing {
+                            let outbox = std::mem::take(&mut item.outbox);
+                            let src_host = item.host;
+                            let halted = item.halted;
+                            drop(item); // route without holding the item
+                            // Staging counts as overlapped only while
+                            // some OTHER worker is actually inside
+                            // compute (sampled at stage start, so this
+                            // is a lower bound): a single worker, or a
+                            // pure drain phase after the last compute,
+                            // reports zero overlap.
+                            let concurrent = active_compute.load(Ordering::Relaxed) > 0;
+                            let t0 = Instant::now();
+                            let aux =
+                                stage_outbox(i, src_host, halted, outbox, &index_of, &shards);
+                            *aux_slots[i].lock().unwrap() = Some(aux);
+                            if concurrent {
+                                route_overlap_ns.fetch_add(
+                                    t0.elapsed().as_nanos() as u64,
+                                    Ordering::Relaxed,
+                                );
+                            }
+                        }
                     });
                 }
             });
             self.metrics.incr(keys::SUPERSTEPS);
 
-            // --- Barrier: drain outboxes (single-threaded; `get_mut`
-            // needs no lock), surface pattern violations, then route
-            // messages grouped per destination subgraph. ---
+            // --- Barrier: finish routing. Without overlapped routing,
+            // stage every outbox here instead (single-threaded, item
+            // order — same machinery, so on/off differ only in WHERE
+            // staging runs). Either way, fold the per-item audits in
+            // item order and deliver each destination's chunks sorted
+            // by source item — delivery order is independent of who
+            // staged when. ---
+            let barrier0 = Instant::now();
+            if !overlap_routing {
+                for (i, item) in items.iter_mut().enumerate() {
+                    let it = item.get_mut().unwrap();
+                    let outbox = std::mem::take(&mut it.outbox);
+                    let aux = stage_outbox(i, it.host, it.halted, outbox, &index_of, &shards);
+                    *aux_slots[i].get_mut().unwrap() = Some(aux);
+                }
+            }
             let mut all_halted = true;
-            let mut staged: Vec<(usize, Outbox)> = Vec::with_capacity(items.len());
-            for item in items.iter_mut() {
-                let it = item.get_mut().unwrap();
-                if !it.halted {
-                    all_halted = false;
-                }
-                staged.push((it.host, std::mem::take(&mut it.outbox)));
-            }
-            for (_, outbox) in staged.iter_mut() {
-                if let Some(msg) = outbox.error.take() {
-                    bail!("timestep {t}, superstep {superstep}: {msg}");
-                }
-            }
-
             let mut any_inflight = false;
+            let mut merge_local: Vec<Payload> = Vec::new();
             // (src host, dst host) -> (n msgs, bytes) for the net model.
             let mut batches: HashMap<(usize, usize), (u64, u64)> = HashMap::new();
-            let mut merge_local: Vec<Payload> = Vec::new();
-            // Per-destination-subgraph message groups, filled in source
-            // order so delivery order stays deterministic.
-            let mut grouped: Vec<Vec<Payload>> = (0..items.len()).map(|_| Vec::new()).collect();
-            for (src_host, outbox) in staged {
-                for (to, payload) in outbox.superstep {
-                    // The destination HOST comes from the engine's view of
-                    // where the subgraph actually lives, never from
-                    // `to.partition()` — see module docs.
-                    let &(target, dst_host) = index_of
-                        .get(&to)
-                        .ok_or_else(|| anyhow!("message to unknown subgraph {to}"))?;
-                    if dst_host == src_host {
-                        ts_msgs_local += 1;
-                    } else {
-                        ts_msgs_remote += 1;
-                        ts_msg_bytes_remote += payload.len() as u64;
-                        let b = batches.entry((src_host, dst_host)).or_insert((0, 0));
-                        b.0 += 1;
-                        b.1 += payload.len() as u64;
-                    }
-                    grouped[target].push(payload);
-                    any_inflight = true;
+            let mut first_error: Option<String> = None;
+            let mut first_unknown: Option<SubgraphId> = None;
+            for slot in aux_slots.iter_mut() {
+                let a = slot.get_mut().unwrap().take().expect("item was never staged");
+                if first_error.is_none() {
+                    first_error = a.error;
                 }
-                for (to, payload) in outbox.next_timestep {
+                if first_unknown.is_none() {
+                    first_unknown = a.unknown_dest;
+                }
+                if !a.halted {
+                    all_halted = false;
+                }
+                any_inflight |= a.any_inflight;
+                ts_msgs_local += a.msgs_local;
+                ts_msgs_remote += a.msgs_remote;
+                ts_msg_bytes_remote += a.bytes_remote;
+                for (pair, (n, bytes)) in a.batches {
+                    let b = batches.entry(pair).or_insert((0, 0));
+                    b.0 += n;
+                    b.1 += bytes;
+                }
+                for (to, payload) in a.next {
                     carry_out.entry(to).or_default().push(payload);
                 }
-                if !outbox.merge.is_empty() {
-                    merge_local.extend(outbox.merge);
-                }
+                merge_local.extend(a.merge);
             }
-            // Deliver each group with one bulk extend per destination.
-            for (target, msgs) in grouped.into_iter().enumerate() {
-                if !msgs.is_empty() {
-                    items[target].get_mut().unwrap().inbox.extend(msgs);
+            // Error precedence mirrors the sequential drain: pattern
+            // violations (checked across all outboxes) before unknown
+            // destinations, both by item order.
+            if let Some(msg) = first_error {
+                bail!("timestep {t}, superstep {superstep}: {msg}");
+            }
+            if let Some(to) = first_unknown {
+                return Err(anyhow!("message to unknown subgraph {to}"));
+            }
+            // Deliver: per destination, chunks sorted by source item
+            // index (unique per chunk), one bulk extend per chunk.
+            for (target, shard) in shards.into_iter().enumerate() {
+                let mut chunks = shard.into_inner().unwrap();
+                if chunks.is_empty() {
+                    continue;
+                }
+                chunks.sort_unstable_by_key(|&(src, _)| src);
+                let inbox = &mut items[target].get_mut().unwrap().inbox;
+                for (_, msgs) in chunks {
+                    inbox.extend(msgs);
                 }
             }
             if !merge_local.is_empty() {
@@ -741,6 +1204,8 @@ impl GopherEngine {
             let pairs: Vec<(u64, u64)> = batches.values().copied().collect();
             let net_ns = net_clock.charge_superstep(&self.spec.net, &pairs);
             self.metrics.add(keys::SIM_NET_NS, net_ns);
+            ts_route_s += barrier0.elapsed().as_secs_f64();
+            ts_route_overlap_s += route_overlap_ns.load(Ordering::Relaxed) as f64 / 1e9;
 
             if all_halted && !any_inflight {
                 break;
@@ -757,6 +1222,8 @@ impl GopherEngine {
         self.metrics.add(keys::MSGS_LOCAL, ts_msgs_local);
         self.metrics.add(keys::MSGS_REMOTE, ts_msgs_remote);
         self.metrics.add(keys::MSG_BYTES_REMOTE, ts_msg_bytes_remote);
+        self.metrics.add(keys::ROUTE_NS, (ts_route_s * 1e9) as u64);
+        self.metrics.add(keys::ROUTE_OVERLAP_NS, (ts_route_overlap_s * 1e9) as u64);
 
         let stats = TimestepStats {
             timestep: t,
@@ -764,6 +1231,8 @@ impl GopherEngine {
             wall_s: (load_wall_s - overlap_s).max(0.0) + t_start.elapsed().as_secs_f64(),
             load_wall_s,
             overlap_s,
+            route_s: ts_route_s,
+            route_overlap_s: ts_route_overlap_s,
             slices_read: trace.slices_read,
             slice_bytes: trace.slice_bytes,
             cache_hits: trace.cache_hits,
@@ -1224,6 +1693,89 @@ mod tests {
             )
             .unwrap();
         assert_eq!(stats.per_timestep.len(), 2); // two 2h windows
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Tentpole (overlapped routing): message-heavy runs must produce
+    /// identical observables with routing staged from compute workers vs
+    /// the sequential barrier drain — and the overlapped run must report
+    /// zero overlap only when the knob is off.
+    #[test]
+    fn overlapped_routing_matches_sequential_drain() {
+        let (eng, dir) = engine("route-overlap");
+        let run = |overlap: bool| {
+            let seen = Arc::new(Mutex::new(Vec::new()));
+            let app = CarryApp { seen: seen.clone() };
+            let stats = eng
+                .run(&app, &RunOptions { overlap_routing: overlap, ..Default::default() })
+                .unwrap();
+            let mut s = seen.lock().unwrap().clone();
+            s.sort_unstable();
+            let obs: Vec<(usize, usize, u64, u64)> = stats
+                .per_timestep
+                .iter()
+                .map(|ts| (ts.timestep, ts.supersteps, ts.msgs_local, ts.msgs_remote))
+                .collect();
+            (s, obs)
+        };
+        let (seen_on, obs_on) = run(true);
+        let (seen_off, obs_off) = run(false);
+        assert_eq!(seen_on, seen_off, "overlapped routing changed app-visible messages");
+        assert_eq!(obs_on, obs_off, "overlapped routing changed per-timestep stats");
+        // Ping exercises multi-superstep fan-out both ways too.
+        for overlap in [true, false] {
+            let stats = eng
+                .run(
+                    &PingApp,
+                    &RunOptions {
+                        timesteps: Some(vec![0]),
+                        overlap_routing: overlap,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+            let ts = &stats.per_timestep[0];
+            assert!(ts.route_s >= 0.0);
+            if !overlap {
+                assert_eq!(ts.route_overlap_s, 0.0, "no staging overlap when disabled");
+            }
+            assert!(ts.route_overlap_s >= 0.0);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Tentpole (temporal-pool prefetch): the shared queue must cover
+    /// every timestep exactly once, keep per-timestep counters exact,
+    /// and report a load/compute overlap split that stays within the
+    /// measured load wall time.
+    #[test]
+    fn temporal_pool_prefetch_covers_all_timesteps_with_exact_counters() {
+        let (eng, dir) = engine("pool-prefetch");
+        let m0 = eng.metrics().snapshot();
+        let stats = eng
+            .run(
+                &ProjApp { pattern: Pattern::Independent },
+                &RunOptions { temporal_workers: 3, prefetch: true, ..Default::default() },
+            )
+            .unwrap();
+        assert_eq!(stats.per_timestep.len(), 12);
+        let ts_list: Vec<usize> = stats.per_timestep.iter().map(|s| s.timestep).collect();
+        assert_eq!(ts_list, (0..12).collect::<Vec<_>>());
+        for ts in &stats.per_timestep {
+            assert!(ts.overlap_s >= 0.0);
+            assert!(ts.overlap_s <= ts.load_wall_s + 1e-9);
+        }
+        let d = eng.metrics().snapshot().since(&m0);
+        let per_ts_reads: u64 = stats.per_timestep.iter().map(|s| s.slices_read).sum();
+        assert_eq!(per_ts_reads, d.get(keys::SLICES_READ), "pool prefetch broke attribution");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// The flow gate derives its high-water mark from the stores.
+    #[test]
+    fn flow_gate_uses_store_high_water_mark() {
+        let (eng, dir) = engine("gate-hwm"); // stores opened with hwm 0
+        assert_eq!(eng.flow_gate().hwm_bytes(), 0, "no per-store mark -> gate disabled");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

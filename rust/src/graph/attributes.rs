@@ -16,9 +16,26 @@
 //! map when the column covers most of its index space (the common case for
 //! decoded instance columns), falling back to binary search over the
 //! sparse index otherwise.
+//!
+//! ### Shared slab backing (zero-copy cell views)
+//!
+//! The slab sits behind an `Arc`, and a column's row offsets are
+//! *absolute* into that slab rather than always starting at 0. A column
+//! built incrementally ([`AttrColumn::push`], `decode_from`, `project`)
+//! owns its backing exclusively and covers it end to end — nothing
+//! changes for builders. A column produced by the v2 slice decoder
+//! ([`AttrColumn::from_shared_parts`]) is instead an **offset view**:
+//! every cell of a decoded position block shares one `Arc<Slab>` holding
+//! the block's whole value stream, so splitting a group into per-timestep
+//! cells copies no values (the pre-view decoder did one `sub_slab` memcpy
+//! per cell). Views are immutable; equality compares per-element values,
+//! so a view equals an owned column with the same content. Cache
+//! accounting charges a shared backing once per block
+//! ([`AttrColumn::view_mem_bytes`] + `backing`), not once per cell.
 
 use crate::util::wire::{Dec, Enc};
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// Name of the special existence flag attribute (§III-A).
 pub const ISEXISTS: &str = "isExists";
@@ -436,14 +453,17 @@ impl<'a> ValuesRef<'a> {
 /// Stores, for the subset of elements that have values in an instance, a
 /// CSR-like (index, offsets, typed slab) layout. Lookup goes through the
 /// cached dense row map when present, else binary search; construction
-/// requires strictly increasing indices (builders sort).
+/// requires strictly increasing indices (builders sort). The slab may be
+/// shared with sibling columns of a decoded group (see the module docs on
+/// shared slab backing).
 #[derive(Debug, Clone)]
 pub struct AttrColumn {
     pub(crate) idx: Vec<u32>,
     /// `off.len() == idx.len() + 1`; values for `idx[k]` are slab rows
-    /// `off[k]..off[k+1]`.
+    /// `off[k]..off[k+1]` (absolute rows — a shared-backing view starts
+    /// at `off[0] > 0`).
     pub(crate) off: Vec<u32>,
-    pub(crate) vals: Slab,
+    pub(crate) vals: Arc<Slab>,
     /// `element index -> row + 1` (0 = absent). Built after decode when
     /// the column covers enough of its index space; purely a lookup cache,
     /// so it does not participate in equality.
@@ -451,8 +471,15 @@ pub struct AttrColumn {
 }
 
 impl PartialEq for AttrColumn {
+    /// Content equality: same elements with the same values. Offsets are
+    /// compared per element (not verbatim) so an offset view into a
+    /// shared slab equals an owned column holding the same data.
     fn eq(&self, other: &Self) -> bool {
-        self.idx == other.idx && self.off == other.off && self.vals == other.vals
+        self.idx == other.idx
+            && (0..self.idx.len()).all(|k| {
+                self.vals.slice(self.off[k] as usize, self.off[k + 1] as usize)
+                    == other.vals.slice(other.off[k] as usize, other.off[k + 1] as usize)
+            })
     }
 }
 
@@ -470,37 +497,85 @@ impl AttrColumn {
     }
 
     pub fn new_typed(ty: AttrType) -> Self {
-        AttrColumn { idx: Vec::new(), off: vec![0], vals: Slab::empty(ty), dense: None }
+        AttrColumn { idx: Vec::new(), off: vec![0], vals: Arc::new(Slab::empty(ty)), dense: None }
     }
 
     pub fn ty(&self) -> AttrType {
         self.vals.ty()
     }
 
-    /// Assemble a column from decoded parts, building the dense row map.
+    /// Assemble a column from decoded parts (exclusively owned backing),
+    /// building the dense row map.
     pub(crate) fn from_parts(idx: Vec<u32>, off: Vec<u32>, vals: Slab) -> AttrColumn {
+        AttrColumn::from_shared_parts(idx, off, Arc::new(vals))
+    }
+
+    /// Assemble an offset view into a (possibly shared) slab: `off` holds
+    /// absolute row bounds into `vals`. This is how the v2 slice decoder
+    /// splits one decoded position block into per-timestep cells without
+    /// copying any values.
+    pub(crate) fn from_shared_parts(idx: Vec<u32>, off: Vec<u32>, vals: Arc<Slab>) -> AttrColumn {
         debug_assert_eq!(off.len(), idx.len() + 1);
+        debug_assert!(
+            off.last().map(|&hi| hi as usize <= vals.len()).unwrap_or(true),
+            "column view exceeds its slab"
+        );
         let mut col = AttrColumn { idx, off, vals, dense: None };
         col.build_dense();
         col
     }
 
     pub(crate) fn parts(&self) -> (&[u32], &[u32], &Slab) {
-        (&self.idx, &self.off, &self.vals)
+        (&self.idx, &self.off, self.vals.as_ref())
+    }
+
+    /// The shared value backing (cache accounting dedups on its pointer).
+    pub(crate) fn backing(&self) -> &Arc<Slab> {
+        &self.vals
+    }
+
+    /// True when both columns are views into the same slab allocation —
+    /// the observable zero-copy property (tests and probes assert it).
+    pub fn shares_backing(&self, other: &AttrColumn) -> bool {
+        Arc::ptr_eq(&self.vals, &other.vals)
+    }
+
+    /// Typed view over exactly this column's value rows
+    /// (`off[0]..off.last()` — contiguous by construction).
+    pub(crate) fn value_rows(&self) -> ValuesRef<'_> {
+        self.vals.slice(self.off[0] as usize, *self.off.last().unwrap() as usize)
+    }
+
+    /// Mutable access to the backing for builders. Construction-time
+    /// columns own their slab exclusively, so this never copies; a shared
+    /// view would be copied-on-write first (none of the mutating paths
+    /// operate on views).
+    fn vals_mut(&mut self) -> &mut Slab {
+        Arc::make_mut(&mut self.vals)
     }
 
     /// Append values for element `i`; `i` must exceed all prior indices.
+    /// Only valid on columns that cover their backing end to end (every
+    /// builder-made column does; decoded shared views are immutable).
     pub fn push(&mut self, i: u32, values: impl IntoIterator<Item = AttrValue>) {
         if let Some(&last) = self.idx.last() {
             assert!(i > last, "AttrColumn indices must be strictly increasing");
         }
+        // Hard assert (not debug-only): pushing onto an offset view
+        // would record slab-end offsets that swallow sibling cells'
+        // rows — silent data corruption in release builds otherwise.
+        assert_eq!(
+            *self.off.last().unwrap() as usize,
+            self.vals.len(),
+            "push onto a shared-view AttrColumn"
+        );
         let before = self.vals.len();
         for v in values {
             if self.idx.is_empty() && self.vals.is_empty() && self.vals.ty() != v.ty() {
                 // Retype an untouched column on its first value.
-                self.vals = Slab::empty(v.ty());
+                self.vals = Arc::new(Slab::empty(v.ty()));
             }
-            self.vals.push_value(&v);
+            self.vals_mut().push_value(&v);
         }
         if self.vals.len() == before {
             return; // zero values — treat as absent
@@ -538,7 +613,7 @@ impl AttrColumn {
         if lo == self.off[k + 1] as usize {
             return None;
         }
-        match &self.vals {
+        match self.vals.as_ref() {
             Slab::Float(xs) => Some(xs[lo]),
             Slab::Int(xs) => Some(xs[lo] as f64),
             _ => None,
@@ -553,7 +628,7 @@ impl AttrColumn {
         if lo == self.off[k + 1] as usize {
             return None;
         }
-        match &self.vals {
+        match self.vals.as_ref() {
             Slab::Int(xs) => Some(xs[lo]),
             _ => None,
         }
@@ -567,7 +642,7 @@ impl AttrColumn {
         if lo == self.off[k + 1] as usize {
             return None;
         }
-        match &self.vals {
+        match self.vals.as_ref() {
             Slab::Bool(xs) => Some(xs[lo]),
             _ => None,
         }
@@ -579,7 +654,7 @@ impl AttrColumn {
     }
 
     pub fn n_values(&self) -> usize {
-        self.vals.len()
+        (*self.off.last().unwrap() - self.off[0]) as usize
     }
 
     /// Iterate `(element index, typed values)` pairs in index order.
@@ -589,11 +664,19 @@ impl AttrColumn {
         })
     }
 
-    /// Approximate heap footprint in bytes (cache accounting).
+    /// Approximate heap footprint in bytes (cache accounting), counting
+    /// the whole value backing as this column's own. For cells that share
+    /// a slab, use [`AttrColumn::view_mem_bytes`] per cell and charge the
+    /// backing once per group via [`AttrColumn::backing`].
     pub fn mem_bytes(&self) -> usize {
+        self.view_mem_bytes() + self.vals.mem_bytes()
+    }
+
+    /// Heap footprint of the view alone — index, offsets and the dense
+    /// row map — excluding the (possibly shared) value backing.
+    pub fn view_mem_bytes(&self) -> usize {
         self.idx.len() * 4
             + self.off.len() * 4
-            + self.vals.mem_bytes()
             + self.dense.as_ref().map(|d| d.len() * 4).unwrap_or(0)
     }
 
@@ -617,7 +700,7 @@ impl AttrColumn {
     /// v1 wire encoding: interleaved per-row `(idx delta, count, values)`.
     /// Kept byte-compatible with pre-v2 slices.
     pub fn encode_into(&self, ty: AttrType, e: &mut Enc) {
-        debug_assert!(self.vals.is_empty() || self.ty() == ty);
+        debug_assert!(self.n_values() == 0 || self.ty() == ty);
         e.varint(self.idx.len() as u64);
         let mut prev = 0u32;
         for (k, &i) in self.idx.iter().enumerate() {
@@ -627,7 +710,7 @@ impl AttrColumn {
             let hi = self.off[k + 1] as usize;
             e.varint((hi - lo) as u64);
             for j in lo..hi {
-                match &self.vals {
+                match self.vals.as_ref() {
                     Slab::Bool(xs) => e.u8(xs[j] as u8),
                     Slab::Int(xs) => e.i64(xs[j]),
                     Slab::Float(xs) => e.f64(xs[j]),
@@ -647,7 +730,7 @@ impl AttrColumn {
             prev = i;
             let m = d.varint()? as usize;
             for _ in 0..m {
-                col.vals.decode_push(ty, d)?;
+                col.vals_mut().decode_push(ty, d)?;
             }
             col.idx.push(i);
             col.off.push(col.vals.len() as u32);
@@ -670,7 +753,7 @@ impl AttrColumn {
                 let lo = self.off[k] as usize;
                 let hi = self.off[k + 1] as usize;
                 if hi > lo {
-                    out.vals.extend_range_from(&self.vals, lo, hi);
+                    out.vals_mut().extend_range_from(self.vals.as_ref(), lo, hi);
                     out.idx.push(local as u32);
                     out.off.push(out.vals.len() as u32);
                 }
@@ -809,6 +892,43 @@ mod tests {
                 assert!(d.is_empty());
             });
         }
+    }
+
+    /// Tentpole: offset views into one shared slab behave exactly like
+    /// owned columns — lookups, typed accessors, equality, accounting.
+    #[test]
+    fn shared_slab_views_alias_the_backing() {
+        let slab = Arc::new(Slab::Float(vec![10.0, 11.0, 12.0, 13.0, 14.0]));
+        // Two cells splitting the slab: rows [0..2) and [2..5).
+        let a = AttrColumn::from_shared_parts(vec![3], vec![0, 2], slab.clone());
+        let b = AttrColumn::from_shared_parts(vec![1, 4], vec![2, 3, 5], slab.clone());
+        assert_eq!(a.values(3), Some(ValuesRef::Floats(&[10.0, 11.0])));
+        assert_eq!(b.values(1), Some(ValuesRef::Floats(&[12.0])));
+        assert_eq!(b.values(4), Some(ValuesRef::Floats(&[13.0, 14.0])));
+        assert_eq!(b.f64_at(4), Some(13.0));
+        assert_eq!((a.n_values(), b.n_values()), (2, 3));
+        assert_eq!(a.value_rows(), ValuesRef::Floats(&[10.0, 11.0]));
+        // No copies: both views point at the same backing.
+        assert!(Arc::ptr_eq(a.backing(), b.backing()));
+        // A view equals an owned column with the same content.
+        let mut owned = AttrColumn::new();
+        owned.push(1, [AttrValue::Float(12.0)]);
+        owned.push(4, [AttrValue::Float(13.0), AttrValue::Float(14.0)]);
+        assert_eq!(b, owned);
+        assert_eq!(owned, b);
+        assert_ne!(a, owned);
+        // Per-cell accounting excludes the backing; mem_bytes includes it.
+        assert_eq!(b.mem_bytes(), b.view_mem_bytes() + slab.mem_bytes());
+        // v1 re-encode of a view round-trips through an owned decode.
+        let mut e = Enc::new();
+        b.encode_into(AttrType::Float, &mut e);
+        let buf = e.finish();
+        let dec = AttrColumn::decode_from(AttrType::Float, &mut Dec::new(&buf)).unwrap();
+        assert_eq!(dec, b);
+        // Projecting out of a view copies just the projected rows.
+        let p = b.project(&[4]);
+        assert_eq!(p.values(0), Some(ValuesRef::Floats(&[13.0, 14.0])));
+        assert!(!Arc::ptr_eq(p.backing(), b.backing()));
     }
 
     #[test]

@@ -5,12 +5,14 @@
 //!                 --pack 20 --vertices N --instances T --seed S
 //!                 --template-only]
 //! goffish ingest  --store DIR --dataset tr|roadnet [--from <auto> --to T
-//!                 --sleep-ms 0 --no-compress --no-sync --finish]
+//!                 --sleep-ms 0 --no-compress --no-sync --group-commit 1
+//!                 --finish]
 //! goffish run     --store DIR --app sssp|pagerank|nhop|track|wcc
-//!                 [--cache 14 --cache-bytes 0 --hosts <parts>
-//!                  --source EXT --plate P --backend scalar|pjrt
-//!                  --artifacts DIR --from T --to T --prefetch-depth 2
-//!                  --poll-ms 25 --idle-polls 40 --follow]
+//!                 [--cache 14 --cache-bytes 0 --tail-high-water 0
+//!                  --hosts <parts> --source EXT --plate P
+//!                  --backend scalar|pjrt --artifacts DIR --from T --to T
+//!                  --prefetch-depth 2 --poll-ms 25 --idle-polls 40
+//!                  --follow]
 //! goffish inspect --store DIR
 //! ```
 
@@ -64,13 +66,19 @@ USAGE:
                    --template-only]
   goffish ingest  --store DIR --dataset tr|roadnet
                   [--from <appender resume point> --to <dataset end>
-                   --sleep-ms 0 --no-compress --no-sync --finish]
+                   --sleep-ms 0 --no-compress --no-sync --group-commit 1
+                   --finish]
   goffish run     --store DIR --app sssp|pagerank|nhop|track|wcc
-                  [--cache 14 --cache-bytes 0 --hosts <auto>
-                   --source <ext-id> --plate CA-00007 --nhops 6
-                   --backend scalar|pjrt --artifacts artifacts
+                  [--cache 14 --cache-bytes 0 --tail-high-water 0
+                   --hosts <auto> --source <ext-id> --plate CA-00007
+                   --nhops 6 --backend scalar|pjrt --artifacts artifacts
                    --from <ts> --to <ts> --prefetch-depth 2
                    --poll-ms 25 --idle-polls 40 --real-disk --follow]
+
+  `ingest --group-commit k` fsyncs the WALs once per k appends (crash may
+  lose the newest unsynced timesteps, never corrupt older ones);
+  `run --tail-high-water BYTES` makes an in-process follow-mode feeder
+  block when analytics lags ingest by more decoded tail bytes than that.
   goffish inspect --store DIR
 
   `deploy --template-only` lays out an empty collection; `ingest` streams
@@ -158,7 +166,8 @@ fn cmd_ingest(args: &Args) -> Result<()> {
         compress: !args.switch("no-compress"),
         sync: !args.switch("no-sync"),
         ..Default::default()
-    };
+    }
+    .group_commit(args.usize("group-commit", 1));
     let mut appender = CollectionAppender::open(&store_dir, opts)?;
     let from = args.usize("from", appender.n_instances());
     let to = args.usize("to", source.n_instances()).min(source.n_instances());
@@ -189,7 +198,7 @@ fn cmd_ingest(args: &Args) -> Result<()> {
     };
     println!(
         "ingested {} instances into {} in {:.2}s: {} groups sealed \
-         ({:.1} ms/group), {:.1} MB WAL traffic",
+         ({:.1} ms/group), {:.1} MB WAL traffic, {} WAL fsyncs",
         stats.appended,
         store_dir.display(),
         t0.elapsed().as_secs_f64(),
@@ -199,7 +208,8 @@ fn cmd_ingest(args: &Args) -> Result<()> {
         } else {
             0.0
         },
-        stats.wal_bytes as f64 / 1e6
+        stats.wal_bytes as f64 / 1e6,
+        stats.wal_syncs
     );
     Ok(())
 }
@@ -231,6 +241,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let opts = StoreOptions {
         cache_slots: args.usize("cache", 14),
         cache_bytes: args.u64("cache-bytes", 0),
+        tail_high_water_bytes: args.u64("tail-high-water", 0),
         disk,
         metrics: metrics.clone(),
     };

@@ -31,6 +31,12 @@ pub mod keys {
     pub const LOAD_OVERLAP_NS: &str = "gopher.load_overlap_ns";
     /// Timesteps whose instances were prefetched before their BSP began.
     pub const PREFETCHED_TIMESTEPS: &str = "gopher.prefetched_timesteps";
+    /// Wall nanoseconds of barrier-side message routing — the remainder
+    /// that could not be hidden under the compute phase.
+    pub const ROUTE_NS: &str = "gopher.route_ns";
+    /// Wall nanoseconds of routing work that ran concurrently with the
+    /// compute phase (per-destination staging by early-finished workers).
+    pub const ROUTE_OVERLAP_NS: &str = "gopher.route_overlap_ns";
     pub const SIM_NET_NS: &str = "cluster.sim_net_ns";
     pub const KERNEL_CALLS: &str = "runtime.kernel_calls";
     pub const KERNEL_NS: &str = "runtime.kernel_ns";

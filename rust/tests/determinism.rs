@@ -171,3 +171,138 @@ fn stats_accounting_consistent() {
     }
     std::fs::remove_dir_all(&dir).unwrap();
 }
+
+/// Per-timestep observables that must not depend on routing mode.
+fn stats_fingerprint(stats: &goffish::gopher::RunStats) -> Vec<(usize, usize, u64, u64, u64)> {
+    stats
+        .per_timestep
+        .iter()
+        .map(|t| (t.timestep, t.supersteps, t.msgs_local, t.msgs_remote, t.msg_bytes_remote))
+        .collect()
+}
+
+/// Tentpole (overlapped superstep routing): staging outboxes from the
+/// compute workers must leave every observable bit-identical to the
+/// single-threaded barrier drain — app outputs AND per-timestep stats —
+/// across all three patterns (SSSP sequential, PageRank independent,
+/// WCC independent/structural).
+#[test]
+fn overlapped_routing_is_bit_identical_to_sequential_drain() {
+    let (gen, dir) = deployed("route");
+    let seq = |overlap: bool| RunOptions {
+        timesteps: Some((0..6).collect()),
+        overlap_routing: overlap,
+        ..Default::default()
+    };
+
+    // SSSP: cross-timestep carry + multi-superstep frontier expansion.
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+    let run_sssp = |overlap: bool| {
+        let eng = engine(&dir);
+        let app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
+        let stats = eng.run(&app, &seq(overlap)).unwrap();
+        let distances = app.results.distances.lock().unwrap();
+        let mut out: Vec<(u64, u32, i64)> = distances
+            .iter()
+            .flat_map(|(sgid, (_, d))| {
+                d.iter().enumerate().map(move |(lv, &x)| {
+                    let q = if x.is_finite() { (x as f64 * 1e6).round() as i64 } else { -1 };
+                    (sgid.0, lv as u32, q)
+                })
+            })
+            .collect();
+        out.sort_unstable();
+        (out, stats_fingerprint(&stats))
+    };
+    let (fp_on, st_on) = run_sssp(true);
+    let (fp_off, st_off) = run_sssp(false);
+    assert!(!fp_on.is_empty());
+    assert_eq!(fp_on, fp_off, "overlapped routing changed SSSP outputs");
+    assert_eq!(st_on, st_off, "overlapped routing changed SSSP per-timestep stats");
+
+    // PageRank over the temporal pool (both pool prefetch modes).
+    for prefetch in [true, false] {
+        let base = RunOptions {
+            timesteps: Some(vec![0, 1, 2]),
+            prefetch,
+            temporal_workers: 3,
+            ..Default::default()
+        };
+        let on = pagerank_fingerprint(
+            &engine(&dir),
+            &gen,
+            &RunOptions { overlap_routing: true, ..base.clone() },
+        );
+        let off = pagerank_fingerprint(
+            &engine(&dir),
+            &gen,
+            &RunOptions { overlap_routing: false, ..base.clone() },
+        );
+        assert_eq!(on, off, "overlapped routing changed PageRank (prefetch={prefetch})");
+    }
+
+    // WCC: boundary-label exchange on timestep 0.
+    let run_wcc = |overlap: bool| {
+        let eng = engine(&dir);
+        let app = goffish::apps::WccApp::new();
+        let stats = eng
+            .run(
+                &app,
+                &RunOptions {
+                    timesteps: Some(vec![0]),
+                    overlap_routing: overlap,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let mut labels: Vec<(u64, u64)> =
+            app.results.labels.lock().unwrap().iter().map(|(k, &v)| (k.0, v)).collect();
+        labels.sort_unstable();
+        (labels, stats_fingerprint(&stats))
+    };
+    let (wcc_on, wst_on) = run_wcc(true);
+    let (wcc_off, wst_off) = run_wcc(false);
+    assert!(!wcc_on.is_empty());
+    assert_eq!(wcc_on, wcc_off, "overlapped routing changed WCC labels");
+    assert_eq!(wst_on, wst_off, "overlapped routing changed WCC stats");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Tentpole (temporal-pool prefetch): the shared prefetch queue must not
+/// change independent/eventually-dependent results — only the wall-clock
+/// split. (The merge path is covered by NHop's composite.)
+#[test]
+fn temporal_pool_prefetch_does_not_change_results() {
+    let (gen, dir) = deployed("pool-prefetch");
+    let base = RunOptions {
+        timesteps: Some((0..6).collect()),
+        temporal_workers: 3,
+        ..Default::default()
+    };
+    let with = pagerank_fingerprint(
+        &engine(&dir),
+        &gen,
+        &RunOptions { prefetch: true, ..base.clone() },
+    );
+    let without = pagerank_fingerprint(
+        &engine(&dir),
+        &gen,
+        &RunOptions { prefetch: false, ..base.clone() },
+    );
+    assert_eq!(with, without, "pool prefetch changed PageRank results");
+
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+    let totals: Vec<u64> = [true, false]
+        .iter()
+        .map(|&prefetch| {
+            let eng = engine(&dir);
+            let mut app = NHopApp::new(source, 4, traceroute::eattr::LATENCY_MS);
+            app.hist_hi = 2000.0;
+            eng.run(&app, &RunOptions { prefetch, ..base.clone() }).unwrap();
+            let composite = app.results.composite.lock().unwrap();
+            composite.as_ref().unwrap().total()
+        })
+        .collect();
+    assert_eq!(totals[0], totals[1], "pool prefetch changed the merge result");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

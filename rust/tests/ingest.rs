@@ -393,6 +393,7 @@ fn byte_budget_bounds_resident_bytes_during_scan() {
         cache_bytes: budget,
         disk: DiskModel::instant(),
         metrics: Arc::new(Metrics::new()),
+        ..Default::default()
     };
     let bounded_stores = open_collection(&d, &bounded).unwrap();
     let store = &bounded_stores[0];
@@ -449,4 +450,188 @@ fn ingest_matches_deploy_property() {
         std::fs::remove_dir_all(&d_batch).unwrap();
         std::fs::remove_dir_all(&d_feed).unwrap();
     });
+}
+
+/// Satellite (WAL group commit): `IngestOptions::group_commit(k)` fsyncs
+/// once per k appends, seals/finish flush durably, and the relaxed
+/// cadence changes nothing about what reads back.
+#[test]
+fn group_commit_syncs_once_per_k_appends_and_reads_back_identically() {
+    let gen = tr_gen();
+    let n = 5usize;
+    let cfg = DeployConfig::new(PARTS, BINS, 8); // pack 8: no mid-run seal
+    let d_gc = tmpdir("gc-feed");
+    deploy_template(&gen, &cfg, &d_gc).unwrap();
+
+    let mut app =
+        CollectionAppender::open(&d_gc, IngestOptions::default().group_commit(2)).unwrap();
+    for t in 0..n {
+        app.append(&gen.instance(t)).unwrap();
+    }
+    // Appends 2 and 4 hit the commit boundary: 2 synced appends x PARTS.
+    let mid = app.stats();
+    assert_eq!(mid.appended, n as u64);
+    assert_eq!(mid.wal_syncs, 2 * PARTS as u64, "one fsync per k appends per partition");
+    // Explicit flush covers the odd trailing append; a second is a no-op.
+    app.flush().unwrap();
+    assert_eq!(app.stats().wal_syncs, 3 * PARTS as u64);
+    app.flush().unwrap();
+    assert_eq!(app.stats().wal_syncs, 3 * PARTS as u64);
+    let stats = app.finish().unwrap();
+    assert_eq!(stats.sealed_groups, 1, "finish seals the short tail durably");
+
+    // Bit-identical to a batch deployment of the same prefix.
+    let gen5 = TraceRouteGenerator::new(TraceRouteParams {
+        n_instances: n,
+        ..TraceRouteParams::tiny()
+    });
+    let d_batch = tmpdir("gc-batch");
+    deploy(&gen5, &cfg, &d_batch).unwrap();
+    assert_stores_identical(&d_batch, &d_gc, n);
+
+    // Per-append fsync stays the default cadence.
+    let d_def = tmpdir("gc-default");
+    deploy_template(&gen, &cfg, &d_def).unwrap();
+    let mut app = CollectionAppender::open(&d_def, IngestOptions::default()).unwrap();
+    for t in 0..3 {
+        app.append(&gen.instance(t)).unwrap();
+    }
+    assert_eq!(app.stats().wal_syncs, 3 * PARTS as u64);
+    // Unflushed group-commit appends still replay in-process (the
+    // bytes are written, just not fsynced): only an OS crash can lose
+    // the unsynced suffix.
+    drop(app);
+    let d_unsynced = tmpdir("gc-unsynced");
+    deploy_template(&gen, &cfg, &d_unsynced).unwrap();
+    let mut app =
+        CollectionAppender::open(&d_unsynced, IngestOptions::default().group_commit(4)).unwrap();
+    for t in 0..3 {
+        app.append(&gen.instance(t)).unwrap();
+    }
+    assert_eq!(app.stats().wal_syncs, 0);
+    drop(app); // "process crash" without flush
+    let app = CollectionAppender::open(&d_unsynced, IngestOptions::default()).unwrap();
+    assert_eq!(app.n_instances(), 3);
+    drop(app);
+    // A no-sync appender never accumulates pending fsyncs: flush stays
+    // a no-op regardless of group_commit.
+    let mut app = CollectionAppender::open(
+        &d_unsynced,
+        IngestOptions { sync: false, ..Default::default() }.group_commit(2),
+    )
+    .unwrap();
+    app.append(&gen.instance(3)).unwrap();
+    app.append(&gen.instance(4)).unwrap();
+    app.flush().unwrap();
+    assert_eq!(app.stats().wal_syncs, 0, "flush must no-op when sync is off");
+    std::fs::remove_dir_all(&d_gc).unwrap();
+    std::fs::remove_dir_all(&d_batch).unwrap();
+    std::fs::remove_dir_all(&d_def).unwrap();
+    std::fs::remove_dir_all(&d_unsynced).unwrap();
+}
+
+/// Satellite (follow-mode backpressure): with a tail high-water mark
+/// set, an appender attached to the engine's flow gate blocks while the
+/// follow run lags, the probe counter records it, every timestep still
+/// lands exactly once, and outputs match a batch run.
+#[test]
+fn backpressure_gate_blocks_fast_feeder_behind_slow_follow_run() {
+    use goffish::gofs::SubgraphInstance;
+    use goffish::gopher::{Application, ComputeCtx, Pattern, Payload, SubgraphProgram};
+    use goffish::graph::Schema;
+    use goffish::partition::Subgraph;
+
+    let gen = tr_gen();
+    let n = gen.n_instances();
+    let cfg = DeployConfig::new(PARTS, BINS, PACK);
+    let d_feed = tmpdir("bp-feed");
+    deploy_template(&gen, &cfg, &d_feed).unwrap();
+
+    // Stores carry a 1-byte high-water mark: any uncomputed tail byte
+    // throttles the feeder to lockstep with the run.
+    let metrics = Arc::new(Metrics::new());
+    let o = StoreOptions {
+        cache_slots: 64,
+        tail_high_water_bytes: 1,
+        disk: DiskModel::instant(),
+        metrics: metrics.clone(),
+        ..Default::default()
+    };
+    let eng = GopherEngine::new(
+        open_collection(&d_feed, &o).unwrap(),
+        ClusterSpec::new(PARTS),
+        metrics,
+    );
+    assert_eq!(eng.flow_gate().hwm_bytes(), 1);
+
+    let gate = eng.flow_gate();
+    let feed_dir = d_feed.clone();
+    let feeder = std::thread::spawn(move || {
+        let gen = tr_gen();
+        // Head start: the run is already polling (and publishing lag)
+        // before the first append lands.
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        let mut app = CollectionAppender::open(&feed_dir, IngestOptions::default()).unwrap();
+        app.attach_gate(gate);
+        for t in 0..gen.n_instances() {
+            app.append(&gen.instance(t)).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        app.stats()
+    });
+
+    /// A deliberately slow consumer: ~20ms per timestep.
+    struct SlowCount;
+    struct SlowProgram;
+    impl SubgraphProgram for SlowProgram {
+        fn compute(&mut self, ctx: &mut ComputeCtx<'_>, _sgi: &SubgraphInstance, _m: &[Payload]) {
+            if ctx.superstep == 1 && ctx.sgid.local() == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            ctx.vote_to_halt();
+        }
+    }
+    impl Application for SlowCount {
+        fn name(&self) -> &str {
+            "slow-count"
+        }
+        fn pattern(&self) -> Pattern {
+            Pattern::Sequential
+        }
+        fn projection(&self, vs: &Schema, es: &Schema) -> Projection {
+            Projection::all(vs, es)
+        }
+        fn create(&self, _sg: &Subgraph) -> Box<dyn SubgraphProgram> {
+            Box::new(SlowProgram)
+        }
+    }
+
+    let stats = eng
+        .run(
+            &SlowCount,
+            &RunOptions {
+                follow: true,
+                follow_poll_ms: 2,
+                follow_idle_polls: 750, // ~1.5s of slack over the blocked cadence
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let feeder_stats = feeder.join().unwrap();
+    assert_eq!(stats.per_timestep.len(), n, "backpressure lost timesteps");
+    assert!(
+        feeder_stats.backpressure_blocks > 0,
+        "a 1-byte mark against a 20ms/timestep consumer must block the feeder"
+    );
+    assert!(feeder_stats.backpressure_wall_s > 0.0);
+    assert_eq!(feeder_stats.appended, n as u64);
+
+    // The throttled feed still yields the batch-identical collection.
+    let d_batch = tmpdir("bp-batch");
+    deploy(&gen, &cfg, &d_batch).unwrap();
+    let app = CollectionAppender::open(&d_feed, IngestOptions::default()).unwrap();
+    app.finish().unwrap();
+    assert_stores_identical(&d_batch, &d_feed, n);
+    std::fs::remove_dir_all(&d_feed).unwrap();
+    std::fs::remove_dir_all(&d_batch).unwrap();
 }

@@ -1,0 +1,140 @@
+#!/usr/bin/env python3
+"""Bench regression gate over BENCH_hotpath.json.
+
+Compares the probes of a fresh `cargo bench --bench perf_hotpath` run
+against a committed baseline and fails (exit 1) on regressions past the
+threshold (default 25%).
+
+The baseline file maps probe key -> {"value": <number|null>,
+"direction": "lower" | "higher"}:
+
+  * "lower"  — smaller is better (latencies: ns/edge, ms/superstep, us);
+  * "higher" — bigger is better (throughputs and ratios: inst/s,
+    speedup_x, reduction_x);
+  * value null — not yet measured on CI hardware; the key is skipped
+    (bootstrap mode). Refresh with --write-baseline on a machine whose
+    numbers should become the contract, then commit the file.
+
+Keys present in the current run but absent from the baseline are
+ignored (new probes don't fail the gate until enrolled).
+
+Usage:
+  bench_gate.py --current rust/BENCH_hotpath.json \
+                --baseline rust/benches/BENCH_baseline.json \
+                [--threshold 0.25] [--write-baseline]
+  bench_gate.py --self-test
+"""
+
+import argparse
+import json
+import sys
+
+
+def check(baseline: dict, current: dict, threshold: float):
+    """Return (failures, checked, skipped) comparing current to baseline."""
+    failures = []
+    checked = []
+    skipped = []
+    for key, spec in sorted(baseline.items()):
+        base = spec.get("value")
+        direction = spec.get("direction", "lower")
+        if direction not in ("lower", "higher"):
+            failures.append(f"{key}: bad direction {direction!r} in baseline")
+            continue
+        cur = current.get(key)
+        if base is None or cur is None or base <= 0 or cur <= 0:
+            # Unmeasured baseline, missing probe, or sentinel (-1).
+            skipped.append(key)
+            continue
+        if direction == "lower":
+            limit = base * (1.0 + threshold)
+            ok = cur <= limit
+            verdict = f"{cur:.3f} vs baseline {base:.3f} (limit {limit:.3f}, lower is better)"
+        else:
+            limit = base * (1.0 - threshold)
+            ok = cur >= limit
+            verdict = f"{cur:.3f} vs baseline {base:.3f} (limit {limit:.3f}, higher is better)"
+        checked.append(f"{key}: {verdict}")
+        if not ok:
+            failures.append(f"{key}: REGRESSION {verdict}")
+    return failures, checked, skipped
+
+
+def self_test():
+    baseline = {
+        "lat_ns": {"value": 100.0, "direction": "lower"},
+        "thru": {"value": 50.0, "direction": "higher"},
+        "unmeasured": {"value": None, "direction": "lower"},
+    }
+    # Within threshold both ways.
+    f, c, s = check(baseline, {"lat_ns": 120.0, "thru": 40.0}, 0.25)
+    assert not f, f
+    assert len(c) == 2 and s == ["unmeasured"]
+    # Latency regression.
+    f, _, _ = check(baseline, {"lat_ns": 126.0, "thru": 50.0}, 0.25)
+    assert len(f) == 1 and "lat_ns" in f[0], f
+    # Throughput regression.
+    f, _, _ = check(baseline, {"lat_ns": 100.0, "thru": 37.0}, 0.25)
+    assert len(f) == 1 and "thru" in f[0], f
+    # Missing probe and -1 sentinel skip, never fail.
+    f, _, s = check(baseline, {"lat_ns": -1.0}, 0.25)
+    assert not f and set(s) == {"lat_ns", "thru", "unmeasured"}
+    # Improvements pass.
+    f, _, _ = check(baseline, {"lat_ns": 10.0, "thru": 500.0}, 0.25)
+    assert not f
+    print("bench_gate self-test: OK")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current")
+    ap.add_argument("--baseline")
+    ap.add_argument("--threshold", type=float, default=0.25)
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="record the current run's values into the baseline file",
+    )
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+    if args.self_test:
+        self_test()
+        return
+    if not args.current or not args.baseline:
+        ap.error("--current and --baseline are required (or use --self-test)")
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    if args.write_baseline:
+        for key, spec in baseline.items():
+            cur = current.get(key)
+            spec["value"] = cur if cur is not None and cur > 0 else None
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"baseline refreshed from {args.current}")
+        return
+
+    failures, checked, skipped = check(baseline, current, args.threshold)
+    for line in checked:
+        print(f"  ok   {line}")
+    for key in skipped:
+        print(f"  skip {key} (unmeasured baseline or missing probe)")
+    if failures:
+        print(f"\nbench gate FAILED ({len(failures)} regression(s) past "
+              f"{args.threshold:.0%}):", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        sys.exit(1)
+    if not checked:
+        print("bench gate: bootstrap mode (no measured baseline values yet) — "
+              "refresh with --write-baseline and commit to arm the gate")
+    else:
+        print(f"bench gate passed ({len(checked)} probes within "
+              f"{args.threshold:.0%})")
+
+
+if __name__ == "__main__":
+    main()
