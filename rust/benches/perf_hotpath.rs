@@ -18,8 +18,8 @@ use common::*;
 use goffish::apps::SsspApp;
 use goffish::datagen::{traceroute, CollectionSource, TraceRouteGenerator, TraceRouteParams};
 use goffish::gofs::{
-    deploy, deploy_template, CollectionAppender, DeployConfig, IngestOptions, Projection,
-    SliceFile,
+    compact_collection, deploy, deploy_template, CollectionAppender, CompactOptions,
+    DeployConfig, IngestOptions, Projection, ReadTrace, SliceFile,
 };
 use goffish::graph::Schema;
 use goffish::gopher::{
@@ -723,6 +723,73 @@ fn main() {
             n_inst,
             "follow run missed appended timesteps"
         );
+        let _ = std::fs::remove_dir_all(&root);
+
+        // Satellite: background group compaction. A pack-1 ingest leaves
+        // one sealed group per timestep; compacting to groups of 8 must
+        // shrink both the group count and the slice reads of a full
+        // projection scan, with bit-identical SSSP before and after.
+        let _ = std::fs::remove_dir_all(&root);
+        deploy_template(&ing_gen, &DeployConfig::new(hosts, 8, 1), &root)
+            .expect("compact probe: template deploy");
+        let mut appender =
+            CollectionAppender::open(&root, IngestOptions::default()).expect("appender");
+        for t in 0..n_inst {
+            appender.append(&ing_gen.instance(t)).expect("append");
+        }
+        drop(appender);
+        let scan_reads = |root: &PathBuf| -> (u64, usize) {
+            let (eng, _m) = engine(root, hosts, 256);
+            let mut reads = 0u64;
+            let mut groups = 0usize;
+            for s in eng.stores() {
+                groups += s.sealed_groups();
+                let proj = Projection::all(s.vertex_schema(), s.edge_schema());
+                for t in 0..s.n_instances() {
+                    for sg in s.subgraphs() {
+                        let mut tr = ReadTrace::default();
+                        s.read_instance_traced(sg.id.local(), t, &proj, &mut tr)
+                            .expect("scan read");
+                        reads += tr.slices_read;
+                    }
+                }
+            }
+            (reads, groups)
+        };
+        let source = ing_gen.template().ext_ids[ing_gen.vantages()[0] as usize];
+        let (reads_before, groups_before) = scan_reads(&root);
+        let (_, fp_before) = sssp_fingerprint(&root, hosts, source, n_inst, true, 4, true);
+        let c0 = std::time::Instant::now();
+        let creport = compact_collection(&root, &CompactOptions::new(8))
+            .expect("compact probe: compaction");
+        let compact_s = c0.elapsed().as_secs_f64();
+        let (reads_after, groups_after) = scan_reads(&root);
+        let (_, fp_after) = sssp_fingerprint(&root, hosts, source, n_inst, true, 4, true);
+        assert_eq!(fp_before, fp_after, "compaction changed SSSP outputs");
+        assert!(
+            groups_after < groups_before && reads_after < reads_before,
+            "compaction must amortize: groups {groups_before}->{groups_after}, \
+             reads {reads_before}->{reads_after}"
+        );
+        let amp = reads_before as f64 / reads_after.max(1) as f64;
+        report.row(&[
+            "compaction".into(),
+            format!("{amp:.2}x"),
+            format!(
+                "fewer slice reads/scan ({groups_before}->{groups_after} groups, \
+                 {} merged)",
+                creport.groups_merged
+            ),
+        ]);
+        json.push(("compact_groups_before".into(), groups_before as f64));
+        json.push(("compact_groups_after".into(), groups_after as f64));
+        json.push(("compact_scan_slices_before".into(), reads_before as f64));
+        json.push(("compact_scan_slices_after".into(), reads_after as f64));
+        json.push(("compact_read_amplification_x".into(), amp));
+        json.push((
+            "compact_ms_per_source_group".into(),
+            compact_s * 1e3 / creport.groups_merged.max(1) as f64,
+        ));
         let _ = std::fs::remove_dir_all(&root);
     }
 

@@ -111,4 +111,44 @@ mod tests {
         assert!(a.switch("quick"));
         assert_eq!(a.get("quick"), None);
     }
+
+    /// Flag names `main.rs` reads through an [`Args`] accessor
+    /// (`args.usize("pack")`, `args.switch("follow")`, …), extracted by
+    /// scanning its source.
+    fn flags_in_main() -> Vec<String> {
+        let src = include_str!("../main.rs");
+        let mut flags = Vec::new();
+        for accessor in
+            [".usize(\"", ".u64(\"", ".f64(\"", ".str(\"", ".get(\"", ".require(\"", ".switch(\""]
+        {
+            let mut rest = src;
+            while let Some(hit) = rest.find(accessor) {
+                let tail = &rest[hit + accessor.len()..];
+                if let Some(end) = tail.find('"') {
+                    let name = &tail[..end];
+                    if !name.is_empty() && !flags.iter().any(|f| f == name) {
+                        flags.push(name.to_string());
+                    }
+                }
+                rest = &rest[hit + accessor.len()..];
+            }
+        }
+        flags
+    }
+
+    /// docs/CLI.md must document every flag the launcher actually parses
+    /// — a flag added to `main.rs` without a row in the doc fails the
+    /// build, so the reference cannot silently rot.
+    #[test]
+    fn cli_doc_covers_every_flag() {
+        let doc = include_str!("../../../docs/CLI.md");
+        let flags = flags_in_main();
+        assert!(flags.len() >= 30, "flag scan looks broken: found only {}", flags.len());
+        let missing: Vec<&String> =
+            flags.iter().filter(|f| !doc.contains(&format!("--{f}"))).collect();
+        assert!(
+            missing.is_empty(),
+            "flags parsed by main.rs but undocumented in docs/CLI.md: {missing:?}"
+        );
+    }
 }

@@ -4,12 +4,13 @@
 //! See the parent module docs for the append → seal → publish lifecycle
 //! and the crash-ordering argument.
 
+use crate::gofs::ingest::compact::{compact_part, CompactOptions, CompactReport};
 use crate::gofs::ingest::wal::{self, WalRecord, WalWriter, WAL_FILE};
 use crate::gofs::reader::{decode_template_slice, PartShared};
 use crate::gofs::slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};
 use crate::gofs::writer::{
     decode_meta_slice, encode_attr_body, encode_meta_slice, part_dir, project_instance_cells,
-    write_collection_manifest, PartMeta,
+    write_collection_manifest, GroupEntry, PartMeta,
 };
 use crate::gofs::SliceKey;
 use crate::graph::{AttrColumn, GraphInstance, Timestep};
@@ -40,11 +41,27 @@ pub struct IngestOptions {
     /// seals and `finish` always flush durably regardless. Only
     /// meaningful while `sync` is on.
     pub group_commit: usize,
+    /// Inline compaction cadence: after every `compact_after` sealed
+    /// groups, re-pack small groups into larger ones
+    /// ([`crate::gofs::ingest::compact`]); 0 (the default) disables it.
+    /// The target group size is `compact_target`, or
+    /// `compact_after × pack` timesteps when that is 0 — i.e. by default
+    /// each cycle folds the newly sealed groups into one.
+    pub compact_after: usize,
+    /// Target timesteps per compacted group (0 = `compact_after × pack`).
+    pub compact_target: usize,
 }
 
 impl Default for IngestOptions {
     fn default() -> Self {
-        IngestOptions { compress: true, slice_version: VERSION_V2, sync: true, group_commit: 1 }
+        IngestOptions {
+            compress: true,
+            slice_version: VERSION_V2,
+            sync: true,
+            group_commit: 1,
+            compact_after: 0,
+            compact_target: 0,
+        }
     }
 }
 
@@ -53,6 +70,13 @@ impl IngestOptions {
     /// `group_commit` field for the durability trade.
     pub fn group_commit(mut self, k: usize) -> Self {
         self.group_commit = k.max(1);
+        self
+    }
+
+    /// Re-pack small sealed groups after every `k` seals; see the
+    /// `compact_after` field.
+    pub fn compact_after(mut self, k: usize) -> Self {
+        self.compact_after = k;
         self
     }
 }
@@ -69,6 +93,9 @@ pub struct IngestStats {
     /// Per-partition WAL fsyncs issued by appends/flushes (group commit
     /// shrinks this relative to `appended * n_parts`).
     pub wal_syncs: u64,
+    /// Group-merge operations performed by inline compaction
+    /// (`IngestOptions::compact_after`), summed over partitions.
+    pub compactions: u64,
     /// Appends that blocked on the follow-mode flow gate (backpressure
     /// probe; see `gofs::ingest::FlowGate`).
     pub backpressure_blocks: u64,
@@ -102,6 +129,9 @@ pub struct CollectionAppender {
     /// Appends since the last WAL fsync (group commit bookkeeping;
     /// always 0 when `group_commit == 1` or `sync` is off).
     unsynced_appends: usize,
+    /// Seals since the last inline compaction pass
+    /// (`IngestOptions::compact_after` cadence).
+    seals_since_compact: usize,
     /// Follow-mode backpressure gate, when attached; `append` blocks
     /// while the consuming run's published lag exceeds the high-water
     /// mark. See `gofs::ingest::FlowGate`.
@@ -132,7 +162,7 @@ impl CollectionAppender {
             }
             let shared = decode_template_slice(&tslice.body)?;
             let (mslice, _) = SliceFile::read_from(&dir.join("meta.slice"))?;
-            let meta = decode_meta_slice(&mslice.body)?;
+            let meta = decode_meta_slice(&mslice.body, mslice.version)?;
             let wal_path = dir.join(WAL_FILE);
             let (records, valid_len) = wal::replay(&wal_path, &shared)?;
             // Drop records an earlier seal already published (crash
@@ -168,6 +198,7 @@ impl CollectionAppender {
             opts,
             stats: IngestStats::default(),
             unsynced_appends: 0,
+            seals_since_compact: 0,
             gate: None,
             poisoned: false,
         };
@@ -377,6 +408,41 @@ impl CollectionAppender {
         )?;
         self.stats.sealed_groups += 1;
         self.stats.seal_wall_s += t0.elapsed().as_secs_f64();
+        self.seals_since_compact += 1;
+        if self.opts.compact_after > 0 && self.seals_since_compact >= self.opts.compact_after {
+            self.compact_now()?;
+            self.seals_since_compact = 0;
+        }
+        Ok(())
+    }
+
+    /// Inline compaction pass over every partition (the
+    /// `IngestOptions::compact_after` cadence). Runs between seals with
+    /// the appender's own in-memory metadata, so appender state and the
+    /// published timeline never diverge. A failure poisons the appender
+    /// like any mid-fan-out failure; reopening recovers (compaction
+    /// crash windows are all replay- or sweep-safe).
+    fn compact_now(&mut self) -> Result<()> {
+        let target = if self.opts.compact_target > 0 {
+            self.opts.compact_target
+        } else {
+            self.opts.compact_after * self.pack
+        };
+        let copts = CompactOptions {
+            target_pack: target,
+            compress: self.opts.compress,
+            slice_version: self.opts.slice_version,
+            ..Default::default()
+        };
+        let mut report = CompactReport::default();
+        for part in self.parts.iter_mut() {
+            if let Err(e) = compact_part(&part.dir, &part.shared, &mut part.meta, &copts, &mut report)
+            {
+                self.poisoned = true;
+                return Err(e);
+            }
+        }
+        self.stats.compactions += report.runs_merged;
         Ok(())
     }
 
@@ -453,7 +519,12 @@ fn seal_part_group(part: &mut PartIngest, group_len: usize, opts: &IngestOptions
     let ea = shared.edge_schema.len();
     let n_bins = shared.bins.n_bins;
     let pack = part.meta.pack;
-    let group = part.meta.n_instances / pack;
+    // Fresh group id from the append-only counter — NOT `t / pack`:
+    // after a compaction the timeline is no longer uniform, and a
+    // retired id must never come back with different content (the
+    // cache-coherence discipline).
+    let group = part.meta.next_group_id;
+    let t_lo = part.meta.n_instances;
     debug_assert_eq!(part.meta.n_instances % pack, 0, "appends require a pack-aligned prefix");
 
     let mut sealed: Vec<WalRecord> = part.tail.drain(..group_len).collect();
@@ -487,18 +558,18 @@ fn seal_part_group(part: &mut PartIngest, group_len: usize, opts: &IngestOptions
         part.meta.windows.push(r.window);
     }
     part.meta.n_instances += group_len;
-    let body = encode_meta_slice(
+    part.meta.groups.push(GroupEntry { id: group, t_lo, len: group_len });
+    part.meta.next_group_id += 1;
+    let slice = encode_meta_slice(
         part.meta.pack,
         part.meta.n_bins,
         part.meta.n_instances,
         &part.meta.windows,
         &part.meta.presence,
+        &part.meta.groups,
+        part.meta.next_group_id,
     );
-    write_slice_durable(
-        &SliceFile::new(SliceKind::Metadata, body),
-        &part.dir.join("meta.slice"),
-        opts.compress,
-    )?;
+    write_slice_durable(&slice, &part.dir.join("meta.slice"), opts.compress)?;
     // (3) drop the sealed records from the WAL, atomically (temp file +
     // rename): the remainder's already-fsynced records must survive a
     // crash at any point in this step.
@@ -514,7 +585,9 @@ fn seal_part_group(part: &mut PartIngest, group_len: usize, opts: &IngestOptions
 /// Write a slice through the shared durable-replace helper (same-dir
 /// temp file + fsync + rename), so a concurrent or post-crash reader
 /// sees either the old file or the complete new one, never a torn write.
-fn write_slice_durable(slice: &SliceFile, path: &Path, compress: bool) -> Result<u64> {
+/// Shared with the compactor, which publishes re-packed groups and their
+/// metadata with the exact same ordering guarantees.
+pub(crate) fn write_slice_durable(slice: &SliceFile, path: &Path, compress: bool) -> Result<u64> {
     let bytes = slice.to_bytes(compress)?;
     wal::replace_file_durable(path, |f| {
         use std::io::Write;

@@ -1,0 +1,468 @@
+//! Background group compaction: re-pack small sealed groups into larger
+//! ones for better read amortization.
+//!
+//! Streaming ingestion fixes the group size at the deploy-time `pack`,
+//! and `finish()` can seal a short tail group — so a collection that
+//! grew through many small appends ends up with many small groups, each
+//! costing one slice read per (attr, bin) to scan. Khurana & Deshpande's
+//! historical-graph store makes the same observation: periodic re-packing
+//! of small deltas into larger snapshots is what keeps read cost bounded
+//! on an ever-growing series. This module is that re-pack for GoFS.
+//!
+//! ### What a compaction pass does (per partition)
+//!
+//! 1. **Sweep** orphaned attribute slices — files no published timeline
+//!    references (left by a crash in an earlier pass) and stray `.tmp`
+//!    files. This makes every crash window below self-healing.
+//! 2. **Plan**: greedily gather runs of ≥ 2 *consecutive* sealed groups
+//!    whose combined length fits `target_pack`.
+//! 3. **Re-pack**: for each run, decode every source slice, concatenate
+//!    the cells in timestep order, re-encode with the deploy codecs and
+//!    write the merged slice under a **fresh group id** via temp-file +
+//!    fsync + rename. Ids come from `PartMeta::next_group_id` and are
+//!    never reused with different content, so resident `SliceCache`
+//!    entries for retired groups go stale-but-unreachable, never wrong —
+//!    the same append-only cache-key discipline seals rely on.
+//! 4. **Publish**: rewrite `meta.slice` (v2 layout with the explicit
+//!    group table) — the atomic point at which readers switch to the
+//!    re-packed timeline.
+//! 5. **Retire**: delete the source groups' slice files (the analog of
+//!    the WAL truncate-after-publish ordering).
+//!
+//! ### Crash windows
+//!
+//! | crash between…                | on-disk state                  | recovery |
+//! |-------------------------------|--------------------------------|----------|
+//! | re-pack start → publish       | old timeline + orphan new-id slices | reads unaffected (old meta never names the new ids); re-run re-plans the same runs, re-allocates the same ids, rewrites identical bytes (encoders are deterministic), or the sweep removes the orphans first |
+//! | publish → retire              | new timeline + orphan old-id slices | reads use the new timeline; the next pass's sweep removes the retired files |
+//! | mid multi-run re-pack         | subset of runs' slices written | same as the first window — nothing is visible until publish |
+//!
+//! Live readers in the same process are coherent through
+//! `Store::refresh` (which detects a re-packed timeline via
+//! `next_group_id`) plus the reader's refresh-and-retry on a vanished
+//! slice, so a read racing step 5 never fails spuriously.
+//!
+//! Compaction requires the same exclusivity as the appender: one writer
+//! (appender or compactor) per collection at a time. The inline cadence
+//! (`IngestOptions::compact_after`) runs it synchronously between seals,
+//! which satisfies that by construction.
+
+use crate::gofs::ingest::appender::write_slice_durable;
+use crate::gofs::reader::{decode_template_slice, PartShared};
+use crate::gofs::slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};
+use crate::gofs::writer::{
+    collection_parts, decode_meta_slice, encode_attr_body, encode_meta_slice, part_dir,
+    GroupEntry, PartMeta,
+};
+use crate::gofs::{colcodec, SliceKey};
+use crate::graph::{AttrColumn, AttrType};
+use crate::util::wire::Dec;
+use anyhow::{bail, Context, Result};
+use std::collections::HashSet;
+use std::ops::Range;
+use std::path::Path;
+use std::time::Instant;
+
+/// Compaction knobs.
+#[derive(Debug, Clone)]
+pub struct CompactOptions {
+    /// Merge runs of consecutive groups up to this many timesteps per
+    /// merged group (0 = 8 × the collection's `pack`).
+    pub target_pack: usize,
+    /// Deflate-compress re-packed slice bodies.
+    pub compress: bool,
+    /// Attribute body format for re-packed groups (v2 default; v1
+    /// sources are decoded and re-encoded, so mixed histories are fine).
+    pub slice_version: u8,
+    /// Test-only fault injection; see `CrashPoint`.
+    #[doc(hidden)]
+    pub crash: CrashPoint,
+}
+
+impl Default for CompactOptions {
+    fn default() -> Self {
+        CompactOptions {
+            target_pack: 0,
+            compress: true,
+            slice_version: VERSION_V2,
+            crash: CrashPoint::None,
+        }
+    }
+}
+
+impl CompactOptions {
+    /// Options targeting `target_pack` timesteps per merged group.
+    pub fn new(target_pack: usize) -> Self {
+        CompactOptions { target_pack, ..Default::default() }
+    }
+}
+
+/// Simulated crash points for the crash-window tests: the pass returns
+/// an error at exactly the chosen point, leaving disk in the state a
+/// real crash there would. Not for production use.
+#[doc(hidden)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CrashPoint {
+    #[default]
+    None,
+    /// After the first planned run's slices are written, before any
+    /// other run and before publish.
+    MidRepack,
+    /// After every run's slices are written, before the metadata publish.
+    BeforePublish,
+    /// After the metadata publish, before the retired slices are deleted.
+    BeforeCleanup,
+}
+
+/// What a compaction pass did (summed over partitions).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CompactReport {
+    pub parts: usize,
+    /// Sealed groups before/after, summed over partitions.
+    pub groups_before: usize,
+    pub groups_after: usize,
+    /// Merged groups written (one per planned run).
+    pub runs_merged: u64,
+    /// Source groups consumed by those runs.
+    pub groups_merged: u64,
+    pub slices_written: u64,
+    pub slices_deleted: u64,
+    pub bytes_written: u64,
+    /// Unreferenced slice/tmp files removed by the recovery sweep.
+    pub orphans_swept: u64,
+    pub wall_s: f64,
+}
+
+/// Compact every partition of the collection rooted at `root`. Safe to
+/// re-run at any time (idempotent once the timeline is compacted); see
+/// the module docs for the crash-ordering argument.
+pub fn compact_collection(root: &Path, opts: &CompactOptions) -> Result<CompactReport> {
+    if !(VERSION_V1..=VERSION_V2).contains(&opts.slice_version) {
+        bail!("compact: unsupported slice_version {}", opts.slice_version);
+    }
+    let t0 = Instant::now();
+    let n_parts = collection_parts(root)?;
+    let mut report = CompactReport { parts: n_parts, ..Default::default() };
+    for p in 0..n_parts {
+        let dir = part_dir(root, p);
+        let (tslice, _) = SliceFile::read_from(&dir.join("template.slice"))?;
+        if tslice.kind != SliceKind::Template {
+            bail!("part {p}: template.slice has wrong kind");
+        }
+        let shared = decode_template_slice(&tslice.body)?;
+        let (mslice, _) = SliceFile::read_from(&dir.join("meta.slice"))?;
+        let mut meta = decode_meta_slice(&mslice.body, mslice.version)?;
+        compact_part(&dir, &shared, &mut meta, opts, &mut report)
+            .with_context(|| format!("compacting part {p}"))?;
+    }
+    report.wall_s = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Greedy run planning: gather maximal runs of consecutive groups whose
+/// combined length fits `target`; only runs of ≥ 2 groups merge (a lone
+/// group gains nothing from a rewrite).
+fn plan_runs(groups: &[GroupEntry], target: usize) -> Vec<Range<usize>> {
+    let mut runs = Vec::new();
+    let mut start = 0usize;
+    let mut total = 0usize;
+    let mut flush = |start: usize, end: usize, runs: &mut Vec<Range<usize>>| {
+        if end - start >= 2 {
+            runs.push(start..end);
+        }
+    };
+    for (k, g) in groups.iter().enumerate() {
+        if total + g.len <= target && total > 0 {
+            total += g.len;
+        } else {
+            flush(start, k, &mut runs);
+            start = k;
+            total = g.len;
+        }
+    }
+    flush(start, groups.len(), &mut runs);
+    runs
+}
+
+/// Compact one partition in place: `meta` is updated to the published
+/// state, so a caller holding it in memory (the appender's inline
+/// cadence) stays coherent with disk.
+pub(crate) fn compact_part(
+    dir: &Path,
+    shared: &PartShared,
+    meta: &mut PartMeta,
+    opts: &CompactOptions,
+    report: &mut CompactReport,
+) -> Result<()> {
+    report.groups_before += meta.groups.len();
+    // (1) Recovery sweep: a crash in an earlier pass can leave slice
+    // files no timeline references (either side of the publish). The
+    // sweep keys strictly off the *published* metadata, so it removes
+    // exactly the unreachable files.
+    report.orphans_swept += sweep_orphans(dir, shared, meta)?;
+
+    let target = if opts.target_pack > 0 { opts.target_pack } else { meta.pack * 8 };
+    let runs = plan_runs(&meta.groups, target);
+    if runs.is_empty() {
+        report.groups_after += meta.groups.len();
+        return Ok(());
+    }
+
+    let va = shared.vertex_schema.len();
+    let ea = shared.edge_schema.len();
+    let n_bins = shared.bins.n_bins;
+
+    // (2)+(3) Re-pack each run under a fresh id. Nothing below is
+    // visible to readers until the metadata publish.
+    for (run_idx, run) in runs.iter().enumerate() {
+        let gid = meta.next_group_id + run_idx;
+        for slot in 0..va + ea {
+            let (vertex, attr) = if slot < va { (true, slot) } else { (false, slot - va) };
+            let ty = if vertex {
+                shared.vertex_schema.attrs[attr].ty
+            } else {
+                shared.edge_schema.attrs[attr].ty
+            };
+            for bin in 0..n_bins {
+                if !run.clone().any(|g| meta.presence[slot][bin][g]) {
+                    continue; // no source slice anywhere in the run
+                }
+                let n_pos = shared.bins.bins[bin].len();
+                let mut cells: Vec<Vec<Option<AttrColumn>>> = Vec::new();
+                for g in run.clone() {
+                    let ge = meta.groups[g];
+                    if meta.presence[slot][bin][g] {
+                        let key = SliceKey { vertex, attr, bin, group: ge.id };
+                        let path = dir.join(key.rel_path());
+                        let (slice, _) = SliceFile::read_from(&path)
+                            .with_context(|| format!("compact: reading source group {}", ge.id))?;
+                        let sub = decode_attr_cells(&slice, ty)
+                            .with_context(|| format!("compact: decoding {}", path.display()))?;
+                        if sub.len() != ge.len {
+                            bail!(
+                                "compact: group {} packs {} timesteps, meta says {}",
+                                ge.id,
+                                sub.len(),
+                                ge.len
+                            );
+                        }
+                        cells.extend(sub);
+                    } else {
+                        cells.extend((0..ge.len).map(|_| vec![None; n_pos]));
+                    }
+                }
+                let body = encode_attr_body(&cells, ty, opts.slice_version);
+                let key = SliceKey { vertex, attr, bin, group: gid };
+                let bytes = write_slice_durable(
+                    &SliceFile::with_version(SliceKind::Attribute, body, opts.slice_version),
+                    &dir.join(key.rel_path()),
+                    opts.compress,
+                )?;
+                report.slices_written += 1;
+                report.bytes_written += bytes;
+            }
+        }
+        if opts.crash == CrashPoint::MidRepack && run_idx == 0 {
+            bail!("simulated crash: mid multi-group re-pack");
+        }
+    }
+    if opts.crash == CrashPoint::BeforePublish {
+        bail!("simulated crash: after re-pack, before metadata publish");
+    }
+
+    // (4) Publish: build the re-packed timeline and presence, then swap
+    // meta.slice atomically. Old state is kept aside for the retire step.
+    let old_groups = meta.groups.clone();
+    let old_presence = meta.presence.clone();
+    let run_starting_at = |k: usize| runs.iter().position(|r| r.start == k);
+    let in_a_run = |k: usize| runs.iter().any(|r| r.contains(&k));
+    let mut new_groups = Vec::new();
+    let mut new_presence: Vec<Vec<Vec<bool>>> =
+        (0..va + ea).map(|_| vec![Vec::new(); n_bins]).collect();
+    for k in 0..old_groups.len() {
+        if let Some(run_idx) = run_starting_at(k) {
+            let run = &runs[run_idx];
+            new_groups.push(GroupEntry {
+                id: meta.next_group_id + run_idx,
+                t_lo: old_groups[run.start].t_lo,
+                len: old_groups[run.clone()].iter().map(|g| g.len).sum(),
+            });
+            for (slot, per_bin) in new_presence.iter_mut().enumerate() {
+                for (bin, bits) in per_bin.iter_mut().enumerate() {
+                    bits.push(run.clone().any(|g| old_presence[slot][bin][g]));
+                }
+            }
+        } else if !in_a_run(k) {
+            new_groups.push(old_groups[k]);
+            for (slot, per_bin) in new_presence.iter_mut().enumerate() {
+                for (bin, bits) in per_bin.iter_mut().enumerate() {
+                    bits.push(old_presence[slot][bin][k]);
+                }
+            }
+        }
+    }
+    meta.groups = new_groups;
+    meta.presence = new_presence;
+    meta.next_group_id += runs.len();
+    let slice = encode_meta_slice(
+        meta.pack,
+        meta.n_bins,
+        meta.n_instances,
+        &meta.windows,
+        &meta.presence,
+        &meta.groups,
+        meta.next_group_id,
+    );
+    write_slice_durable(&slice, &dir.join("meta.slice"), opts.compress)?;
+    report.runs_merged += runs.len() as u64;
+    report.groups_merged += runs.iter().map(|r| r.len()).sum::<usize>() as u64;
+    report.groups_after += meta.groups.len();
+    if opts.crash == CrashPoint::BeforeCleanup {
+        bail!("simulated crash: after metadata publish, before retiring source slices");
+    }
+
+    // (5) Retire the source groups' files — strictly after the publish,
+    // so a crash anywhere above leaves every referenced slice in place.
+    for run in &runs {
+        for g in run.clone() {
+            let ge = old_groups[g];
+            for slot in 0..va + ea {
+                let (vertex, attr) = if slot < va { (true, slot) } else { (false, slot - va) };
+                for bin in 0..n_bins {
+                    if !old_presence[slot][bin][g] {
+                        continue;
+                    }
+                    let key = SliceKey { vertex, attr, bin, group: ge.id };
+                    match std::fs::remove_file(dir.join(key.rel_path())) {
+                        Ok(()) => report.slices_deleted += 1,
+                        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                        Err(e) => {
+                            return Err(e).with_context(|| {
+                                format!("compact: retiring group {}", ge.id)
+                            })
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Delete attribute-slice files the published timeline does not
+/// reference, plus stray `.tmp` files — the recovery sweep for both
+/// compaction crash windows. Requires write exclusivity (no concurrent
+/// sealer), which every compaction entry point guarantees.
+fn sweep_orphans(dir: &Path, shared: &PartShared, meta: &PartMeta) -> Result<u64> {
+    let attr_root = dir.join("attr");
+    if !attr_root.exists() {
+        return Ok(0);
+    }
+    let va = shared.vertex_schema.len();
+    let ea = shared.edge_schema.len();
+    let mut live: HashSet<std::path::PathBuf> = HashSet::new();
+    for slot in 0..va + ea {
+        let (vertex, attr) = if slot < va { (true, slot) } else { (false, slot - va) };
+        for (bin, bits) in meta.presence[slot].iter().enumerate() {
+            for (gslot, &present) in bits.iter().enumerate() {
+                if present {
+                    let key =
+                        SliceKey { vertex, attr, bin, group: meta.groups[gslot].id };
+                    live.insert(dir.join(key.rel_path()));
+                }
+            }
+        }
+    }
+    let mut swept = 0u64;
+    for sub in std::fs::read_dir(&attr_root)? {
+        let sub = sub?.path();
+        if !sub.is_dir() {
+            continue;
+        }
+        for f in std::fs::read_dir(&sub)? {
+            let f = f?.path();
+            let ext = f.extension().and_then(|e| e.to_str());
+            let is_tmp = ext == Some("tmp");
+            let is_slice = ext == Some("slice");
+            if (is_tmp || (is_slice && !live.contains(&f))) && f.is_file() {
+                std::fs::remove_file(&f)
+                    .with_context(|| format!("sweeping orphan {}", f.display()))?;
+                swept += 1;
+            }
+        }
+    }
+    Ok(swept)
+}
+
+/// Decode a whole attribute slice into seal-layout cells
+/// (`cells[t - t_lo][pos]`), either body version. The compactor's read
+/// side: unlike the store's lazy cache path this materializes every
+/// position — a re-pack touches all of them anyway.
+fn decode_attr_cells(slice: &SliceFile, ty: AttrType) -> Result<Vec<Vec<Option<AttrColumn>>>> {
+    if slice.kind != SliceKind::Attribute {
+        bail!("expected attribute slice");
+    }
+    match slice.version {
+        VERSION_V1 => {
+            let mut d = Dec::new(&slice.body);
+            let n_ts = d.varint()? as usize;
+            let n_pos = d.varint()? as usize;
+            let mut cells = Vec::with_capacity(n_ts);
+            for _ in 0..n_ts {
+                let mut row = Vec::with_capacity(n_pos);
+                for _ in 0..n_pos {
+                    row.push(match d.u8()? {
+                        0 => None,
+                        1 => Some(AttrColumn::decode_from(ty, &mut d)?),
+                        x => bail!("bad cell tag {x}"),
+                    });
+                }
+                cells.push(row);
+            }
+            Ok(cells)
+        }
+        VERSION_V2 => {
+            let (n_ts, n_pos, ranges) = colcodec::parse_v2_layout(&slice.body)?;
+            let mut cells: Vec<Vec<Option<AttrColumn>>> =
+                (0..n_ts).map(|_| Vec::with_capacity(n_pos)).collect();
+            for (lo, hi) in ranges {
+                let cols = colcodec::decode_pos_block(&slice.body[lo..hi], ty, n_ts)?;
+                for (t, c) in cols.into_iter().enumerate() {
+                    cells[t].push(c);
+                }
+            }
+            Ok(cells)
+        }
+        v => bail!("unsupported attribute slice version {v}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g(id: usize, t_lo: usize, len: usize) -> GroupEntry {
+        GroupEntry { id, t_lo, len }
+    }
+
+    #[test]
+    fn planning_merges_only_consecutive_fitting_runs() {
+        // Uniform small groups fold up to the target.
+        let groups: Vec<GroupEntry> = (0..5).map(|k| g(k, k * 2, 2)).collect();
+        assert_eq!(plan_runs(&groups, 6), vec![0..3, 3..5]);
+        // Exactly one target's worth merges into one run.
+        assert_eq!(plan_runs(&groups, 10), vec![0..5]);
+        // Target below two groups: nothing to do.
+        assert_eq!(plan_runs(&groups, 3), Vec::<Range<usize>>::new());
+        // A big group splits runs around itself.
+        let mixed = vec![g(0, 0, 2), g(1, 2, 8), g(2, 10, 2), g(3, 12, 2)];
+        assert_eq!(plan_runs(&mixed, 8), vec![2..4]);
+        // A short finish()ed tail folds into the preceding run.
+        let tail = vec![g(0, 0, 4), g(1, 4, 4), g(2, 8, 1)];
+        assert_eq!(plan_runs(&tail, 9), vec![0..3]);
+        // Already compacted: idempotent no-op.
+        let done = vec![g(5, 0, 9)];
+        assert_eq!(plan_runs(&done, 9), Vec::<Range<usize>>::new());
+        assert_eq!(plan_runs(&[], 9), Vec::<Range<usize>>::new());
+    }
+}

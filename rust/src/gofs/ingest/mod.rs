@@ -35,7 +35,7 @@
 //! ### Durability knobs and backpressure
 //!
 //! By default every `append` fsyncs every partition's WAL (crash loses
-//! at most a torn trailing frame). [`IngestOptions::group_commit`]
+//! at most a torn trailing frame). `IngestOptions::group_commit`
 //! relaxes that to one fsync per `k` appends — seals and `finish` still
 //! flush everything durably — trading a bounded window of the most
 //! recent unsynced timesteps for append throughput. In the other
@@ -43,9 +43,21 @@
 //! `StoreOptions::tail_high_water_bytes`) blocks `append` when a live
 //! follow run lags ingest by too many decoded tail bytes.
 
+//! ### Background group compaction
+//!
+//! Ingest fixes the group size at the deploy-time `pack`; [`compact`]
+//! re-packs runs of small sealed groups (including a `finish()`ed short
+//! tail group) into larger ones under fresh group ids, with the same
+//! temp-file + fsync + rename / metadata-publish-last / retire-after-
+//! publish ordering the sealer uses. Run it on demand
+//! ([`compact::compact_collection`], CLI `compact`) or inline on a seal
+//! cadence (`IngestOptions::compact_after`).
+
 pub mod appender;
+pub mod compact;
 pub mod flow;
 pub(crate) mod wal;
 
 pub use appender::{CollectionAppender, IngestOptions, IngestStats};
+pub use compact::{compact_collection, CompactOptions, CompactReport};
 pub use flow::FlowGate;

@@ -68,6 +68,20 @@
 //! rule every scheduled timestep is immutable: a sealed group never
 //! changes, and a committed tail timestep can only transition to an
 //! identical sealed form.
+//!
+//! ### Background compaction (`gofs::ingest::compact`)
+//!
+//! Small sealed groups (a small deploy-time `pack`, or a `finish()`ed
+//! short tail) can be re-packed into larger groups for better read
+//! amortization. Re-packing respects the same discipline: merged groups
+//! are written under **fresh** group ids (ids are append-only, so a
+//! `SliceKey` still never changes meaning and the cache still needs no
+//! invalidation), the re-packed timeline is published atomically through
+//! `meta.slice`, and retired files are deleted only after the publish.
+//! [`Store::refresh`] notices a re-packed timeline even though the
+//! instance count is unchanged, and a read that loses the race against
+//! the retire step refreshes and retries — values are never affected,
+//! only grouping.
 
 pub mod cache;
 pub mod colcodec;
@@ -79,7 +93,10 @@ pub mod writer;
 
 pub use cache::SliceCache;
 pub use disk::DiskModel;
-pub use ingest::{CollectionAppender, FlowGate, IngestOptions, IngestStats};
+pub use ingest::{
+    compact_collection, CollectionAppender, CompactOptions, CompactReport, FlowGate,
+    IngestOptions, IngestStats,
+};
 pub use reader::{open_collection, Projection, ReadTrace, Store, StoreOptions, SubgraphInstance};
 pub use slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};
 pub use writer::{deploy, deploy_template, DeployConfig, DeployReport};

@@ -36,7 +36,7 @@ use crate::gofs::colcodec;
 use crate::gofs::disk::{DiskClock, DiskModel};
 use crate::gofs::ingest::wal;
 use crate::gofs::slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};
-use crate::gofs::writer::{decode_meta_slice, part_dir, PartMeta};
+use crate::gofs::writer::{decode_meta_slice, part_dir, GroupEntry, PartMeta};
 use crate::gofs::SliceKey;
 use crate::metrics::{keys, Metrics};
 use crate::partition::{BinPacking, RemoteEdge, Subgraph};
@@ -77,6 +77,19 @@ impl Projection {
         }
         Ok(p)
     }
+}
+
+/// Marker for the one legal way a sealed slice file disappears: a
+/// concurrent compaction retired its group after this reader resolved it
+/// through a now-stale index. [`Store::read_instance_traced`] refreshes
+/// and retries exactly once when it sees this marker in an error chain.
+const SLICE_VANISHED: &str = "sealed slice retired by a concurrent compaction";
+
+fn err_is_vanished(e: &anyhow::Error) -> bool {
+    // `{:#}` renders the full context chain (both in the vendored anyhow
+    // and upstream), so this survives the planned dependency swap —
+    // upstream's `chain()` yields `&dyn Error`, not `&str`.
+    format!("{e:#}").contains(SLICE_VANISHED)
 }
 
 /// Per-call GoFS load counters. Threading one of these through
@@ -420,7 +433,7 @@ impl Store {
             bail!("partition id mismatch: dir {part}, slice {}", shared.part_id);
         }
         let (mslice, mbytes) = SliceFile::read_from(&dir.join("meta.slice"))?;
-        let meta = decode_meta_slice(&mslice.body)?;
+        let meta = decode_meta_slice(&mslice.body, mslice.version)?;
         opts.metrics.add(keys::SLICES_READ, 2);
         opts.metrics.add(keys::SLICE_BYTES, tbytes + mbytes);
         let disk_clock = DiskClock::default();
@@ -454,14 +467,18 @@ impl Store {
     /// bytes it was decoded from.
     pub fn refresh(&self) -> Result<usize> {
         let (mslice, _) = SliceFile::read_from(&self.dir.join("meta.slice"))?;
-        let new_meta = decode_meta_slice(&mslice.body)?;
+        let new_meta = decode_meta_slice(&mslice.body, mslice.version)?;
         {
             // Idle polls are the common case in follow mode: when neither
             // the sealed count nor the WAL file moved, skip the tail
             // replay entirely. (The stat is taken before each replay, so
             // a grow-after-stat race only costs one extra reload later.)
+            // `next_group_id` moves on every compaction publish, so a
+            // re-packed timeline is never mistaken for an idle poll even
+            // though it leaves the instance count unchanged.
             let index = self.index.read().unwrap();
             if new_meta.n_instances == index.meta.n_instances
+                && new_meta.next_group_id == index.meta.next_group_id
                 && wal_file_len(&self.dir) == index.tail.wal_len
             {
                 return Ok(0);
@@ -497,6 +514,13 @@ impl Store {
     /// Timesteps sealed into published slice groups.
     pub fn sealed_instances(&self) -> usize {
         self.index.read().unwrap().meta.n_instances
+    }
+
+    /// Published slice groups in this partition's timeline. Compaction
+    /// (`gofs::ingest::compact`) shrinks this without changing
+    /// [`Store::sealed_instances`].
+    pub fn sealed_groups(&self) -> usize {
+        self.index.read().unwrap().meta.groups.len()
     }
 
     /// Timesteps served from the in-memory WAL tail.
@@ -626,7 +650,36 @@ impl Store {
     /// still in the open tail are served from the decoded WAL replay —
     /// zero slice reads, zero cache traffic (the counters in `trace`
     /// reflect that).
+    ///
+    /// A read can race a background compaction (`gofs::ingest::compact`):
+    /// the compactor publishes a re-packed timeline and then deletes the
+    /// retired groups' files, so a reader holding the pre-publish index
+    /// may find a slice file gone. That is the one legal way a sealed
+    /// slice disappears, and it always comes with a newer `meta.slice`
+    /// naming the replacement — so the read refreshes the index and
+    /// retries once before giving up.
     pub fn read_instance_traced(
+        &self,
+        sg_local: usize,
+        t: Timestep,
+        proj: &Projection,
+        trace: &mut ReadTrace,
+    ) -> Result<SubgraphInstance> {
+        let mut attempts = 0usize;
+        loop {
+            match self.read_instance_attempt(sg_local, t, proj, trace) {
+                Err(e) if err_is_vanished(&e) && attempts < 3 => {
+                    attempts += 1;
+                    self.refresh()?;
+                }
+                out => return out,
+            }
+        }
+    }
+
+    /// One attempt at [`Store::read_instance_traced`] against the current
+    /// index snapshot.
+    fn read_instance_attempt(
         &self,
         sg_local: usize,
         t: Timestep,
@@ -668,14 +721,17 @@ impl Store {
             });
         }
 
-        let group = t / index.meta.pack;
+        let (gslot, gentry) = index
+            .meta
+            .group_for(t)
+            .with_context(|| format!("timestep {t}: no sealed group covers it"))?;
         let mut vcols = vec![None; self.shared.vertex_schema.len()];
         for &a in &proj.vertex_attrs {
-            vcols[a] = self.attr_column(&index.meta, true, a, bin, group, t, pos, trace)?;
+            vcols[a] = self.attr_column(&index.meta, true, a, bin, gslot, gentry, t, pos, trace)?;
         }
         let mut ecols = vec![None; self.shared.edge_schema.len()];
         for &a in &proj.edge_attrs {
-            ecols[a] = self.attr_column(&index.meta, false, a, bin, group, t, pos, trace)?;
+            ecols[a] = self.attr_column(&index.meta, false, a, bin, gslot, gentry, t, pos, trace)?;
         }
         Ok(SubgraphInstance {
             shared: self.shared.clone(),
@@ -704,22 +760,23 @@ impl Store {
         vertex: bool,
         attr: usize,
         bin: usize,
-        group: usize,
+        gslot: usize,
+        gentry: GroupEntry,
         t: Timestep,
         pos: usize,
         trace: &mut ReadTrace,
     ) -> Result<Option<Arc<AttrColumn>>> {
         let slot = if vertex { attr } else { self.shared.vertex_schema.len() + attr };
-        if !meta.presence[slot][bin][group] {
+        if !meta.presence[slot][bin][gslot] {
             return Ok(None); // slice was never written: no values
         }
-        let key = SliceKey { vertex, attr, bin, group };
+        let key = SliceKey { vertex, attr, bin, group: gentry.id };
         let ty = if vertex {
             self.shared.vertex_schema.attrs[attr].ty
         } else {
             self.shared.edge_schema.attrs[attr].ty
         };
-        let t_lo = group * meta.pack;
+        let t_lo = gentry.t_lo;
         let mut read_bytes = 0u64;
         let mut read_disk_ns = 0u64;
         let mut did_read = false;
@@ -728,7 +785,19 @@ impl Store {
             let m = &self.opts.metrics;
             let ((slice, bytes), real_ns) = {
                 let t0 = std::time::Instant::now();
-                let r = SliceFile::read_from(&path)?;
+                let r = match SliceFile::read_from(&path) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        if !path.exists() {
+                            // The one legal disappearance: a concurrent
+                            // compaction retired this group after we
+                            // resolved it. The caller refreshes and
+                            // retries against the re-packed timeline.
+                            bail!("{SLICE_VANISHED}: {}", path.display());
+                        }
+                        return Err(e);
+                    }
+                };
                 (r, t0.elapsed().as_nanos() as u64)
             };
             let sim = self.disk_clock.charge(&self.opts.disk, bytes);

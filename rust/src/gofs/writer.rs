@@ -218,12 +218,19 @@ pub fn deploy(
     }
 
     // --- Metadata slices. ---
+    let groups = uniform_groups(n_instances, cfg.pack);
     for l in &layouts {
-        let body =
-            encode_meta_slice(cfg.pack, cfg.n_bins, n_instances, &windows, &presence[l.part_id]);
+        let slice = encode_meta_slice(
+            cfg.pack,
+            cfg.n_bins,
+            n_instances,
+            &windows,
+            &presence[l.part_id],
+            &groups,
+            groups.len(),
+        );
         let path = part_dir(out_dir, l.part_id).join("meta.slice");
-        report.bytes_written +=
-            SliceFile::new(SliceKind::Metadata, body).write_to(&path, cfg.compress)?;
+        report.bytes_written += slice.write_to(&path, cfg.compress)?;
         report.slices_written += 1;
     }
 
@@ -410,15 +417,84 @@ fn encode_template_slice(l: &PartLayout, vs: &Schema, es: &Schema) -> Vec<u8> {
     e.finish()
 }
 
-/// Encode a partition's metadata slice. Shared by batch deployment and
-/// the ingest sealer (which republishes it after every sealed group).
+/// One sealed slice group in a partition's timeline: `len` consecutive
+/// timesteps starting at `t_lo`, stored in slice files keyed by `id`
+/// (`SliceKey::group`).
+///
+/// Group ids are **append-only**: an id, once published, forever names
+/// the same bytes. The background compactor re-packs small groups under
+/// *fresh* ids (from `PartMeta::next_group_id`) and retires the old ones,
+/// so a resident `SliceCache` entry can go stale-but-unreachable, never
+/// wrong — the same no-invalidation discipline streaming seals rely on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct GroupEntry {
+    /// Slice-file group id (`SliceKey::group`).
+    pub id: usize,
+    /// First timestep the group packs.
+    pub t_lo: usize,
+    /// Number of timesteps packed.
+    pub len: usize,
+}
+
+/// The uniform timeline batch deployment and streaming seals produce:
+/// group `k` packs `[k·pack, (k+1)·pack)` under id `k` (a short final
+/// group for a partial tail).
+pub(crate) fn uniform_groups(n_instances: usize, pack: usize) -> Vec<GroupEntry> {
+    (0..n_instances.div_ceil(pack))
+        .map(|k| GroupEntry {
+            id: k,
+            t_lo: k * pack,
+            len: pack.min(n_instances - k * pack),
+        })
+        .collect()
+}
+
+/// True when `groups` is exactly the layout [`uniform_groups`] yields and
+/// no extra ids were ever allocated — the condition under which the
+/// legacy (container-v1) metadata encoding loses nothing.
+fn groups_are_uniform(
+    groups: &[GroupEntry],
+    n_instances: usize,
+    pack: usize,
+    next_group_id: usize,
+) -> bool {
+    next_group_id == groups.len()
+        && groups.len() == n_instances.div_ceil(pack)
+        && groups.iter().enumerate().all(|(k, g)| {
+            g.id == k && g.t_lo == k * pack && g.len == pack.min(n_instances - g.t_lo)
+        })
+}
+
+/// Encode a partition's metadata slice. Shared by batch deployment, the
+/// ingest sealer (which republishes it after every sealed group) and the
+/// compactor (which republishes it after every re-pack).
+///
+/// Two container versions, dispatched by the `SliceFile` version byte:
+///
+/// * **v1** — the legacy layout with no group table; the timeline is
+///   implied uniform (`group k = timesteps [k·pack, (k+1)·pack)`).
+///   Written whenever the timeline *is* uniform, so deployments and
+///   streamed collections that were never compacted stay byte-identical
+///   to what older binaries wrote.
+/// * **v2** — an explicit group table (`id`, `len` per group; `t_lo` is
+///   cumulative) plus `next_group_id`, inserted between the windows and
+///   the presence section. Written once compaction has made group sizes
+///   non-uniform. The presence bitmaps are sized by the *table* length,
+///   not `n_instances / pack`.
 pub(crate) fn encode_meta_slice(
     pack: usize,
     n_bins: usize,
     n_instances: usize,
     windows: &[TimeWindow],
     presence: &[Vec<Vec<bool>>],
-) -> Vec<u8> {
+    groups: &[GroupEntry],
+    next_group_id: usize,
+) -> SliceFile {
+    debug_assert_eq!(groups.iter().map(|g| g.len).sum::<usize>(), n_instances);
+    debug_assert!(presence
+        .iter()
+        .all(|slot| slot.iter().all(|bin| bin.len() == groups.len())));
+    let uniform = groups_are_uniform(groups, n_instances, pack, next_group_id);
     let mut e = Enc::new();
     e.varint(n_instances as u64);
     e.varint(pack as u64);
@@ -426,6 +502,14 @@ pub(crate) fn encode_meta_slice(
     for w in windows {
         e.varint(w.start as u64);
         e.varint(w.end as u64);
+    }
+    if !uniform {
+        e.varint(groups.len() as u64);
+        for g in groups {
+            e.varint(g.id as u64);
+            e.varint(g.len as u64);
+        }
+        e.varint(next_group_id as u64);
     }
     e.varint(presence.len() as u64); // attr slots
     for slot in presence {
@@ -442,7 +526,8 @@ pub(crate) fn encode_meta_slice(
             }
         }
     }
-    e.finish()
+    let version = if uniform { VERSION_V1 } else { VERSION_V2 };
+    SliceFile::with_version(SliceKind::Metadata, e.finish(), version)
 }
 
 /// Decoded metadata (reader side).
@@ -452,11 +537,41 @@ pub(crate) struct PartMeta {
     #[allow(dead_code)] // layout introspection
     pub n_bins: usize,
     pub windows: Vec<TimeWindow>,
-    /// presence[attr_slot][bin][group]
+    /// presence[attr_slot][bin][group_slot] — indexed by position in
+    /// `groups`, NOT by group id.
     pub presence: Vec<Vec<Vec<bool>>>,
+    /// Sealed-group timeline, ordered by `t_lo` and covering
+    /// `[0, n_instances)` exactly.
+    pub groups: Vec<GroupEntry>,
+    /// Next slice-group id to allocate (strictly monotone; see
+    /// [`GroupEntry`]).
+    pub next_group_id: usize,
 }
 
-pub(crate) fn decode_meta_slice(body: &[u8]) -> Result<PartMeta> {
+impl PartMeta {
+    /// Resolve the group holding timestep `t`: its position in the table
+    /// (the presence index) and the entry itself.
+    pub fn group_for(&self, t: Timestep) -> Option<(usize, GroupEntry)> {
+        if t >= self.n_instances {
+            return None;
+        }
+        let k = self
+            .groups
+            .binary_search_by(|g| {
+                if t < g.t_lo {
+                    std::cmp::Ordering::Greater
+                } else if t >= g.t_lo + g.len {
+                    std::cmp::Ordering::Less
+                } else {
+                    std::cmp::Ordering::Equal
+                }
+            })
+            .ok()?;
+        Some((k, self.groups[k]))
+    }
+}
+
+pub(crate) fn decode_meta_slice(body: &[u8], version: u8) -> Result<PartMeta> {
     let mut d = Dec::new(body);
     let n_instances = d.varint()? as usize;
     let pack = d.varint()? as usize;
@@ -467,7 +582,33 @@ pub(crate) fn decode_meta_slice(body: &[u8]) -> Result<PartMeta> {
         let end = d.varint()? as i64;
         windows.push(TimeWindow::new(start, end));
     }
-    let n_groups = n_instances.div_ceil(pack);
+    let (groups, next_group_id) = if version >= VERSION_V2 {
+        let n_groups = d.varint()? as usize;
+        let mut groups = Vec::with_capacity(n_groups);
+        let mut t_lo = 0usize;
+        for _ in 0..n_groups {
+            let id = d.varint()? as usize;
+            let len = d.varint()? as usize;
+            if len == 0 {
+                bail!("meta: empty group in table");
+            }
+            groups.push(GroupEntry { id, t_lo, len });
+            t_lo += len;
+        }
+        if t_lo != n_instances {
+            bail!("meta: group table covers {t_lo} timesteps, expected {n_instances}");
+        }
+        let next = d.varint()? as usize;
+        if groups.iter().any(|g| g.id >= next) {
+            bail!("meta: group id at or past next_group_id");
+        }
+        (groups, next)
+    } else {
+        let groups = uniform_groups(n_instances, pack);
+        let next = groups.len();
+        (groups, next)
+    };
+    let n_groups = groups.len();
     let slots = d.varint()? as usize;
     let mut presence = vec![vec![vec![false; n_groups]; n_bins]; slots];
     for slot in presence.iter_mut() {
@@ -482,7 +623,7 @@ pub(crate) fn decode_meta_slice(body: &[u8]) -> Result<PartMeta> {
             }
         }
     }
-    Ok(PartMeta { n_instances, pack, n_bins, windows, presence })
+    Ok(PartMeta { n_instances, pack, n_bins, windows, presence, groups, next_group_id })
 }
 
 #[cfg(test)]
@@ -522,12 +663,17 @@ mod tests {
         let cfg = DeployConfig::new(2, 3, 4);
         deploy(&gen, &cfg, &dir).unwrap();
         let (s, _) = SliceFile::read_from(&part_dir(&dir, 0).join("meta.slice")).unwrap();
-        let meta = decode_meta_slice(&s.body).unwrap();
+        assert_eq!(s.version, VERSION_V1, "uniform timelines stay on the legacy layout");
+        let meta = decode_meta_slice(&s.body, s.version).unwrap();
         assert_eq!(meta.n_instances, 12);
         assert_eq!(meta.pack, 4);
         assert_eq!(meta.n_bins, 3);
         assert_eq!(meta.windows.len(), 12);
         assert_eq!(meta.windows[1].start, 2 * 3600 * 1);
+        assert_eq!(meta.groups, uniform_groups(12, 4));
+        assert_eq!(meta.next_group_id, 3);
+        assert_eq!(meta.group_for(5), Some((1, GroupEntry { id: 1, t_lo: 4, len: 4 })));
+        assert_eq!(meta.group_for(12), None);
         // Some attribute slice must be present somewhere.
         assert!(meta
             .presence
@@ -551,6 +697,44 @@ mod tests {
         );
         std::fs::remove_dir_all(&d1).unwrap();
         std::fs::remove_dir_all(&d20).unwrap();
+    }
+
+    /// A non-uniform timeline (post-compaction) round-trips through the
+    /// v2 metadata layout with its group table, ids and presence intact.
+    #[test]
+    fn non_uniform_group_table_roundtrips() {
+        let windows: Vec<TimeWindow> =
+            (0..6).map(|t| TimeWindow::new(t * 10, (t + 1) * 10)).collect();
+        // 6 instances at pack 2, compacted: [0,4) under fresh id 3, the
+        // short tail [4,6) still under its original id 2.
+        let groups = vec![
+            GroupEntry { id: 3, t_lo: 0, len: 4 },
+            GroupEntry { id: 2, t_lo: 4, len: 2 },
+        ];
+        let presence = vec![vec![vec![true, false], vec![false, true]]];
+        let slice = encode_meta_slice(2, 2, 6, &windows, &presence, &groups, 4);
+        assert_eq!(slice.version, VERSION_V2);
+        let meta = decode_meta_slice(&slice.body, slice.version).unwrap();
+        assert_eq!(meta.n_instances, 6);
+        assert_eq!(meta.pack, 2);
+        assert_eq!(meta.groups, groups);
+        assert_eq!(meta.next_group_id, 4);
+        assert_eq!(meta.presence, presence);
+        for t in 0..4 {
+            assert_eq!(meta.group_for(t), Some((0, groups[0])), "t{t}");
+        }
+        for t in 4..6 {
+            assert_eq!(meta.group_for(t), Some((1, groups[1])), "t{t}");
+        }
+        assert_eq!(meta.group_for(6), None);
+        // A uniform table re-encodes on v1 and reads back identically.
+        let uni = uniform_groups(6, 2);
+        let pres = vec![vec![vec![true; 3]; 2]];
+        let slice = encode_meta_slice(2, 2, 6, &windows, &pres, &uni, 3);
+        assert_eq!(slice.version, VERSION_V1);
+        let meta = decode_meta_slice(&slice.body, slice.version).unwrap();
+        assert_eq!(meta.groups, uni);
+        assert_eq!(meta.presence, pres);
     }
 
     #[test]

@@ -49,22 +49,42 @@
 //!
 //! ### Continuous runs over growing collections (`RunOptions::follow`)
 //!
-//! With [`RunOptions::follow`], a sequential run does not stop at the
-//! collection's current end: when it drains the known timesteps it calls
+//! With [`RunOptions::follow`] a run does not stop at the collection's
+//! current end: when it drains the known timesteps it calls
 //! [`GopherEngine::refresh`] — which re-reads each store's metadata and
 //! WAL tail (`gofs::ingest`) — and keeps executing timesteps as they
-//! become visible on *every* host, reusing the prefetch ring. Contract:
-//! every timestep the minimum-across-hosts instance count ever covered
-//! is processed exactly once, in order; already-sealed groups are never
-//! re-read for tail growth (their cache keys are immutable); and the run
-//! ends after [`RunOptions::follow_idle_polls`] consecutive empty polls
-//! spaced [`RunOptions::follow_poll_ms`] apart (0 = poll forever).
-//! Cross-timestep messages flow exactly as in a batch sequential run;
-//! `ctx.n_timesteps` reports `usize::MAX` since the series is unbounded.
+//! become visible on *every* host. Contract: every timestep the
+//! minimum-across-hosts instance count ever covered is processed exactly
+//! once; already-sealed groups are never re-read for tail growth (their
+//! cache keys are immutable); and the run ends after
+//! [`RunOptions::follow_idle_polls`] consecutive empty polls spaced
+//! [`RunOptions::follow_poll_ms`] apart (0 = poll forever).
+//!
+//! * **Sequential**: timesteps execute strictly in order, reusing the
+//!   prefetch ring; cross-timestep messages flow exactly as in a batch
+//!   run. `ctx.n_timesteps` reports `usize::MAX` (the series is
+//!   unbounded).
+//! * **Independent / EventuallyDependent**: the driver thread feeds the
+//!   temporal pool's work queue from `refresh` (`PoolFeed`); loaders
+//!   and compute workers block for their claimed timestep to become
+//!   visible, so pool runs stay live over a growing collection. The
+//!   merge contract extends to the unbounded series through *emission
+//!   hooks* fired in timestep order as the contiguous completed prefix
+//!   advances: `Application::on_timestep_complete` (per-timestep
+//!   emission, independent pattern) and `Application::merge_incremental`
+//!   (incremental merge emission, eventually-dependent pattern). The
+//!   final `Application::merge` still runs when the follow run ends,
+//!   over the full series in timestep order — so a follow run's outputs
+//!   are bit-identical to a batch run over the same final collection.
+//!
+//! Either way the run publishes its lag through the PR 4 flow gate
+//! ([`GopherEngine::flow_gate`]) — the sequential loop from its next
+//! timestep, the pool from its completed watermark — and closes the gate
+//! on every exit path.
 //!
 //! ### Message routing (overlapped with compute)
 //!
-//! Routing is two-phase. **Staging** ([`stage_outbox`]) groups one
+//! Routing is two-phase. **Staging** (`stage_outbox`) groups one
 //! subgraph's outbox per destination subgraph and pushes the groups —
 //! tagged with the source's item index — into per-destination shards;
 //! with [`RunOptions::overlap_routing`] (default) each compute worker
@@ -73,7 +93,10 @@
 //! same overlap idea as the instance prefetcher, one level down). The
 //! **barrier** then folds the per-item audits in item order, sorts each
 //! destination's chunks by source index, and delivers each group with
-//! one bulk `extend`.
+//! one bulk `extend`, fanning the delivery loop out over the worker pool
+//! when more than one destination has traffic (destinations are
+//! disjoint, so the fan-out cannot reorder anything a destination
+//! observes).
 //!
 //! Determinism contract: delivery order per destination is (source item
 //! index, send order within that source) — exactly the order a
@@ -124,10 +147,15 @@ use crate::gopher::{Application, ComputeCtx, Outbox, Pattern, Payload, SubgraphP
 use crate::metrics::{keys, Metrics};
 use crate::partition::Subgraph;
 use anyhow::{anyhow, bail, Result};
-use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
+
+/// Per-timestep merge-message buffers: ordered by timestep so the final
+/// `Application::merge` (and the incremental emission hooks) see a
+/// deterministic message order regardless of pool scheduling.
+type MergeMap = Mutex<BTreeMap<Timestep, Vec<Payload>>>;
 
 /// Per-run options.
 #[derive(Debug, Clone)]
@@ -159,7 +187,9 @@ pub struct RunOptions {
     pub overlap_routing: bool,
     /// Keep running past the collection's current end, polling
     /// [`GopherEngine::refresh`] for timesteps a `gofs::ingest` appender
-    /// publishes while the run is live. Sequential pattern only.
+    /// publishes while the run is live. All three patterns: the
+    /// sequential loop extends its in-order queue, the temporal pool's
+    /// work queue is fed live (see the module docs' follow section).
     pub follow: bool,
     /// Delay between refresh polls when no new timesteps are visible.
     pub follow_poll_ms: u64,
@@ -434,16 +464,143 @@ impl PoolQueue {
     }
 }
 
+/// Follow-mode feed for the temporal pool: the driver (the thread that
+/// called `run`) grows `known` as [`GopherEngine::refresh`] makes new
+/// timesteps visible on every host; loaders and compute workers block in
+/// [`PoolFeed::wait_known`] for the index they claimed. `end` releases
+/// everyone — clean end, idle budget exhausted, error, or abort. For a
+/// batch (non-follow) run the feed is constructed already ended with the
+/// full queue known, which reduces `wait_known` to the old `i >= n_ts`
+/// bounds check.
+struct PoolFeed {
+    /// Queue length visible to workers (monotone; grown under `mx`).
+    known: AtomicUsize,
+    ended: AtomicBool,
+    mx: Mutex<()>,
+    cv: Condvar,
+}
+
+impl PoolFeed {
+    fn new(known: usize, ended: bool) -> PoolFeed {
+        PoolFeed {
+            known: AtomicUsize::new(known),
+            ended: AtomicBool::new(ended),
+            mx: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn known(&self) -> usize {
+        self.known.load(Ordering::Acquire)
+    }
+
+    fn ended(&self) -> bool {
+        self.ended.load(Ordering::Acquire)
+    }
+
+    /// Block until queue index `i` is inside the known queue; false when
+    /// the feed ended first (no more timesteps will ever arrive).
+    fn wait_known(&self, i: usize) -> bool {
+        if i < self.known() {
+            return true;
+        }
+        let mut g = self.mx.lock().unwrap();
+        loop {
+            if i < self.known() {
+                return true;
+            }
+            if self.ended() {
+                return false;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn grow(&self, n: usize) {
+        let _g = self.mx.lock().unwrap();
+        debug_assert!(n >= self.known());
+        self.known.store(n, Ordering::Release);
+        self.cv.notify_all();
+    }
+
+    fn end(&self) {
+        let _g = self.mx.lock().unwrap();
+        self.ended.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+}
+
+/// Completion watermark over the pool's timestep queue: timesteps finish
+/// out of order, but the emission hooks
+/// ([`Application::on_timestep_complete`],
+/// [`Application::merge_incremental`]) fire in queue order as the
+/// contiguous completed prefix advances. The hooks run under this lock —
+/// that is what serializes their order across pool workers.
+struct Progress {
+    state: Mutex<ProgressState>,
+}
+
+struct ProgressState {
+    done: Vec<bool>,
+    /// First queue index not yet complete.
+    watermark: usize,
+}
+
+impl Progress {
+    fn new(n: usize) -> Progress {
+        Progress { state: Mutex::new(ProgressState { done: vec![false; n], watermark: 0 }) }
+    }
+
+    /// First queue index not yet complete — the pool's follow-mode lag
+    /// anchor (everything before it is fully computed).
+    fn watermark(&self) -> usize {
+        self.state.lock().unwrap().watermark
+    }
+
+    /// Mark queue index `i` complete and fire the emission hooks for
+    /// every timestep the contiguous completed prefix just gained.
+    fn complete(
+        &self,
+        i: usize,
+        app: &dyn Application,
+        ts_at: &dyn Fn(usize) -> Timestep,
+        merge_map: &MergeMap,
+        emit_merge: bool,
+    ) {
+        let mut s = self.state.lock().unwrap();
+        if s.done.len() <= i {
+            s.done.resize(i + 1, false);
+        }
+        s.done[i] = true;
+        while s.watermark < s.done.len() && s.done[s.watermark] {
+            let t = ts_at(s.watermark);
+            app.on_timestep_complete(t);
+            if emit_merge {
+                let msgs = merge_map.lock().unwrap().get(&t).cloned().unwrap_or_default();
+                app.merge_incremental(t, msgs);
+            }
+            s.watermark += 1;
+        }
+    }
+}
+
 /// Scope guard for pool threads: a loader or computer that panics must
-/// abort the queue on its way out, or its peers would block forever on
-/// a publish/take that never comes (and `thread::scope` would then wait
-/// forever instead of propagating the panic).
-struct PoolAbortOnPanic<'a>(&'a PoolQueue);
+/// abort the queue and end the feed on its way out, or its peers would
+/// block forever on a publish/take/wait that never comes (and
+/// `thread::scope` would then wait forever instead of propagating the
+/// panic).
+struct PoolAbortOnPanic<'a> {
+    queue: Option<&'a PoolQueue>,
+    feed: &'a PoolFeed,
+}
 
 impl Drop for PoolAbortOnPanic<'_> {
     fn drop(&mut self) {
         if std::thread::panicking() {
-            self.0.abort();
+            if let Some(q) = self.queue {
+                q.abort();
+            }
+            self.feed.end();
         }
     }
 }
@@ -515,16 +672,8 @@ impl GopherEngine {
     /// Run `app` to completion. Returns per-timestep stats.
     pub fn run(&self, app: &dyn Application, opts: &RunOptions) -> Result<RunStats> {
         let t0 = Instant::now();
-        if opts.follow {
-            if app.pattern() != Pattern::Sequential {
-                bail!(
-                    "RunOptions::follow requires the Sequential pattern (got {:?})",
-                    app.pattern()
-                );
-            }
-            if opts.timesteps.is_some() || opts.time_range.is_some() {
-                bail!("RunOptions::follow cannot combine with explicit timesteps or a time range");
-            }
+        if opts.follow && (opts.timesteps.is_some() || opts.time_range.is_some()) {
+            bail!("RunOptions::follow cannot combine with explicit timesteps or a time range");
         }
         let timesteps: Vec<Timestep> = match (&opts.timesteps, &opts.time_range) {
             (Some(ts), _) => ts.clone(),
@@ -544,7 +693,29 @@ impl GopherEngine {
         let proj = app.projection(self.stores[0].vertex_schema(), self.stores[0].edge_schema());
 
         let mut stats = RunStats::default();
-        let merge_msgs: Mutex<Vec<Payload>> = Mutex::new(Vec::new());
+        let merge_msgs: MergeMap = Mutex::new(BTreeMap::new());
+
+        // Whatever happens below — clean end, error, or a panic
+        // unwinding out of a compute scope — a follow consumer that
+        // stops consuming must release any appender blocked on the flow
+        // gate. Drop guard, re-resolved at drop time so an appender that
+        // attached mid-run is covered too. (A previous follow run may
+        // have closed the gate on its way out; this run is the consumer
+        // now.)
+        struct FollowGateGuard<'a>(&'a GopherEngine);
+        impl Drop for FollowGateGuard<'_> {
+            fn drop(&mut self) {
+                if let Some(gate) = self.0.flow_gate.get() {
+                    gate.close();
+                }
+            }
+        }
+        if opts.follow {
+            if let Some(gate) = self.flow_gate.get() {
+                gate.reopen();
+            }
+        }
+        let _gate_guard = opts.follow.then(|| FollowGateGuard(self));
 
         match app.pattern() {
             Pattern::Sequential => {
@@ -557,27 +728,6 @@ impl GopherEngine {
                 let proj_ref = &proj;
                 let load_workers = opts.workers;
                 let n_ts_known = timesteps.len();
-                if opts.follow {
-                    // A previous follow run may have closed the gate on
-                    // its way out; this run is the consumer now.
-                    if let Some(gate) = self.flow_gate.get() {
-                        gate.reopen();
-                    }
-                }
-                // Whatever happens below — clean end, error, or a panic
-                // unwinding out of the compute scope — a consumer that
-                // stops consuming must release any appender blocked on
-                // the gate. Drop guard, re-resolved at drop time so an
-                // appender that attached mid-run is covered too.
-                struct FollowGateGuard<'a>(&'a GopherEngine);
-                impl Drop for FollowGateGuard<'_> {
-                    fn drop(&mut self) {
-                        if let Some(gate) = self.0.flow_gate.get() {
-                            gate.close();
-                        }
-                    }
-                }
-                let _gate_guard = opts.follow.then(|| FollowGateGuard(self));
                 let result: Result<()> = std::thread::scope(|scope| {
                     let mut queue = timesteps;
                     let mut i = 0usize;
@@ -694,6 +844,9 @@ impl GopherEngine {
                         carry = next;
                         stats.per_timestep.push(ts_stats);
                         self.metrics.incr(keys::TIMESTEPS);
+                        // Sequential runs complete strictly in order, so
+                        // the emission watermark is simply "this one".
+                        app.on_timestep_complete(t);
                         i += 1;
                     }
                     Ok(())
@@ -706,26 +859,51 @@ impl GopherEngine {
                 // prefetch is on — by a shared queue of pre-loaded
                 // timesteps so loads overlap the pool's compute instead
                 // of serializing load-then-compute inside each worker.
-                let tw = opts.temporal_workers.max(1).min(timesteps.len());
+                // Under follow mode the driver thread grows the feed
+                // from refresh() while loaders and computers block for
+                // their claimed index (see the module docs).
+                let follow = opts.follow;
+                let tw = if follow {
+                    opts.temporal_workers.max(1)
+                } else {
+                    opts.temporal_workers.max(1).min(timesteps.len())
+                };
                 let inner_workers = (opts.workers / tw).max(1);
                 let results: Mutex<Vec<TimestepStats>> = Mutex::new(Vec::new());
                 let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
-                let n_ts = timesteps.len();
+                let n_ts_known = timesteps.len();
                 let pattern = app.pattern();
+                // A follow queue is dense from 0 (explicit lists are
+                // rejected at entry), so queue index == timestep.
+                let ts_at = |i: usize| -> Timestep { if follow { i } else { timesteps[i] } };
+                let feed = PoolFeed::new(n_ts_known, !follow);
+                let progress = Progress::new(n_ts_known);
+                let complete_one = |i: usize| {
+                    progress.complete(
+                        i,
+                        app,
+                        &ts_at,
+                        &merge_msgs,
+                        pattern == Pattern::EventuallyDependent,
+                    );
+                };
                 let run_one = |i: usize,
                                loaded: LoadedTimestep,
                                overlap_s: f64|
                  -> Result<TimestepStats> {
-                    let t = timesteps[i];
+                    let t = ts_at(i);
                     self.metrics.add(keys::LOAD_NS, (loaded.load_wall_s * 1e9) as u64);
                     if overlap_s > 0.0 {
                         self.metrics.incr(keys::PREFETCHED_TIMESTEPS);
                         self.metrics.add(keys::LOAD_OVERLAP_NS, (overlap_s * 1e9) as u64);
                     }
+                    // An open-ended follow run never has a "last"
+                    // timestep for apps to special-case.
+                    let n_ts_ctx = if follow { usize::MAX } else { n_ts_known };
                     let (ts_stats, next) = self.run_timestep(
                         app,
                         t,
-                        n_ts,
+                        n_ts_ctx,
                         loaded,
                         overlap_s,
                         HashMap::new(),
@@ -762,9 +940,11 @@ impl GopherEngine {
                         for _ in 0..n_loaders {
                             scope.spawn(|| {
                                 // A panicking pool thread must abort the
-                                // queue, or its peers (and the scope
-                                // join) would block forever.
-                                let _guard = PoolAbortOnPanic(&queue);
+                                // queue and end the feed, or its peers
+                                // (and the scope join) would block
+                                // forever.
+                                let _guard =
+                                    PoolAbortOnPanic { queue: Some(&queue), feed: &feed };
                                 loop {
                                     // Admission: never keep more
                                     // timesteps in flight than the pool
@@ -780,12 +960,11 @@ impl GopherEngine {
                                         return; // aborted
                                     }
                                     let i = next_load.fetch_add(1, Ordering::Relaxed);
-                                    if i >= n_ts {
+                                    if !feed.wait_known(i) {
                                         queue.withdraw();
-                                        return;
+                                        return; // queue drained for good
                                     }
-                                    let r =
-                                        self.load_timestep(timesteps[i], &proj, inner_workers);
+                                    let r = self.load_timestep(ts_at(i), &proj, inner_workers);
                                     if let Ok(l) = &r {
                                         if l.trace.slices_read > 0 {
                                             est_slices.store(
@@ -804,11 +983,12 @@ impl GopherEngine {
                         }
                         for _ in 0..tw {
                             scope.spawn(|| {
-                                let _guard = PoolAbortOnPanic(&queue);
+                                let _guard =
+                                    PoolAbortOnPanic { queue: Some(&queue), feed: &feed };
                                 loop {
                                     let i = next_compute.fetch_add(1, Ordering::Relaxed);
-                                    if i >= n_ts {
-                                        break;
+                                    if !feed.wait_known(i) {
+                                        break; // queue drained for good
                                     }
                                     let wait0 = Instant::now();
                                     let Some(loaded) = queue.take(i) else {
@@ -823,15 +1003,20 @@ impl GopherEngine {
                                         Ok(ts_stats) => {
                                             results.lock().unwrap().push(ts_stats);
                                             self.metrics.incr(keys::TIMESTEPS);
+                                            complete_one(i);
                                         }
                                         Err(e) => {
                                             *err.lock().unwrap() = Some(e);
                                             queue.abort();
+                                            feed.end();
                                             break;
                                         }
                                     }
                                 }
                             });
+                        }
+                        if follow {
+                            self.drive_pool_feed(opts, &progress, &feed, Some(&queue), &err);
                         }
                     });
                 } else {
@@ -840,24 +1025,32 @@ impl GopherEngine {
                     let next_idx = AtomicUsize::new(0);
                     std::thread::scope(|scope| {
                         for _ in 0..tw {
-                            scope.spawn(|| loop {
-                                let i = next_idx.fetch_add(1, Ordering::Relaxed);
-                                if i >= n_ts || err.lock().unwrap().is_some() {
-                                    break;
-                                }
-                                let outcome = self
-                                    .load_timestep(timesteps[i], &proj, inner_workers)
-                                    .and_then(|l| run_one(i, l, 0.0));
-                                match outcome {
-                                    Ok(ts_stats) => {
-                                        results.lock().unwrap().push(ts_stats);
-                                        self.metrics.incr(keys::TIMESTEPS);
+                            scope.spawn(|| {
+                                let _guard = PoolAbortOnPanic { queue: None, feed: &feed };
+                                loop {
+                                    let i = next_idx.fetch_add(1, Ordering::Relaxed);
+                                    if !feed.wait_known(i) || err.lock().unwrap().is_some() {
+                                        break;
                                     }
-                                    Err(e) => {
-                                        *err.lock().unwrap() = Some(e);
+                                    let outcome = self
+                                        .load_timestep(ts_at(i), &proj, inner_workers)
+                                        .and_then(|l| run_one(i, l, 0.0));
+                                    match outcome {
+                                        Ok(ts_stats) => {
+                                            results.lock().unwrap().push(ts_stats);
+                                            self.metrics.incr(keys::TIMESTEPS);
+                                            complete_one(i);
+                                        }
+                                        Err(e) => {
+                                            *err.lock().unwrap() = Some(e);
+                                            feed.end();
+                                        }
                                     }
                                 }
                             });
+                        }
+                        if follow {
+                            self.drive_pool_feed(opts, &progress, &feed, None, &err);
                         }
                     });
                 }
@@ -870,14 +1063,70 @@ impl GopherEngine {
             }
         }
 
-        // Merge step (eventually-dependent pattern).
+        // Merge step (eventually-dependent pattern): the full series, in
+        // timestep order — deterministic however the pool scheduled it.
         if app.pattern() == Pattern::EventuallyDependent {
             let tm = Instant::now();
-            app.merge(merge_msgs.into_inner().unwrap());
+            app.merge(merge_msgs.into_inner().unwrap().into_values().flatten().collect());
             stats.merge_wall_s = tm.elapsed().as_secs_f64();
         }
         stats.total_wall_s = t0.elapsed().as_secs_f64();
         Ok(stats)
+    }
+
+    /// Follow-mode driver for the temporal pool: runs on the thread that
+    /// called [`GopherEngine::run`] while loaders/computers work, growing
+    /// the feed as [`GopherEngine::refresh`] makes timesteps visible on
+    /// every host, publishing the run's lag through the flow gate from
+    /// the completed watermark, and ending the feed after the idle-poll
+    /// budget (or on error/abort).
+    fn drive_pool_feed(
+        &self,
+        opts: &RunOptions,
+        progress: &Progress,
+        feed: &PoolFeed,
+        queue: Option<&PoolQueue>,
+        err: &Mutex<Option<anyhow::Error>>,
+    ) {
+        let mut idle = 0usize;
+        loop {
+            if err.lock().unwrap().is_some() || feed.ended() {
+                break;
+            }
+            // Publish this run's lag (decoded tail bytes at or past the
+            // completed watermark) for an appender blocked on the flow
+            // gate — the pool analog of the sequential follow loop's
+            // per-turn publish. The watermark is the queue index of the
+            // first uncomputed timestep, which equals its timestep in a
+            // dense follow queue.
+            if let Some(gate) = self.flow_gate.get() {
+                let wm = progress.watermark();
+                let lag: u64 = self.stores.iter().map(|s| s.tail_bytes_from(wm)).sum();
+                gate.publish_lag(lag);
+            }
+            match self.refresh() {
+                Ok(visible) => {
+                    if visible > feed.known() {
+                        feed.grow(visible);
+                        idle = 0;
+                        continue;
+                    }
+                }
+                Err(e) => {
+                    *err.lock().unwrap() = Some(e);
+                    if let Some(q) = queue {
+                        q.abort();
+                    }
+                    break;
+                }
+            }
+            idle += 1;
+            if opts.follow_idle_polls > 0 && idle >= opts.follow_idle_polls {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(opts.follow_poll_ms.max(1)));
+        }
+        feed.end();
     }
 
     /// Refresh every store's view of a growing collection (newly sealed
@@ -1004,7 +1253,7 @@ impl GopherEngine {
         workers: usize,
         max_supersteps: usize,
         overlap_routing: bool,
-        merge_sink: &Mutex<Vec<Payload>>,
+        merge_sink: &MergeMap,
     ) -> Result<(TimestepStats, HashMap<SubgraphId, Vec<Payload>>)> {
         let t_start = Instant::now();
         let net_clock = NetworkClock::default();
@@ -1187,19 +1436,45 @@ impl GopherEngine {
             }
             // Deliver: per destination, chunks sorted by source item
             // index (unique per chunk), one bulk extend per chunk.
-            for (target, shard) in shards.into_iter().enumerate() {
-                let mut chunks = shard.into_inner().unwrap();
+            // Destinations are disjoint, so delivery fans out over the
+            // worker pool when more than one destination has traffic;
+            // each destination's inbox content is independent of which
+            // worker delivers it (and of the fan-out itself), so every
+            // observable stays bit-identical to the serial drain —
+            // asserted in tests/determinism.rs alongside the staging
+            // modes.
+            let deliver = |target: usize| {
+                let mut chunks = std::mem::take(&mut *shards[target].lock().unwrap());
                 if chunks.is_empty() {
-                    continue;
+                    return;
                 }
                 chunks.sort_unstable_by_key(|&(src, _)| src);
-                let inbox = &mut items[target].get_mut().unwrap().inbox;
+                let mut item = items[target].lock().unwrap();
                 for (_, msgs) in chunks {
-                    inbox.extend(msgs);
+                    item.inbox.extend(msgs);
+                }
+            };
+            let busy = shards.iter().filter(|s| !s.lock().unwrap().is_empty()).count();
+            if workers > 1 && busy > 1 {
+                let cursor = AtomicUsize::new(0);
+                std::thread::scope(|scope| {
+                    for _ in 0..workers.min(busy) {
+                        scope.spawn(|| loop {
+                            let target = cursor.fetch_add(1, Ordering::Relaxed);
+                            if target >= shards.len() {
+                                break;
+                            }
+                            deliver(target);
+                        });
+                    }
+                });
+            } else {
+                for target in 0..shards.len() {
+                    deliver(target);
                 }
             }
             if !merge_local.is_empty() {
-                merge_sink.lock().unwrap().extend(merge_local);
+                merge_sink.lock().unwrap().entry(t).or_default().extend(merge_local);
             }
             let pairs: Vec<(u64, u64)> = batches.values().copied().collect();
             let net_ns = net_clock.charge_superstep(&self.spec.net, &pairs);
@@ -1555,24 +1830,138 @@ mod tests {
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
-    /// Follow is a sequential-pattern contract.
+    /// Follow mode never combines with an explicit schedule: the queue
+    /// must stay dense from 0 for the visibility contract to hold.
     #[test]
-    fn follow_mode_rejects_non_sequential_patterns_and_explicit_ranges() {
+    fn follow_mode_rejects_explicit_ranges() {
         let (eng, dir) = engine("follow-reject");
         let inv = Arc::new(Mutex::new(Vec::new()));
-        let app = CountApp { pattern: Pattern::Independent, invocations: inv.clone() };
-        let err = eng
-            .run(&app, &RunOptions { follow: true, ..Default::default() })
-            .unwrap_err();
-        assert!(format!("{err:#}").contains("Sequential"));
-        let app = CountApp { pattern: Pattern::Sequential, invocations: inv };
-        let err = eng
-            .run(
-                &app,
-                &RunOptions { follow: true, timesteps: Some(vec![0]), ..Default::default() },
-            )
-            .unwrap_err();
-        assert!(format!("{err:#}").contains("explicit timesteps"));
+        for pattern in [Pattern::Sequential, Pattern::Independent] {
+            let app = CountApp { pattern, invocations: inv.clone() };
+            let err = eng
+                .run(
+                    &app,
+                    &RunOptions { follow: true, timesteps: Some(vec![0]), ..Default::default() },
+                )
+                .unwrap_err();
+            assert!(format!("{err:#}").contains("explicit timesteps"));
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Tentpole (pool follow): Independent and EventuallyDependent runs
+    /// under follow mode cover a static collection exactly once per
+    /// timestep, then stop after the idle budget — with and without the
+    /// pool prefetch queue.
+    #[test]
+    fn follow_mode_pool_processes_everything_then_stops_when_idle() {
+        let (eng, dir) = engine("follow-pool-static");
+        for pattern in [Pattern::Independent, Pattern::EventuallyDependent] {
+            for prefetch in [true, false] {
+                let inv = Arc::new(Mutex::new(Vec::new()));
+                let app = CountApp { pattern, invocations: inv.clone() };
+                let stats = eng
+                    .run(
+                        &app,
+                        &RunOptions {
+                            follow: true,
+                            follow_poll_ms: 1,
+                            follow_idle_polls: 3,
+                            temporal_workers: 3,
+                            prefetch,
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap();
+                assert_eq!(stats.per_timestep.len(), 12, "{pattern:?} prefetch={prefetch}");
+                let ts: Vec<usize> = stats.per_timestep.iter().map(|s| s.timestep).collect();
+                assert_eq!(ts, (0..12).collect::<Vec<_>>());
+                assert_eq!(inv.lock().unwrap().len(), 12 * eng.n_subgraphs());
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// App recording the emission-hook protocol: completion order,
+    /// per-timestep incremental merge payloads, and the final merge's
+    /// message order.
+    struct EmitApp {
+        completed: Arc<Mutex<Vec<Timestep>>>,
+        incremental: Arc<Mutex<Vec<(Timestep, usize)>>>,
+        final_msgs: Arc<Mutex<Vec<u64>>>,
+    }
+
+    struct EmitProgram;
+
+    impl SubgraphProgram for EmitProgram {
+        fn compute(&mut self, ctx: &mut ComputeCtx<'_>, _sgi: &crate::gofs::SubgraphInstance, _msgs: &[Payload]) {
+            ctx.send_to_merge((ctx.timestep as u64).to_le_bytes().to_vec()).unwrap();
+            ctx.vote_to_halt();
+        }
+    }
+
+    impl Application for EmitApp {
+        fn name(&self) -> &str {
+            "emit"
+        }
+        fn pattern(&self) -> Pattern {
+            Pattern::EventuallyDependent
+        }
+        fn projection(&self, _: &Schema, _: &Schema) -> Projection {
+            Projection::none()
+        }
+        fn create(&self, _sg: &Subgraph) -> Box<dyn SubgraphProgram> {
+            Box::new(EmitProgram)
+        }
+        fn on_timestep_complete(&self, t: Timestep) {
+            self.completed.lock().unwrap().push(t);
+        }
+        fn merge_incremental(&self, t: Timestep, msgs: Vec<Payload>) {
+            self.incremental.lock().unwrap().push((t, msgs.len()));
+        }
+        fn merge(&self, msgs: Vec<Payload>) {
+            *self.final_msgs.lock().unwrap() = msgs
+                .iter()
+                .map(|m| u64::from_le_bytes(m.as_slice().try_into().unwrap()))
+                .collect();
+        }
+    }
+
+    /// Tentpole (merge contract over pools): emission hooks fire in
+    /// timestep order even though the pool completes timesteps out of
+    /// order, each incremental emission carries exactly that timestep's
+    /// merge messages, and the final merge sees the full series in
+    /// timestep order — deterministically, every run.
+    #[test]
+    fn emission_hooks_fire_in_timestep_order_with_exact_payloads() {
+        let (eng, dir) = engine("emit-order");
+        let n_sg = eng.n_subgraphs();
+        for opts in [
+            RunOptions { temporal_workers: 4, ..Default::default() },
+            RunOptions { temporal_workers: 4, prefetch: false, ..Default::default() },
+            RunOptions {
+                follow: true,
+                follow_poll_ms: 1,
+                follow_idle_polls: 3,
+                temporal_workers: 4,
+                ..Default::default()
+            },
+        ] {
+            let app = EmitApp {
+                completed: Arc::new(Mutex::new(Vec::new())),
+                incremental: Arc::new(Mutex::new(Vec::new())),
+                final_msgs: Arc::new(Mutex::new(Vec::new())),
+            };
+            eng.run(&app, &opts).unwrap();
+            assert_eq!(*app.completed.lock().unwrap(), (0..12).collect::<Vec<_>>());
+            assert_eq!(
+                *app.incremental.lock().unwrap(),
+                (0..12).map(|t| (t, n_sg)).collect::<Vec<_>>()
+            );
+            let want: Vec<u64> =
+                (0..12u64).flat_map(|t| std::iter::repeat_n(t, n_sg)).collect();
+            assert_eq!(*app.final_msgs.lock().unwrap(), want, "merge order must be by timestep");
+        }
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

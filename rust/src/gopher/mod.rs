@@ -165,8 +165,30 @@ pub trait Application: Send + Sync {
     }
 
     /// Merge step for the eventually-dependent pattern: called once after
-    /// all timesteps complete, with every `send_to_merge` payload.
+    /// all timesteps complete, with every `send_to_merge` payload in
+    /// **timestep order** (messages of timestep t before those of t+1;
+    /// within a timestep, item order) — deterministic regardless of pool
+    /// scheduling or follow mode.
     fn merge(&self, _msgs: Vec<Payload>) {}
+
+    /// Per-timestep emission: called once per scheduled timestep, in
+    /// schedule order, as the contiguous prefix of *completed* timesteps
+    /// advances (timesteps complete out of order under the temporal
+    /// pool). Under `RunOptions::follow` this is how a live consumer
+    /// observes that a timestep's outputs (e.g. the independent
+    /// pattern's per-timestep results) are final without waiting for the
+    /// unbounded series to end. Fired while the engine's progress lock
+    /// is held — do not call back into the engine from here.
+    fn on_timestep_complete(&self, _timestep: Timestep) {}
+
+    /// Incremental merge emission (eventually-dependent pattern): called
+    /// once per completed timestep, in timestep order, with exactly that
+    /// timestep's `send_to_merge` payloads — so a follow-mode run can
+    /// fold partial results live over an unbounded series. The final
+    /// [`Application::merge`] still receives the complete series;
+    /// implementing this hook is optional. Same re-entrancy rule as
+    /// [`Application::on_timestep_complete`].
+    fn merge_incremental(&self, _timestep: Timestep, _msgs: Vec<Payload>) {}
 }
 
 #[cfg(test)]

@@ -23,8 +23,8 @@ use goffish::datagen::{
     CollectionSource, RoadNetGenerator, RoadNetParams, TraceRouteGenerator, TraceRouteParams,
 };
 use goffish::gofs::{
-    deploy, deploy_template, open_collection, CollectionAppender, DeployConfig, DiskModel,
-    IngestOptions, StoreOptions,
+    compact_collection, deploy, deploy_template, open_collection, CollectionAppender,
+    CompactOptions, DeployConfig, DiskModel, IngestOptions, StoreOptions,
 };
 use goffish::gopher::{GopherEngine, RunOptions, RunStats};
 use goffish::metrics::Metrics;
@@ -39,6 +39,7 @@ fn main() {
     let result = match args.command.as_deref() {
         Some("deploy") => cmd_deploy(&args),
         Some("ingest") => cmd_ingest(&args),
+        Some("compact") => cmd_compact(&args),
         Some("run") => cmd_run(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("help") | None => {
@@ -67,24 +68,33 @@ USAGE:
   goffish ingest  --store DIR --dataset tr|roadnet
                   [--from <appender resume point> --to <dataset end>
                    --sleep-ms 0 --no-compress --no-sync --group-commit 1
-                   --finish]
+                   --compact-after 0 --compact-target 0 --finish]
+  goffish compact --store DIR [--target-pack <8 x pack> --no-compress]
   goffish run     --store DIR --app sssp|pagerank|nhop|track|wcc
                   [--cache 14 --cache-bytes 0 --tail-high-water 0
                    --hosts <auto> --source <ext-id> --plate CA-00007
                    --nhops 6 --backend scalar|pjrt --artifacts artifacts
                    --from <ts> --to <ts> --prefetch-depth 2
                    --poll-ms 25 --idle-polls 40 --real-disk --follow]
+  goffish inspect --store DIR
 
   `ingest --group-commit k` fsyncs the WALs once per k appends (crash may
   lose the newest unsynced timesteps, never corrupt older ones);
-  `run --tail-high-water BYTES` makes an in-process follow-mode feeder
-  block when analytics lags ingest by more decoded tail bytes than that.
-  goffish inspect --store DIR
+  `ingest --compact-after k` re-packs small sealed groups inline after
+  every k seals; `run --tail-high-water BYTES` makes an in-process
+  follow-mode feeder block when analytics lags ingest by more decoded
+  tail bytes than that.
 
   `deploy --template-only` lays out an empty collection; `ingest` streams
   timesteps into it (or any pack-aligned collection) through the WAL-backed
-  appender; `run --follow` keeps the BSP loop live over timesteps as they
-  are published (sequential-pattern apps).
+  appender; `compact` re-packs small sealed groups (e.g. from a small
+  `pack` or a finished short tail) into larger ones for better read
+  amortization; `run --follow` keeps the run live over timesteps as they
+  are published — the sequential BSP loop and the Independent /
+  EventuallyDependent temporal pools alike.
+
+  See docs/CLI.md for every flag, docs/ARCHITECTURE.md for the system
+  contracts, and docs/BENCHMARKS.md for the perf runbook.
 ";
 
 fn make_source(args: &Args) -> Result<Box<dyn CollectionSource>> {
@@ -165,9 +175,11 @@ fn cmd_ingest(args: &Args) -> Result<()> {
     let opts = IngestOptions {
         compress: !args.switch("no-compress"),
         sync: !args.switch("no-sync"),
+        compact_target: args.usize("compact-target", 0),
         ..Default::default()
     }
-    .group_commit(args.usize("group-commit", 1));
+    .group_commit(args.usize("group-commit", 1))
+    .compact_after(args.usize("compact-after", 0));
     let mut appender = CollectionAppender::open(&store_dir, opts)?;
     let from = args.usize("from", appender.n_instances());
     let to = args.usize("to", source.n_instances()).min(source.n_instances());
@@ -198,7 +210,8 @@ fn cmd_ingest(args: &Args) -> Result<()> {
     };
     println!(
         "ingested {} instances into {} in {:.2}s: {} groups sealed \
-         ({:.1} ms/group), {:.1} MB WAL traffic, {} WAL fsyncs",
+         ({:.1} ms/group), {:.1} MB WAL traffic, {} WAL fsyncs, \
+         {} inline compaction merges",
         stats.appended,
         store_dir.display(),
         t0.elapsed().as_secs_f64(),
@@ -209,7 +222,40 @@ fn cmd_ingest(args: &Args) -> Result<()> {
             0.0
         },
         stats.wal_bytes as f64 / 1e6,
-        stats.wal_syncs
+        stats.wal_syncs,
+        stats.compactions
+    );
+    Ok(())
+}
+
+/// Re-pack small sealed groups into larger ones (`gofs::ingest::compact`):
+/// better read amortization for collections ingested with a small `pack`
+/// or closed with a short tail group. Safe to re-run; crash-recovering.
+fn cmd_compact(args: &Args) -> Result<()> {
+    let store_dir = PathBuf::from(args.require("store")?);
+    let opts = CompactOptions {
+        target_pack: args.usize("target-pack", 0), // 0 = 8 x the deploy pack
+        compress: !args.switch("no-compress"),
+        ..Default::default()
+    };
+    let report = compact_collection(&store_dir, &opts)?;
+    println!(
+        "compacted {}: {} -> {} groups across {} partitions in {:.2}s",
+        store_dir.display(),
+        report.groups_before,
+        report.groups_after,
+        report.parts,
+        report.wall_s
+    );
+    println!(
+        "  {} runs merged ({} source groups), {} slices written ({:.1} MB), \
+         {} retired, {} orphans swept",
+        report.runs_merged,
+        report.groups_merged,
+        report.slices_written,
+        report.bytes_written as f64 / 1e6,
+        report.slices_deleted,
+        report.orphans_swept
     );
     Ok(())
 }

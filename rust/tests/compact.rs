@@ -1,0 +1,381 @@
+//! Background group compaction (gofs::ingest::compact) and follow mode
+//! for temporal pools: read-amortization wins, crash-window recovery,
+//! and batch ≡ follow bit-equivalence over an ingested-then-compacted
+//! collection (the PR acceptance suite).
+
+use goffish::apps::{NHopApp, PageRankApp, SsspApp};
+use goffish::cluster::ClusterSpec;
+use goffish::datagen::{traceroute, CollectionSource, TraceRouteGenerator, TraceRouteParams};
+use goffish::gofs::{
+    compact_collection, deploy, deploy_template, open_collection, CollectionAppender,
+    CompactOptions, DeployConfig, DiskModel, IngestOptions, Projection, StoreOptions,
+};
+use goffish::gopher::{GopherEngine, RunOptions};
+use goffish::metrics::Metrics;
+use goffish::runtime::ScalarBackend;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const PARTS: usize = 2;
+const BINS: usize = 3;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gofs-compact-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn tr_gen() -> TraceRouteGenerator {
+    TraceRouteGenerator::new(TraceRouteParams::tiny())
+}
+
+fn opts(cache: usize) -> StoreOptions {
+    StoreOptions {
+        cache_slots: cache,
+        disk: DiskModel::instant(),
+        metrics: Arc::new(Metrics::new()),
+        ..Default::default()
+    }
+}
+
+fn engine(dir: &PathBuf, cache: usize) -> GopherEngine {
+    let metrics = Arc::new(Metrics::new());
+    let o = StoreOptions {
+        cache_slots: cache,
+        disk: DiskModel::instant(),
+        metrics: metrics.clone(),
+        ..Default::default()
+    };
+    GopherEngine::new(open_collection(dir, &o).unwrap(), ClusterSpec::new(PARTS), metrics)
+}
+
+/// Stream `gen`'s instances `[0, to)` through a fresh appender.
+fn ingest_all(dir: &PathBuf, gen: &TraceRouteGenerator, to: usize, opts: IngestOptions) {
+    let mut app = CollectionAppender::open(dir, opts).unwrap();
+    for t in 0..to {
+        assert_eq!(app.append(&gen.instance(t)).unwrap(), t);
+    }
+}
+
+/// Every value of every instance must read back identically from the two
+/// collections — grouping is a layout choice, never a semantic one.
+fn assert_stores_identical(da: &PathBuf, db: &PathBuf, n_ts: usize) {
+    let sa = open_collection(da, &opts(64)).unwrap();
+    let sb = open_collection(db, &opts(64)).unwrap();
+    assert_eq!(sa.len(), sb.len());
+    for (a, b) in sa.iter().zip(&sb) {
+        assert_eq!(a.n_instances(), n_ts);
+        assert_eq!(b.n_instances(), n_ts);
+        let proj = Projection::all(a.vertex_schema(), a.edge_schema());
+        for sg in a.subgraphs() {
+            for t in 0..n_ts {
+                let ia = a.read_instance(sg.id.local(), t, &proj).unwrap();
+                let ib = b.read_instance(sg.id.local(), t, &proj).unwrap();
+                assert_eq!(ia.window, ib.window, "window t{t}");
+                for attr in 0..a.vertex_schema().len() {
+                    for v in 0..sg.n_vertices() as u32 {
+                        assert_eq!(
+                            ia.vertex_values(attr, v),
+                            ib.vertex_values(attr, v),
+                            "vattr {attr} v{v} t{t}"
+                        );
+                    }
+                }
+                for attr in 0..a.edge_schema().len() {
+                    for e in 0..sg.edges.len() {
+                        assert_eq!(
+                            ia.edge_values(attr, e),
+                            ib.edge_values(attr, e),
+                            "eattr {attr} e{e} t{t}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Full-projection scan of every (subgraph, timestep); returns total
+/// slice reads (the read-amortization probe).
+fn full_scan_reads(dir: &PathBuf) -> u64 {
+    let stores = open_collection(dir, &opts(256)).unwrap();
+    let mut reads = 0u64;
+    for s in &stores {
+        let proj = Projection::all(s.vertex_schema(), s.edge_schema());
+        for t in 0..s.n_instances() {
+            for sg in s.subgraphs() {
+                let mut tr = goffish::gofs::ReadTrace::default();
+                s.read_instance_traced(sg.id.local(), t, &proj, &mut tr).unwrap();
+                reads += tr.slices_read;
+            }
+        }
+    }
+    reads
+}
+
+fn sssp_fingerprint(eng: &GopherEngine, gen: &TraceRouteGenerator, opts: &RunOptions) -> Vec<(u64, u32, i64)> {
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+    let app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
+    eng.run(&app, opts).unwrap();
+    let distances = app.results.distances.lock().unwrap();
+    let mut out: Vec<(u64, u32, i64)> = distances
+        .iter()
+        .flat_map(|(sgid, (_, d))| {
+            d.iter().enumerate().map(move |(lv, &x)| {
+                let q = if x.is_finite() { (x as f64 * 1e6).round() as i64 } else { -1 };
+                (sgid.0, lv as u32, q)
+            })
+        })
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+fn pagerank_fingerprint(eng: &GopherEngine, gen: &TraceRouteGenerator, opts: &RunOptions) -> Vec<(u64, i64)> {
+    let app = PageRankApp::new(
+        gen.template().n_vertices(),
+        Some(traceroute::eattr::ACTIVE),
+        Arc::new(ScalarBackend),
+    );
+    let stats = eng.run(&app, opts).unwrap();
+    assert!(!stats.per_timestep.is_empty());
+    let mut out: Vec<(u64, i64)> = (0..3)
+        .flat_map(|t| {
+            app.results
+                .top_k(t, 10)
+                .into_iter()
+                .map(move |(v, r)| (v, (r as f64 * 1e12).round() as i64))
+        })
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+/// Tentpole acceptance (read amortization): compacting a small-`pack`
+/// ingest shrinks the sealed-group count and the slice reads of a full
+/// scan, while every value — and a sequential SSSP over the series —
+/// stays bit-identical. A second pass is an idempotent no-op.
+#[test]
+fn compaction_reduces_groups_and_scan_reads_without_changing_values() {
+    let gen = tr_gen();
+    let n = gen.n_instances(); // 12
+    let cfg = DeployConfig::new(PARTS, BINS, 1); // pack 1: one group per timestep
+    let d_batch = tmpdir("amortize-batch");
+    deploy(&gen, &cfg, &d_batch).unwrap();
+    let d_feed = tmpdir("amortize-feed");
+    deploy_template(&gen, &cfg, &d_feed).unwrap();
+    ingest_all(&d_feed, &gen, n, IngestOptions::default());
+
+    let reads_before = full_scan_reads(&d_feed);
+    {
+        let stores = open_collection(&d_feed, &opts(8)).unwrap();
+        assert_eq!(stores[0].sealed_groups(), n, "pack-1 ingest: one group per timestep");
+    }
+
+    let report = compact_collection(&d_feed, &CompactOptions::new(4)).unwrap();
+    assert_eq!(report.parts, PARTS);
+    assert_eq!(report.groups_before, n * PARTS);
+    assert_eq!(report.groups_after, (n / 4) * PARTS);
+    assert_eq!(report.groups_merged, (n * PARTS) as u64);
+    assert!(report.slices_deleted > 0);
+
+    let reads_after = full_scan_reads(&d_feed);
+    assert!(
+        reads_after * 2 <= reads_before,
+        "compaction should amortize reads: {reads_before} -> {reads_after}"
+    );
+    {
+        let stores = open_collection(&d_feed, &opts(8)).unwrap();
+        assert_eq!(stores[0].sealed_groups(), n / 4);
+        assert_eq!(stores[0].n_instances(), n);
+    }
+    assert_stores_identical(&d_batch, &d_feed, n);
+    let run = RunOptions::default();
+    assert_eq!(
+        sssp_fingerprint(&engine(&d_batch, 64), &gen, &run),
+        sssp_fingerprint(&engine(&d_feed, 64), &gen, &run),
+        "compaction changed SSSP outputs"
+    );
+
+    // Idempotent: a second pass finds nothing to merge and sweeps nothing.
+    let again = compact_collection(&d_feed, &CompactOptions::new(4)).unwrap();
+    assert_eq!(again.runs_merged, 0);
+    assert_eq!(again.orphans_swept, 0);
+    assert_eq!(again.groups_before, again.groups_after);
+    std::fs::remove_dir_all(&d_batch).unwrap();
+    std::fs::remove_dir_all(&d_feed).unwrap();
+}
+
+/// A `finish()`ed short tail group folds into the preceding groups.
+#[test]
+fn compaction_folds_finished_short_tail_group() {
+    let gen = tr_gen();
+    let n = 10usize; // pack 4 -> groups of 4, 4, 2 after finish()
+    let cfg = DeployConfig::new(PARTS, BINS, 4);
+    let d = tmpdir("tail-feed");
+    deploy_template(&gen, &cfg, &d).unwrap();
+    let mut app = CollectionAppender::open(&d, IngestOptions::default()).unwrap();
+    for t in 0..n {
+        app.append(&gen.instance(t)).unwrap();
+    }
+    let stats = app.finish().unwrap();
+    assert_eq!(stats.sealed_groups, 3);
+
+    let report = compact_collection(&d, &CompactOptions::new(10)).unwrap();
+    assert_eq!(report.groups_after, PARTS, "4+4+2 folds into one group per partition");
+
+    let gen10 = TraceRouteGenerator::new(TraceRouteParams {
+        n_instances: n,
+        ..TraceRouteParams::tiny()
+    });
+    let d_batch = tmpdir("tail-batch");
+    deploy(&gen10, &cfg, &d_batch).unwrap();
+    assert_stores_identical(&d_batch, &d, n);
+    std::fs::remove_dir_all(&d).unwrap();
+    std::fs::remove_dir_all(&d_batch).unwrap();
+}
+
+/// Crash-window acceptance: a crash at any point of a compaction pass —
+/// mid multi-group re-pack, between the slice renames and the metadata
+/// publish, or between the publish and the source-slice retirement —
+/// leaves a collection that (a) reads correctly immediately and (b) is
+/// fully repaired by simply re-running compaction.
+#[test]
+fn compaction_crash_windows_read_correctly_and_recover() {
+    use goffish::gofs::ingest::compact::CrashPoint;
+    let gen = tr_gen();
+    let n = 8usize;
+    let cfg = DeployConfig::new(PARTS, BINS, 1);
+    let gen8 = TraceRouteGenerator::new(TraceRouteParams {
+        n_instances: n,
+        ..TraceRouteParams::tiny()
+    });
+    let d_batch = tmpdir("crash-batch");
+    deploy(&gen8, &cfg, &d_batch).unwrap();
+
+    for (tag, crash) in [
+        ("midrepack", CrashPoint::MidRepack),
+        ("prepublish", CrashPoint::BeforePublish),
+        ("precleanup", CrashPoint::BeforeCleanup),
+    ] {
+        let d = tmpdir(&format!("crash-{tag}"));
+        deploy_template(&gen, &cfg, &d).unwrap();
+        ingest_all(&d, &gen, n, IngestOptions::default());
+
+        // Target 3 over 8 pack-1 groups -> multiple planned runs, so
+        // MidRepack really does stop between runs.
+        let crashing = CompactOptions { crash, ..CompactOptions::new(3) };
+        let err = compact_collection(&d, &crashing).unwrap_err();
+        assert!(format!("{err:#}").contains("simulated crash"), "{err:#}");
+
+        // (a) The collection still reads correctly, whichever side of
+        // the publish the crash landed on.
+        assert_stores_identical(&d_batch, &d, n);
+
+        // (b) Re-running compaction completes the pass and sweeps any
+        // orphans; the result is fully compacted and still identical.
+        let report = compact_collection(&d, &CompactOptions::new(3)).unwrap();
+        if crash == CrashPoint::BeforeCleanup {
+            // Part 0 published before the "crash", so its retired source
+            // slices became orphans for the re-run's sweep. (MidRepack /
+            // BeforePublish orphans are the unpublished *new* slices.)
+            assert!(report.orphans_swept > 0, "{tag}: sweep found nothing");
+        }
+        let stores = open_collection(&d, &opts(8)).unwrap();
+        assert_eq!(stores[0].sealed_groups(), 3, "{tag}: 8 groups -> 3+3+2");
+        assert_stores_identical(&d_batch, &d, n);
+        let run = RunOptions::default();
+        assert_eq!(
+            sssp_fingerprint(&engine(&d_batch, 64), &gen8, &run),
+            sssp_fingerprint(&engine(&d, 64), &gen8, &run),
+            "{tag}: SSSP diverged after crash recovery"
+        );
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+    std::fs::remove_dir_all(&d_batch).unwrap();
+}
+
+/// Tentpole acceptance (pool follow): an Independent and an
+/// EventuallyDependent follow run over a live-ingested collection —
+/// with inline compaction re-packing groups *while the Independent run
+/// is reading them* — produce outputs bit-identical to batch runs over
+/// a one-shot deployment of the same series.
+#[test]
+fn pool_follow_over_live_compacted_ingest_matches_batch() {
+    let gen = tr_gen();
+    let n = gen.n_instances();
+    let cfg = DeployConfig::new(PARTS, BINS, 2);
+    let d_batch = tmpdir("pf-batch");
+    deploy(&gen, &cfg, &d_batch).unwrap();
+    let d_feed = tmpdir("pf-feed");
+    deploy_template(&gen, &cfg, &d_feed).unwrap();
+
+    // Independent (PageRank) follow run, concurrent with the feeder.
+    // compact_after(2): every 2 seals (4 timesteps) re-pack inline, so
+    // the run's refresh + vanished-slice retry race a real compactor.
+    let feed_dir = d_feed.clone();
+    let feeder = std::thread::spawn(move || {
+        let gen = tr_gen();
+        std::thread::sleep(std::time::Duration::from_millis(80));
+        let mut app = CollectionAppender::open(
+            &feed_dir,
+            IngestOptions::default().compact_after(2),
+        )
+        .unwrap();
+        for t in 0..gen.n_instances() {
+            app.append(&gen.instance(t)).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        app.stats()
+    });
+    let follow = RunOptions {
+        follow: true,
+        follow_poll_ms: 5,
+        follow_idle_polls: 400, // ~2s of slack over the feed cadence
+        temporal_workers: 3,
+        ..Default::default()
+    };
+    let follow_pr = pagerank_fingerprint(&engine(&d_feed, 64), &gen, &follow);
+    let feeder_stats = feeder.join().unwrap();
+    assert!(feeder_stats.compactions > 0, "inline compaction never ran");
+    let batch_pr = pagerank_fingerprint(&engine(&d_batch, 64), &gen, &RunOptions::default());
+    assert_eq!(follow_pr, batch_pr, "follow PageRank diverged from batch");
+
+    // The collection is now compacted; the timeline must still carry
+    // every timestep.
+    let stores = open_collection(&d_feed, &opts(8)).unwrap();
+    assert_eq!(stores[0].n_instances(), n);
+    assert!(
+        stores[0].sealed_groups() < n / 2,
+        "inline compaction should have merged pack-2 groups"
+    );
+    drop(stores);
+
+    // EventuallyDependent (NHop) follow run over the ingested-then-
+    // compacted collection: merge result identical to a batch run over
+    // the one-shot deployment.
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+    let nhop_total = |dir: &PathBuf, run: &RunOptions| {
+        let eng = engine(dir, 64);
+        let mut app = NHopApp::new(source, 4, traceroute::eattr::LATENCY_MS);
+        app.hist_hi = 2000.0;
+        let stats = eng.run(&app, run).unwrap();
+        assert_eq!(stats.per_timestep.len(), n);
+        let composite = app.results.composite.lock().unwrap();
+        composite.as_ref().unwrap().total()
+    };
+    let follow_ed = RunOptions {
+        follow: true,
+        follow_poll_ms: 2,
+        follow_idle_polls: 5,
+        temporal_workers: 3,
+        ..Default::default()
+    };
+    assert_eq!(
+        nhop_total(&d_feed, &follow_ed),
+        nhop_total(&d_batch, &RunOptions::default()),
+        "follow NHop merge diverged from batch"
+    );
+    std::fs::remove_dir_all(&d_batch).unwrap();
+    std::fs::remove_dir_all(&d_feed).unwrap();
+}

@@ -268,6 +268,54 @@ fn overlapped_routing_is_bit_identical_to_sequential_drain() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
+/// Satellite (parallel barrier delivery): the per-destination delivery
+/// loop fans out over the worker pool when more than one destination has
+/// traffic; with a single worker it stays the serial drain. Outputs AND
+/// per-timestep stats must be bit-identical across worker counts in both
+/// routing modes — destinations are disjoint, so the fan-out cannot
+/// change anything a destination observes.
+#[test]
+fn parallel_delivery_is_bit_identical_to_serial_drain() {
+    let (gen, dir) = deployed("deliver");
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+    for overlap in [true, false] {
+        let run = |workers: usize| {
+            let eng = engine(&dir);
+            let app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
+            let stats = eng
+                .run(
+                    &app,
+                    &RunOptions {
+                        timesteps: Some((0..6).collect()),
+                        overlap_routing: overlap,
+                        workers,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+            let distances = app.results.distances.lock().unwrap();
+            let mut out: Vec<(u64, u32, i64)> = distances
+                .iter()
+                .flat_map(|(sgid, (_, d))| {
+                    d.iter().enumerate().map(move |(lv, &x)| {
+                        let q =
+                            if x.is_finite() { (x as f64 * 1e6).round() as i64 } else { -1 };
+                        (sgid.0, lv as u32, q)
+                    })
+                })
+                .collect();
+            out.sort_unstable();
+            (out, stats_fingerprint(&stats))
+        };
+        let (fp1, st1) = run(1);
+        let (fp8, st8) = run(8);
+        assert!(!fp1.is_empty());
+        assert_eq!(fp1, fp8, "parallel delivery changed SSSP outputs (overlap={overlap})");
+        assert_eq!(st1, st8, "parallel delivery changed stats (overlap={overlap})");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
 /// Tentpole (temporal-pool prefetch): the shared prefetch queue must not
 /// change independent/eventually-dependent results — only the wall-clock
 /// split. (The merge path is covered by NHop's composite.)

@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Check that markdown links in the repo docs resolve.
+
+Scans README.md and docs/*.md (plus any extra paths given on the
+command line) for inline links `[text](target)` and verifies:
+
+  * relative file targets exist (resolved against the linking file);
+  * `#anchor` fragments — standalone or on a relative target — match a
+    heading in the target file (GitHub-style slugs: lowercase, spaces
+    to hyphens, punctuation stripped);
+  * absolute http(s)/mailto links are skipped (no network in CI).
+
+Exit 1 with a list of broken links, 0 otherwise. Run from the repo
+root:  python3 tools/check_links.py
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug (close enough for ASCII docs)."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def headings_of(path: Path) -> set:
+    text = CODE_FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    return {slugify(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def check_file(path: Path, repo_root: Path) -> list:
+    errors = []
+    text = CODE_FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            if slugify(target[1:]) not in headings_of(path):
+                errors.append(f"{path}: broken anchor {target}")
+            continue
+        rel, _, frag = target.partition("#")
+        dest = (path.parent / rel).resolve()
+        try:
+            dest.relative_to(repo_root)
+        except ValueError:
+            errors.append(f"{path}: link escapes the repo: {target}")
+            continue
+        if not dest.exists():
+            errors.append(f"{path}: missing target {target}")
+            continue
+        if frag and dest.suffix == ".md" and slugify(frag) not in headings_of(dest):
+            errors.append(f"{path}: broken anchor #{frag} in {rel}")
+    return errors
+
+
+def main() -> int:
+    repo_root = Path(__file__).resolve().parent.parent
+    files = [Path(a) for a in sys.argv[1:]]
+    if not files:
+        files = [repo_root / "README.md"] + sorted((repo_root / "docs").glob("*.md"))
+    errors = []
+    checked = 0
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: file not found")
+            continue
+        checked += 1
+        errors.extend(check_file(f.resolve(), repo_root))
+    if errors:
+        print(f"docs link check FAILED ({len(errors)} problem(s)):", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print(f"docs link check: OK ({checked} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
