@@ -433,6 +433,17 @@ fn main() {
         json.push(("route_ms_per_superstep_barrier".into(), route_sq_ms / supersteps));
         json.push(("route_ms_per_superstep".into(), route_ov_ms / supersteps));
         json.push(("route_overlap_s".into(), overlap_s));
+
+        // Satellite probe: cross-host traffic volume from the per-host-
+        // pair accounting (`TimestepStats::routed_pairs`) — what a real
+        // transport puts on the wire, normalized per superstep.
+        let routed_bpss = ov.total_routed_bytes() as f64 / supersteps;
+        report.row(&[
+            "routed bytes".into(),
+            format!("{:.0}", routed_bpss),
+            "B/superstep (per-host-pair accounting)".into(),
+        ]);
+        json.push(("routed_bytes_per_superstep".into(), routed_bpss));
     }
 
     // --- L3: pipelined instance loading (prefetch + parallel load). ---

@@ -34,6 +34,10 @@ pub struct SsspResults {
     pub distances: Mutex<HashMap<SubgraphId, (Timestep, Vec<f32>)>>,
     /// (timestep, sgid) -> number of locally reachable vertices
     pub reached: Mutex<HashMap<(Timestep, SubgraphId), usize>>,
+    /// (timestep, sgid) -> sum of finite distances (f32 summed into f64
+    /// in local-vertex order, so the value is bit-deterministic). The
+    /// per-timestep state fingerprint distributed runs emit per commit.
+    pub dist_sum: Mutex<HashMap<(Timestep, SubgraphId), f64>>,
 }
 
 /// The iBSP SSSP application.
@@ -224,7 +228,9 @@ impl SubgraphProgram for SsspProgram {
 
         // Publish current state (overwrites; final value = BSP result).
         let reached = self.dist.iter().filter(|d| d.is_finite()).count();
+        let sum: f64 = self.dist.iter().filter(|d| d.is_finite()).map(|&d| d as f64).sum();
         self.results.reached.lock().unwrap().insert((ctx.timestep, ctx.sgid), reached);
+        self.results.dist_sum.lock().unwrap().insert((ctx.timestep, ctx.sgid), sum);
         self.results
             .distances
             .lock()

@@ -1,0 +1,569 @@
+//! The `goffish coordinator` process: BSP barrier authority for a
+//! multi-process run (one `goffish host` per partition).
+//!
+//! ## Lockstep protocol
+//!
+//! Workers run identical control flow over identical folded state, so in
+//! any round every live worker sends the *same* message variant:
+//!
+//! * [`Msg::Superstep`] — the coordinator folds the votes (AND halted,
+//!   OR inflight), picks the first error in global item order (pattern
+//!   violations before unknown destinations, host order = global item
+//!   order), unions the per-host-pair batch accounting and charges it
+//!   once on its own [`NetworkClock`] (every host receives the same
+//!   `net_ns`, keeping simulated time bit-identical to the in-process
+//!   path), and routes message/carry chunks to their destination hosts
+//!   by global item index.
+//! * [`Msg::Commit`] — arrives only after the worker durably wrote its
+//!   carry checkpoint, so advancing the `committed` watermark implies
+//!   every partition can rejoin from it. Outputs and merge payloads are
+//!   stored per (timestep, host) with idempotent overwrite: a rejoined
+//!   worker re-commits identical bytes.
+//! * [`Msg::RefreshReq`] — follow mode; the coordinator answers with the
+//!   cluster-wide minimum visible instance count (the watermark).
+//! * [`Msg::EndRun`] — the coordinator globally orders the merge
+//!   payloads (timestep, superstep, source item — matching the
+//!   in-process merge order) and broadcasts [`Msg::RunEnd`].
+//!
+//! ## Epochs, crash, rejoin
+//!
+//! Any connection loss or malformed round tears down the current
+//! *epoch*: the coordinator sends [`Msg::Abort`] to the surviving
+//! workers, closes every connection, and re-runs the join phase
+//! (workers reconnect and re-send [`Msg::Hello`]). The next
+//! [`Msg::Start`] carries `resume_from = committed`; batch runs pin the
+//! timestep plan (`visible`) at the first epoch so a rejoined run
+//! reproduces the same output even if stores grew meanwhile.
+
+use crate::cluster::net::NetworkClock;
+use crate::cluster::proto::{read_msg, write_msg, CarryChunk, MergeChunk, Msg, WireChunk};
+use crate::cluster::ClusterSpec;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+/// Configuration for one coordinator run.
+#[derive(Clone)]
+pub struct CoordinatorConfig {
+    pub n_hosts: usize,
+    /// Bind address, e.g. `127.0.0.1:7070` (`:0` picks a free port).
+    pub listen: String,
+    /// When set, the chosen port is written here (atomically) after
+    /// bind — how tests and scripts discover a `:0` port.
+    pub port_file: Option<PathBuf>,
+    pub app_name: String,
+    pub app_params: Vec<(String, String)>,
+    pub follow: bool,
+    pub follow_poll_ms: u64,
+    pub follow_idle_polls: u64,
+    pub max_supersteps: u64,
+    /// Epoch budget: give up after this many teardowns (0 = default).
+    pub max_epochs: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            n_hosts: 2,
+            listen: "127.0.0.1:0".to_string(),
+            port_file: None,
+            app_name: String::new(),
+            app_params: Vec::new(),
+            follow: false,
+            follow_poll_ms: 25,
+            follow_idle_polls: 40,
+            max_supersteps: 10_000,
+            max_epochs: 64,
+        }
+    }
+}
+
+struct HelloInfo {
+    n_instances: u64,
+    n_vertices: u64,
+    sgids: Vec<u64>,
+}
+
+/// Persistent run state surviving epoch teardowns.
+struct RunState {
+    /// First uncommitted timestep.
+    committed: u64,
+    /// (timestep, host) -> canonical emission.
+    outputs: HashMap<(u64, usize), String>,
+    /// (timestep, host) -> merge payload chunks.
+    merges: HashMap<(u64, usize), Vec<MergeChunk>>,
+    /// Global item directory fixed at the first epoch: (sgid, host).
+    directory: Option<Vec<(u64, u32)>>,
+    /// Batch-mode timestep plan, pinned at the first epoch so rejoined
+    /// runs reproduce the same output even if stores grew meanwhile.
+    plan_visible: Option<u64>,
+    total_vertices: u64,
+    clock: NetworkClock,
+}
+
+/// What ended an epoch.
+enum EpochEnd {
+    /// Run complete; the assembled cluster-wide output.
+    Done(String),
+    /// Teardown (crash / connection loss); rejoin and resume.
+    Down(String),
+}
+
+/// Run the coordinator to completion and return the assembled
+/// cluster-wide output (one block per committed timestep: every host's
+/// canonical emission in host order).
+pub fn run_coordinator(cfg: &CoordinatorConfig) -> Result<String> {
+    if cfg.n_hosts == 0 {
+        bail!("coordinator needs at least one host");
+    }
+    let listener = TcpListener::bind(&cfg.listen)
+        .with_context(|| format!("binding coordinator listener on {}", cfg.listen))?;
+    let addr = listener.local_addr()?;
+    if let Some(pf) = &cfg.port_file {
+        let tmp = pf.with_extension("tmp");
+        std::fs::write(&tmp, format!("{}\n", addr.port()))?;
+        std::fs::rename(&tmp, pf)?;
+    }
+    eprintln!("coordinator: listening on {addr} for {} hosts", cfg.n_hosts);
+
+    let mut state = RunState {
+        committed: 0,
+        outputs: HashMap::new(),
+        merges: HashMap::new(),
+        directory: None,
+        plan_visible: None,
+        total_vertices: 0,
+        clock: NetworkClock::default(),
+    };
+    let max_epochs = if cfg.max_epochs == 0 { 64 } else { cfg.max_epochs };
+    for epoch in 0..max_epochs {
+        match run_epoch(cfg, &listener, epoch, &mut state)? {
+            EpochEnd::Done(out) => return Ok(out),
+            EpochEnd::Down(reason) => {
+                eprintln!("coordinator: epoch {epoch} down ({reason}); waiting for rejoin");
+            }
+        }
+    }
+    bail!("coordinator: giving up after {max_epochs} epochs");
+}
+
+/// Join phase: accept connections until every partition has a live
+/// worker with a valid [`Msg::Hello`]. A later Hello for the same
+/// partition replaces the earlier connection (newest wins).
+fn join_hosts(
+    listener: &TcpListener,
+    n: usize,
+) -> Result<(Vec<TcpStream>, Vec<HelloInfo>)> {
+    let mut conns: Vec<Option<(TcpStream, HelloInfo)>> = (0..n).map(|_| None).collect();
+    while conns.iter().any(|c| c.is_none()) {
+        let (mut s, peer) = listener.accept().context("accepting worker connection")?;
+        s.set_nodelay(true).ok();
+        match read_msg(&mut s) {
+            Ok(Msg::Hello { part, n_instances, n_vertices, sgids }) => {
+                let part = part as usize;
+                if part >= n {
+                    eprintln!("coordinator: rejecting partition {part} (run has {n} hosts)");
+                    let _ = write_msg(
+                        &mut s,
+                        &Msg::Fatal { reason: format!("run has only {n} hosts") },
+                    );
+                    continue;
+                }
+                if let Some((old, _)) = conns[part].take() {
+                    let _ = old.shutdown(Shutdown::Both);
+                }
+                conns[part] = Some((s, HelloInfo { n_instances, n_vertices, sgids }));
+            }
+            Ok(m) => {
+                eprintln!("coordinator: {peer} sent {} before Hello; dropping", m.label());
+            }
+            Err(e) => {
+                eprintln!("coordinator: dropping {peer}: {e:#}");
+            }
+        }
+    }
+    let mut streams = Vec::with_capacity(n);
+    let mut hellos = Vec::with_capacity(n);
+    for c in conns {
+        let (s, h) = c.unwrap();
+        streams.push(s);
+        hellos.push(h);
+    }
+    Ok((streams, hellos))
+}
+
+fn send_all(conns: &mut [TcpStream], msg: &Msg) -> std::result::Result<(), String> {
+    for (h, c) in conns.iter_mut().enumerate() {
+        write_msg(c, msg).map_err(|e| format!("host {h}: {e:#}"))?;
+    }
+    Ok(())
+}
+
+fn abort_all(conns: &mut [TcpStream], reason: &str) {
+    for c in conns.iter_mut() {
+        let _ = write_msg(c, &Msg::Abort { reason: reason.to_string() });
+        let _ = c.shutdown(Shutdown::Both);
+    }
+}
+
+/// (epoch, host, message-or-connection-error) from a reader thread.
+type Event = (u64, usize, std::result::Result<Msg, String>);
+
+/// Collect exactly one in-epoch message per host (lockstep round).
+fn collect_round(
+    rx: &mpsc::Receiver<Event>,
+    epoch: u64,
+    n: usize,
+) -> std::result::Result<Vec<Msg>, String> {
+    let mut slots: Vec<Option<Msg>> = (0..n).map(|_| None).collect();
+    let mut got = 0usize;
+    while got < n {
+        let (ep, host, res) =
+            rx.recv().map_err(|_| "event channel closed".to_string())?;
+        if ep != epoch {
+            continue; // stale event from a torn-down epoch
+        }
+        match res {
+            Ok(m) => {
+                if slots[host].is_some() {
+                    return Err(format!("host {host} sent two messages in one round"));
+                }
+                slots[host] = Some(m);
+                got += 1;
+            }
+            Err(e) => return Err(format!("host {host}: {e}")),
+        }
+    }
+    Ok(slots.into_iter().map(|s| s.unwrap()).collect())
+}
+
+fn run_epoch(
+    cfg: &CoordinatorConfig,
+    listener: &TcpListener,
+    epoch: u64,
+    state: &mut RunState,
+) -> Result<EpochEnd> {
+    let n = cfg.n_hosts;
+    let (mut conns, hellos) = join_hosts(listener, n)?;
+
+    // Build (first epoch) or validate (rejoin) the global directory:
+    // host-major, each host's subgraphs in its store order.
+    let directory: Vec<(u64, u32)> = hellos
+        .iter()
+        .enumerate()
+        .flat_map(|(h, info)| info.sgids.iter().map(move |&sg| (sg, h as u32)))
+        .collect();
+    match &state.directory {
+        None => {
+            state.directory = Some(directory.clone());
+            state.total_vertices = hellos.iter().map(|i| i.n_vertices).sum();
+        }
+        Some(d) if *d != directory => {
+            abort_all(&mut conns, "directory changed across epochs");
+            bail!("a rejoined worker presented a different subgraph set");
+        }
+        Some(_) => {}
+    }
+    let min_visible = hellos.iter().map(|i| i.n_instances).min().unwrap_or(0);
+    let visible = if cfg.follow {
+        min_visible
+    } else {
+        *state.plan_visible.get_or_insert(min_visible)
+    };
+    if !cfg.follow && min_visible < visible {
+        abort_all(&mut conns, "store shrank across epochs");
+        bail!("a rejoined worker's store holds fewer instances than the run plan");
+    }
+
+    let start = Msg::Start {
+        n_hosts: n as u32,
+        total_vertices: state.total_vertices,
+        visible,
+        resume_from: state.committed,
+        follow: cfg.follow,
+        follow_poll_ms: cfg.follow_poll_ms,
+        follow_idle_polls: cfg.follow_idle_polls,
+        max_supersteps: cfg.max_supersteps,
+        app_name: cfg.app_name.clone(),
+        app_params: cfg.app_params.clone(),
+        directory: directory.clone(),
+    };
+    if let Err(reason) = send_all(&mut conns, &start) {
+        abort_all(&mut conns, &reason);
+        return Ok(EpochEnd::Down(reason));
+    }
+
+    // One reader thread per connection feeds a single event channel;
+    // writes stay on this thread. Epoch tags let teardown discard
+    // stragglers from dead readers.
+    let (tx, rx) = mpsc::channel();
+    for (host, c) in conns.iter().enumerate() {
+        let mut rc = match c.try_clone() {
+            Ok(rc) => rc,
+            Err(e) => {
+                let reason = format!("host {host}: clone failed: {e}");
+                abort_all(&mut conns, &reason);
+                return Ok(EpochEnd::Down(reason));
+            }
+        };
+        let tx = tx.clone();
+        std::thread::spawn(move || loop {
+            match read_msg(&mut rc) {
+                Ok(m) => {
+                    if tx.send((epoch, host, Ok(m))).is_err() {
+                        return;
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send((epoch, host, Err(format!("{e:#}"))));
+                    return;
+                }
+            }
+        });
+    }
+    drop(tx);
+
+    // Cumulative item bases for routing chunks by global item index.
+    let host_base: Vec<u32> = {
+        let mut acc = 0u32;
+        let mut v = Vec::with_capacity(n + 1);
+        for info in &hellos {
+            v.push(acc);
+            acc += info.sgids.len() as u32;
+        }
+        v.push(acc);
+        v
+    };
+    let host_of_item = |item: u32| -> usize {
+        match host_base[1..].iter().position(|&b| item < b) {
+            Some(h) => h,
+            None => n - 1, // unreachable for valid chunks; routed to last
+        }
+    };
+    let spec = ClusterSpec::new(n);
+
+    // Lockstep rounds until every host ends the run or the epoch dies.
+    loop {
+        let msgs = match collect_round(&rx, epoch, n) {
+            Ok(m) => m,
+            Err(reason) => {
+                abort_all(&mut conns, &reason);
+                return Ok(EpochEnd::Down(reason));
+            }
+        };
+        let label = msgs[0].label();
+        if msgs.iter().any(|m| m.label() != label) {
+            let reason = format!(
+                "protocol error: mixed round ({:?})",
+                msgs.iter().map(|m| m.label()).collect::<Vec<_>>()
+            );
+            let _ = send_all(&mut conns, &Msg::Fatal { reason: reason.clone() });
+            bail!("{reason}");
+        }
+        match label {
+            "Superstep" => {
+                if let Some(reason) =
+                    fold_superstep(msgs, &mut conns, &spec, state, n, &host_of_item)?
+                {
+                    return Ok(EpochEnd::Down(reason));
+                }
+            }
+            "Commit" => {
+                let mut t0 = None;
+                for (h, m) in msgs.into_iter().enumerate() {
+                    let Msg::Commit { t, output, merge } = m else { unreachable!() };
+                    if *t0.get_or_insert(t) != t {
+                        let reason = "hosts committed different timesteps".to_string();
+                        let _ = send_all(&mut conns, &Msg::Fatal { reason: reason.clone() });
+                        bail!("{reason}");
+                    }
+                    state.outputs.insert((t, h), output);
+                    state.merges.insert((t, h), merge);
+                }
+                let t = t0.unwrap();
+                state.committed = state.committed.max(t + 1);
+                let ack = Msg::CommitAck { committed: state.committed };
+                if let Err(reason) = send_all(&mut conns, &ack) {
+                    abort_all(&mut conns, &reason);
+                    return Ok(EpochEnd::Down(reason));
+                }
+            }
+            "RefreshReq" => {
+                let min = msgs
+                    .iter()
+                    .map(|m| match m {
+                        Msg::RefreshReq { visible } => *visible,
+                        _ => unreachable!(),
+                    })
+                    .min()
+                    .unwrap_or(0);
+                if let Err(reason) = send_all(&mut conns, &Msg::RefreshResp { visible: min }) {
+                    abort_all(&mut conns, &reason);
+                    return Ok(EpochEnd::Down(reason));
+                }
+            }
+            "EndRun" => {
+                // Global merge order: (timestep, superstep, source item) —
+                // the same order the in-process merge sink produces.
+                let mut tagged: Vec<(u64, u32, u32, Vec<Vec<u8>>)> = Vec::new();
+                for t in 0..state.committed {
+                    for h in 0..n {
+                        if let Some(chunks) = state.merges.get(&(t, h)) {
+                            for c in chunks {
+                                tagged.push((t, c.superstep, c.src_item, c.msgs.clone()));
+                            }
+                        }
+                    }
+                }
+                tagged.sort_by_key(|(t, ss, src, _)| (*t, *ss, *src));
+                let merge: Vec<Vec<u8>> =
+                    tagged.into_iter().flat_map(|(_, _, _, msgs)| msgs).collect();
+                if let Err(reason) = send_all(&mut conns, &Msg::RunEnd { merge }) {
+                    abort_all(&mut conns, &reason);
+                    return Ok(EpochEnd::Down(reason));
+                }
+                let mut out = String::new();
+                for t in 0..state.committed {
+                    for h in 0..n {
+                        if let Some(s) = state.outputs.get(&(t, h)) {
+                            out.push_str(s);
+                        }
+                    }
+                }
+                for c in conns.iter_mut() {
+                    let _ = c.shutdown(Shutdown::Both);
+                }
+                return Ok(EpochEnd::Done(out));
+            }
+            other => {
+                let reason = format!("protocol error: unexpected {other} round");
+                let _ = send_all(&mut conns, &Msg::Fatal { reason: reason.clone() });
+                bail!("{reason}");
+            }
+        }
+    }
+}
+
+/// Fold one superstep round and answer every host. Returns
+/// `Ok(Some(reason))` when the epoch must tear down.
+fn fold_superstep(
+    msgs: Vec<Msg>,
+    conns: &mut [TcpStream],
+    spec: &ClusterSpec,
+    state: &mut RunState,
+    n: usize,
+    host_of_item: &dyn Fn(u32) -> usize,
+) -> Result<Option<String>> {
+    let mut all_halted = true;
+    let mut any_inflight = false;
+    let mut first_pattern: Option<String> = None;
+    let mut first_unknown: Option<String> = None;
+    let mut pair_acc: HashMap<(u32, u32), (u64, u64)> = HashMap::new();
+    let mut route_chunks: Vec<Vec<WireChunk>> = (0..n).map(|_| Vec::new()).collect();
+    let mut route_carry: Vec<Vec<CarryChunk>> = (0..n).map(|_| Vec::new()).collect();
+    for m in msgs {
+        let Msg::Superstep {
+            all_halted: halted,
+            any_inflight: inflight,
+            pattern_error,
+            unknown_dest,
+            pairs,
+            chunks,
+            carry,
+            ..
+        } = m
+        else {
+            unreachable!()
+        };
+        all_halted &= halted;
+        any_inflight |= inflight;
+        // Host order IS global item order, so "first in host order" is
+        // "first in global item order"; pattern violations outrank
+        // unknown destinations, matching the in-process fold.
+        if first_pattern.is_none() {
+            first_pattern = pattern_error;
+        }
+        if first_unknown.is_none() {
+            first_unknown = unknown_dest;
+        }
+        for (s, d, nm, b) in pairs {
+            let e = pair_acc.entry((s, d)).or_insert((0, 0));
+            e.0 += nm;
+            e.1 += b;
+        }
+        for c in chunks {
+            route_chunks[host_of_item(c.dst_item)].push(c);
+        }
+        for c in carry {
+            route_carry[host_of_item(c.dst_item)].push(c);
+        }
+    }
+    let error = first_pattern.or(first_unknown);
+    if let Some(err) = error {
+        // Failed supersteps charge nothing and deliver nothing — the
+        // in-process order of observables.
+        let res = Msg::SuperstepResult {
+            proceed: false,
+            error: Some(err.clone()),
+            net_ns: 0,
+            chunks: Vec::new(),
+            carry: Vec::new(),
+        };
+        let _ = send_all(conns, &res);
+        bail!("{err}");
+    }
+    // Charge the unioned batches once; every host gets the same cost so
+    // simulated network time stays identical across hosts (and identical
+    // to the in-process engine, which also charges per-pair batches).
+    let batches: Vec<(u64, u64)> = pair_acc.values().copied().collect();
+    let net_ns = state.clock.charge_superstep(&spec.net, &batches);
+    let proceed = !(all_halted && !any_inflight);
+    for (h, (chunks, carry)) in route_chunks.into_iter().zip(route_carry).enumerate() {
+        let res = Msg::SuperstepResult { proceed, error: None, net_ns, chunks, carry };
+        if let Err(e) = write_msg(&mut conns[h], &res) {
+            let reason = format!("host {h}: {e:#}");
+            abort_all(conns, &reason);
+            return Ok(Some(reason));
+        }
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_base_routing_is_half_open() {
+        let host_base = [0u32, 3, 5, 9];
+        let n = 3;
+        let host_of = |item: u32| -> usize {
+            match host_base[1..].iter().position(|&b| item < b) {
+                Some(h) => h,
+                None => n - 1,
+            }
+        };
+        assert_eq!(host_of(0), 0);
+        assert_eq!(host_of(2), 0);
+        assert_eq!(host_of(3), 1);
+        assert_eq!(host_of(4), 1);
+        assert_eq!(host_of(5), 2);
+        assert_eq!(host_of(8), 2);
+    }
+
+    #[test]
+    fn merge_ordering_is_timestep_superstep_source() {
+        let mut tagged = vec![
+            (1u64, 2u32, 0u32, vec![vec![1u8]]),
+            (0, 9, 9, vec![vec![2]]),
+            (1, 1, 5, vec![vec![3]]),
+            (0, 9, 1, vec![vec![4]]),
+        ];
+        tagged.sort_by_key(|(t, ss, src, _)| (*t, *ss, *src));
+        let flat: Vec<u8> =
+            tagged.into_iter().flat_map(|(_, _, _, m)| m).flatten().collect();
+        assert_eq!(flat, vec![4, 2, 3, 1]);
+    }
+}

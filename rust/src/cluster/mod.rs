@@ -1,15 +1,29 @@
-//! In-process cluster simulation (DESIGN.md §2.1).
+//! The cluster layer: in-process simulation AND real multi-process
+//! distribution (DESIGN.md §2.1; `docs/ARCHITECTURE.md` "Distribution").
 //!
 //! The paper's testbed is 12 commodity hosts (8-core Xeon, 16 GB, 1 TB
-//! SATA, GigE). We reproduce the *structure* on one machine: each
-//! partition is a simulated host with its own GoFS directory and worker
-//! threads; remote messages cross a [`NetworkModel`] that charges
-//! GigE-like latency and bandwidth, accumulated as simulated time next to
-//! the measured wall-clock.
+//! SATA, GigE). Two ways to reproduce the structure:
+//!
+//! * **In-process** (the default, and the deterministic test harness):
+//!   each partition is a simulated host with its own GoFS directory and
+//!   worker threads; remote messages cross a [`NetworkModel`] that
+//!   charges GigE-like latency and bandwidth, accumulated as simulated
+//!   time next to the measured wall-clock.
+//! * **Multi-process** (`goffish coordinator` + one `goffish host` per
+//!   partition): the same engine code runs behind
+//!   [`transport::Transport`], with [`proto`]'s CRC-framed messages over
+//!   TCP, BSP barriers committed at the [`coordinator`], and durable
+//!   carry checkpoints enabling crash/rejoin ([`worker`]). Outputs are
+//!   bit-identical between the two paths (`tests/distributed.rs`).
 
+pub mod coordinator;
 pub mod net;
+pub mod proto;
+pub mod transport;
+pub mod worker;
 
 pub use net::{NetworkClock, NetworkModel};
+pub use transport::{LocalTransport, Transport};
 
 /// Static description of the simulated cluster.
 #[derive(Debug, Clone)]

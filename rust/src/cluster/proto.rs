@@ -1,0 +1,624 @@
+//! Wire protocol for real multi-process distribution (one frame per
+//! message, length-prefixed and CRC-framed).
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "GFF1" (LE u32)
+//! 4       4     payload length (LE u32, < 1 GB)
+//! 8       4     crc32 of payload (LE u32)
+//! 12      n     payload (one encoded [`Msg`])
+//! ```
+//!
+//! The payload codec reuses [`crate::util::wire`] (the same primitives as
+//! the GoFS slice format), so every message is little-endian, varint-
+//! length-prefixed, and decodes with truncation errors instead of panics.
+//!
+//! ### Session shape (see `docs/ARCHITECTURE.md` "Distribution")
+//!
+//! Workers connect and send [`Msg::Hello`]; the coordinator replies
+//! [`Msg::Start`] once all hosts joined. From then on the protocol is
+//! strict **lockstep**: every worker sends the same variant each round
+//! ([`Msg::Superstep`] → [`Msg::SuperstepResult`], [`Msg::Commit`] →
+//! [`Msg::CommitAck`], [`Msg::RefreshReq`] → [`Msg::RefreshResp`],
+//! [`Msg::EndRun`] → [`Msg::RunEnd`]). [`Msg::Abort`] tears an epoch
+//! down for rejoin after a peer crash; [`Msg::Fatal`] ends the run.
+
+use crate::util::wire::{Dec, Enc};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Frame magic: "GFF1".
+pub const MAGIC: u32 = 0x3146_4647;
+/// Refuse frames above this payload size (corrupt length prefix guard).
+pub const MAX_FRAME: u32 = 1 << 30;
+
+/// Typed marker for "this epoch was torn down, rejoin and resume" —
+/// distinguishes a recoverable coordinator [`Msg::Abort`] / connection
+/// loss from a genuine application or I/O error. Carried inside
+/// `anyhow::Error`; recovery loops `downcast_ref::<EpochAborted>()`.
+#[derive(Debug, Clone)]
+pub struct EpochAborted(pub String);
+
+impl std::fmt::Display for EpochAborted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "epoch aborted: {}", self.0)
+    }
+}
+
+impl std::error::Error for EpochAborted {}
+
+/// One source item's messages for one destination item, both identified
+/// by their **global item index** (host-major, store order within a
+/// host) — the tag that lets the receiver reproduce the in-process
+/// delivery order by sorting chunks per destination by source.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireChunk {
+    pub dst_item: u32,
+    pub src_item: u32,
+    pub msgs: Vec<Vec<u8>>,
+}
+
+/// A next-timestep (carry) group: delivered to `dst_item`'s subgraph at
+/// superstep 1 of the next timestep. The `(superstep, src_item)` tag
+/// reproduces the in-process carry fold order (superstep ascending, item
+/// ascending, send order within) via a stable sort at timestep end.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CarryChunk {
+    pub dst_item: u32,
+    pub superstep: u32,
+    pub src_item: u32,
+    pub msgs: Vec<Vec<u8>>,
+}
+
+/// One item's `send_to_merge` payloads for one superstep. The coordinator
+/// orders chunks globally by (timestep, superstep, src_item) so the final
+/// `Application::merge` sees the exact in-process message order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MergeChunk {
+    pub superstep: u32,
+    pub src_item: u32,
+    pub msgs: Vec<Vec<u8>>,
+}
+
+/// Protocol messages. See the module docs for the session shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Worker -> coordinator on (re)connect: which partition this process
+    /// owns and what its durable store currently holds.
+    Hello { part: u32, n_instances: u64, n_vertices: u64, sgids: Vec<u64> },
+    /// Coordinator -> workers once all hosts joined an epoch: the global
+    /// run plan. `directory` lists every subgraph cluster-wide in global
+    /// item order as (sgid, host). `resume_from` is the first
+    /// uncommitted timestep (0 on a fresh run).
+    Start {
+        n_hosts: u32,
+        total_vertices: u64,
+        visible: u64,
+        resume_from: u64,
+        follow: bool,
+        follow_poll_ms: u64,
+        follow_idle_polls: u64,
+        max_supersteps: u64,
+        app_name: String,
+        app_params: Vec<(String, String)>,
+        directory: Vec<(u64, u32)>,
+    },
+    /// Worker -> coordinator at each superstep barrier: local vote +
+    /// error state, per-host-pair batch accounting, and the remote-bound
+    /// message/carry chunks.
+    Superstep {
+        t: u64,
+        superstep: u32,
+        all_halted: bool,
+        any_inflight: bool,
+        /// First pattern violation in local item order (pre-formatted).
+        pattern_error: Option<String>,
+        /// First unknown-destination error in local item order.
+        unknown_dest: Option<String>,
+        /// (src host, dst host, n msgs, bytes) per host pair.
+        pairs: Vec<(u32, u32, u64, u64)>,
+        chunks: Vec<WireChunk>,
+        carry: Vec<CarryChunk>,
+    },
+    /// Coordinator -> worker: the folded barrier decision plus this
+    /// host's inbound chunks.
+    SuperstepResult {
+        proceed: bool,
+        error: Option<String>,
+        net_ns: u64,
+        chunks: Vec<WireChunk>,
+        carry: Vec<CarryChunk>,
+    },
+    /// Worker -> coordinator after durably checkpointing timestep `t`:
+    /// its partition's canonical emission and merge payloads.
+    Commit { t: u64, output: String, merge: Vec<MergeChunk> },
+    /// Coordinator -> workers once all hosts committed `t`.
+    CommitAck { committed: u64 },
+    /// Worker -> coordinator (follow mode): local visible instance count
+    /// after a store refresh.
+    RefreshReq { visible: u64 },
+    /// Coordinator -> workers: min visible across hosts (the watermark).
+    RefreshResp { visible: u64 },
+    /// Worker -> coordinator: local schedule exhausted.
+    EndRun,
+    /// Coordinator -> workers: the run is over; globally ordered merge
+    /// payloads for the eventually-dependent final fold.
+    RunEnd { merge: Vec<Vec<u8>> },
+    /// Coordinator -> workers: epoch torn down (peer crash); reconnect
+    /// and resume from the last committed timestep.
+    Abort { reason: String },
+    /// Either direction: unrecoverable error; the run ends.
+    Fatal { reason: String },
+}
+
+fn enc_opt_str(e: &mut Enc, s: &Option<String>) {
+    match s {
+        Some(v) => {
+            e.u8(1);
+            e.str(v);
+        }
+        None => e.u8(0),
+    }
+}
+
+fn dec_opt_str(d: &mut Dec) -> Result<Option<String>> {
+    Ok(match d.u8()? {
+        0 => None,
+        _ => Some(d.str()?.to_string()),
+    })
+}
+
+fn enc_msgs(e: &mut Enc, msgs: &[Vec<u8>]) {
+    e.varint(msgs.len() as u64);
+    for m in msgs {
+        e.bytes(m);
+    }
+}
+
+fn dec_msgs(d: &mut Dec) -> Result<Vec<Vec<u8>>> {
+    let n = d.varint()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        out.push(d.bytes()?.to_vec());
+    }
+    Ok(out)
+}
+
+fn enc_chunks(e: &mut Enc, chunks: &[WireChunk]) {
+    e.varint(chunks.len() as u64);
+    for c in chunks {
+        e.u32(c.dst_item);
+        e.u32(c.src_item);
+        enc_msgs(e, &c.msgs);
+    }
+}
+
+fn dec_chunks(d: &mut Dec) -> Result<Vec<WireChunk>> {
+    let n = d.varint()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        out.push(WireChunk { dst_item: d.u32()?, src_item: d.u32()?, msgs: dec_msgs(d)? });
+    }
+    Ok(out)
+}
+
+fn enc_carry(e: &mut Enc, carry: &[CarryChunk]) {
+    e.varint(carry.len() as u64);
+    for c in carry {
+        e.u32(c.dst_item);
+        e.u32(c.superstep);
+        e.u32(c.src_item);
+        enc_msgs(e, &c.msgs);
+    }
+}
+
+fn dec_carry(d: &mut Dec) -> Result<Vec<CarryChunk>> {
+    let n = d.varint()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        out.push(CarryChunk {
+            dst_item: d.u32()?,
+            superstep: d.u32()?,
+            src_item: d.u32()?,
+            msgs: dec_msgs(d)?,
+        });
+    }
+    Ok(out)
+}
+
+impl Msg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            Msg::Hello { part, n_instances, n_vertices, sgids } => {
+                e.u8(1);
+                e.u32(*part);
+                e.u64(*n_instances);
+                e.u64(*n_vertices);
+                e.varint(sgids.len() as u64);
+                for &s in sgids {
+                    e.u64(s);
+                }
+            }
+            Msg::Start {
+                n_hosts,
+                total_vertices,
+                visible,
+                resume_from,
+                follow,
+                follow_poll_ms,
+                follow_idle_polls,
+                max_supersteps,
+                app_name,
+                app_params,
+                directory,
+            } => {
+                e.u8(2);
+                e.u32(*n_hosts);
+                e.u64(*total_vertices);
+                e.u64(*visible);
+                e.u64(*resume_from);
+                e.u8(*follow as u8);
+                e.u64(*follow_poll_ms);
+                e.u64(*follow_idle_polls);
+                e.u64(*max_supersteps);
+                e.str(app_name);
+                e.varint(app_params.len() as u64);
+                for (k, v) in app_params {
+                    e.str(k);
+                    e.str(v);
+                }
+                e.varint(directory.len() as u64);
+                for &(sgid, host) in directory {
+                    e.u64(sgid);
+                    e.u32(host);
+                }
+            }
+            Msg::Superstep {
+                t,
+                superstep,
+                all_halted,
+                any_inflight,
+                pattern_error,
+                unknown_dest,
+                pairs,
+                chunks,
+                carry,
+            } => {
+                e.u8(3);
+                e.u64(*t);
+                e.u32(*superstep);
+                e.u8(*all_halted as u8);
+                e.u8(*any_inflight as u8);
+                enc_opt_str(&mut e, pattern_error);
+                enc_opt_str(&mut e, unknown_dest);
+                e.varint(pairs.len() as u64);
+                for &(s, d, n, b) in pairs {
+                    e.u32(s);
+                    e.u32(d);
+                    e.u64(n);
+                    e.u64(b);
+                }
+                enc_chunks(&mut e, chunks);
+                enc_carry(&mut e, carry);
+            }
+            Msg::SuperstepResult { proceed, error, net_ns, chunks, carry } => {
+                e.u8(4);
+                e.u8(*proceed as u8);
+                enc_opt_str(&mut e, error);
+                e.u64(*net_ns);
+                enc_chunks(&mut e, chunks);
+                enc_carry(&mut e, carry);
+            }
+            Msg::Commit { t, output, merge } => {
+                e.u8(5);
+                e.u64(*t);
+                e.str(output);
+                e.varint(merge.len() as u64);
+                for m in merge {
+                    e.u32(m.superstep);
+                    e.u32(m.src_item);
+                    enc_msgs(&mut e, &m.msgs);
+                }
+            }
+            Msg::CommitAck { committed } => {
+                e.u8(6);
+                e.u64(*committed);
+            }
+            Msg::RefreshReq { visible } => {
+                e.u8(7);
+                e.u64(*visible);
+            }
+            Msg::RefreshResp { visible } => {
+                e.u8(8);
+                e.u64(*visible);
+            }
+            Msg::EndRun => {
+                e.u8(9);
+            }
+            Msg::RunEnd { merge } => {
+                e.u8(10);
+                enc_msgs(&mut e, merge);
+            }
+            Msg::Abort { reason } => {
+                e.u8(11);
+                e.str(reason);
+            }
+            Msg::Fatal { reason } => {
+                e.u8(12);
+                e.str(reason);
+            }
+        }
+        e.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Msg> {
+        let mut d = Dec::new(buf);
+        let tag = d.u8()?;
+        let msg = match tag {
+            1 => {
+                let part = d.u32()?;
+                let n_instances = d.u64()?;
+                let n_vertices = d.u64()?;
+                let n = d.varint()? as usize;
+                let mut sgids = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    sgids.push(d.u64()?);
+                }
+                Msg::Hello { part, n_instances, n_vertices, sgids }
+            }
+            2 => {
+                let n_hosts = d.u32()?;
+                let total_vertices = d.u64()?;
+                let visible = d.u64()?;
+                let resume_from = d.u64()?;
+                let follow = d.u8()? != 0;
+                let follow_poll_ms = d.u64()?;
+                let follow_idle_polls = d.u64()?;
+                let max_supersteps = d.u64()?;
+                let app_name = d.str()?.to_string();
+                let np = d.varint()? as usize;
+                let mut app_params = Vec::with_capacity(np.min(1 << 16));
+                for _ in 0..np {
+                    app_params.push((d.str()?.to_string(), d.str()?.to_string()));
+                }
+                let nd = d.varint()? as usize;
+                let mut directory = Vec::with_capacity(nd.min(1 << 20));
+                for _ in 0..nd {
+                    directory.push((d.u64()?, d.u32()?));
+                }
+                Msg::Start {
+                    n_hosts,
+                    total_vertices,
+                    visible,
+                    resume_from,
+                    follow,
+                    follow_poll_ms,
+                    follow_idle_polls,
+                    max_supersteps,
+                    app_name,
+                    app_params,
+                    directory,
+                }
+            }
+            3 => {
+                let t = d.u64()?;
+                let superstep = d.u32()?;
+                let all_halted = d.u8()? != 0;
+                let any_inflight = d.u8()? != 0;
+                let pattern_error = dec_opt_str(&mut d)?;
+                let unknown_dest = dec_opt_str(&mut d)?;
+                let np = d.varint()? as usize;
+                let mut pairs = Vec::with_capacity(np.min(1 << 16));
+                for _ in 0..np {
+                    pairs.push((d.u32()?, d.u32()?, d.u64()?, d.u64()?));
+                }
+                let chunks = dec_chunks(&mut d)?;
+                let carry = dec_carry(&mut d)?;
+                Msg::Superstep {
+                    t,
+                    superstep,
+                    all_halted,
+                    any_inflight,
+                    pattern_error,
+                    unknown_dest,
+                    pairs,
+                    chunks,
+                    carry,
+                }
+            }
+            4 => Msg::SuperstepResult {
+                proceed: d.u8()? != 0,
+                error: dec_opt_str(&mut d)?,
+                net_ns: d.u64()?,
+                chunks: dec_chunks(&mut d)?,
+                carry: dec_carry(&mut d)?,
+            },
+            5 => {
+                let t = d.u64()?;
+                let output = d.str()?.to_string();
+                let n = d.varint()? as usize;
+                let mut merge = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    merge.push(MergeChunk {
+                        superstep: d.u32()?,
+                        src_item: d.u32()?,
+                        msgs: dec_msgs(&mut d)?,
+                    });
+                }
+                Msg::Commit { t, output, merge }
+            }
+            6 => Msg::CommitAck { committed: d.u64()? },
+            7 => Msg::RefreshReq { visible: d.u64()? },
+            8 => Msg::RefreshResp { visible: d.u64()? },
+            9 => Msg::EndRun,
+            10 => Msg::RunEnd { merge: dec_msgs(&mut d)? },
+            11 => Msg::Abort { reason: d.str()?.to_string() },
+            12 => Msg::Fatal { reason: d.str()?.to_string() },
+            other => bail!("proto: unknown message tag {other}"),
+        };
+        if !d.is_empty() {
+            bail!("proto: {} trailing bytes after message tag {tag}", d.remaining());
+        }
+        Ok(msg)
+    }
+
+    /// A short human label for lockstep-mismatch diagnostics.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "Hello",
+            Msg::Start { .. } => "Start",
+            Msg::Superstep { .. } => "Superstep",
+            Msg::SuperstepResult { .. } => "SuperstepResult",
+            Msg::Commit { .. } => "Commit",
+            Msg::CommitAck { .. } => "CommitAck",
+            Msg::RefreshReq { .. } => "RefreshReq",
+            Msg::RefreshResp { .. } => "RefreshResp",
+            Msg::EndRun => "EndRun",
+            Msg::RunEnd { .. } => "RunEnd",
+            Msg::Abort { .. } => "Abort",
+            Msg::Fatal { .. } => "Fatal",
+        }
+    }
+}
+
+/// Write one framed message (magic + length + CRC + payload), flushing.
+pub fn write_msg(w: &mut impl Write, msg: &Msg) -> Result<()> {
+    let payload = msg.encode();
+    if payload.len() as u64 >= MAX_FRAME as u64 {
+        bail!("proto: frame too large ({} bytes)", payload.len());
+    }
+    let mut header = [0u8; 12];
+    header[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    header[4..8].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    header[8..12].copy_from_slice(&crc32fast::hash(&payload).to_le_bytes());
+    w.write_all(&header).context("proto: writing frame header")?;
+    w.write_all(&payload).context("proto: writing frame payload")?;
+    w.flush().context("proto: flushing frame")?;
+    Ok(())
+}
+
+/// Read one framed message. An error here means the connection is dead or
+/// the stream is corrupt — callers treat both as a lost peer.
+pub fn read_msg(r: &mut impl Read) -> Result<Msg> {
+    let mut header = [0u8; 12];
+    r.read_exact(&mut header).context("proto: reading frame header")?;
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        bail!("proto: bad frame magic {magic:#010x}");
+    }
+    let len = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    if len >= MAX_FRAME {
+        bail!("proto: frame length {len} exceeds limit");
+    }
+    let crc = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).context("proto: reading frame payload")?;
+    if crc32fast::hash(&payload) != crc {
+        bail!("proto: frame CRC mismatch");
+    }
+    Msg::decode(&payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Msg) {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &msg).unwrap();
+        let back = read_msg(&mut &buf[..]).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn all_variants_roundtrip() {
+        roundtrip(Msg::Hello { part: 1, n_instances: 9, n_vertices: 1234, sgids: vec![7, 8] });
+        roundtrip(Msg::Start {
+            n_hosts: 2,
+            total_vertices: 100,
+            visible: 4,
+            resume_from: 2,
+            follow: true,
+            follow_poll_ms: 25,
+            follow_idle_polls: 40,
+            max_supersteps: 10_000,
+            app_name: "sssp".into(),
+            app_params: vec![("source".into(), "42".into())],
+            directory: vec![(0, 0), (1 << 32, 1)],
+        });
+        roundtrip(Msg::Superstep {
+            t: 3,
+            superstep: 2,
+            all_halted: false,
+            any_inflight: true,
+            pattern_error: None,
+            unknown_dest: Some("message to unknown subgraph sg9:9".into()),
+            pairs: vec![(0, 1, 10, 640)],
+            chunks: vec![WireChunk { dst_item: 5, src_item: 1, msgs: vec![vec![1, 2], vec![]] }],
+            carry: vec![CarryChunk { dst_item: 6, superstep: 2, src_item: 1, msgs: vec![vec![9]] }],
+        });
+        roundtrip(Msg::SuperstepResult {
+            proceed: true,
+            error: None,
+            net_ns: 123,
+            chunks: vec![],
+            carry: vec![],
+        });
+        roundtrip(Msg::Commit {
+            t: 7,
+            output: "t=7 sg0:0 ok\n".into(),
+            merge: vec![MergeChunk { superstep: 1, src_item: 0, msgs: vec![vec![3]] }],
+        });
+        roundtrip(Msg::CommitAck { committed: 7 });
+        roundtrip(Msg::RefreshReq { visible: 11 });
+        roundtrip(Msg::RefreshResp { visible: 10 });
+        roundtrip(Msg::EndRun);
+        roundtrip(Msg::RunEnd { merge: vec![vec![1], vec![2, 3]] });
+        roundtrip(Msg::Abort { reason: "host 1 lost".into() });
+        roundtrip(Msg::Fatal { reason: "boom".into() });
+    }
+
+    #[test]
+    fn corrupted_payload_fails_crc() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::RefreshReq { visible: 5 }).unwrap();
+        let last = buf.len() - 1;
+        buf[last] ^= 0xff;
+        let err = read_msg(&mut &buf[..]).unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::EndRun).unwrap();
+        assert!(read_msg(&mut &buf[..buf.len() - 1]).is_err());
+        assert!(read_msg(&mut &buf[..4]).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::EndRun).unwrap();
+        buf[0] ^= 0x40;
+        let err = read_msg(&mut &buf[..]).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::EndRun).unwrap();
+        buf[4..8].copy_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        let err = read_msg(&mut &buf[..]).unwrap_err();
+        assert!(err.to_string().contains("length"), "{err}");
+    }
+
+    #[test]
+    fn epoch_aborted_downcasts_through_anyhow() {
+        let e = anyhow::Error::new(EpochAborted("peer lost".into()));
+        assert!(e.downcast_ref::<EpochAborted>().is_some());
+        assert!(e.to_string().contains("peer lost"));
+    }
+}

@@ -1,0 +1,506 @@
+//! The [`Transport`] abstraction: how a Gopher engine's superstep
+//! barrier, timestep commits, and follow-mode watermarks move between
+//! hosts.
+//!
+//! Two implementations:
+//!
+//! * [`LocalTransport`] — the in-process path. Messages never leave the
+//!   process (the engine's staging shards deliver them directly); the
+//!   transport only folds the barrier decision and charges the simulated
+//!   [`NetworkModel`] for the per-host-pair batches, exactly where the
+//!   engine used to call the clock ad hoc. This is the default and the
+//!   deterministic test harness.
+//! * [`TcpTransport`] — one engine per host process, exchanging
+//!   CRC-framed [`crate::cluster::proto`] messages with a coordinator
+//!   over a socket. The same engine code runs both: the barrier calls
+//!   [`Transport::exchange`] either way, with remote-bound chunks empty
+//!   in local mode.
+//!
+//! Every remote-path failure (connection loss, coordinator
+//! [`Msg::Abort`]) surfaces as an [`EpochAborted`] inside the error
+//! chain, so `cluster::worker::run_host` can tear the engine down and
+//! rejoin from the durable store without conflating crashes with
+//! application errors.
+
+use crate::cluster::net::{NetworkClock, NetworkModel};
+use crate::cluster::proto::{
+    read_msg, write_msg, CarryChunk, EpochAborted, MergeChunk, Msg, WireChunk,
+};
+use crate::graph::{SubgraphId, Timestep};
+use crate::util::wire::{Dec, Enc};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Everything the engine knows at a superstep barrier, handed to the
+/// transport to fold into a global decision.
+#[derive(Debug, Default)]
+pub struct ExchangeIn {
+    pub timestep: Timestep,
+    pub superstep: usize,
+    /// Every *local* item voted halt this superstep.
+    pub all_halted: bool,
+    /// Some *local* item sent at least one message.
+    pub any_inflight: bool,
+    /// First local pattern violation, pre-formatted by the engine (so
+    /// local and distributed runs fail with byte-identical messages).
+    pub pattern_error: Option<String>,
+    /// First local unknown-destination error, pre-formatted.
+    pub unknown_dest: Option<String>,
+    /// ((src host, dst host) -> (msgs, bytes)), sorted by host pair.
+    pub pairs: Vec<((usize, usize), (u64, u64))>,
+    /// Remote-bound message chunks (empty for in-process runs).
+    pub outbound: Vec<WireChunk>,
+    /// Remote-bound next-timestep carry chunks (sequential pattern).
+    pub outbound_carry: Vec<CarryChunk>,
+}
+
+/// The folded barrier decision.
+#[derive(Debug, Default)]
+pub struct ExchangeOut {
+    /// Run another superstep (false = every host halted with nothing in
+    /// flight, or an error is set).
+    pub proceed: bool,
+    /// Globally folded error: pattern violations before unknown
+    /// destinations, host order within a kind (= global item order).
+    pub error: Option<String>,
+    /// Simulated network nanoseconds charged for this superstep.
+    pub net_ns: u64,
+    /// Message chunks addressed to this host's items.
+    pub inbound: Vec<WireChunk>,
+    /// Carry chunks addressed to this host's items.
+    pub inbound_carry: Vec<CarryChunk>,
+}
+
+/// A completed timestep, ready to commit.
+pub struct CommitIn<'a> {
+    pub timestep: Timestep,
+    /// This host's canonical per-timestep emission (see
+    /// `cluster::worker::DistApp`).
+    pub output: String,
+    /// This host's merge chunks for the timestep, in item order.
+    pub merge: Vec<MergeChunk>,
+    /// Folded next-timestep carry for this host's subgraphs — the
+    /// durable state a restarted host resumes from.
+    pub carry: &'a HashMap<SubgraphId, Vec<Vec<u8>>>,
+}
+
+/// How superstep routing, barrier commits, and follow watermarks leave
+/// the engine. Implementations must be shareable across the engine's
+/// worker threads (only the barrier thread calls in, but the engine is
+/// `Sync`).
+pub trait Transport: Send + Sync {
+    /// True for transports that move messages between processes — the
+    /// engine then resolves non-local destinations through the global
+    /// directory instead of treating them as unknown.
+    fn is_distributed(&self) -> bool {
+        false
+    }
+
+    /// The superstep barrier: fold votes/errors globally, charge the
+    /// network clock, move remote-bound chunks.
+    fn exchange(&self, x: ExchangeIn) -> Result<ExchangeOut>;
+
+    /// Commit a completed timestep: durably checkpoint the carry, then
+    /// block until every host committed it (distributed barrier). The
+    /// in-process engine needs neither.
+    fn commit_timestep(&self, _c: CommitIn<'_>) -> Result<()> {
+        Ok(())
+    }
+
+    /// Follow mode: trade this host's visible instance count for the
+    /// cluster-wide watermark (min across hosts). In-process, the local
+    /// count *is* the watermark.
+    fn refresh_watermark(&self, local_visible: usize) -> Result<usize> {
+        Ok(local_visible)
+    }
+
+    /// Publish follow-mode consumer lag for cross-process backpressure
+    /// (filesystem beacon). Advisory; in-process runs use the shared
+    /// [`crate::gofs::FlowGate`] instead.
+    fn publish_lag(&self, _lag_bytes: u64) {}
+
+    /// The run is over: returns the globally ordered merge payloads for
+    /// the eventually-dependent final fold (None in-process — the engine
+    /// already holds them).
+    fn finish_run(&self) -> Result<Option<Vec<Vec<u8>>>> {
+        Ok(None)
+    }
+
+    /// Release any producer blocked on this consumer's lag (every exit
+    /// path of a follow run).
+    fn close_lag(&self) {}
+
+    /// Total simulated network nanoseconds charged so far (probe).
+    fn net_ns_total(&self) -> u64 {
+        0
+    }
+}
+
+/// The in-process transport: charges the simulated network model at the
+/// barrier and otherwise does nothing — bit-identical observables to the
+/// pre-trait engine, asserted in `tests/determinism.rs`.
+pub struct LocalTransport {
+    net: NetworkModel,
+    clock: NetworkClock,
+}
+
+impl LocalTransport {
+    pub fn new(net: NetworkModel) -> LocalTransport {
+        LocalTransport { net, clock: NetworkClock::default() }
+    }
+}
+
+impl Transport for LocalTransport {
+    fn exchange(&self, x: ExchangeIn) -> Result<ExchangeOut> {
+        // Errors bail before the network charge (the engine's historical
+        // order: a failed superstep charges nothing).
+        if x.pattern_error.is_some() || x.unknown_dest.is_some() {
+            return Ok(ExchangeOut {
+                proceed: false,
+                error: x.pattern_error.or(x.unknown_dest),
+                ..ExchangeOut::default()
+            });
+        }
+        let batches: Vec<(u64, u64)> = x.pairs.iter().map(|&(_, b)| b).collect();
+        let net_ns = self.clock.charge_superstep(&self.net, &batches);
+        Ok(ExchangeOut {
+            proceed: !(x.all_halted && !x.any_inflight),
+            error: None,
+            net_ns,
+            inbound: Vec::new(),
+            inbound_carry: Vec::new(),
+        })
+    }
+
+    fn net_ns_total(&self) -> u64 {
+        self.clock.total_ns()
+    }
+}
+
+/// Best-effort cross-process lag beacon: one small file per partition
+/// directory, rewritten atomically (tmp + rename) on every publish. See
+/// `gofs::ingest::beacon::BeaconGate` for the producer side.
+pub struct LagBeacon {
+    path: PathBuf,
+}
+
+/// Beacon file name inside a `part-N/` directory.
+pub const BEACON_FILE: &str = ".flow-beacon";
+
+impl LagBeacon {
+    pub fn new(part_dir: &Path) -> LagBeacon {
+        LagBeacon { path: part_dir.join(BEACON_FILE) }
+    }
+
+    /// Write `lag_bytes` (and the closed flag) atomically. Best-effort:
+    /// backpressure is advisory, so I/O errors are swallowed rather than
+    /// failing the run.
+    pub fn publish(&self, lag_bytes: u64, closed: bool) {
+        let mut e = Enc::new();
+        e.u64(lag_bytes);
+        e.u8(closed as u8);
+        let tmp = self.path.with_extension("tmp");
+        let _ = std::fs::File::create(&tmp)
+            .and_then(|mut f| f.write_all(&e.finish()))
+            .and_then(|_| std::fs::rename(&tmp, &self.path));
+    }
+
+    /// Read a beacon file: (lag bytes, closed). `None` when absent or
+    /// unreadable (treated as "no active consumer").
+    pub fn read(path: &Path) -> Option<(u64, bool)> {
+        let buf = std::fs::read(path).ok()?;
+        let mut d = Dec::new(&buf);
+        let lag = d.u64().ok()?;
+        let closed = d.u8().ok()? != 0;
+        Some((lag, closed))
+    }
+}
+
+/// Durable carry checkpoint: written by [`TcpTransport::commit_timestep`]
+/// *before* the Commit is acknowledged, so a committed cluster watermark
+/// implies every host holds the checkpoint it needs to resume.
+const CKPT_MAGIC: u32 = 0x504b_4347; // "GCKP"
+
+/// Checkpoint file name for timestep `t` inside a `part-N/` directory.
+pub fn checkpoint_name(t: Timestep) -> String {
+    format!("gopher-ckpt-{t:08}.bin")
+}
+
+/// Encode the folded next-timestep carry (the only cross-timestep engine
+/// state): sorted by subgraph id, message order preserved, CRC-trailed.
+pub fn encode_carry_checkpoint(t: Timestep, carry: &HashMap<SubgraphId, Vec<Vec<u8>>>) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u32(CKPT_MAGIC);
+    e.u64(t as u64);
+    let mut sgids: Vec<SubgraphId> = carry.keys().copied().collect();
+    sgids.sort();
+    e.varint(sgids.len() as u64);
+    for sgid in sgids {
+        e.u64(sgid.0);
+        let msgs = &carry[&sgid];
+        e.varint(msgs.len() as u64);
+        for m in msgs {
+            e.bytes(m);
+        }
+    }
+    let crc = crc32fast::hash(&e.buf);
+    e.u32(crc);
+    e.finish()
+}
+
+/// Decode a carry checkpoint; returns (timestep, carry).
+pub fn decode_carry_checkpoint(buf: &[u8]) -> Result<(Timestep, HashMap<SubgraphId, Vec<Vec<u8>>>)> {
+    if buf.len() < 4 {
+        bail!("checkpoint truncated");
+    }
+    let (body, tail) = buf.split_at(buf.len() - 4);
+    let crc = u32::from_le_bytes(tail.try_into().unwrap());
+    if crc32fast::hash(body) != crc {
+        bail!("checkpoint CRC mismatch");
+    }
+    let mut d = Dec::new(body);
+    if d.u32()? != CKPT_MAGIC {
+        bail!("checkpoint bad magic");
+    }
+    let t = d.u64()? as Timestep;
+    let n = d.varint()? as usize;
+    let mut carry = HashMap::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        let sgid = SubgraphId(d.u64()?);
+        let nm = d.varint()? as usize;
+        let mut msgs = Vec::with_capacity(nm.min(1 << 20));
+        for _ in 0..nm {
+            msgs.push(d.bytes()?.to_vec());
+        }
+        carry.insert(sgid, msgs);
+    }
+    Ok((t, carry))
+}
+
+/// The worker side of the socket transport: a request/response channel
+/// to the coordinator plus the durable bits (carry checkpoints, lag
+/// beacon) that make crash/rejoin and cross-process backpressure work.
+pub struct TcpTransport {
+    conn: Mutex<TcpStream>,
+    /// This worker's `part-N/` directory (checkpoints + beacon).
+    part_dir: PathBuf,
+    beacon: LagBeacon,
+    /// Test hook: slow each barrier down so kill/rejoin tests can land a
+    /// SIGKILL mid-run deterministically.
+    step_delay: Duration,
+}
+
+impl TcpTransport {
+    pub fn new(conn: TcpStream, part_dir: PathBuf, step_delay: Duration) -> TcpTransport {
+        let beacon = LagBeacon::new(&part_dir);
+        TcpTransport { conn: Mutex::new(conn), part_dir, beacon, step_delay }
+    }
+
+    /// One lockstep round trip. Connection loss and coordinator aborts
+    /// both become [`EpochAborted`]; a coordinator `Fatal` stays a plain
+    /// error (the run is over).
+    fn rpc(&self, msg: &Msg) -> Result<Msg> {
+        let mut conn = self.conn.lock().unwrap();
+        let lost =
+            |e: anyhow::Error| anyhow::Error::new(EpochAborted(format!("connection lost: {e:#}")));
+        write_msg(&mut *conn, msg).map_err(lost)?;
+        match read_msg(&mut *conn).map_err(lost)? {
+            Msg::Abort { reason } => Err(anyhow::Error::new(EpochAborted(reason))),
+            Msg::Fatal { reason } => bail!("coordinator: {reason}"),
+            m => Ok(m),
+        }
+    }
+
+    /// Durably write the carry checkpoint for `t` (tmp + fsync + rename
+    /// + dir fsync), pruning checkpoints older than the previous one.
+    fn write_checkpoint(&self, t: Timestep, carry: &HashMap<SubgraphId, Vec<Vec<u8>>>) -> Result<()> {
+        let path = self.part_dir.join(checkpoint_name(t));
+        let tmp = path.with_extension("tmp");
+        let buf = encode_carry_checkpoint(t, carry);
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&buf)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, &path)?;
+        if let Ok(dir) = std::fs::File::open(&self.part_dir) {
+            let _ = dir.sync_all();
+        }
+        if t >= 2 {
+            let _ = std::fs::remove_file(self.part_dir.join(checkpoint_name(t - 2)));
+        }
+        Ok(())
+    }
+}
+
+/// Load the carry checkpoint for timestep `t` from a partition
+/// directory (rejoin path; see `cluster::worker`).
+pub fn load_checkpoint(
+    part_dir: &Path,
+    t: Timestep,
+) -> Result<HashMap<SubgraphId, Vec<Vec<u8>>>> {
+    let path = part_dir.join(checkpoint_name(t));
+    let buf =
+        std::fs::read(&path).with_context(|| format!("reading checkpoint {}", path.display()))?;
+    let (ct, carry) = decode_carry_checkpoint(&buf)?;
+    if ct != t {
+        bail!("checkpoint {} holds timestep {ct}, expected {t}", path.display());
+    }
+    Ok(carry)
+}
+
+impl Transport for TcpTransport {
+    fn is_distributed(&self) -> bool {
+        true
+    }
+
+    fn exchange(&self, x: ExchangeIn) -> Result<ExchangeOut> {
+        if !self.step_delay.is_zero() {
+            std::thread::sleep(self.step_delay);
+        }
+        let msg = Msg::Superstep {
+            t: x.timestep as u64,
+            superstep: x.superstep as u32,
+            all_halted: x.all_halted,
+            any_inflight: x.any_inflight,
+            pattern_error: x.pattern_error,
+            unknown_dest: x.unknown_dest,
+            pairs: x
+                .pairs
+                .iter()
+                .map(|&((s, d), (n, b))| (s as u32, d as u32, n, b))
+                .collect(),
+            chunks: x.outbound,
+            carry: x.outbound_carry,
+        };
+        match self.rpc(&msg)? {
+            Msg::SuperstepResult { proceed, error, net_ns, chunks, carry } => Ok(ExchangeOut {
+                proceed,
+                error,
+                net_ns,
+                inbound: chunks,
+                inbound_carry: carry,
+            }),
+            other => bail!("protocol error: expected SuperstepResult, got {}", other.label()),
+        }
+    }
+
+    fn commit_timestep(&self, c: CommitIn<'_>) -> Result<()> {
+        // Checkpoint-before-ack: once the coordinator's watermark covers
+        // `t`, every host durably holds the carry it needs to run `t+1`.
+        self.write_checkpoint(c.timestep, c.carry)?;
+        let msg = Msg::Commit { t: c.timestep as u64, output: c.output, merge: c.merge };
+        match self.rpc(&msg)? {
+            Msg::CommitAck { .. } => Ok(()),
+            other => bail!("protocol error: expected CommitAck, got {}", other.label()),
+        }
+    }
+
+    fn refresh_watermark(&self, local_visible: usize) -> Result<usize> {
+        match self.rpc(&Msg::RefreshReq { visible: local_visible as u64 })? {
+            Msg::RefreshResp { visible } => Ok(visible as usize),
+            other => bail!("protocol error: expected RefreshResp, got {}", other.label()),
+        }
+    }
+
+    fn publish_lag(&self, lag_bytes: u64) {
+        self.beacon.publish(lag_bytes, false);
+    }
+
+    fn finish_run(&self) -> Result<Option<Vec<Vec<u8>>>> {
+        match self.rpc(&Msg::EndRun)? {
+            Msg::RunEnd { merge } => Ok(Some(merge)),
+            other => bail!("protocol error: expected RunEnd, got {}", other.label()),
+        }
+    }
+
+    fn close_lag(&self) {
+        self.beacon.publish(0, true);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_transport_charges_like_the_clock() {
+        let t = LocalTransport::new(NetworkModel::default());
+        let out = t
+            .exchange(ExchangeIn {
+                all_halted: false,
+                any_inflight: true,
+                pairs: vec![((0, 1), (10, 1000)), ((1, 0), (2, 64))],
+                ..ExchangeIn::default()
+            })
+            .unwrap();
+        assert!(out.proceed);
+        let m = NetworkModel::default();
+        let expect = m.batch_cost_ns(10, 1000).max(m.batch_cost_ns(2, 64));
+        assert_eq!(out.net_ns, expect);
+        assert_eq!(t.net_ns_total(), expect);
+    }
+
+    #[test]
+    fn local_transport_errors_bail_before_charging() {
+        let t = LocalTransport::new(NetworkModel::default());
+        let out = t
+            .exchange(ExchangeIn {
+                pattern_error: Some("timestep 0, superstep 1: boom".into()),
+                unknown_dest: Some("message to unknown subgraph sg0:9".into()),
+                pairs: vec![((0, 1), (10, 1000))],
+                ..ExchangeIn::default()
+            })
+            .unwrap();
+        assert!(!out.proceed);
+        // Pattern violations take precedence over unknown destinations.
+        assert_eq!(out.error.as_deref(), Some("timestep 0, superstep 1: boom"));
+        assert_eq!(out.net_ns, 0);
+        assert_eq!(t.net_ns_total(), 0);
+    }
+
+    #[test]
+    fn local_transport_halts_when_all_halted_and_quiet() {
+        let t = LocalTransport::new(NetworkModel::instant());
+        let out = t
+            .exchange(ExchangeIn { all_halted: true, any_inflight: false, ..Default::default() })
+            .unwrap();
+        assert!(!out.proceed);
+        let out = t
+            .exchange(ExchangeIn { all_halted: true, any_inflight: true, ..Default::default() })
+            .unwrap();
+        assert!(out.proceed, "in-flight messages reactivate halted items");
+    }
+
+    #[test]
+    fn carry_checkpoint_roundtrips_and_detects_corruption() {
+        let mut carry = HashMap::new();
+        carry.insert(SubgraphId::new(1, 3), vec![vec![1u8, 2], vec![]]);
+        carry.insert(SubgraphId::new(0, 0), vec![vec![9u8]]);
+        let buf = encode_carry_checkpoint(7, &carry);
+        let (t, back) = decode_carry_checkpoint(&buf).unwrap();
+        assert_eq!(t, 7);
+        assert_eq!(back, carry);
+        let mut bad = buf.clone();
+        bad[10] ^= 0xff;
+        assert!(decode_carry_checkpoint(&bad).is_err());
+    }
+
+    #[test]
+    fn beacon_roundtrips_through_the_filesystem() {
+        let dir = std::env::temp_dir().join(format!("goffish-beacon-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let b = LagBeacon::new(&dir);
+        b.publish(12345, false);
+        assert_eq!(LagBeacon::read(&dir.join(BEACON_FILE)), Some((12345, false)));
+        b.publish(0, true);
+        assert_eq!(LagBeacon::read(&dir.join(BEACON_FILE)), Some((0, true)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

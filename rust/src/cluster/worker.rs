@@ -1,0 +1,387 @@
+//! The `goffish host` worker process: one process per partition, owning
+//! that partition's GoFS directory, running the unchanged Gopher engine
+//! behind a [`TcpTransport`].
+//!
+//! ## Epochs and rejoin
+//!
+//! A worker's life is a loop of *epochs*. Each epoch: connect to the
+//! coordinator, send [`Msg::Hello`] (partition id, durable instance
+//! count, subgraph ids in store order), receive [`Msg::Start`] (the
+//! global directory plus `resume_from`, the first uncommitted timestep),
+//! rebuild the [`DistRun`] routing state, and hand control to
+//! [`GopherEngine::run_distributed`]. When any peer crashes the
+//! coordinator tears the epoch down; this worker sees either an
+//! [`Msg::Abort`] frame or a dead socket, both surfaced as
+//! [`EpochAborted`], and loops: it reopens the store (a rejoin must see
+//! exactly the durable state, never a cached view from the aborted
+//! epoch), reloads the carry checkpoint `resume_from - 1` written by
+//! [`Transport::commit_timestep`](crate::cluster::transport::Transport::commit_timestep),
+//! and rejoins. Plain errors (bad store, protocol violation,
+//! coordinator `Fatal`) end the process.
+//!
+//! ## Canonical emission
+//!
+//! Each worker emits one line per local subgraph per committed timestep,
+//! in store order ([`DistApp::emit_timestep`]). Because global item
+//! order is host-major with store order within a host, the coordinator
+//! reassembles the cluster-wide per-timestep output by concatenating the
+//! hosts' emissions in host order — and that concatenation is asserted
+//! bit-identical to an in-process run over the same collection
+//! (`tests/distributed.rs`).
+
+use crate::apps::{PageRankApp, SsspApp};
+use crate::cluster::proto::{read_msg, write_msg, EpochAborted, Msg};
+use crate::cluster::transport::{load_checkpoint, TcpTransport};
+use crate::cluster::ClusterSpec;
+use crate::gofs::{Store, StoreOptions};
+use crate::gopher::engine::{compute_edge_cut_pct, DistRun};
+use crate::gopher::{Application, GopherEngine, RunOptions};
+use crate::graph::{SubgraphId, Timestep};
+use crate::runtime::ScalarBackend;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// An application plus its canonical per-timestep emission — the string
+/// a worker sends with each commit, and the string the bit-identity
+/// tests compare against an in-process run.
+pub trait DistApp: Send + Sync {
+    fn as_app(&self) -> &dyn Application;
+
+    /// One line per subgraph of `sgids` (this host's subgraphs in store
+    /// order), summarizing the application state at timestep `t`. Must
+    /// be a pure function of the results sink so re-emission after a
+    /// rejoin reproduces the same bytes.
+    fn emit_timestep(&self, t: Timestep, sgids: &[SubgraphId]) -> String;
+}
+
+struct SsspDist(SsspApp);
+
+impl DistApp for SsspDist {
+    fn as_app(&self) -> &dyn Application {
+        &self.0
+    }
+
+    fn emit_timestep(&self, t: Timestep, sgids: &[SubgraphId]) -> String {
+        let reached = self.0.results.reached.lock().unwrap();
+        let sums = self.0.results.dist_sum.lock().unwrap();
+        let mut out = String::new();
+        for &sgid in sgids {
+            let r = reached.get(&(t, sgid)).copied().unwrap_or(0);
+            let s = sums.get(&(t, sgid)).copied().unwrap_or(0.0);
+            // f64 Display is shortest-roundtrip: bit-equal sums produce
+            // byte-equal lines, any divergence is visible.
+            let _ = writeln!(out, "t={t} {sgid} reached={r} dist_sum={s}");
+        }
+        out
+    }
+}
+
+struct PageRankDist(PageRankApp);
+
+impl DistApp for PageRankDist {
+    fn as_app(&self) -> &dyn Application {
+        &self.0
+    }
+
+    fn emit_timestep(&self, t: Timestep, sgids: &[SubgraphId]) -> String {
+        let map = self.0.results.by_subgraph.lock().unwrap();
+        let mut out = String::new();
+        for &sgid in sgids {
+            match map.get(&(t, sgid)) {
+                Some(s) => {
+                    let _ = write!(out, "t={t} {sgid} mass={} top=[", s.mass);
+                    for (i, (v, r)) in s.top.iter().enumerate() {
+                        if i > 0 {
+                            out.push(' ');
+                        }
+                        let _ = write!(out, "v{v}:{r}");
+                    }
+                    out.push_str("]\n");
+                }
+                None => {
+                    let _ = writeln!(out, "t={t} {sgid} mass=0 top=[]");
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Build the distributed wrapper for `app_name`, resolving schema-bound
+/// parameters against this worker's local store (schemas are identical
+/// across partitions by construction).
+pub fn build_app(
+    app_name: &str,
+    app_params: &[(String, String)],
+    total_vertices: usize,
+    store: &Store,
+) -> Result<Box<dyn DistApp>> {
+    let get =
+        |k: &str| app_params.iter().find(|(pk, _)| pk == k).map(|(_, v)| v.as_str());
+    match app_name {
+        "sssp" => {
+            let es = store.edge_schema();
+            let attr = es
+                .index_of("latency_ms")
+                .or_else(|| es.index_of("travel_time"))
+                .context("sssp: no latency-like edge attribute")?;
+            let source: u64 = get("source")
+                .context("sssp: distributed runs need an explicit `source` param")?
+                .parse()
+                .context("sssp: source must be a vertex id")?;
+            Ok(Box::new(SsspDist(SsspApp::new(source, attr))))
+        }
+        "pagerank" => {
+            let es = store.edge_schema();
+            let active = es.index_of("active");
+            Ok(Box::new(PageRankDist(PageRankApp::new(
+                total_vertices,
+                active,
+                Arc::new(ScalarBackend),
+            ))))
+        }
+        other => bail!("app {other} has no distributed wrapper (expected sssp|pagerank)"),
+    }
+}
+
+/// Configuration for one `goffish host` process.
+#[derive(Clone)]
+pub struct HostConfig {
+    /// Deployed collection root (contains `part-N/`).
+    pub root: PathBuf,
+    /// Partition this process owns — also its host index.
+    pub part: usize,
+    /// Coordinator address, e.g. `127.0.0.1:7070`.
+    pub coordinator: String,
+    pub store_opts: StoreOptions,
+    /// BSP worker threads (0 = available parallelism).
+    pub workers: usize,
+    /// Give up (re)connecting after this long.
+    pub connect_timeout_s: u64,
+    /// Test hook: sleep this long before every superstep barrier so
+    /// kill/rejoin tests can land a SIGKILL mid-run.
+    pub step_delay_ms: u64,
+}
+
+impl Default for HostConfig {
+    fn default() -> Self {
+        HostConfig {
+            root: PathBuf::new(),
+            part: 0,
+            coordinator: String::new(),
+            store_opts: StoreOptions::default(),
+            workers: 0,
+            connect_timeout_s: 30,
+            step_delay_ms: 0,
+        }
+    }
+}
+
+fn connect(addr: &str, budget: Duration) -> Result<TcpStream> {
+    let t0 = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                s.set_nodelay(true).ok();
+                return Ok(s);
+            }
+            Err(_) if t0.elapsed() < budget => {
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("connecting to coordinator {addr}"))
+            }
+        }
+    }
+}
+
+/// Run this partition's worker until the run completes ([`Ok`]) or hits
+/// an unrecoverable error. [`EpochAborted`] triggers a silent rejoin.
+pub fn run_host(cfg: &HostConfig) -> Result<()> {
+    loop {
+        match run_epoch(cfg) {
+            Ok(()) => return Ok(()),
+            Err(e) if e.downcast_ref::<EpochAborted>().is_some() => {
+                eprintln!("host {}: {e:#}; rejoining", cfg.part);
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// One epoch: connect, handshake, run until commit-complete or abort.
+fn run_epoch(cfg: &HostConfig) -> Result<()> {
+    // Fresh store every epoch: a rejoin must read the durable state, not
+    // a view cached before the crash.
+    let store = Store::open(&cfg.root, cfg.part, cfg.store_opts.clone())?;
+    let part_dir = cfg.root.join(format!("part-{}", cfg.part));
+    let sgids: Vec<SubgraphId> = store.shared().subgraphs.iter().map(|sg| sg.id).collect();
+    let n_vertices: u64 =
+        store.shared().subgraphs.iter().map(|sg| sg.n_vertices() as u64).sum();
+    let n_instances = store.n_instances() as u64;
+
+    let mut conn =
+        connect(&cfg.coordinator, Duration::from_secs(cfg.connect_timeout_s.max(1)))?;
+    write_msg(
+        &mut conn,
+        &Msg::Hello {
+            part: cfg.part as u32,
+            n_instances,
+            n_vertices,
+            sgids: sgids.iter().map(|s| s.0).collect(),
+        },
+    )?;
+    // The Start may take a while (the coordinator waits for all hosts);
+    // a peer crash during the join window aborts the epoch like any
+    // other connection event.
+    let msg = match read_msg(&mut conn) {
+        Ok(Msg::Abort { reason }) => return Err(anyhow::Error::new(EpochAborted(reason))),
+        Ok(Msg::Fatal { reason }) => bail!("coordinator: {reason}"),
+        Ok(m) => m,
+        Err(e) => {
+            return Err(anyhow::Error::new(EpochAborted(format!(
+                "connection lost waiting for start: {e:#}"
+            ))))
+        }
+    };
+    let label = msg.label();
+    let Msg::Start {
+        n_hosts,
+        total_vertices,
+        visible,
+        resume_from,
+        follow,
+        follow_poll_ms,
+        follow_idle_polls,
+        max_supersteps,
+        app_name,
+        app_params,
+        directory,
+    } = msg
+    else {
+        bail!("protocol error: expected Start, got {label}");
+    };
+    let n_hosts = n_hosts as usize;
+    if cfg.part >= n_hosts {
+        bail!("partition {} out of range for a {n_hosts}-host run", cfg.part);
+    }
+
+    // Rebuild the global routing state from the directory: this host's
+    // item base (global index of its first subgraph) and the host +
+    // global index of every remote subgraph. Validate that the
+    // coordinator's view of this partition matches the store.
+    let mut remote: HashMap<SubgraphId, (usize, u32)> = HashMap::new();
+    let mut host_of: HashMap<SubgraphId, usize> = HashMap::new();
+    let mut item_base: Option<u32> = None;
+    let mut local_seen = 0usize;
+    for (g, &(raw, host)) in directory.iter().enumerate() {
+        let sgid = SubgraphId(raw);
+        let host = host as usize;
+        host_of.insert(sgid, host);
+        if host == cfg.part {
+            if item_base.is_none() {
+                item_base = Some(g as u32);
+            }
+            if sgids.get(local_seen).copied() != Some(sgid) {
+                bail!("directory/store order mismatch at global item {g} ({sgid})");
+            }
+            local_seen += 1;
+        } else {
+            remote.insert(sgid, (host, g as u32));
+        }
+    }
+    if local_seen != sgids.len() {
+        bail!(
+            "directory lists {local_seen} subgraphs for partition {}, store holds {}",
+            cfg.part,
+            sgids.len()
+        );
+    }
+    let item_base = item_base.unwrap_or(0);
+
+    let resume_from = resume_from as usize;
+    let resume_carry = if resume_from > 0 {
+        load_checkpoint(&part_dir, resume_from - 1).with_context(|| {
+            format!("rejoining at timestep {resume_from} without its carry checkpoint")
+        })?
+    } else {
+        HashMap::new()
+    };
+
+    let app = build_app(&app_name, &app_params, total_vertices as usize, &store)?;
+    let metrics = cfg.store_opts.metrics.clone();
+    let mut engine = GopherEngine::new(vec![store], ClusterSpec::new(n_hosts), metrics);
+    engine.set_transport(Arc::new(TcpTransport::new(
+        conn,
+        part_dir,
+        Duration::from_millis(cfg.step_delay_ms),
+    )));
+    let edge_cut_pct = compute_edge_cut_pct(
+        engine.stores().iter().map(|s| (cfg.part, s.as_ref())),
+        &|sgid| host_of.get(&sgid).copied(),
+    );
+
+    let opts = RunOptions {
+        workers: if cfg.workers == 0 { RunOptions::default().workers } else { cfg.workers },
+        max_supersteps: (max_supersteps as usize).max(1),
+        follow,
+        follow_poll_ms,
+        follow_idle_polls: follow_idle_polls as usize,
+        ..RunOptions::default()
+    };
+    let dist = DistRun {
+        my_host: cfg.part,
+        n_hosts,
+        item_base,
+        remote,
+        n_timesteps: visible as usize,
+        resume_from,
+        resume_carry,
+        edge_cut_pct,
+    };
+    engine
+        .run_distributed(app.as_app(), &opts, dist, &|t| app.emit_timestep(t, &sgids))
+        .map(|_| ())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sssp_emission_is_store_ordered_and_total() {
+        let app = SsspDist(SsspApp::new(7, 0));
+        let a = SubgraphId::new(0, 0);
+        let b = SubgraphId::new(0, 1);
+        {
+            let mut reached = app.0.results.reached.lock().unwrap();
+            let mut sums = app.0.results.dist_sum.lock().unwrap();
+            reached.insert((3, a), 5);
+            sums.insert((3, a), 12.5);
+            // b intentionally unpublished: emits the zero line.
+        }
+        let s = app.emit_timestep(3, &[a, b]);
+        assert_eq!(s, "t=3 sg0:0 reached=5 dist_sum=12.5\nt=3 sg0:1 reached=0 dist_sum=0\n");
+    }
+
+    #[test]
+    fn pagerank_emission_formats_top_lists() {
+        let app = PageRankDist(PageRankApp::new(10, None, Arc::new(ScalarBackend)));
+        let a = SubgraphId::new(1, 0);
+        app.0.results.by_subgraph.lock().unwrap().insert(
+            (0, a),
+            crate::apps::pagerank::PageRankSummary {
+                mass: 0.5,
+                top: vec![(9, 0.25), (4, 0.125)],
+            },
+        );
+        let s = app.emit_timestep(0, &[a]);
+        assert_eq!(s, "t=0 sg1:0 mass=0.5 top=[v9:0.25 v4:0.125]\n");
+    }
+}

@@ -136,6 +136,14 @@ pub struct CollectionAppender {
     /// while the consuming run's published lag exceeds the high-water
     /// mark. See `gofs::ingest::FlowGate`.
     gate: Option<std::sync::Arc<crate::gofs::ingest::FlowGate>>,
+    /// Cross-process backpressure gate (multi-process follow runs
+    /// publish lag through filesystem beacons instead of an in-process
+    /// gate). See `gofs::ingest::BeaconGate`.
+    beacon_gate: Option<crate::gofs::ingest::BeaconGate>,
+    /// One-writer lease on the collection, held for this appender's
+    /// lifetime (released on drop / `finish`); keeps a concurrent
+    /// `compact_collection` process out. See `gofs::ingest::WriterLock`.
+    _lock: crate::gofs::ingest::WriterLock,
     /// Set when an append or seal failed part-way through its
     /// partition fan-out: the in-memory state may disagree with disk
     /// and across partitions, so further appends are refused. Reopening
@@ -152,6 +160,7 @@ impl CollectionAppender {
         if !(VERSION_V1..=VERSION_V2).contains(&opts.slice_version) {
             bail!("ingest: unsupported slice_version {}", opts.slice_version);
         }
+        let lock = crate::gofs::ingest::WriterLock::acquire(root, "append")?;
         let n_parts = crate::gofs::writer::collection_parts(root)?;
         let mut parts = Vec::with_capacity(n_parts);
         for p in 0..n_parts {
@@ -200,6 +209,8 @@ impl CollectionAppender {
             unsynced_appends: 0,
             seals_since_compact: 0,
             gate: None,
+            beacon_gate: None,
+            _lock: lock,
             poisoned: false,
         };
         app.catch_up()?;
@@ -292,6 +303,15 @@ impl CollectionAppender {
         self.gate = Some(gate);
     }
 
+    /// Attach a cross-process backpressure gate: `append` additionally
+    /// waits on the per-partition lag beacons multi-process follow runs
+    /// publish (see `gofs::ingest::BeaconGate`). Composable with
+    /// [`CollectionAppender::attach_gate`]; both waits run, in-process
+    /// first.
+    pub fn attach_beacon(&mut self, gate: crate::gofs::ingest::BeaconGate) {
+        self.beacon_gate = Some(gate);
+    }
+
     /// fsync every partition's WAL now (group-commit flush point).
     /// No-op when nothing is pending.
     pub fn flush(&mut self) -> Result<()> {
@@ -326,6 +346,14 @@ impl CollectionAppender {
         // Backpressure: hold here (outside any disk work) while the
         // consuming follow run lags past the gate's high-water mark.
         if let Some(gate) = self.gate.clone() {
+            let b0 = Instant::now();
+            if gate.wait_below_hwm() {
+                self.stats.backpressure_blocks += 1;
+                self.stats.backpressure_wall_s += b0.elapsed().as_secs_f64();
+            }
+        }
+        // Same contract against out-of-process consumers' lag beacons.
+        if let Some(gate) = &self.beacon_gate {
             let b0 = Instant::now();
             if gate.wait_below_hwm() {
                 self.stats.backpressure_blocks += 1;

@@ -1,0 +1,177 @@
+//! Cross-process follow-mode backpressure (the producer side).
+//!
+//! In-process, [`FlowGate`](crate::gofs::ingest::FlowGate) couples a
+//! live follow run to the appender feeding it. Under multi-process
+//! distribution the consumers are separate `goffish host` processes, so
+//! the coupling goes through the filesystem instead: each worker's
+//! transport publishes its partition's lag into `part-N/.flow-beacon`
+//! (atomic tmp + rename; see `cluster::transport::LagBeacon`), and a
+//! [`BeaconGate`] attached to the appender sums those beacons and holds
+//! `append` while the total exceeds the high-water mark — the same
+//! contract as the in-process gate, with the same release guarantees
+//! re-derived for processes that can crash:
+//!
+//! * a worker that finishes (or errors out of) its run writes a final
+//!   *closed* beacon — any closed beacon releases the gate for good,
+//!   mirroring `FlowGate::close`;
+//! * a worker that crashes stops refreshing its beacon's mtime — a
+//!   beacon older than the staleness window no longer counts, and when
+//!   every beacon is stale or missing the gate treats the collection as
+//!   having no live consumer and never blocks. A dead consumer can
+//!   therefore wedge a producer for at most the staleness window.
+
+use crate::cluster::transport::{LagBeacon, BEACON_FILE};
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, SystemTime};
+
+/// Producer-side gate over the per-partition lag beacons.
+pub struct BeaconGate {
+    /// High-water mark on summed decoded tail bytes (0 = never block).
+    hwm_bytes: u64,
+    part_dirs: Vec<PathBuf>,
+    /// Ignore beacons whose mtime is older than this.
+    stale_after: Duration,
+    poll: Duration,
+    /// Times an append actually blocked (the backpressure probe).
+    blocks: AtomicU64,
+}
+
+impl BeaconGate {
+    pub fn new(part_dirs: Vec<PathBuf>, hwm_bytes: u64) -> BeaconGate {
+        BeaconGate {
+            hwm_bytes,
+            part_dirs,
+            stale_after: Duration::from_secs(10),
+            poll: Duration::from_millis(50),
+            blocks: AtomicU64::new(0),
+        }
+    }
+
+    /// Gate over every partition of the collection at `root`.
+    pub fn for_collection(root: &Path, hwm_bytes: u64) -> Result<BeaconGate> {
+        let n = crate::gofs::writer::collection_parts(root)?;
+        let dirs = (0..n).map(|p| root.join(format!("part-{p}"))).collect();
+        Ok(BeaconGate::new(dirs, hwm_bytes))
+    }
+
+    /// Shrink the staleness window / poll tick (tests).
+    pub fn with_timing(mut self, stale_after: Duration, poll: Duration) -> BeaconGate {
+        self.stale_after = stale_after;
+        self.poll = poll;
+        self
+    }
+
+    /// One sweep over the beacons: `(summed live lag, any closed)`.
+    /// Missing, unreadable, and stale beacons contribute nothing.
+    fn sample(&self) -> (u64, bool) {
+        let now = SystemTime::now();
+        let mut lag = 0u64;
+        let mut closed = false;
+        for dir in &self.part_dirs {
+            let path = dir.join(BEACON_FILE);
+            let Some((bytes, c)) = LagBeacon::read(&path) else { continue };
+            if c {
+                closed = true;
+                continue;
+            }
+            let fresh = std::fs::metadata(&path)
+                .and_then(|m| m.modified())
+                .ok()
+                .and_then(|mtime| now.duration_since(mtime).ok())
+                .is_some_and(|age| age <= self.stale_after);
+            if fresh {
+                lag += bytes;
+            }
+        }
+        (lag, closed)
+    }
+
+    /// Producer side: block while the summed live lag exceeds the
+    /// high-water mark (no-op for `hwm == 0`, any closed beacon, or no
+    /// fresh beacons). Returns whether the call actually blocked; each
+    /// blocking call counts once in [`BeaconGate::blocks`].
+    pub fn wait_below_hwm(&self) -> bool {
+        if self.hwm_bytes == 0 {
+            return false;
+        }
+        let mut blocked = false;
+        loop {
+            let (lag, closed) = self.sample();
+            if closed || lag <= self.hwm_bytes {
+                return blocked;
+            }
+            if !blocked {
+                blocked = true;
+                self.blocks.fetch_add(1, Ordering::Relaxed);
+            }
+            std::thread::sleep(self.poll);
+        }
+    }
+
+    /// How many `append` calls blocked on this gate so far.
+    pub fn blocks(&self) -> u64 {
+        self.blocks.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("gofs-beacon-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(d.join("part-0")).unwrap();
+        std::fs::create_dir_all(d.join("part-1")).unwrap();
+        d
+    }
+
+    fn gate(root: &Path, hwm: u64) -> BeaconGate {
+        BeaconGate::new(vec![root.join("part-0"), root.join("part-1")], hwm)
+            .with_timing(Duration::from_secs(10), Duration::from_millis(5))
+    }
+
+    #[test]
+    fn sums_fresh_beacons_and_releases_when_lag_drains() {
+        let d = tmp("sum");
+        let g = gate(&d, 100);
+        // No beacons yet: no consumer, never block.
+        assert!(!g.wait_below_hwm());
+        LagBeacon::new(&d.join("part-0")).publish(60, false);
+        LagBeacon::new(&d.join("part-1")).publish(40, false);
+        assert_eq!(g.sample(), (100, false));
+        assert!(!g.wait_below_hwm(), "at the mark: pass");
+        LagBeacon::new(&d.join("part-1")).publish(41, false);
+        let waiter = std::thread::spawn({
+            let g = gate(&d, 100);
+            move || g.wait_below_hwm()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        LagBeacon::new(&d.join("part-1")).publish(0, false);
+        assert!(waiter.join().unwrap(), "waiter should report it blocked");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn closed_beacons_release_immediately() {
+        let d = tmp("closed");
+        LagBeacon::new(&d.join("part-0")).publish(1_000_000, false);
+        LagBeacon::new(&d.join("part-1")).publish(0, true);
+        let g = gate(&d, 10);
+        assert!(!g.wait_below_hwm(), "any closed beacon disarms the gate");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn stale_beacons_stop_counting() {
+        let d = tmp("stale");
+        LagBeacon::new(&d.join("part-0")).publish(1_000_000, false);
+        let g = BeaconGate::new(vec![d.join("part-0"), d.join("part-1")], 10)
+            .with_timing(Duration::from_millis(0), Duration::from_millis(5));
+        // Zero staleness window: even a just-written beacon is stale.
+        assert!(!g.wait_below_hwm(), "all-stale beacons mean no live consumer");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

@@ -135,11 +135,16 @@ pub struct CompactReport {
 
 /// Compact every partition of the collection rooted at `root`. Safe to
 /// re-run at any time (idempotent once the timeline is compacted); see
-/// the module docs for the crash-ordering argument.
+/// the module docs for the crash-ordering argument. Takes the
+/// collection's one-writer lock for the duration, so a standalone
+/// compactor can never interleave with a live appender in another
+/// process (the appender's inline cadence goes through `compact_part`
+/// under its own lease instead).
 pub fn compact_collection(root: &Path, opts: &CompactOptions) -> Result<CompactReport> {
     if !(VERSION_V1..=VERSION_V2).contains(&opts.slice_version) {
         bail!("compact: unsupported slice_version {}", opts.slice_version);
     }
+    let _lock = crate::gofs::ingest::WriterLock::acquire(root, "compact")?;
     let t0 = Instant::now();
     let n_parts = collection_parts(root)?;
     let mut report = CompactReport { parts: n_parts, ..Default::default() };

@@ -1,0 +1,143 @@
+//! One-writer arbitration for a growing collection.
+//!
+//! With multi-process distribution a collection can be touched by
+//! several writers at once: a streaming appender feeding it, and a
+//! standalone `goffish compact` re-packing sealed groups. Both mutate
+//! `meta.slice` and the group files, so exactly one may hold the
+//! collection at a time. [`WriterLock`] is the arbiter: an `O_EXCL`
+//! lock file at the collection root recording the holder's pid and
+//! role.
+//!
+//! Staleness: a crashed writer leaves its lock file behind. Acquisition
+//! treats a lock as stale when the recorded pid no longer exists (probed
+//! via `/proc/<pid>` on Linux, the only platform the multi-process path
+//! targets) and atomically replaces it. Two concurrent stale takeovers
+//! resolve through the same `O_EXCL` race — exactly one wins.
+
+use anyhow::{bail, Context, Result};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+const LOCK_FILE: &str = ".writer.lock";
+
+/// An exclusive collection-writer lease; released on drop.
+#[derive(Debug)]
+pub struct WriterLock {
+    path: PathBuf,
+}
+
+fn pid_alive(pid: u32) -> bool {
+    // Conservative off-Linux: without /proc we cannot probe, so a lock
+    // is never considered stale there.
+    if !Path::new("/proc").is_dir() {
+        return true;
+    }
+    Path::new(&format!("/proc/{pid}")).exists()
+}
+
+fn try_create(path: &Path, role: &str) -> std::io::Result<std::fs::File> {
+    let mut f = std::fs::OpenOptions::new().write(true).create_new(true).open(path)?;
+    let _ = writeln!(f, "{} {role}", std::process::id());
+    let _ = f.flush();
+    Ok(f)
+}
+
+impl WriterLock {
+    /// Acquire the writer lock for the collection at `root`, identifying
+    /// this holder as `role` (e.g. `"append"`, `"compact"`) in the lock
+    /// file for diagnostics. Fails fast — no blocking — when a live
+    /// process holds it; silently replaces a stale (dead-pid) lock.
+    pub fn acquire(root: &Path, role: &str) -> Result<WriterLock> {
+        let path = root.join(LOCK_FILE);
+        for _ in 0..2 {
+            match try_create(&path, role) {
+                Ok(_) => return Ok(WriterLock { path }),
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let body = std::fs::read_to_string(&path).unwrap_or_default();
+                    let mut it = body.split_whitespace();
+                    let pid: Option<u32> = it.next().and_then(|p| p.parse().ok());
+                    let holder_role = it.next().unwrap_or("?").to_string();
+                    match pid {
+                        Some(pid) if pid_alive(pid) => bail!(
+                            "collection is held by another writer \
+                             (pid {pid}, role {holder_role}); remove {} if that \
+                             process is gone",
+                            path.display()
+                        ),
+                        _ => {
+                            // Dead holder (or unreadable file): clear and
+                            // retry once; the O_EXCL create arbitrates
+                            // concurrent takeovers.
+                            let _ = std::fs::remove_file(&path);
+                        }
+                    }
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!("creating writer lock {}", path.display())
+                    })
+                }
+            }
+        }
+        bail!("could not acquire writer lock {} (takeover race)", path.display());
+    }
+
+    /// The lock file's location (diagnostics).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for WriterLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("gofs-lock-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn second_acquire_fails_while_held_and_succeeds_after_drop() {
+        let d = tmp("held");
+        let l = WriterLock::acquire(&d, "append").unwrap();
+        let err = WriterLock::acquire(&d, "compact").unwrap_err();
+        assert!(err.to_string().contains("held by another writer"), "{err:#}");
+        drop(l);
+        WriterLock::acquire(&d, "compact").unwrap();
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn stale_lock_from_a_dead_pid_is_replaced() {
+        let d = tmp("stale");
+        // Pid 0 is never a live user process (and /proc/0 does not exist).
+        std::fs::write(d.join(LOCK_FILE), "0 append\n").unwrap();
+        let l = WriterLock::acquire(&d, "compact");
+        if Path::new("/proc").is_dir() {
+            let l = l.unwrap();
+            let body = std::fs::read_to_string(l.path()).unwrap();
+            assert!(body.ends_with("compact\n"));
+        } else {
+            // No /proc: staleness cannot be probed, the lock holds.
+            assert!(l.is_err());
+        }
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn garbage_lock_files_are_cleared() {
+        let d = tmp("garbage");
+        std::fs::write(d.join(LOCK_FILE), "not-a-pid\n").unwrap();
+        WriterLock::acquire(&d, "append").unwrap();
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

@@ -53,11 +53,25 @@
 //! ([`compact::compact_collection`], CLI `compact`) or inline on a seal
 //! cadence (`IngestOptions::compact_after`).
 
+//! ### Multi-process coordination
+//!
+//! Under real distribution (`goffish coordinator` / `goffish host`) the
+//! appender shares the collection with other *processes*: [`lock`]'s
+//! [`WriterLock`] arbitrates the one-writer rule between an appender and
+//! a standalone compactor (an `O_EXCL` lock file with dead-pid
+//! takeover), and [`beacon`]'s [`BeaconGate`] carries the follow-mode
+//! backpressure contract across process boundaries by summing the
+//! per-partition `.flow-beacon` files the workers' transports publish.
+
 pub mod appender;
+pub mod beacon;
 pub mod compact;
 pub mod flow;
+pub mod lock;
 pub(crate) mod wal;
 
 pub use appender::{CollectionAppender, IngestOptions, IngestStats};
+pub use beacon::BeaconGate;
 pub use compact::{compact_collection, CompactOptions, CompactReport};
 pub use flow::FlowGate;
+pub use lock::WriterLock;

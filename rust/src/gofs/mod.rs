@@ -94,8 +94,8 @@ pub mod writer;
 pub use cache::SliceCache;
 pub use disk::DiskModel;
 pub use ingest::{
-    compact_collection, CollectionAppender, CompactOptions, CompactReport, FlowGate,
-    IngestOptions, IngestStats,
+    compact_collection, BeaconGate, CollectionAppender, CompactOptions, CompactReport, FlowGate,
+    IngestOptions, IngestStats, WriterLock,
 };
 pub use reader::{open_collection, Projection, ReadTrace, Store, StoreOptions, SubgraphInstance};
 pub use slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};

@@ -139,8 +139,33 @@
 //! blocks in `append` while the lag exceeds
 //! `StoreOptions::tail_high_water_bytes`, closing the unbounded-tail
 //! loop.
+//!
+//! ### The transport seam (in-process vs. real distribution)
+//!
+//! Everything that crosses hosts funnels through one
+//! [`Transport`] call per superstep: the barrier folds its local votes,
+//! pre-formatted errors, per-host-pair batch accounting, and (under a
+//! distributed transport) the remote-bound message/carry chunks into an
+//! [`ExchangeIn`], and applies the
+//! [`ExchangeOut`](crate::cluster::transport::ExchangeOut) that comes
+//! back —
+//! proceed/halt, the globally folded error, the network charge, and
+//! inbound chunks. The default [`LocalTransport`] keeps the historical
+//! in-process behavior bit-identical (it just charges the
+//! `NetworkModel`); `cluster::worker` swaps in a TCP transport and calls
+//! [`GopherEngine::run_distributed`], which runs every pattern as a
+//! lockstep timestep loop, commits each timestep through
+//! [`Transport::commit_timestep`] (durable carry checkpoint + canonical
+//! emission), and lets the coordinator fold follow watermarks and the
+//! final merge. Chunks are tagged with **global item indices**
+//! (host-major, store order within a host), so sorting per destination
+//! by source tag reproduces the exact in-process delivery order — that
+//! is what makes the two paths' outputs bit-identical
+//! (`tests/distributed.rs`).
 
-use crate::cluster::{ClusterSpec, NetworkClock};
+use crate::cluster::proto::{CarryChunk, MergeChunk, WireChunk};
+use crate::cluster::transport::{CommitIn, ExchangeIn, LocalTransport, Transport};
+use crate::cluster::ClusterSpec;
 use crate::gofs::{FlowGate, Projection, ReadTrace, Store, SubgraphInstance};
 use crate::graph::{SubgraphId, Timestep};
 use crate::gopher::{Application, ComputeCtx, Outbox, Pattern, Payload, SubgraphProgram};
@@ -247,6 +272,16 @@ pub struct TimestepStats {
     pub msgs_local: u64,
     pub msgs_remote: u64,
     pub msg_bytes_remote: u64,
+    /// Routed (cross-host) traffic per (src host, dst host) pair, summed
+    /// over this timestep's supersteps as (messages, payload bytes) and
+    /// sorted by pair — the measurable direction-2 target (edge-locality
+    /// work shrinks exactly these numbers).
+    pub routed_pairs: Vec<((usize, usize), (u64, u64))>,
+    /// Share (%) of owned edges whose destination subgraph lives on
+    /// another host — the partitioning-quality denominator for
+    /// `routed_pairs`. Constant across a run; cluster-wide in-process,
+    /// this host's share under a distributed worker.
+    pub edge_cut_pct: f64,
     pub sim_net_ns: u64,
     pub sim_disk_ns: u64,
 }
@@ -278,6 +313,16 @@ impl RunStats {
     /// Total blocking load time across timesteps (what prefetch shrinks).
     pub fn total_load_blocking_s(&self) -> f64 {
         self.per_timestep.iter().map(|t| t.load_blocking_s()).sum()
+    }
+
+    /// Total cross-host routed payload bytes (sum of every timestep's
+    /// `routed_pairs`) — `perf_hotpath` reports this per superstep as
+    /// `routed_bytes_per_superstep`.
+    pub fn total_routed_bytes(&self) -> u64 {
+        self.per_timestep
+            .iter()
+            .flat_map(|t| t.routed_pairs.iter().map(|&(_, (_, bytes))| bytes))
+            .sum()
     }
 }
 
@@ -316,6 +361,11 @@ struct StagedAux {
     bytes_remote: u64,
     /// (src host, dst host) -> (msgs, bytes) for the network model.
     batches: Vec<((usize, usize), (u64, u64))>,
+    /// Messages bound for items on *other processes* (distributed
+    /// transports only): (dst global item, msgs in send order), sorted
+    /// by destination. Always empty in-process, where every item is in
+    /// `index_of`.
+    remote: Vec<(u32, Vec<Payload>)>,
     next: Vec<(SubgraphId, Payload)>,
     merge: Vec<Payload>,
 }
@@ -328,10 +378,12 @@ struct StagedAux {
 /// at the barrier; the tag makes delivery order independent of which.
 fn stage_outbox(
     src_item: usize,
+    item_base: u32,
     src_host: usize,
     halted: bool,
     outbox: Outbox,
     index_of: &HashMap<SubgraphId, (usize, usize)>,
+    remote: Option<&HashMap<SubgraphId, (usize, u32)>>,
     shards: &[RouteShard],
 ) -> StagedAux {
     let Outbox { superstep, next_timestep, merge, error } = outbox;
@@ -344,8 +396,18 @@ fn stage_outbox(
         msgs_remote: 0,
         bytes_remote: 0,
         batches: Vec::new(),
+        remote: Vec::new(),
         next: next_timestep,
         merge,
+    };
+    let mut batch = |src: usize, dst: usize, bytes: u64| {
+        match aux.batches.iter_mut().find(|(p, _)| *p == (src, dst)) {
+            Some((_, b)) => {
+                b.0 += 1;
+                b.1 += bytes;
+            }
+            None => aux.batches.push(((src, dst), (1, bytes))),
+        }
     };
     // Group per destination, preserving this source's send order: O(1)
     // per message via a target-keyed map (a wide fan-out would make a
@@ -355,34 +417,75 @@ fn stage_outbox(
     // sorts chunks by source. Host-pair batches stay a linear scan
     // (host counts are tiny).
     let mut per_target: HashMap<usize, Vec<Payload>> = HashMap::new();
+    let mut per_remote: HashMap<u32, Vec<Payload>> = HashMap::new();
     for (to, payload) in superstep {
         // The destination HOST comes from the engine's view of where the
         // subgraph actually lives, never from `to.partition()` — see the
-        // module docs.
-        let Some(&(target, dst_host)) = index_of.get(&to) else {
-            aux.unknown_dest = Some(to);
-            break; // the barrier fails the run; no point routing on
-        };
-        if dst_host == src_host {
-            aux.msgs_local += 1;
-        } else {
-            aux.msgs_remote += 1;
-            aux.bytes_remote += payload.len() as u64;
-            match aux.batches.iter_mut().find(|(p, _)| *p == (src_host, dst_host)) {
-                Some((_, b)) => {
-                    b.0 += 1;
-                    b.1 += payload.len() as u64;
+        // module docs. A destination this process does not hold resolves
+        // through the cluster directory under a distributed transport;
+        // only a subgraph no host owns is an error.
+        match index_of.get(&to) {
+            Some(&(target, dst_host)) => {
+                if dst_host == src_host {
+                    aux.msgs_local += 1;
+                } else {
+                    aux.msgs_remote += 1;
+                    aux.bytes_remote += payload.len() as u64;
+                    batch(src_host, dst_host, payload.len() as u64);
                 }
-                None => aux.batches.push(((src_host, dst_host), (1, payload.len() as u64))),
+                per_target.entry(target).or_default().push(payload);
             }
+            None => match remote.and_then(|m| m.get(&to)) {
+                Some(&(dst_host, dst_global)) => {
+                    aux.msgs_remote += 1;
+                    aux.bytes_remote += payload.len() as u64;
+                    batch(src_host, dst_host, payload.len() as u64);
+                    per_remote.entry(dst_global).or_default().push(payload);
+                }
+                None => {
+                    aux.unknown_dest = Some(to);
+                    break; // the barrier fails the run; no point routing on
+                }
+            },
         }
-        per_target.entry(target).or_default().push(payload);
         aux.any_inflight = true;
     }
+    // The chunk tag is the GLOBAL item index (host-major): in-process
+    // `item_base` is 0 and this is the plain item index; a distributed
+    // worker tags with its cluster-wide offset so receivers sorting by
+    // tag reproduce the single-process delivery order.
     for (target, msgs) in per_target {
-        shards[target].lock().unwrap().push((src_item as u32, msgs));
+        shards[target].lock().unwrap().push((item_base + src_item as u32, msgs));
     }
+    aux.remote = per_remote.into_iter().collect();
+    aux.remote.sort_unstable_by_key(|&(dst, _)| dst);
     aux
+}
+
+/// Share (%) of owned edges whose destination subgraph resolves to a
+/// different host than the one holding its source, over the given
+/// `(host, store)` view. A destination `host_of` cannot place counts as
+/// cut (it lives on some other process). 0.0 for an edgeless view.
+pub fn compute_edge_cut_pct<'a>(
+    stores: impl Iterator<Item = (usize, &'a Store)>,
+    host_of: &dyn Fn(SubgraphId) -> Option<usize>,
+) -> f64 {
+    let (mut cut, mut total) = (0u64, 0u64);
+    for (h, s) in stores {
+        for sg in &s.shared().subgraphs {
+            total += sg.n_edges() as u64;
+            for re in &sg.remote {
+                if host_of(re.dst_subgraph) != Some(h) {
+                    cut += 1;
+                }
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        cut as f64 * 100.0 / total as f64
+    }
 }
 
 /// Shared prefetch queue between the temporal pool's loader threads and
@@ -605,6 +708,34 @@ impl Drop for PoolAbortOnPanic<'_> {
     }
 }
 
+/// This process's place in a multi-process cluster, assembled by
+/// `cluster::worker` from the coordinator's `Start` message. Present only
+/// under [`GopherEngine::run_distributed`]; in-process runs resolve every
+/// destination through the engine's own directory.
+pub struct DistRun {
+    /// This process's host index (== its partition id).
+    pub my_host: usize,
+    pub n_hosts: usize,
+    /// Global item index of this host's first item — the number of items
+    /// on lower-numbered hosts. Chunk tags add this offset so the global
+    /// (host-major) item order is recoverable everywhere.
+    pub item_base: u32,
+    /// Every subgraph this process does NOT hold:
+    /// sgid -> (owning host, global item index).
+    pub remote: HashMap<SubgraphId, (usize, u32)>,
+    /// Timesteps visible cluster-wide at start (batch schedule length;
+    /// the starting watermark under follow).
+    pub n_timesteps: usize,
+    /// First timestep to run: 0 on a fresh run, the committed watermark
+    /// on rejoin after a crash.
+    pub resume_from: Timestep,
+    /// Next-timestep carry restored from the durable checkpoint on
+    /// rejoin (empty on a fresh run).
+    pub resume_carry: HashMap<SubgraphId, Vec<Payload>>,
+    /// This host's edge-cut share against the cluster-wide directory.
+    pub edge_cut_pct: f64,
+}
+
 /// The distributed Gopher runtime over one deployed collection.
 pub struct GopherEngine {
     stores: Vec<Arc<Store>>,
@@ -612,6 +743,12 @@ pub struct GopherEngine {
     metrics: Arc<Metrics>,
     /// sgid -> (host, subgraph local index)
     directory: HashMap<SubgraphId, (usize, usize)>,
+    /// How supersteps cross the barrier (and, under distribution, hosts):
+    /// [`LocalTransport`] by default, swapped by `cluster::worker`.
+    transport: Arc<dyn Transport>,
+    /// Share (%) of owned edges whose destination subgraph lives on a
+    /// different host, per this engine's own directory.
+    edge_cut_pct: f64,
     /// Follow-mode backpressure gate, created lazily (see
     /// [`GopherEngine::flow_gate`]).
     flow_gate: OnceLock<Arc<FlowGate>>,
@@ -626,7 +763,37 @@ impl GopherEngine {
                 directory.insert(sg.id, (h, sg.id.local()));
             }
         }
-        GopherEngine { stores, spec, metrics, directory, flow_gate: OnceLock::new() }
+        let edge_cut_pct = compute_edge_cut_pct(
+            stores.iter().enumerate().map(|(h, s)| (h, s.as_ref())),
+            &|sgid| directory.get(&sgid).map(|&(h, _)| h),
+        );
+        let transport: Arc<dyn Transport> = Arc::new(LocalTransport::new(spec.net.clone()));
+        GopherEngine {
+            stores,
+            spec,
+            metrics,
+            directory,
+            transport,
+            edge_cut_pct,
+            flow_gate: OnceLock::new(),
+        }
+    }
+
+    /// Swap the transport (a `cluster::worker` installs its TCP
+    /// transport before calling [`GopherEngine::run_distributed`]).
+    pub fn set_transport(&mut self, transport: Arc<dyn Transport>) {
+        self.transport = transport;
+    }
+
+    /// The cluster shape this engine was built for.
+    pub fn spec(&self) -> &ClusterSpec {
+        &self.spec
+    }
+
+    /// Share (%) of owned edges cut by the host placement (per this
+    /// engine's own directory — cluster-wide for an in-process engine).
+    pub fn edge_cut_pct(&self) -> f64 {
+        self.edge_cut_pct
     }
 
     /// The follow-mode backpressure gate for this engine's collection,
@@ -828,7 +995,7 @@ impl GopherEngine {
                         // An open-ended follow run never has a "last"
                         // timestep for apps to special-case.
                         let n_ts_ctx = if opts.follow { usize::MAX } else { n_ts_known };
-                        let (ts_stats, next) = self.run_timestep(
+                        let (ts_stats, next, _) = self.run_timestep(
                             app,
                             t,
                             n_ts_ctx,
@@ -840,6 +1007,7 @@ impl GopherEngine {
                             opts.max_supersteps,
                             opts.overlap_routing,
                             &merge_msgs,
+                            None,
                         )?;
                         carry = next;
                         stats.per_timestep.push(ts_stats);
@@ -900,7 +1068,7 @@ impl GopherEngine {
                     // An open-ended follow run never has a "last"
                     // timestep for apps to special-case.
                     let n_ts_ctx = if follow { usize::MAX } else { n_ts_known };
-                    let (ts_stats, next) = self.run_timestep(
+                    let (ts_stats, next, _) = self.run_timestep(
                         app,
                         t,
                         n_ts_ctx,
@@ -912,6 +1080,7 @@ impl GopherEngine {
                         opts.max_supersteps,
                         opts.overlap_routing,
                         &merge_msgs,
+                        None,
                     )?;
                     // ComputeCtx refuses cross-timestep sends under these
                     // patterns, so this is a should-never-happen backstop
@@ -1069,6 +1238,155 @@ impl GopherEngine {
             let tm = Instant::now();
             app.merge(merge_msgs.into_inner().unwrap().into_values().flatten().collect());
             stats.merge_wall_s = tm.elapsed().as_secs_f64();
+        }
+        stats.total_wall_s = t0.elapsed().as_secs_f64();
+        Ok(stats)
+    }
+
+    /// Run `app` as one worker of a multi-process cluster (see
+    /// `cluster::worker`, which installs the TCP transport and calls
+    /// this). Differences from [`GopherEngine::run`], all invisible in
+    /// the outputs:
+    ///
+    /// * Every pattern runs the lockstep timestep loop — the cluster
+    ///   advances one timestep at a time, supersteps synchronized at the
+    ///   coordinator's barrier. (Temporal pools would need per-timestep
+    ///   barrier multiplexing; out of scope for this transport.)
+    /// * Loads are serial (no prefetch ring): the barrier, not the load,
+    ///   dominates a socket-coupled run, and the ring's cache-pressure
+    ///   feedback would desynchronize lag publishing across hosts.
+    /// * Each timestep commits through [`Transport::commit_timestep`]:
+    ///   the folded carry is durably checkpointed *before* the commit is
+    ///   acknowledged, then `emit(t)` — the app's canonical per-subgraph
+    ///   emission — ships to the coordinator, which concatenates hosts
+    ///   in host order (= global subgraph order).
+    /// * The final merge (eventually-dependent pattern) folds at the
+    ///   coordinator from per-item merge chunks ordered (timestep,
+    ///   superstep, global item) — the in-process order — and comes back
+    ///   on [`Transport::finish_run`]; `merge_incremental` emission is
+    ///   not available distributed (the final `merge` contract is).
+    /// * Follow mode polls [`Transport::refresh_watermark`] — every host
+    ///   offers its local visible count, the coordinator answers the
+    ///   cluster min, so all hosts extend (and exhaust their idle-poll
+    ///   budgets) in lockstep — and publishes consumer lag through the
+    ///   partition's filesystem beacon instead of the in-process gate.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_distributed(
+        &self,
+        app: &dyn Application,
+        opts: &RunOptions,
+        dist: DistRun,
+        emit: &dyn Fn(Timestep) -> String,
+    ) -> Result<RunStats> {
+        let t0 = Instant::now();
+        assert!(
+            self.transport.is_distributed(),
+            "run_distributed needs a distributed transport (set_transport)"
+        );
+        assert_eq!(self.stores.len(), 1, "a distributed worker owns exactly one partition");
+        if opts.timesteps.is_some() || opts.time_range.is_some() {
+            bail!("distributed runs cover the whole collection (no explicit timestep subsets)");
+        }
+        let mut dist = dist;
+        let mut carry = std::mem::take(&mut dist.resume_carry);
+        let proj = app.projection(self.stores[0].vertex_schema(), self.stores[0].edge_schema());
+        // Distributed merge bypasses this sink (chunks ship in commits);
+        // it only exists to satisfy run_timestep's signature.
+        let merge_msgs: MergeMap = Mutex::new(BTreeMap::new());
+        let mut stats = RunStats::default();
+        let pattern = app.pattern();
+
+        // Whatever happens below, a follow consumer that stops consuming
+        // must release any producer blocked on its lag beacon — the
+        // cross-process analog of the in-process FollowGateGuard.
+        struct LagGuard<'a>(&'a dyn Transport);
+        impl Drop for LagGuard<'_> {
+            fn drop(&mut self) {
+                self.0.close_lag();
+            }
+        }
+        let _lag_guard = opts.follow.then(|| LagGuard(&*self.transport));
+
+        let mut known = dist.n_timesteps;
+        let mut t = dist.resume_from;
+        let mut idle = 0usize;
+        loop {
+            if opts.follow {
+                self.transport.publish_lag(self.stores[0].tail_bytes_from(t));
+            }
+            if t == known {
+                if !opts.follow {
+                    break;
+                }
+                let local = self.refresh()?;
+                let visible = self.transport.refresh_watermark(local)?;
+                if visible > known {
+                    known = visible;
+                    idle = 0;
+                    continue;
+                }
+                idle += 1;
+                if opts.follow_idle_polls > 0 && idle >= opts.follow_idle_polls {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(opts.follow_poll_ms.max(1)));
+                continue;
+            }
+            let loaded = self.load_timestep(t, &proj, opts.workers)?;
+            self.metrics.add(keys::LOAD_NS, (loaded.load_wall_s * 1e9) as u64);
+            // Sequential apps seed inputs at the series start only (a
+            // rejoin at t > 0 must NOT re-seed); pools seed every
+            // timestep — exactly the in-process `with_inputs` choices.
+            let with_inputs = match pattern {
+                Pattern::Sequential => t == 0,
+                Pattern::Independent | Pattern::EventuallyDependent => true,
+            };
+            let n_ts_ctx = if opts.follow { usize::MAX } else { dist.n_timesteps };
+            let (ts_stats, next, merge_chunks) = self.run_timestep(
+                app,
+                t,
+                n_ts_ctx,
+                loaded,
+                0.0,
+                std::mem::take(&mut carry),
+                with_inputs,
+                opts.workers,
+                opts.max_supersteps,
+                opts.overlap_routing,
+                &merge_msgs,
+                Some(&dist),
+            )?;
+            if pattern != Pattern::Sequential && !next.is_empty() {
+                bail!(
+                    "internal error: {} next-timestep message(s) buffered \
+                     under the {pattern:?} pattern at timestep {t}",
+                    next.values().map(Vec::len).sum::<usize>()
+                );
+            }
+            carry = next;
+            self.transport.commit_timestep(CommitIn {
+                timestep: t,
+                output: emit(t),
+                merge: merge_chunks,
+                carry: &carry,
+            })?;
+            stats.per_timestep.push(ts_stats);
+            self.metrics.incr(keys::TIMESTEPS);
+            // The lockstep loop completes strictly in order on every
+            // host, so the emission watermark is simply "this one".
+            app.on_timestep_complete(t);
+            t += 1;
+        }
+
+        // End-of-run handshake: every host reports its schedule drained;
+        // the coordinator answers with the globally ordered merge
+        // payloads for the eventually-dependent final fold.
+        if let Some(merge) = self.transport.finish_run()? {
+            if pattern == Pattern::EventuallyDependent {
+                let tm = Instant::now();
+                app.merge(merge);
+                stats.merge_wall_s = tm.elapsed().as_secs_f64();
+            }
         }
         stats.total_wall_s = t0.elapsed().as_secs_f64();
         Ok(stats)
@@ -1238,8 +1556,10 @@ impl GopherEngine {
         Ok(LoadedTimestep { items, trace, load_wall_s: t0.elapsed().as_secs_f64() })
     }
 
-    /// Run one BSP timestep over pre-loaded instances. Returns its stats
-    /// and the next-timestep mailbox (sequential pattern).
+    /// Run one BSP timestep over pre-loaded instances. Returns its
+    /// stats, the next-timestep mailbox (sequential pattern), and — under
+    /// a distributed run — this host's merge chunks for the timestep
+    /// (always empty in-process, where merges flow into `merge_sink`).
     #[allow(clippy::too_many_arguments)]
     fn run_timestep(
         &self,
@@ -1254,10 +1574,14 @@ impl GopherEngine {
         max_supersteps: usize,
         overlap_routing: bool,
         merge_sink: &MergeMap,
-    ) -> Result<(TimestepStats, HashMap<SubgraphId, Vec<Payload>>)> {
+        dist: Option<&DistRun>,
+    ) -> Result<(TimestepStats, HashMap<SubgraphId, Vec<Payload>>, Vec<MergeChunk>)> {
         let t_start = Instant::now();
-        let net_clock = NetworkClock::default();
         let LoadedTimestep { items: loaded_items, trace, load_wall_s } = loaded;
+        // Chunk tags use global item indices; in-process the base is 0
+        // and the tag is the plain item index (see `stage_outbox`).
+        let item_base = dist.map_or(0, |d| d.item_base);
+        let remote_map = dist.map(|d| &d.remote);
 
         // --- Create programs over the pre-loaded instances (Fig. 3). ---
         struct Item {
@@ -1275,7 +1599,12 @@ impl GopherEngine {
         // both with one lookup.
         let mut items: Vec<Mutex<Item>> = Vec::with_capacity(loaded_items.len());
         let mut index_of: HashMap<SubgraphId, (usize, usize)> = HashMap::new();
+        let mut local_sgids: Vec<SubgraphId> = Vec::with_capacity(loaded_items.len());
         for (h, sg, sgi) in loaded_items {
+            // A distributed worker's single store loads as host 0; its
+            // items actually live on `my_host`, and the batch accounting
+            // must charge the true cluster pair.
+            let h = dist.map_or(h, |d| d.my_host);
             let program = app.create(&sg);
             let mut inbox = Vec::new();
             if with_inputs {
@@ -1285,6 +1614,7 @@ impl GopherEngine {
                 inbox.extend(c.iter().cloned());
             }
             index_of.insert(sg.id, (items.len(), h));
+            local_sgids.push(sg.id);
             items.push(Mutex::new(Item {
                 sgid: sg.id,
                 host: h,
@@ -1301,6 +1631,14 @@ impl GopherEngine {
         let mut carry_out: HashMap<SubgraphId, Vec<Payload>> = HashMap::new();
         let (mut ts_msgs_local, mut ts_msgs_remote, mut ts_msg_bytes_remote) = (0u64, 0u64, 0u64);
         let (mut ts_route_s, mut ts_route_overlap_s) = (0.0f64, 0.0f64);
+        let mut ts_net_ns = 0u64;
+        // Per-timestep routed-traffic accounting ((src,dst) host pairs).
+        let mut acc_pairs: HashMap<(usize, usize), (u64, u64)> = HashMap::new();
+        // Distributed-run buffers: tagged carry (local + inbound remote)
+        // folded at timestep end, and per-item merge chunks shipped with
+        // the commit. Both stay empty in-process.
+        let mut carry_chunks: Vec<CarryChunk> = Vec::new();
+        let mut merge_chunks: Vec<MergeChunk> = Vec::new();
 
         for superstep in 1..=max_supersteps {
             supersteps = superstep;
@@ -1362,8 +1700,10 @@ impl GopherEngine {
                             // reports zero overlap.
                             let concurrent = active_compute.load(Ordering::Relaxed) > 0;
                             let t0 = Instant::now();
-                            let aux =
-                                stage_outbox(i, src_host, halted, outbox, &index_of, &shards);
+                            let aux = stage_outbox(
+                                i, item_base, src_host, halted, outbox, &index_of, remote_map,
+                                &shards,
+                            );
                             *aux_slots[i].lock().unwrap() = Some(aux);
                             if concurrent {
                                 route_overlap_ns.fetch_add(
@@ -1389,7 +1729,9 @@ impl GopherEngine {
                 for (i, item) in items.iter_mut().enumerate() {
                     let it = item.get_mut().unwrap();
                     let outbox = std::mem::take(&mut it.outbox);
-                    let aux = stage_outbox(i, it.host, it.halted, outbox, &index_of, &shards);
+                    let aux = stage_outbox(
+                        i, item_base, it.host, it.halted, outbox, &index_of, remote_map, &shards,
+                    );
                     *aux_slots[i].get_mut().unwrap() = Some(aux);
                 }
             }
@@ -1400,7 +1742,11 @@ impl GopherEngine {
             let mut batches: HashMap<(usize, usize), (u64, u64)> = HashMap::new();
             let mut first_error: Option<String> = None;
             let mut first_unknown: Option<SubgraphId> = None;
-            for slot in aux_slots.iter_mut() {
+            // Remote-bound chunks for this superstep's exchange (empty
+            // in-process — every destination is in `index_of`).
+            let mut outbound: Vec<WireChunk> = Vec::new();
+            let mut outbound_carry: Vec<CarryChunk> = Vec::new();
+            for (i, slot) in aux_slots.iter_mut().enumerate() {
                 let a = slot.get_mut().unwrap().take().expect("item was never staged");
                 if first_error.is_none() {
                     first_error = a.error;
@@ -1420,20 +1766,101 @@ impl GopherEngine {
                     b.0 += n;
                     b.1 += bytes;
                 }
-                for (to, payload) in a.next {
-                    carry_out.entry(to).or_default().push(payload);
+                let src_global = item_base + i as u32;
+                for (dst, msgs) in a.remote {
+                    outbound.push(WireChunk { dst_item: dst, src_item: src_global, msgs });
                 }
-                merge_local.extend(a.merge);
+                match dist {
+                    None => {
+                        for (to, payload) in a.next {
+                            carry_out.entry(to).or_default().push(payload);
+                        }
+                        merge_local.extend(a.merge);
+                    }
+                    Some(d) => {
+                        // Carry resolves through the cluster directory:
+                        // tagged chunks, grouped per destination in send
+                        // order. A destination NO host owns parks in an
+                        // undeliverable mailbox in-process, so dropping
+                        // it here is the same observable.
+                        let mut local_g: HashMap<u32, Vec<Payload>> = HashMap::new();
+                        let mut remote_g: HashMap<u32, Vec<Payload>> = HashMap::new();
+                        for (to, payload) in a.next {
+                            if let Some(&(li, _)) = index_of.get(&to) {
+                                local_g.entry(item_base + li as u32).or_default().push(payload);
+                            } else if let Some(&(_, g)) = d.remote.get(&to) {
+                                remote_g.entry(g).or_default().push(payload);
+                            }
+                        }
+                        let ss = superstep as u32;
+                        for (dst, msgs) in local_g {
+                            carry_chunks.push(CarryChunk {
+                                dst_item: dst,
+                                superstep: ss,
+                                src_item: src_global,
+                                msgs,
+                            });
+                        }
+                        for (dst, msgs) in remote_g {
+                            outbound_carry.push(CarryChunk {
+                                dst_item: dst,
+                                superstep: ss,
+                                src_item: src_global,
+                                msgs,
+                            });
+                        }
+                        if !a.merge.is_empty() {
+                            merge_chunks.push(MergeChunk {
+                                superstep: ss,
+                                src_item: src_global,
+                                msgs: a.merge,
+                            });
+                        }
+                    }
+                }
             }
-            // Error precedence mirrors the sequential drain: pattern
-            // violations (checked across all outboxes) before unknown
-            // destinations, both by item order.
-            if let Some(msg) = first_error {
-                bail!("timestep {t}, superstep {superstep}: {msg}");
+            // Deterministic wire order (the per-destination grouping maps
+            // iterate arbitrarily): ascending destination within each
+            // source, sources already ascending from the fold.
+            outbound_carry.sort_by_key(|c| (c.src_item, c.dst_item));
+
+            // The transport folds the barrier decision: error precedence
+            // (pattern violations before unknown destinations, item/host
+            // order within a kind), the global halt vote, and the network
+            // charge — in-process via `LocalTransport` (bit-identical to
+            // the historical inline fold), cross-process at the
+            // coordinator. Errors bail before any charge.
+            let mut pairs: Vec<((usize, usize), (u64, u64))> = batches.into_iter().collect();
+            pairs.sort_unstable_by_key(|&(p, _)| p);
+            let out = self.transport.exchange(ExchangeIn {
+                timestep: t,
+                superstep,
+                all_halted,
+                any_inflight,
+                pattern_error: first_error
+                    .map(|msg| format!("timestep {t}, superstep {superstep}: {msg}")),
+                unknown_dest: first_unknown
+                    .map(|to| format!("message to unknown subgraph {to}")),
+                pairs: pairs.clone(),
+                outbound,
+                outbound_carry,
+            })?;
+            if let Some(err) = out.error {
+                bail!("{err}");
             }
-            if let Some(to) = first_unknown {
-                return Err(anyhow!("message to unknown subgraph {to}"));
+            for (pair, (n, bytes)) in pairs {
+                let e = acc_pairs.entry(pair).or_insert((0, 0));
+                e.0 += n;
+                e.1 += bytes;
             }
+            // Inbound remote chunks join the staging shards before the
+            // drain: their global source tags interleave them with local
+            // chunks in exactly the single-process delivery order.
+            for c in out.inbound {
+                let target = (c.dst_item - item_base) as usize;
+                shards[target].lock().unwrap().push((c.src_item, c.msgs));
+            }
+            carry_chunks.extend(out.inbound_carry);
             // Deliver: per destination, chunks sorted by source item
             // index (unique per chunk), one bulk extend per chunk.
             // Destinations are disjoint, so delivery fans out over the
@@ -1476,13 +1903,12 @@ impl GopherEngine {
             if !merge_local.is_empty() {
                 merge_sink.lock().unwrap().entry(t).or_default().extend(merge_local);
             }
-            let pairs: Vec<(u64, u64)> = batches.values().copied().collect();
-            let net_ns = net_clock.charge_superstep(&self.spec.net, &pairs);
-            self.metrics.add(keys::SIM_NET_NS, net_ns);
+            ts_net_ns += out.net_ns;
+            self.metrics.add(keys::SIM_NET_NS, out.net_ns);
             ts_route_s += barrier0.elapsed().as_secs_f64();
             ts_route_overlap_s += route_overlap_ns.load(Ordering::Relaxed) as f64 / 1e9;
 
-            if all_halted && !any_inflight {
+            if !out.proceed {
                 break;
             }
             if superstep == max_supersteps {
@@ -1500,6 +1926,24 @@ impl GopherEngine {
         self.metrics.add(keys::ROUTE_NS, (ts_route_s * 1e9) as u64);
         self.metrics.add(keys::ROUTE_OVERLAP_NS, (ts_route_overlap_s * 1e9) as u64);
 
+        // Distributed carry: one stable sort by (destination, superstep,
+        // source item) — unique triple — reproduces the in-process fold
+        // order (superstep ascending, item ascending, send order within)
+        // for every destination, local and inbound chunks interleaved.
+        let carry_final = if dist.is_some() {
+            carry_chunks.sort_unstable_by_key(|c| (c.dst_item, c.superstep, c.src_item));
+            let mut folded: HashMap<SubgraphId, Vec<Payload>> = HashMap::new();
+            for c in carry_chunks {
+                let sgid = local_sgids[(c.dst_item - item_base) as usize];
+                folded.entry(sgid).or_default().extend(c.msgs);
+            }
+            folded
+        } else {
+            carry_out
+        };
+
+        let mut routed_pairs: Vec<((usize, usize), (u64, u64))> = acc_pairs.into_iter().collect();
+        routed_pairs.sort_unstable_by_key(|&(p, _)| p);
         let stats = TimestepStats {
             timestep: t,
             supersteps,
@@ -1515,10 +1959,12 @@ impl GopherEngine {
             msgs_local: ts_msgs_local,
             msgs_remote: ts_msgs_remote,
             msg_bytes_remote: ts_msg_bytes_remote,
-            sim_net_ns: net_clock.total_ns(),
+            routed_pairs,
+            edge_cut_pct: dist.map_or(self.edge_cut_pct, |d| d.edge_cut_pct),
+            sim_net_ns: ts_net_ns,
             sim_disk_ns: trace.sim_disk_ns,
         };
-        Ok((stats, carry_out))
+        Ok((stats, carry_final, merge_chunks))
     }
 }
 

@@ -13,7 +13,7 @@ pub mod engine;
 pub mod messages;
 pub mod vertex_centric;
 
-pub use engine::{GopherEngine, RunOptions, RunStats, TimestepStats};
+pub use engine::{DistRun, GopherEngine, RunOptions, RunStats, TimestepStats};
 pub use messages::{MsgReader, MsgWriter};
 
 use crate::gofs::{Projection, SubgraphInstance};

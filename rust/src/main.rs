@@ -18,6 +18,8 @@
 
 use anyhow::{bail, Context, Result};
 use goffish::apps::{NHopApp, PageRankApp, SsspApp, VehicleTrackApp, WccApp};
+use goffish::cluster::coordinator::{run_coordinator, CoordinatorConfig};
+use goffish::cluster::worker::{run_host, HostConfig};
 use goffish::config::Args;
 use goffish::datagen::{
     CollectionSource, RoadNetGenerator, RoadNetParams, TraceRouteGenerator, TraceRouteParams,
@@ -41,6 +43,8 @@ fn main() {
         Some("ingest") => cmd_ingest(&args),
         Some("compact") => cmd_compact(&args),
         Some("run") => cmd_run(&args),
+        Some("coordinator") => cmd_coordinator(&args),
+        Some("host") => cmd_host(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("help") | None => {
             print!("{USAGE}");
@@ -76,6 +80,13 @@ USAGE:
                    --nhops 6 --backend scalar|pjrt --artifacts artifacts
                    --from <ts> --to <ts> --prefetch-depth 2
                    --poll-ms 25 --idle-polls 40 --real-disk --follow]
+  goffish coordinator --hosts N --app sssp|pagerank
+                  [--listen 127.0.0.1:0 --port-file FILE --source <ext-id>
+                   --max-supersteps 10000 --max-epochs 64 --out FILE
+                   --poll-ms 25 --idle-polls 40 --follow]
+  goffish host    --store DIR --part P --connect HOST:PORT
+                  [--cache 14 --cache-bytes 0 --workers 0
+                   --connect-timeout 30 --step-delay-ms 0 --real-disk]
   goffish inspect --store DIR
 
   `ingest --group-commit k` fsyncs the WALs once per k appends (crash may
@@ -92,6 +103,14 @@ USAGE:
   amortization; `run --follow` keeps the run live over timesteps as they
   are published — the sequential BSP loop and the Independent /
   EventuallyDependent temporal pools alike.
+
+  `coordinator` + one `host` per partition run the same analytics as
+  `run --hosts N`, but as real processes over TCP — same outputs, byte
+  for byte. The coordinator owns the BSP barrier and prints (or writes,
+  with --out) the canonical per-timestep output; each host owns exactly
+  one partition directory of the collection. A killed host can be
+  restarted with the same flags and rejoins from the durable store at
+  the last committed timestep.
 
   See docs/CLI.md for every flag, docs/ARCHITECTURE.md for the system
   contracts, and docs/BENCHMARKS.md for the perf runbook.
@@ -399,6 +418,63 @@ fn cmd_run(args: &Args) -> Result<()> {
         other => bail!("unknown app {other}"),
     }
     Ok(())
+}
+
+/// BSP barrier owner for a real multi-process run (`cluster::coordinator`):
+/// binds, waits for `--hosts` workers, drives commits, and emits the
+/// canonical output — identical to the in-process run's, byte for byte.
+fn cmd_coordinator(args: &Args) -> Result<()> {
+    let mut app_params = Vec::new();
+    if let Some(src) = args.get("source") {
+        app_params.push(("source".to_string(), src.to_string()));
+    }
+    let defaults = CoordinatorConfig::default();
+    let cfg = CoordinatorConfig {
+        n_hosts: args.usize("hosts", defaults.n_hosts),
+        listen: args.str("listen", &defaults.listen),
+        port_file: args.get("port-file").map(PathBuf::from),
+        app_name: args.str("app", "sssp"),
+        app_params,
+        follow: args.switch("follow"),
+        follow_poll_ms: args.u64("poll-ms", defaults.follow_poll_ms),
+        follow_idle_polls: args.u64("idle-polls", defaults.follow_idle_polls),
+        max_supersteps: args.u64("max-supersteps", defaults.max_supersteps),
+        max_epochs: args.u64("max-epochs", defaults.max_epochs),
+    };
+    let output = run_coordinator(&cfg)?;
+    match args.get("out") {
+        Some(path) => std::fs::write(path, &output)
+            .with_context(|| format!("writing run output to {path}"))?,
+        None => print!("{output}"),
+    }
+    Ok(())
+}
+
+/// One distributed worker process (`cluster::worker`): owns exactly one
+/// partition directory and runs the engine behind the TCP transport.
+/// Restarting after a crash with the same flags rejoins the run.
+fn cmd_host(args: &Args) -> Result<()> {
+    let metrics = Arc::new(Metrics::new());
+    let disk = if args.switch("real-disk") { DiskModel::instant() } else { DiskModel::default() };
+    let cfg = HostConfig {
+        root: PathBuf::from(args.require("store")?),
+        part: args.require("part")?.parse().context("--part must be a partition index")?,
+        coordinator: args.require("connect")?,
+        store_opts: StoreOptions {
+            cache_slots: args.usize("cache", 14),
+            cache_bytes: args.u64("cache-bytes", 0),
+            // Cross-process backpressure goes through the lag beacon the
+            // transport publishes (producer holds the high-water mark in
+            // its BeaconGate), so the in-process FlowGate knob stays off.
+            tail_high_water_bytes: 0,
+            disk,
+            metrics,
+        },
+        workers: args.usize("workers", 0),
+        connect_timeout_s: args.u64("connect-timeout", 30),
+        step_delay_ms: args.u64("step-delay-ms", 0),
+    };
+    run_host(&cfg)
 }
 
 fn default_source(eng: &GopherEngine) -> u64 {

@@ -173,4 +173,44 @@ mod tests {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["only-one".into()]);
     }
+
+    /// Every string-literal key `perf_hotpath` emits into
+    /// `BENCH_hotpath.json`, extracted by scanning its source for
+    /// `json.push(("<key>"` sites. (`format!`-built keys are outside
+    /// the literal scan; their wildcard doc rows cover them.)
+    fn hotpath_literal_keys() -> Vec<String> {
+        let src = include_str!("../../benches/perf_hotpath.rs");
+        let marker = "json.push((\"";
+        let mut keys = Vec::new();
+        let mut rest = src;
+        while let Some(hit) = rest.find(marker) {
+            let tail = &rest[hit + marker.len()..];
+            if let Some(end) = tail.find('"') {
+                let key = &tail[..end];
+                if !key.is_empty() && !keys.iter().any(|k| k == key) {
+                    keys.push(key.to_string());
+                }
+            }
+            rest = &rest[hit + marker.len()..];
+        }
+        keys
+    }
+
+    /// docs/BENCHMARKS.md's key table must cover every key the hot-path
+    /// bench actually emits — a probe added to `perf_hotpath.rs` without
+    /// a documented row fails the build, so the runbook cannot silently
+    /// drift from the JSON CI tracks (the ROADMAP docs-drift item).
+    #[test]
+    fn bench_doc_covers_every_hotpath_key() {
+        let doc = include_str!("../../../docs/BENCHMARKS.md");
+        let keys = hotpath_literal_keys();
+        assert!(keys.len() >= 25, "key scan looks broken: found only {}", keys.len());
+        let missing: Vec<&String> =
+            keys.iter().filter(|k| !doc.contains(&format!("`{k}`"))).collect();
+        assert!(
+            missing.is_empty(),
+            "keys emitted by perf_hotpath.rs but undocumented in docs/BENCHMARKS.md: \
+             {missing:?}"
+        );
+    }
 }

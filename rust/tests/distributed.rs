@@ -1,0 +1,238 @@
+//! End-to-end bit-identity of real multi-process distribution
+//! (`cluster::coordinator` + `cluster::worker` over TCP) against the
+//! in-process engine: same collection, same application, byte-equal
+//! canonical output — batch and follow mode — plus crash/rejoin.
+//!
+//! The in-process expectation is built by running the unchanged engine
+//! over all partitions at once and replaying the *same* per-host
+//! emission (`DistApp::emit_timestep`) in host order, which is exactly
+//! how the coordinator assembles the cluster-wide output.
+
+use goffish::cluster::coordinator::{run_coordinator, CoordinatorConfig};
+use goffish::cluster::worker::{build_app, run_host, HostConfig};
+use goffish::cluster::ClusterSpec;
+use goffish::datagen::{CollectionSource, TraceRouteGenerator, TraceRouteParams};
+use goffish::gofs::{deploy, open_collection, DeployConfig, DiskModel, StoreOptions};
+use goffish::gopher::{GopherEngine, RunOptions};
+use goffish::graph::SubgraphId;
+use goffish::metrics::Metrics;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const N_HOSTS: usize = 2;
+
+fn deployed(tag: &str) -> (TraceRouteGenerator, PathBuf) {
+    let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+    let dir = std::env::temp_dir().join(format!("goffish-dist-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    deploy(&gen, &DeployConfig::new(N_HOSTS, 4, 3), &dir).unwrap();
+    (gen, dir)
+}
+
+fn store_opts() -> StoreOptions {
+    StoreOptions { cache_slots: 16, disk: DiskModel::instant(), ..Default::default() }
+}
+
+fn sssp_params(gen: &TraceRouteGenerator) -> Vec<(String, String)> {
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+    vec![("source".to_string(), source.to_string())]
+}
+
+/// The ground truth: one in-process run over every partition, emitted
+/// through the same `DistApp` the workers use — per host in store
+/// order, hosts concatenated in host order, timestep-major.
+fn expected_output(dir: &Path, app_name: &str, params: &[(String, String)]) -> String {
+    let metrics = Arc::new(Metrics::new());
+    let o = StoreOptions { metrics: metrics.clone(), ..store_opts() };
+    let stores = open_collection(dir, &o).unwrap();
+    assert_eq!(stores.len(), N_HOSTS);
+    let per_host_sgids: Vec<Vec<SubgraphId>> = stores
+        .iter()
+        .map(|s| s.shared().subgraphs.iter().map(|sg| sg.id).collect())
+        .collect();
+    let total_vertices: usize = stores
+        .iter()
+        .map(|s| s.shared().subgraphs.iter().map(|g| g.n_vertices()).sum::<usize>())
+        .sum();
+    let n_t = stores[0].n_instances();
+    let app = build_app(app_name, params, total_vertices, stores[0].as_ref()).unwrap();
+    let eng = GopherEngine::new(stores, ClusterSpec::new(N_HOSTS), metrics);
+    eng.run(app.as_app(), &RunOptions::default()).unwrap();
+    let mut out = String::new();
+    for t in 0..n_t {
+        for sgids in &per_host_sgids {
+            out.push_str(&app.emit_timestep(t, sgids));
+        }
+    }
+    out
+}
+
+fn wait_port(pf: &Path) -> u16 {
+    let t0 = Instant::now();
+    loop {
+        if let Ok(s) = std::fs::read_to_string(pf) {
+            if let Ok(p) = s.trim().parse() {
+                return p;
+            }
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "coordinator never wrote its port file"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Coordinator + one worker thread per partition, all over localhost
+/// TCP in this process. Returns the coordinator's assembled output.
+fn run_cluster(
+    dir: &Path,
+    app_name: &str,
+    params: Vec<(String, String)>,
+    follow: bool,
+    tag: &str,
+) -> String {
+    let port_file = dir.join(format!("port-{tag}"));
+    let cfg = CoordinatorConfig {
+        n_hosts: N_HOSTS,
+        listen: "127.0.0.1:0".to_string(),
+        port_file: Some(port_file.clone()),
+        app_name: app_name.to_string(),
+        app_params: params,
+        follow,
+        // A sealed collection never grows: drain the poll budget fast.
+        follow_poll_ms: 1,
+        follow_idle_polls: 3,
+        ..Default::default()
+    };
+    let coord = std::thread::spawn(move || run_coordinator(&cfg));
+    let addr = format!("127.0.0.1:{}", wait_port(&port_file));
+    let hosts: Vec<_> = (0..N_HOSTS)
+        .map(|part| {
+            let cfg = HostConfig {
+                root: dir.to_path_buf(),
+                part,
+                coordinator: addr.clone(),
+                store_opts: store_opts(),
+                ..Default::default()
+            };
+            std::thread::spawn(move || run_host(&cfg))
+        })
+        .collect();
+    for (part, h) in hosts.into_iter().enumerate() {
+        h.join().unwrap().unwrap_or_else(|e| panic!("host {part} failed: {e:#}"));
+    }
+    coord.join().unwrap().expect("coordinator failed")
+}
+
+#[test]
+fn sssp_two_host_run_is_bit_identical_to_in_process() {
+    let (gen, dir) = deployed("sssp");
+    let params = sssp_params(&gen);
+    let expected = expected_output(&dir, "sssp", &params);
+    // One line per subgraph per timestep — the emission is total, so a
+    // silently skipped partition or timestep cannot pass.
+    assert!(!expected.is_empty());
+    let actual = run_cluster(&dir, "sssp", params, false, "sssp");
+    assert_eq!(actual, expected, "distributed SSSP output diverged from in-process");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn pagerank_two_host_run_is_bit_identical_to_in_process() {
+    let (_gen, dir) = deployed("pr");
+    let expected = expected_output(&dir, "pagerank", &[]);
+    assert!(!expected.is_empty());
+    let actual = run_cluster(&dir, "pagerank", Vec::new(), false, "pr");
+    assert_eq!(actual, expected, "distributed PageRank output diverged from in-process");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Follow mode over the temporal pool pattern (PageRank is
+/// `Independent`): the refresh watermark is the minimum visible count
+/// over the workers, and on a sealed collection the run must drain
+/// every published timestep and then end — with the same bytes as a
+/// batch run.
+#[test]
+fn pagerank_follow_run_drains_the_collection_bit_identically() {
+    let (_gen, dir) = deployed("follow");
+    let expected = expected_output(&dir, "pagerank", &[]);
+    let actual = run_cluster(&dir, "pagerank", Vec::new(), true, "follow");
+    assert_eq!(actual, expected, "distributed follow run diverged from in-process");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+fn wait_exit(child: &mut std::process::Child, budget: Duration) -> std::process::ExitStatus {
+    let t0 = Instant::now();
+    loop {
+        if let Some(status) = child.try_wait().unwrap() {
+            return status;
+        }
+        if t0.elapsed() > budget {
+            let _ = child.kill();
+            panic!("process did not exit within {budget:?}");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// The crash window: SIGKILL one host process mid-run, restart it with
+/// the same flags, and require the run to complete with output
+/// byte-identical to the in-process run — the rejoin path (durable
+/// store + carry checkpoint at the last committed barrier) must be
+/// invisible in the result.
+#[test]
+fn killed_host_rejoins_and_reproduces_the_batch_output() {
+    let bin = env!("CARGO_BIN_EXE_goffish");
+    let (gen, dir) = deployed("kill");
+    let params = sssp_params(&gen);
+    let expected = expected_output(&dir, "sssp", &params);
+    let port_file = dir.join("port");
+    let out_file = dir.join("out.txt");
+
+    let mut coord = std::process::Command::new(bin)
+        .args(["coordinator", "--hosts", "2", "--app", "sssp"])
+        .args(["--source", &params[0].1, "--listen", "127.0.0.1:0"])
+        .arg("--port-file")
+        .arg(&port_file)
+        .arg("--out")
+        .arg(&out_file)
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .unwrap();
+    let addr = format!("127.0.0.1:{}", wait_port(&port_file));
+    let spawn_host = |part: usize| {
+        std::process::Command::new(bin)
+            .arg("host")
+            .arg("--store")
+            .arg(&dir)
+            .args(["--part", &part.to_string(), "--connect", &addr])
+            // Slow the barrier down so the kill lands mid-run: ≥ 2
+            // supersteps per timestep × 12 timesteps × 25 ms ≫ the kill
+            // delay below.
+            .args(["--step-delay-ms", "25"])
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .unwrap()
+    };
+    let mut h0 = spawn_host(0);
+    let mut h1 = spawn_host(1);
+
+    std::thread::sleep(Duration::from_millis(350));
+    h1.kill().unwrap(); // SIGKILL: no cleanup, the hard crash
+    let _ = h1.wait();
+    let mut h1b = spawn_host(1);
+
+    let status = wait_exit(&mut coord, Duration::from_secs(120));
+    // Clean up workers before asserting so a failure can't leak them.
+    let h0_status = wait_exit(&mut h0, Duration::from_secs(30));
+    let h1b_status = wait_exit(&mut h1b, Duration::from_secs(30));
+    assert!(status.success(), "coordinator exited with {status}");
+    assert!(h0_status.success(), "surviving host exited with {h0_status}");
+    assert!(h1b_status.success(), "rejoined host exited with {h1b_status}");
+
+    let actual = std::fs::read_to_string(&out_file).unwrap();
+    assert_eq!(actual, expected, "kill + rejoin changed the run output");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,78 @@
+#!/usr/bin/env bash
+# 2-host loopback smoke: deploy a small traceroute collection, run SSSP
+# in-process (`goffish run`), then run the same analytics as one
+# `goffish coordinator` + two `goffish host` processes over 127.0.0.1
+# and require the distributed result to match the in-process one.
+#
+# Full bit-identity of the canonical emission is asserted by
+# `rust/tests/distributed.rs`; this script smokes the *real binaries*
+# end to end: process startup, TCP framing, the barrier protocol, and
+# result agreement on the reachable-vertex count at the final timestep.
+#
+# Usage: tools/smoke_distributed.sh  (after `cd rust && cargo build --release`)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=rust/target/release/goffish
+if [ ! -x "$BIN" ]; then
+    echo "error: $BIN not built (cd rust && cargo build --release)" >&2
+    exit 1
+fi
+
+WORK=$(mktemp -d)
+cleanup() {
+    kill "$(jobs -p)" 2>/dev/null || true
+    rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+STORE=$WORK/tr
+"$BIN" deploy --dataset tr --out "$STORE" --parts 2 --bins 4 --pack 3 \
+    --vertices 2000 --vantage 3 --instances 8 --traces 300
+
+# In-process reference run; parse its default source and summary line
+# ("sssp from <src>: <reached>/<total> reachable by t=<last>").
+RUN_OUT=$("$BIN" run --store "$STORE" --app sssp)
+echo "$RUN_OUT"
+SOURCE=$(sed -n 's/.*sssp from \([0-9]*\):.*/\1/p' <<<"$RUN_OUT")
+EXPECTED=$(sed -n 's|.*sssp from [0-9]*: \([0-9]*\)/.*|\1|p' <<<"$RUN_OUT")
+LAST_T=$(sed -n 's/.*reachable by t=\([0-9]*\).*/\1/p' <<<"$RUN_OUT")
+if [ -z "$SOURCE" ] || [ -z "$EXPECTED" ] || [ -z "$LAST_T" ]; then
+    echo "error: could not parse the in-process run summary" >&2
+    exit 1
+fi
+
+# The distributed run: coordinator on an ephemeral port + one host per
+# partition.
+"$BIN" coordinator --hosts 2 --app sssp --source "$SOURCE" \
+    --listen 127.0.0.1:0 --port-file "$WORK/port" --out "$WORK/dist.out" &
+COORD=$!
+for _ in $(seq 1 200); do
+    [ -f "$WORK/port" ] && break
+    sleep 0.1
+done
+PORT=$(cat "$WORK/port")
+"$BIN" host --store "$STORE" --part 0 --connect "127.0.0.1:$PORT" &
+H0=$!
+"$BIN" host --store "$STORE" --part 1 --connect "127.0.0.1:$PORT" &
+H1=$!
+wait "$COORD" "$H0" "$H1"
+
+# Canonical emission: one "t=<t> sg<p>:<i> reached=<r> dist_sum=<s>"
+# line per subgraph per timestep. Check coverage and the final-timestep
+# reachable total against the in-process run.
+TIMESTEPS=$(cut -d' ' -f1 "$WORK/dist.out" | sort -u | wc -l)
+if [ "$TIMESTEPS" -ne 8 ]; then
+    echo "error: distributed output covers $TIMESTEPS timesteps, expected 8" >&2
+    exit 1
+fi
+GOT=$(awk -v want="t=$LAST_T" \
+    '$1 == want { split($3, a, "="); s += a[2] } END { print s + 0 }' \
+    "$WORK/dist.out")
+if [ "$GOT" != "$EXPECTED" ]; then
+    echo "error: distributed SSSP reached $GOT vertices at t=$LAST_T," \
+         "in-process reached $EXPECTED" >&2
+    exit 1
+fi
+echo "smoke ok: 2-host distributed SSSP matches in-process" \
+     "($GOT/$EXPECTED reachable at t=$LAST_T)"
