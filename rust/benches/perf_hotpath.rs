@@ -804,6 +804,100 @@ fn main() {
         let _ = std::fs::remove_dir_all(&root);
     }
 
+    // --- Cluster runtime: heartbeat overhead + crash-rejoin recovery. ---
+    // Three identical 2-host TCP runs over a tiny collection: heartbeats
+    // off, heartbeats on (the fault-free liveness tax), and heartbeats
+    // on with an injected connection drop mid-run (teardown + rejoin +
+    // checkpoint resume). All three must produce identical output; the
+    // deltas are the costs.
+    {
+        use goffish::cluster::coordinator::{run_coordinator, CoordinatorConfig};
+        use goffish::cluster::worker::{run_host, HostConfig};
+        use goffish::gofs::{DiskModel, StoreOptions};
+
+        let cgen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+        let root =
+            std::env::temp_dir().join(format!("goffish-bench-cluster-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        deploy(&cgen, &DeployConfig::new(2, 4, 3), &root).expect("deploy cluster probe");
+        let csource = cgen.template().ext_ids[cgen.vantages()[0] as usize];
+
+        let run_cluster = |tag: &str, heartbeat_ms: u64, plan: Option<PathBuf>| -> (f64, String) {
+            let port_file = root.join(format!("port-{tag}"));
+            let _ = std::fs::remove_file(&port_file);
+            let cfg = CoordinatorConfig {
+                n_hosts: 2,
+                listen: "127.0.0.1:0".into(),
+                port_file: Some(port_file.clone()),
+                app_name: "sssp".into(),
+                app_params: vec![("source".into(), csource.to_string())],
+                heartbeat_ms,
+                ..Default::default()
+            };
+            let t0 = std::time::Instant::now();
+            let coord = std::thread::spawn(move || run_coordinator(&cfg));
+            let port: u16 = loop {
+                if let Ok(s) = std::fs::read_to_string(&port_file) {
+                    if let Ok(p) = s.trim().parse() {
+                        break p;
+                    }
+                }
+                assert!(
+                    t0.elapsed() < std::time::Duration::from_secs(30),
+                    "cluster probe coordinator never published its port"
+                );
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            };
+            let hosts: Vec<_> = (0..2usize)
+                .map(|part| {
+                    let cfg = HostConfig {
+                        root: root.clone(),
+                        part,
+                        coordinator: format!("127.0.0.1:{port}"),
+                        store_opts: StoreOptions {
+                            cache_slots: 16,
+                            disk: DiskModel::instant(),
+                            ..Default::default()
+                        },
+                        heartbeat_ms,
+                        retry_base_ms: 10,
+                        fault_plan: if part == 1 { plan.clone() } else { None },
+                        ..Default::default()
+                    };
+                    std::thread::spawn(move || run_host(&cfg))
+                })
+                .collect();
+            for h in hosts {
+                h.join().unwrap().expect("cluster probe host");
+            }
+            let out = coord.join().unwrap().expect("cluster probe coordinator");
+            (t0.elapsed().as_secs_f64(), out)
+        };
+
+        let (wall_off, out_off) = run_cluster("hb-off", 0, None);
+        let (wall_on, out_on) = run_cluster("hb-on", 25, None);
+        assert_eq!(out_on, out_off, "heartbeats changed the run output");
+        let plan = root.join("faults.plan");
+        std::fs::write(&plan, "on host1.send.Superstep nth 4 drop\n").unwrap();
+        let (wall_chaos, out_chaos) = run_cluster("rejoin", 25, Some(plan));
+        assert_eq!(out_chaos, out_off, "crash-rejoin changed the run output");
+        let heartbeat_overhead_ms = (wall_on - wall_off) * 1e3;
+        let rejoin_recovery_ms = (wall_chaos - wall_on) * 1e3;
+        report.row(&[
+            "heartbeat overhead (2-host run, 25ms beat)".into(),
+            format!("{heartbeat_overhead_ms:.1}"),
+            "ms added to fault-free wall".into(),
+        ]);
+        report.row(&[
+            "rejoin recovery (drop -> teardown -> resume)".into(),
+            format!("{rejoin_recovery_ms:.1}"),
+            "ms added to run wall".into(),
+        ]);
+        json.push(("heartbeat_overhead_ms".into(), heartbeat_overhead_ms));
+        json.push(("rejoin_recovery_ms".into(), rejoin_recovery_ms));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
     // --- L1/L2: kernel dispatch + throughput vs scalar. ---
     match PjrtEngine::load(
         &std::path::PathBuf::from(

@@ -35,14 +35,21 @@
 //! timestep plan (`visible`) at the first epoch so a rejoined run
 //! reproduces the same output even if stores grew meanwhile.
 
+use crate::cluster::fault::{self, Action, FaultInjector, FaultPlan};
 use crate::cluster::net::NetworkClock;
-use crate::cluster::proto::{read_msg, write_msg, CarryChunk, MergeChunk, Msg, WireChunk};
+use crate::cluster::proto::{
+    write_msg, write_msg_corrupted, CarryChunk, FrameError, FrameReader, MergeChunk, Msg,
+    WireChunk,
+};
+use crate::cluster::transport::READ_TICK;
 use crate::cluster::ClusterSpec;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Configuration for one coordinator run.
 #[derive(Clone)]
@@ -61,6 +68,17 @@ pub struct CoordinatorConfig {
     pub max_supersteps: u64,
     /// Epoch budget: give up after this many teardowns (0 = default).
     pub max_epochs: u64,
+    /// Interval between liveness heartbeats to every worker (0 = off).
+    pub heartbeat_ms: u64,
+    /// Abort the epoch when a host with an unfilled lockstep slot has
+    /// been silent — no message, no heartbeat — for this long (0 = wait
+    /// forever, the pre-liveness behavior).
+    pub round_deadline_ms: u64,
+    /// Give up on an epoch's join phase after this long without all
+    /// partitions present (0 = wait forever).
+    pub join_deadline_ms: u64,
+    /// Deterministic fault plan (`--fault-plan`); None = no injection.
+    pub fault_plan: Option<PathBuf>,
 }
 
 impl Default for CoordinatorConfig {
@@ -76,9 +94,17 @@ impl Default for CoordinatorConfig {
             follow_idle_polls: 40,
             max_supersteps: 10_000,
             max_epochs: 64,
+            heartbeat_ms: 500,
+            round_deadline_ms: 30_000,
+            join_deadline_ms: 60_000,
+            fault_plan: None,
         }
     }
 }
+
+/// A worker connection's write half, shared between the lockstep thread
+/// and the heartbeat ticker (frame writes are atomic under the mutex).
+type Conn = Arc<Mutex<TcpStream>>;
 
 struct HelloInfo {
     n_instances: u64,
@@ -128,6 +154,10 @@ pub fn run_coordinator(cfg: &CoordinatorConfig) -> Result<String> {
     }
     eprintln!("coordinator: listening on {addr} for {} hosts", cfg.n_hosts);
 
+    let injector = match &cfg.fault_plan {
+        Some(path) => Some(Arc::new(FaultInjector::new(FaultPlan::load(path)?))),
+        None => None,
+    };
     let mut state = RunState {
         committed: 0,
         outputs: HashMap::new(),
@@ -139,7 +169,7 @@ pub fn run_coordinator(cfg: &CoordinatorConfig) -> Result<String> {
     };
     let max_epochs = if cfg.max_epochs == 0 { 64 } else { cfg.max_epochs };
     for epoch in 0..max_epochs {
-        match run_epoch(cfg, &listener, epoch, &mut state)? {
+        match run_epoch(cfg, &listener, epoch, &mut state, injector.as_ref())? {
             EpochEnd::Done(out) => return Ok(out),
             EpochEnd::Down(reason) => {
                 eprintln!("coordinator: epoch {epoch} down ({reason}); waiting for rejoin");
@@ -149,18 +179,92 @@ pub fn run_coordinator(cfg: &CoordinatorConfig) -> Result<String> {
     bail!("coordinator: giving up after {max_epochs} epochs");
 }
 
+/// Read one worker Hello from a freshly accepted stream, skipping
+/// heartbeats and rereading once after a CRC mismatch, within `budget`.
+fn read_hello(s: &mut TcpStream, budget: Duration) -> std::result::Result<Msg, String> {
+    let mut fr = FrameReader::new(s);
+    let t0 = Instant::now();
+    let mut crc_retried = false;
+    loop {
+        match fr.read_frame() {
+            Ok(Msg::Heartbeat { .. }) => {}
+            Ok(m) => return Ok(m),
+            Err(FrameError::Timeout) => {
+                if t0.elapsed() >= budget {
+                    return Err("no Hello within the handshake budget".to_string());
+                }
+            }
+            Err(FrameError::CrcMismatch) if !crc_retried => crc_retried = true,
+            Err(e) => return Err(e.to_string()),
+        }
+    }
+}
+
 /// Join phase: accept connections until every partition has a live
 /// worker with a valid [`Msg::Hello`]. A later Hello for the same
-/// partition replaces the earlier connection (newest wins).
+/// partition replaces the earlier connection (newest wins). While
+/// waiting, already-joined workers receive heartbeats (their Start-wait
+/// silence clocks keep resetting); if the missing partitions stay away
+/// past the join deadline, the join fails instead of hanging forever.
 fn join_hosts(
     listener: &TcpListener,
     n: usize,
+    cfg: &CoordinatorConfig,
+    injector: Option<&FaultInjector>,
 ) -> Result<(Vec<TcpStream>, Vec<HelloInfo>)> {
     let mut conns: Vec<Option<(TcpStream, HelloInfo)>> = (0..n).map(|_| None).collect();
-    while conns.iter().any(|c| c.is_none()) {
-        let (mut s, peer) = listener.accept().context("accepting worker connection")?;
+    let heartbeat = Duration::from_millis(cfg.heartbeat_ms);
+    let join_deadline = Duration::from_millis(cfg.join_deadline_ms);
+    let t0 = Instant::now();
+    let mut last_beat = Instant::now();
+    listener.set_nonblocking(true).context("making the join listener pollable")?;
+    let result = loop {
+        if !conns.iter().any(|c| c.is_none()) {
+            break Ok(());
+        }
+        if !join_deadline.is_zero() && t0.elapsed() >= join_deadline {
+            let missing: Vec<usize> =
+                conns.iter().enumerate().filter(|(_, c)| c.is_none()).map(|(i, _)| i).collect();
+            break Err(anyhow::anyhow!(
+                "join deadline ({join_deadline:?}) passed with partitions {missing:?} absent"
+            ));
+        }
+        if !heartbeat.is_zero() && last_beat.elapsed() >= heartbeat {
+            last_beat = Instant::now();
+            for (h, c) in conns.iter_mut().enumerate() {
+                if let Some((s, _)) = c {
+                    let hb = Msg::Heartbeat { seq: 0 };
+                    let corrupt = injector
+                        .map(|i| i.check(&format!("coord.send.Heartbeat.h{h}")))
+                        .unwrap_or(Action::None)
+                        == Action::Corrupt;
+                    let _ = if corrupt {
+                        write_msg_corrupted(s, &hb)
+                    } else {
+                        write_msg(s, &hb)
+                    };
+                }
+            }
+        }
+        let (mut s, peer) = match listener.accept() {
+            Ok(x) => x,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+                continue;
+            }
+            Err(e) => break Err(e).context("accepting worker connection"),
+        };
         s.set_nodelay(true).ok();
-        match read_msg(&mut s) {
+        // Every accepted stream gets ticked reads and bounded writes
+        // before the first byte is exchanged. (Blocking mode is restored
+        // explicitly — accepted sockets inherit the listener's
+        // non-blocking flag on some platforms.)
+        s.set_nonblocking(false).ok();
+        s.set_read_timeout(Some(READ_TICK)).ok();
+        if cfg.round_deadline_ms > 0 {
+            s.set_write_timeout(Some(Duration::from_millis(cfg.round_deadline_ms))).ok();
+        }
+        match read_hello(&mut s, Duration::from_secs(5)) {
             Ok(Msg::Hello { part, n_instances, n_vertices, sgids }) => {
                 let part = part as usize;
                 if part >= n {
@@ -180,10 +284,12 @@ fn join_hosts(
                 eprintln!("coordinator: {peer} sent {} before Hello; dropping", m.label());
             }
             Err(e) => {
-                eprintln!("coordinator: dropping {peer}: {e:#}");
+                eprintln!("coordinator: dropping {peer}: {e}");
             }
         }
-    }
+    };
+    listener.set_nonblocking(false).ok();
+    result?;
     let mut streams = Vec::with_capacity(n);
     let mut hellos = Vec::with_capacity(n);
     for c in conns {
@@ -194,17 +300,86 @@ fn join_hosts(
     Ok((streams, hellos))
 }
 
-fn send_all(conns: &mut [TcpStream], msg: &Msg) -> std::result::Result<(), String> {
-    for (h, c) in conns.iter_mut().enumerate() {
-        write_msg(c, msg).map_err(|e| format!("host {h}: {e:#}"))?;
+/// Send one message to one host, applying the fault plan at
+/// `coord.send.<Label>.h<H>`.
+fn send_to(
+    c: &Conn,
+    h: usize,
+    injector: Option<&FaultInjector>,
+    msg: &Msg,
+) -> std::result::Result<(), String> {
+    let mut s = c.lock().unwrap();
+    if let Some(inj) = injector {
+        let action = inj.check(&format!("coord.send.{}.h{h}", msg.label()));
+        if action == Action::Corrupt {
+            return write_msg_corrupted(&mut *s, msg).map_err(|e| format!("host {h}: {e:#}"));
+        }
+        if fault::perform(&action) {
+            let _ = s.shutdown(Shutdown::Both);
+            return Err(format!("host {h}: fault injection severed the connection"));
+        }
+    }
+    write_msg(&mut *s, msg).map_err(|e| format!("host {h}: {e:#}"))
+}
+
+fn send_all(
+    conns: &[Conn],
+    injector: Option<&FaultInjector>,
+    msg: &Msg,
+) -> std::result::Result<(), String> {
+    for (h, c) in conns.iter().enumerate() {
+        send_to(c, h, injector, msg)?;
     }
     Ok(())
 }
 
-fn abort_all(conns: &mut [TcpStream], reason: &str) {
-    for c in conns.iter_mut() {
-        let _ = write_msg(c, &Msg::Abort { reason: reason.to_string() });
-        let _ = c.shutdown(Shutdown::Both);
+fn abort_all(conns: &[Conn], reason: &str) {
+    for c in conns.iter() {
+        let mut s = c.lock().unwrap();
+        let _ = write_msg(&mut *s, &Msg::Abort { reason: reason.to_string() });
+        let _ = s.shutdown(Shutdown::Both);
+    }
+}
+
+/// Broadcasts [`Msg::Heartbeat`] to every worker for the lifetime of an
+/// epoch, so a worker waiting out a slow *peer* can tell "coordinator
+/// alive, round still in progress" from a dead coordinator. Stopped and
+/// joined on drop (every epoch exit path).
+struct HeartbeatTicker {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HeartbeatTicker {
+    fn start(conns: Vec<Conn>, interval: Duration, injector: Option<Arc<FaultInjector>>) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let thread = std::thread::spawn(move || {
+            let mut seq = 0u64;
+            let mut last = Instant::now();
+            while !stop2.load(Ordering::Relaxed) {
+                std::thread::sleep(interval.min(Duration::from_millis(100)));
+                if last.elapsed() < interval {
+                    continue;
+                }
+                last = Instant::now();
+                seq += 1;
+                for (h, c) in conns.iter().enumerate() {
+                    // Failures are left for the reader threads to report.
+                    let _ = send_to(c, h, injector.as_deref(), &Msg::Heartbeat { seq });
+                }
+            }
+        });
+        HeartbeatTicker { stop, thread: Some(thread) }
+    }
+}
+
+impl Drop for HeartbeatTicker {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
     }
 }
 
@@ -212,28 +387,55 @@ fn abort_all(conns: &mut [TcpStream], reason: &str) {
 type Event = (u64, usize, std::result::Result<Msg, String>);
 
 /// Collect exactly one in-epoch message per host (lockstep round).
+///
+/// Liveness: every event from a host — including heartbeats — refreshes
+/// its silence clock. A host whose lockstep slot is still empty after
+/// `deadline` of silence is declared hung/partitioned and the round
+/// fails; a merely *slow* host keeps heartbeating and is waited on
+/// indefinitely.
 fn collect_round(
     rx: &mpsc::Receiver<Event>,
     epoch: u64,
     n: usize,
+    deadline: Duration,
 ) -> std::result::Result<Vec<Msg>, String> {
     let mut slots: Vec<Option<Msg>> = (0..n).map(|_| None).collect();
+    let mut last_heard: Vec<Instant> = (0..n).map(|_| Instant::now()).collect();
     let mut got = 0usize;
     while got < n {
-        let (ep, host, res) =
-            rx.recv().map_err(|_| "event channel closed".to_string())?;
-        if ep != epoch {
-            continue; // stale event from a torn-down epoch
-        }
-        match res {
-            Ok(m) => {
-                if slots[host].is_some() {
-                    return Err(format!("host {host} sent two messages in one round"));
-                }
-                slots[host] = Some(m);
-                got += 1;
+        let event = match rx.recv_timeout(READ_TICK) {
+            Ok(ev) => Some(ev),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return Err("event channel closed".to_string())
             }
-            Err(e) => return Err(format!("host {host}: {e}")),
+        };
+        if let Some((ep, host, res)) = event {
+            if ep != epoch {
+                continue; // stale event from a torn-down epoch
+            }
+            last_heard[host] = Instant::now();
+            match res {
+                Ok(Msg::Heartbeat { .. }) => {} // liveness only
+                Ok(m) => {
+                    if slots[host].is_some() {
+                        return Err(format!("host {host} sent two messages in one round"));
+                    }
+                    slots[host] = Some(m);
+                    got += 1;
+                }
+                Err(e) => return Err(format!("host {host}: {e}")),
+            }
+        }
+        if !deadline.is_zero() {
+            for host in 0..n {
+                if slots[host].is_none() && last_heard[host].elapsed() >= deadline {
+                    return Err(format!(
+                        "host {host} silent for {deadline:?} (round deadline) — \
+                         hung or partitioned"
+                    ));
+                }
+            }
         }
     }
     Ok(slots.into_iter().map(|s| s.unwrap()).collect())
@@ -244,9 +446,12 @@ fn run_epoch(
     listener: &TcpListener,
     epoch: u64,
     state: &mut RunState,
+    injector: Option<&Arc<FaultInjector>>,
 ) -> Result<EpochEnd> {
     let n = cfg.n_hosts;
-    let (mut conns, hellos) = join_hosts(listener, n)?;
+    let inj = injector.map(Arc::as_ref);
+    let (raw_conns, hellos) = join_hosts(listener, n, cfg, inj)?;
+    let conns: Vec<Conn> = raw_conns.into_iter().map(|s| Arc::new(Mutex::new(s))).collect();
 
     // Build (first epoch) or validate (rejoin) the global directory:
     // host-major, each host's subgraphs in its store order.
@@ -261,7 +466,7 @@ fn run_epoch(
             state.total_vertices = hellos.iter().map(|i| i.n_vertices).sum();
         }
         Some(d) if *d != directory => {
-            abort_all(&mut conns, "directory changed across epochs");
+            abort_all(&conns, "directory changed across epochs");
             bail!("a rejoined worker presented a different subgraph set");
         }
         Some(_) => {}
@@ -273,7 +478,7 @@ fn run_epoch(
         *state.plan_visible.get_or_insert(min_visible)
     };
     if !cfg.follow && min_visible < visible {
-        abort_all(&mut conns, "store shrank across epochs");
+        abort_all(&conns, "store shrank across epochs");
         bail!("a rejoined worker's store holds fewer instances than the run plan");
     }
 
@@ -290,35 +495,57 @@ fn run_epoch(
         app_params: cfg.app_params.clone(),
         directory: directory.clone(),
     };
-    if let Err(reason) = send_all(&mut conns, &start) {
-        abort_all(&mut conns, &reason);
+    if let Err(reason) = send_all(&conns, inj, &start) {
+        abort_all(&conns, &reason);
         return Ok(EpochEnd::Down(reason));
     }
 
+    // Heartbeat every worker for the whole epoch (dropped — stopped and
+    // joined — on every exit path below).
+    let _ticker = if cfg.heartbeat_ms > 0 {
+        Some(HeartbeatTicker::start(
+            conns.clone(),
+            Duration::from_millis(cfg.heartbeat_ms),
+            injector.cloned(),
+        ))
+    } else {
+        None
+    };
+
     // One reader thread per connection feeds a single event channel;
-    // writes stay on this thread. Epoch tags let teardown discard
-    // stragglers from dead readers.
+    // writes stay on this thread (and the ticker). Epoch tags let
+    // teardown discard stragglers from dead readers. Reader threads
+    // forward heartbeats (liveness events), absorb read-timeout ticks,
+    // and reread once after a CRC mismatch before declaring the peer
+    // corrupt.
     let (tx, rx) = mpsc::channel();
     for (host, c) in conns.iter().enumerate() {
-        let mut rc = match c.try_clone() {
+        let rc = match c.lock().unwrap().try_clone() {
             Ok(rc) => rc,
             Err(e) => {
                 let reason = format!("host {host}: clone failed: {e}");
-                abort_all(&mut conns, &reason);
+                abort_all(&conns, &reason);
                 return Ok(EpochEnd::Down(reason));
             }
         };
         let tx = tx.clone();
-        std::thread::spawn(move || loop {
-            match read_msg(&mut rc) {
-                Ok(m) => {
-                    if tx.send((epoch, host, Ok(m))).is_err() {
+        std::thread::spawn(move || {
+            let mut fr = FrameReader::new(rc);
+            let mut crc_retried = false;
+            loop {
+                match fr.read_frame() {
+                    Ok(m) => {
+                        crc_retried = false;
+                        if tx.send((epoch, host, Ok(m))).is_err() {
+                            return;
+                        }
+                    }
+                    Err(FrameError::Timeout) => {}
+                    Err(FrameError::CrcMismatch) if !crc_retried => crc_retried = true,
+                    Err(e) => {
+                        let _ = tx.send((epoch, host, Err(e.to_string())));
                         return;
                     }
-                }
-                Err(e) => {
-                    let _ = tx.send((epoch, host, Err(format!("{e:#}"))));
-                    return;
                 }
             }
         });
@@ -345,11 +572,12 @@ fn run_epoch(
     let spec = ClusterSpec::new(n);
 
     // Lockstep rounds until every host ends the run or the epoch dies.
+    let round_deadline = Duration::from_millis(cfg.round_deadline_ms);
     loop {
-        let msgs = match collect_round(&rx, epoch, n) {
+        let msgs = match collect_round(&rx, epoch, n, round_deadline) {
             Ok(m) => m,
             Err(reason) => {
-                abort_all(&mut conns, &reason);
+                abort_all(&conns, &reason);
                 return Ok(EpochEnd::Down(reason));
             }
         };
@@ -359,13 +587,13 @@ fn run_epoch(
                 "protocol error: mixed round ({:?})",
                 msgs.iter().map(|m| m.label()).collect::<Vec<_>>()
             );
-            let _ = send_all(&mut conns, &Msg::Fatal { reason: reason.clone() });
+            let _ = send_all(&conns, inj, &Msg::Fatal { reason: reason.clone() });
             bail!("{reason}");
         }
         match label {
             "Superstep" => {
                 if let Some(reason) =
-                    fold_superstep(msgs, &mut conns, &spec, state, n, &host_of_item)?
+                    fold_superstep(msgs, &conns, inj, &spec, state, n, &host_of_item)?
                 {
                     return Ok(EpochEnd::Down(reason));
                 }
@@ -376,7 +604,7 @@ fn run_epoch(
                     let Msg::Commit { t, output, merge } = m else { unreachable!() };
                     if *t0.get_or_insert(t) != t {
                         let reason = "hosts committed different timesteps".to_string();
-                        let _ = send_all(&mut conns, &Msg::Fatal { reason: reason.clone() });
+                        let _ = send_all(&conns, inj, &Msg::Fatal { reason: reason.clone() });
                         bail!("{reason}");
                     }
                     state.outputs.insert((t, h), output);
@@ -385,8 +613,8 @@ fn run_epoch(
                 let t = t0.unwrap();
                 state.committed = state.committed.max(t + 1);
                 let ack = Msg::CommitAck { committed: state.committed };
-                if let Err(reason) = send_all(&mut conns, &ack) {
-                    abort_all(&mut conns, &reason);
+                if let Err(reason) = send_all(&conns, inj, &ack) {
+                    abort_all(&conns, &reason);
                     return Ok(EpochEnd::Down(reason));
                 }
             }
@@ -399,8 +627,8 @@ fn run_epoch(
                     })
                     .min()
                     .unwrap_or(0);
-                if let Err(reason) = send_all(&mut conns, &Msg::RefreshResp { visible: min }) {
-                    abort_all(&mut conns, &reason);
+                if let Err(reason) = send_all(&conns, inj, &Msg::RefreshResp { visible: min }) {
+                    abort_all(&conns, &reason);
                     return Ok(EpochEnd::Down(reason));
                 }
             }
@@ -420,8 +648,8 @@ fn run_epoch(
                 tagged.sort_by_key(|(t, ss, src, _)| (*t, *ss, *src));
                 let merge: Vec<Vec<u8>> =
                     tagged.into_iter().flat_map(|(_, _, _, msgs)| msgs).collect();
-                if let Err(reason) = send_all(&mut conns, &Msg::RunEnd { merge }) {
-                    abort_all(&mut conns, &reason);
+                if let Err(reason) = send_all(&conns, inj, &Msg::RunEnd { merge }) {
+                    abort_all(&conns, &reason);
                     return Ok(EpochEnd::Down(reason));
                 }
                 let mut out = String::new();
@@ -432,14 +660,14 @@ fn run_epoch(
                         }
                     }
                 }
-                for c in conns.iter_mut() {
-                    let _ = c.shutdown(Shutdown::Both);
+                for c in conns.iter() {
+                    let _ = c.lock().unwrap().shutdown(Shutdown::Both);
                 }
                 return Ok(EpochEnd::Done(out));
             }
             other => {
                 let reason = format!("protocol error: unexpected {other} round");
-                let _ = send_all(&mut conns, &Msg::Fatal { reason: reason.clone() });
+                let _ = send_all(&conns, inj, &Msg::Fatal { reason: reason.clone() });
                 bail!("{reason}");
             }
         }
@@ -450,7 +678,8 @@ fn run_epoch(
 /// `Ok(Some(reason))` when the epoch must tear down.
 fn fold_superstep(
     msgs: Vec<Msg>,
-    conns: &mut [TcpStream],
+    conns: &[Conn],
+    injector: Option<&FaultInjector>,
     spec: &ClusterSpec,
     state: &mut RunState,
     n: usize,
@@ -511,7 +740,7 @@ fn fold_superstep(
             chunks: Vec::new(),
             carry: Vec::new(),
         };
-        let _ = send_all(conns, &res);
+        let _ = send_all(conns, injector, &res);
         bail!("{err}");
     }
     // Charge the unioned batches once; every host gets the same cost so
@@ -522,8 +751,7 @@ fn fold_superstep(
     let proceed = !(all_halted && !any_inflight);
     for (h, (chunks, carry)) in route_chunks.into_iter().zip(route_carry).enumerate() {
         let res = Msg::SuperstepResult { proceed, error: None, net_ns, chunks, carry };
-        if let Err(e) = write_msg(&mut conns[h], &res) {
-            let reason = format!("host {h}: {e:#}");
+        if let Err(reason) = send_to(&conns[h], h, injector, &res) {
             abort_all(conns, &reason);
             return Ok(Some(reason));
         }

@@ -1,0 +1,415 @@
+//! Deterministic fault injection for the cluster runtime.
+//!
+//! Chaos testing only works if a failure schedule is **reproducible**: a
+//! flaky chaos test is worse than none. A [`FaultPlan`] is a small text
+//! file (the `--fault-plan` flag) describing *which* failure fires
+//! *where* and *when*, seeded so probabilistic rules draw from the
+//! repo's deterministic [`Prng`](crate::util::prng::Prng). Injection is
+//! off by default — without a plan, [`FaultInjector::check`] is never
+//! even constructed and the hot path pays one `Option` test per send.
+//!
+//! ### Plan format
+//!
+//! ```text
+//! # one rule per line; first matching rule that fires wins
+//! seed 42
+//! on host1.send.Superstep   nth 3     delay 40     # ms
+//! on host1.send.Heartbeat   nth 5     corrupt
+//! on host1.send.*           prob 0.02 delay 10
+//! on host1.recv             nth 20    exit 70
+//! on coord.send.*.h1        nth 2     drop
+//! on host0.send.Commit      nth 4     partition 500
+//! on host1.send.*           nth 9     halfopen
+//! ```
+//!
+//! * `seed N` — PRNG seed for `prob` rules (default 0).
+//! * `on <glob> nth <K> <action>` — fire on the K-th time (1-based) the
+//!   glob matches an injection point.
+//! * `on <glob> prob <P> <action>` — fire with probability P at each
+//!   match, drawn deterministically from the plan seed.
+//!
+//! Actions: `delay <ms>`, `drop` (sever the connection), `corrupt`
+//! (flip a payload bit after the CRC — the receiver sees a CRC
+//! mismatch), `halfopen` (wedge the calling thread without closing the
+//! socket — a hung host), `partition <ms>` (sever + refuse reconnect
+//! until the blackout elapses), `exit [code]` (kill the process, as
+//! SIGKILL would; default exit code 70).
+//!
+//! ### Injection points
+//!
+//! Point names are dotted strings matched by a `*` glob: workers use
+//! `host<P>.connect`, `host<P>.send.<MsgLabel>`, `host<P>.recv`; the
+//! coordinator uses `coord.send.<MsgLabel>.h<H>` and `coord.recv.h<H>`.
+
+use crate::util::prng::Prng;
+use anyhow::{bail, Context, Result};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// What a matching-and-firing rule does at the injection point.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// No rule fired; proceed normally.
+    None,
+    /// Sleep this long, then proceed normally.
+    Delay(Duration),
+    /// Sever the connection (the caller shuts the stream down).
+    Drop,
+    /// Send this frame with a flipped payload bit (valid header, bad
+    /// CRC on arrival). Send points only; elsewhere acts like `None`.
+    Corrupt,
+    /// Wedge the calling thread for the given duration without closing
+    /// the socket — a hung host, detectable only by liveness deadlines.
+    HalfOpen(Duration),
+    /// Sever and refuse to reconnect until the blackout elapses.
+    Partition(Duration),
+    /// Kill the process with this exit code.
+    Exit(i32),
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Trigger {
+    /// 1-based match counter: fire on exactly the K-th match.
+    Nth(u64),
+    Prob(f64),
+}
+
+#[derive(Debug, Clone)]
+struct Rule {
+    pattern: String,
+    trigger: Trigger,
+    action: Action,
+}
+
+/// A parsed `--fault-plan` file.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub seed: u64,
+    rules: Vec<Rule>,
+}
+
+/// Simple `*` glob: each literal fragment must appear in order; a
+/// leading/trailing fragment is anchored.
+fn glob_match(pat: &str, s: &str) -> bool {
+    if !pat.contains('*') {
+        return pat == s;
+    }
+    let parts: Vec<&str> = pat.split('*').collect();
+    let mut rest = s;
+    for (i, part) in parts.iter().enumerate() {
+        if part.is_empty() {
+            continue;
+        }
+        if i == 0 {
+            match rest.strip_prefix(part) {
+                Some(r) => rest = r,
+                None => return false,
+            }
+        } else if i == parts.len() - 1 {
+            return rest.ends_with(part);
+        } else {
+            match rest.find(part) {
+                Some(pos) => rest = &rest[pos + part.len()..],
+                None => return false,
+            }
+        }
+    }
+    true
+}
+
+fn parse_action(words: &[&str], line_no: usize) -> Result<Action> {
+    let arg_ms = |idx: usize, what: &str| -> Result<Duration> {
+        let v: u64 = words
+            .get(idx)
+            .with_context(|| format!("fault plan line {line_no}: {what} needs <ms>"))?
+            .parse()
+            .with_context(|| format!("fault plan line {line_no}: bad {what} ms"))?;
+        Ok(Duration::from_millis(v))
+    };
+    match *words.first().context("fault plan: missing action")? {
+        "delay" => Ok(Action::Delay(arg_ms(1, "delay")?)),
+        "drop" => Ok(Action::Drop),
+        "corrupt" => Ok(Action::Corrupt),
+        "halfopen" => {
+            // Optional wedge duration; default far beyond any deadline.
+            let d = if words.len() > 1 { arg_ms(1, "halfopen")? } else { Duration::from_secs(600) };
+            Ok(Action::HalfOpen(d))
+        }
+        "partition" => Ok(Action::Partition(arg_ms(1, "partition")?)),
+        "exit" => {
+            let code = match words.get(1) {
+                Some(c) => c
+                    .parse()
+                    .with_context(|| format!("fault plan line {line_no}: bad exit code"))?,
+                None => 70,
+            };
+            Ok(Action::Exit(code))
+        }
+        other => bail!("fault plan line {line_no}: unknown action {other:?}"),
+    }
+}
+
+impl FaultPlan {
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let mut seed = 0u64;
+        let mut rules = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = match raw.find('#') {
+                Some(pos) => &raw[..pos],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            let words: Vec<&str> = line.split_whitespace().collect();
+            match words[0] {
+                "seed" => {
+                    seed = words
+                        .get(1)
+                        .with_context(|| format!("fault plan line {line_no}: seed needs a value"))?
+                        .parse()
+                        .with_context(|| format!("fault plan line {line_no}: bad seed"))?;
+                }
+                "on" => {
+                    if words.len() < 5 {
+                        bail!(
+                            "fault plan line {line_no}: want `on <glob> nth|prob <v> <action>`"
+                        );
+                    }
+                    let pattern = words[1].to_string();
+                    let trigger = match words[2] {
+                        "nth" => {
+                            let k: u64 = words[3].parse().with_context(|| {
+                                format!("fault plan line {line_no}: bad nth count")
+                            })?;
+                            if k == 0 {
+                                bail!("fault plan line {line_no}: nth is 1-based");
+                            }
+                            Trigger::Nth(k)
+                        }
+                        "prob" => {
+                            let p: f64 = words[3].parse().with_context(|| {
+                                format!("fault plan line {line_no}: bad probability")
+                            })?;
+                            if !(0.0..=1.0).contains(&p) {
+                                bail!("fault plan line {line_no}: probability outside [0, 1]");
+                            }
+                            Trigger::Prob(p)
+                        }
+                        other => bail!(
+                            "fault plan line {line_no}: unknown trigger {other:?} (nth|prob)"
+                        ),
+                    };
+                    let action = parse_action(&words[4..], line_no)?;
+                    rules.push(Rule { pattern, trigger, action });
+                }
+                other => bail!("fault plan line {line_no}: unknown directive {other:?}"),
+            }
+        }
+        Ok(FaultPlan { seed, rules })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fault plan {}", path.display()))?;
+        FaultPlan::parse(&text).with_context(|| format!("parsing fault plan {}", path.display()))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+}
+
+struct InjectorState {
+    /// Per-rule match counters (advance on every match, fire or not, so
+    /// `nth` is deterministic regardless of other rules).
+    hits: Vec<u64>,
+    prng: Prng,
+    /// Armed by a fired `partition`: connects are refused until then.
+    blackout_until: Option<Instant>,
+}
+
+/// Shared, thread-safe evaluator for a [`FaultPlan`]. One per process;
+/// every injection point calls [`check`](FaultInjector::check) with its
+/// dotted point name.
+pub struct FaultInjector {
+    rules: Vec<Rule>,
+    state: Mutex<InjectorState>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        let n = plan.rules.len();
+        FaultInjector {
+            rules: plan.rules,
+            state: Mutex::new(InjectorState {
+                hits: vec![0; n],
+                prng: Prng::new(plan.seed),
+                blackout_until: None,
+            }),
+        }
+    }
+
+    /// Evaluate the plan at an injection point. Rules are checked in
+    /// file order; every matching rule's counter (and, for `prob`, PRNG
+    /// draw) advances, and the first rule that *fires* decides the
+    /// action. A fired `partition` also arms the connect blackout.
+    pub fn check(&self, point: &str) -> Action {
+        let mut st = self.state.lock().unwrap();
+        let mut fired = Action::None;
+        for (i, rule) in self.rules.iter().enumerate() {
+            if !glob_match(&rule.pattern, point) {
+                continue;
+            }
+            st.hits[i] += 1;
+            let fire = match rule.trigger {
+                Trigger::Nth(k) => st.hits[i] == k,
+                Trigger::Prob(p) => st.prng.gen_bool(p),
+            };
+            if fire && fired == Action::None {
+                fired = rule.action.clone();
+            }
+        }
+        if let Action::Partition(d) = fired {
+            st.blackout_until = Some(Instant::now() + d);
+        }
+        fired
+    }
+
+    /// True while a fired `partition` blackout is still in force —
+    /// connect attempts should fail fast instead of dialing.
+    pub fn blackout_active(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        match st.blackout_until {
+            Some(until) if Instant::now() < until => true,
+            Some(_) => {
+                st.blackout_until = None;
+                false
+            }
+            None => false,
+        }
+    }
+}
+
+/// Run the non-frame part of an action at an injection point: sleep for
+/// `Delay`/`HalfOpen`, die for `Exit`. Returns `true` if the caller
+/// should sever the connection (`Drop`, `Partition`, and a `HalfOpen`
+/// whose wedge has elapsed).
+pub fn perform(action: &Action) -> bool {
+    match action {
+        Action::None | Action::Corrupt => false,
+        Action::Delay(d) => {
+            std::thread::sleep(*d);
+            false
+        }
+        Action::Drop | Action::Partition(_) => true,
+        Action::HalfOpen(d) => {
+            std::thread::sleep(*d);
+            true
+        }
+        Action::Exit(code) => std::process::exit(*code),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glob_matches_dotted_points() {
+        assert!(glob_match("host1.send.Superstep", "host1.send.Superstep"));
+        assert!(!glob_match("host1.send.Superstep", "host0.send.Superstep"));
+        assert!(glob_match("host1.send.*", "host1.send.Commit"));
+        assert!(glob_match("*.send.*", "coord.send.Start.h1"));
+        assert!(glob_match("coord.send.*.h1", "coord.send.CommitAck.h1"));
+        assert!(!glob_match("coord.send.*.h1", "coord.send.CommitAck.h0"));
+        assert!(glob_match("*", "anything.at.all"));
+        assert!(!glob_match("host1.recv", "host1.recv.extra"));
+    }
+
+    #[test]
+    fn parses_a_full_plan() {
+        let plan = FaultPlan::parse(
+            "# chaos\nseed 9\non host1.send.* nth 3 delay 40\non host1.recv prob 0.5 corrupt\n\
+             on host0.connect nth 1 partition 250\non host1.send.Commit nth 2 exit 7\n\
+             on host1.send.* nth 99 halfopen\non coord.send.*.h0 nth 1 drop\n",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 9);
+        assert_eq!(plan.rules.len(), 6);
+        assert_eq!(plan.rules[0].action, Action::Delay(Duration::from_millis(40)));
+        assert_eq!(plan.rules[2].action, Action::Partition(Duration::from_millis(250)));
+        assert_eq!(plan.rules[3].action, Action::Exit(7));
+        assert_eq!(plan.rules[4].action, Action::HalfOpen(Duration::from_secs(600)));
+        assert_eq!(plan.rules[5].action, Action::Drop);
+    }
+
+    #[test]
+    fn rejects_malformed_plans() {
+        assert!(FaultPlan::parse("on host1.recv nth 0 drop").is_err());
+        assert!(FaultPlan::parse("on host1.recv prob 1.5 drop").is_err());
+        assert!(FaultPlan::parse("on host1.recv sometimes drop").is_err());
+        assert!(FaultPlan::parse("on host1.recv nth 1 explode").is_err());
+        assert!(FaultPlan::parse("off host1.recv nth 1 drop").is_err());
+        assert!(FaultPlan::parse("on host1.recv nth 1").is_err());
+    }
+
+    #[test]
+    fn nth_fires_exactly_once_on_the_kth_match() {
+        let plan = FaultPlan::parse("on h.send.* nth 3 drop").unwrap();
+        let inj = FaultInjector::new(plan);
+        assert_eq!(inj.check("h.send.A"), Action::None);
+        assert_eq!(inj.check("h.recv"), Action::None); // no match, no count
+        assert_eq!(inj.check("h.send.B"), Action::None);
+        assert_eq!(inj.check("h.send.C"), Action::Drop);
+        assert_eq!(inj.check("h.send.D"), Action::None); // fired already
+    }
+
+    #[test]
+    fn prob_schedule_is_deterministic_in_the_seed() {
+        let run = |seed: u64| -> Vec<bool> {
+            let plan =
+                FaultPlan::parse(&format!("seed {seed}\non p prob 0.3 drop")).unwrap();
+            let inj = FaultInjector::new(plan);
+            (0..64).map(|_| inj.check("p") == Action::Drop).collect()
+        };
+        assert_eq!(run(5), run(5), "same seed, same schedule");
+        assert_ne!(run(5), run(6), "different seed, different schedule");
+        let fires = run(5).iter().filter(|&&b| b).count();
+        assert!((5..30).contains(&fires), "p=0.3 over 64 draws fired {fires} times");
+    }
+
+    #[test]
+    fn first_firing_rule_wins_but_all_matching_counters_advance() {
+        let plan = FaultPlan::parse(
+            "on p nth 2 delay 1\non p nth 2 drop\non p nth 3 corrupt",
+        )
+        .unwrap();
+        let inj = FaultInjector::new(plan);
+        assert_eq!(inj.check("p"), Action::None);
+        // Both nth-2 rules fire on the second match; the first in file
+        // order wins. The nth-3 rule's counter advanced both times.
+        assert_eq!(inj.check("p"), Action::Delay(Duration::from_millis(1)));
+        assert_eq!(inj.check("p"), Action::Corrupt);
+    }
+
+    #[test]
+    fn partition_arms_a_connect_blackout() {
+        let plan = FaultPlan::parse("on p nth 1 partition 40").unwrap();
+        let inj = FaultInjector::new(plan);
+        assert!(!inj.blackout_active());
+        assert_eq!(inj.check("p"), Action::Partition(Duration::from_millis(40)));
+        assert!(inj.blackout_active());
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(!inj.blackout_active());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_are_ignored() {
+        let plan = FaultPlan::parse("\n# nothing\n   # indented\nseed 3 # trailing\n").unwrap();
+        assert!(plan.is_empty());
+        assert_eq!(plan.seed, 3);
+    }
+}

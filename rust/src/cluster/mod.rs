@@ -17,8 +17,11 @@
 //!   bit-identical between the two paths (`tests/distributed.rs`).
 
 pub mod coordinator;
+pub mod fault;
 pub mod net;
 pub mod proto;
+pub mod retry;
+pub mod supervisor;
 pub mod transport;
 pub mod worker;
 

@@ -31,6 +31,73 @@ use std::io::{Read, Write};
 pub const MAGIC: u32 = 0x3146_4647;
 /// Refuse frames above this payload size (corrupt length prefix guard).
 pub const MAX_FRAME: u32 = 1 << 30;
+/// Frame header size: magic + length + CRC, 4 bytes each.
+pub const HEADER_LEN: usize = 12;
+
+/// Typed frame-read failure. The variants callers branch on:
+///
+/// * [`FrameError::Timeout`] — the socket read deadline elapsed with the
+///   frame still incomplete. The [`FrameReader`] keeps its partial state,
+///   so the caller may poll liveness and call `read_frame` again.
+/// * [`FrameError::CrcMismatch`] — header valid, payload fully consumed,
+///   checksum wrong. The stream is still frame-synced, so one reread is
+///   safe; a second mismatch means the peer or path is bad.
+/// * Everything else means the stream is dead or desynced: treat the
+///   peer as lost.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Read deadline elapsed mid-frame; partial state is preserved.
+    Timeout,
+    /// Peer closed the connection. `mid_frame` distinguishes a clean
+    /// close at a frame boundary from truncation inside a frame.
+    Eof { mid_frame: bool },
+    /// First four bytes were not "GFF1": the stream is desynced.
+    BadMagic(u32),
+    /// Length prefix at or above [`MAX_FRAME`]: corrupt header.
+    Oversize(u32),
+    /// Payload checksum mismatch; stream still frame-synced.
+    CrcMismatch,
+    /// Any other socket error.
+    Io(std::io::Error),
+    /// Frame intact but the payload did not decode as a [`Msg`].
+    Decode(String),
+}
+
+impl FrameError {
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, FrameError::Timeout)
+    }
+
+    pub fn is_crc_mismatch(&self) -> bool {
+        matches!(self, FrameError::CrcMismatch)
+    }
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Timeout => write!(f, "proto: socket read timed out mid-frame"),
+            FrameError::Eof { mid_frame: false } => write!(f, "proto: connection closed"),
+            FrameError::Eof { mid_frame: true } => {
+                write!(f, "proto: connection closed mid-frame")
+            }
+            FrameError::BadMagic(m) => write!(f, "proto: bad frame magic {m:#010x}"),
+            FrameError::Oversize(l) => write!(f, "proto: frame length {l} exceeds limit"),
+            FrameError::CrcMismatch => write!(f, "proto: frame CRC mismatch"),
+            FrameError::Io(e) => write!(f, "proto: socket error: {e}"),
+            FrameError::Decode(s) => write!(f, "proto: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FrameError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
 
 /// Typed marker for "this epoch was torn down, rejoin and resume" —
 /// distinguishes a recoverable coordinator [`Msg::Abort`] / connection
@@ -149,6 +216,11 @@ pub enum Msg {
     Abort { reason: String },
     /// Either direction: unrecoverable error; the run ends.
     Fatal { reason: String },
+    /// Either direction, out-of-band liveness beacon: "I am alive and
+    /// still working". Carries a monotone per-sender sequence number.
+    /// Receivers reset their silence clock and otherwise ignore it —
+    /// heartbeats never participate in the lockstep fold.
+    Heartbeat { seq: u64 },
 }
 
 fn enc_opt_str(e: &mut Enc, s: &Option<String>) {
@@ -348,6 +420,10 @@ impl Msg {
                 e.u8(12);
                 e.str(reason);
             }
+            Msg::Heartbeat { seq } => {
+                e.u8(13);
+                e.u64(*seq);
+            }
         }
         e.finish()
     }
@@ -455,6 +531,7 @@ impl Msg {
             10 => Msg::RunEnd { merge: dec_msgs(&mut d)? },
             11 => Msg::Abort { reason: d.str()?.to_string() },
             12 => Msg::Fatal { reason: d.str()?.to_string() },
+            13 => Msg::Heartbeat { seq: d.u64()? },
             other => bail!("proto: unknown message tag {other}"),
         };
         if !d.is_empty() {
@@ -478,46 +555,140 @@ impl Msg {
             Msg::RunEnd { .. } => "RunEnd",
             Msg::Abort { .. } => "Abort",
             Msg::Fatal { .. } => "Fatal",
+            Msg::Heartbeat { .. } => "Heartbeat",
         }
     }
+}
+
+fn write_frame(w: &mut impl Write, payload: &[u8], crc: u32) -> Result<()> {
+    if payload.len() as u64 >= MAX_FRAME as u64 {
+        bail!("proto: frame too large ({} bytes)", payload.len());
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    header[4..8].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    header[8..12].copy_from_slice(&crc.to_le_bytes());
+    w.write_all(&header).context("proto: writing frame header")?;
+    w.write_all(payload).context("proto: writing frame payload")?;
+    w.flush().context("proto: flushing frame")?;
+    Ok(())
 }
 
 /// Write one framed message (magic + length + CRC + payload), flushing.
 pub fn write_msg(w: &mut impl Write, msg: &Msg) -> Result<()> {
     let payload = msg.encode();
-    if payload.len() as u64 >= MAX_FRAME as u64 {
-        bail!("proto: frame too large ({} bytes)", payload.len());
+    let crc = crc32fast::hash(&payload);
+    write_frame(w, &payload, crc)
+}
+
+/// Fault injection only: write a frame whose CRC was computed before one
+/// payload bit was flipped — a frame that "arrives corrupt" and trips
+/// the receiver's [`FrameError::CrcMismatch`] path without desyncing the
+/// stream (header and length stay valid).
+pub fn write_msg_corrupted(w: &mut impl Write, msg: &Msg) -> Result<()> {
+    let mut payload = msg.encode();
+    let crc = crc32fast::hash(&payload);
+    let last = payload.len() - 1; // every Msg encodes at least its tag byte
+    payload[last] ^= 0x01;
+    write_frame(w, &payload, crc)
+}
+
+/// Incremental frame reader that survives socket read timeouts.
+///
+/// `read_exact` discards partially-read bytes on error, so a plain
+/// blocking read with an OS read-timeout would desync the stream the
+/// first time a deadline fired mid-frame. This reader buffers partial
+/// frames across [`FrameError::Timeout`] returns: callers set a short
+/// socket timeout, use each `Timeout` as a liveness tick (check silence
+/// budgets, abort flags), and call `read_frame` again without losing
+/// protocol sync.
+pub struct FrameReader<R> {
+    r: R,
+    buf: Vec<u8>,
+    /// True once `buf[0..HEADER_LEN]` has been validated and `need` is
+    /// the full frame size. A flag (not `need > HEADER_LEN`) so that
+    /// zero-length payloads terminate.
+    have_header: bool,
+    need: usize,
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(r: R) -> Self {
+        FrameReader { r, buf: Vec::new(), have_header: false, need: HEADER_LEN }
     }
-    let mut header = [0u8; 12];
-    header[0..4].copy_from_slice(&MAGIC.to_le_bytes());
-    header[4..8].copy_from_slice(&(payload.len() as u32).to_le_bytes());
-    header[8..12].copy_from_slice(&crc32fast::hash(&payload).to_le_bytes());
-    w.write_all(&header).context("proto: writing frame header")?;
-    w.write_all(&payload).context("proto: writing frame payload")?;
-    w.flush().context("proto: flushing frame")?;
-    Ok(())
+
+    pub fn get_mut(&mut self) -> &mut R {
+        &mut self.r
+    }
+
+    /// Read one framed message, preserving partial state across
+    /// [`FrameError::Timeout`]. After [`FrameError::CrcMismatch`] the
+    /// stream is still synced and the next call reads the next frame;
+    /// after any other error the stream must be abandoned.
+    pub fn read_frame(&mut self) -> std::result::Result<Msg, FrameError> {
+        loop {
+            if !self.have_header && self.buf.len() >= HEADER_LEN {
+                let magic = u32::from_le_bytes(self.buf[0..4].try_into().unwrap());
+                if magic != MAGIC {
+                    return Err(FrameError::BadMagic(magic));
+                }
+                let len = u32::from_le_bytes(self.buf[4..8].try_into().unwrap());
+                if len >= MAX_FRAME {
+                    return Err(FrameError::Oversize(len));
+                }
+                self.have_header = true;
+                self.need = HEADER_LEN + len as usize;
+            }
+            if self.have_header && self.buf.len() >= self.need {
+                let crc = u32::from_le_bytes(self.buf[8..12].try_into().unwrap());
+                let end = self.need;
+                let result = {
+                    let payload = &self.buf[HEADER_LEN..end];
+                    if crc32fast::hash(payload) == crc {
+                        Msg::decode(payload).map_err(|e| FrameError::Decode(e.to_string()))
+                    } else {
+                        Err(FrameError::CrcMismatch)
+                    }
+                };
+                // The frame is consumed either way; keep any bytes the
+                // peer pipelined behind it and stay synced.
+                self.buf.drain(..end);
+                self.have_header = false;
+                self.need = HEADER_LEN;
+                return result;
+            }
+            let start = self.buf.len();
+            let want = self.need - start;
+            self.buf.resize(start + want, 0);
+            match self.r.read(&mut self.buf[start..]) {
+                Ok(0) => {
+                    self.buf.truncate(start);
+                    return Err(FrameError::Eof { mid_frame: start > 0 });
+                }
+                Ok(n) => self.buf.truncate(start + n),
+                Err(e) => {
+                    self.buf.truncate(start);
+                    match e.kind() {
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                            return Err(FrameError::Timeout)
+                        }
+                        std::io::ErrorKind::Interrupted => continue,
+                        _ => return Err(FrameError::Io(e)),
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Read one framed message. An error here means the connection is dead or
-/// the stream is corrupt — callers treat both as a lost peer.
+/// the stream is corrupt — callers treat both as a lost peer. Callers
+/// that need to distinguish timeout / EOF / CRC mismatch (to retry or to
+/// poll liveness) should hold a [`FrameReader`] instead and branch on
+/// [`FrameError`]; the typed error is still recoverable here via
+/// `downcast_ref::<FrameError>()`.
 pub fn read_msg(r: &mut impl Read) -> Result<Msg> {
-    let mut header = [0u8; 12];
-    r.read_exact(&mut header).context("proto: reading frame header")?;
-    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
-    if magic != MAGIC {
-        bail!("proto: bad frame magic {magic:#010x}");
-    }
-    let len = u32::from_le_bytes(header[4..8].try_into().unwrap());
-    if len >= MAX_FRAME {
-        bail!("proto: frame length {len} exceeds limit");
-    }
-    let crc = u32::from_le_bytes(header[8..12].try_into().unwrap());
-    let mut payload = vec![0u8; len as usize];
-    r.read_exact(&mut payload).context("proto: reading frame payload")?;
-    if crc32fast::hash(&payload) != crc {
-        bail!("proto: frame CRC mismatch");
-    }
-    Msg::decode(&payload)
+    FrameReader::new(r).read_frame().map_err(anyhow::Error::new)
 }
 
 #[cfg(test)]
@@ -620,5 +791,131 @@ mod tests {
         let e = anyhow::Error::new(EpochAborted("peer lost".into()));
         assert!(e.downcast_ref::<EpochAborted>().is_some());
         assert!(e.to_string().contains("peer lost"));
+    }
+
+    #[test]
+    fn heartbeat_roundtrips() {
+        roundtrip(Msg::Heartbeat { seq: 0 });
+        roundtrip(Msg::Heartbeat { seq: u64::MAX });
+        assert_eq!(Msg::Heartbeat { seq: 7 }.label(), "Heartbeat");
+    }
+
+    #[test]
+    fn truncated_header_is_typed_eof() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::EndRun).unwrap();
+        let err = read_msg(&mut &buf[..4]).unwrap_err();
+        match err.downcast_ref::<FrameError>() {
+            Some(FrameError::Eof { mid_frame: true }) => {}
+            other => panic!("expected mid-frame EOF, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mid_frame_eof_is_typed_eof() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Abort { reason: "x".into() }).unwrap();
+        let err = read_msg(&mut &buf[..buf.len() - 1]).unwrap_err();
+        match err.downcast_ref::<FrameError>() {
+            Some(FrameError::Eof { mid_frame: true }) => {}
+            other => panic!("expected mid-frame EOF, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn clean_eof_is_not_mid_frame() {
+        let err = read_msg(&mut &[][..]).unwrap_err();
+        match err.downcast_ref::<FrameError>() {
+            Some(FrameError::Eof { mid_frame: false }) => {}
+            other => panic!("expected clean EOF, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversize_and_magic_and_crc_are_typed() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::EndRun).unwrap();
+
+        let mut oversize = buf.clone();
+        oversize[4..8].copy_from_slice(&MAX_FRAME.to_le_bytes());
+        let err = read_msg(&mut &oversize[..]).unwrap_err();
+        assert!(matches!(err.downcast_ref::<FrameError>(), Some(FrameError::Oversize(_))));
+
+        let mut magic = buf.clone();
+        magic[0] ^= 0x40;
+        let err = read_msg(&mut &magic[..]).unwrap_err();
+        assert!(matches!(err.downcast_ref::<FrameError>(), Some(FrameError::BadMagic(_))));
+
+        let mut crc = Vec::new();
+        write_msg(&mut crc, &Msg::RefreshReq { visible: 5 }).unwrap();
+        let last = crc.len() - 1;
+        crc[last] ^= 0xff;
+        let err = read_msg(&mut &crc[..]).unwrap_err();
+        let fe = err.downcast_ref::<FrameError>().unwrap();
+        assert!(fe.is_crc_mismatch(), "{fe}");
+    }
+
+    #[test]
+    fn corrupted_writer_trips_crc_and_stays_synced() {
+        // write_msg_corrupted produces exactly the failure the CRC
+        // retry path handles: a bad frame followed by a good one on a
+        // still-synced stream.
+        let mut buf = Vec::new();
+        write_msg_corrupted(&mut buf, &Msg::Heartbeat { seq: 1 }).unwrap();
+        write_msg(&mut buf, &Msg::CommitAck { committed: 3 }).unwrap();
+        let mut fr = FrameReader::new(&buf[..]);
+        assert!(fr.read_frame().unwrap_err().is_crc_mismatch());
+        assert_eq!(fr.read_frame().unwrap(), Msg::CommitAck { committed: 3 });
+    }
+
+    #[test]
+    fn frame_reader_survives_timeouts_mid_frame() {
+        /// A reader that yields `WouldBlock` between every delivered
+        /// byte — the worst-case interleaving of deadline ticks.
+        struct Dribble {
+            data: Vec<u8>,
+            pos: usize,
+            ready: bool,
+        }
+        impl Read for Dribble {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                if self.pos >= self.data.len() {
+                    return Ok(0);
+                }
+                if !self.ready {
+                    self.ready = true;
+                    return Err(std::io::ErrorKind::WouldBlock.into());
+                }
+                self.ready = false;
+                out[0] = self.data[self.pos];
+                self.pos += 1;
+                Ok(1)
+            }
+        }
+
+        let mut data = Vec::new();
+        write_msg(&mut data, &Msg::Abort { reason: "slow".into() }).unwrap();
+        write_msg(&mut data, &Msg::EndRun).unwrap();
+        let n = data.len();
+        let mut fr = FrameReader::new(Dribble { data, pos: 0, ready: false });
+        let mut msgs = Vec::new();
+        let mut timeouts = 0usize;
+        loop {
+            match fr.read_frame() {
+                Ok(m) => msgs.push(m),
+                Err(FrameError::Timeout) => timeouts += 1,
+                Err(FrameError::Eof { mid_frame }) => {
+                    assert!(!mid_frame);
+                    break;
+                }
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert_eq!(
+            msgs,
+            vec![Msg::Abort { reason: "slow".into() }, Msg::EndRun],
+            "stream desynced across timeouts"
+        );
+        assert_eq!(timeouts, n, "one timeout per delivered byte");
     }
 }

@@ -1,0 +1,107 @@
+//! Bounded retry with exponential backoff and deterministic jitter.
+//!
+//! Used for host connect/rejoin (a coordinator restart should not be
+//! hammered by every worker at the same instant) and for supervised
+//! respawn pacing. Jitter is drawn from the repo's deterministic
+//! [`Prng`](crate::util::prng::Prng) keyed by `(seed, attempt)`, so a
+//! given policy always produces the same delay sequence — chaos tests
+//! stay reproducible — while different seeds (e.g. different partition
+//! ids) desynchronise real fleets.
+
+use crate::util::prng::Prng;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Delay before the first retry.
+    pub base: Duration,
+    /// Cap applied after exponentiation.
+    pub max: Duration,
+    /// Geometric growth factor per attempt.
+    pub multiplier: f64,
+    /// Give up after this many attempts (0 = unlimited).
+    pub max_attempts: u32,
+    /// Each delay is scaled by a factor in `[1 - j, 1 + j)`.
+    pub jitter_frac: f64,
+    /// Jitter stream seed; vary per participant to spread retries.
+    pub seed: u64,
+}
+
+impl RetryPolicy {
+    /// The connect/rejoin default: `base * 2^attempt`, capped at 5 s,
+    /// ±25 % jitter.
+    pub fn connect(base: Duration, max_attempts: u32, seed: u64) -> Self {
+        RetryPolicy {
+            base,
+            max: Duration::from_secs(5),
+            multiplier: 2.0,
+            max_attempts,
+            jitter_frac: 0.25,
+            seed,
+        }
+    }
+
+    /// The jittered delay before retry number `attempt` (0-based).
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let raw = self.base.as_secs_f64() * self.multiplier.powi(attempt.min(63) as i32);
+        let capped = raw.min(self.max.as_secs_f64());
+        let mut prng = Prng::new(self.seed).fork(attempt as u64);
+        let scale = 1.0 + self.jitter_frac * (2.0 * prng.gen_f64() - 1.0);
+        Duration::from_secs_f64((capped * scale).max(0.0))
+    }
+
+    /// True if retry number `attempt` (0-based) is still within budget.
+    pub fn allows(&self, attempt: u32) -> bool {
+        self.max_attempts == 0 || attempt < self.max_attempts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(seed: u64) -> RetryPolicy {
+        RetryPolicy {
+            base: Duration::from_millis(100),
+            max: Duration::from_secs(2),
+            multiplier: 2.0,
+            max_attempts: 6,
+            jitter_frac: 0.25,
+            seed,
+        }
+    }
+
+    #[test]
+    fn delays_grow_geometrically_within_jitter_and_cap() {
+        let p = policy(1);
+        for attempt in 0..10u32 {
+            let nominal = (0.1 * 2f64.powi(attempt as i32)).min(2.0);
+            let d = p.delay(attempt).as_secs_f64();
+            assert!(
+                (nominal * 0.75..nominal * 1.25).contains(&d),
+                "attempt {attempt}: {d} outside jitter band around {nominal}"
+            );
+        }
+        // Far past the cap the delay stays bounded.
+        assert!(p.delay(40).as_secs_f64() <= 2.0 * 1.25);
+    }
+
+    #[test]
+    fn delay_sequence_is_deterministic_per_seed() {
+        let a: Vec<Duration> = (0..8).map(|i| policy(7).delay(i)).collect();
+        let b: Vec<Duration> = (0..8).map(|i| policy(7).delay(i)).collect();
+        let c: Vec<Duration> = (0..8).map(|i| policy(8).delay(i)).collect();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn attempt_budget_is_enforced() {
+        let p = policy(1);
+        assert!(p.allows(0));
+        assert!(p.allows(5));
+        assert!(!p.allows(6));
+        let unlimited = RetryPolicy { max_attempts: 0, ..policy(1) };
+        assert!(unlimited.allows(1_000_000));
+    }
+}

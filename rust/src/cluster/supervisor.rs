@@ -1,0 +1,148 @@
+//! `goffish supervise` — a thin process supervisor for `goffish host`.
+//!
+//! The PR 6 recovery story required a human: when a host process died,
+//! someone had to restart it before the coordinator's next epoch could
+//! make progress. The supervisor closes that loop: it spawns the host
+//! command as a child, and when the child dies abnormally (crash,
+//! SIGKILL, fault-plan `exit`) it respawns it — with exponential
+//! backoff and a restart cap, so a host that can never come up does not
+//! flap forever. Because a restarted host rejoins from its durable
+//! carry checkpoint (see `cluster::transport`), a supervised run
+//! survives K host failures with output bit-identical to a failure-free
+//! run (`tests/distributed.rs` chaos suite).
+//!
+//! The child's pid can be published to a file (`--child-pid-file`,
+//! atomic tmp + rename, rewritten after every respawn) so chaos tests
+//! and operators can target the *current* incarnation with signals.
+
+use crate::cluster::retry::RetryPolicy;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use std::time::Duration;
+
+pub struct SupervisorConfig {
+    /// Program to run (normally `std::env::current_exe()`).
+    pub program: PathBuf,
+    /// Arguments, e.g. `["host", "--store", ...]`.
+    pub args: Vec<String>,
+    /// Give up after this many restarts (not counting the first spawn).
+    pub max_restarts: u32,
+    /// Base of the exponential restart backoff.
+    pub restart_backoff: Duration,
+    /// When set, the current child's pid is written here after every
+    /// (re)spawn.
+    pub child_pid_file: Option<PathBuf>,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            program: PathBuf::new(),
+            args: Vec::new(),
+            max_restarts: 5,
+            restart_backoff: Duration::from_millis(500),
+            child_pid_file: None,
+        }
+    }
+}
+
+fn publish_pid(path: &PathBuf, pid: u32) {
+    let tmp = path.with_extension("tmp");
+    let _ = std::fs::write(&tmp, format!("{pid}\n"))
+        .and_then(|_| std::fs::rename(&tmp, path));
+}
+
+/// Run the supervised command until it exits cleanly (`Ok`) or exhausts
+/// its restart budget (`Err` carrying the last exit status).
+pub fn run_supervisor(cfg: &SupervisorConfig) -> Result<()> {
+    let policy = RetryPolicy {
+        base: cfg.restart_backoff,
+        max: Duration::from_secs(10),
+        multiplier: 2.0,
+        max_attempts: 0,
+        jitter_frac: 0.25,
+        seed: 0x5u64,
+    };
+    let mut restarts = 0u32;
+    loop {
+        let mut child = std::process::Command::new(&cfg.program)
+            .args(&cfg.args)
+            .spawn()
+            .with_context(|| format!("supervise: spawning {}", cfg.program.display()))?;
+        if let Some(pf) = &cfg.child_pid_file {
+            publish_pid(pf, child.id());
+        }
+        let status = child.wait().context("supervise: waiting for child")?;
+        if status.success() {
+            return Ok(());
+        }
+        restarts += 1;
+        if restarts > cfg.max_restarts {
+            bail!(
+                "supervise: child failed ({status}) and the restart budget \
+                 ({}) is spent",
+                cfg.max_restarts
+            );
+        }
+        let pause = policy.delay(restarts - 1);
+        eprintln!(
+            "supervise: child died ({status}); restart {restarts}/{} in {pause:?}",
+            cfg.max_restarts
+        );
+        std::thread::sleep(pause);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sh(script: &str) -> SupervisorConfig {
+        SupervisorConfig {
+            program: PathBuf::from("/bin/sh"),
+            args: vec!["-c".into(), script.into()],
+            max_restarts: 3,
+            restart_backoff: Duration::from_millis(10),
+            child_pid_file: None,
+        }
+    }
+
+    #[test]
+    fn clean_exit_ends_supervision() {
+        run_supervisor(&sh("exit 0")).unwrap();
+    }
+
+    #[test]
+    fn restart_budget_is_enforced() {
+        let err = run_supervisor(&sh("exit 7")).unwrap_err();
+        assert!(err.to_string().contains("restart budget"), "{err:#}");
+    }
+
+    #[test]
+    fn crash_then_success_recovers() {
+        // A marker file makes the first incarnation die and later ones
+        // succeed — the supervisor must restart through the crash.
+        let marker = std::env::temp_dir()
+            .join(format!("goffish-supervise-{}", std::process::id()));
+        std::fs::remove_file(&marker).ok();
+        let script = format!(
+            "if [ -e {m} ]; then exit 0; else touch {m}; exit 9; fi",
+            m = marker.display()
+        );
+        run_supervisor(&sh(&script)).unwrap();
+        std::fs::remove_file(&marker).ok();
+    }
+
+    #[test]
+    fn child_pid_file_is_published() {
+        let pf = std::env::temp_dir()
+            .join(format!("goffish-supervise-pid-{}", std::process::id()));
+        std::fs::remove_file(&pf).ok();
+        let mut cfg = sh("sleep 0.05; exit 0");
+        cfg.child_pid_file = Some(pf.clone());
+        run_supervisor(&cfg).unwrap();
+        let pid: u32 = std::fs::read_to_string(&pf).unwrap().trim().parse().unwrap();
+        assert!(pid > 0);
+        std::fs::remove_file(&pf).ok();
+    }
+}

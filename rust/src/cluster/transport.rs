@@ -22,10 +22,12 @@
 //! rejoin from the durable store without conflating crashes with
 //! application errors.
 
-use crate::cluster::net::{NetworkClock, NetworkModel};
+use crate::cluster::fault::{self, Action, FaultInjector};
 use crate::cluster::proto::{
-    read_msg, write_msg, CarryChunk, EpochAborted, MergeChunk, Msg, WireChunk,
+    write_msg, write_msg_corrupted, CarryChunk, EpochAborted, FrameError, FrameReader, MergeChunk,
+    Msg, WireChunk,
 };
+use crate::cluster::net::{NetworkClock, NetworkModel};
 use crate::graph::{SubgraphId, Timestep};
 use crate::util::wire::{Dec, Enc};
 use anyhow::{bail, Context, Result};
@@ -33,8 +35,9 @@ use std::collections::HashMap;
 use std::io::Write as _;
 use std::net::TcpStream;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Everything the engine knows at a superstep barrier, handed to the
 /// transport to fold into a global decision.
@@ -282,34 +285,201 @@ pub fn decode_carry_checkpoint(buf: &[u8]) -> Result<(Timestep, HashMap<Subgraph
     Ok((t, carry))
 }
 
+/// The read-timeout tick used as the liveness poll granularity: sockets
+/// are never left blocking unboundedly; every tick the reader re-checks
+/// its silence budget. See [`FrameReader`] for why a tick firing
+/// mid-frame is safe.
+pub const READ_TICK: Duration = Duration::from_millis(100);
+
+/// Knobs for [`TcpTransport`] beyond the connection itself.
+pub struct TcpTransportOptions {
+    /// Test hook: slow each barrier down so kill/rejoin tests can land a
+    /// SIGKILL mid-run deterministically.
+    pub step_delay: Duration,
+    /// Interval between outgoing [`Msg::Heartbeat`]s (zero = disabled).
+    pub heartbeat: Duration,
+    /// Abort the epoch after this much coordinator silence while waiting
+    /// for a lockstep response (zero = wait forever, the PR 6 behavior).
+    pub round_deadline: Duration,
+    /// This worker's partition id (names its injection points).
+    pub part: usize,
+    /// Fault injection plan, if any (`--fault-plan`).
+    pub injector: Option<Arc<FaultInjector>>,
+}
+
+impl Default for TcpTransportOptions {
+    fn default() -> Self {
+        TcpTransportOptions {
+            step_delay: Duration::ZERO,
+            heartbeat: Duration::from_millis(500),
+            round_deadline: Duration::from_secs(30),
+            part: 0,
+            injector: None,
+        }
+    }
+}
+
+/// Outgoing-heartbeat thread state: stop flag + join handle.
+struct HeartbeatPump {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for HeartbeatPump {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
 /// The worker side of the socket transport: a request/response channel
 /// to the coordinator plus the durable bits (carry checkpoints, lag
 /// beacon) that make crash/rejoin and cross-process backpressure work.
+///
+/// The stream is split into cloned writer/reader halves so a heartbeat
+/// thread can keep announcing liveness (frame-atomically, under the
+/// writer mutex) while the barrier thread is blocked inside a long
+/// compute step or a lockstep wait.
 pub struct TcpTransport {
-    conn: Mutex<TcpStream>,
+    writer: Arc<Mutex<TcpStream>>,
+    reader: Mutex<FrameReader<TcpStream>>,
     /// This worker's `part-N/` directory (checkpoints + beacon).
     part_dir: PathBuf,
     beacon: LagBeacon,
-    /// Test hook: slow each barrier down so kill/rejoin tests can land a
-    /// SIGKILL mid-run deterministically.
     step_delay: Duration,
+    round_deadline: Duration,
+    /// Injection-point prefix, e.g. `host1`.
+    point: String,
+    injector: Option<Arc<FaultInjector>>,
+    /// Kept for its Drop (stops and joins the heartbeat thread).
+    _heartbeat: Option<HeartbeatPump>,
+}
+
+fn lost(e: impl std::fmt::Display) -> anyhow::Error {
+    anyhow::Error::new(EpochAborted(format!("connection lost: {e}")))
+}
+
+/// Send one message through a shared writer half, applying the fault
+/// plan at `<point>.send.<Label>`. Returns an [`EpochAborted`] error if
+/// an injected fault severed the connection.
+pub(crate) fn send_on(
+    writer: &Mutex<TcpStream>,
+    point: &str,
+    injector: Option<&FaultInjector>,
+    msg: &Msg,
+) -> Result<()> {
+    let mut w = writer.lock().unwrap();
+    if let Some(inj) = injector {
+        let action = inj.check(&format!("{point}.send.{}", msg.label()));
+        if action == Action::Corrupt {
+            return write_msg_corrupted(&mut *w, msg).map_err(lost);
+        }
+        if fault::perform(&action) {
+            let _ = w.shutdown(std::net::Shutdown::Both);
+            return Err(lost("fault injection severed the connection"));
+        }
+    }
+    write_msg(&mut *w, msg).map_err(lost)
 }
 
 impl TcpTransport {
-    pub fn new(conn: TcpStream, part_dir: PathBuf, step_delay: Duration) -> TcpTransport {
+    pub fn new(conn: TcpStream, part_dir: PathBuf, opts: TcpTransportOptions) -> TcpTransport {
         let beacon = LagBeacon::new(&part_dir);
-        TcpTransport { conn: Mutex::new(conn), part_dir, beacon, step_delay }
+        let point = format!("host{}", opts.part);
+        // Ticked reads + bounded writes: no socket call blocks forever.
+        let _ = conn.set_read_timeout(Some(READ_TICK));
+        let write_budget =
+            if opts.round_deadline.is_zero() { None } else { Some(opts.round_deadline) };
+        let _ = conn.set_write_timeout(write_budget);
+        let writer = Arc::new(Mutex::new(conn.try_clone().expect("cloning socket")));
+        let heartbeat = if opts.heartbeat.is_zero() {
+            None
+        } else {
+            let stop = Arc::new(AtomicBool::new(false));
+            let w = Arc::clone(&writer);
+            let inj = opts.injector.clone();
+            let pt = point.clone();
+            let interval = opts.heartbeat;
+            let stop2 = Arc::clone(&stop);
+            let thread = std::thread::spawn(move || {
+                let mut seq = 0u64;
+                let mut last = Instant::now();
+                while !stop2.load(Ordering::Relaxed) {
+                    std::thread::sleep(interval.min(Duration::from_millis(100)));
+                    if last.elapsed() < interval {
+                        continue;
+                    }
+                    last = Instant::now();
+                    seq += 1;
+                    if send_on(&w, &pt, inj.as_deref(), &Msg::Heartbeat { seq }).is_err() {
+                        // The barrier thread will see the dead socket;
+                        // nothing useful to do here.
+                        break;
+                    }
+                }
+            });
+            Some(HeartbeatPump { stop, thread: Some(thread) })
+        };
+        TcpTransport {
+            writer,
+            reader: Mutex::new(FrameReader::new(conn)),
+            part_dir,
+            beacon,
+            step_delay: opts.step_delay,
+            round_deadline: opts.round_deadline,
+            point,
+            injector: opts.injector,
+            _heartbeat: heartbeat,
+        }
     }
 
-    /// One lockstep round trip. Connection loss and coordinator aborts
-    /// both become [`EpochAborted`]; a coordinator `Fatal` stays a plain
-    /// error (the run is over).
+    /// Receive the next lockstep frame: skip inbound heartbeats (they
+    /// reset the silence clock), reread once after a CRC mismatch, and
+    /// abort the epoch when the coordinator has been silent longer than
+    /// the round deadline.
+    fn recv(&self) -> Result<Msg> {
+        let mut r = self.reader.lock().unwrap();
+        if let Some(inj) = &self.injector {
+            let action = inj.check(&format!("{}.recv", self.point));
+            if fault::perform(&action) {
+                let _ = r.get_mut().shutdown(std::net::Shutdown::Both);
+                return Err(lost("fault injection severed the connection"));
+            }
+        }
+        let mut silent_since = Instant::now();
+        let mut crc_retried = false;
+        loop {
+            match r.read_frame() {
+                Ok(Msg::Heartbeat { .. }) => silent_since = Instant::now(),
+                Ok(m) => return Ok(m),
+                Err(FrameError::Timeout) => {
+                    if !self.round_deadline.is_zero()
+                        && silent_since.elapsed() >= self.round_deadline
+                    {
+                        return Err(lost(format!(
+                            "coordinator silent for {:?} (round deadline)",
+                            self.round_deadline
+                        )));
+                    }
+                }
+                Err(FrameError::CrcMismatch) if !crc_retried => {
+                    // The stream is still frame-synced: the corrupt
+                    // frame is consumed, the next one may be fine.
+                    crc_retried = true;
+                }
+                Err(e) => return Err(lost(e)),
+            }
+        }
+    }
+
+    /// One lockstep round trip. Connection loss, round-deadline expiry,
+    /// and coordinator aborts all become [`EpochAborted`]; a coordinator
+    /// `Fatal` stays a plain error (the run is over).
     fn rpc(&self, msg: &Msg) -> Result<Msg> {
-        let mut conn = self.conn.lock().unwrap();
-        let lost =
-            |e: anyhow::Error| anyhow::Error::new(EpochAborted(format!("connection lost: {e:#}")));
-        write_msg(&mut *conn, msg).map_err(lost)?;
-        match read_msg(&mut *conn).map_err(lost)? {
+        send_on(&self.writer, &self.point, self.injector.as_deref(), msg)?;
+        match self.recv()? {
             Msg::Abort { reason } => Err(anyhow::Error::new(EpochAborted(reason))),
             Msg::Fatal { reason } => bail!("coordinator: {reason}"),
             m => Ok(m),

@@ -30,8 +30,12 @@
 //! (`tests/distributed.rs`).
 
 use crate::apps::{PageRankApp, SsspApp};
-use crate::cluster::proto::{read_msg, write_msg, EpochAborted, Msg};
-use crate::cluster::transport::{load_checkpoint, TcpTransport};
+use crate::cluster::fault::{self, FaultInjector, FaultPlan};
+use crate::cluster::proto::{EpochAborted, FrameError, FrameReader, Msg};
+use crate::cluster::retry::RetryPolicy;
+use crate::cluster::transport::{
+    load_checkpoint, send_on, TcpTransport, TcpTransportOptions, READ_TICK,
+};
 use crate::cluster::ClusterSpec;
 use crate::gofs::{Store, StoreOptions};
 use crate::gopher::engine::{compute_edge_cut_pct, DistRun};
@@ -43,7 +47,7 @@ use std::collections::HashMap;
 use std::fmt::Write as _;
 use std::net::TcpStream;
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// An application plus its canonical per-timestep emission — the string
@@ -166,6 +170,17 @@ pub struct HostConfig {
     /// Test hook: sleep this long before every superstep barrier so
     /// kill/rejoin tests can land a SIGKILL mid-run.
     pub step_delay_ms: u64,
+    /// Interval between liveness heartbeats to the coordinator (0 = off).
+    pub heartbeat_ms: u64,
+    /// Abort the epoch after this much coordinator silence (0 = wait
+    /// forever, the pre-liveness behavior).
+    pub round_deadline_ms: u64,
+    /// Base delay of the exponential connect/rejoin backoff.
+    pub retry_base_ms: u64,
+    /// Give up after this many epoch rejoins (0 = unlimited).
+    pub max_rejoins: u32,
+    /// Deterministic fault plan (`--fault-plan`); None = no injection.
+    pub fault_plan: Option<PathBuf>,
 }
 
 impl Default for HostConfig {
@@ -178,36 +193,84 @@ impl Default for HostConfig {
             workers: 0,
             connect_timeout_s: 30,
             step_delay_ms: 0,
+            heartbeat_ms: 500,
+            round_deadline_ms: 30_000,
+            retry_base_ms: 100,
+            max_rejoins: 0,
+            fault_plan: None,
         }
     }
 }
 
-fn connect(addr: &str, budget: Duration) -> Result<TcpStream> {
+/// Dial the coordinator with exponential backoff + jitter inside a total
+/// budget. A fault-plan `partition` blackout makes attempts fail without
+/// dialing; the `host<P>.connect` point can delay or kill an attempt.
+fn connect(
+    addr: &str,
+    budget: Duration,
+    policy: &RetryPolicy,
+    injector: Option<&FaultInjector>,
+    point: &str,
+) -> Result<TcpStream> {
     let t0 = Instant::now();
+    let mut attempt = 0u32;
     loop {
-        match TcpStream::connect(addr) {
-            Ok(s) => {
-                s.set_nodelay(true).ok();
-                return Ok(s);
+        let blackout = injector.map(|i| i.blackout_active()).unwrap_or(false);
+        let severed = match injector {
+            Some(i) if !blackout => fault::perform(&i.check(point)),
+            _ => false,
+        };
+        if !blackout && !severed {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    s.set_nodelay(true).ok();
+                    return Ok(s);
+                }
+                Err(e) if t0.elapsed() >= budget => {
+                    return Err(e).with_context(|| format!("connecting to coordinator {addr}"))
+                }
+                Err(_) => {}
             }
-            Err(_) if t0.elapsed() < budget => {
-                std::thread::sleep(Duration::from_millis(100));
-            }
-            Err(e) => {
-                return Err(e).with_context(|| format!("connecting to coordinator {addr}"))
-            }
+        } else if t0.elapsed() >= budget {
+            bail!("connecting to coordinator {addr}: fault injection blocked every attempt");
         }
+        // Exponential backoff, jittered per attempt, capped by the
+        // policy so the budget check above stays responsive.
+        std::thread::sleep(policy.delay(attempt).min(Duration::from_secs(1)));
+        attempt = attempt.saturating_add(1);
     }
 }
 
 /// Run this partition's worker until the run completes ([`Ok`]) or hits
-/// an unrecoverable error. [`EpochAborted`] triggers a silent rejoin.
+/// an unrecoverable error. [`EpochAborted`] triggers a rejoin, paced by
+/// exponential backoff and capped by `max_rejoins`.
 pub fn run_host(cfg: &HostConfig) -> Result<()> {
+    // One injector for the whole process: `nth` counters must span
+    // epochs, or a rejoin would replay the same scheduled fault forever.
+    let injector = match &cfg.fault_plan {
+        Some(path) => Some(Arc::new(FaultInjector::new(FaultPlan::load(path)?))),
+        None => None,
+    };
+    let policy = RetryPolicy::connect(
+        Duration::from_millis(cfg.retry_base_ms.max(1)),
+        0,
+        0x9f0f ^ cfg.part as u64,
+    );
+    let mut rejoins = 0u32;
     loop {
-        match run_epoch(cfg) {
+        match run_epoch(cfg, injector.as_ref(), &policy) {
             Ok(()) => return Ok(()),
             Err(e) if e.downcast_ref::<EpochAborted>().is_some() => {
-                eprintln!("host {}: {e:#}; rejoining", cfg.part);
+                rejoins += 1;
+                if cfg.max_rejoins != 0 && rejoins > cfg.max_rejoins {
+                    return Err(e.context(format!(
+                        "host {}: giving up after {} rejoins",
+                        cfg.part, cfg.max_rejoins
+                    )));
+                }
+                let pause = policy.delay(rejoins.saturating_sub(1).min(6));
+                eprintln!("host {}: {e:#}; rejoin {rejoins} in {pause:?}", cfg.part);
+                std::thread::sleep(pause);
                 continue;
             }
             Err(e) => return Err(e),
@@ -216,7 +279,11 @@ pub fn run_host(cfg: &HostConfig) -> Result<()> {
 }
 
 /// One epoch: connect, handshake, run until commit-complete or abort.
-fn run_epoch(cfg: &HostConfig) -> Result<()> {
+fn run_epoch(
+    cfg: &HostConfig,
+    injector: Option<&Arc<FaultInjector>>,
+    policy: &RetryPolicy,
+) -> Result<()> {
     // Fresh store every epoch: a rejoin must read the durable state, not
     // a view cached before the crash.
     let store = Store::open(&cfg.root, cfg.part, cfg.store_opts.clone())?;
@@ -226,28 +293,71 @@ fn run_epoch(cfg: &HostConfig) -> Result<()> {
         store.shared().subgraphs.iter().map(|sg| sg.n_vertices() as u64).sum();
     let n_instances = store.n_instances() as u64;
 
-    let mut conn =
-        connect(&cfg.coordinator, Duration::from_secs(cfg.connect_timeout_s.max(1)))?;
-    write_msg(
-        &mut conn,
-        &Msg::Hello {
-            part: cfg.part as u32,
-            n_instances,
-            n_vertices,
-            sgids: sgids.iter().map(|s| s.0).collect(),
-        },
+    let point = format!("host{}", cfg.part);
+    let conn = connect(
+        &cfg.coordinator,
+        Duration::from_secs(cfg.connect_timeout_s.max(1)),
+        policy,
+        injector.map(Arc::as_ref),
+        &format!("{point}.connect"),
     )?;
-    // The Start may take a while (the coordinator waits for all hosts);
-    // a peer crash during the join window aborts the epoch like any
-    // other connection event.
-    let msg = match read_msg(&mut conn) {
-        Ok(Msg::Abort { reason }) => return Err(anyhow::Error::new(EpochAborted(reason))),
-        Ok(Msg::Fatal { reason }) => bail!("coordinator: {reason}"),
-        Ok(m) => m,
-        Err(e) => {
-            return Err(anyhow::Error::new(EpochAborted(format!(
-                "connection lost waiting for start: {e:#}"
-            ))))
+    // Ticked reads and bounded writes from the first byte: no unbounded
+    // blocking waits, even before the transport owns the stream.
+    conn.set_read_timeout(Some(READ_TICK)).ok();
+    if cfg.round_deadline_ms > 0 {
+        conn.set_write_timeout(Some(Duration::from_millis(cfg.round_deadline_ms))).ok();
+    }
+    let hello = Msg::Hello {
+        part: cfg.part as u32,
+        n_instances,
+        n_vertices,
+        sgids: sgids.iter().map(|s| s.0).collect(),
+    };
+    let conn = {
+        let guard = Mutex::new(conn);
+        send_on(&guard, &point, injector.map(Arc::as_ref), &hello)?;
+        guard.into_inner().unwrap()
+    };
+    // The Start may take a while (the coordinator waits for all hosts),
+    // but never silently: the coordinator heartbeats pending workers, so
+    // the round deadline bounds the silence here too. A peer crash
+    // during the join window aborts the epoch like any other connection
+    // event.
+    let mut conn = conn;
+    let msg = {
+        if let Some(inj) = injector {
+            if fault::perform(&inj.check(&format!("{point}.recv"))) {
+                return Err(anyhow::Error::new(EpochAborted(
+                    "fault injection severed the connection".into(),
+                )));
+            }
+        }
+        let deadline = Duration::from_millis(cfg.round_deadline_ms);
+        let mut fr = FrameReader::new(&mut conn);
+        let mut silent_since = Instant::now();
+        let mut crc_retried = false;
+        loop {
+            match fr.read_frame() {
+                Ok(Msg::Heartbeat { .. }) => silent_since = Instant::now(),
+                Ok(Msg::Abort { reason }) => {
+                    return Err(anyhow::Error::new(EpochAborted(reason)))
+                }
+                Ok(Msg::Fatal { reason }) => bail!("coordinator: {reason}"),
+                Ok(m) => break m,
+                Err(FrameError::Timeout) => {
+                    if !deadline.is_zero() && silent_since.elapsed() >= deadline {
+                        return Err(anyhow::Error::new(EpochAborted(format!(
+                            "coordinator silent for {deadline:?} waiting for start"
+                        ))));
+                    }
+                }
+                Err(FrameError::CrcMismatch) if !crc_retried => crc_retried = true,
+                Err(e) => {
+                    return Err(anyhow::Error::new(EpochAborted(format!(
+                        "connection lost waiting for start: {e}"
+                    ))))
+                }
+            }
         }
     };
     let label = msg.label();
@@ -320,7 +430,13 @@ fn run_epoch(cfg: &HostConfig) -> Result<()> {
     engine.set_transport(Arc::new(TcpTransport::new(
         conn,
         part_dir,
-        Duration::from_millis(cfg.step_delay_ms),
+        TcpTransportOptions {
+            step_delay: Duration::from_millis(cfg.step_delay_ms),
+            heartbeat: Duration::from_millis(cfg.heartbeat_ms),
+            round_deadline: Duration::from_millis(cfg.round_deadline_ms),
+            part: cfg.part,
+            injector: injector.cloned(),
+        },
     )));
     let edge_cut_pct = compute_edge_cut_pct(
         engine.stores().iter().map(|s| (cfg.part, s.as_ref())),

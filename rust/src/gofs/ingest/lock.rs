@@ -5,25 +5,42 @@
 //! standalone `goffish compact` re-packing sealed groups. Both mutate
 //! `meta.slice` and the group files, so exactly one may hold the
 //! collection at a time. [`WriterLock`] is the arbiter: an `O_EXCL`
-//! lock file at the collection root recording the holder's pid and
-//! role.
+//! lock file at the collection root recording the holder's pid, role,
+//! and a per-acquisition token.
 //!
 //! Staleness: a crashed writer leaves its lock file behind. Acquisition
 //! treats a lock as stale when the recorded pid no longer exists (probed
 //! via `/proc/<pid>` on Linux, the only platform the multi-process path
-//! targets) and atomically replaces it. Two concurrent stale takeovers
-//! resolve through the same `O_EXCL` race — exactly one wins.
+//! targets) and replaces it. The replacement must not be a bare
+//! `remove_file` — two contenders that both observed the same stale
+//! lock would otherwise race: the slower one's remove lands on the
+//! faster one's *fresh* lock and both end up believing they hold the
+//! collection. Instead a takeover first renames the lock aside to a
+//! unique tomb (atomic — exactly one rename of a given inode wins) and
+//! verifies the tomb holds the bytes it observed; a mismatch means it
+//! grabbed a fresh lock, which is put back untouched (same inode, via
+//! `hard_link`, which unlike rename cannot clobber an even newer lock).
+//! The `O_EXCL` create then arbitrates whoever cleared the path, a
+//! post-claim re-read audits the winner's identity, and `Drop` releases
+//! the file only when it still carries this holder's `pid role token`
+//! line.
 
 use anyhow::{bail, Context, Result};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 const LOCK_FILE: &str = ".writer.lock";
+
+/// Distinguishes acquisitions within one process (threads share a pid).
+static NEXT_TOKEN: AtomicU64 = AtomicU64::new(1);
 
 /// An exclusive collection-writer lease; released on drop.
 #[derive(Debug)]
 pub struct WriterLock {
     path: PathBuf,
+    /// The exact `pid role token` line we wrote — our lease identity.
+    body: String,
 }
 
 fn pid_alive(pid: u32) -> bool {
@@ -35,26 +52,67 @@ fn pid_alive(pid: u32) -> bool {
     Path::new(&format!("/proc/{pid}")).exists()
 }
 
-fn try_create(path: &Path, role: &str) -> std::io::Result<std::fs::File> {
+fn try_create(path: &Path, body: &str) -> std::io::Result<std::fs::File> {
     let mut f = std::fs::OpenOptions::new().write(true).create_new(true).open(path)?;
-    let _ = writeln!(f, "{} {role}", std::process::id());
-    let _ = f.flush();
+    f.write_all(body.as_bytes())?;
+    f.flush()?;
     Ok(f)
+}
+
+/// Claim the right to replace a stale lock: atomically move the file
+/// aside to a unique tomb, then check we moved the lock we `observed`
+/// and not one written by a faster contender in the meantime. Returns
+/// true when the takeover right was won and the path is clear.
+fn take_over_stale(path: &Path, observed: &str, token: u64) -> bool {
+    let tomb = path.with_extension(format!("tomb.{}.{token}", std::process::id()));
+    if std::fs::rename(path, &tomb).is_err() {
+        // Someone else moved (or already replaced) it — retry the create.
+        return false;
+    }
+    let moved = std::fs::read_to_string(&tomb).unwrap_or_default();
+    if moved == observed {
+        let _ = std::fs::remove_file(&tomb);
+        return true;
+    }
+    // We grabbed a fresh lock created between our read and our rename.
+    // Restore the same inode; hard_link fails (rather than clobbers) if
+    // yet another lock has appeared at the path since.
+    let _ = std::fs::hard_link(&tomb, path);
+    let _ = std::fs::remove_file(&tomb);
+    false
 }
 
 impl WriterLock {
     /// Acquire the writer lock for the collection at `root`, identifying
     /// this holder as `role` (e.g. `"append"`, `"compact"`) in the lock
     /// file for diagnostics. Fails fast — no blocking — when a live
-    /// process holds it; silently replaces a stale (dead-pid) lock.
+    /// process holds it; replaces a stale (dead-pid) lock through the
+    /// verified-takeover protocol above.
     pub fn acquire(root: &Path, role: &str) -> Result<WriterLock> {
         let path = root.join(LOCK_FILE);
-        for _ in 0..2 {
-            match try_create(&path, role) {
-                Ok(_) => return Ok(WriterLock { path }),
+        let token = NEXT_TOKEN.fetch_add(1, Ordering::Relaxed);
+        let body = format!("{} {role} {token}\n", std::process::id());
+        for _ in 0..3 {
+            match try_create(&path, &body) {
+                Ok(_) => {
+                    // Post-claim audit: O_EXCL guarantees we created the
+                    // file, but a contender violating the takeover
+                    // protocol could still have swapped it; holding a
+                    // phantom lease would corrupt the collection.
+                    let seen = std::fs::read_to_string(&path).unwrap_or_default();
+                    if seen != body {
+                        bail!(
+                            "writer lock {} was overwritten right after \
+                             acquisition (found {seen:?}); refusing a \
+                             contested lease",
+                            path.display()
+                        );
+                    }
+                    return Ok(WriterLock { path, body });
+                }
                 Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
-                    let body = std::fs::read_to_string(&path).unwrap_or_default();
-                    let mut it = body.split_whitespace();
+                    let observed = std::fs::read_to_string(&path).unwrap_or_default();
+                    let mut it = observed.split_whitespace();
                     let pid: Option<u32> = it.next().and_then(|p| p.parse().ok());
                     let holder_role = it.next().unwrap_or("?").to_string();
                     match pid {
@@ -65,10 +123,10 @@ impl WriterLock {
                             path.display()
                         ),
                         _ => {
-                            // Dead holder (or unreadable file): clear and
-                            // retry once; the O_EXCL create arbitrates
-                            // concurrent takeovers.
-                            let _ = std::fs::remove_file(&path);
+                            // Dead holder (or unreadable file): win the
+                            // takeover or observe the new holder on the
+                            // next pass.
+                            let _ = take_over_stale(&path, &observed, token);
                         }
                     }
                 }
@@ -90,7 +148,13 @@ impl WriterLock {
 
 impl Drop for WriterLock {
     fn drop(&mut self) {
-        let _ = std::fs::remove_file(&self.path);
+        // Release only our own lease: if the file no longer carries our
+        // identity line, some contender owns it now — leave it alone.
+        if let Ok(seen) = std::fs::read_to_string(&self.path) {
+            if seen == self.body {
+                let _ = std::fs::remove_file(&self.path);
+            }
+        }
     }
 }
 
@@ -120,12 +184,12 @@ mod tests {
     fn stale_lock_from_a_dead_pid_is_replaced() {
         let d = tmp("stale");
         // Pid 0 is never a live user process (and /proc/0 does not exist).
-        std::fs::write(d.join(LOCK_FILE), "0 append\n").unwrap();
+        std::fs::write(d.join(LOCK_FILE), "0 append 1\n").unwrap();
         let l = WriterLock::acquire(&d, "compact");
         if Path::new("/proc").is_dir() {
             let l = l.unwrap();
             let body = std::fs::read_to_string(l.path()).unwrap();
-            assert!(body.ends_with("compact\n"));
+            assert!(body.contains(" compact "), "{body:?}");
         } else {
             // No /proc: staleness cannot be probed, the lock holds.
             assert!(l.is_err());
@@ -138,6 +202,69 @@ mod tests {
         let d = tmp("garbage");
         std::fs::write(d.join(LOCK_FILE), "not-a-pid\n").unwrap();
         WriterLock::acquire(&d, "append").unwrap();
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    /// The deterministic replay of the takeover race: B observed the
+    /// stale lock, but A replaced it first. B's takeover step must
+    /// detect the swap, restore A's lock file byte-for-byte, and lose.
+    #[test]
+    fn late_takeover_detects_fresh_lock_and_restores_it() {
+        if !Path::new("/proc").is_dir() {
+            return;
+        }
+        let d = tmp("race");
+        let stale = "0 append 1\n";
+        std::fs::write(d.join(LOCK_FILE), stale).unwrap();
+        let a = WriterLock::acquire(&d, "append").unwrap();
+        let a_body = std::fs::read_to_string(a.path()).unwrap();
+        assert_ne!(a_body, stale);
+        // B runs its takeover with the body it read before A's claim.
+        assert!(!take_over_stale(&d.join(LOCK_FILE), stale, u64::MAX));
+        assert_eq!(std::fs::read_to_string(d.join(LOCK_FILE)).unwrap(), a_body);
+        // A's lease is intact, so its release removes the file.
+        drop(a);
+        assert!(!d.join(LOCK_FILE).exists());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    /// Drop must not release a lock the process no longer owns.
+    #[test]
+    fn drop_leaves_a_replaced_lock_alone() {
+        if !Path::new("/proc").is_dir() {
+            return;
+        }
+        let d = tmp("drop");
+        let a = WriterLock::acquire(&d, "append").unwrap();
+        let usurper = "999999999 compact 7\n";
+        std::fs::write(d.join(LOCK_FILE), usurper).unwrap();
+        drop(a);
+        assert_eq!(std::fs::read_to_string(d.join(LOCK_FILE)).unwrap(), usurper);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    /// Many threads discover the same stale lock at once: exactly one
+    /// acquisition may succeed, and the survivor's lock is the one on
+    /// disk.
+    #[test]
+    fn concurrent_stale_takeover_has_exactly_one_winner() {
+        if !Path::new("/proc").is_dir() {
+            return;
+        }
+        let d = tmp("swarm");
+        std::fs::write(d.join(LOCK_FILE), "0 append 1\n").unwrap();
+        let locks: Vec<Option<WriterLock>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| s.spawn(|| WriterLock::acquire(&d, "compact").ok()))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let winners: Vec<&WriterLock> = locks.iter().flatten().collect();
+        assert_eq!(winners.len(), 1, "stale takeover must have one winner");
+        let body = std::fs::read_to_string(d.join(LOCK_FILE)).unwrap();
+        assert_eq!(body, winners[0].body);
+        drop(locks);
+        assert!(!d.join(LOCK_FILE).exists());
         std::fs::remove_dir_all(&d).unwrap();
     }
 }

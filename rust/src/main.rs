@@ -45,6 +45,7 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("coordinator") => cmd_coordinator(&args),
         Some("host") => cmd_host(&args),
+        Some("supervise") => cmd_supervise(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("help") | None => {
             print!("{USAGE}");
@@ -83,10 +84,17 @@ USAGE:
   goffish coordinator --hosts N --app sssp|pagerank
                   [--listen 127.0.0.1:0 --port-file FILE --source <ext-id>
                    --max-supersteps 10000 --max-epochs 64 --out FILE
-                   --poll-ms 25 --idle-polls 40 --follow]
+                   --poll-ms 25 --idle-polls 40 --follow
+                   --heartbeat-ms 500 --round-deadline-ms 30000
+                   --join-deadline-ms 60000 --fault-plan FILE]
   goffish host    --store DIR --part P --connect HOST:PORT
                   [--cache 14 --cache-bytes 0 --workers 0
-                   --connect-timeout 30 --step-delay-ms 0 --real-disk]
+                   --connect-timeout 30 --step-delay-ms 0 --real-disk
+                   --heartbeat-ms 500 --round-deadline-ms 30000
+                   --retry-base-ms 100 --max-rejoins 0 --fault-plan FILE]
+  goffish supervise <host flags>
+                  [--max-restarts 5 --restart-backoff-ms 500
+                   --child-pid-file FILE]
   goffish inspect --store DIR
 
   `ingest --group-commit k` fsyncs the WALs once per k appends (crash may
@@ -110,7 +118,13 @@ USAGE:
   with --out) the canonical per-timestep output; each host owns exactly
   one partition directory of the collection. A killed host can be
   restarted with the same flags and rejoins from the durable store at
-  the last committed timestep.
+  the last committed timestep — or run it under `supervise`, which
+  respawns a crashed host automatically (with backoff, up to
+  --max-restarts). Heartbeats flow between barrier rounds on every
+  connection; a host or coordinator silent past --round-deadline-ms is
+  declared hung and the epoch aborts instead of hanging. --fault-plan
+  points at a deterministic fault-injection schedule (see docs/CLI.md)
+  used by the chaos tests; leave it unset in production.
 
   See docs/CLI.md for every flag, docs/ARCHITECTURE.md for the system
   contracts, and docs/BENCHMARKS.md for the perf runbook.
@@ -440,6 +454,10 @@ fn cmd_coordinator(args: &Args) -> Result<()> {
         follow_idle_polls: args.u64("idle-polls", defaults.follow_idle_polls),
         max_supersteps: args.u64("max-supersteps", defaults.max_supersteps),
         max_epochs: args.u64("max-epochs", defaults.max_epochs),
+        heartbeat_ms: args.u64("heartbeat-ms", defaults.heartbeat_ms),
+        round_deadline_ms: args.u64("round-deadline-ms", defaults.round_deadline_ms),
+        join_deadline_ms: args.u64("join-deadline-ms", defaults.join_deadline_ms),
+        fault_plan: args.get("fault-plan").map(PathBuf::from),
     };
     let output = run_coordinator(&cfg)?;
     match args.get("out") {
@@ -473,8 +491,48 @@ fn cmd_host(args: &Args) -> Result<()> {
         workers: args.usize("workers", 0),
         connect_timeout_s: args.u64("connect-timeout", 30),
         step_delay_ms: args.u64("step-delay-ms", 0),
+        heartbeat_ms: args.u64("heartbeat-ms", 500),
+        round_deadline_ms: args.u64("round-deadline-ms", 30_000),
+        retry_base_ms: args.u64("retry-base-ms", 100),
+        max_rejoins: args.u64("max-rejoins", 0) as u32,
+        fault_plan: args.get("fault-plan").map(PathBuf::from),
     };
     run_host(&cfg)
+}
+
+/// Supervised host: respawn a crashed `goffish host` automatically so a
+/// run survives K host failures without an operator in the loop
+/// (`cluster::supervisor`). All non-supervisor flags are forwarded to
+/// the child `host` invocation verbatim.
+fn cmd_supervise(args: &Args) -> Result<()> {
+    // Flags the supervisor itself consumes; everything else belongs to
+    // the child. All three take a value, so filtering drops pairs.
+    const OWN: [&str; 3] = ["max-restarts", "restart-backoff-ms", "child-pid-file"];
+    let mut child_args = vec!["host".to_string()];
+    let mut raw = std::env::args().skip(2).peekable();
+    while let Some(tok) = raw.next() {
+        if let Some(key) = tok.strip_prefix("--") {
+            if OWN.contains(&key) {
+                if matches!(raw.peek(), Some(next) if !next.starts_with("--")) {
+                    raw.next();
+                }
+                continue;
+            }
+        }
+        child_args.push(tok);
+    }
+    // Fail fast on a malformed host command before the first spawn.
+    args.require("store")?;
+    args.require("part")?;
+    args.require("connect")?;
+    let cfg = goffish::cluster::supervisor::SupervisorConfig {
+        program: std::env::current_exe().context("resolving goffish binary path")?,
+        args: child_args,
+        max_restarts: args.u64("max-restarts", 5) as u32,
+        restart_backoff: std::time::Duration::from_millis(args.u64("restart-backoff-ms", 500)),
+        child_pid_file: args.get("child-pid-file").map(PathBuf::from),
+    };
+    goffish::cluster::supervisor::run_supervisor(&cfg)
 }
 
 fn default_source(eng: &GopherEngine) -> u64 {

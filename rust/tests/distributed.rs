@@ -236,3 +236,202 @@ fn killed_host_rejoins_and_reproduces_the_batch_output() {
     assert_eq!(actual, expected, "kill + rejoin changed the run output");
     std::fs::remove_dir_all(&dir).unwrap();
 }
+
+/// A hung host — joined, then silent forever, no heartbeats — must be
+/// detected by the coordinator's round deadline and abort the run within
+/// bounded time, instead of wedging the barrier forever (the pre-PR 7
+/// behavior). The fake worker speaks just enough protocol to join.
+#[test]
+fn hung_host_is_detected_by_the_round_deadline() {
+    use goffish::cluster::proto::{read_msg, write_msg, Msg};
+    let dir = std::env::temp_dir().join(format!("goffish-dist-hang-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let port_file = dir.join("port");
+    let cfg = CoordinatorConfig {
+        n_hosts: 1,
+        listen: "127.0.0.1:0".to_string(),
+        port_file: Some(port_file.clone()),
+        app_name: "sssp".to_string(),
+        heartbeat_ms: 50,
+        round_deadline_ms: 400,
+        join_deadline_ms: 10_000,
+        max_epochs: 1,
+        ..Default::default()
+    };
+    let coord = std::thread::spawn(move || run_coordinator(&cfg));
+    let addr = format!("127.0.0.1:{}", wait_port(&port_file));
+    let hung = std::thread::spawn(move || {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        let hello =
+            Msg::Hello { part: 0, n_instances: 1, n_vertices: 4, sgids: vec![0, 1] };
+        write_msg(&mut s, &hello).unwrap();
+        // Absorb Start / heartbeats / the Abort, answer nothing, hold
+        // the socket open until the coordinator hangs up on us.
+        while read_msg(&mut s).is_ok() {}
+    });
+    let t0 = Instant::now();
+    let err = coord.join().unwrap().expect_err("a silent host must fail the run");
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "hang detection took {:?} — the deadline did not fire",
+        t0.elapsed()
+    );
+    assert!(err.to_string().contains("giving up"), "unexpected error: {err:#}");
+    hung.join().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Chaos acceptance, batch: a 2-host SSSP run where host 1 lives under
+/// `goffish supervise` with a seeded fault plan (send delays, a
+/// corrupted Superstep frame, a corrupted heartbeat) and is additionally
+/// SIGKILLed mid-run through the supervisor's child pid file. The
+/// supervisor must respawn it, the rejoin path must replay from the
+/// durable checkpoint, and the final output must be byte-identical to
+/// the failure-free in-process run.
+#[test]
+fn chaos_sssp_supervised_host_survives_kill_and_faults() {
+    let bin = env!("CARGO_BIN_EXE_goffish");
+    let (gen, dir) = deployed("chaos-sssp");
+    let params = sssp_params(&gen);
+    let expected = expected_output(&dir, "sssp", &params);
+    let port_file = dir.join("port");
+    let out_file = dir.join("out.txt");
+    let pid_file = dir.join("host1.pid");
+    let plan_file = dir.join("faults.plan");
+    std::fs::write(
+        &plan_file,
+        "seed 11\n\
+         on host1.send.Superstep nth 5 delay 40\n\
+         on host1.send.Superstep nth 9 corrupt\n\
+         on host1.send.Heartbeat nth 3 corrupt\n\
+         on host1.connect nth 2 delay 30\n",
+    )
+    .unwrap();
+
+    let mut coord = std::process::Command::new(bin)
+        .args(["coordinator", "--hosts", "2", "--app", "sssp"])
+        .args(["--source", &params[0].1, "--listen", "127.0.0.1:0"])
+        .args(["--heartbeat-ms", "100", "--round-deadline-ms", "2000"])
+        .args(["--join-deadline-ms", "60000"])
+        .arg("--port-file")
+        .arg(&port_file)
+        .arg("--out")
+        .arg(&out_file)
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .unwrap();
+    let addr = format!("127.0.0.1:{}", wait_port(&port_file));
+    let mut h0 = std::process::Command::new(bin)
+        .arg("host")
+        .arg("--store")
+        .arg(&dir)
+        .args(["--part", "0", "--connect", &addr, "--step-delay-ms", "25"])
+        .args(["--heartbeat-ms", "100", "--round-deadline-ms", "10000"])
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .unwrap();
+    let mut h1 = std::process::Command::new(bin)
+        .arg("supervise")
+        .arg("--store")
+        .arg(&dir)
+        .args(["--part", "1", "--connect", &addr, "--step-delay-ms", "25"])
+        .args(["--heartbeat-ms", "100", "--round-deadline-ms", "10000"])
+        .arg("--fault-plan")
+        .arg(&plan_file)
+        .args(["--max-restarts", "8", "--restart-backoff-ms", "100"])
+        .arg("--child-pid-file")
+        .arg(&pid_file)
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .unwrap();
+
+    // SIGKILL the *current* child (the supervisor republishes the pid
+    // after each respawn) once the run is under way.
+    std::thread::sleep(Duration::from_millis(450));
+    let pid = std::fs::read_to_string(&pid_file)
+        .expect("supervisor never published its child pid")
+        .trim()
+        .to_string();
+    let _ = std::process::Command::new("kill").args(["-9", &pid]).status().unwrap();
+
+    let status = wait_exit(&mut coord, Duration::from_secs(180));
+    let h0_status = wait_exit(&mut h0, Duration::from_secs(60));
+    let h1_status = wait_exit(&mut h1, Duration::from_secs(60));
+    assert!(status.success(), "coordinator exited with {status}");
+    assert!(h0_status.success(), "fault-free host exited with {h0_status}");
+    assert!(h1_status.success(), "supervised host exited with {h1_status}");
+
+    let actual = std::fs::read_to_string(&out_file).unwrap();
+    assert_eq!(actual, expected, "chaos SSSP output diverged from in-process");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Chaos acceptance, follow mode (PageRank, the `Independent` pool
+/// pattern): host 1's fault plan repeatedly kills its own process right
+/// before a Commit (`exit 70`, re-armed on every respawn because each
+/// incarnation evaluates the plan afresh), plus a delayed Superstep and
+/// a corrupted heartbeat. The supervisor keeps respawning it and the
+/// drained follow output must match the in-process run byte for byte.
+#[test]
+fn chaos_pagerank_follow_supervised_host_survives_repeated_crashes() {
+    let bin = env!("CARGO_BIN_EXE_goffish");
+    let (_gen, dir) = deployed("chaos-follow");
+    let expected = expected_output(&dir, "pagerank", &[]);
+    let port_file = dir.join("port");
+    let out_file = dir.join("out.txt");
+    let plan_file = dir.join("faults.plan");
+    std::fs::write(
+        &plan_file,
+        "seed 23\n\
+         on host1.send.Superstep nth 6 delay 40\n\
+         on host1.send.Heartbeat nth 2 corrupt\n\
+         on host1.send.Commit nth 4 exit 70\n",
+    )
+    .unwrap();
+
+    let mut coord = std::process::Command::new(bin)
+        .args(["coordinator", "--hosts", "2", "--app", "pagerank", "--follow"])
+        .args(["--listen", "127.0.0.1:0", "--poll-ms", "5", "--idle-polls", "40"])
+        .args(["--heartbeat-ms", "100", "--round-deadline-ms", "5000"])
+        .arg("--port-file")
+        .arg(&port_file)
+        .arg("--out")
+        .arg(&out_file)
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .unwrap();
+    let addr = format!("127.0.0.1:{}", wait_port(&port_file));
+    let mut h0 = std::process::Command::new(bin)
+        .arg("host")
+        .arg("--store")
+        .arg(&dir)
+        .args(["--part", "0", "--connect", &addr, "--step-delay-ms", "10"])
+        .args(["--heartbeat-ms", "100", "--round-deadline-ms", "10000"])
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .unwrap();
+    let mut h1 = std::process::Command::new(bin)
+        .arg("supervise")
+        .arg("--store")
+        .arg(&dir)
+        .args(["--part", "1", "--connect", &addr, "--step-delay-ms", "10"])
+        .args(["--heartbeat-ms", "100", "--round-deadline-ms", "10000"])
+        .arg("--fault-plan")
+        .arg(&plan_file)
+        .args(["--max-restarts", "10", "--restart-backoff-ms", "100"])
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .unwrap();
+
+    let status = wait_exit(&mut coord, Duration::from_secs(180));
+    let h0_status = wait_exit(&mut h0, Duration::from_secs(60));
+    let h1_status = wait_exit(&mut h1, Duration::from_secs(60));
+    assert!(status.success(), "coordinator exited with {status}");
+    assert!(h0_status.success(), "fault-free host exited with {h0_status}");
+    assert!(h1_status.success(), "supervised host exited with {h1_status}");
+
+    let actual = std::fs::read_to_string(&out_file).unwrap();
+    assert_eq!(actual, expected, "chaos follow output diverged from in-process");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

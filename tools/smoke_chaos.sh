@@ -1,0 +1,90 @@
+#!/usr/bin/env bash
+# Chaos smoke: the 2-host loopback SSSP run again, but under a seeded
+# fault plan — host 1 runs below `goffish supervise`, its fault plan
+# delays and corrupts frames and kills the process mid-run (`exit 70`,
+# the SIGKILL-equivalent from inside), and the supervisor respawns it.
+# The coordinator runs with tight heartbeats and round deadlines so a
+# wedged round aborts the epoch instead of hanging the job. The final
+# distributed output must still agree with the fault-free in-process
+# run — recovery has to be invisible in the result.
+#
+# Usage: tools/smoke_chaos.sh  (after `cd rust && cargo build --release`)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=rust/target/release/goffish
+if [ ! -x "$BIN" ]; then
+    echo "error: $BIN not built (cd rust && cargo build --release)" >&2
+    exit 1
+fi
+
+WORK=$(mktemp -d)
+cleanup() {
+    kill "$(jobs -p)" 2>/dev/null || true
+    rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+STORE=$WORK/tr
+"$BIN" deploy --dataset tr --out "$STORE" --parts 2 --bins 4 --pack 3 \
+    --vertices 2000 --vantage 3 --instances 8 --traces 300
+
+# Fault-free in-process reference.
+RUN_OUT=$("$BIN" run --store "$STORE" --app sssp)
+echo "$RUN_OUT"
+SOURCE=$(sed -n 's/.*sssp from \([0-9]*\):.*/\1/p' <<<"$RUN_OUT")
+EXPECTED=$(sed -n 's|.*sssp from [0-9]*: \([0-9]*\)/.*|\1|p' <<<"$RUN_OUT")
+LAST_T=$(sed -n 's/.*reachable by t=\([0-9]*\).*/\1/p' <<<"$RUN_OUT")
+if [ -z "$SOURCE" ] || [ -z "$EXPECTED" ] || [ -z "$LAST_T" ]; then
+    echo "error: could not parse the in-process run summary" >&2
+    exit 1
+fi
+
+# The seeded fault schedule for host 1 (deterministic; counters reset in
+# each respawned incarnation, so `exit` fires once per life until the
+# run outlives the remaining commits).
+cat >"$WORK/faults.plan" <<'EOF'
+seed 42
+on host1.send.Superstep nth 4 delay 40
+on host1.send.Heartbeat nth 2 corrupt
+on host1.send.Commit    nth 3 exit 70
+on host1.connect        nth 2 delay 25
+EOF
+
+"$BIN" coordinator --hosts 2 --app sssp --source "$SOURCE" \
+    --listen 127.0.0.1:0 --port-file "$WORK/port" --out "$WORK/dist.out" \
+    --heartbeat-ms 100 --round-deadline-ms 5000 --join-deadline-ms 120000 &
+COORD=$!
+for _ in $(seq 1 200); do
+    [ -f "$WORK/port" ] && break
+    sleep 0.1
+done
+PORT=$(cat "$WORK/port")
+"$BIN" host --store "$STORE" --part 0 --connect "127.0.0.1:$PORT" \
+    --step-delay-ms 10 --heartbeat-ms 100 &
+H0=$!
+"$BIN" supervise --store "$STORE" --part 1 --connect "127.0.0.1:$PORT" \
+    --step-delay-ms 10 --heartbeat-ms 100 \
+    --fault-plan "$WORK/faults.plan" \
+    --max-restarts 10 --restart-backoff-ms 100 \
+    --child-pid-file "$WORK/host1.pid" &
+H1=$!
+wait "$COORD" "$H0" "$H1"
+
+# Same agreement check as the fault-free smoke: full timestep coverage
+# and the final-timestep reachable total.
+TIMESTEPS=$(cut -d' ' -f1 "$WORK/dist.out" | sort -u | wc -l)
+if [ "$TIMESTEPS" -ne 8 ]; then
+    echo "error: chaos output covers $TIMESTEPS timesteps, expected 8" >&2
+    exit 1
+fi
+GOT=$(awk -v want="t=$LAST_T" \
+    '$1 == want { split($3, a, "="); s += a[2] } END { print s + 0 }' \
+    "$WORK/dist.out")
+if [ "$GOT" != "$EXPECTED" ]; then
+    echo "error: chaos SSSP reached $GOT vertices at t=$LAST_T," \
+         "in-process reached $EXPECTED" >&2
+    exit 1
+fi
+echo "smoke ok: 2-host chaos SSSP (supervised crash + delays + corrupt frames)" \
+     "matches in-process ($GOT/$EXPECTED reachable at t=$LAST_T)"
