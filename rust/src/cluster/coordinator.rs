@@ -215,6 +215,16 @@ fn join_hosts(
     let mut conns: Vec<Option<(TcpStream, HelloInfo)>> = (0..n).map(|_| None).collect();
     let heartbeat = Duration::from_millis(cfg.heartbeat_ms);
     let join_deadline = Duration::from_millis(cfg.join_deadline_ms);
+    // The post-connect Hello gets the same patience as any other
+    // lockstep wait; with deadlines disabled, fall back to a bounded
+    // default so a silent dialer can't stall the accept loop forever.
+    let hello_budget = if cfg.round_deadline_ms > 0 {
+        Duration::from_millis(cfg.round_deadline_ms)
+    } else if cfg.join_deadline_ms > 0 {
+        Duration::from_millis(cfg.join_deadline_ms)
+    } else {
+        Duration::from_secs(5)
+    };
     let t0 = Instant::now();
     let mut last_beat = Instant::now();
     listener.set_nonblocking(true).context("making the join listener pollable")?;
@@ -264,7 +274,7 @@ fn join_hosts(
         if cfg.round_deadline_ms > 0 {
             s.set_write_timeout(Some(Duration::from_millis(cfg.round_deadline_ms))).ok();
         }
-        match read_hello(&mut s, Duration::from_secs(5)) {
+        match read_hello(&mut s, hello_budget) {
             Ok(Msg::Hello { part, n_instances, n_vertices, sgids }) => {
                 let part = part as usize;
                 if part >= n {
@@ -308,16 +318,21 @@ fn send_to(
     injector: Option<&FaultInjector>,
     msg: &Msg,
 ) -> std::result::Result<(), String> {
+    let action = match injector {
+        Some(inj) => inj.check(&format!("coord.send.{}.h{h}", msg.label())),
+        None => Action::None,
+    };
+    // Delay/halfopen sleeps run *before* the connection mutex is taken:
+    // the heartbeat ticker shares these locks, so a long sleep under one
+    // would also silence heartbeats to every healthy host.
+    let sever = fault::perform(&action);
     let mut s = c.lock().unwrap();
-    if let Some(inj) = injector {
-        let action = inj.check(&format!("coord.send.{}.h{h}", msg.label()));
-        if action == Action::Corrupt {
-            return write_msg_corrupted(&mut *s, msg).map_err(|e| format!("host {h}: {e:#}"));
-        }
-        if fault::perform(&action) {
-            let _ = s.shutdown(Shutdown::Both);
-            return Err(format!("host {h}: fault injection severed the connection"));
-        }
+    if sever {
+        let _ = s.shutdown(Shutdown::Both);
+        return Err(format!("host {h}: fault injection severed the connection"));
+    }
+    if action == Action::Corrupt {
+        return write_msg_corrupted(&mut *s, msg).map_err(|e| format!("host {h}: {e:#}"));
     }
     write_msg(&mut *s, msg).map_err(|e| format!("host {h}: {e:#}"))
 }
@@ -365,8 +380,37 @@ impl HeartbeatTicker {
                 last = Instant::now();
                 seq += 1;
                 for (h, c) in conns.iter().enumerate() {
-                    // Failures are left for the reader threads to report.
-                    let _ = send_to(c, h, injector.as_deref(), &Msg::Heartbeat { seq });
+                    let action = injector
+                        .as_deref()
+                        .map(|i| i.check(&format!("coord.send.Heartbeat.h{h}")))
+                        .unwrap_or(Action::None);
+                    match action {
+                        // Sleeping here would stall the whole ticker and
+                        // silence heartbeats to every *other* host, and a
+                        // wedged or delayed heartbeat is just silence —
+                        // skip this host's beat instead.
+                        Action::Delay(_) | Action::HalfOpen(_) => continue,
+                        Action::Drop | Action::Partition(_) => {
+                            if let Ok(s) = c.try_lock() {
+                                let _ = s.shutdown(Shutdown::Both);
+                            }
+                            continue;
+                        }
+                        Action::Exit(code) => std::process::exit(code),
+                        Action::None | Action::Corrupt => {}
+                    }
+                    // A connection wedged mid-write (e.g. a blocked send
+                    // to a stalled host) must not block beats to the
+                    // rest; skip it and let its own deadline machinery
+                    // report the stall. Write failures are likewise left
+                    // for the reader threads to report.
+                    let Ok(mut s) = c.try_lock() else { continue };
+                    let hb = Msg::Heartbeat { seq };
+                    let _ = if action == Action::Corrupt {
+                        write_msg_corrupted(&mut *s, &hb)
+                    } else {
+                        write_msg(&mut *s, &hb)
+                    };
                 }
             }
         });
@@ -383,8 +427,16 @@ impl Drop for HeartbeatTicker {
     }
 }
 
-/// (epoch, host, message-or-connection-error) from a reader thread.
-type Event = (u64, usize, std::result::Result<Msg, String>);
+/// What a reader thread saw: a decoded frame, a consumed-but-corrupt
+/// frame (payload lost, stream still synced), or a dead connection.
+enum ReadEvent {
+    Frame(Msg),
+    Corrupt,
+    Lost(String),
+}
+
+/// (epoch, host, event) from a reader thread.
+type Event = (u64, usize, ReadEvent);
 
 /// Collect exactly one in-epoch message per host (lockstep round).
 ///
@@ -393,6 +445,13 @@ type Event = (u64, usize, std::result::Result<Msg, String>);
 /// `deadline` of silence is declared hung/partitioned and the round
 /// fails; a merely *slow* host keeps heartbeating and is waited on
 /// indefinitely.
+///
+/// Corruption: a corrupted frame for a host whose slot is still empty
+/// may have *been* its lockstep message, which is never retransmitted —
+/// so it arms a second deadline that heartbeats cannot push back. The
+/// deadline is disarmed if the real lockstep message arrives (the loss
+/// was only a heartbeat); with deadlines disabled the round fails
+/// immediately, because nothing else would bound the wait.
 fn collect_round(
     rx: &mpsc::Receiver<Event>,
     epoch: u64,
@@ -401,6 +460,7 @@ fn collect_round(
 ) -> std::result::Result<Vec<Msg>, String> {
     let mut slots: Vec<Option<Msg>> = (0..n).map(|_| None).collect();
     let mut last_heard: Vec<Instant> = (0..n).map(|_| Instant::now()).collect();
+    let mut corrupt_since: Vec<Option<Instant>> = (0..n).map(|_| None).collect();
     let mut got = 0usize;
     while got < n {
         let event = match rx.recv_timeout(READ_TICK) {
@@ -410,29 +470,50 @@ fn collect_round(
                 return Err("event channel closed".to_string())
             }
         };
-        if let Some((ep, host, res)) = event {
+        if let Some((ep, host, ev)) = event {
             if ep != epoch {
                 continue; // stale event from a torn-down epoch
             }
             last_heard[host] = Instant::now();
-            match res {
-                Ok(Msg::Heartbeat { .. }) => {} // liveness only
-                Ok(m) => {
+            match ev {
+                ReadEvent::Frame(Msg::Heartbeat { .. }) => {} // liveness only
+                ReadEvent::Frame(m) => {
                     if slots[host].is_some() {
                         return Err(format!("host {host} sent two messages in one round"));
                     }
                     slots[host] = Some(m);
+                    corrupt_since[host] = None; // the corrupted frame was a heartbeat
                     got += 1;
                 }
-                Err(e) => return Err(format!("host {host}: {e}")),
+                ReadEvent::Corrupt => {
+                    if slots[host].is_none() {
+                        if deadline.is_zero() {
+                            return Err(format!(
+                                "host {host}: corrupted frame in a lockstep round"
+                            ));
+                        }
+                        corrupt_since[host].get_or_insert_with(Instant::now);
+                    }
+                    // Slot already filled: a corrupted heartbeat; ignore.
+                }
+                ReadEvent::Lost(e) => return Err(format!("host {host}: {e}")),
             }
         }
         if !deadline.is_zero() {
             for host in 0..n {
-                if slots[host].is_none() && last_heard[host].elapsed() >= deadline {
+                if slots[host].is_some() {
+                    continue;
+                }
+                if last_heard[host].elapsed() >= deadline {
                     return Err(format!(
                         "host {host} silent for {deadline:?} (round deadline) — \
                          hung or partitioned"
+                    ));
+                }
+                if corrupt_since[host].is_some_and(|t| t.elapsed() >= deadline) {
+                    return Err(format!(
+                        "host {host}: no lockstep message within {deadline:?} of a \
+                         corrupted frame — the message itself may have been lost"
                     ));
                 }
             }
@@ -515,9 +596,9 @@ fn run_epoch(
     // One reader thread per connection feeds a single event channel;
     // writes stay on this thread (and the ticker). Epoch tags let
     // teardown discard stragglers from dead readers. Reader threads
-    // forward heartbeats (liveness events), absorb read-timeout ticks,
-    // and reread once after a CRC mismatch before declaring the peer
-    // corrupt.
+    // forward heartbeats (liveness events) and corrupt frames (so
+    // `collect_round` can bound the wait for a possibly-lost lockstep
+    // message), and absorb read-timeout ticks.
     let (tx, rx) = mpsc::channel();
     for (host, c) in conns.iter().enumerate() {
         let rc = match c.lock().unwrap().try_clone() {
@@ -531,19 +612,21 @@ fn run_epoch(
         let tx = tx.clone();
         std::thread::spawn(move || {
             let mut fr = FrameReader::new(rc);
-            let mut crc_retried = false;
             loop {
                 match fr.read_frame() {
                     Ok(m) => {
-                        crc_retried = false;
-                        if tx.send((epoch, host, Ok(m))).is_err() {
+                        if tx.send((epoch, host, ReadEvent::Frame(m))).is_err() {
                             return;
                         }
                     }
                     Err(FrameError::Timeout) => {}
-                    Err(FrameError::CrcMismatch) if !crc_retried => crc_retried = true,
+                    Err(FrameError::CrcMismatch) => {
+                        if tx.send((epoch, host, ReadEvent::Corrupt)).is_err() {
+                            return;
+                        }
+                    }
                     Err(e) => {
-                        let _ = tx.send((epoch, host, Err(e.to_string())));
+                        let _ = tx.send((epoch, host, ReadEvent::Lost(e.to_string())));
                         return;
                     }
                 }

@@ -40,8 +40,10 @@ pub const HEADER_LEN: usize = 12;
 ///   frame still incomplete. The [`FrameReader`] keeps its partial state,
 ///   so the caller may poll liveness and call `read_frame` again.
 /// * [`FrameError::CrcMismatch`] — header valid, payload fully consumed,
-///   checksum wrong. The stream is still frame-synced, so one reread is
-///   safe; a second mismatch means the peer or path is bad.
+///   checksum wrong. The stream is still frame-synced and may be read
+///   again — but the payload is gone and lockstep frames are never
+///   retransmitted, so callers awaiting a lockstep message must bound
+///   the wait with a deadline that later heartbeats cannot reset.
 /// * Everything else means the stream is dead or desynced: treat the
 ///   peer as lost.
 #[derive(Debug)]

@@ -370,16 +370,21 @@ pub(crate) fn send_on(
     injector: Option<&FaultInjector>,
     msg: &Msg,
 ) -> Result<()> {
+    let action = match injector {
+        Some(inj) => inj.check(&format!("{point}.send.{}", msg.label())),
+        None => Action::None,
+    };
+    // Delay/halfopen sleeps run *before* the writer lock is taken: the
+    // heartbeat pump shares this mutex, so sleeping under it would also
+    // silence the worker's liveness announcements.
+    let sever = fault::perform(&action);
     let mut w = writer.lock().unwrap();
-    if let Some(inj) = injector {
-        let action = inj.check(&format!("{point}.send.{}", msg.label()));
-        if action == Action::Corrupt {
-            return write_msg_corrupted(&mut *w, msg).map_err(lost);
-        }
-        if fault::perform(&action) {
-            let _ = w.shutdown(std::net::Shutdown::Both);
-            return Err(lost("fault injection severed the connection"));
-        }
+    if sever {
+        let _ = w.shutdown(std::net::Shutdown::Both);
+        return Err(lost("fault injection severed the connection"));
+    }
+    if action == Action::Corrupt {
+        return write_msg_corrupted(&mut *w, msg).map_err(lost);
     }
     write_msg(&mut *w, msg).map_err(lost)
 }
@@ -436,9 +441,16 @@ impl TcpTransport {
     }
 
     /// Receive the next lockstep frame: skip inbound heartbeats (they
-    /// reset the silence clock), reread once after a CRC mismatch, and
-    /// abort the epoch when the coordinator has been silent longer than
-    /// the round deadline.
+    /// reset the silence clock) and abort the epoch when the coordinator
+    /// has been silent longer than the round deadline.
+    ///
+    /// A CRC-corrupted frame is consumed (the stream stays synced) and
+    /// forgiven — it may have been a heartbeat — but it arms a
+    /// *non-resetting* deadline: the protocol never retransmits a
+    /// lockstep reply, so if the corrupted frame *was* the reply, the
+    /// coordinator's heartbeats must not keep this wait alive forever.
+    /// With deadlines disabled there is no timer to bound that wait, so
+    /// the mismatch severs immediately (abort + rejoin recovers).
     fn recv(&self) -> Result<Msg> {
         let mut r = self.reader.lock().unwrap();
         if let Some(inj) = &self.injector {
@@ -449,7 +461,7 @@ impl TcpTransport {
             }
         }
         let mut silent_since = Instant::now();
-        let mut crc_retried = false;
+        let mut corrupt_since: Option<Instant> = None;
         loop {
             match r.read_frame() {
                 Ok(Msg::Heartbeat { .. }) => silent_since = Instant::now(),
@@ -464,12 +476,22 @@ impl TcpTransport {
                         )));
                     }
                 }
-                Err(FrameError::CrcMismatch) if !crc_retried => {
-                    // The stream is still frame-synced: the corrupt
-                    // frame is consumed, the next one may be fine.
-                    crc_retried = true;
+                Err(FrameError::CrcMismatch) => {
+                    if self.round_deadline.is_zero() {
+                        return Err(lost(
+                            "corrupted frame while awaiting a lockstep reply",
+                        ));
+                    }
+                    corrupt_since.get_or_insert_with(Instant::now);
                 }
                 Err(e) => return Err(lost(e)),
+            }
+            if corrupt_since.is_some_and(|t| t.elapsed() >= self.round_deadline) {
+                return Err(lost(format!(
+                    "no lockstep reply within {:?} of a corrupted frame — \
+                     the reply itself may have been lost to corruption",
+                    self.round_deadline
+                )));
             }
         }
     }

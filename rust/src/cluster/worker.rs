@@ -335,7 +335,7 @@ fn run_epoch(
         let deadline = Duration::from_millis(cfg.round_deadline_ms);
         let mut fr = FrameReader::new(&mut conn);
         let mut silent_since = Instant::now();
-        let mut crc_retried = false;
+        let mut corrupt_since: Option<Instant> = None;
         loop {
             match fr.read_frame() {
                 Ok(Msg::Heartbeat { .. }) => silent_since = Instant::now(),
@@ -351,12 +351,29 @@ fn run_epoch(
                         ))));
                     }
                 }
-                Err(FrameError::CrcMismatch) if !crc_retried => crc_retried = true,
+                Err(FrameError::CrcMismatch) => {
+                    // Maybe a corrupted heartbeat — but maybe the Start
+                    // itself, which is never retransmitted. Forgive it
+                    // under a non-resetting deadline heartbeats cannot
+                    // push back; without a deadline, sever (rejoin
+                    // re-runs the handshake).
+                    if deadline.is_zero() {
+                        return Err(anyhow::Error::new(EpochAborted(
+                            "corrupted frame while waiting for start".to_string(),
+                        )));
+                    }
+                    corrupt_since.get_or_insert_with(Instant::now);
+                }
                 Err(e) => {
                     return Err(anyhow::Error::new(EpochAborted(format!(
                         "connection lost waiting for start: {e}"
                     ))))
                 }
+            }
+            if corrupt_since.is_some_and(|t| t.elapsed() >= deadline) {
+                return Err(anyhow::Error::new(EpochAborted(format!(
+                    "no start within {deadline:?} of a corrupted frame"
+                ))));
             }
         }
     };

@@ -4,26 +4,35 @@
 //! several writers at once: a streaming appender feeding it, and a
 //! standalone `goffish compact` re-packing sealed groups. Both mutate
 //! `meta.slice` and the group files, so exactly one may hold the
-//! collection at a time. [`WriterLock`] is the arbiter: an `O_EXCL`
-//! lock file at the collection root recording the holder's pid, role,
-//! and a per-acquisition token.
+//! collection at a time. [`WriterLock`] is the arbiter: a kernel
+//! advisory lock (`flock(2)`, exclusive and non-blocking) on a
+//! long-lived `.writer.lock` file at the collection root, whose
+//! contents record the holder's pid, role, and a per-acquisition token
+//! for diagnostics.
 //!
-//! Staleness: a crashed writer leaves its lock file behind. Acquisition
-//! treats a lock as stale when the recorded pid no longer exists (probed
-//! via `/proc/<pid>` on Linux, the only platform the multi-process path
-//! targets) and replaces it. The replacement must not be a bare
-//! `remove_file` — two contenders that both observed the same stale
-//! lock would otherwise race: the slower one's remove lands on the
-//! faster one's *fresh* lock and both end up believing they hold the
-//! collection. Instead a takeover first renames the lock aside to a
-//! unique tomb (atomic — exactly one rename of a given inode wins) and
-//! verifies the tomb holds the bytes it observed; a mismatch means it
-//! grabbed a fresh lock, which is put back untouched (same inode, via
-//! `hard_link`, which unlike rename cannot clobber an even newer lock).
-//! The `O_EXCL` create then arbitrates whoever cleared the path, a
-//! post-claim re-read audits the winner's identity, and `Drop` releases
-//! the file only when it still carries this holder's `pid role token`
-//! line.
+//! `flock` gives the two properties a lock-*file* dance cannot:
+//!
+//! * **Crash release.** The lease dies with the holder's last open
+//!   descriptor — no pid-liveness probe, no pid-recycling hazard, and
+//!   no takeover protocol with a window where the lock path is briefly
+//!   empty and a third contender slips in.
+//! * **Atomic arbitration.** Contenders race on a single syscall over
+//!   the same inode; there is no read-check-replace sequence to
+//!   interleave.
+//!
+//! One rule keeps it sound: the lock file is **never unlinked** —
+//! release truncates the holder line and closes the descriptor (which
+//! drops the kernel lock). Unlinking would let a later contender create
+//! and lock a *different* inode at the same path while an earlier
+//! holder still locks the old one: two writers again. `flock` locks
+//! belong to the open file description, so threads within one process
+//! contend exactly like separate processes (each acquisition opens the
+//! file anew).
+//!
+//! Off Unix there is no `flock`; acquisition falls back to an `O_EXCL`
+//! create that fails fast while the file exists (no crash release — the
+//! error names the file to remove). The multi-process path targets
+//! Linux, so the fallback only keeps single-process builds working.
 
 use anyhow::{bail, Context, Result};
 use std::io::Write as _;
@@ -39,105 +48,124 @@ static NEXT_TOKEN: AtomicU64 = AtomicU64::new(1);
 #[derive(Debug)]
 pub struct WriterLock {
     path: PathBuf,
+    /// Holding this descriptor IS holding the lease (Unix): the kernel
+    /// lock releases when it closes, crash or not.
+    #[cfg_attr(not(unix), allow(dead_code))]
+    file: std::fs::File,
     /// The exact `pid role token` line we wrote — our lease identity.
     body: String,
 }
 
-fn pid_alive(pid: u32) -> bool {
-    // Conservative off-Linux: without /proc we cannot probe, so a lock
-    // is never considered stale there.
-    if !Path::new("/proc").is_dir() {
-        return true;
+/// Try to take an exclusive `flock` on `f` without blocking. `Ok(false)`
+/// means another open file description holds it.
+#[cfg(unix)]
+fn try_lock_exclusive(f: &std::fs::File) -> std::io::Result<bool> {
+    use std::os::unix::io::AsRawFd;
+    const LOCK_EX: i32 = 2;
+    const LOCK_NB: i32 = 4;
+    extern "C" {
+        fn flock(fd: i32, operation: i32) -> i32;
     }
-    Path::new(&format!("/proc/{pid}")).exists()
-}
-
-fn try_create(path: &Path, body: &str) -> std::io::Result<std::fs::File> {
-    let mut f = std::fs::OpenOptions::new().write(true).create_new(true).open(path)?;
-    f.write_all(body.as_bytes())?;
-    f.flush()?;
-    Ok(f)
-}
-
-/// Claim the right to replace a stale lock: atomically move the file
-/// aside to a unique tomb, then check we moved the lock we `observed`
-/// and not one written by a faster contender in the meantime. Returns
-/// true when the takeover right was won and the path is clear.
-fn take_over_stale(path: &Path, observed: &str, token: u64) -> bool {
-    let tomb = path.with_extension(format!("tomb.{}.{token}", std::process::id()));
-    if std::fs::rename(path, &tomb).is_err() {
-        // Someone else moved (or already replaced) it — retry the create.
-        return false;
+    loop {
+        if unsafe { flock(f.as_raw_fd(), LOCK_EX | LOCK_NB) } == 0 {
+            return Ok(true);
+        }
+        let e = std::io::Error::last_os_error();
+        match e.kind() {
+            std::io::ErrorKind::WouldBlock => return Ok(false),
+            std::io::ErrorKind::Interrupted => continue,
+            _ => return Err(e),
+        }
     }
-    let moved = std::fs::read_to_string(&tomb).unwrap_or_default();
-    if moved == observed {
-        let _ = std::fs::remove_file(&tomb);
-        return true;
-    }
-    // We grabbed a fresh lock created between our read and our rename.
-    // Restore the same inode; hard_link fails (rather than clobbers) if
-    // yet another lock has appeared at the path since.
-    let _ = std::fs::hard_link(&tomb, path);
-    let _ = std::fs::remove_file(&tomb);
-    false
 }
 
 impl WriterLock {
     /// Acquire the writer lock for the collection at `root`, identifying
     /// this holder as `role` (e.g. `"append"`, `"compact"`) in the lock
-    /// file for diagnostics. Fails fast — no blocking — when a live
-    /// process holds it; replaces a stale (dead-pid) lock through the
-    /// verified-takeover protocol above.
+    /// file for diagnostics. Fails fast — no blocking — when another
+    /// writer holds it; a crashed writer's lock is released by the
+    /// kernel, so no staleness handling is needed.
+    #[cfg(unix)]
     pub fn acquire(root: &Path, role: &str) -> Result<WriterLock> {
+        use std::os::unix::fs::MetadataExt;
         let path = root.join(LOCK_FILE);
         let token = NEXT_TOKEN.fetch_add(1, Ordering::Relaxed);
         let body = format!("{} {role} {token}\n", std::process::id());
         for _ in 0..3 {
-            match try_create(&path, &body) {
-                Ok(_) => {
-                    // Post-claim audit: O_EXCL guarantees we created the
-                    // file, but a contender violating the takeover
-                    // protocol could still have swapped it; holding a
-                    // phantom lease would corrupt the collection.
-                    let seen = std::fs::read_to_string(&path).unwrap_or_default();
-                    if seen != body {
-                        bail!(
-                            "writer lock {} was overwritten right after \
-                             acquisition (found {seen:?}); refusing a \
-                             contested lease",
-                            path.display()
-                        );
-                    }
-                    return Ok(WriterLock { path, body });
-                }
+            let file = std::fs::OpenOptions::new()
+                .read(true)
+                .write(true)
+                .create(true)
+                .open(&path)
+                .with_context(|| format!("opening writer lock {}", path.display()))?;
+            if !try_lock_exclusive(&file)
+                .with_context(|| format!("locking writer lock {}", path.display()))?
+            {
+                let holder = std::fs::read_to_string(&path).unwrap_or_default();
+                let mut it = holder.split_whitespace();
+                let pid = it.next().unwrap_or("?").to_string();
+                let holder_role = it.next().unwrap_or("?").to_string();
+                bail!(
+                    "collection is held by another writer (pid {pid}, role \
+                     {holder_role}); the kernel lock on {} releases when that \
+                     process exits",
+                    path.display()
+                );
+            }
+            // Guard against an external unlink between our open and our
+            // lock: a lock on an orphaned inode guards nothing, so
+            // reopen until the path still names the inode we locked.
+            let same_inode = match (std::fs::metadata(&path), file.metadata()) {
+                (Ok(on_disk), Ok(ours)) => on_disk.ino() == ours.ino(),
+                _ => false,
+            };
+            if !same_inode {
+                continue;
+            }
+            file.set_len(0).with_context(|| {
+                format!("truncating writer lock {}", path.display())
+            })?;
+            (&file).write_all(body.as_bytes()).with_context(|| {
+                format!("writing writer lock {}", path.display())
+            })?;
+            return Ok(WriterLock { path, file, body });
+        }
+        bail!(
+            "could not acquire writer lock {} (kept racing an external unlink)",
+            path.display()
+        );
+    }
+
+    /// `O_EXCL` fallback for platforms without `flock`: fails fast while
+    /// the file exists, with no crash release.
+    #[cfg(not(unix))]
+    pub fn acquire(root: &Path, role: &str) -> Result<WriterLock> {
+        let path = root.join(LOCK_FILE);
+        let token = NEXT_TOKEN.fetch_add(1, Ordering::Relaxed);
+        let body = format!("{} {role} {token}\n", std::process::id());
+        let mut file =
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(f) => f,
                 Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
-                    let observed = std::fs::read_to_string(&path).unwrap_or_default();
-                    let mut it = observed.split_whitespace();
-                    let pid: Option<u32> = it.next().and_then(|p| p.parse().ok());
+                    let holder = std::fs::read_to_string(&path).unwrap_or_default();
+                    let mut it = holder.split_whitespace();
+                    let pid = it.next().unwrap_or("?").to_string();
                     let holder_role = it.next().unwrap_or("?").to_string();
-                    match pid {
-                        Some(pid) if pid_alive(pid) => bail!(
-                            "collection is held by another writer \
-                             (pid {pid}, role {holder_role}); remove {} if that \
-                             process is gone",
-                            path.display()
-                        ),
-                        _ => {
-                            // Dead holder (or unreadable file): win the
-                            // takeover or observe the new holder on the
-                            // next pass.
-                            let _ = take_over_stale(&path, &observed, token);
-                        }
-                    }
+                    bail!(
+                        "collection is held by another writer (pid {pid}, role \
+                         {holder_role}); remove {} if that process is gone",
+                        path.display()
+                    );
                 }
                 Err(e) => {
                     return Err(e).with_context(|| {
                         format!("creating writer lock {}", path.display())
                     })
                 }
-            }
-        }
-        bail!("could not acquire writer lock {} (takeover race)", path.display());
+            };
+        file.write_all(body.as_bytes())
+            .with_context(|| format!("writing writer lock {}", path.display()))?;
+        Ok(WriterLock { path, file, body })
     }
 
     /// The lock file's location (diagnostics).
@@ -148,10 +176,19 @@ impl WriterLock {
 
 impl Drop for WriterLock {
     fn drop(&mut self) {
-        // Release only our own lease: if the file no longer carries our
-        // identity line, some contender owns it now — leave it alone.
-        if let Ok(seen) = std::fs::read_to_string(&self.path) {
-            if seen == self.body {
+        // Release only our own lease: the holder line doubles as an
+        // identity check against anything that tampered with the file.
+        let ours =
+            std::fs::read_to_string(&self.path).map(|s| s == self.body).unwrap_or(false);
+        if ours {
+            #[cfg(unix)]
+            {
+                // Truncate, never unlink (see module doc); the kernel
+                // lock releases when `self.file` closes below.
+                let _ = self.file.set_len(0);
+            }
+            #[cfg(not(unix))]
+            {
                 let _ = std::fs::remove_file(&self.path);
             }
         }
@@ -180,23 +217,23 @@ mod tests {
         std::fs::remove_dir_all(&d).unwrap();
     }
 
+    /// A crashed holder leaves its holder line behind but no kernel
+    /// lock (its descriptors closed with it) — the next writer just
+    /// locks the same file.
+    #[cfg(unix)]
     #[test]
-    fn stale_lock_from_a_dead_pid_is_replaced() {
-        let d = tmp("stale");
-        // Pid 0 is never a live user process (and /proc/0 does not exist).
+    fn crashed_holders_lock_file_is_relocked() {
+        let d = tmp("crashed");
         std::fs::write(d.join(LOCK_FILE), "0 append 1\n").unwrap();
-        let l = WriterLock::acquire(&d, "compact");
-        if Path::new("/proc").is_dir() {
-            let l = l.unwrap();
-            let body = std::fs::read_to_string(l.path()).unwrap();
-            assert!(body.contains(" compact "), "{body:?}");
-        } else {
-            // No /proc: staleness cannot be probed, the lock holds.
-            assert!(l.is_err());
-        }
+        let l = WriterLock::acquire(&d, "compact").unwrap();
+        let body = std::fs::read_to_string(l.path()).unwrap();
+        assert!(body.contains(" compact "), "{body:?}");
         std::fs::remove_dir_all(&d).unwrap();
     }
 
+    /// Garbage contents never block acquisition — only a live kernel
+    /// lock does.
+    #[cfg(unix)]
     #[test]
     fn garbage_lock_files_are_cleared() {
         let d = tmp("garbage");
@@ -205,52 +242,41 @@ mod tests {
         std::fs::remove_dir_all(&d).unwrap();
     }
 
-    /// The deterministic replay of the takeover race: B observed the
-    /// stale lock, but A replaced it first. B's takeover step must
-    /// detect the swap, restore A's lock file byte-for-byte, and lose.
+    /// Release must truncate, not unlink: unlinking would let a later
+    /// contender lock a different inode at the same path.
+    #[cfg(unix)]
     #[test]
-    fn late_takeover_detects_fresh_lock_and_restores_it() {
-        if !Path::new("/proc").is_dir() {
-            return;
-        }
-        let d = tmp("race");
-        let stale = "0 append 1\n";
-        std::fs::write(d.join(LOCK_FILE), stale).unwrap();
-        let a = WriterLock::acquire(&d, "append").unwrap();
-        let a_body = std::fs::read_to_string(a.path()).unwrap();
-        assert_ne!(a_body, stale);
-        // B runs its takeover with the body it read before A's claim.
-        assert!(!take_over_stale(&d.join(LOCK_FILE), stale, u64::MAX));
-        assert_eq!(std::fs::read_to_string(d.join(LOCK_FILE)).unwrap(), a_body);
-        // A's lease is intact, so its release removes the file.
-        drop(a);
-        assert!(!d.join(LOCK_FILE).exists());
+    fn release_keeps_the_file_and_clears_the_holder_line() {
+        let d = tmp("release");
+        let l = WriterLock::acquire(&d, "append").unwrap();
+        assert_eq!(std::fs::read_to_string(l.path()).unwrap(), l.body);
+        drop(l);
+        let path = d.join(LOCK_FILE);
+        assert!(path.exists(), "release must keep the lock file");
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "");
+        WriterLock::acquire(&d, "compact").unwrap();
         std::fs::remove_dir_all(&d).unwrap();
     }
 
-    /// Drop must not release a lock the process no longer owns.
+    /// Drop must not clear a holder line it does not own.
+    #[cfg(unix)]
     #[test]
-    fn drop_leaves_a_replaced_lock_alone() {
-        if !Path::new("/proc").is_dir() {
-            return;
-        }
+    fn drop_leaves_a_foreign_holder_line_alone() {
         let d = tmp("drop");
         let a = WriterLock::acquire(&d, "append").unwrap();
-        let usurper = "999999999 compact 7\n";
-        std::fs::write(d.join(LOCK_FILE), usurper).unwrap();
+        let foreign = "999999999 compact 7\n";
+        std::fs::write(d.join(LOCK_FILE), foreign).unwrap();
         drop(a);
-        assert_eq!(std::fs::read_to_string(d.join(LOCK_FILE)).unwrap(), usurper);
+        assert_eq!(std::fs::read_to_string(d.join(LOCK_FILE)).unwrap(), foreign);
         std::fs::remove_dir_all(&d).unwrap();
     }
 
-    /// Many threads discover the same stale lock at once: exactly one
-    /// acquisition may succeed, and the survivor's lock is the one on
-    /// disk.
+    /// Many threads reclaim a crashed writer's lock at once: `flock`
+    /// belongs to the open file description, so in-process contenders
+    /// race like separate processes and exactly one may win.
+    #[cfg(unix)]
     #[test]
-    fn concurrent_stale_takeover_has_exactly_one_winner() {
-        if !Path::new("/proc").is_dir() {
-            return;
-        }
+    fn concurrent_reclaim_of_a_crashed_lock_has_exactly_one_winner() {
         let d = tmp("swarm");
         std::fs::write(d.join(LOCK_FILE), "0 append 1\n").unwrap();
         let locks: Vec<Option<WriterLock>> = std::thread::scope(|s| {
@@ -260,11 +286,11 @@ mod tests {
             handles.into_iter().map(|h| h.join().unwrap()).collect()
         });
         let winners: Vec<&WriterLock> = locks.iter().flatten().collect();
-        assert_eq!(winners.len(), 1, "stale takeover must have one winner");
+        assert_eq!(winners.len(), 1, "reclaim must have exactly one winner");
         let body = std::fs::read_to_string(d.join(LOCK_FILE)).unwrap();
         assert_eq!(body, winners[0].body);
         drop(locks);
-        assert!(!d.join(LOCK_FILE).exists());
+        assert_eq!(std::fs::read_to_string(d.join(LOCK_FILE)).unwrap(), "");
         std::fs::remove_dir_all(&d).unwrap();
     }
 }

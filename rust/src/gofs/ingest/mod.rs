@@ -58,8 +58,9 @@
 //! Under real distribution (`goffish coordinator` / `goffish host`) the
 //! appender shares the collection with other *processes*: [`lock`]'s
 //! [`WriterLock`] arbitrates the one-writer rule between an appender and
-//! a standalone compactor (an `O_EXCL` lock file with dead-pid
-//! takeover), and [`beacon`]'s [`BeaconGate`] carries the follow-mode
+//! a standalone compactor (an exclusive `flock(2)` on a long-lived lock
+//! file, crash-released by the kernel), and [`beacon`]'s [`BeaconGate`]
+//! carries the follow-mode
 //! backpressure contract across process boundaries by summing the
 //! per-partition `.flow-beacon` files the workers' transports publish.
 
