@@ -898,6 +898,119 @@ fn main() {
         let _ = std::fs::remove_dir_all(&root);
     }
 
+    // --- Observability plane: journal + metric shipping overhead. ---
+    // The same 2-host TCP run with the full plane on (per-host event
+    // journals, snapshot piggybacking on Heartbeat/Commit frames,
+    // coordinator journal + RUN_METRICS.json dump) vs everything off.
+    // Outputs must be byte-identical; the wall delta is the whole-run
+    // observability tax. Plus a micro-probe for the journal append
+    // itself (CRC-framed JSONL line, buffered write, no fsync).
+    {
+        use goffish::cluster::coordinator::{run_coordinator, CoordinatorConfig};
+        use goffish::cluster::worker::{run_host, HostConfig};
+        use goffish::gofs::{DiskModel, StoreOptions};
+        use goffish::metrics::journal::Journal;
+
+        let cgen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+        let root =
+            std::env::temp_dir().join(format!("goffish-bench-obs-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        deploy(&cgen, &DeployConfig::new(2, 4, 3), &root).expect("deploy obs probe");
+        let csource = cgen.template().ext_ids[cgen.vantages()[0] as usize];
+
+        let run_obs = |tag: &str, observe: bool| -> (f64, String) {
+            let port_file = root.join(format!("port-{tag}"));
+            let _ = std::fs::remove_file(&port_file);
+            let cfg = CoordinatorConfig {
+                n_hosts: 2,
+                listen: "127.0.0.1:0".into(),
+                port_file: Some(port_file.clone()),
+                app_name: "sssp".into(),
+                app_params: vec![("source".into(), csource.to_string())],
+                heartbeat_ms: 25,
+                metrics_out: observe.then(|| root.join(format!("RUN_METRICS-{tag}.json"))),
+                journal: observe.then(|| root.join(format!("coord-{tag}.journal"))),
+                ..Default::default()
+            };
+            let t0 = std::time::Instant::now();
+            let coord = std::thread::spawn(move || run_coordinator(&cfg));
+            let port: u16 = loop {
+                if let Ok(s) = std::fs::read_to_string(&port_file) {
+                    if let Ok(p) = s.trim().parse() {
+                        break p;
+                    }
+                }
+                assert!(
+                    t0.elapsed() < std::time::Duration::from_secs(30),
+                    "obs probe coordinator never published its port"
+                );
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            };
+            let hosts: Vec<_> = (0..2usize)
+                .map(|part| {
+                    let cfg = HostConfig {
+                        root: root.clone(),
+                        part,
+                        coordinator: format!("127.0.0.1:{port}"),
+                        store_opts: StoreOptions {
+                            cache_slots: 16,
+                            disk: DiskModel::instant(),
+                            ..Default::default()
+                        },
+                        heartbeat_ms: 25,
+                        retry_base_ms: 10,
+                        journal: observe
+                            .then(|| root.join(format!("host{part}-{tag}.journal"))),
+                        ship_metrics: observe,
+                        ..Default::default()
+                    };
+                    std::thread::spawn(move || run_host(&cfg))
+                })
+                .collect();
+            for h in hosts {
+                h.join().unwrap().expect("obs probe host");
+            }
+            let out = coord.join().unwrap().expect("obs probe coordinator");
+            (t0.elapsed().as_secs_f64(), out)
+        };
+
+        let _ = run_obs("warm", false); // page in the binary + collection
+        let (wall_off, out_off) = run_obs("plane-off", false);
+        let (wall_on, out_on) = run_obs("plane-on", true);
+        assert_eq!(out_on, out_off, "observability plane changed the run output");
+        assert!(
+            root.join("RUN_METRICS-plane-on.json").exists(),
+            "observed run wrote no RUN_METRICS.json"
+        );
+        let metrics_overhead_ms = (wall_on - wall_off) * 1e3;
+        report.row(&[
+            "observability plane (journal + shipping + dump)".into(),
+            format!("{metrics_overhead_ms:.1}"),
+            "ms added to 2-host run wall".into(),
+        ]);
+        json.push(("metrics_overhead_ms".into(), metrics_overhead_ms));
+
+        let jpath = root.join("micro.journal");
+        let j = Journal::open(&jpath, "bench").expect("open micro journal");
+        let mut t = 0u64;
+        let jstats = b.bench("journal append", || {
+            t += 1;
+            j.event("probe", &[("t", t.into()), ("tag", "bench".into())]);
+        });
+        report.row(&[
+            "journal append".into(),
+            format!("{:.2}", jstats.min() * 1e6),
+            "us/event (CRC-framed JSONL)".into(),
+        ]);
+        json.push(("journal_append_us".into(), jstats.min() * 1e6));
+        println!(
+            "observability probe: {metrics_overhead_ms:.1} ms plane overhead, \
+             {:.2} us/journal event (outputs identical)",
+            jstats.min() * 1e6
+        );
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
     // --- L1/L2: kernel dispatch + throughput vs scalar. ---
     match PjrtEngine::load(
         &std::path::PathBuf::from(

@@ -43,8 +43,12 @@ use crate::cluster::proto::{
 };
 use crate::cluster::transport::READ_TICK;
 use crate::cluster::ClusterSpec;
+use crate::metrics::journal::{Field, Journal};
+use crate::metrics::{hkeys, keys, Metrics, WireSnapshot};
+use crate::util::histogram::Histogram;
+use crate::util::json::escape;
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -79,6 +83,13 @@ pub struct CoordinatorConfig {
     pub join_deadline_ms: u64,
     /// Deterministic fault plan (`--fault-plan`); None = no injection.
     pub fault_plan: Option<PathBuf>,
+    /// Write the aggregated cluster metrics (`RUN_METRICS.json`) here at
+    /// teardown and on the `metrics_dump_ms` cadence (None = no dump).
+    pub metrics_out: Option<PathBuf>,
+    /// Periodic metrics-dump interval (0 = teardown only).
+    pub metrics_dump_ms: u64,
+    /// Append coordinator lifecycle events to this journal file.
+    pub journal: Option<PathBuf>,
 }
 
 impl Default for CoordinatorConfig {
@@ -98,6 +109,9 @@ impl Default for CoordinatorConfig {
             round_deadline_ms: 30_000,
             join_deadline_ms: 60_000,
             fault_plan: None,
+            metrics_out: None,
+            metrics_dump_ms: 0,
+            journal: None,
         }
     }
 }
@@ -137,6 +151,210 @@ enum EpochEnd {
     Down(String),
 }
 
+/// One host's aggregated metrics: the last absolute snapshot it shipped,
+/// plus the folded totals of earlier process incarnations (a respawned
+/// host restarts its counters at ~the resume point; the incarnation id
+/// tells a restart from a refresh).
+struct HostSlot {
+    base_counters: BTreeMap<String, u64>,
+    base_hists: BTreeMap<String, Histogram>,
+    latest: Option<WireSnapshot>,
+}
+
+fn fold_hist_into(map: &mut BTreeMap<String, Histogram>, key: &str, other: &Histogram) {
+    match map.entry(key.to_string()) {
+        std::collections::btree_map::Entry::Vacant(e) => {
+            e.insert(other.clone());
+        }
+        std::collections::btree_map::Entry::Occupied(mut e) => {
+            let h = e.get_mut();
+            if h.counts().len() == other.counts().len() && (h.lo(), h.hi()) == (other.lo(), other.hi())
+            {
+                h.fold(other);
+            } else {
+                *h = other.clone();
+            }
+        }
+    }
+}
+
+/// Cross-host observability state at the coordinator: per-host snapshot
+/// aggregation (shipped on `Heartbeat`/`Commit` frames), the
+/// coordinator's own registry (heartbeat gaps, rejoin recovery, labeled
+/// per-host counters, lifecycle journal), and the `RUN_METRICS.json`
+/// dump cadence.
+struct MetricsHub {
+    slots: Mutex<Vec<HostSlot>>,
+    /// Last heartbeat arrival per host within the current epoch (reset
+    /// at teardown — the silence across an epoch gap is not a gap
+    /// between heartbeats).
+    last_beat: Mutex<Vec<Option<Instant>>>,
+    coord: Arc<Metrics>,
+    out: Option<PathBuf>,
+    dump_every: Duration,
+    last_dump: Mutex<Instant>,
+}
+
+impl MetricsHub {
+    fn new(n: usize, cfg: &CoordinatorConfig) -> MetricsHub {
+        let coord = Arc::new(Metrics::new());
+        MetricsHub {
+            slots: Mutex::new(
+                (0..n)
+                    .map(|_| HostSlot {
+                        base_counters: BTreeMap::new(),
+                        base_hists: BTreeMap::new(),
+                        latest: None,
+                    })
+                    .collect(),
+            ),
+            last_beat: Mutex::new(vec![None; n]),
+            coord,
+            out: cfg.metrics_out.clone(),
+            dump_every: Duration::from_millis(cfg.metrics_dump_ms),
+            last_dump: Mutex::new(Instant::now()),
+        }
+    }
+
+    /// Append a coordinator lifecycle event (no-op without `--journal`).
+    fn event(&self, kind: &str, fields: &[(&str, Field)]) {
+        self.coord.event(kind, fields);
+    }
+
+    /// Ingest an absolute snapshot shipped by host `h`. Idempotent
+    /// replace within one incarnation (a lost heartbeat costs freshness,
+    /// not data); a new incarnation folds the previous one into the
+    /// base so totals stay monotone across crash/respawn.
+    fn ingest(&self, h: usize, bytes: &[u8]) {
+        let Ok(snap) = WireSnapshot::decode(bytes) else { return };
+        let mut slots = self.slots.lock().unwrap();
+        let slot = &mut slots[h];
+        if let Some(prev) = &slot.latest {
+            if prev.incarnation != snap.incarnation {
+                for (k, v) in &prev.counters {
+                    *slot.base_counters.entry(k.clone()).or_insert(0) += v;
+                }
+                for (k, hist) in &prev.hists {
+                    fold_hist_into(&mut slot.base_hists, k, hist);
+                }
+            }
+        }
+        slot.latest = Some(snap);
+    }
+
+    /// A heartbeat arrived from host `h`: count it and record the gap
+    /// since its previous one.
+    fn note_beat(&self, h: usize) {
+        let mut lb = self.last_beat.lock().unwrap();
+        if let Some(prev) = lb[h] {
+            self.coord.record_hist(
+                &keys::labeled(hkeys::HEARTBEAT_GAP_MS, h),
+                prev.elapsed().as_millis() as f64,
+            );
+        }
+        lb[h] = Some(Instant::now());
+        self.coord.incr(&keys::labeled(keys::HEARTBEATS, h));
+    }
+
+    /// Epoch teardown: heartbeat gap tracking restarts with the next
+    /// epoch's connections.
+    fn epoch_down(&self) {
+        let mut lb = self.last_beat.lock().unwrap();
+        lb.iter_mut().for_each(|b| *b = None);
+    }
+
+    /// All hosts rejoined and committed after a teardown that was
+    /// detected `since` ago: record the recovery latency for every host
+    /// (the whole cluster is down during a teardown).
+    fn note_recovery(&self, n: usize, since: Instant) {
+        let ms = since.elapsed().as_millis() as f64;
+        for h in 0..n {
+            self.coord.record_hist(&keys::labeled(hkeys::REJOIN_RECOVERY_MS, h), ms);
+        }
+    }
+
+    /// Host `h`'s aggregate (base + latest incarnation).
+    fn aggregate(&self, slot: &HostSlot) -> (BTreeMap<String, u64>, BTreeMap<String, Histogram>) {
+        let mut counters = slot.base_counters.clone();
+        let mut hists = slot.base_hists.clone();
+        if let Some(latest) = &slot.latest {
+            for (k, v) in &latest.counters {
+                *counters.entry(k.clone()).or_insert(0) += v;
+            }
+            for (k, hist) in &latest.hists {
+                fold_hist_into(&mut hists, k, hist);
+            }
+        }
+        (counters, hists)
+    }
+
+    /// Write `RUN_METRICS.json` (atomic tmp + rename). Best-effort.
+    fn dump(&self, committed: u64) {
+        let Some(out) = &self.out else { return };
+        let slots = self.slots.lock().unwrap();
+        let coord_counters = self.coord.snapshot().values;
+        let coord_hists = self.coord.hists();
+        let mut hosts = Vec::with_capacity(slots.len());
+        for (h, slot) in slots.iter().enumerate() {
+            let (counters, mut hists) = self.aggregate(slot);
+            // Graft the coordinator-observed per-host distributions into
+            // the host's block under their base keys: one place to look
+            // per host.
+            for base in [hkeys::HEARTBEAT_GAP_MS, hkeys::REJOIN_RECOVERY_MS] {
+                if let Some(hist) = coord_hists.get(&keys::labeled(base, h)) {
+                    fold_hist_into(&mut hists, base, hist);
+                }
+            }
+            hosts.push(format!("\"{h}\":{}", block_json(&counters, &hists)));
+        }
+        let json = format!(
+            "{{\"committed\":{committed},\"n_hosts\":{},\"hosts\":{{{}}},\"coord\":{}}}\n",
+            slots.len(),
+            hosts.join(","),
+            block_json(&coord_counters, &coord_hists),
+        );
+        let tmp = out.with_extension("tmp");
+        let _ = std::fs::write(&tmp, json).and_then(|_| std::fs::rename(&tmp, out));
+    }
+
+    /// Dump on the periodic cadence, if one is configured.
+    fn maybe_dump(&self, committed: u64) {
+        if self.dump_every.is_zero() {
+            return;
+        }
+        let mut last = self.last_dump.lock().unwrap();
+        if last.elapsed() >= self.dump_every {
+            *last = Instant::now();
+            drop(last);
+            self.dump(committed);
+        }
+    }
+}
+
+fn hist_json(h: &Histogram) -> String {
+    let q = |p: f64| h.quantile(p).map(|v| format!("{v}")).unwrap_or_else(|| "null".into());
+    let counts = h.counts().iter().map(u64::to_string).collect::<Vec<_>>().join(",");
+    format!(
+        "{{\"lo\":{},\"hi\":{},\"underflow\":{},\"overflow\":{},\"total\":{},\
+         \"p50\":{},\"p99\":{},\"counts\":[{counts}]}}",
+        h.lo(),
+        h.hi(),
+        h.underflow(),
+        h.overflow(),
+        h.total(),
+        q(0.5),
+        q(0.99),
+    )
+}
+
+fn block_json(counters: &BTreeMap<String, u64>, hists: &BTreeMap<String, Histogram>) -> String {
+    let cs: Vec<String> =
+        counters.iter().map(|(k, v)| format!("\"{}\":{v}", escape(k))).collect();
+    let hs: Vec<String> =
+        hists.iter().map(|(k, h)| format!("\"{}\":{}", escape(k), hist_json(h))).collect();
+    format!("{{\"counters\":{{{}}},\"hists\":{{{}}}}}", cs.join(","), hs.join(","))
+}
+
 /// Run the coordinator to completion and return the assembled
 /// cluster-wide output (one block per committed timestep: every host's
 /// canonical emission in host order).
@@ -158,6 +376,13 @@ pub fn run_coordinator(cfg: &CoordinatorConfig) -> Result<String> {
         Some(path) => Some(Arc::new(FaultInjector::new(FaultPlan::load(path)?))),
         None => None,
     };
+    let hub = Arc::new(MetricsHub::new(cfg.n_hosts, cfg));
+    if let Some(path) = &cfg.journal {
+        hub.coord.set_journal(Arc::new(Journal::open(path, "coord")?));
+    }
+    if let Some(inj) = &injector {
+        inj.set_metrics(Arc::clone(&hub.coord));
+    }
     let mut state = RunState {
         committed: 0,
         outputs: HashMap::new(),
@@ -168,14 +393,29 @@ pub fn run_coordinator(cfg: &CoordinatorConfig) -> Result<String> {
         clock: NetworkClock::default(),
     };
     let max_epochs = if cfg.max_epochs == 0 { 64 } else { cfg.max_epochs };
+    // When the previous epoch tore down, the moment we noticed — the
+    // first commit of the next epoch closes the rejoin-recovery window.
+    let mut down_at: Option<Instant> = None;
     for epoch in 0..max_epochs {
-        match run_epoch(cfg, &listener, epoch, &mut state, injector.as_ref())? {
-            EpochEnd::Done(out) => return Ok(out),
+        match run_epoch(cfg, &listener, epoch, &mut state, injector.as_ref(), &hub, down_at.take())?
+        {
+            EpochEnd::Done(out) => {
+                hub.dump(state.committed);
+                return Ok(out);
+            }
             EpochEnd::Down(reason) => {
                 eprintln!("coordinator: epoch {epoch} down ({reason}); waiting for rejoin");
+                hub.event(
+                    "crash_detect",
+                    &[("epoch", epoch.into()), ("reason", reason.as_str().into())],
+                );
+                hub.coord.incr(keys::EPOCH_ABORTS);
+                hub.epoch_down();
+                down_at = Some(Instant::now());
             }
         }
     }
+    hub.dump(state.committed);
     bail!("coordinator: giving up after {max_epochs} epochs");
 }
 
@@ -243,7 +483,7 @@ fn join_hosts(
             last_beat = Instant::now();
             for (h, c) in conns.iter_mut().enumerate() {
                 if let Some((s, _)) = c {
-                    let hb = Msg::Heartbeat { seq: 0 };
+                    let hb = Msg::Heartbeat { seq: 0, metrics: None };
                     let corrupt = injector
                         .map(|i| i.check(&format!("coord.send.Heartbeat.h{h}")))
                         .unwrap_or(Action::None)
@@ -405,7 +645,9 @@ impl HeartbeatTicker {
                     // report the stall. Write failures are likewise left
                     // for the reader threads to report.
                     let Ok(mut s) = c.try_lock() else { continue };
-                    let hb = Msg::Heartbeat { seq };
+                    // Coordinator→worker beats carry no metrics payload;
+                    // shipping flows worker→coordinator only.
+                    let hb = Msg::Heartbeat { seq, metrics: None };
                     let _ = if action == Action::Corrupt {
                         write_msg_corrupted(&mut *s, &hb)
                     } else {
@@ -528,6 +770,8 @@ fn run_epoch(
     epoch: u64,
     state: &mut RunState,
     injector: Option<&Arc<FaultInjector>>,
+    hub: &Arc<MetricsHub>,
+    down_since: Option<Instant>,
 ) -> Result<EpochEnd> {
     let n = cfg.n_hosts;
     let inj = injector.map(Arc::as_ref);
@@ -580,6 +824,15 @@ fn run_epoch(
         abort_all(&conns, &reason);
         return Ok(EpochEnd::Down(reason));
     }
+    hub.event(
+        "epoch_start",
+        &[
+            ("epoch", epoch.into()),
+            ("resume_from", state.committed.into()),
+            ("n_hosts", n.into()),
+            ("visible", visible.into()),
+        ],
+    );
 
     // Heartbeat every worker for the whole epoch (dropped — stopped and
     // joined — on every exit path below).
@@ -610,11 +863,21 @@ fn run_epoch(
             }
         };
         let tx = tx.clone();
+        let hub2 = Arc::clone(hub);
         std::thread::spawn(move || {
             let mut fr = FrameReader::new(rc);
             loop {
                 match fr.read_frame() {
                     Ok(m) => {
+                        // Worker heartbeats piggyback an absolute metrics
+                        // snapshot; peel it off here so the lockstep path
+                        // only ever sees liveness.
+                        if let Msg::Heartbeat { metrics, .. } = &m {
+                            hub2.note_beat(host);
+                            if let Some(b) = metrics {
+                                hub2.ingest(host, b);
+                            }
+                        }
                         if tx.send((epoch, host, ReadEvent::Frame(m))).is_err() {
                             return;
                         }
@@ -656,7 +919,9 @@ fn run_epoch(
 
     // Lockstep rounds until every host ends the run or the epoch dies.
     let round_deadline = Duration::from_millis(cfg.round_deadline_ms);
+    let mut recovered = down_since;
     loop {
+        hub.maybe_dump(state.committed);
         let msgs = match collect_round(&rx, epoch, n, round_deadline) {
             Ok(m) => m,
             Err(reason) => {
@@ -684,17 +949,33 @@ fn run_epoch(
             "Commit" => {
                 let mut t0 = None;
                 for (h, m) in msgs.into_iter().enumerate() {
-                    let Msg::Commit { t, output, merge } = m else { unreachable!() };
+                    let Msg::Commit { t, output, merge, metrics } = m else { unreachable!() };
                     if *t0.get_or_insert(t) != t {
                         let reason = "hosts committed different timesteps".to_string();
                         let _ = send_all(&conns, inj, &Msg::Fatal { reason: reason.clone() });
                         bail!("{reason}");
                     }
+                    // Commit-frame snapshots are exact at the barrier: the
+                    // worker encodes them after counting the committed
+                    // timestep, so the parity check below needs no grace.
+                    if let Some(b) = metrics {
+                        hub.ingest(h, &b);
+                    }
+                    hub.coord.incr(&keys::labeled(keys::COMMITS, h));
                     state.outputs.insert((t, h), output);
                     state.merges.insert((t, h), merge);
                 }
                 let t = t0.unwrap();
                 state.committed = state.committed.max(t + 1);
+                // First commit after a teardown closes the recovery
+                // window opened when the crash was detected.
+                if let Some(since) = recovered.take() {
+                    hub.note_recovery(n, since);
+                }
+                hub.event(
+                    "barrier_commit",
+                    &[("epoch", epoch.into()), ("t", t.into()), ("committed", state.committed.into())],
+                );
                 let ack = Msg::CommitAck { committed: state.committed };
                 if let Err(reason) = send_all(&conns, inj, &ack) {
                     abort_all(&conns, &reason);
@@ -743,6 +1024,10 @@ fn run_epoch(
                         }
                     }
                 }
+                hub.event(
+                    "run_done",
+                    &[("epoch", epoch.into()), ("committed", state.committed.into())],
+                );
                 for c in conns.iter() {
                     let _ = c.lock().unwrap().shutdown(Shutdown::Both);
                 }

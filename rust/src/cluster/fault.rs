@@ -41,9 +41,10 @@
 //! `host<P>.connect`, `host<P>.send.<MsgLabel>`, `host<P>.recv`; the
 //! coordinator uses `coord.send.<MsgLabel>.h<H>` and `coord.recv.h<H>`.
 
+use crate::metrics::Metrics;
 use crate::util::prng::Prng;
 use anyhow::{bail, Context, Result};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// What a matching-and-firing rule does at the injection point.
@@ -237,6 +238,9 @@ struct InjectorState {
 pub struct FaultInjector {
     rules: Vec<Rule>,
     state: Mutex<InjectorState>,
+    /// Journals `fault_fire` events when attached (see
+    /// [`set_metrics`](FaultInjector::set_metrics)).
+    metrics: Mutex<Option<Arc<Metrics>>>,
 }
 
 impl FaultInjector {
@@ -249,7 +253,16 @@ impl FaultInjector {
                 prng: Prng::new(plan.seed),
                 blackout_until: None,
             }),
+            metrics: Mutex::new(None),
         }
+    }
+
+    /// Attach a metrics registry so fired rules are journaled as
+    /// `fault_fire` events. Heartbeat points are exempt: their firing
+    /// order depends on the scheduler, and the journal's determinism
+    /// contract only covers scheduler-independent events.
+    pub fn set_metrics(&self, m: Arc<Metrics>) {
+        *self.metrics.lock().unwrap() = Some(m);
     }
 
     /// Evaluate the plan at an injection point. Rules are checked in
@@ -275,6 +288,15 @@ impl FaultInjector {
         if let Action::Partition(d) = fired {
             st.blackout_until = Some(Instant::now() + d);
         }
+        drop(st);
+        if fired != Action::None && !point.contains("Heartbeat") {
+            if let Some(m) = self.metrics.lock().unwrap().as_ref() {
+                m.event(
+                    "fault_fire",
+                    &[("point", point.into()), ("action", action_name(&fired).into())],
+                );
+            }
+        }
         fired
     }
 
@@ -290,6 +312,18 @@ impl FaultInjector {
             }
             None => false,
         }
+    }
+}
+
+fn action_name(a: &Action) -> &'static str {
+    match a {
+        Action::None => "none",
+        Action::Delay(_) => "delay",
+        Action::Drop => "drop",
+        Action::Corrupt => "corrupt",
+        Action::HalfOpen(_) => "halfopen",
+        Action::Partition(_) => "partition",
+        Action::Exit(_) => "exit",
     }
 }
 

@@ -199,8 +199,11 @@ pub enum Msg {
         carry: Vec<CarryChunk>,
     },
     /// Worker -> coordinator after durably checkpointing timestep `t`:
-    /// its partition's canonical emission and merge payloads.
-    Commit { t: u64, output: String, merge: Vec<MergeChunk> },
+    /// its partition's canonical emission and merge payloads, plus an
+    /// optional piggybacked metrics snapshot
+    /// ([`crate::metrics::WireSnapshot`] bytes) — observability rides
+    /// the existing round trip, never its own.
+    Commit { t: u64, output: String, merge: Vec<MergeChunk>, metrics: Option<Vec<u8>> },
     /// Coordinator -> workers once all hosts committed `t`.
     CommitAck { committed: u64 },
     /// Worker -> coordinator (follow mode): local visible instance count
@@ -219,10 +222,13 @@ pub enum Msg {
     /// Either direction: unrecoverable error; the run ends.
     Fatal { reason: String },
     /// Either direction, out-of-band liveness beacon: "I am alive and
-    /// still working". Carries a monotone per-sender sequence number.
-    /// Receivers reset their silence clock and otherwise ignore it —
-    /// heartbeats never participate in the lockstep fold.
-    Heartbeat { seq: u64 },
+    /// still working". Carries a monotone per-sender sequence number and
+    /// an optional piggybacked metrics snapshot
+    /// ([`crate::metrics::WireSnapshot`] bytes; worker->coordinator
+    /// only). Receivers reset their silence clock, ingest the snapshot,
+    /// and otherwise ignore it — heartbeats never participate in the
+    /// lockstep fold.
+    Heartbeat { seq: u64, metrics: Option<Vec<u8>> },
 }
 
 fn enc_opt_str(e: &mut Enc, s: &Option<String>) {
@@ -239,6 +245,23 @@ fn dec_opt_str(d: &mut Dec) -> Result<Option<String>> {
     Ok(match d.u8()? {
         0 => None,
         _ => Some(d.str()?.to_string()),
+    })
+}
+
+fn enc_opt_bytes(e: &mut Enc, b: &Option<Vec<u8>>) {
+    match b {
+        Some(v) => {
+            e.u8(1);
+            e.bytes(v);
+        }
+        None => e.u8(0),
+    }
+}
+
+fn dec_opt_bytes(d: &mut Dec) -> Result<Option<Vec<u8>>> {
+    Ok(match d.u8()? {
+        0 => None,
+        _ => Some(d.bytes()?.to_vec()),
     })
 }
 
@@ -384,7 +407,7 @@ impl Msg {
                 enc_chunks(&mut e, chunks);
                 enc_carry(&mut e, carry);
             }
-            Msg::Commit { t, output, merge } => {
+            Msg::Commit { t, output, merge, metrics } => {
                 e.u8(5);
                 e.u64(*t);
                 e.str(output);
@@ -394,6 +417,7 @@ impl Msg {
                     e.u32(m.src_item);
                     enc_msgs(&mut e, &m.msgs);
                 }
+                enc_opt_bytes(&mut e, metrics);
             }
             Msg::CommitAck { committed } => {
                 e.u8(6);
@@ -422,9 +446,10 @@ impl Msg {
                 e.u8(12);
                 e.str(reason);
             }
-            Msg::Heartbeat { seq } => {
+            Msg::Heartbeat { seq, metrics } => {
                 e.u8(13);
                 e.u64(*seq);
+                enc_opt_bytes(&mut e, metrics);
             }
         }
         e.finish()
@@ -524,7 +549,7 @@ impl Msg {
                         msgs: dec_msgs(&mut d)?,
                     });
                 }
-                Msg::Commit { t, output, merge }
+                Msg::Commit { t, output, merge, metrics: dec_opt_bytes(&mut d)? }
             }
             6 => Msg::CommitAck { committed: d.u64()? },
             7 => Msg::RefreshReq { visible: d.u64()? },
@@ -533,7 +558,7 @@ impl Msg {
             10 => Msg::RunEnd { merge: dec_msgs(&mut d)? },
             11 => Msg::Abort { reason: d.str()?.to_string() },
             12 => Msg::Fatal { reason: d.str()?.to_string() },
-            13 => Msg::Heartbeat { seq: d.u64()? },
+            13 => Msg::Heartbeat { seq: d.u64()?, metrics: dec_opt_bytes(&mut d)? },
             other => bail!("proto: unknown message tag {other}"),
         };
         if !d.is_empty() {
@@ -742,6 +767,13 @@ mod tests {
             t: 7,
             output: "t=7 sg0:0 ok\n".into(),
             merge: vec![MergeChunk { superstep: 1, src_item: 0, msgs: vec![vec![3]] }],
+            metrics: None,
+        });
+        roundtrip(Msg::Commit {
+            t: 8,
+            output: String::new(),
+            merge: vec![],
+            metrics: Some(vec![1, 2, 3, 4]),
         });
         roundtrip(Msg::CommitAck { committed: 7 });
         roundtrip(Msg::RefreshReq { visible: 11 });
@@ -797,9 +829,10 @@ mod tests {
 
     #[test]
     fn heartbeat_roundtrips() {
-        roundtrip(Msg::Heartbeat { seq: 0 });
-        roundtrip(Msg::Heartbeat { seq: u64::MAX });
-        assert_eq!(Msg::Heartbeat { seq: 7 }.label(), "Heartbeat");
+        roundtrip(Msg::Heartbeat { seq: 0, metrics: None });
+        roundtrip(Msg::Heartbeat { seq: u64::MAX, metrics: None });
+        roundtrip(Msg::Heartbeat { seq: 3, metrics: Some(vec![0xAB; 32]) });
+        assert_eq!(Msg::Heartbeat { seq: 7, metrics: None }.label(), "Heartbeat");
     }
 
     #[test]
@@ -863,7 +896,7 @@ mod tests {
         // retry path handles: a bad frame followed by a good one on a
         // still-synced stream.
         let mut buf = Vec::new();
-        write_msg_corrupted(&mut buf, &Msg::Heartbeat { seq: 1 }).unwrap();
+        write_msg_corrupted(&mut buf, &Msg::Heartbeat { seq: 1, metrics: None }).unwrap();
         write_msg(&mut buf, &Msg::CommitAck { committed: 3 }).unwrap();
         let mut fr = FrameReader::new(&buf[..]);
         assert!(fr.read_frame().unwrap_err().is_crc_mismatch());

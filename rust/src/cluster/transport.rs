@@ -29,6 +29,7 @@ use crate::cluster::proto::{
 };
 use crate::cluster::net::{NetworkClock, NetworkModel};
 use crate::graph::{SubgraphId, Timestep};
+use crate::metrics::{hkeys, Metrics};
 use crate::util::wire::{Dec, Enc};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -305,6 +306,11 @@ pub struct TcpTransportOptions {
     pub part: usize,
     /// Fault injection plan, if any (`--fault-plan`).
     pub injector: Option<Arc<FaultInjector>>,
+    /// This worker's metrics registry. When set, round-trip and barrier
+    /// latencies are recorded into it, and its snapshots are piggybacked
+    /// onto outgoing `Heartbeat`/`Commit` frames (`None` =
+    /// `--no-ship-metrics`: nothing recorded, nothing shipped).
+    pub metrics: Option<Arc<Metrics>>,
 }
 
 impl Default for TcpTransportOptions {
@@ -315,6 +321,7 @@ impl Default for TcpTransportOptions {
             round_deadline: Duration::from_secs(30),
             part: 0,
             injector: None,
+            metrics: None,
         }
     }
 }
@@ -353,6 +360,7 @@ pub struct TcpTransport {
     /// Injection-point prefix, e.g. `host1`.
     point: String,
     injector: Option<Arc<FaultInjector>>,
+    metrics: Option<Arc<Metrics>>,
     /// Kept for its Drop (stops and joins the heartbeat thread).
     _heartbeat: Option<HeartbeatPump>,
 }
@@ -408,6 +416,7 @@ impl TcpTransport {
             let pt = point.clone();
             let interval = opts.heartbeat;
             let stop2 = Arc::clone(&stop);
+            let m = opts.metrics.clone();
             let thread = std::thread::spawn(move || {
                 let mut seq = 0u64;
                 let mut last = Instant::now();
@@ -418,7 +427,13 @@ impl TcpTransport {
                     }
                     last = Instant::now();
                     seq += 1;
-                    if send_on(&w, &pt, inj.as_deref(), &Msg::Heartbeat { seq }).is_err() {
+                    // Piggyback the current absolute metrics snapshot:
+                    // free shipping on an existing frame. Absolute (not
+                    // delta) so a dropped heartbeat loses freshness, not
+                    // data — the coordinator replaces, never adds.
+                    let metrics = m.as_ref().map(|m| m.wire_snapshot().encode());
+                    let hb = Msg::Heartbeat { seq, metrics };
+                    if send_on(&w, &pt, inj.as_deref(), &hb).is_err() {
                         // The barrier thread will see the dead socket;
                         // nothing useful to do here.
                         break;
@@ -436,6 +451,7 @@ impl TcpTransport {
             round_deadline: opts.round_deadline,
             point,
             injector: opts.injector,
+            metrics: opts.metrics,
             _heartbeat: heartbeat,
         }
     }
@@ -500,8 +516,13 @@ impl TcpTransport {
     /// and coordinator aborts all become [`EpochAborted`]; a coordinator
     /// `Fatal` stays a plain error (the run is over).
     fn rpc(&self, msg: &Msg) -> Result<Msg> {
+        let t0 = Instant::now();
         send_on(&self.writer, &self.point, self.injector.as_deref(), msg)?;
-        match self.recv()? {
+        let reply = self.recv()?;
+        if let Some(m) = &self.metrics {
+            m.record_hist(hkeys::ROUND_RTT_US, t0.elapsed().as_micros() as f64);
+        }
+        match reply {
             Msg::Abort { reason } => Err(anyhow::Error::new(EpochAborted(reason))),
             Msg::Fatal { reason } => bail!("coordinator: {reason}"),
             m => Ok(m),
@@ -571,7 +592,14 @@ impl Transport for TcpTransport {
             chunks: x.outbound,
             carry: x.outbound_carry,
         };
-        match self.rpc(&msg)? {
+        let t0 = Instant::now();
+        let reply = self.rpc(&msg)?;
+        if let Some(m) = &self.metrics {
+            // The exchange RPC *is* the barrier: its wall time is how
+            // long this host waited for the slowest peer plus the fold.
+            m.record_hist(hkeys::BARRIER_WAIT_US, t0.elapsed().as_micros() as f64);
+        }
+        match reply {
             Msg::SuperstepResult { proceed, error, net_ns, chunks, carry } => Ok(ExchangeOut {
                 proceed,
                 error,
@@ -587,7 +615,11 @@ impl Transport for TcpTransport {
         // Checkpoint-before-ack: once the coordinator's watermark covers
         // `t`, every host durably holds the carry it needs to run `t+1`.
         self.write_checkpoint(c.timestep, c.carry)?;
-        let msg = Msg::Commit { t: c.timestep as u64, output: c.output, merge: c.merge };
+        // A commit frame carries the freshest possible snapshot — the
+        // engine increments its timestep counter before calling in, so
+        // the coordinator's aggregate is exact at every commit barrier.
+        let metrics = self.metrics.as_ref().map(|m| m.wire_snapshot().encode());
+        let msg = Msg::Commit { t: c.timestep as u64, output: c.output, merge: c.merge, metrics };
         match self.rpc(&msg)? {
             Msg::CommitAck { .. } => Ok(()),
             other => bail!("protocol error: expected CommitAck, got {}", other.label()),

@@ -41,6 +41,7 @@ use crate::gofs::{Store, StoreOptions};
 use crate::gopher::engine::{compute_edge_cut_pct, DistRun};
 use crate::gopher::{Application, GopherEngine, RunOptions};
 use crate::graph::{SubgraphId, Timestep};
+use crate::metrics::journal::Journal;
 use crate::runtime::ScalarBackend;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -181,6 +182,12 @@ pub struct HostConfig {
     pub max_rejoins: u32,
     /// Deterministic fault plan (`--fault-plan`); None = no injection.
     pub fault_plan: Option<PathBuf>,
+    /// Append this worker's lifecycle events (epoch start/abort, rejoin,
+    /// superstep/commit boundaries, fault firings) to this journal file.
+    pub journal: Option<PathBuf>,
+    /// Piggyback metrics snapshots on Heartbeat/Commit frames
+    /// (`--no-ship-metrics` turns this off).
+    pub ship_metrics: bool,
 }
 
 impl Default for HostConfig {
@@ -198,6 +205,8 @@ impl Default for HostConfig {
             retry_base_ms: 100,
             max_rejoins: 0,
             fault_plan: None,
+            journal: None,
+            ship_metrics: true,
         }
     }
 }
@@ -245,12 +254,24 @@ fn connect(
 /// an unrecoverable error. [`EpochAborted`] triggers a rejoin, paced by
 /// exponential backoff and capped by `max_rejoins`.
 pub fn run_host(cfg: &HostConfig) -> Result<()> {
+    // One journal per process: `Journal::open` trims any torn tail left
+    // by a crashed predecessor and resumes its seq stream, so a
+    // supervised respawn appends to the same file. The registry is the
+    // one inside `store_opts` — the same instance the engine, the GoFS
+    // readers, and the transport all record into.
+    let metrics = cfg.store_opts.metrics.clone();
+    if let Some(path) = &cfg.journal {
+        metrics.set_journal(Arc::new(Journal::open(path, &format!("host{}", cfg.part))?));
+    }
     // One injector for the whole process: `nth` counters must span
     // epochs, or a rejoin would replay the same scheduled fault forever.
     let injector = match &cfg.fault_plan {
         Some(path) => Some(Arc::new(FaultInjector::new(FaultPlan::load(path)?))),
         None => None,
     };
+    if let Some(inj) = &injector {
+        inj.set_metrics(metrics.clone());
+    }
     let policy = RetryPolicy::connect(
         Duration::from_millis(cfg.retry_base_ms.max(1)),
         0,
@@ -261,6 +282,8 @@ pub fn run_host(cfg: &HostConfig) -> Result<()> {
         match run_epoch(cfg, injector.as_ref(), &policy) {
             Ok(()) => return Ok(()),
             Err(e) if e.downcast_ref::<EpochAborted>().is_some() => {
+                let reason = e.downcast_ref::<EpochAborted>().map(|a| a.0.clone()).unwrap();
+                metrics.event("epoch_abort", &[("reason", reason.into())]);
                 rejoins += 1;
                 if cfg.max_rejoins != 0 && rejoins > cfg.max_rejoins {
                     return Err(e.context(format!(
@@ -270,6 +293,7 @@ pub fn run_host(cfg: &HostConfig) -> Result<()> {
                 }
                 let pause = policy.delay(rejoins.saturating_sub(1).min(6));
                 eprintln!("host {}: {e:#}; rejoin {rejoins} in {pause:?}", cfg.part);
+                metrics.event("rejoin", &[("attempt", (rejoins as u64).into())]);
                 std::thread::sleep(pause);
                 continue;
             }
@@ -443,7 +467,11 @@ fn run_epoch(
 
     let app = build_app(&app_name, &app_params, total_vertices as usize, &store)?;
     let metrics = cfg.store_opts.metrics.clone();
-    let mut engine = GopherEngine::new(vec![store], ClusterSpec::new(n_hosts), metrics);
+    metrics.event(
+        "epoch_start",
+        &[("resume_from", (resume_from as u64).into()), ("visible", visible.into())],
+    );
+    let mut engine = GopherEngine::new(vec![store], ClusterSpec::new(n_hosts), metrics.clone());
     engine.set_transport(Arc::new(TcpTransport::new(
         conn,
         part_dir,
@@ -453,6 +481,7 @@ fn run_epoch(
             round_deadline: Duration::from_millis(cfg.round_deadline_ms),
             part: cfg.part,
             injector: injector.cloned(),
+            metrics: cfg.ship_metrics.then(|| metrics.clone()),
         },
     )));
     let edge_cut_pct = compute_edge_cut_pct(

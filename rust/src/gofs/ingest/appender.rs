@@ -50,6 +50,10 @@ pub struct IngestOptions {
     pub compact_after: usize,
     /// Target timesteps per compacted group (0 = `compact_after × pack`).
     pub compact_target: usize,
+    /// Registry receiving ingest lifecycle events (`seal`,
+    /// `compaction`) when a journal is attached to it. The default is a
+    /// fresh registry with no journal — events are then no-ops.
+    pub metrics: std::sync::Arc<crate::metrics::Metrics>,
 }
 
 impl Default for IngestOptions {
@@ -61,6 +65,7 @@ impl Default for IngestOptions {
             group_commit: 1,
             compact_after: 0,
             compact_target: 0,
+            metrics: std::sync::Arc::new(crate::metrics::Metrics::new()),
         }
     }
 }
@@ -436,6 +441,13 @@ impl CollectionAppender {
         )?;
         self.stats.sealed_groups += 1;
         self.stats.seal_wall_s += t0.elapsed().as_secs_f64();
+        self.opts.metrics.event(
+            "seal",
+            &[
+                ("group_len", group_len.into()),
+                ("sealed_instances", self.parts[0].meta.n_instances.into()),
+            ],
+        );
         self.seals_since_compact += 1;
         if self.opts.compact_after > 0 && self.seals_since_compact >= self.opts.compact_after {
             self.compact_now()?;
@@ -471,6 +483,16 @@ impl CollectionAppender {
             }
         }
         self.stats.compactions += report.runs_merged;
+        if report.runs_merged > 0 {
+            self.opts.metrics.event(
+                "compaction",
+                &[
+                    ("runs_merged", report.runs_merged.into()),
+                    ("groups_merged", report.groups_merged.into()),
+                    ("slices_written", report.slices_written.into()),
+                ],
+            );
+        }
         Ok(())
     }
 

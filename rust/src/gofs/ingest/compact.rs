@@ -77,6 +77,9 @@ pub struct CompactOptions {
     /// Test-only fault injection; see `CrashPoint`.
     #[doc(hidden)]
     pub crash: CrashPoint,
+    /// Registry receiving a `compaction` lifecycle event per pass when a
+    /// journal is attached to it (default: fresh registry, no journal).
+    pub metrics: std::sync::Arc<crate::metrics::Metrics>,
 }
 
 impl Default for CompactOptions {
@@ -86,6 +89,7 @@ impl Default for CompactOptions {
             compress: true,
             slice_version: VERSION_V2,
             crash: CrashPoint::None,
+            metrics: std::sync::Arc::new(crate::metrics::Metrics::new()),
         }
     }
 }
@@ -161,6 +165,15 @@ pub fn compact_collection(root: &Path, opts: &CompactOptions) -> Result<CompactR
             .with_context(|| format!("compacting part {p}"))?;
     }
     report.wall_s = t0.elapsed().as_secs_f64();
+    opts.metrics.event(
+        "compaction",
+        &[
+            ("runs_merged", report.runs_merged.into()),
+            ("groups_merged", report.groups_merged.into()),
+            ("groups_before", report.groups_before.into()),
+            ("groups_after", report.groups_after.into()),
+        ],
+    );
     Ok(report)
 }
 

@@ -38,7 +38,7 @@ use crate::gofs::ingest::wal;
 use crate::gofs::slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};
 use crate::gofs::writer::{decode_meta_slice, part_dir, GroupEntry, PartMeta};
 use crate::gofs::SliceKey;
-use crate::metrics::{keys, Metrics};
+use crate::metrics::{hkeys, keys, Metrics};
 use crate::partition::{BinPacking, RemoteEdge, Subgraph};
 use crate::util::wire::Dec;
 use anyhow::{bail, Context, Result};
@@ -805,6 +805,9 @@ impl Store {
             m.add(keys::SLICE_BYTES, bytes);
             m.add(keys::SLICE_READ_NS, real_ns);
             m.add(keys::SIM_DISK_NS, sim);
+            // Cold-read latency distribution (cache miss -> disk ->
+            // header decode); the counters above only carry the sum.
+            m.record_hist(hkeys::SLICE_COLD_READ_US, real_ns as f64 / 1_000.0);
             did_read = true;
             read_bytes = bytes;
             read_disk_ns = sim;

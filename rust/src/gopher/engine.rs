@@ -1364,14 +1364,19 @@ impl GopherEngine {
                 );
             }
             carry = next;
+            // Count the timestep *before* committing: the Commit frame
+            // piggybacks a metrics snapshot, and the snapshot taken at
+            // the barrier must already include the timestep it commits
+            // (the coordinator-side parity check is exact).
+            self.metrics.incr(keys::TIMESTEPS);
             self.transport.commit_timestep(CommitIn {
                 timestep: t,
                 output: emit(t),
                 merge: merge_chunks,
                 carry: &carry,
             })?;
+            self.metrics.event("barrier_commit", &[("t", (t as u64).into())]);
             stats.per_timestep.push(ts_stats);
-            self.metrics.incr(keys::TIMESTEPS);
             // The lockstep loop completes strictly in order on every
             // host, so the emission watermark is simply "this one".
             app.on_timestep_complete(t);
@@ -1716,6 +1721,8 @@ impl GopherEngine {
                 }
             });
             self.metrics.incr(keys::SUPERSTEPS);
+            self.metrics
+                .event("superstep", &[("t", (t as u64).into()), ("s", (superstep as u64).into())]);
 
             // --- Barrier: finish routing. Without overlapped routing,
             // stage every outbox here instead (single-threaded, item

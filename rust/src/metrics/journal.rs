@@ -1,0 +1,299 @@
+//! Structured lifecycle event journal: CRC-framed JSONL, torn-tail
+//! tolerant.
+//!
+//! Every distributed process (host, coordinator) can append lifecycle
+//! events — epoch start/abort, timestep/superstep boundaries, barrier
+//! commits, crash detection, fault-plan rule firings, rejoins, ingest
+//! seals and compactions — to an on-disk journal. Frames reuse the WAL
+//! framing idiom (`gofs::ingest::wal`):
+//!
+//! ```text
+//! frame:  offset  size  field
+//!         0       4     magic "GJN1"
+//!         4       4     payload length (LE u32)
+//!         8       4     crc32 of payload (LE u32)
+//!         12      ...   payload: one JSON object, no trailing newline
+//! ```
+//!
+//! so a crashed process's journal is still readable: [`replay`] stops
+//! (not errors) at the first torn or corrupt tail frame, and
+//! [`Journal::open`] truncates to that valid prefix and resumes the
+//! sequence numbering where it left off — a supervised host that is
+//! killed and respawned keeps one strictly-increasing `seq` stream per
+//! file.
+//!
+//! Every event payload carries `seq` (per-file monotonic), `host`,
+//! `mono_us` (microseconds since the current incarnation opened the
+//! journal — wall-clock-free but *not* deterministic) and `event`, plus
+//! event-specific fields. Determinism contract: for a fixed fault plan +
+//! seed, the event *sequence* of a host journal — everything except
+//! `mono_us` — replays bit-identically (`tools/check_journal.py --canon`
+//! strips `mono_us` for comparison). Heartbeat traffic is therefore
+//! never journaled: its timing is scheduler-dependent.
+
+use crate::util::json::{escape, Json};
+use anyhow::{Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+const FRAME_MAGIC: &[u8; 4] = b"GJN1";
+const FRAME_HEADER: usize = 12;
+
+/// One event field value. `From` impls keep call sites terse:
+/// `("t", t.into())`.
+#[derive(Debug, Clone)]
+pub enum Field {
+    U64(u64),
+    I64(i64),
+    Str(String),
+}
+
+impl From<u64> for Field {
+    fn from(v: u64) -> Field {
+        Field::U64(v)
+    }
+}
+
+impl From<u32> for Field {
+    fn from(v: u32) -> Field {
+        Field::U64(v as u64)
+    }
+}
+
+impl From<usize> for Field {
+    fn from(v: usize) -> Field {
+        Field::U64(v as u64)
+    }
+}
+
+impl From<i64> for Field {
+    fn from(v: i64) -> Field {
+        Field::I64(v)
+    }
+}
+
+impl From<&str> for Field {
+    fn from(v: &str) -> Field {
+        Field::Str(v.to_string())
+    }
+}
+
+impl From<String> for Field {
+    fn from(v: String) -> Field {
+        Field::Str(v)
+    }
+}
+
+/// Append-side handle. Thread-safe; appends are whole frames under one
+/// lock, so concurrent writers interleave at frame granularity. IO
+/// errors after open are swallowed — observability must never take down
+/// the run it is observing.
+pub struct Journal {
+    path: PathBuf,
+    host: String,
+    t0: Instant,
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    file: File,
+    seq: u64,
+}
+
+impl std::fmt::Debug for Journal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Journal({})", self.path.display())
+    }
+}
+
+impl Journal {
+    /// Open (or create) the journal at `path`, truncating any torn tail
+    /// and resuming `seq` after the last intact event.
+    pub fn open(path: &Path, host: &str) -> Result<Journal> {
+        let (events, valid_len) = replay_prefix(path)?;
+        let seq = events
+            .last()
+            .and_then(|line| Json::parse(line).ok())
+            .and_then(|v| v.get("seq").and_then(Json::as_u64))
+            .map(|s| s + 1)
+            .unwrap_or(0);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        file.set_len(valid_len)
+            .with_context(|| format!("truncating journal {} to {valid_len}", path.display()))?;
+        file.seek(SeekFrom::End(0))?;
+        Ok(Journal {
+            path: path.to_path_buf(),
+            host: host.to_string(),
+            t0: Instant::now(),
+            inner: Mutex::new(Inner { file, seq }),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one event frame. Best-effort: a full disk or yanked file
+    /// drops the event, never the run.
+    pub fn event(&self, kind: &str, fields: &[(&str, Field)]) {
+        let mut inner = self.inner.lock().unwrap();
+        let seq = inner.seq;
+        inner.seq += 1;
+        let mono_us = self.t0.elapsed().as_micros() as u64;
+        let mut line = format!(
+            "{{\"seq\":{seq},\"host\":\"{}\",\"mono_us\":{mono_us},\"event\":\"{}\"",
+            escape(&self.host),
+            escape(kind)
+        );
+        for (k, v) in fields {
+            line.push_str(&format!(",\"{}\":", escape(k)));
+            match v {
+                Field::U64(n) => line.push_str(&n.to_string()),
+                Field::I64(n) => line.push_str(&n.to_string()),
+                Field::Str(s) => line.push_str(&format!("\"{}\"", escape(s))),
+            }
+        }
+        line.push('}');
+        let payload = line.as_bytes();
+        let mut buf = Vec::with_capacity(FRAME_HEADER + payload.len());
+        buf.extend_from_slice(FRAME_MAGIC);
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&crc32fast::hash(payload).to_le_bytes());
+        buf.extend_from_slice(payload);
+        let _ = inner.file.write_all(&buf);
+        let _ = inner.file.flush();
+    }
+}
+
+/// Scan `path` and return every intact event payload (JSON text),
+/// stopping — not erroring — at the first torn or corrupt tail frame. A
+/// missing file is an empty journal.
+pub fn replay(path: &Path) -> Result<Vec<String>> {
+    Ok(replay_prefix(path)?.0)
+}
+
+fn replay_prefix(path: &Path) -> Result<(Vec<String>, u64)> {
+    let data = match std::fs::read(path) {
+        Ok(d) => d,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok((Vec::new(), 0)),
+        Err(e) => return Err(e).with_context(|| format!("reading journal {}", path.display())),
+    };
+    let mut events = Vec::new();
+    let mut off = 0usize;
+    while off + FRAME_HEADER <= data.len() {
+        if &data[off..off + 4] != FRAME_MAGIC {
+            break; // garbage tail
+        }
+        let len = u32::from_le_bytes(data[off + 4..off + 8].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(data[off + 8..off + 12].try_into().unwrap());
+        let Some(end) = (off + FRAME_HEADER).checked_add(len) else { break };
+        if end > data.len() {
+            break; // torn tail frame
+        }
+        let payload = &data[off + FRAME_HEADER..end];
+        if crc32fast::hash(payload) != crc {
+            break; // corrupt tail frame
+        }
+        match std::str::from_utf8(payload) {
+            Ok(s) => events.push(s.to_string()),
+            Err(_) => break, // CRC collision on garbage: treat as tail
+        }
+        off = end;
+    }
+    Ok((events, off as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("goffish-journal-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d.join("events.jnl")
+    }
+
+    #[test]
+    fn append_and_replay_roundtrip() {
+        let path = tmp("roundtrip");
+        let j = Journal::open(&path, "host0").unwrap();
+        j.event("epoch_start", &[("epoch", 1u64.into())]);
+        j.event("superstep", &[("t", 0u64.into()), ("s", 3u64.into())]);
+        j.event("note", &[("msg", "hi \"there\"\n".into())]);
+        let events = replay(&path).unwrap();
+        assert_eq!(events.len(), 3);
+        let v = Json::parse(&events[0]).unwrap();
+        assert_eq!(v.get("seq").unwrap().as_u64(), Some(0));
+        assert_eq!(v.get("host").unwrap().as_str(), Some("host0"));
+        assert_eq!(v.get("event").unwrap().as_str(), Some("epoch_start"));
+        assert_eq!(v.get("epoch").unwrap().as_u64(), Some(1));
+        assert!(v.get("mono_us").unwrap().as_u64().is_some());
+        let v2 = Json::parse(&events[2]).unwrap();
+        assert_eq!(v2.get("seq").unwrap().as_u64(), Some(2));
+        assert_eq!(v2.get("msg").unwrap().as_str(), Some("hi \"there\"\n"));
+    }
+
+    #[test]
+    fn torn_tail_is_tolerated_and_seq_resumes() {
+        let path = tmp("torn");
+        {
+            let j = Journal::open(&path, "h").unwrap();
+            j.event("a", &[]);
+            j.event("b", &[]);
+        }
+        // Tear the tail: chop the last 5 bytes of the final frame.
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 5).unwrap();
+        drop(f);
+        let events = replay(&path).unwrap();
+        assert_eq!(events.len(), 1, "torn frame dropped");
+        // Reopen: valid prefix kept, seq continues after event "a" (seq 0).
+        let j = Journal::open(&path, "h").unwrap();
+        j.event("c", &[]);
+        let events = replay(&path).unwrap();
+        assert_eq!(events.len(), 2);
+        let v = Json::parse(&events[1]).unwrap();
+        assert_eq!(v.get("seq").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("event").unwrap().as_str(), Some("c"));
+    }
+
+    #[test]
+    fn corrupt_tail_is_tolerated() {
+        let path = tmp("corrupt");
+        {
+            let j = Journal::open(&path, "h").unwrap();
+            j.event("a", &[]);
+            j.event("b", &[]);
+        }
+        // Flip a payload byte in the last frame.
+        let mut data = std::fs::read(&path).unwrap();
+        let n = data.len();
+        data[n - 1] ^= 0xFF;
+        std::fs::write(&path, &data).unwrap();
+        let events = replay(&path).unwrap();
+        assert_eq!(events.len(), 1);
+        assert!(Json::parse(&events[0]).unwrap().get("event").unwrap().as_str() == Some("a"));
+    }
+
+    #[test]
+    fn missing_file_is_empty() {
+        let path = tmp("missing");
+        assert!(replay(&path).unwrap().is_empty());
+    }
+}

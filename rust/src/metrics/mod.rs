@@ -5,9 +5,15 @@
 //! message counts (subgraph- vs vertex-centric comparison). Components
 //! record into a [`Metrics`] registry; benches snapshot/diff it.
 
+pub mod journal;
+
+use crate::util::histogram::Histogram;
+use crate::util::wire::{Dec, Enc};
+use anyhow::{bail, Result};
+use journal::{Field, Journal};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Counter identifiers used across the platform.
@@ -40,13 +46,83 @@ pub mod keys {
     pub const SIM_NET_NS: &str = "cluster.sim_net_ns";
     pub const KERNEL_CALLS: &str = "runtime.kernel_calls";
     pub const KERNEL_NS: &str = "runtime.kernel_ns";
+    /// Heartbeats received from a host (coordinator-side, labeled).
+    pub const HEARTBEATS: &str = "cluster.heartbeats";
+    /// Timestep commits received from a host (coordinator-side, labeled).
+    pub const COMMITS: &str = "cluster.commits";
+    /// Epoch teardowns observed (coordinator-side, unlabeled).
+    pub const EPOCH_ABORTS: &str = "cluster.epoch_aborts";
+
+    /// A per-host labeled variant of a counter key (`base.h<host>`), for
+    /// registries that aggregate several hosts (the coordinator).
+    pub fn labeled(base: &str, host: usize) -> String {
+        format!("{base}.h{host}")
+    }
+}
+
+/// Histogram metric identifiers, with per-key bucket layouts. Latency
+/// distributions, not counters: the paper's evaluation (Figs. 6–8)
+/// needs tails, not just sums.
+pub mod hkeys {
+    /// Cold slice read, microseconds (cache miss -> disk -> decode).
+    pub const SLICE_COLD_READ_US: &str = "gofs.slice_cold_read_us";
+    /// One lockstep round trip (send -> coordinator reply), microseconds.
+    pub const ROUND_RTT_US: &str = "cluster.round_rtt_us";
+    /// Superstep exchange barrier wait, microseconds.
+    pub const BARRIER_WAIT_US: &str = "gopher.barrier_wait_us";
+    /// Gap between consecutive heartbeats from one host, milliseconds
+    /// (coordinator-side).
+    pub const HEARTBEAT_GAP_MS: &str = "cluster.heartbeat_gap_ms";
+    /// Crash detection to first commit of the recovered epoch,
+    /// milliseconds (coordinator-side).
+    pub const REJOIN_RECOVERY_MS: &str = "cluster.rejoin_recovery_ms";
+
+    /// `(lo, hi, buckets)` layout for `key`. Fixed per key so host and
+    /// coordinator histograms always fold without reshaping; unknown
+    /// keys get a generic wide layout.
+    pub fn bounds(key: &str) -> (f64, f64, usize) {
+        // A labeled key (`base.h<k>`) shares its base layout.
+        let base = match key.rfind(".h") {
+            Some(i) if key[i + 2..].chars().all(|c| c.is_ascii_digit()) && i + 2 < key.len() => {
+                &key[..i]
+            }
+            _ => key,
+        };
+        match base {
+            SLICE_COLD_READ_US => (0.0, 50_000.0, 64),
+            ROUND_RTT_US => (0.0, 500_000.0, 64),
+            BARRIER_WAIT_US => (0.0, 500_000.0, 64),
+            HEARTBEAT_GAP_MS => (0.0, 4_000.0, 64),
+            REJOIN_RECOVERY_MS => (0.0, 32_000.0, 64),
+            _ => (0.0, 1_000_000.0, 64),
+        }
+    }
+
+    /// A fresh, empty histogram with `key`'s canonical layout.
+    pub fn fresh(key: &str) -> super::Histogram {
+        let (lo, hi, n) = bounds(key);
+        super::Histogram::new(lo, hi, n)
+    }
 }
 
 /// A thread-safe metrics registry. Cheap to clone (Arc inside callers);
 /// counters are lock-free, the name table is a mutex-protected map.
+/// Histograms live behind one mutex (recorded on cold paths only), and
+/// an optional [`Journal`] receives lifecycle events from components
+/// that hold the registry but not the journal itself.
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, std::sync::Arc<AtomicU64>>>,
+    hists: Mutex<BTreeMap<String, Histogram>>,
+    journal: Mutex<Option<Arc<Journal>>>,
+}
+
+impl std::fmt::Debug for Metrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Terse on purpose: the registry rides inside Debug-derived
+        // option structs, and dumping every counter there is noise.
+        write!(f, "Metrics({} counters)", self.counters.lock().unwrap().len())
+    }
 }
 
 impl Metrics {
@@ -90,11 +166,82 @@ impl Metrics {
         }
     }
 
-    /// Reset all counters to zero.
+    /// Reset all counters to zero and clear all histograms.
     pub fn reset(&self) {
         let map = self.counters.lock().unwrap();
         for v in map.values() {
             v.store(0, Ordering::Relaxed);
+        }
+        self.hists.lock().unwrap().clear();
+    }
+
+    /// Record one sample into histogram `key`, creating it with the
+    /// [`hkeys::bounds`] layout on first use.
+    pub fn record_hist(&self, key: &str, x: f64) {
+        let mut map = self.hists.lock().unwrap();
+        map.entry(key.to_string()).or_insert_with(|| hkeys::fresh(key)).record(x);
+    }
+
+    /// Fold an external histogram into `key`. Shapes are fixed per key
+    /// via [`hkeys`], so both sides normally match and this is a
+    /// pointwise merge; on a shape mismatch (layouts changed between
+    /// versions) the newer histogram replaces the old one — buckets
+    /// cannot be re-binned without the raw samples.
+    pub fn fold_hist(&self, key: &str, other: &Histogram) {
+        let mut map = self.hists.lock().unwrap();
+        match map.entry(key.to_string()) {
+            std::collections::btree_map::Entry::Vacant(e) => {
+                e.insert(other.clone());
+            }
+            std::collections::btree_map::Entry::Occupied(mut e) => {
+                let h = e.get_mut();
+                if h.counts().len() == other.counts().len()
+                    && (h.lo(), h.hi()) == (other.lo(), other.hi())
+                {
+                    h.fold(other);
+                } else {
+                    *h = other.clone();
+                }
+            }
+        }
+    }
+
+    /// Clone of histogram `key`, if any samples were recorded.
+    pub fn hist(&self, key: &str) -> Option<Histogram> {
+        self.hists.lock().unwrap().get(key).cloned()
+    }
+
+    /// All histograms, cloned (coordinator dump path).
+    pub fn hists(&self) -> BTreeMap<String, Histogram> {
+        self.hists.lock().unwrap().clone()
+    }
+
+    /// Attach a lifecycle-event journal; subsequent [`Metrics::event`]
+    /// calls append to it.
+    pub fn set_journal(&self, j: Arc<Journal>) {
+        *self.journal.lock().unwrap() = Some(j);
+    }
+
+    pub fn journal(&self) -> Option<Arc<Journal>> {
+        self.journal.lock().unwrap().clone()
+    }
+
+    /// Append a lifecycle event to the attached journal, if any. A no-op
+    /// without one, so hot paths can call this unconditionally.
+    pub fn event(&self, kind: &str, fields: &[(&str, Field)]) {
+        if let Some(j) = self.journal.lock().unwrap().as_ref() {
+            j.event(kind, fields);
+        }
+    }
+
+    /// Full state — counters, histograms, and this process's
+    /// incarnation — in the compact wire form shipped to the
+    /// coordinator.
+    pub fn wire_snapshot(&self) -> WireSnapshot {
+        WireSnapshot {
+            incarnation: std::process::id() as u64,
+            counters: self.snapshot().values,
+            hists: self.hists(),
         }
     }
 }
@@ -110,11 +257,17 @@ impl Snapshot {
         self.values.get(key).copied().unwrap_or(0)
     }
 
-    /// Counter-wise `self - earlier` (saturating).
+    /// Counter-wise `self - earlier` (saturating) over the *union* of
+    /// keys: a key present only in `earlier` (e.g. the registry was
+    /// swapped for a fresh one between snapshots) still appears in the
+    /// diff, 0-saturated, instead of silently vanishing.
     pub fn since(&self, earlier: &Snapshot) -> Snapshot {
         let mut values = BTreeMap::new();
         for (k, &v) in &self.values {
             values.insert(k.clone(), v.saturating_sub(earlier.get(k)));
+        }
+        for k in earlier.values.keys() {
+            values.entry(k.clone()).or_insert(0);
         }
         Snapshot { values }
     }
@@ -125,6 +278,81 @@ impl Snapshot {
             .map(|(k, v)| format!("{k}={v}"))
             .collect::<Vec<_>>()
             .join(" ")
+    }
+}
+
+/// A registry's full state in compact wire form: absolute counter
+/// values, histograms, and the incarnation id of the recording process
+/// (so an aggregator can tell a restart from a rollback). Shipped
+/// piggybacked on existing `Heartbeat`/`Commit` frames — never its own
+/// round trip — and therefore size-bounded: [`WireSnapshot::encode`]
+/// drops the histogram section if the frame would exceed
+/// [`WireSnapshot::MAX_BYTES`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WireSnapshot {
+    pub incarnation: u64,
+    pub counters: BTreeMap<String, u64>,
+    pub hists: BTreeMap<String, Histogram>,
+}
+
+impl WireSnapshot {
+    /// Hard ceiling on the encoded size (64 KiB — tiny next to the
+    /// 1 GiB frame cap, but piggyback payloads ride every heartbeat).
+    pub const MAX_BYTES: usize = 64 * 1024;
+
+    pub fn encode(&self) -> Vec<u8> {
+        let full = self.encode_with_hists(true);
+        if full.len() <= Self::MAX_BYTES {
+            full
+        } else {
+            self.encode_with_hists(false)
+        }
+    }
+
+    fn encode_with_hists(&self, with_hists: bool) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u64(self.incarnation);
+        e.varint(self.counters.len() as u64);
+        for (k, v) in &self.counters {
+            e.str(k);
+            e.u64(*v);
+        }
+        if with_hists {
+            e.varint(self.hists.len() as u64);
+            for (k, h) in &self.hists {
+                e.str(k);
+                e.bytes(&h.to_bytes());
+            }
+        } else {
+            e.varint(0);
+        }
+        e.finish()
+    }
+
+    pub fn decode(b: &[u8]) -> Result<WireSnapshot> {
+        let mut d = Dec::new(b);
+        let incarnation = d.u64()?;
+        let n = d.varint()? as usize;
+        let mut counters = BTreeMap::new();
+        for _ in 0..n {
+            let k = d.str()?.to_string();
+            let v = d.u64()?;
+            counters.insert(k, v);
+        }
+        let n = d.varint()? as usize;
+        let mut hists = BTreeMap::new();
+        for _ in 0..n {
+            let k = d.str()?.to_string();
+            let raw = d.bytes()?;
+            let Some(h) = Histogram::from_bytes(raw) else {
+                bail!("wire snapshot: bad histogram for key {k}");
+            };
+            hists.insert(k, h);
+        }
+        if !d.is_empty() {
+            bail!("wire snapshot: {} trailing bytes", d.remaining());
+        }
+        Ok(WireSnapshot { incarnation, counters, hists })
     }
 }
 
@@ -151,6 +379,86 @@ mod tests {
         let d = m.snapshot().since(&s1);
         assert_eq!(d.get("a"), 7);
         assert_eq!(d.get("b"), 2);
+    }
+
+    #[test]
+    fn since_includes_keys_only_in_earlier() {
+        // Regression: keys present only in `earlier` used to vanish from
+        // the diff, which made a registry swap look like the counter
+        // never existed.
+        let m = Metrics::new();
+        m.add("a", 10);
+        m.add("b", 3);
+        let s1 = m.snapshot();
+        let m2 = Metrics::new();
+        m2.add("a", 12);
+        let d = m2.snapshot().since(&s1);
+        assert_eq!(d.get("a"), 2);
+        assert!(d.values.contains_key("b"), "key only in earlier must appear");
+        assert_eq!(d.get("b"), 0); // 0-saturated, not underflowed
+    }
+
+    #[test]
+    fn histograms_record_and_fold() {
+        let m = Metrics::new();
+        assert!(m.hist(hkeys::ROUND_RTT_US).is_none());
+        m.record_hist(hkeys::ROUND_RTT_US, 1500.0);
+        m.record_hist(hkeys::ROUND_RTT_US, 2500.0);
+        let h = m.hist(hkeys::ROUND_RTT_US).unwrap();
+        assert_eq!(h.total(), 2);
+        let other = {
+            let m2 = Metrics::new();
+            m2.record_hist(hkeys::ROUND_RTT_US, 900.0);
+            m2.hist(hkeys::ROUND_RTT_US).unwrap()
+        };
+        m.fold_hist(hkeys::ROUND_RTT_US, &other);
+        assert_eq!(m.hist(hkeys::ROUND_RTT_US).unwrap().total(), 3);
+    }
+
+    #[test]
+    fn labeled_keys_share_base_layout() {
+        let k = keys::labeled(hkeys::HEARTBEAT_GAP_MS, 3);
+        assert_eq!(k, "cluster.heartbeat_gap_ms.h3");
+        assert_eq!(hkeys::bounds(&k), hkeys::bounds(hkeys::HEARTBEAT_GAP_MS));
+    }
+
+    #[test]
+    fn wire_snapshot_roundtrip() {
+        let m = Metrics::new();
+        m.add(keys::SLICES_READ, 7);
+        m.add(keys::SUPERSTEPS, 3);
+        m.record_hist(hkeys::SLICE_COLD_READ_US, 120.0);
+        m.record_hist(hkeys::SLICE_COLD_READ_US, 99_999_999.0); // overflow
+        let ws = m.wire_snapshot();
+        let back = WireSnapshot::decode(&ws.encode()).unwrap();
+        assert_eq!(back, ws);
+        assert_eq!(back.counters.get(keys::SLICES_READ), Some(&7));
+        assert_eq!(back.hists.get(hkeys::SLICE_COLD_READ_US).unwrap().total(), 2);
+    }
+
+    #[test]
+    fn wire_snapshot_over_budget_drops_hists_keeps_counters() {
+        let mut ws = WireSnapshot { incarnation: 1, ..Default::default() };
+        ws.counters.insert("c".into(), 5);
+        // ~70 histograms x 64 buckets x 8 bytes ≈ 36 KiB each... use a
+        // genuinely oversized set: 200 wide histograms.
+        for i in 0..200 {
+            let mut h = Histogram::new(0.0, 1.0, 1024);
+            h.record(0.5);
+            ws.hists.insert(format!("h{i}"), h);
+        }
+        let enc = ws.encode();
+        assert!(enc.len() <= WireSnapshot::MAX_BYTES);
+        let back = WireSnapshot::decode(&enc).unwrap();
+        assert!(back.hists.is_empty(), "hists dropped under size pressure");
+        assert_eq!(back.counters.get("c"), Some(&5));
+    }
+
+    #[test]
+    fn event_without_journal_is_noop() {
+        let m = Metrics::new();
+        m.event("superstep", &[("t", 1u64.into())]); // must not panic
+        assert!(m.journal().is_none());
     }
 
     #[test]

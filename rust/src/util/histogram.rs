@@ -46,6 +46,55 @@ impl Histogram {
         (self.lo + w * i as f64, self.lo + w * (i + 1) as f64)
     }
 
+    pub fn lo(&self) -> f64 {
+        self.lo
+    }
+
+    pub fn hi(&self) -> f64 {
+        self.hi
+    }
+
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    /// Estimate the `q`-quantile (`0.0 ..= 1.0`) from the bucket counts.
+    /// `None` on an empty histogram. Underflow samples resolve to `lo`,
+    /// overflow to `hi`; within a bucket the estimate interpolates
+    /// linearly by rank, so the result always lies inside that bucket's
+    /// bounds.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let total = self.total();
+        if total == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // Rank of the sample we want, 1-based; q=0 still targets the
+        // first sample, q=1 the last.
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = self.underflow;
+        if rank <= seen {
+            return Some(self.lo);
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if rank <= seen + c {
+                let (blo, bhi) = self.bucket_bounds(i);
+                // Position of the target rank within this bucket.
+                let frac = (rank - seen) as f64 / c as f64;
+                return Some(blo + (bhi - blo) * frac);
+            }
+            seen += c;
+        }
+        Some(self.hi)
+    }
+
     /// Pointwise fold of another histogram into this one (the Merge-step
     /// operation of the eventually-dependent pattern). Shapes must match.
     pub fn fold(&mut self, other: &Histogram) {
@@ -168,6 +217,89 @@ mod tests {
         }
         let h2 = Histogram::from_bytes(&h.to_bytes()).unwrap();
         assert_eq!(h, h2);
+    }
+
+    #[test]
+    fn quantile_of_empty_is_none() {
+        let h = Histogram::new(0.0, 10.0, 10);
+        assert_eq!(h.quantile(0.5), None);
+        assert_eq!(h.quantile(0.0), None);
+        assert_eq!(h.quantile(1.0), None);
+    }
+
+    #[test]
+    fn quantile_single_sample_stays_in_its_bucket() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.record(5.5);
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            let v = h.quantile(q).unwrap();
+            assert!((5.0..=6.0).contains(&v), "q={q} gave {v}");
+        }
+    }
+
+    #[test]
+    fn quantile_under_and_overflow_clamp_to_bounds() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.record(-5.0);
+        h.record(-7.0);
+        h.record(100.0);
+        assert_eq!(h.quantile(0.0), Some(0.0)); // underflow -> lo
+        assert_eq!(h.quantile(1.0), Some(10.0)); // overflow -> hi
+    }
+
+    #[test]
+    fn quantile_heavily_skewed() {
+        // 99 samples in the first bucket, 1 in the last: p50 must land in
+        // the first bucket, p99 still in the first, p100 in the last.
+        let mut h = Histogram::new(0.0, 100.0, 10);
+        for _ in 0..99 {
+            h.record(1.0);
+        }
+        h.record(95.0);
+        let p50 = h.quantile(0.5).unwrap();
+        assert!((0.0..10.0).contains(&p50), "p50={p50}");
+        let p99 = h.quantile(0.99).unwrap();
+        assert!((0.0..10.0).contains(&p99), "p99={p99}");
+        let p100 = h.quantile(1.0).unwrap();
+        assert!((90.0..=100.0).contains(&p100), "p100={p100}");
+    }
+
+    #[test]
+    fn fold_is_associative_and_commutative() {
+        // Property: (a+b)+c == a+(b+c) and a+b == b+a for random sample
+        // sets — required once histograms merge across hosts on the wire.
+        crate::util::propcheck::forall(200, |g| {
+            let samples = |g: &mut crate::util::propcheck::Gen| {
+                g.vec(0..=24, |g| g.u64(0..1201) as f64 / 10.0 - 20.0)
+            };
+            let (sa, sb, sc) = (samples(g), samples(g), samples(g));
+            let mk = |s: &[f64]| {
+                let mut h = Histogram::new(0.0, 100.0, 16);
+                for &x in s {
+                    h.record(x);
+                }
+                h
+            };
+            let (a, b, c) = (mk(&sa), mk(&sb), mk(&sc));
+            // (a+b)+c
+            let mut left = a.clone();
+            left.fold(&b);
+            left.fold(&c);
+            // a+(b+c)
+            let mut bc = b.clone();
+            bc.fold(&c);
+            let mut right = a.clone();
+            right.fold(&bc);
+            assert_eq!(left, right, "associativity");
+            // a+b == b+a
+            let mut ab = a.clone();
+            ab.fold(&b);
+            let mut ba = b.clone();
+            ba.fold(&a);
+            assert_eq!(ab, ba, "commutativity");
+            // Round-trip through the wire form preserves the merge.
+            assert_eq!(Histogram::from_bytes(&left.to_bytes()).unwrap(), left);
+        });
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 pub mod bench;
 pub mod histogram;
+pub mod json;
 pub mod prng;
 pub mod propcheck;
 pub mod stats;

@@ -15,7 +15,8 @@ use goffish::datagen::{CollectionSource, TraceRouteGenerator, TraceRouteParams};
 use goffish::gofs::{deploy, open_collection, DeployConfig, DiskModel, StoreOptions};
 use goffish::gopher::{GopherEngine, RunOptions};
 use goffish::graph::SubgraphId;
-use goffish::metrics::Metrics;
+use goffish::metrics::{keys, Metrics};
+use goffish::util::json::Json;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -92,6 +93,7 @@ fn run_cluster(
     params: Vec<(String, String)>,
     follow: bool,
     tag: &str,
+    metrics_out: Option<PathBuf>,
 ) -> String {
     let port_file = dir.join(format!("port-{tag}"));
     let cfg = CoordinatorConfig {
@@ -104,6 +106,7 @@ fn run_cluster(
         // A sealed collection never grows: drain the poll budget fast.
         follow_poll_ms: 1,
         follow_idle_polls: 3,
+        metrics_out,
         ..Default::default()
     };
     let coord = std::thread::spawn(move || run_coordinator(&cfg));
@@ -134,7 +137,7 @@ fn sssp_two_host_run_is_bit_identical_to_in_process() {
     // One line per subgraph per timestep — the emission is total, so a
     // silently skipped partition or timestep cannot pass.
     assert!(!expected.is_empty());
-    let actual = run_cluster(&dir, "sssp", params, false, "sssp");
+    let actual = run_cluster(&dir, "sssp", params, false, "sssp", None);
     assert_eq!(actual, expected, "distributed SSSP output diverged from in-process");
     std::fs::remove_dir_all(&dir).unwrap();
 }
@@ -144,8 +147,70 @@ fn pagerank_two_host_run_is_bit_identical_to_in_process() {
     let (_gen, dir) = deployed("pr");
     let expected = expected_output(&dir, "pagerank", &[]);
     assert!(!expected.is_empty());
-    let actual = run_cluster(&dir, "pagerank", Vec::new(), false, "pr");
+    let actual = run_cluster(&dir, "pagerank", Vec::new(), false, "pr", None);
     assert_eq!(actual, expected, "distributed PageRank output diverged from in-process");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Metric parity: the deterministic counters in the coordinator's
+/// `RUN_METRICS.json` must agree with an in-process run over the same
+/// collection. Supersteps and timesteps advance in lockstep, so every
+/// host's count equals the single-engine count exactly; slice reads are
+/// partitioned, so they must *sum* to the single-engine total. This
+/// pins down the whole shipping path — worker snapshot encode, piggyback
+/// on Heartbeat/Commit frames, coordinator aggregation, JSON dump.
+#[test]
+fn cluster_metrics_agree_with_in_process_counters() {
+    let (gen, dir) = deployed("parity");
+    let params = sssp_params(&gen);
+
+    // In-process ground truth, counters captured from the run's registry.
+    let metrics = Arc::new(Metrics::new());
+    let o = StoreOptions { metrics: metrics.clone(), ..store_opts() };
+    let stores = open_collection(&dir, &o).unwrap();
+    let total_vertices: usize = stores
+        .iter()
+        .map(|s| s.shared().subgraphs.iter().map(|g| g.n_vertices()).sum::<usize>())
+        .sum();
+    let app = build_app("sssp", &params, total_vertices, stores[0].as_ref()).unwrap();
+    let eng = GopherEngine::new(stores, ClusterSpec::new(N_HOSTS), metrics.clone());
+    eng.run(app.as_app(), &RunOptions::default()).unwrap();
+    let exp_supersteps = metrics.get(keys::SUPERSTEPS);
+    let exp_timesteps = metrics.get(keys::TIMESTEPS);
+    let exp_slices = metrics.get(keys::SLICES_READ);
+    assert!(exp_supersteps > 0 && exp_timesteps > 0 && exp_slices > 0);
+
+    let mpath = dir.join("RUN_METRICS.json");
+    run_cluster(&dir, "sssp", params, false, "parity", Some(mpath.clone()));
+
+    let doc = Json::parse(&std::fs::read_to_string(&mpath).unwrap()).unwrap();
+    assert_eq!(doc.get("n_hosts").and_then(|v| v.as_u64()), Some(N_HOSTS as u64));
+    let hosts = doc.get("hosts").expect("dump has no hosts block");
+    let counter = |h: &str, k: &str| -> u64 {
+        hosts
+            .get(h)
+            .and_then(|b| b.get("counters"))
+            .and_then(|c| c.get(k))
+            .and_then(|v| v.as_u64())
+            .unwrap_or(0)
+    };
+    for h in ["0", "1"] {
+        assert_eq!(
+            counter(h, keys::SUPERSTEPS),
+            exp_supersteps,
+            "host {h} superstep count diverged from in-process"
+        );
+        assert_eq!(
+            counter(h, keys::TIMESTEPS),
+            exp_timesteps,
+            "host {h} timestep count diverged from in-process"
+        );
+    }
+    assert_eq!(
+        counter("0", keys::SLICES_READ) + counter("1", keys::SLICES_READ),
+        exp_slices,
+        "summed per-host slice reads diverged from in-process"
+    );
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
@@ -158,7 +223,7 @@ fn pagerank_two_host_run_is_bit_identical_to_in_process() {
 fn pagerank_follow_run_drains_the_collection_bit_identically() {
     let (_gen, dir) = deployed("follow");
     let expected = expected_output(&dir, "pagerank", &[]);
-    let actual = run_cluster(&dir, "pagerank", Vec::new(), true, "follow");
+    let actual = run_cluster(&dir, "pagerank", Vec::new(), true, "follow", None);
     assert_eq!(actual, expected, "distributed follow run diverged from in-process");
     std::fs::remove_dir_all(&dir).unwrap();
 }

@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Validate a goffish event journal (metrics::journal) offline.
+
+Frame format (see rust/src/metrics/journal.rs and docs/OBSERVABILITY.md):
+
+    offset  size  field
+    0       4     magic "GJN1"
+    4       4     payload length (LE u32)
+    8       4     crc32 of payload (LE u32)
+    12      ...   payload: one JSON object, no trailing newline
+
+Default mode validates framing and event schema for every file given:
+each payload must be a JSON object carrying `seq` (starting at 0,
+strictly consecutive), `host` (constant per file), `mono_us`
+(non-negative int) and a non-empty `event` string. A torn or corrupt
+*tail* is tolerated by design (the writer's crash window); trailing
+bytes after the last intact frame are reported but only fail the check
+under --strict.
+
+--canon prints each event re-serialized with sorted keys and `mono_us`
+stripped — the canonical sequence that must be bit-identical across two
+runs with the same fault plan + seed (the determinism contract;
+tools/smoke_chaos.sh diffs these).
+
+Exit status: 0 clean, 1 on any validation failure.
+"""
+
+import argparse
+import json
+import struct
+import sys
+import zlib
+
+MAGIC = b"GJN1"
+HEADER = 12
+
+
+def read_frames(data):
+    """Yield intact payloads; return (payloads, trailing_bytes)."""
+    payloads = []
+    off = 0
+    while off + HEADER <= len(data):
+        if data[off : off + 4] != MAGIC:
+            break
+        length, crc = struct.unpack_from("<II", data, off + 4)
+        end = off + HEADER + length
+        if end > len(data):
+            break  # torn tail frame
+        payload = data[off + HEADER : end]
+        if zlib.crc32(payload) & 0xFFFFFFFF != crc:
+            break  # corrupt tail frame
+        payloads.append(payload)
+        off = end
+    return payloads, len(data) - off
+
+
+def check_file(path, canon, strict):
+    errors = []
+    try:
+        with open(path, "rb") as f:
+            data = f.read()
+    except OSError as e:
+        return [f"{path}: unreadable: {e}"]
+    payloads, trailing = read_frames(data)
+    host = None
+    for i, payload in enumerate(payloads):
+        where = f"{path}: frame {i}"
+        try:
+            ev = json.loads(payload.decode("utf-8"))
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            errors.append(f"{where}: payload is not JSON: {e}")
+            continue
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: payload is not an object")
+            continue
+        for key in ("seq", "host", "mono_us", "event"):
+            if key not in ev:
+                errors.append(f"{where}: missing required field {key!r}")
+        if ev.get("seq") != i:
+            errors.append(f"{where}: seq {ev.get('seq')!r}, expected {i}")
+        if host is None:
+            host = ev.get("host")
+        elif ev.get("host") != host:
+            errors.append(
+                f"{where}: host {ev.get('host')!r} changed mid-file "
+                f"(was {host!r})"
+            )
+        if not (isinstance(ev.get("mono_us"), int) and ev["mono_us"] >= 0):
+            errors.append(f"{where}: mono_us {ev.get('mono_us')!r} invalid")
+        if not (isinstance(ev.get("event"), str) and ev["event"]):
+            errors.append(f"{where}: event {ev.get('event')!r} invalid")
+        if canon and not errors:
+            ev.pop("mono_us", None)
+            print(json.dumps(ev, sort_keys=True, separators=(",", ":")))
+    if trailing:
+        note = f"{path}: {trailing} trailing bytes after last intact frame"
+        if strict:
+            errors.append(note)
+        else:
+            print(f"note: {note} (torn tail tolerated)", file=sys.stderr)
+    if not errors and not canon:
+        print(f"ok {path}: {len(payloads)} events, host={host!r}")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="+", help="journal file(s) to check")
+    ap.add_argument(
+        "--canon",
+        action="store_true",
+        help="print the canonical event sequence (mono_us stripped, "
+        "sorted keys) to stdout",
+    )
+    ap.add_argument(
+        "--strict",
+        action="store_true",
+        help="fail on trailing bytes after the last intact frame",
+    )
+    args = ap.parse_args()
+    errors = []
+    for path in args.files:
+        errors.extend(check_file(path, args.canon, args.strict))
+    for e in errors:
+        print(f"error: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,6 +8,17 @@
 # distributed output must still agree with the fault-free in-process
 # run — recovery has to be invisible in the result.
 #
+# The scenario runs TWICE with the same plan + seed, with the
+# observability plane on (per-process journals, metric shipping,
+# RUN_METRICS.json). That checks the determinism contract
+# (docs/OBSERVABILITY.md): the canonical host journal event sequences
+# (mono_us stripped) must be bit-identical across the two runs, and the
+# coordinator dump must carry per-host heartbeat-gap and
+# rejoin-recovery histograms. The plan deliberately has no Heartbeat
+# rules — heartbeat timing is scheduler-dependent, so faults there
+# would (correctly) break sequence determinism; that path is covered by
+# rust/tests/distributed.rs instead.
+#
 # Usage: tools/smoke_chaos.sh  (after `cd rust && cargo build --release`)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -42,49 +53,102 @@ fi
 
 # The seeded fault schedule for host 1 (deterministic; counters reset in
 # each respawned incarnation, so `exit` fires once per life until the
-# run outlives the remaining commits).
+# run outlives the remaining commits). Every injection point here fires
+# at a protocol-deterministic position — see the header for why no
+# Heartbeat rules.
 cat >"$WORK/faults.plan" <<'EOF'
 seed 42
 on host1.send.Superstep nth 4 delay 40
-on host1.send.Heartbeat nth 2 corrupt
+on host1.send.Superstep nth 9 corrupt
 on host1.send.Commit    nth 3 exit 70
 on host1.connect        nth 2 delay 25
 EOF
 
-"$BIN" coordinator --hosts 2 --app sssp --source "$SOURCE" \
-    --listen 127.0.0.1:0 --port-file "$WORK/port" --out "$WORK/dist.out" \
-    --heartbeat-ms 100 --round-deadline-ms 5000 --join-deadline-ms 120000 &
-COORD=$!
-for _ in $(seq 1 200); do
-    [ -f "$WORK/port" ] && break
-    sleep 0.1
-done
-PORT=$(cat "$WORK/port")
-"$BIN" host --store "$STORE" --part 0 --connect "127.0.0.1:$PORT" \
-    --step-delay-ms 10 --heartbeat-ms 100 &
-H0=$!
-"$BIN" supervise --store "$STORE" --part 1 --connect "127.0.0.1:$PORT" \
-    --step-delay-ms 10 --heartbeat-ms 100 \
-    --fault-plan "$WORK/faults.plan" \
-    --max-restarts 10 --restart-backoff-ms 100 \
-    --child-pid-file "$WORK/host1.pid" &
-H1=$!
-wait "$COORD" "$H0" "$H1"
+run_chaos() {
+    local TAG=$1
+    "$BIN" coordinator --hosts 2 --app sssp --source "$SOURCE" \
+        --listen 127.0.0.1:0 --port-file "$WORK/port-$TAG" \
+        --out "$WORK/dist-$TAG.out" \
+        --heartbeat-ms 100 --round-deadline-ms 5000 --join-deadline-ms 120000 \
+        --metrics-out "$WORK/RUN_METRICS-$TAG.json" \
+        --journal "$WORK/coord-$TAG.jnl" &
+    local COORD=$!
+    for _ in $(seq 1 200); do
+        [ -f "$WORK/port-$TAG" ] && break
+        sleep 0.1
+    done
+    local PORT
+    PORT=$(cat "$WORK/port-$TAG")
+    "$BIN" host --store "$STORE" --part 0 --connect "127.0.0.1:$PORT" \
+        --step-delay-ms 10 --heartbeat-ms 100 \
+        --journal "$WORK/host0-$TAG.jnl" &
+    local H0=$!
+    "$BIN" supervise --store "$STORE" --part 1 --connect "127.0.0.1:$PORT" \
+        --step-delay-ms 10 --heartbeat-ms 100 \
+        --fault-plan "$WORK/faults.plan" \
+        --max-restarts 10 --restart-backoff-ms 100 \
+        --child-pid-file "$WORK/host1-$TAG.pid" \
+        --journal "$WORK/host1-$TAG.jnl" &
+    local H1=$!
+    wait "$COORD" "$H0" "$H1"
 
-# Same agreement check as the fault-free smoke: full timestep coverage
-# and the final-timestep reachable total.
-TIMESTEPS=$(cut -d' ' -f1 "$WORK/dist.out" | sort -u | wc -l)
-if [ "$TIMESTEPS" -ne 8 ]; then
-    echo "error: chaos output covers $TIMESTEPS timesteps, expected 8" >&2
-    exit 1
-fi
-GOT=$(awk -v want="t=$LAST_T" \
-    '$1 == want { split($3, a, "="); s += a[2] } END { print s + 0 }' \
-    "$WORK/dist.out")
-if [ "$GOT" != "$EXPECTED" ]; then
-    echo "error: chaos SSSP reached $GOT vertices at t=$LAST_T," \
-         "in-process reached $EXPECTED" >&2
-    exit 1
-fi
+    # Same agreement check as the fault-free smoke: full timestep
+    # coverage and the final-timestep reachable total.
+    local TIMESTEPS GOT
+    TIMESTEPS=$(cut -d' ' -f1 "$WORK/dist-$TAG.out" | sort -u | wc -l)
+    if [ "$TIMESTEPS" -ne 8 ]; then
+        echo "error: chaos output ($TAG) covers $TIMESTEPS timesteps, expected 8" >&2
+        exit 1
+    fi
+    GOT=$(awk -v want="t=$LAST_T" \
+        '$1 == want { split($3, a, "="); s += a[2] } END { print s + 0 }' \
+        "$WORK/dist-$TAG.out")
+    if [ "$GOT" != "$EXPECTED" ]; then
+        echo "error: chaos SSSP ($TAG) reached $GOT vertices at t=$LAST_T," \
+             "in-process reached $EXPECTED" >&2
+        exit 1
+    fi
+}
+
+run_chaos a
+run_chaos b
+
+# Framing + schema of every journal the runs produced.
+python3 tools/check_journal.py \
+    "$WORK"/coord-a.jnl "$WORK"/coord-b.jnl \
+    "$WORK"/host0-a.jnl "$WORK"/host0-b.jnl \
+    "$WORK"/host1-a.jnl "$WORK"/host1-b.jnl
+
+# Determinism contract: canonical host journal sequences (mono_us
+# stripped) must be bit-identical across the two runs.
+for H in host0 host1; do
+    python3 tools/check_journal.py --canon "$WORK/$H-a.jnl" >"$WORK/$H-a.canon"
+    python3 tools/check_journal.py --canon "$WORK/$H-b.jnl" >"$WORK/$H-b.canon"
+    if ! diff -u "$WORK/$H-a.canon" "$WORK/$H-b.canon"; then
+        echo "error: $H journal event sequence diverged between identical runs" >&2
+        exit 1
+    fi
+done
+
+# The coordinator dump must carry per-host liveness histograms: a
+# heartbeat-gap distribution for both hosts, and a non-empty
+# rejoin-recovery distribution (the plan's `exit 70` forces at least
+# one crash -> teardown -> resume cycle).
+python3 - "$WORK/RUN_METRICS-a.json" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["n_hosts"] == 2, doc
+recov = 0
+for h in ("0", "1"):
+    hists = doc["hosts"][h]["hists"]
+    gap = hists.get("cluster.heartbeat_gap_ms")
+    assert gap and gap["total"] > 0, f"host {h}: no heartbeat-gap histogram"
+    r = hists.get("cluster.rejoin_recovery_ms")
+    recov += r["total"] if r else 0
+assert recov > 0, "no rejoin-recovery samples despite an injected crash"
+print("RUN_METRICS.json ok: per-host heartbeat-gap + rejoin-recovery histograms")
+EOF
+
 echo "smoke ok: 2-host chaos SSSP (supervised crash + delays + corrupt frames)" \
-     "matches in-process ($GOT/$EXPECTED reachable at t=$LAST_T)"
+     "matches in-process ($EXPECTED reachable at t=$LAST_T)," \
+     "journals deterministic across runs"

@@ -43,9 +43,11 @@ if [ -z "$SOURCE" ] || [ -z "$EXPECTED" ] || [ -z "$LAST_T" ]; then
 fi
 
 # The distributed run: coordinator on an ephemeral port + one host per
-# partition.
+# partition, with the metrics dump on so we can assert the aggregated
+# per-host RUN_METRICS.json (docs/OBSERVABILITY.md).
 "$BIN" coordinator --hosts 2 --app sssp --source "$SOURCE" \
-    --listen 127.0.0.1:0 --port-file "$WORK/port" --out "$WORK/dist.out" &
+    --listen 127.0.0.1:0 --port-file "$WORK/port" --out "$WORK/dist.out" \
+    --metrics-out "$WORK/RUN_METRICS.json" &
 COORD=$!
 for _ in $(seq 1 200); do
     [ -f "$WORK/port" ] && break
@@ -74,5 +76,19 @@ if [ "$GOT" != "$EXPECTED" ]; then
          "in-process reached $EXPECTED" >&2
     exit 1
 fi
+# The coordinator must have written the aggregated metrics dump with
+# one block per host, each carrying the shipped progress counters.
+python3 - "$WORK/RUN_METRICS.json" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["n_hosts"] == 2, doc
+for h in ("0", "1"):
+    block = doc["hosts"][h]
+    ts = block["counters"].get("gopher.timesteps", 0)
+    assert ts == 8, f"host {h}: shipped gopher.timesteps={ts}, expected 8"
+    assert block["counters"].get("gofs.slices_read", 0) > 0, f"host {h}: no slice reads shipped"
+print("RUN_METRICS.json ok: per-host counters present for both hosts")
+EOF
+
 echo "smoke ok: 2-host distributed SSSP matches in-process" \
      "($GOT/$EXPECTED reachable at t=$LAST_T)"
