@@ -1011,6 +1011,107 @@ fn main() {
         let _ = std::fs::remove_dir_all(&root);
     }
 
+    // --- Storage integrity: scrub throughput + read-repair latency. ---
+    // Offline scrub over the main cached deployment (container CRC +
+    // full body decode of every referenced slice, WAL tail, metadata
+    // invariants), normalized per GB verified. Then the read path's
+    // self-heal: every part-0 attribute slice of a small replicated
+    // deployment is bit-flipped at rest, and a full-projection scan
+    // detects, restores from the replica (durable replace) and re-reads
+    // each one — per-repair latency from the `gofs.read_repair_ms`
+    // histogram those heals record.
+    {
+        use goffish::gofs::{open_collection, scrub, DiskModel, ScrubOptions, StoreOptions};
+        use goffish::metrics::hkeys;
+
+        let (srep, wall) =
+            Bencher::once(|| scrub(&dir, &ScrubOptions::default()).expect("scrub probe"));
+        assert!(srep.clean(), "bench deployment failed its scrub: {:?}", srep.corrupt);
+        let gb = srep.bytes_checked as f64 / 1e9;
+        let scrub_ms_per_gb = wall * 1e3 / gb.max(1e-9);
+        report.row(&[
+            "scrub".into(),
+            format!("{scrub_ms_per_gb:.0}"),
+            format!("ms/GB ({} slices, {:.2} GB verified)", srep.slices_checked, gb),
+        ]);
+        json.push(("scrub_ms_per_gb".into(), scrub_ms_per_gb));
+
+        let rr_gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+        let root =
+            std::env::temp_dir().join(format!("goffish-bench-repair-{}", std::process::id()));
+        let replica = root.join("replica"); // outside the collection parts
+        let primary = root.join("primary");
+        let _ = std::fs::remove_dir_all(&root);
+        deploy(&rr_gen, &DeployConfig::new(2, 4, 3), &primary).expect("repair probe: deploy");
+        // Replica := byte-copy of the clean store; then rot the primary.
+        let mut stack = vec![primary.clone()];
+        while let Some(d) = stack.pop() {
+            for e in std::fs::read_dir(&d).unwrap() {
+                let p = e.unwrap().path();
+                if p.is_dir() {
+                    stack.push(p);
+                } else {
+                    let dst = replica.join(p.strip_prefix(&primary).unwrap());
+                    std::fs::create_dir_all(dst.parent().unwrap()).unwrap();
+                    std::fs::copy(&p, &dst).unwrap();
+                }
+            }
+        }
+        let mut rotted = 0usize;
+        let mut stack = vec![primary.join("part-0/attr")];
+        while let Some(d) = stack.pop() {
+            for e in std::fs::read_dir(&d).unwrap() {
+                let p = e.unwrap().path();
+                if p.is_dir() {
+                    stack.push(p);
+                } else {
+                    let mut raw = std::fs::read(&p).unwrap();
+                    raw[16] ^= 0x01; // past the header: body CRC/inflate catches it
+                    std::fs::write(&p, raw).unwrap();
+                    rotted += 1;
+                }
+            }
+        }
+        let metrics = Arc::new(Metrics::new());
+        let opts = StoreOptions {
+            cache_slots: 64,
+            disk: DiskModel::instant(),
+            metrics: metrics.clone(),
+            replica_dir: Some(replica.clone()),
+            ..Default::default()
+        };
+        let stores = open_collection(&primary, &opts).expect("repair probe: open");
+        for s in &stores {
+            let proj = Projection::all(s.vertex_schema(), s.edge_schema());
+            for t in 0..s.n_instances() {
+                for sg in s.subgraphs() {
+                    s.read_instance(sg.id.local(), t, &proj).expect("repair probe: healed read");
+                }
+            }
+        }
+        let h = metrics.hist(hkeys::READ_REPAIR_MS).expect("scan repaired nothing");
+        let healed = h.total() as usize;
+        assert!(
+            healed >= 1 && healed <= rotted,
+            "healed {healed} of {rotted} rotted slices (each heals at most once)"
+        );
+        let read_repair_ms = h.quantile(0.5).unwrap_or(-1.0);
+        report.row(&[
+            "read repair".into(),
+            format!("{read_repair_ms:.2}"),
+            format!("ms p50 detect -> durable restore ({healed}/{rotted} slices healed)"),
+        ]);
+        json.push(("read_repair_ms".into(), read_repair_ms));
+        println!(
+            "storage probe: scrub {scrub_ms_per_gb:.0} ms/GB, read repair \
+             {read_repair_ms:.2} ms p50 ({healed} slices healed in place)"
+        );
+        // The post-heal scrub must agree the primary is clean again.
+        let srep = scrub(&primary, &ScrubOptions::default()).expect("post-heal scrub");
+        assert!(srep.clean(), "read repair left corruption behind: {:?}", srep.corrupt);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
     // --- L1/L2: kernel dispatch + throughput vs scalar. ---
     match PjrtEngine::load(
         &std::path::PathBuf::from(

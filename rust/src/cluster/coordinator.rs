@@ -680,6 +680,18 @@ enum ReadEvent {
 /// (epoch, host, event) from a reader thread.
 type Event = (u64, usize, ReadEvent);
 
+/// How a lockstep round failed. [`Down`](RoundError::Down) is the
+/// recoverable shape — tear the epoch down, wait for the hosts to
+/// rejoin. [`Fatal`](RoundError::Fatal) carries a worker-reported
+/// unrecoverable reason (sealed-slice corruption with no replica to
+/// repair from): retrying the epoch would replay the same bad bytes, so
+/// the run must fail with the typed reason instead of wedging through
+/// rejoin cycles.
+enum RoundError {
+    Down(String),
+    Fatal(String),
+}
+
 /// Collect exactly one in-epoch message per host (lockstep round).
 ///
 /// Liveness: every event from a host — including heartbeats — refreshes
@@ -699,7 +711,7 @@ fn collect_round(
     epoch: u64,
     n: usize,
     deadline: Duration,
-) -> std::result::Result<Vec<Msg>, String> {
+) -> std::result::Result<Vec<Msg>, RoundError> {
     let mut slots: Vec<Option<Msg>> = (0..n).map(|_| None).collect();
     let mut last_heard: Vec<Instant> = (0..n).map(|_| Instant::now()).collect();
     let mut corrupt_since: Vec<Option<Instant>> = (0..n).map(|_| None).collect();
@@ -709,7 +721,7 @@ fn collect_round(
             Ok(ev) => Some(ev),
             Err(mpsc::RecvTimeoutError::Timeout) => None,
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                return Err("event channel closed".to_string())
+                return Err(RoundError::Down("event channel closed".to_string()))
             }
         };
         if let Some((ep, host, ev)) = event {
@@ -719,9 +731,17 @@ fn collect_round(
             last_heard[host] = Instant::now();
             match ev {
                 ReadEvent::Frame(Msg::Heartbeat { .. }) => {} // liveness only
+                ReadEvent::Frame(Msg::Fatal { reason }) => {
+                    // A worker reporting unrepairable storage corruption
+                    // on its partition. Not a crash: rejoining would hit
+                    // the same bytes, so fail the run with the reason.
+                    return Err(RoundError::Fatal(format!("host {host}: {reason}")));
+                }
                 ReadEvent::Frame(m) => {
                     if slots[host].is_some() {
-                        return Err(format!("host {host} sent two messages in one round"));
+                        return Err(RoundError::Down(format!(
+                            "host {host} sent two messages in one round"
+                        )));
                     }
                     slots[host] = Some(m);
                     corrupt_since[host] = None; // the corrupted frame was a heartbeat
@@ -730,15 +750,17 @@ fn collect_round(
                 ReadEvent::Corrupt => {
                     if slots[host].is_none() {
                         if deadline.is_zero() {
-                            return Err(format!(
+                            return Err(RoundError::Down(format!(
                                 "host {host}: corrupted frame in a lockstep round"
-                            ));
+                            )));
                         }
                         corrupt_since[host].get_or_insert_with(Instant::now);
                     }
                     // Slot already filled: a corrupted heartbeat; ignore.
                 }
-                ReadEvent::Lost(e) => return Err(format!("host {host}: {e}")),
+                ReadEvent::Lost(e) => {
+                    return Err(RoundError::Down(format!("host {host}: {e}")))
+                }
             }
         }
         if !deadline.is_zero() {
@@ -747,16 +769,16 @@ fn collect_round(
                     continue;
                 }
                 if last_heard[host].elapsed() >= deadline {
-                    return Err(format!(
+                    return Err(RoundError::Down(format!(
                         "host {host} silent for {deadline:?} (round deadline) — \
                          hung or partitioned"
-                    ));
+                    )));
                 }
                 if corrupt_since[host].is_some_and(|t| t.elapsed() >= deadline) {
-                    return Err(format!(
+                    return Err(RoundError::Down(format!(
                         "host {host}: no lockstep message within {deadline:?} of a \
                          corrupted frame — the message itself may have been lost"
-                    ));
+                    )));
                 }
             }
         }
@@ -924,7 +946,12 @@ fn run_epoch(
         hub.maybe_dump(state.committed);
         let msgs = match collect_round(&rx, epoch, n, round_deadline) {
             Ok(m) => m,
-            Err(reason) => {
+            Err(RoundError::Fatal(reason)) => {
+                hub.event("corrupt_abort", &[("reason", reason.as_str().into())]);
+                let _ = send_all(&conns, inj, &Msg::Fatal { reason: reason.clone() });
+                bail!("{reason}");
+            }
+            Err(RoundError::Down(reason)) => {
                 abort_all(&conns, &reason);
                 return Ok(EpochEnd::Down(reason));
             }

@@ -28,18 +28,28 @@
 //! * `on <glob> prob <P> <action>` — fire with probability P at each
 //!   match, drawn deterministically from the plan seed.
 //!
-//! Actions: `delay <ms>`, `drop` (sever the connection), `corrupt`
-//! (flip a payload bit after the CRC — the receiver sees a CRC
-//! mismatch), `halfopen` (wedge the calling thread without closing the
-//! socket — a hung host), `partition <ms>` (sever + refuse reconnect
-//! until the blackout elapses), `exit [code]` (kill the process, as
-//! SIGKILL would; default exit code 70).
+//! Network actions: `delay <ms>`, `drop` (sever the connection),
+//! `corrupt` (flip a payload bit after the CRC — the receiver sees a
+//! CRC mismatch), `halfopen` (wedge the calling thread without closing
+//! the socket — a hung host), `partition <ms>` (sever + refuse
+//! reconnect until the blackout elapses), `exit [code]` (kill the
+//! process, as SIGKILL would; default exit code 70).
+//!
+//! Storage actions (interpreted by the GoFS VFS shim,
+//! [`crate::gofs::vfs`] — no-ops at network points): `bitflip` (flip
+//! one byte of the payload), `torn-write` (persist only the first half
+//! of a write / read back a half-length file), `truncate` (write fully,
+//! then cut the file in half), `enospc` / `eio` (the matching I/O
+//! error), `vanish` (the file disappears).
 //!
 //! ### Injection points
 //!
 //! Point names are dotted strings matched by a `*` glob: workers use
 //! `host<P>.connect`, `host<P>.send.<MsgLabel>`, `host<P>.recv`; the
 //! coordinator uses `coord.send.<MsgLabel>.h<H>` and `coord.recv.h<H>`.
+//! GoFS file I/O uses `gofs.read.<rel>` and `gofs.write.<rel>` where
+//! `<rel>` is the path relative to the collection root (e.g.
+//! `gofs.write.part-0/attr/e0/b003-g0004.slice`); `*` crosses `/`.
 
 use crate::metrics::Metrics;
 use crate::util::prng::Prng;
@@ -66,6 +76,21 @@ pub enum Action {
     Partition(Duration),
     /// Kill the process with this exit code.
     Exit(i32),
+    /// Storage: flip one byte of the data read or written — the next
+    /// container-CRC check fails. No-op at network points.
+    Bitflip,
+    /// Storage: persist only the first half of a write (read side:
+    /// serve a half-length file) — a torn publish.
+    TornWrite,
+    /// Storage: complete the write, then cut the file to half length.
+    Truncate,
+    /// Storage: fail the operation with `ENOSPC`.
+    Enospc,
+    /// Storage: fail the operation with `EIO`.
+    Eio,
+    /// Storage: the file disappears (write lands, then is deleted;
+    /// read sees `NotFound`).
+    Vanish,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -146,6 +171,12 @@ fn parse_action(words: &[&str], line_no: usize) -> Result<Action> {
             };
             Ok(Action::Exit(code))
         }
+        "bitflip" => Ok(Action::Bitflip),
+        "torn-write" => Ok(Action::TornWrite),
+        "truncate" => Ok(Action::Truncate),
+        "enospc" => Ok(Action::Enospc),
+        "eio" => Ok(Action::Eio),
+        "vanish" => Ok(Action::Vanish),
         other => bail!("fault plan line {line_no}: unknown action {other:?}"),
     }
 }
@@ -315,7 +346,15 @@ impl FaultInjector {
     }
 }
 
-fn action_name(a: &Action) -> &'static str {
+// Options structs (e.g. `gofs::IngestOptions`) hold an injector and
+// derive `Debug`; the mutexed state is not interesting to print.
+impl std::fmt::Debug for FaultInjector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "FaultInjector({} rules)", self.rules.len())
+    }
+}
+
+pub(crate) fn action_name(a: &Action) -> &'static str {
     match a {
         Action::None => "none",
         Action::Delay(_) => "delay",
@@ -324,6 +363,12 @@ fn action_name(a: &Action) -> &'static str {
         Action::HalfOpen(_) => "halfopen",
         Action::Partition(_) => "partition",
         Action::Exit(_) => "exit",
+        Action::Bitflip => "bitflip",
+        Action::TornWrite => "torn-write",
+        Action::Truncate => "truncate",
+        Action::Enospc => "enospc",
+        Action::Eio => "eio",
+        Action::Vanish => "vanish",
     }
 }
 
@@ -334,6 +379,14 @@ fn action_name(a: &Action) -> &'static str {
 pub fn perform(action: &Action) -> bool {
     match action {
         Action::None | Action::Corrupt => false,
+        // Storage actions are interpreted by the GoFS VFS shim; at a
+        // network point they act like `None`.
+        Action::Bitflip
+        | Action::TornWrite
+        | Action::Truncate
+        | Action::Enospc
+        | Action::Eio
+        | Action::Vanish => false,
         Action::Delay(d) => {
             std::thread::sleep(*d);
             false
@@ -378,6 +431,34 @@ mod tests {
         assert_eq!(plan.rules[3].action, Action::Exit(7));
         assert_eq!(plan.rules[4].action, Action::HalfOpen(Duration::from_secs(600)));
         assert_eq!(plan.rules[5].action, Action::Drop);
+    }
+
+    #[test]
+    fn parses_storage_actions() {
+        let plan = FaultPlan::parse(
+            "on gofs.write.part-0/* nth 1 bitflip\non gofs.write.*meta.slice nth 2 torn-write\n\
+             on gofs.write.*/wal.log nth 3 truncate\non gofs.write.* nth 4 enospc\n\
+             on gofs.read.* nth 5 eio\non gofs.read.*/template.slice nth 1 vanish\n",
+        )
+        .unwrap();
+        let actions: Vec<&Action> = plan.rules.iter().map(|r| &r.action).collect();
+        assert_eq!(
+            actions,
+            vec![
+                &Action::Bitflip,
+                &Action::TornWrite,
+                &Action::Truncate,
+                &Action::Enospc,
+                &Action::Eio,
+                &Action::Vanish,
+            ]
+        );
+        // Storage actions at a network perform() site are no-ops.
+        for a in actions {
+            assert!(!perform(a), "{a:?} must not sever a connection");
+        }
+        assert!(glob_match("gofs.write.part-0/*", "gofs.write.part-0/attr/e0/b003-g0004.slice"));
+        assert!(glob_match("gofs.write.*meta.slice", "gofs.write.part-1/meta.slice"));
     }
 
     #[test]

@@ -31,7 +31,7 @@
 
 use crate::apps::{PageRankApp, SsspApp};
 use crate::cluster::fault::{self, FaultInjector, FaultPlan};
-use crate::cluster::proto::{EpochAborted, FrameError, FrameReader, Msg};
+use crate::cluster::proto::{write_msg, EpochAborted, FrameError, FrameReader, Msg};
 use crate::cluster::retry::RetryPolicy;
 use crate::cluster::transport::{
     load_checkpoint, send_on, TcpTransport, TcpTransportOptions, READ_TICK,
@@ -309,8 +309,11 @@ fn run_epoch(
     policy: &RetryPolicy,
 ) -> Result<()> {
     // Fresh store every epoch: a rejoin must read the durable state, not
-    // a view cached before the crash.
-    let store = Store::open(&cfg.root, cfg.part, cfg.store_opts.clone())?;
+    // a view cached before the crash. The process-wide injector arms the
+    // store's VFS so `gofs.read.*` fault points fire on this host's disk.
+    let mut store_opts = cfg.store_opts.clone();
+    store_opts.fault = injector.cloned();
+    let store = Store::open(&cfg.root, cfg.part, store_opts)?;
     let part_dir = cfg.root.join(format!("part-{}", cfg.part));
     let sgids: Vec<SubgraphId> = store.shared().subgraphs.iter().map(|sg| sg.id).collect();
     let n_vertices: u64 =
@@ -472,6 +475,10 @@ fn run_epoch(
         &[("resume_from", (resume_from as u64).into()), ("visible", visible.into())],
     );
     let mut engine = GopherEngine::new(vec![store], ClusterSpec::new(n_hosts), metrics.clone());
+    // Side channel for the one message the transport cannot carry: a
+    // storage-corruption report sent while the epoch unwinds. Best
+    // effort — if the clone fails the coordinator still sees the death.
+    let report_conn = conn.try_clone().ok();
     engine.set_transport(Arc::new(TcpTransport::new(
         conn,
         part_dir,
@@ -507,9 +514,22 @@ fn run_epoch(
         resume_carry,
         edge_cut_pct,
     };
-    engine
-        .run_distributed(app.as_app(), &opts, dist, &|t| app.emit_timestep(t, &sgids))
-        .map(|_| ())
+    match engine.run_distributed(app.as_app(), &opts, dist, &|t| app.emit_timestep(t, &sgids))
+    {
+        Ok(_) => Ok(()),
+        Err(e) => {
+            // Unrepairable sealed-slice corruption: tell the coordinator
+            // *why* before dying, so it fails the run with the typed
+            // reason instead of wedging through rejoin epochs against
+            // the same bad bytes.
+            if crate::gofs::err_is_corrupt(&e) {
+                if let Some(mut c) = report_conn {
+                    let _ = write_msg(&mut c, &Msg::Fatal { reason: format!("{e:#}") });
+                }
+            }
+            Err(e)
+        }
+    }
 }
 
 #[cfg(test)]

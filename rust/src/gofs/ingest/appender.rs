@@ -8,6 +8,7 @@ use crate::gofs::ingest::compact::{compact_part, CompactOptions, CompactReport};
 use crate::gofs::ingest::wal::{self, WalRecord, WalWriter, WAL_FILE};
 use crate::gofs::reader::{decode_template_slice, PartShared};
 use crate::gofs::slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};
+use crate::gofs::vfs::Vfs;
 use crate::gofs::writer::{
     decode_meta_slice, encode_attr_body, encode_meta_slice, part_dir, project_instance_cells,
     write_collection_manifest, GroupEntry, PartMeta,
@@ -54,6 +55,15 @@ pub struct IngestOptions {
     /// `compaction`) when a journal is attached to it. The default is a
     /// fresh registry with no journal — events are then no-ops.
     pub metrics: std::sync::Arc<crate::metrics::Metrics>,
+    /// Replica root (`ingest --replica-dir`): every sealed group, meta
+    /// publish and manifest is mirrored here with the same
+    /// temp+fsync+rename ordering, giving the read path and
+    /// `goffish scrub --repair` an intact copy to restore from. `None`
+    /// (the default) disables replication entirely.
+    pub replica_dir: Option<PathBuf>,
+    /// Seeded storage fault injector (`--fault-plan`); `None` (the
+    /// default) means the VFS shim is pass-through.
+    pub fault: Option<std::sync::Arc<crate::cluster::fault::FaultInjector>>,
 }
 
 impl Default for IngestOptions {
@@ -66,6 +76,8 @@ impl Default for IngestOptions {
             compact_after: 0,
             compact_target: 0,
             metrics: std::sync::Arc::new(crate::metrics::Metrics::new()),
+            replica_dir: None,
+            fault: None,
         }
     }
 }
@@ -130,6 +142,9 @@ pub struct CollectionAppender {
     pack: usize,
     parts: Vec<PartIngest>,
     opts: IngestOptions,
+    /// Storage shim every publish goes through (fault injection +
+    /// replica mirroring; pass-through when neither is configured).
+    vfs: Vfs,
     stats: IngestStats,
     /// Appends since the last WAL fsync (group commit bookkeeping;
     /// always 0 when `group_commit == 1` or `sync` is off).
@@ -166,19 +181,24 @@ impl CollectionAppender {
             bail!("ingest: unsupported slice_version {}", opts.slice_version);
         }
         let lock = crate::gofs::ingest::WriterLock::acquire(root, "append")?;
+        let vfs = Vfs::new(root, opts.fault.clone(), opts.replica_dir.clone());
         let n_parts = crate::gofs::writer::collection_parts(root)?;
         let mut parts = Vec::with_capacity(n_parts);
         for p in 0..n_parts {
             let dir = part_dir(root, p);
-            let (tslice, _) = SliceFile::read_from(&dir.join("template.slice"))?;
+            let (tslice, _) = vfs.read_slice(&dir.join("template.slice"))?;
             if tslice.kind != SliceKind::Template {
                 bail!("part {p}: template.slice has wrong kind");
             }
             let shared = decode_template_slice(&tslice.body)?;
-            let (mslice, _) = SliceFile::read_from(&dir.join("meta.slice"))?;
+            let (mslice, _) = vfs.read_slice(&dir.join("meta.slice"))?;
             let meta = decode_meta_slice(&mslice.body, mslice.version)?;
+            // Seed the replica with the batch-deployed state, so it can
+            // repair more than just what this appender publishes.
+            vfs.mirror_existing(&dir.join("template.slice"))?;
+            vfs.mirror_existing(&dir.join("meta.slice"))?;
             let wal_path = dir.join(WAL_FILE);
-            let (records, valid_len) = wal::replay(&wal_path, &shared)?;
+            let (records, valid_len) = wal::replay(&wal_path, &shared, &vfs)?;
             // Drop records an earlier seal already published (crash
             // between publish and WAL truncate), keep the open tail.
             let mut tail: Vec<WalRecord> = records
@@ -195,9 +215,10 @@ impl CollectionAppender {
                     );
                 }
             }
-            let wal = WalWriter::open(&wal_path, valid_len)?;
+            let wal = WalWriter::open(&wal_path, valid_len, vfs.clone())?;
             parts.push(PartIngest { dir, shared, meta, wal, tail });
         }
+        vfs.mirror_existing(&root.join("collection.meta"))?;
         let pack = parts.first().map(|p| p.meta.pack).unwrap_or(0);
         if pack == 0 {
             bail!("ingest: collection has no partitions or pack = 0");
@@ -210,6 +231,7 @@ impl CollectionAppender {
             pack,
             parts,
             opts,
+            vfs,
             stats: IngestStats::default(),
             unsynced_appends: 0,
             seals_since_compact: 0,
@@ -259,6 +281,7 @@ impl CollectionAppender {
         let min_sealed = self.parts.iter().map(|p| p.meta.n_instances).min().unwrap_or(0);
         let pack = self.pack;
         let opts = self.opts.clone();
+        let vfs = self.vfs.clone();
         for p in 0..self.parts.len() {
             while self.parts[p].meta.n_instances < target {
                 let missing = target - self.parts[p].meta.n_instances;
@@ -270,14 +293,14 @@ impl CollectionAppender {
                         self.parts[p].tail.len()
                     );
                 }
-                seal_part_group(&mut self.parts[p], group_len, &opts)?;
+                seal_part_group(&mut self.parts[p], group_len, &opts, &vfs)?;
             }
         }
         if target > min_sealed {
             // Count *groups* completed (a group many partitions finished
             // is still one group — matching seal_open_group's accounting).
             self.stats.sealed_groups += (target - min_sealed).div_ceil(pack) as u64;
-            write_collection_manifest(&self.root, self.parts.len(), target)?;
+            write_collection_manifest(&self.root, self.parts.len(), target, &vfs)?;
         }
         Ok(())
     }
@@ -427,8 +450,9 @@ impl CollectionAppender {
     fn seal_open_group(&mut self, group_len: usize) -> Result<()> {
         let t0 = Instant::now();
         let opts = self.opts.clone();
+        let vfs = self.vfs.clone();
         for part in self.parts.iter_mut() {
-            seal_part_group(part, group_len, &opts)?;
+            seal_part_group(part, group_len, &opts, &vfs)?;
         }
         // The seal's atomic WAL rewrite fsyncs the remaining tail, so
         // every append up to here is now durable regardless of group
@@ -438,6 +462,7 @@ impl CollectionAppender {
             &self.root,
             self.parts.len(),
             self.parts[0].meta.n_instances,
+            &vfs,
         )?;
         self.stats.sealed_groups += 1;
         self.stats.seal_wall_s += t0.elapsed().as_secs_f64();
@@ -475,8 +500,10 @@ impl CollectionAppender {
             ..Default::default()
         };
         let mut report = CompactReport::default();
+        let vfs = self.vfs.clone();
         for part in self.parts.iter_mut() {
-            if let Err(e) = compact_part(&part.dir, &part.shared, &mut part.meta, &copts, &mut report)
+            if let Err(e) =
+                compact_part(&part.dir, &part.shared, &mut part.meta, &copts, &mut report, &vfs)
             {
                 self.poisoned = true;
                 return Err(e);
@@ -562,7 +589,12 @@ fn project_instance(
 /// restores the tail and the seal redoes from scratch. A crash between
 /// (2) and (3) leaves sealed records in the WAL: replay skips them by
 /// timestep.
-fn seal_part_group(part: &mut PartIngest, group_len: usize, opts: &IngestOptions) -> Result<()> {
+fn seal_part_group(
+    part: &mut PartIngest,
+    group_len: usize,
+    opts: &IngestOptions,
+    vfs: &Vfs,
+) -> Result<()> {
     assert!(group_len > 0 && group_len <= part.tail.len());
     let shared = &part.shared;
     let va = shared.vertex_schema.len();
@@ -600,7 +632,7 @@ fn seal_part_group(part: &mut PartIngest, group_len: usize, opts: &IngestOptions
             let key = SliceKey { vertex, attr, bin, group };
             let body = encode_attr_body(&cells, ty, opts.slice_version);
             let slice = SliceFile::with_version(SliceKind::Attribute, body, opts.slice_version);
-            write_slice_durable(&slice, &part.dir.join(key.rel_path()), opts.compress)?;
+            vfs.publish_slice(&slice, &part.dir.join(key.rel_path()), opts.compress)?;
         }
     }
     // (2) metadata publish.
@@ -619,7 +651,7 @@ fn seal_part_group(part: &mut PartIngest, group_len: usize, opts: &IngestOptions
         &part.meta.groups,
         part.meta.next_group_id,
     );
-    write_slice_durable(&slice, &part.dir.join("meta.slice"), opts.compress)?;
+    vfs.publish_slice(&slice, &part.dir.join("meta.slice"), opts.compress)?;
     // (3) drop the sealed records from the WAL, atomically (temp file +
     // rename): the remainder's already-fsynced records must survive a
     // crash at any point in this step.
@@ -630,19 +662,4 @@ fn seal_part_group(part: &mut PartIngest, group_len: usize, opts: &IngestOptions
         .collect();
     part.wal.rewrite(&payloads)?;
     Ok(())
-}
-
-/// Write a slice through the shared durable-replace helper (same-dir
-/// temp file + fsync + rename), so a concurrent or post-crash reader
-/// sees either the old file or the complete new one, never a torn write.
-/// Shared with the compactor, which publishes re-packed groups and their
-/// metadata with the exact same ordering guarantees.
-pub(crate) fn write_slice_durable(slice: &SliceFile, path: &Path, compress: bool) -> Result<u64> {
-    let bytes = slice.to_bytes(compress)?;
-    wal::replace_file_durable(path, |f| {
-        use std::io::Write;
-        f.write_all(&bytes)
-    })
-    .with_context(|| format!("publishing slice {}", path.display()))?;
-    Ok(bytes.len() as u64)
 }

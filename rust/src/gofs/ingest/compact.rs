@@ -47,8 +47,8 @@
 //! (`IngestOptions::compact_after`) runs it synchronously between seals,
 //! which satisfies that by construction.
 
-use crate::gofs::ingest::appender::write_slice_durable;
 use crate::gofs::reader::{decode_template_slice, PartShared};
+use crate::gofs::vfs::Vfs;
 use crate::gofs::slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};
 use crate::gofs::writer::{
     collection_parts, decode_meta_slice, encode_attr_body, encode_meta_slice, part_dir,
@@ -150,6 +150,9 @@ pub fn compact_collection(root: &Path, opts: &CompactOptions) -> Result<CompactR
     }
     let _lock = crate::gofs::ingest::WriterLock::acquire(root, "compact")?;
     let t0 = Instant::now();
+    // The standalone compactor runs passive: no injection, no replica
+    // (the appender's inline cadence passes its own armed shim instead).
+    let vfs = Vfs::passive(root);
     let n_parts = collection_parts(root)?;
     let mut report = CompactReport { parts: n_parts, ..Default::default() };
     for p in 0..n_parts {
@@ -161,7 +164,7 @@ pub fn compact_collection(root: &Path, opts: &CompactOptions) -> Result<CompactR
         let shared = decode_template_slice(&tslice.body)?;
         let (mslice, _) = SliceFile::read_from(&dir.join("meta.slice"))?;
         let mut meta = decode_meta_slice(&mslice.body, mslice.version)?;
-        compact_part(&dir, &shared, &mut meta, opts, &mut report)
+        compact_part(&dir, &shared, &mut meta, opts, &mut report, &vfs)
             .with_context(|| format!("compacting part {p}"))?;
     }
     report.wall_s = t0.elapsed().as_secs_f64();
@@ -211,6 +214,7 @@ pub(crate) fn compact_part(
     meta: &mut PartMeta,
     opts: &CompactOptions,
     report: &mut CompactReport,
+    vfs: &Vfs,
 ) -> Result<()> {
     report.groups_before += meta.groups.len();
     // (1) Recovery sweep: a crash in an earlier pass can leave slice
@@ -252,7 +256,8 @@ pub(crate) fn compact_part(
                     if meta.presence[slot][bin][g] {
                         let key = SliceKey { vertex, attr, bin, group: ge.id };
                         let path = dir.join(key.rel_path());
-                        let (slice, _) = SliceFile::read_from(&path)
+                        let (slice, _) = vfs
+                            .read_slice(&path)
                             .with_context(|| format!("compact: reading source group {}", ge.id))?;
                         let sub = decode_attr_cells(&slice, ty)
                             .with_context(|| format!("compact: decoding {}", path.display()))?;
@@ -271,7 +276,7 @@ pub(crate) fn compact_part(
                 }
                 let body = encode_attr_body(&cells, ty, opts.slice_version);
                 let key = SliceKey { vertex, attr, bin, group: gid };
-                let bytes = write_slice_durable(
+                let bytes = vfs.publish_slice(
                     &SliceFile::with_version(SliceKind::Attribute, body, opts.slice_version),
                     &dir.join(key.rel_path()),
                     opts.compress,
@@ -331,7 +336,7 @@ pub(crate) fn compact_part(
         &meta.groups,
         meta.next_group_id,
     );
-    write_slice_durable(&slice, &dir.join("meta.slice"), opts.compress)?;
+    vfs.publish_slice(&slice, &dir.join("meta.slice"), opts.compress)?;
     report.runs_merged += runs.len() as u64;
     report.groups_merged += runs.iter().map(|r| r.len()).sum::<usize>() as u64;
     report.groups_after += meta.groups.len();
@@ -415,8 +420,12 @@ fn sweep_orphans(dir: &Path, shared: &PartShared, meta: &PartMeta) -> Result<u64
 /// Decode a whole attribute slice into seal-layout cells
 /// (`cells[t - t_lo][pos]`), either body version. The compactor's read
 /// side: unlike the store's lazy cache path this materializes every
-/// position — a re-pack touches all of them anyway.
-fn decode_attr_cells(slice: &SliceFile, ty: AttrType) -> Result<Vec<Vec<Option<AttrColumn>>>> {
+/// position — a re-pack touches all of them anyway. `gofs::scrub`
+/// shares it as its deep-verification decoder.
+pub(crate) fn decode_attr_cells(
+    slice: &SliceFile,
+    ty: AttrType,
+) -> Result<Vec<Vec<Option<AttrColumn>>>> {
     if slice.kind != SliceKind::Attribute {
         bail!("expected attribute slice");
     }

@@ -32,11 +32,13 @@
 //! partition's sealed `meta.slice` are skipped (a crash between "publish
 //! sealed group" and "truncate WAL" makes replay idempotent, not lossy).
 
+use crate::cluster::fault::Action;
 use crate::gofs::reader::PartShared;
+use crate::gofs::vfs::Vfs;
 use crate::graph::{AttrColumn, TimeWindow, Timestep};
 use crate::util::wire::{Dec, Enc};
 use anyhow::{bail, Context, Result};
-use std::fs::{File, OpenOptions};
+use std::fs::OpenOptions;
 use std::io::{Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
@@ -128,9 +130,12 @@ pub(crate) fn decode_record(payload: &[u8], shared: &PartShared) -> Result<WalRe
 
 /// Scan `path` and decode every intact frame, stopping (not erroring) at
 /// the first torn or corrupt tail frame. Returns the records plus the
-/// byte length of the valid prefix. A missing file is an empty log.
-pub(crate) fn replay(path: &Path, shared: &PartShared) -> Result<(Vec<WalRecord>, u64)> {
-    let data = match std::fs::read(path) {
+/// byte length of the valid prefix. A missing file is an empty log. The
+/// read goes through the VFS shim, so an injected `vanish` reads as an
+/// empty log and injected `bitflip`/`torn-write` exercise the
+/// truncate-to-valid-prefix path exactly like a real crash.
+pub(crate) fn replay(path: &Path, shared: &PartShared, vfs: &Vfs) -> Result<(Vec<WalRecord>, u64)> {
+    let data = match vfs.read(path) {
         Ok(d) => d,
         Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok((Vec::new(), 0)),
         Err(e) => return Err(e).with_context(|| format!("reading WAL {}", path.display())),
@@ -162,39 +167,6 @@ pub(crate) fn replay(path: &Path, shared: &PartShared) -> Result<(Vec<WalRecord>
     Ok((records, off as u64))
 }
 
-/// Durably replace `path`'s contents: stream them into a same-directory
-/// `.tmp` sibling via `write`, fsync, rename over `path`, and fsync the
-/// directory (unix). A concurrent or post-crash reader sees either the
-/// old file or the complete new one, never a torn write. Shared by the
-/// WAL rewrite and the appender's slice/metadata publishes so the
-/// crash-safety details live in exactly one place.
-pub(crate) fn replace_file_durable(
-    path: &Path,
-    write: impl FnOnce(&mut File) -> std::io::Result<()>,
-) -> Result<()> {
-    if let Some(parent) = path.parent() {
-        std::fs::create_dir_all(parent)?;
-    }
-    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
-    name.push(".tmp");
-    let tmp = path.with_file_name(name);
-    {
-        let mut f =
-            File::create(&tmp).with_context(|| format!("writing {}", tmp.display()))?;
-        write(&mut f).with_context(|| format!("writing {}", tmp.display()))?;
-        f.sync_all()?;
-    }
-    std::fs::rename(&tmp, path).with_context(|| format!("publishing {}", path.display()))?;
-    #[cfg(unix)]
-    if let Some(parent) = path.parent() {
-        // Make the rename itself durable.
-        if let Ok(d) = File::open(parent) {
-            let _ = d.sync_all();
-        }
-    }
-    Ok(())
-}
-
 fn frame(payload: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(FRAME_HEADER + payload.len());
     out.extend_from_slice(FRAME_MAGIC);
@@ -206,14 +178,18 @@ fn frame(payload: &[u8]) -> Vec<u8> {
 
 /// Append-side handle: truncates the log to its valid prefix on open,
 /// then appends framed records. Durability cadence (per-append fsync vs
-/// group commit) is the caller's call, per append.
+/// group commit) is the caller's call, per append. Appends and rewrites
+/// evaluate the VFS fault plan at this file's `gofs.write.<rel>` point;
+/// the WAL is deliberately **not** mirrored to the replica (the replica
+/// carries sealed state only).
 pub(crate) struct WalWriter {
-    file: File,
+    file: std::fs::File,
     path: PathBuf,
+    vfs: Vfs,
 }
 
 impl WalWriter {
-    pub fn open(path: &Path, valid_len: u64) -> Result<WalWriter> {
+    pub fn open(path: &Path, valid_len: u64, vfs: Vfs) -> Result<WalWriter> {
         let file = OpenOptions::new()
             .read(true)
             .write(true)
@@ -223,7 +199,7 @@ impl WalWriter {
             .with_context(|| format!("opening WAL {}", path.display()))?;
         file.set_len(valid_len)
             .with_context(|| format!("truncating WAL {} to {valid_len}", path.display()))?;
-        let mut w = WalWriter { file, path: path.to_path_buf() };
+        let mut w = WalWriter { file, path: path.to_path_buf(), vfs };
         w.file.seek(SeekFrom::End(0))?;
         Ok(w)
     }
@@ -235,8 +211,28 @@ impl WalWriter {
     /// never corrupts earlier records.
     pub fn append(&mut self, payload: &[u8], sync: bool) -> Result<u64> {
         let buf = frame(payload);
+        let action = self.vfs.check_write(&self.path);
+        let mut flipped;
+        let effective: &[u8] = match &action {
+            Action::Enospc | Action::Eio => {
+                let what = if action == Action::Enospc { "ENOSPC" } else { "EIO" };
+                bail!("{what} (injected) appending to WAL {}", self.path.display());
+            }
+            // A torn append: half the frame lands; replay truncates it.
+            Action::TornWrite | Action::Truncate => &buf[..buf.len() / 2],
+            // The frame is lost entirely.
+            Action::Vanish => &[],
+            Action::Bitflip => {
+                flipped = buf.clone();
+                if let Some(b) = flipped.last_mut() {
+                    *b ^= 0x40;
+                }
+                &flipped
+            }
+            _ => &buf,
+        };
         self.file
-            .write_all(&buf)
+            .write_all(effective)
             .with_context(|| format!("appending to WAL {}", self.path.display()))?;
         if sync {
             self.file.sync_data()?;
@@ -258,15 +254,18 @@ impl WalWriter {
     /// rename leaves either the old log (sealed records are skipped on
     /// replay) or the complete new one.
     pub fn rewrite(&mut self, payloads: &[Vec<u8>]) -> Result<()> {
-        replace_file_durable(&self.path, |f| {
-            for p in payloads {
-                f.write_all(&frame(p))?;
-            }
-            Ok(())
-        })?;
+        let mut bytes = Vec::new();
+        for p in payloads {
+            bytes.extend_from_slice(&frame(p));
+        }
+        // Through the shim (fault injection), but never mirrored.
+        self.vfs
+            .replace_durable(&self.path, &bytes)
+            .with_context(|| format!("rewriting WAL {}", self.path.display()))?;
         self.file = OpenOptions::new()
             .read(true)
             .write(true)
+            .create(true) // an injected `vanish` removes the log; recreate
             .truncate(false)
             .open(&self.path)
             .with_context(|| format!("reopening WAL {}", self.path.display()))?;

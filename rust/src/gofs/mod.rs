@@ -88,7 +88,9 @@ pub mod colcodec;
 pub mod disk;
 pub mod ingest;
 pub mod reader;
+pub mod scrub;
 pub mod slice;
+pub mod vfs;
 pub mod writer;
 
 pub use cache::SliceCache;
@@ -98,7 +100,9 @@ pub use ingest::{
     IngestOptions, IngestStats, WriterLock,
 };
 pub use reader::{open_collection, Projection, ReadTrace, Store, StoreOptions, SubgraphInstance};
-pub use slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};
+pub use scrub::{scrub, ScrubOptions, ScrubReport};
+pub use slice::{SliceError, SliceFile, SliceKind, VERSION_V1, VERSION_V2};
+pub use vfs::{err_is_corrupt, CorruptSlice, Vfs};
 pub use writer::{deploy, deploy_template, DeployConfig, DeployReport};
 
 /// Identifies one attribute slice within a partition.

@@ -36,6 +36,7 @@ use crate::gofs::colcodec;
 use crate::gofs::disk::{DiskClock, DiskModel};
 use crate::gofs::ingest::wal;
 use crate::gofs::slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};
+use crate::gofs::vfs::{quarantine_file, replace_file_durable, CorruptSlice, Vfs};
 use crate::gofs::writer::{decode_meta_slice, part_dir, GroupEntry, PartMeta};
 use crate::gofs::SliceKey;
 use crate::metrics::{hkeys, keys, Metrics};
@@ -360,6 +361,13 @@ pub struct StoreOptions {
     pub tail_high_water_bytes: u64,
     pub disk: DiskModel,
     pub metrics: Arc<Metrics>,
+    /// Replica root mirrored by `ingest --replica-dir`: on a corrupt
+    /// sealed read the store falls back here, restoring the primary
+    /// (read-repair). `None` (the default) disables the fallback.
+    pub replica_dir: Option<PathBuf>,
+    /// Seeded storage fault injector (`--fault-plan`); `None` (the
+    /// default) makes the VFS shim pass-through.
+    pub fault: Option<Arc<crate::cluster::fault::FaultInjector>>,
 }
 
 impl Default for StoreOptions {
@@ -370,6 +378,8 @@ impl Default for StoreOptions {
             tail_high_water_bytes: 0,
             disk: DiskModel::default(),
             metrics: Arc::new(Metrics::new()),
+            replica_dir: None,
+            fault: None,
         }
     }
 }
@@ -416,6 +426,9 @@ pub struct Store {
     cache: SliceCache<SliceKey, DecodedAttrSlice>,
     opts: StoreOptions,
     disk_clock: DiskClock,
+    /// Storage shim every sealed read goes through (fault injection +
+    /// replica fallback; pass-through when neither is configured).
+    vfs: Vfs,
 }
 
 impl Store {
@@ -423,8 +436,10 @@ impl Store {
     /// template and metadata slices eagerly ("the graph template is loaded
     /// once and retained in memory" — §V-E).
     pub fn open(root: &Path, part: usize, opts: StoreOptions) -> Result<Store> {
+        let vfs = Vfs::new(root, opts.fault.clone(), opts.replica_dir.clone());
         let dir = part_dir(root, part);
-        let (tslice, tbytes) = SliceFile::read_from(&dir.join("template.slice"))?;
+        let (tslice, tbytes) =
+            read_slice_or_recover(&vfs, &opts.metrics, part, &dir, &dir.join("template.slice"), None)?;
         if tslice.kind != SliceKind::Template {
             bail!("template.slice has wrong kind");
         }
@@ -432,14 +447,15 @@ impl Store {
         if shared.part_id != part {
             bail!("partition id mismatch: dir {part}, slice {}", shared.part_id);
         }
-        let (mslice, mbytes) = SliceFile::read_from(&dir.join("meta.slice"))?;
+        let (mslice, mbytes) =
+            read_slice_or_recover(&vfs, &opts.metrics, part, &dir, &dir.join("meta.slice"), None)?;
         let meta = decode_meta_slice(&mslice.body, mslice.version)?;
         opts.metrics.add(keys::SLICES_READ, 2);
         opts.metrics.add(keys::SLICE_BYTES, tbytes + mbytes);
         let disk_clock = DiskClock::default();
         let sim = disk_clock.charge(&opts.disk, tbytes) + disk_clock.charge(&opts.disk, mbytes);
         opts.metrics.add(keys::SIM_DISK_NS, sim);
-        let tail = load_tail(&dir, &shared, meta.n_instances)?;
+        let tail = load_tail(&dir, &shared, meta.n_instances, &vfs)?;
         Ok(Store {
             dir,
             shared: Arc::new(shared),
@@ -451,6 +467,7 @@ impl Store {
             ),
             opts,
             disk_clock,
+            vfs,
         })
     }
 
@@ -466,7 +483,14 @@ impl Store {
     /// every `SliceKey` resident in the cache still names exactly the
     /// bytes it was decoded from.
     pub fn refresh(&self) -> Result<usize> {
-        let (mslice, _) = SliceFile::read_from(&self.dir.join("meta.slice"))?;
+        let (mslice, _) = read_slice_or_recover(
+            &self.vfs,
+            &self.opts.metrics,
+            self.shared.part_id,
+            &self.dir,
+            &self.dir.join("meta.slice"),
+            None,
+        )?;
         let new_meta = decode_meta_slice(&mslice.body, mslice.version)?;
         {
             // Idle polls are the common case in follow mode: when neither
@@ -484,7 +508,7 @@ impl Store {
                 return Ok(0);
             }
         }
-        let new_tail = load_tail(&self.dir, &self.shared, new_meta.n_instances)?;
+        let new_tail = load_tail(&self.dir, &self.shared, new_meta.n_instances, &self.vfs)?;
         let mut index = self.index.write().unwrap();
         let before = index.n_instances();
         let after = new_meta.n_instances + new_tail.instances.len();
@@ -785,17 +809,28 @@ impl Store {
             let m = &self.opts.metrics;
             let ((slice, bytes), real_ns) = {
                 let t0 = std::time::Instant::now();
-                let r = match SliceFile::read_from(&path) {
+                let r = match self.vfs.read_slice(&path) {
                     Ok(r) => r,
-                    Err(e) => {
-                        if !path.exists() {
+                    Err(_) => {
+                        let replica_has =
+                            self.vfs.replica_path(&path).map(|rp| rp.exists()).unwrap_or(false);
+                        if !path.exists() && !replica_has {
                             // The one legal disappearance: a concurrent
                             // compaction retired this group after we
                             // resolved it. The caller refreshes and
                             // retries against the re-packed timeline.
                             bail!("{SLICE_VANISHED}: {}", path.display());
                         }
-                        return Err(e);
+                        // Corrupt (or injected-fault) sealed slice: try the
+                        // replica, else quarantine and fail typed.
+                        recover_slice(
+                            &self.vfs,
+                            m,
+                            self.shared.part_id,
+                            &self.dir,
+                            &path,
+                            Some(gentry.id),
+                        )?
                     }
                 };
                 (r, t0.elapsed().as_nanos() as u64)
@@ -850,9 +885,9 @@ fn wal_file_len(dir: &Path) -> u64 {
     std::fs::metadata(dir.join(wal::WAL_FILE)).map(|m| m.len()).unwrap_or(0)
 }
 
-fn load_tail(dir: &Path, shared: &PartShared, sealed: usize) -> Result<TailState> {
+fn load_tail(dir: &Path, shared: &PartShared, sealed: usize, vfs: &Vfs) -> Result<TailState> {
     let wal_len = wal_file_len(dir);
-    let (records, _) = wal::replay(&dir.join(wal::WAL_FILE), shared)?;
+    let (records, _) = wal::replay(&dir.join(wal::WAL_FILE), shared, vfs)?;
     let mut open: Vec<wal::WalRecord> =
         records.into_iter().filter(|r| r.timestep >= sealed).collect();
     open.sort_by_key(|r| r.timestep);
@@ -876,6 +911,74 @@ fn load_tail(dir: &Path, shared: &PartShared, sealed: usize) -> Result<TailState
         });
     }
     Ok(TailState { base: sealed, instances, wal_len })
+}
+
+/// Read a sealed slice through the shim, falling back to
+/// [`recover_slice`] on failure. Used for `template.slice`/`meta.slice`
+/// (`group: None`); a genuinely missing file with no replica copy keeps
+/// its original "not found" error (an empty or half-deployed directory is
+/// not corruption).
+fn read_slice_or_recover(
+    vfs: &Vfs,
+    metrics: &Metrics,
+    part: usize,
+    part_dir: &Path,
+    path: &Path,
+    group: Option<usize>,
+) -> Result<(SliceFile, u64)> {
+    match vfs.read_slice(path) {
+        Ok(r) => Ok(r),
+        Err(e) => {
+            let replica_has = vfs.replica_path(path).map(|rp| rp.exists()).unwrap_or(false);
+            if !path.exists() && !replica_has {
+                return Err(e);
+            }
+            recover_slice(vfs, metrics, part, part_dir, path, group)
+        }
+    }
+}
+
+/// A sealed slice failed its container CRC / decode: journal the
+/// detection, then either **repair** it from the replica (durable
+/// restore of the clean bytes, `read_repair` event + latency histogram)
+/// or **quarantine** the bad file under `part-N/.quarantine/` and fail
+/// with a typed [`CorruptSlice`] naming the exact `{part, group, path}`.
+fn recover_slice(
+    vfs: &Vfs,
+    metrics: &Metrics,
+    part: usize,
+    part_dir: &Path,
+    path: &Path,
+    group: Option<usize>,
+) -> Result<(SliceFile, u64)> {
+    use crate::metrics::journal::Field;
+    let rel = vfs.rel(path);
+    // Only collection-relative paths and ids go into the journal: events
+    // must be bit-identical across runs and hosts.
+    let mut fields: Vec<(&str, Field)> = vec![("part", part.into()), ("path", rel.clone().into())];
+    if let Some(g) = group {
+        fields.push(("group", g.into()));
+    }
+    metrics.event("corrupt_detect", &fields);
+    if let Some(rp) = vfs.replica_path(path) {
+        let t0 = std::time::Instant::now();
+        if let Ok(raw) = std::fs::read(&rp) {
+            if let Ok(slice) = SliceFile::from_bytes(&raw) {
+                replace_file_durable(path, |f| std::io::Write::write_all(f, &raw))
+                    .with_context(|| format!("restoring {} from replica", path.display()))?;
+                metrics.record_hist(hkeys::READ_REPAIR_MS, t0.elapsed().as_secs_f64() * 1e3);
+                metrics.event("read_repair", &fields);
+                return Ok((slice, raw.len() as u64));
+            }
+        }
+    }
+    if path.exists() {
+        if let Ok(rel_in_part) = path.strip_prefix(part_dir) {
+            quarantine_file(part_dir, rel_in_part)?;
+            metrics.event("quarantine", &fields);
+        }
+    }
+    Err(anyhow::Error::new(CorruptSlice { part, group, path: rel }))
 }
 
 /// Decode an attribute slice container into the cacheable representation.

@@ -60,7 +60,7 @@
 //! `gofs::colcodec::decode_pos_block` and the slab-sharing contract in
 //! `gofs::reader`).
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 use flate2::read::DeflateDecoder;
 use flate2::write::DeflateEncoder;
 use flate2::Compression;
@@ -73,6 +73,46 @@ pub const VERSION_V1: u8 = 1;
 /// Typed columnar attribute bodies with temporal codecs.
 pub const VERSION_V2: u8 = 2;
 const FLAG_DEFLATE: u8 = 1;
+
+/// Typed container-level parse failure. Every malformed input to
+/// [`SliceFile::from_bytes`]/[`from_vec`]/[`read_from`] — including
+/// zero-byte and mid-header truncations — surfaces as one of these
+/// variants (recoverable via `anyhow`'s `downcast_ref`), never a panic.
+/// The storage integrity plane (`gofs::vfs`, `gofs::scrub`) branches on
+/// them to tell corruption apart from I/O errors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SliceError {
+    /// Fewer bytes than the 16-byte fixed header.
+    TooShort { len: usize },
+    /// The leading magic is not `GOFS`.
+    BadMagic,
+    /// Header names a format version this build does not read.
+    UnsupportedVersion(u8),
+    /// Header names an unknown [`SliceKind`] tag.
+    BadKind(u8),
+    /// Body is shorter/longer than the header's length field.
+    Truncated { expect: usize, got: usize },
+    /// Body bytes do not match the header CRC32.
+    CrcMismatch,
+}
+
+impl std::fmt::Display for SliceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SliceError::TooShort { len } => write!(f, "slice too short ({len} bytes)"),
+            SliceError::BadMagic => write!(f, "bad slice magic"),
+            SliceError::UnsupportedVersion(v) => write!(f, "unsupported slice version {v}"),
+            SliceError::BadKind(t) => write!(f, "unknown slice kind {t}"),
+            SliceError::Truncated { expect, got } => write!(
+                f,
+                "slice body truncated or corrupt: header says {expect} bytes, got {got}"
+            ),
+            SliceError::CrcMismatch => write!(f, "slice CRC mismatch (corrupt file)"),
+        }
+    }
+}
+
+impl std::error::Error for SliceError {}
 
 /// What a slice contains (§V-A "slice types vary").
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -99,7 +139,7 @@ impl SliceKind {
             0 => SliceKind::Template,
             1 => SliceKind::Metadata,
             2 => SliceKind::Attribute,
-            _ => bail!("unknown slice kind {t}"),
+            _ => return Err(anyhow::Error::new(SliceError::BadKind(t))),
         })
     }
 }
@@ -217,14 +257,14 @@ struct Header {
 
 fn parse_header(data: &[u8]) -> Result<Header> {
     if data.len() < 16 {
-        bail!("slice too short ({} bytes)", data.len());
+        return Err(anyhow::Error::new(SliceError::TooShort { len: data.len() }));
     }
     if &data[0..4] != MAGIC {
-        bail!("bad slice magic");
+        return Err(anyhow::Error::new(SliceError::BadMagic));
     }
     let version = data[4];
     if !(VERSION_V1..=VERSION_V2).contains(&version) {
-        bail!("unsupported slice version {version}");
+        return Err(anyhow::Error::new(SliceError::UnsupportedVersion(version)));
     }
     Ok(Header {
         kind: SliceKind::from_tag(data[5])?,
@@ -244,10 +284,13 @@ fn inflate_body(payload: &[u8], len: usize) -> Result<Vec<u8>> {
 
 fn finish_parse(h: Header, body: Vec<u8>) -> Result<SliceFile> {
     if body.len() != h.len {
-        bail!("slice body truncated or corrupt: header says {} bytes, got {}", h.len, body.len());
+        return Err(anyhow::Error::new(SliceError::Truncated {
+            expect: h.len,
+            got: body.len(),
+        }));
     }
     if crc32fast::hash(&body) != h.crc {
-        bail!("slice CRC mismatch (corrupt file)");
+        return Err(anyhow::Error::new(SliceError::CrcMismatch));
     }
     Ok(SliceFile { kind: h.kind, version: h.version, body })
 }
@@ -325,6 +368,71 @@ mod tests {
         let (s3, _) = SliceFile::read_from(&path).unwrap();
         assert_eq!(s, s3);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn short_files_give_typed_errors_not_panics() {
+        let dir = std::env::temp_dir().join(format!("gofs-slice-short-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Every prefix of a valid header, 0..=12 bytes, through read_from.
+        let valid = SliceFile::new(SliceKind::Metadata, b"body".to_vec()).to_bytes(false).unwrap();
+        for n in 0..=12usize {
+            let path = dir.join(format!("short-{n}.slice"));
+            std::fs::write(&path, &valid[..n]).unwrap();
+            let err = SliceFile::read_from(&path).unwrap_err();
+            assert_eq!(
+                err.downcast_ref::<SliceError>(),
+                Some(&SliceError::TooShort { len: n }),
+                "{n} bytes: {err:#}"
+            );
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncated_bodies_give_typed_errors() {
+        let dir = std::env::temp_dir().join(format!("gofs-slice-trunc-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let body: Vec<u8> = (0..500u32).map(|i| (i * 7 % 256) as u8).collect();
+        let s = SliceFile::with_version(SliceKind::Attribute, body, VERSION_V2);
+        let bytes = s.to_bytes(false).unwrap();
+        // Chop the v2 body mid-way: header intact, payload short.
+        let path = dir.join("truncated.slice");
+        std::fs::write(&path, &bytes[..16 + 250]).unwrap();
+        let err = SliceFile::read_from(&path).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SliceError>(),
+            Some(&SliceError::Truncated { expect: 500, got: 250 }),
+            "{err:#}"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn header_field_errors_are_typed() {
+        let s = SliceFile::new(SliceKind::Metadata, b"body".to_vec());
+        let base = s.to_bytes(false).unwrap();
+
+        let mut bad_magic = base.clone();
+        bad_magic[0] = b'X';
+        let e = SliceFile::from_bytes(&bad_magic).unwrap_err();
+        assert_eq!(e.downcast_ref::<SliceError>(), Some(&SliceError::BadMagic));
+
+        let mut bad_version = base.clone();
+        bad_version[4] = 9;
+        let e = SliceFile::from_bytes(&bad_version).unwrap_err();
+        assert_eq!(e.downcast_ref::<SliceError>(), Some(&SliceError::UnsupportedVersion(9)));
+
+        let mut bad_kind = base.clone();
+        bad_kind[5] = 7;
+        let e = SliceFile::from_bytes(&bad_kind).unwrap_err();
+        assert_eq!(e.downcast_ref::<SliceError>(), Some(&SliceError::BadKind(7)));
+
+        let mut bad_crc = base.clone();
+        let last = bad_crc.len() - 1;
+        bad_crc[last] ^= 0x01;
+        let e = SliceFile::from_bytes(&bad_crc).unwrap_err();
+        assert_eq!(e.downcast_ref::<SliceError>(), Some(&SliceError::CrcMismatch));
     }
 
     #[test]

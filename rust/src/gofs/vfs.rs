@@ -1,0 +1,506 @@
+//! VFS shim: the one seam every GoFS file touches.
+//!
+//! All slice, WAL and manifest I/O (reader, writer, appender, compactor)
+//! routes through a [`Vfs`] so that two storage-plane concerns live in
+//! exactly one place:
+//!
+//! * **Deterministic disk-fault injection** — the same seeded
+//!   [`FaultInjector`] plan grammar the cluster runtime uses
+//!   (`cluster/fault.rs`), evaluated at `gofs.read.<rel>` /
+//!   `gofs.write.<rel>` points where `<rel>` is the path relative to the
+//!   collection root (`*` in a plan glob crosses `/`). Storage actions:
+//!   `bitflip` (flip one byte — the container CRC catches it),
+//!   `torn-write` (persist half the bytes), `truncate` (full write, then
+//!   cut to half length), `enospc`/`eio` (fail with the matching error),
+//!   `vanish` (the file disappears). Network-only actions (`drop`,
+//!   `corrupt`, `halfopen`, `partition`) are no-ops here; `delay`
+//!   sleeps, `exit` kills the process, as everywhere. Without a plan
+//!   the shim is pass-through — byte-identical behavior, off by
+//!   default.
+//!
+//! * **Sealed-group replication** — with a replica root configured
+//!   (`ingest --replica-dir`), every publish mirrors its *clean* bytes
+//!   to the same relative path under the replica, with the same
+//!   temp + fsync + rename ordering. Faults are never injected into the
+//!   mirror leg and failed publishes (`enospc`/`eio`) do not mirror, so
+//!   the replica is always an intact copy the read path
+//!   (`gofs::reader`) and `goffish scrub --repair` can restore from.
+//!
+//! Detection of a corrupted sealed slice surfaces as the typed
+//! [`CorruptSlice`] error (recoverable through `anyhow`'s
+//! `downcast_ref`), which the cluster worker reports to the coordinator
+//! so an epoch aborts cleanly instead of wedging.
+
+use crate::cluster::fault::{Action, FaultInjector};
+use crate::gofs::slice::SliceFile;
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Directory (under a partition dir) where corrupt sealed files are
+/// moved aside instead of being served or silently deleted.
+pub const QUARANTINE_DIR: &str = ".quarantine";
+
+/// Typed error for a sealed slice that failed its container CRC or
+/// decode. Carried as the `anyhow` payload so recovery loops (the
+/// cluster worker's corrupt reporting in particular) can branch on it
+/// with `downcast_ref`; the display string doubles as a grep-able
+/// marker for error chains that crossed a process boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CorruptSlice {
+    /// Partition the slice belongs to.
+    pub part: usize,
+    /// Sealed group id, when the corrupt file is an attribute slice
+    /// (`None` for template/metadata slices).
+    pub group: Option<usize>,
+    /// Collection-root-relative path of the corrupt file.
+    pub path: String,
+}
+
+/// Marker prefix of [`CorruptSlice`]'s display form; see
+/// [`err_is_corrupt`].
+pub(crate) const CORRUPT_MARKER: &str = "corrupt slice (part ";
+
+impl std::fmt::Display for CorruptSlice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.group {
+            Some(g) => write!(f, "{CORRUPT_MARKER}{}, group {g}): {}", self.part, self.path),
+            None => write!(f, "{CORRUPT_MARKER}{}): {}", self.part, self.path),
+        }
+    }
+}
+
+impl std::error::Error for CorruptSlice {}
+
+/// True when `e` is (or wraps) a [`CorruptSlice`]. The payload check
+/// covers errors built in this process; the marker-substring check
+/// covers chains that were flattened to text (e.g. shipped across the
+/// cluster wire or re-wrapped by a context layer that dropped the
+/// payload).
+pub fn err_is_corrupt(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<CorruptSlice>().is_some() || format!("{e:#}").contains(CORRUPT_MARKER)
+}
+
+/// Durably replace `path`'s contents: stream them into a same-directory
+/// `.tmp` sibling via `write`, fsync, rename over `path`, and fsync the
+/// directory (unix). A concurrent or post-crash reader sees either the
+/// old file or the complete new one, never a torn write. Shared by the
+/// WAL rewrite, slice/metadata publishes and replica mirroring, so the
+/// crash-safety details live in exactly one place.
+pub(crate) fn replace_file_durable(
+    path: &Path,
+    write: impl FnOnce(&mut File) -> std::io::Result<()>,
+) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    let tmp = path.with_file_name(name);
+    {
+        let mut f = File::create(&tmp).with_context(|| format!("writing {}", tmp.display()))?;
+        write(&mut f).with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("publishing {}", path.display()))?;
+    #[cfg(unix)]
+    if let Some(parent) = path.parent() {
+        // Make the rename itself durable.
+        if let Ok(d) = File::open(parent) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Move `part_dir/rel` aside to `part_dir/.quarantine/rel`, preserving
+/// the relative layout so `scrub --repair` can find and restore it.
+/// Returns the quarantine path.
+pub(crate) fn quarantine_file(part_dir: &Path, rel: &Path) -> Result<PathBuf> {
+    let src = part_dir.join(rel);
+    let dst = part_dir.join(QUARANTINE_DIR).join(rel);
+    if let Some(parent) = dst.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::rename(&src, &dst)
+        .with_context(|| format!("quarantining {}", src.display()))?;
+    Ok(dst)
+}
+
+fn injected_io(kind: &str, path: &Path) -> anyhow::Error {
+    anyhow::Error::new(std::io::Error::new(
+        std::io::ErrorKind::Other,
+        format!("{kind} (injected)"),
+    ))
+    .context(format!("writing {}", path.display()))
+}
+
+/// The shim itself: a collection root plus the optional injector and
+/// replica root. Cheap to clone (two `PathBuf`s and an `Arc`); every
+/// `Store`/appender/compactor holds its own copy.
+#[derive(Debug, Clone)]
+pub struct Vfs {
+    root: PathBuf,
+    injector: Option<Arc<FaultInjector>>,
+    replica: Option<PathBuf>,
+}
+
+impl Vfs {
+    /// A pass-through shim: no injection, no replica. The default for
+    /// every entry point not explicitly armed with `--fault-plan` /
+    /// `--replica-dir`.
+    pub fn passive(root: &Path) -> Vfs {
+        Vfs { root: root.to_path_buf(), injector: None, replica: None }
+    }
+
+    pub fn new(
+        root: &Path,
+        injector: Option<Arc<FaultInjector>>,
+        replica: Option<PathBuf>,
+    ) -> Vfs {
+        Vfs { root: root.to_path_buf(), injector, replica }
+    }
+
+    /// The collection-root-relative, `/`-separated form of `path` —
+    /// both the injection-point suffix and the journal-safe path form
+    /// (absolute paths differ across hosts and runs; relative ones are
+    /// deterministic).
+    pub(crate) fn rel(&self, path: &Path) -> String {
+        let r = path.strip_prefix(&self.root).unwrap_or(path);
+        let parts: Vec<String> = r
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect();
+        if parts.is_empty() {
+            path.display().to_string()
+        } else {
+            parts.join("/")
+        }
+    }
+
+    /// Replica-side path for a primary `path`, when a replica root is
+    /// configured.
+    pub(crate) fn replica_path(&self, path: &Path) -> Option<PathBuf> {
+        let replica = self.replica.as_ref()?;
+        let rel = path.strip_prefix(&self.root).ok()?;
+        Some(replica.join(rel))
+    }
+
+    pub(crate) fn has_replica(&self) -> bool {
+        self.replica.is_some()
+    }
+
+    /// Evaluate the fault plan at a read/write point for `path`.
+    fn check(&self, op: &str, path: &Path) -> Action {
+        match &self.injector {
+            Some(inj) => {
+                let a = inj.check(&format!("gofs.{op}.{}", self.rel(path)));
+                // Honor the cross-cutting actions; network-only ones
+                // act like `None` at a storage point.
+                match a {
+                    Action::Delay(d) => {
+                        std::thread::sleep(d);
+                        Action::None
+                    }
+                    Action::Exit(code) => std::process::exit(code),
+                    Action::Drop | Action::Corrupt | Action::HalfOpen(_) | Action::Partition(_) => {
+                        Action::None
+                    }
+                    other => other,
+                }
+            }
+            None => Action::None,
+        }
+    }
+
+    /// Evaluate the plan at `path`'s write point, for callers with their
+    /// own write mechanics (the WAL's streaming append).
+    pub(crate) fn check_write(&self, path: &Path) -> Action {
+        self.check("write", path)
+    }
+
+    /// Read a whole file through the shim. Injected `eio`/`enospc` fail
+    /// the call; `vanish` reads as `NotFound`; `bitflip` flips one byte
+    /// of the returned buffer; `torn-write`/`truncate` serve a
+    /// half-length buffer.
+    pub(crate) fn read(&self, path: &Path) -> std::io::Result<Vec<u8>> {
+        let action = self.check("read", path);
+        match action {
+            Action::Eio => {
+                return Err(std::io::Error::new(std::io::ErrorKind::Other, "EIO (injected)"));
+            }
+            Action::Enospc => {
+                return Err(std::io::Error::new(std::io::ErrorKind::Other, "ENOSPC (injected)"));
+            }
+            Action::Vanish => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::NotFound,
+                    "file vanished (injected)",
+                ));
+            }
+            _ => {}
+        }
+        let mut data = std::fs::read(path)?;
+        match action {
+            Action::Bitflip => {
+                if let Some(b) = data.last_mut() {
+                    *b ^= 0x40;
+                }
+            }
+            Action::TornWrite | Action::Truncate => {
+                let half = data.len() / 2;
+                data.truncate(half);
+            }
+            _ => {}
+        }
+        Ok(data)
+    }
+
+    /// Read and validate a slice container (the shimmed form of
+    /// [`SliceFile::read_from`]): returns the slice and its on-disk
+    /// byte count.
+    pub(crate) fn read_slice(&self, path: &Path) -> Result<(SliceFile, u64)> {
+        let data =
+            self.read(path).with_context(|| format!("reading slice {}", path.display()))?;
+        let n = data.len() as u64;
+        Ok((SliceFile::from_vec(data)?, n))
+    }
+
+    /// Durably replace `path` with `bytes` through the shim, **without**
+    /// replica mirroring — the WAL-rewrite leg (the replica carries
+    /// sealed state only; the WAL is per-primary).
+    pub(crate) fn replace_durable(&self, path: &Path, bytes: &[u8]) -> Result<()> {
+        let action = self.check("write", path);
+        self.apply_write(path, bytes, &action)
+    }
+
+    /// Durably publish `path` with `bytes` and mirror the clean bytes
+    /// to the replica (when configured). A failed primary write
+    /// (`enospc`/`eio`) skips the mirror — the publish did not happen.
+    /// Silent-corruption actions (`bitflip`, `torn-write`, `truncate`,
+    /// `vanish`) still mirror cleanly: that is exactly the divergence
+    /// read-repair and `scrub --repair` recover from.
+    pub(crate) fn publish(&self, path: &Path, bytes: &[u8]) -> Result<()> {
+        self.replace_durable(path, bytes)?;
+        self.mirror(path, bytes)
+    }
+
+    /// Mirror `bytes` to the replica path for `path`, faithfully and
+    /// fault-free. No-op without a replica root.
+    pub(crate) fn mirror(&self, path: &Path, bytes: &[u8]) -> Result<()> {
+        if let Some(rp) = self.replica_path(path) {
+            replace_file_durable(&rp, |f| f.write_all(bytes))
+                .with_context(|| format!("mirroring {}", rp.display()))?;
+        }
+        Ok(())
+    }
+
+    /// Mirror an existing on-disk file (template/meta/manifest seeding
+    /// when an appender opens with a replica configured).
+    pub(crate) fn mirror_existing(&self, path: &Path) -> Result<()> {
+        if self.replica.is_none() {
+            return Ok(());
+        }
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        self.mirror(path, &bytes)
+    }
+
+    /// Serialize and publish a slice container (the shimmed form of
+    /// [`SliceFile::write_to`] with durable-replace ordering). Returns
+    /// the on-disk byte count.
+    pub(crate) fn publish_slice(
+        &self,
+        slice: &SliceFile,
+        path: &Path,
+        compress: bool,
+    ) -> Result<u64> {
+        let bytes = slice.to_bytes(compress)?;
+        self.publish(path, &bytes)
+            .with_context(|| format!("publishing slice {}", path.display()))?;
+        Ok(bytes.len() as u64)
+    }
+
+    fn apply_write(&self, path: &Path, bytes: &[u8], action: &Action) -> Result<()> {
+        match action {
+            Action::Enospc => return Err(injected_io("ENOSPC", path)),
+            Action::Eio => return Err(injected_io("EIO", path)),
+            _ => {}
+        }
+        let mut flipped;
+        let effective: &[u8] = match action {
+            Action::Bitflip => {
+                flipped = bytes.to_vec();
+                if let Some(b) = flipped.last_mut() {
+                    *b ^= 0x40;
+                }
+                &flipped
+            }
+            Action::TornWrite => &bytes[..bytes.len() / 2],
+            _ => bytes,
+        };
+        replace_file_durable(path, |f| f.write_all(effective))?;
+        match action {
+            Action::Truncate => {
+                let f = std::fs::OpenOptions::new()
+                    .write(true)
+                    .open(path)
+                    .with_context(|| format!("truncating {}", path.display()))?;
+                f.set_len((bytes.len() / 2) as u64)
+                    .with_context(|| format!("truncating {}", path.display()))?;
+            }
+            Action::Vanish => {
+                std::fs::remove_file(path)
+                    .with_context(|| format!("vanishing {}", path.display()))?;
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::fault::FaultPlan;
+    use crate::gofs::slice::SliceKind;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("gofs-vfs-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn armed(root: &Path, plan: &str, replica: Option<PathBuf>) -> Vfs {
+        let inj = Arc::new(FaultInjector::new(FaultPlan::parse(plan).unwrap()));
+        Vfs::new(root, Some(inj), replica)
+    }
+
+    fn slice() -> SliceFile {
+        SliceFile::new(SliceKind::Metadata, (0..200u16).map(|i| (i % 251) as u8).collect())
+    }
+
+    #[test]
+    fn passive_shim_roundtrips_slices() {
+        let root = tmpdir("passive");
+        let vfs = Vfs::passive(&root);
+        let path = root.join("part-0/meta.slice");
+        let s = slice();
+        let n = vfs.publish_slice(&s, &path, false).unwrap();
+        let (back, m) = vfs.read_slice(&path).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(n, m);
+        assert!(!root.join("part-0/meta.slice.tmp").exists(), "temp cleaned up");
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn bitflip_on_write_fails_the_container_crc_and_mirrors_clean() {
+        let root = tmpdir("bitflip");
+        let replica = tmpdir("bitflip-replica");
+        let vfs = armed(
+            &root,
+            "on gofs.write.part-0/meta.slice nth 1 bitflip",
+            Some(replica.clone()),
+        );
+        let path = root.join("part-0/meta.slice");
+        vfs.publish_slice(&slice(), &path, false).unwrap();
+        let err = SliceFile::read_from(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("CRC"), "{err:#}");
+        // The replica leg carried the clean bytes.
+        let (back, _) = SliceFile::read_from(&replica.join("part-0/meta.slice")).unwrap();
+        assert_eq!(back, slice());
+        std::fs::remove_dir_all(&root).unwrap();
+        std::fs::remove_dir_all(&replica).unwrap();
+    }
+
+    #[test]
+    fn torn_and_truncated_writes_leave_short_files() {
+        let root = tmpdir("torn");
+        let vfs = armed(
+            &root,
+            "on gofs.write.a nth 1 torn-write\non gofs.write.b nth 1 truncate",
+            None,
+        );
+        let s = slice();
+        let full = s.to_bytes(false).unwrap().len() as u64;
+        vfs.publish_slice(&s, &root.join("a"), false).unwrap();
+        vfs.publish_slice(&s, &root.join("b"), false).unwrap();
+        for name in ["a", "b"] {
+            let got = std::fs::metadata(root.join(name)).unwrap().len();
+            assert_eq!(got, full / 2, "{name}: {got} of {full}");
+            assert!(SliceFile::read_from(&root.join(name)).is_err());
+        }
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn enospc_fails_the_publish_and_skips_the_mirror() {
+        let root = tmpdir("enospc");
+        let replica = tmpdir("enospc-replica");
+        let vfs = armed(&root, "on gofs.write.x nth 1 enospc", Some(replica.clone()));
+        let err = vfs.publish(&root.join("x"), b"payload").unwrap_err();
+        assert!(format!("{err:#}").contains("ENOSPC"), "{err:#}");
+        assert!(!root.join("x").exists());
+        assert!(!replica.join("x").exists(), "failed publish must not mirror");
+        // Second write: the nth-1 rule already fired.
+        vfs.publish(&root.join("x"), b"payload").unwrap();
+        assert!(replica.join("x").exists());
+        std::fs::remove_dir_all(&root).unwrap();
+        std::fs::remove_dir_all(&replica).unwrap();
+    }
+
+    #[test]
+    fn vanish_and_eio_on_the_read_side() {
+        let root = tmpdir("readside");
+        let path = root.join("part-1/f.slice");
+        Vfs::passive(&root).publish_slice(&slice(), &path, true).unwrap();
+        let vfs = armed(
+            &root,
+            "on gofs.read.part-1/f.slice nth 1 vanish\non gofs.read.part-1/f.slice nth 2 eio",
+            None,
+        );
+        let e = vfs.read(&path).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::NotFound);
+        assert!(path.exists(), "vanish is simulated; the file is intact");
+        let e = vfs.read(&path).unwrap_err();
+        assert!(e.to_string().contains("EIO"));
+        let (back, _) = vfs.read_slice(&path).unwrap(); // third read: clean
+        assert_eq!(back, slice());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn quarantine_preserves_relative_layout() {
+        let root = tmpdir("quarantine");
+        let part = root.join("part-0");
+        let rel = Path::new("attr/v0/b000-g0001.slice");
+        Vfs::passive(&root).publish(&part.join(rel), b"bad").unwrap();
+        let dst = quarantine_file(&part, rel).unwrap();
+        assert_eq!(dst, part.join(".quarantine").join(rel));
+        assert!(dst.exists());
+        assert!(!part.join(rel).exists());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn corrupt_slice_error_is_typed_and_marked() {
+        let e = anyhow::Error::new(CorruptSlice {
+            part: 2,
+            group: Some(7),
+            path: "part-2/attr/e0/b000-g0007.slice".into(),
+        })
+        .context("reading timestep 4");
+        assert!(err_is_corrupt(&e));
+        let c = e.downcast_ref::<CorruptSlice>().unwrap();
+        assert_eq!((c.part, c.group), (2, Some(7)));
+        assert!(format!("{e:#}").contains("corrupt slice (part 2, group 7)"));
+        // Flattened-to-text chains still classify via the marker.
+        let flat = anyhow::anyhow!("remote: {:#}", e);
+        assert!(err_is_corrupt(&flat));
+        assert!(!err_is_corrupt(&anyhow::anyhow!("some other failure")));
+    }
+}

@@ -103,6 +103,10 @@ pub fn deploy(
     let template = source.template();
     let n_instances = source.n_instances();
     std::fs::create_dir_all(out_dir)?;
+    // Batch deployment publishes through a passive VFS shim: same
+    // durable temp+fsync+rename ordering as the streaming sealer, no
+    // fault injection, no replica.
+    let vfs = crate::gofs::vfs::Vfs::passive(out_dir);
 
     // --- Partition + extract + bin-pack. ---
     let partitioning = partition_graph(template, &cfg.partition);
@@ -140,7 +144,7 @@ pub fn deploy(
         let body = encode_template_slice(l, &template.vertex_schema, &template.edge_schema);
         let path = part_dir(out_dir, l.part_id).join("template.slice");
         report.bytes_written +=
-            SliceFile::new(SliceKind::Template, body).write_to(&path, cfg.compress)?;
+            vfs.publish_slice(&SliceFile::new(SliceKind::Template, body), &path, cfg.compress)?;
         report.slices_written += 1;
     }
 
@@ -207,9 +211,11 @@ pub fn deploy(
                     let body = encode_attr_body(cells, ty, cfg.slice_version);
                     report.attr_body_bytes += body.len() as u64;
                     let path = part_dir(out_dir, l.part_id).join(key.rel_path());
-                    report.bytes_written +=
-                        SliceFile::with_version(SliceKind::Attribute, body, cfg.slice_version)
-                            .write_to(&path, cfg.compress)?;
+                    report.bytes_written += vfs.publish_slice(
+                        &SliceFile::with_version(SliceKind::Attribute, body, cfg.slice_version),
+                        &path,
+                        cfg.compress,
+                    )?;
                     report.slices_written += 1;
                     presence[l.part_id][slot][bin][g] = true;
                 }
@@ -230,12 +236,12 @@ pub fn deploy(
             groups.len(),
         );
         let path = part_dir(out_dir, l.part_id).join("meta.slice");
-        report.bytes_written += slice.write_to(&path, cfg.compress)?;
+        report.bytes_written += vfs.publish_slice(&slice, &path, cfg.compress)?;
         report.slices_written += 1;
     }
 
     // --- Root manifest. ---
-    write_collection_manifest(out_dir, cfg.n_parts, n_instances)?;
+    write_collection_manifest(out_dir, cfg.n_parts, n_instances, &vfs)?;
 
     Ok(report)
 }
@@ -248,12 +254,16 @@ pub(crate) fn write_collection_manifest(
     root: &Path,
     n_parts: usize,
     n_instances: usize,
+    vfs: &crate::gofs::vfs::Vfs,
 ) -> Result<()> {
     let mut e = Enc::new();
     e.varint(n_parts as u64);
     e.varint(n_instances as u64);
-    SliceFile::new(SliceKind::Metadata, e.finish())
-        .write_to(&root.join("collection.meta"), false)?;
+    vfs.publish_slice(
+        &SliceFile::new(SliceKind::Metadata, e.finish()),
+        &root.join("collection.meta"),
+        false,
+    )?;
     Ok(())
 }
 

@@ -24,9 +24,10 @@ use goffish::config::Args;
 use goffish::datagen::{
     CollectionSource, RoadNetGenerator, RoadNetParams, TraceRouteGenerator, TraceRouteParams,
 };
+use goffish::cluster::fault::{FaultInjector, FaultPlan};
 use goffish::gofs::{
-    compact_collection, deploy, deploy_template, open_collection, CollectionAppender,
-    CompactOptions, DeployConfig, DiskModel, IngestOptions, StoreOptions,
+    compact_collection, deploy, deploy_template, open_collection, scrub, CollectionAppender,
+    CompactOptions, DeployConfig, DiskModel, IngestOptions, ScrubOptions, StoreOptions,
 };
 use goffish::gopher::{GopherEngine, RunOptions, RunStats};
 use goffish::metrics::journal::Journal;
@@ -44,6 +45,7 @@ fn main() {
         Some("deploy") => cmd_deploy(&args),
         Some("ingest") => cmd_ingest(&args),
         Some("compact") => cmd_compact(&args),
+        Some("scrub") => cmd_scrub(&args),
         Some("run") => cmd_run(&args),
         Some("coordinator") => cmd_coordinator(&args),
         Some("host") => cmd_host(&args),
@@ -77,15 +79,17 @@ USAGE:
                   [--from <appender resume point> --to <dataset end>
                    --sleep-ms 0 --no-compress --no-sync --group-commit 1
                    --compact-after 0 --compact-target 0 --finish
-                   --journal FILE]
+                   --replica-dir DIR --fault-plan FILE --journal FILE]
   goffish compact --store DIR [--target-pack <8 x pack> --no-compress
                    --journal FILE]
+  goffish scrub   --store DIR [--replica-dir DIR --repair --out FILE]
   goffish run     --store DIR --app sssp|pagerank|nhop|track|wcc
                   [--cache 14 --cache-bytes 0 --tail-high-water 0
                    --hosts <auto> --source <ext-id> --plate CA-00007
                    --nhops 6 --backend scalar|pjrt --artifacts artifacts
                    --from <ts> --to <ts> --prefetch-depth 2
-                   --poll-ms 25 --idle-polls 40 --real-disk --follow]
+                   --poll-ms 25 --idle-polls 40 --real-disk --follow
+                   --replica-dir DIR --fault-plan FILE]
   goffish coordinator --hosts N --app sssp|pagerank
                   [--listen 127.0.0.1:0 --port-file FILE --source <ext-id>
                    --max-supersteps 10000 --max-epochs 64 --out FILE
@@ -98,7 +102,7 @@ USAGE:
                    --connect-timeout 30 --step-delay-ms 0 --real-disk
                    --heartbeat-ms 500 --round-deadline-ms 30000
                    --retry-base-ms 100 --max-rejoins 0 --fault-plan FILE
-                   --journal FILE --no-ship-metrics]
+                   --replica-dir DIR --journal FILE --no-ship-metrics]
   goffish supervise <host flags>
                   [--max-restarts 5 --restart-backoff-ms 500
                    --child-pid-file FILE]
@@ -133,6 +137,19 @@ USAGE:
   declared hung and the epoch aborts instead of hanging. --fault-plan
   points at a deterministic fault-injection schedule (see docs/CLI.md)
   used by the chaos tests; leave it unset in production.
+
+  Storage integrity: `ingest --replica-dir DIR` mirrors every sealed
+  group and metadata publish into a second directory; readers (`run`,
+  `host --replica-dir`) that hit a corrupt sealed slice restore it from
+  the replica transparently (read-repair) or, without one, quarantine
+  the file and fail with a typed corrupt-slice error the coordinator
+  turns into a clean run abort. `goffish scrub` verifies every slice
+  CRC + full decode, the WAL tail and the metadata invariants offline,
+  prints a JSON report, and with `--repair` restores corrupt files from
+  the replica. `ingest`/`run` accept the same `--fault-plan` schedules
+  as the cluster commands, extended with disk-fault actions (bitflip,
+  torn-write, truncate, enospc, eio, vanish) for deterministic chaos
+  testing. See docs/ARCHITECTURE.md §Storage fault model.
 
   Observability: `--journal FILE` (host, coordinator, ingest, compact)
   appends CRC-framed lifecycle events readable across crashes; hosts
@@ -214,6 +231,18 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Shared `--fault-plan` loader for the storage-side commands (`ingest`,
+/// `run`): the cluster commands arm their own process-wide injector.
+fn load_fault_plan(args: &Args) -> Result<Option<Arc<FaultInjector>>> {
+    match args.get("fault-plan") {
+        Some(path) => {
+            let plan = FaultPlan::load(PathBuf::from(path).as_path())?;
+            Ok(Some(Arc::new(FaultInjector::new(plan))))
+        }
+        None => Ok(None),
+    }
+}
+
 /// Stream dataset instances into a deployed collection through the
 /// WAL-backed appender (`gofs::ingest`): each instance is fsynced into
 /// every partition's WAL, and every `pack` timesteps seal into a normal
@@ -225,12 +254,17 @@ fn cmd_ingest(args: &Args) -> Result<()> {
         compress: !args.switch("no-compress"),
         sync: !args.switch("no-sync"),
         compact_target: args.usize("compact-target", 0),
+        replica_dir: args.get("replica-dir").map(PathBuf::from),
+        fault: load_fault_plan(args)?,
         ..Default::default()
     }
     .group_commit(args.usize("group-commit", 1))
     .compact_after(args.usize("compact-after", 0));
     if let Some(path) = args.get("journal") {
         opts.metrics.set_journal(Arc::new(Journal::open(PathBuf::from(path).as_path(), "ingest")?));
+    }
+    if let Some(inj) = &opts.fault {
+        inj.set_metrics(opts.metrics.clone());
     }
     let mut appender = CollectionAppender::open(&store_dir, opts)?;
     let from = args.usize("from", appender.n_instances());
@@ -315,6 +349,35 @@ fn cmd_compact(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Offline integrity pass (`gofs::scrub`): verify every slice container
+/// CRC + full body decode, the WAL tail and the metadata invariants,
+/// print a JSON report, and exit non-zero if any data is at risk. With
+/// `--repair` and a `--replica-dir`, corrupt files whose replica copy
+/// verifies clean are restored in place first.
+fn cmd_scrub(args: &Args) -> Result<()> {
+    let store_dir = PathBuf::from(args.require("store")?);
+    let opts = ScrubOptions {
+        replica_dir: args.get("replica-dir").map(PathBuf::from),
+        repair: args.switch("repair"),
+    };
+    let report = scrub(&store_dir, &opts)?;
+    let json = report.to_json();
+    match args.get("out") {
+        Some(path) => std::fs::write(path, &json)
+            .with_context(|| format!("writing scrub report to {path}"))?,
+        None => print!("{json}"),
+    }
+    if !report.clean() {
+        bail!(
+            "scrub: {} corrupt finding(s) in {} ({} slices verified)",
+            report.corrupt.len(),
+            store_dir.display(),
+            report.slices_checked
+        );
+    }
+    Ok(())
+}
+
 fn print_stats(stats: &RunStats) {
     println!(
         "done: {} timesteps, {} supersteps, {:.2}s wall ({:.3}s merge)",
@@ -339,12 +402,18 @@ fn cmd_run(args: &Args) -> Result<()> {
     let store_dir = PathBuf::from(args.require("store")?);
     let metrics = Arc::new(Metrics::new());
     let disk = if args.switch("real-disk") { DiskModel::instant() } else { DiskModel::default() };
+    let fault = load_fault_plan(args)?;
+    if let Some(inj) = &fault {
+        inj.set_metrics(metrics.clone());
+    }
     let opts = StoreOptions {
         cache_slots: args.usize("cache", 14),
         cache_bytes: args.u64("cache-bytes", 0),
         tail_high_water_bytes: args.u64("tail-high-water", 0),
         disk,
         metrics: metrics.clone(),
+        replica_dir: args.get("replica-dir").map(PathBuf::from),
+        fault,
     };
     let stores = open_collection(&store_dir, &opts)?;
     let n_hosts = stores.len();
@@ -512,6 +581,10 @@ fn cmd_host(args: &Args) -> Result<()> {
             tail_high_water_bytes: 0,
             disk,
             metrics,
+            replica_dir: args.get("replica-dir").map(PathBuf::from),
+            // The worker arms the store with its process-wide injector
+            // (`--fault-plan`) each epoch; see `worker::run_epoch`.
+            fault: None,
         },
         workers: args.usize("workers", 0),
         connect_timeout_s: args.u64("connect-timeout", 30),

@@ -76,6 +76,9 @@ pub mod hkeys {
     /// Crash detection to first commit of the recovered epoch,
     /// milliseconds (coordinator-side).
     pub const REJOIN_RECOVERY_MS: &str = "cluster.rejoin_recovery_ms";
+    /// Corrupt sealed slice detected to replica restore published,
+    /// milliseconds (read-repair path, per repaired slice).
+    pub const READ_REPAIR_MS: &str = "gofs.read_repair_ms";
 
     /// `(lo, hi, buckets)` layout for `key`. Fixed per key so host and
     /// coordinator histograms always fold without reshaping; unknown
@@ -94,6 +97,7 @@ pub mod hkeys {
             BARRIER_WAIT_US => (0.0, 500_000.0, 64),
             HEARTBEAT_GAP_MS => (0.0, 4_000.0, 64),
             REJOIN_RECOVERY_MS => (0.0, 32_000.0, 64),
+            READ_REPAIR_MS => (0.0, 8_000.0, 64),
             _ => (0.0, 1_000_000.0, 64),
         }
     }

@@ -1,0 +1,704 @@
+//! Storage integrity plane (gofs::vfs + gofs::scrub): seeded disk-fault
+//! injection through the VFS shim, corrupt-slice detection / quarantine /
+//! typed abort, replica mirroring with read-repair, offline scrub over
+//! every crash window, and the chaos acceptance run — a cluster run over
+//! a bit-rotted collection that heals from its replica and stays
+//! bit-identical to a failure-free in-process run.
+
+use goffish::cluster::coordinator::{run_coordinator, CoordinatorConfig};
+use goffish::cluster::fault::{FaultInjector, FaultPlan};
+use goffish::cluster::worker::{build_app, run_host, HostConfig};
+use goffish::cluster::ClusterSpec;
+use goffish::datagen::{CollectionSource, TraceRouteGenerator, TraceRouteParams};
+use goffish::gofs::{
+    compact_collection, deploy, deploy_template, err_is_corrupt, open_collection, scrub,
+    CollectionAppender, CompactOptions, CorruptSlice, DeployConfig, DiskModel, IngestOptions,
+    Projection, ScrubOptions, StoreOptions,
+};
+use goffish::gopher::{GopherEngine, RunOptions};
+use goffish::graph::SubgraphId;
+use goffish::metrics::journal::{self, Journal};
+use goffish::metrics::Metrics;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const N_HOSTS: usize = 2;
+const BINS: usize = 3;
+const PACK: usize = 4;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gofs-scrub-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn tr_gen() -> TraceRouteGenerator {
+    TraceRouteGenerator::new(TraceRouteParams::tiny())
+}
+
+fn opts(cache: usize) -> StoreOptions {
+    StoreOptions {
+        cache_slots: cache,
+        disk: DiskModel::instant(),
+        metrics: Arc::new(Metrics::new()),
+        ..Default::default()
+    }
+}
+
+fn sssp_params(gen: &TraceRouteGenerator) -> Vec<(String, String)> {
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+    vec![("source".to_string(), source.to_string())]
+}
+
+/// Recursive copy — builds a stand-in replica from a deployed tree.
+fn copy_tree(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for e in std::fs::read_dir(src).unwrap() {
+        let e = e.unwrap();
+        let to = dst.join(e.file_name());
+        if e.file_type().unwrap().is_dir() {
+            copy_tree(&e.path(), &to);
+        } else {
+            std::fs::copy(e.path(), &to).unwrap();
+        }
+    }
+}
+
+/// Every sealed attribute slice of one partition (the layout nests them
+/// as `attr/{v|e}<attr>/b<bin>-g<group>.slice`), sorted for determinism.
+fn attr_slices(root: &Path, part: usize) -> Vec<PathBuf> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+        for e in std::fs::read_dir(dir).unwrap() {
+            let p = e.unwrap().path();
+            if p.is_dir() {
+                walk(&p, out);
+            } else if p.extension().is_some_and(|x| x == "slice") {
+                out.push(p);
+            }
+        }
+    }
+    let mut out = Vec::new();
+    walk(&root.join(format!("part-{part}")).join("attr"), &mut out);
+    out.sort();
+    out
+}
+
+/// Flip one byte in place — simulated at-rest bit rot. Offset 16 lands
+/// inside the container body, past the magic/version prefix.
+fn flip_byte(path: &Path, offset: usize) {
+    let mut bytes = std::fs::read(path).unwrap();
+    assert!(bytes.len() > offset, "{} too short to corrupt", path.display());
+    bytes[offset] ^= 0x40;
+    std::fs::write(path, &bytes).unwrap();
+}
+
+/// Every value of every instance must read back identically from the two
+/// collections (the bit-identity half of each recovery assertion).
+fn assert_stores_identical(da: &Path, db: &Path, n_ts: usize) {
+    let sa = open_collection(da, &opts(64)).unwrap();
+    let sb = open_collection(db, &opts(64)).unwrap();
+    assert_eq!(sa.len(), sb.len());
+    for (a, b) in sa.iter().zip(&sb) {
+        assert_eq!(a.n_instances(), n_ts, "store A instance count");
+        assert_eq!(b.n_instances(), n_ts, "store B instance count");
+        let proj = Projection::all(a.vertex_schema(), a.edge_schema());
+        for sg in a.subgraphs() {
+            for t in 0..n_ts {
+                let ia = a.read_instance(sg.id.local(), t, &proj).unwrap();
+                let ib = b.read_instance(sg.id.local(), t, &proj).unwrap();
+                assert_eq!(ia.window, ib.window, "window t{t}");
+                for attr in 0..a.vertex_schema().len() {
+                    for v in 0..sg.n_vertices() as u32 {
+                        assert_eq!(
+                            ia.vertex_values(attr, v),
+                            ib.vertex_values(attr, v),
+                            "vattr {attr} v{v} t{t}"
+                        );
+                    }
+                }
+                for attr in 0..a.edge_schema().len() {
+                    for e in 0..sg.edges.len() {
+                        assert_eq!(
+                            ia.edge_values(attr, e),
+                            ib.edge_values(attr, e),
+                            "eattr {attr} e{e} t{t}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Full-projection scan of one store; returns the first read error.
+fn scan_store(dir: &Path, part: usize, so: &StoreOptions) -> Result<(), anyhow::Error> {
+    let stores = open_collection(dir, so)?;
+    let s = &stores[part];
+    let proj = Projection::all(s.vertex_schema(), s.edge_schema());
+    for sg in s.subgraphs() {
+        for t in 0..s.n_instances() {
+            s.read_instance(sg.id.local(), t, &proj)?;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Replica mirroring (ingest --replica-dir)
+// ---------------------------------------------------------------------
+
+/// Every sealed file the appender publishes — template, metadata, and
+/// attribute slices — lands in the replica bit-exactly; the WAL (mutable
+/// primary state) is never mirrored.
+#[test]
+fn ingest_replica_mirrors_every_sealed_file_bit_exactly() {
+    let gen = tr_gen();
+    let n = gen.n_instances();
+    let d = tmpdir("mirror");
+    let rep = tmpdir("mirror-replica");
+    deploy_template(&gen, &DeployConfig::new(N_HOSTS, BINS, PACK), &d).unwrap();
+    let o = IngestOptions { replica_dir: Some(rep.clone()), ..Default::default() };
+    let mut app = CollectionAppender::open(&d, o).unwrap();
+    for t in 0..n {
+        assert_eq!(app.append(&gen.instance(t)).unwrap(), t);
+    }
+    app.finish().unwrap();
+
+    let mut mirrored = 0usize;
+    for part in 0..N_HOSTS {
+        let pd = d.join(format!("part-{part}"));
+        for name in ["template.slice", "meta.slice"] {
+            let primary = pd.join(name);
+            let replica = rep.join(format!("part-{part}")).join(name);
+            assert_eq!(
+                std::fs::read(&primary).unwrap(),
+                std::fs::read(&replica).unwrap(),
+                "replica diverges for {}",
+                replica.display()
+            );
+            mirrored += 1;
+        }
+        for primary in attr_slices(&d, part) {
+            let rel = primary.strip_prefix(&d).unwrap();
+            let replica = rep.join(rel);
+            assert_eq!(
+                std::fs::read(&primary).unwrap(),
+                std::fs::read(&replica).unwrap(),
+                "replica diverges for {}",
+                replica.display()
+            );
+            mirrored += 1;
+        }
+        assert!(
+            !rep.join(format!("part-{part}")).join("wal.log").exists(),
+            "WAL must stay primary-only"
+        );
+    }
+    assert!(mirrored > 2 * N_HOSTS, "no attribute slices were mirrored");
+    std::fs::remove_dir_all(&d).unwrap();
+    std::fs::remove_dir_all(&rep).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Read-repair and the typed no-replica failure
+// ---------------------------------------------------------------------
+
+/// Bit rot on a sealed slice with a replica armed: reads succeed, the
+/// primary is restored bit-exactly, and the journal records the
+/// corrupt_detect → read_repair pair.
+#[test]
+fn read_repair_restores_primary_bit_exactly_and_journals() {
+    let gen = tr_gen();
+    let d = tmpdir("repair");
+    deploy(&gen, &DeployConfig::new(N_HOSTS, BINS, PACK), &d).unwrap();
+    let rep = tmpdir("repair-replica");
+    copy_tree(&d, &rep);
+
+    let victim = attr_slices(&d, 0).into_iter().next().unwrap();
+    let clean_bytes = std::fs::read(&victim).unwrap();
+    flip_byte(&victim, 16);
+    assert_ne!(std::fs::read(&victim).unwrap(), clean_bytes);
+
+    let jpath = d.join("journal.jsonl");
+    let metrics = Arc::new(Metrics::new());
+    metrics.set_journal(Arc::new(Journal::open(&jpath, "test").unwrap()));
+    let so = StoreOptions {
+        metrics,
+        replica_dir: Some(rep.clone()),
+        ..opts(16)
+    };
+    scan_store(&d, 0, &so).expect("read-repair must make every read succeed");
+
+    assert_eq!(
+        std::fs::read(&victim).unwrap(),
+        clean_bytes,
+        "primary not restored bit-exactly from replica"
+    );
+    assert!(
+        !d.join("part-0").join(".quarantine").exists(),
+        "repaired slice must not be quarantined"
+    );
+    let events = journal::replay(&jpath).unwrap();
+    assert!(
+        events.iter().any(|e| e.contains("\"event\":\"corrupt_detect\"")),
+        "no corrupt_detect event journaled: {events:?}"
+    );
+    assert!(
+        events.iter().any(|e| e.contains("\"event\":\"read_repair\"")),
+        "no read_repair event journaled: {events:?}"
+    );
+    std::fs::remove_dir_all(&d).unwrap();
+    std::fs::remove_dir_all(&rep).unwrap();
+}
+
+/// The same rot with no replica: the read fails with the typed
+/// [`CorruptSlice`] naming the exact {part, group}, the bad file is
+/// quarantined (not served, not silently deleted), and scrub then
+/// reports the damage as corrupt — non-clean — with the same coordinates.
+#[test]
+fn corrupt_slice_without_replica_is_typed_quarantined_and_flagged_by_scrub() {
+    let gen = tr_gen();
+    let d = tmpdir("typed");
+    deploy(&gen, &DeployConfig::new(N_HOSTS, BINS, PACK), &d).unwrap();
+    for f in attr_slices(&d, 0) {
+        flip_byte(&f, 16);
+    }
+
+    let err = scan_store(&d, 0, &opts(16)).expect_err("corrupt reads must fail");
+    assert!(err_is_corrupt(&err), "not classified corrupt: {err:#}");
+    let cs = err
+        .downcast_ref::<CorruptSlice>()
+        .expect("CorruptSlice payload must survive the context chain");
+    assert_eq!(cs.part, 0);
+    assert!(cs.group.is_some(), "attribute slice must carry its group id");
+    assert!(cs.path.starts_with("part-0/"), "path not root-relative: {}", cs.path);
+    assert!(
+        !d.join(&cs.path).exists(),
+        "corrupt file left in place: {}",
+        cs.path
+    );
+    let quarantine = d.join("part-0").join(".quarantine");
+    assert!(quarantine.exists(), "no quarantine directory");
+
+    let report = scrub(&d, &ScrubOptions::default()).unwrap();
+    assert!(!report.clean(), "scrub must flag a damaged store");
+    assert!(
+        report
+            .corrupt
+            .iter()
+            .any(|f| f.part == Some(0) && f.group == cs.group && f.detail == "missing"),
+        "scrub did not name the quarantined slice: {}",
+        report.to_json()
+    );
+    assert!(
+        report.self_healing.iter().any(|f| f.detail.contains("quarantined")),
+        "quarantined copy not reported: {}",
+        report.to_json()
+    );
+    std::fs::remove_dir_all(&d).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Crash-window × scrub matrix
+// ---------------------------------------------------------------------
+
+/// A torn trailing WAL frame is self-healing: scrub stays clean, names
+/// the tail, and recovery (replay + re-append) is bit-identical to an
+/// uninterrupted deployment.
+#[test]
+fn scrub_classifies_torn_wal_tail_as_self_healing_and_recovery_is_bit_identical() {
+    let gen = tr_gen();
+    let cfg = DeployConfig::new(N_HOSTS, BINS, 8); // pack 8: nothing seals
+    let d = tmpdir("wal-tail");
+    deploy_template(&gen, &cfg, &d).unwrap();
+    let mut app = CollectionAppender::open(&d, IngestOptions::default()).unwrap();
+    for t in 0..3 {
+        app.append(&gen.instance(t)).unwrap();
+    }
+    drop(app);
+    let wal = d.join("part-0").join("wal.log");
+    let bytes = std::fs::read(&wal).unwrap();
+    std::fs::write(&wal, &bytes[..bytes.len() - 7]).unwrap();
+
+    let report = scrub(&d, &ScrubOptions::default()).unwrap();
+    assert!(report.clean(), "torn tail is not data loss: {}", report.to_json());
+    assert!(
+        report.self_healing.iter().any(|f| f.detail.contains("torn WAL tail")),
+        "torn tail not classified: {}",
+        report.to_json()
+    );
+
+    // Recovery: replay truncates the torn record, re-append it and one
+    // more, seal, and compare with a 4-instance batch deployment.
+    let mut app = CollectionAppender::open(&d, IngestOptions::default()).unwrap();
+    assert_eq!(app.n_instances(), 2, "torn record dropped on replay");
+    for t in 2..4 {
+        assert_eq!(app.append(&gen.instance(t)).unwrap(), t);
+    }
+    app.finish().unwrap();
+    let gen4 = TraceRouteGenerator::new(TraceRouteParams {
+        n_instances: 4,
+        ..TraceRouteParams::tiny()
+    });
+    let d_batch = tmpdir("wal-tail-batch");
+    deploy(&gen4, &cfg, &d_batch).unwrap();
+    assert_stores_identical(&d_batch, &d, 4);
+    assert!(scrub(&d, &ScrubOptions::default()).unwrap().clean());
+    std::fs::remove_dir_all(&d).unwrap();
+    std::fs::remove_dir_all(&d_batch).unwrap();
+}
+
+/// A crash mid-seal (meta publish fails after the group's attribute
+/// slices hit disk) leaves only self-healing residue — the publish-last
+/// ordering means the group table never references a half-written seal —
+/// and the reopened appender replays the WAL and re-seals bit-identically.
+#[test]
+fn scrub_classifies_interrupted_seal_as_self_healing_and_recovery_is_bit_identical() {
+    let gen = tr_gen();
+    let n = gen.n_instances();
+    let cfg = DeployConfig::new(N_HOSTS, BINS, PACK);
+    let d = tmpdir("seal-crash");
+    deploy_template(&gen, &cfg, &d).unwrap();
+
+    let plan = FaultPlan::parse("on gofs.write.part-0/meta.slice nth 1 eio\n").unwrap();
+    let o = IngestOptions {
+        fault: Some(Arc::new(FaultInjector::new(plan))),
+        ..Default::default()
+    };
+    let mut app = CollectionAppender::open(&d, o).unwrap();
+    for t in 0..PACK - 1 {
+        app.append(&gen.instance(t)).unwrap();
+    }
+    // The PACK-th append triggers the first seal; its part-0 meta
+    // publish fails after the attribute slices were written.
+    let err = app.append(&gen.instance(PACK - 1)).unwrap_err();
+    assert!(format!("{err:#}").contains("injected"), "{err:#}");
+    drop(app);
+
+    let report = scrub(&d, &ScrubOptions::default()).unwrap();
+    assert!(report.clean(), "interrupted seal is not data loss: {}", report.to_json());
+
+    // Recovery: the WAL still holds every appended record; a fresh
+    // appender replays them, re-seals, and streams the rest.
+    let mut app = CollectionAppender::open(&d, IngestOptions::default()).unwrap();
+    assert_eq!(app.n_instances(), PACK, "WAL must retain the unsealed records");
+    for t in PACK..n {
+        assert_eq!(app.append(&gen.instance(t)).unwrap(), t);
+    }
+    app.finish().unwrap();
+    let d_batch = tmpdir("seal-crash-batch");
+    deploy(&gen, &cfg, &d_batch).unwrap();
+    assert_stores_identical(&d_batch, &d, n);
+    assert!(scrub(&d, &ScrubOptions::default()).unwrap().clean());
+    std::fs::remove_dir_all(&d).unwrap();
+    std::fs::remove_dir_all(&d_batch).unwrap();
+}
+
+/// Every compaction crash window (ARCHITECTURE.md crash-window table):
+/// scrub classifies the residue as self-healing — never corrupt — and a
+/// re-run completes the pass bit-identically.
+#[test]
+fn scrub_classifies_compaction_crash_windows_and_rerun_is_bit_identical() {
+    use goffish::gofs::ingest::compact::CrashPoint;
+    let gen = tr_gen();
+    let n = 8usize;
+    let cfg = DeployConfig::new(N_HOSTS, BINS, 1);
+    let gen8 = TraceRouteGenerator::new(TraceRouteParams {
+        n_instances: n,
+        ..TraceRouteParams::tiny()
+    });
+    let d_batch = tmpdir("cc-batch");
+    deploy(&gen8, &cfg, &d_batch).unwrap();
+
+    for (tag, crash) in [
+        ("midrepack", CrashPoint::MidRepack),
+        ("prepublish", CrashPoint::BeforePublish),
+        ("precleanup", CrashPoint::BeforeCleanup),
+    ] {
+        let d = tmpdir(&format!("cc-{tag}"));
+        deploy_template(&gen, &cfg, &d).unwrap();
+        let mut app = CollectionAppender::open(&d, IngestOptions::default()).unwrap();
+        for t in 0..n {
+            app.append(&gen.instance(t)).unwrap();
+        }
+        drop(app);
+
+        let crashing = CompactOptions { crash, ..CompactOptions::new(3) };
+        let err = compact_collection(&d, &crashing).unwrap_err();
+        assert!(format!("{err:#}").contains("simulated crash"), "{tag}: {err:#}");
+
+        let report = scrub(&d, &ScrubOptions::default()).unwrap();
+        assert!(
+            report.corrupt.is_empty(),
+            "{tag}: crash residue misclassified as corrupt: {}",
+            report.to_json()
+        );
+        assert!(
+            !report.self_healing.is_empty(),
+            "{tag}: crash residue went unnoticed: {}",
+            report.to_json()
+        );
+
+        compact_collection(&d, &CompactOptions::new(3)).unwrap();
+        assert!(scrub(&d, &ScrubOptions::default()).unwrap().clean(), "{tag}");
+        assert_stores_identical(&d_batch, &d, n);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+    std::fs::remove_dir_all(&d_batch).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Fault-plan determinism
+// ---------------------------------------------------------------------
+
+/// Strip the one non-deterministic journal field (`mono_us`).
+fn canon(line: &str) -> String {
+    let Some(i) = line.find("\"mono_us\":") else {
+        return line.to_string();
+    };
+    let start = i + "\"mono_us\":".len();
+    let digits = line[start..]
+        .find(|c: char| !c.is_ascii_digit() && c != ' ')
+        .unwrap_or(line.len() - start);
+    let end = start + digits;
+    if line[end..].starts_with(',') {
+        format!("{}{}", &line[..i], &line[end + 1..])
+    } else {
+        format!("{}{}", &line[..i.saturating_sub(1)], &line[end..])
+    }
+}
+
+/// Same plan + seed → bit-identical canonical journal: every fault
+/// firing and every lifecycle event replays in the same order with the
+/// same fields across independent runs.
+#[test]
+fn fault_plan_journal_is_canonically_identical_across_same_seed_runs() {
+    let run = |tag: &str| -> Vec<String> {
+        let gen = tr_gen();
+        let d = tmpdir(tag);
+        deploy_template(&gen, &DeployConfig::new(N_HOSTS, BINS, PACK), &d).unwrap();
+        let plan = FaultPlan::parse(
+            "seed 11\non gofs.write.part-0/attr/* prob 0.5 bitflip\n\
+             on gofs.write.part-1/meta.slice nth 2 torn-write\n",
+        )
+        .unwrap();
+        let inj = Arc::new(FaultInjector::new(plan));
+        let metrics = Arc::new(Metrics::new());
+        let jpath = d.join("journal.jsonl");
+        metrics.set_journal(Arc::new(Journal::open(&jpath, "ingest").unwrap()));
+        inj.set_metrics(metrics.clone());
+        let o = IngestOptions { metrics, fault: Some(inj), ..Default::default() };
+        let mut app = CollectionAppender::open(&d, o).unwrap();
+        for t in 0..gen.n_instances() {
+            // Silent-corruption actions never fail the append.
+            app.append(&gen.instance(t)).unwrap();
+        }
+        app.finish().unwrap();
+        let events: Vec<String> =
+            journal::replay(&jpath).unwrap().iter().map(|l| canon(l)).collect();
+        std::fs::remove_dir_all(&d).unwrap();
+        events
+    };
+    let a = run("canon-a");
+    let b = run("canon-b");
+    assert!(!a.is_empty(), "journal must record the run");
+    assert!(
+        a.iter().any(|l| l.contains("fault_fire")),
+        "plan never fired: {a:?}"
+    );
+    assert!(
+        a.iter().all(|l| !l.contains("mono_us")),
+        "canonicalization left mono_us behind"
+    );
+    assert_eq!(a, b, "same plan + seed must journal identically");
+}
+
+// ---------------------------------------------------------------------
+// Cluster integration
+// ---------------------------------------------------------------------
+
+fn wait_port(pf: &Path) -> u16 {
+    let t0 = Instant::now();
+    loop {
+        if let Ok(s) = std::fs::read_to_string(pf) {
+            if let Ok(p) = s.trim().parse() {
+                return p;
+            }
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "coordinator never wrote its port file"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// In-process ground truth over a clean collection — identical emission
+/// path to the coordinator's assembled output (see tests/distributed.rs).
+fn expected_output(dir: &Path, app_name: &str, params: &[(String, String)]) -> String {
+    let metrics = Arc::new(Metrics::new());
+    let o = StoreOptions { metrics: metrics.clone(), ..opts(16) };
+    let stores = open_collection(dir, &o).unwrap();
+    let per_host_sgids: Vec<Vec<SubgraphId>> = stores
+        .iter()
+        .map(|s| s.shared().subgraphs.iter().map(|sg| sg.id).collect())
+        .collect();
+    let total_vertices: usize = stores
+        .iter()
+        .map(|s| s.shared().subgraphs.iter().map(|g| g.n_vertices()).sum::<usize>())
+        .sum();
+    let n_t = stores[0].n_instances();
+    let app = build_app(app_name, params, total_vertices, stores[0].as_ref()).unwrap();
+    let eng = GopherEngine::new(stores, ClusterSpec::new(N_HOSTS), metrics);
+    eng.run(app.as_app(), &RunOptions::default()).unwrap();
+    let mut out = String::new();
+    for t in 0..n_t {
+        for sgids in &per_host_sgids {
+            out.push_str(&app.emit_timestep(t, sgids));
+        }
+    }
+    out
+}
+
+/// Coordinator + one worker thread per partition over localhost TCP,
+/// with caller-controlled store options (replica arming). Returns every
+/// outcome instead of unwrapping so failure-path tests can assert on it.
+#[allow(clippy::type_complexity)]
+fn run_cluster_outcomes(
+    dir: &Path,
+    params: Vec<(String, String)>,
+    tag: &str,
+    store_opts: StoreOptions,
+) -> (Result<String, anyhow::Error>, Vec<Result<(), anyhow::Error>>) {
+    let port_file = dir.join(format!("port-{tag}"));
+    let cfg = CoordinatorConfig {
+        n_hosts: N_HOSTS,
+        listen: "127.0.0.1:0".to_string(),
+        port_file: Some(port_file.clone()),
+        app_name: "sssp".to_string(),
+        app_params: params,
+        ..Default::default()
+    };
+    let coord = std::thread::spawn(move || run_coordinator(&cfg));
+    let addr = format!("127.0.0.1:{}", wait_port(&port_file));
+    let hosts: Vec<_> = (0..N_HOSTS)
+        .map(|part| {
+            let cfg = HostConfig {
+                root: dir.to_path_buf(),
+                part,
+                coordinator: addr.clone(),
+                store_opts: store_opts.clone(),
+                // Bound the exit paths: a fatal abort must not turn into
+                // minutes of reconnect backoff against a dead listener.
+                connect_timeout_s: 5,
+                max_rejoins: 2,
+                ..Default::default()
+            };
+            std::thread::spawn(move || run_host(&cfg))
+        })
+        .collect();
+    let host_results = hosts.into_iter().map(|h| h.join().unwrap()).collect();
+    (coord.join().unwrap(), host_results)
+}
+
+/// Unrepairable corruption on one partition, no replica: the worker
+/// reports the typed reason and the coordinator fails the run with it —
+/// promptly, instead of wedging through rejoin epochs over the same
+/// bad bytes.
+#[test]
+fn cluster_run_over_corrupt_partition_fails_typed_instead_of_wedging() {
+    let gen = tr_gen();
+    let d = tmpdir("fatal");
+    deploy(&gen, &DeployConfig::new(N_HOSTS, BINS, PACK), &d).unwrap();
+    for f in attr_slices(&d, 1) {
+        flip_byte(&f, 16);
+    }
+
+    let t0 = Instant::now();
+    let (coord, hosts) =
+        run_cluster_outcomes(&d, sssp_params(&gen), "fatal", opts(16));
+    let err = coord.expect_err("coordinator must fail the run");
+    assert!(
+        format!("{err:#}").contains("corrupt slice (part 1"),
+        "untyped coordinator failure: {err:#}"
+    );
+    assert!(
+        hosts.iter().all(|h| h.is_err()),
+        "every host must shut down after a fatal abort"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "fatal abort took {:?} — rejoin wedge?",
+        t0.elapsed()
+    );
+    std::fs::remove_dir_all(&d).unwrap();
+}
+
+/// Chaos acceptance: ingest under a seeded storage fault plan (bit rot
+/// on every part-0 attribute slice, a torn seal write on part-1) with a
+/// replica armed, then a 2-host cluster run over the rotted primary.
+/// Read-repair heals on demand and the output is bit-identical to a
+/// failure-free in-process run; `scrub --repair` then restores the rest
+/// and leaves the store value-identical to a clean deployment.
+#[test]
+fn chaos_cluster_run_heals_bit_rot_from_replica_bit_identically() {
+    let gen = tr_gen();
+    let n = gen.n_instances();
+    let cfg = DeployConfig::new(N_HOSTS, BINS, PACK);
+    let d_clean = tmpdir("chaos-clean");
+    deploy(&gen, &cfg, &d_clean).unwrap();
+    let d = tmpdir("chaos");
+    deploy_template(&gen, &cfg, &d).unwrap();
+    let rep = tmpdir("chaos-replica");
+
+    let plan = FaultPlan::parse(
+        "seed 5\non gofs.write.part-0/attr/* prob 1.0 bitflip\n\
+         on gofs.write.part-1/attr/* nth 1 torn-write\n",
+    )
+    .unwrap();
+    let o = IngestOptions {
+        replica_dir: Some(rep.clone()),
+        fault: Some(Arc::new(FaultInjector::new(plan))),
+        ..Default::default()
+    };
+    let mut app = CollectionAppender::open(&d, o).unwrap();
+    for t in 0..n {
+        assert_eq!(app.append(&gen.instance(t)).unwrap(), t);
+    }
+    app.finish().unwrap();
+
+    // The rot landed on the primary; the replica carried clean bytes.
+    let rotted = attr_slices(&d, 0)
+        .iter()
+        .filter(|p| {
+            let rel = p.strip_prefix(&d).unwrap();
+            std::fs::read(p).unwrap() != std::fs::read(rep.join(rel)).unwrap()
+        })
+        .count();
+    assert!(rotted > 0, "fault plan injected nothing");
+    assert!(!scrub(&d, &ScrubOptions::default()).unwrap().clean());
+
+    let params = sssp_params(&gen);
+    let expected = expected_output(&d_clean, "sssp", &params);
+    assert!(!expected.is_empty());
+    let so = StoreOptions { replica_dir: Some(rep.clone()), ..opts(16) };
+    let (coord, hosts) = run_cluster_outcomes(&d, params, "chaos", so);
+    for (part, h) in hosts.into_iter().enumerate() {
+        h.unwrap_or_else(|e| panic!("host {part} failed: {e:#}"));
+    }
+    let actual = coord.expect("chaos run must complete via read-repair");
+    assert_eq!(actual, expected, "healed run diverged from failure-free run");
+
+    // The run repaired what it read; scrub --repair restores the rest.
+    let report = scrub(
+        &d,
+        &ScrubOptions { replica_dir: Some(rep.clone()), repair: true },
+    )
+    .unwrap();
+    assert!(report.clean(), "repair left damage: {}", report.to_json());
+    assert_stores_identical(&d_clean, &d, n);
+    std::fs::remove_dir_all(&d_clean).unwrap();
+    std::fs::remove_dir_all(&d).unwrap();
+    std::fs::remove_dir_all(&rep).unwrap();
+}

@@ -15,32 +15,52 @@ use std::fmt;
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// A dynamic error: an outermost message plus the chain of causes that
-/// produced it (outermost first).
+/// produced it (outermost first). When built from a typed error
+/// ([`Error::new`] or `?` conversion) the original value is retained so
+/// callers can recover it with [`Error::downcast_ref`], exactly like
+/// upstream — recovery loops branch on typed markers this way.
 pub struct Error {
     /// Context chain, outermost message first.
     chain: Vec<String>,
+    /// The typed error this chain was built from, if any. Context
+    /// wrapping preserves it; message-only errors have none.
+    payload: Option<Box<dyn std::any::Any + Send + Sync>>,
 }
 
 impl Error {
     /// Construct from a printable message.
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { chain: vec![message.to_string()] }
+        Error { chain: vec![message.to_string()], payload: None }
     }
 
-    fn from_std<E: std::error::Error>(err: E) -> Error {
+    /// Construct from a typed error, retaining it for
+    /// [`Error::downcast_ref`] (upstream `Error::new`).
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(err: E) -> Error {
+        Error::from_std(err)
+    }
+
+    fn from_std<E: std::error::Error + Send + Sync + 'static>(err: E) -> Error {
         let mut chain = vec![err.to_string()];
         let mut source = err.source();
         while let Some(s) = source {
             chain.push(s.to_string());
             source = s.source();
         }
-        Error { chain }
+        Error { chain, payload: Some(Box::new(err)) }
     }
 
     /// Wrap with an outer context message (upstream `Error::context`).
+    /// The typed payload survives wrapping, as upstream's cause chain
+    /// does.
     pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
         self.chain.insert(0, context.to_string());
         self
+    }
+
+    /// Borrow the typed error this value was built from, if it is a `T`
+    /// (upstream `Error::downcast_ref`).
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        self.payload.as_deref().and_then(|p| p.downcast_ref::<T>())
     }
 
     /// The cause chain, outermost first (upstream returns an iterator of
@@ -216,6 +236,22 @@ mod tests {
         let r: Result<()> = Err(anyhow!("inner {}", 42));
         let e = r.context("outer").unwrap_err();
         assert_eq!(format!("{e:#}"), "outer: inner 42");
+    }
+
+    #[test]
+    fn downcast_ref_recovers_typed_errors() {
+        let e = Error::new(io_err());
+        assert_eq!(e.downcast_ref::<std::io::Error>().unwrap().to_string(), "missing file");
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+        assert!(Error::msg("plain").downcast_ref::<std::io::Error>().is_none());
+    }
+
+    #[test]
+    fn downcast_ref_survives_context_wrapping() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening the store").unwrap_err().context("outer");
+        assert_eq!(format!("{e:#}"), "outer: opening the store: missing file");
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
     }
 
     #[test]

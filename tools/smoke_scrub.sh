@@ -1,0 +1,132 @@
+#!/usr/bin/env bash
+# Storage-integrity smoke: the ISSUE's scripted acceptance for the
+# scrub/repair plane, end-to-end through the real binary.
+#
+#   1. Deploy a template and stream-ingest with `--replica-dir` armed
+#      and a seeded write-side fault plan that bit-flips every part-0
+#      attribute slice as it is sealed. The primary store is born
+#      rotted; the replica mirror always receives the clean bytes.
+#   2. `goffish run` over the rotted store WITHOUT a replica must fail
+#      typed — stderr names `corrupt slice (part 0, group N)` — and
+#      quarantine the slice it tripped on, never wedge or succeed.
+#   3. `goffish scrub` must exit non-zero and its JSON report must name
+#      the exact {part, group} coordinates of every damaged slice.
+#   4. `goffish scrub --repair --replica-dir` must restore the primary
+#      from the replica (including the quarantined file) and re-scrub
+#      clean, dropping the obsolete quarantine copy.
+#   5. A re-run over the repaired store must agree bit-for-bit with a
+#      fault-free reference run — repair has to be invisible in the
+#      analytics result.
+#
+# Usage: tools/smoke_scrub.sh  (after `cd rust && cargo build --release`)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=rust/target/release/goffish
+if [ ! -x "$BIN" ]; then
+    echo "error: $BIN not built (cd rust && cargo build --release)" >&2
+    exit 1
+fi
+
+WORK=$(mktemp -d)
+trap 'rm -rf "$WORK"' EXIT
+
+SHAPE="--dataset tr --vertices 1000 --vantage 2 --instances 8 --traces 100"
+STORE=$WORK/tr
+REPLICA=$WORK/tr-replica
+REF=$WORK/tr-ref
+
+# Fault-free reference: the same dataset, batch-deployed. Streamed
+# ingest and batch deploy are bit-identical (tier-1 invariant), so the
+# reference run is what the repaired store must reproduce.
+"$BIN" deploy $SHAPE --out "$REF" --parts 2 --bins 4 --pack 3
+REF_OUT=$("$BIN" run --store "$REF" --app sssp | grep -F 'sssp from ')
+if [ -z "$REF_OUT" ]; then
+    echo "error: reference run printed no sssp summary" >&2
+    exit 1
+fi
+
+# Seeded write-side rot: every part-0 attribute slice is bit-flipped on
+# its way to the primary. The replica mirror leg is not an injection
+# point, so the replica stays clean by construction.
+cat >"$WORK/rot.plan" <<'EOF'
+seed 7
+on gofs.write.part-0/attr/* prob 1.0 bitflip
+EOF
+
+"$BIN" deploy $SHAPE --out "$STORE" --parts 2 --bins 4 --pack 3 \
+    --template-only
+"$BIN" ingest $SHAPE --store "$STORE" --replica-dir "$REPLICA" \
+    --fault-plan "$WORK/rot.plan" --finish
+
+# (2) The rotted store without a replica must fail typed, not wedge.
+set +e
+RUN_ERR=$("$BIN" run --store "$STORE" --app sssp 2>&1 >/dev/null)
+RUN_RC=$?
+set -e
+if [ "$RUN_RC" -eq 0 ]; then
+    echo "error: run over the rotted store succeeded; expected a typed failure" >&2
+    exit 1
+fi
+if ! grep -q 'corrupt slice (part 0' <<<"$RUN_ERR"; then
+    echo "error: run failed without the typed CorruptSlice coordinates:" >&2
+    echo "$RUN_ERR" >&2
+    exit 1
+fi
+if [ ! -d "$STORE/part-0/.quarantine" ]; then
+    echo "error: the failed read did not quarantine the corrupt slice" >&2
+    exit 1
+fi
+
+# (3) Scrub exits non-zero and the JSON names exact {part, group}.
+set +e
+"$BIN" scrub --store "$STORE" --out "$WORK/report.json"
+SCRUB_RC=$?
+set -e
+if [ "$SCRUB_RC" -eq 0 ]; then
+    echo "error: scrub over the rotted store exited zero" >&2
+    exit 1
+fi
+python3 - "$WORK/report.json" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["clean"] is False, doc
+corrupt = doc["corrupt"]
+assert corrupt, "scrub found no corrupt slices in a rotted store"
+for f in corrupt:
+    assert f["part"] == 0, f
+    assert isinstance(f.get("group"), int), f"no group coordinate: {f}"
+    assert f["path"].startswith("part-0/attr/"), f
+assert any(f["detail"] == "missing" for f in corrupt), \
+    "the quarantined slice should surface as missing at its primary path"
+assert any("quarantined" in f["detail"] for f in doc["self_healing"]), \
+    "the quarantine copy should surface as self-healing residue"
+print(f"scrub report ok: {len(corrupt)} corrupt slice(s), "
+      f"all named with exact part/group coordinates")
+EOF
+
+# (4) Repair from the replica; the post-repair report must be clean.
+"$BIN" scrub --store "$STORE" --replica-dir "$REPLICA" --repair \
+    --out "$WORK/report-repaired.json"
+python3 - "$WORK/report-repaired.json" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["clean"] is True, doc
+assert doc["repaired"], "repair restored nothing despite a rotted store"
+assert not doc["self_healing"], \
+    f"quarantine copies should be dropped after repair: {doc['self_healing']}"
+print(f"repair ok: {len(doc['repaired'])} file(s) restored from the replica")
+EOF
+
+# (5) The repaired store must reproduce the fault-free reference result.
+GOT_OUT=$("$BIN" run --store "$STORE" --app sssp | grep -F 'sssp from ')
+if [ "$GOT_OUT" != "$REF_OUT" ]; then
+    echo "error: repaired-store run disagrees with the reference run" >&2
+    echo "  reference: $REF_OUT" >&2
+    echo "  repaired:  $GOT_OUT" >&2
+    exit 1
+fi
+
+echo "smoke ok: write-side bit rot detected typed, scrubbed with exact" \
+     "part/group coordinates, repaired from the replica, re-run matches" \
+     "the fault-free reference ($GOT_OUT)"
