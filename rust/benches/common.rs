@@ -71,12 +71,15 @@ pub fn deploy_cached(
         std::fs::write(
             &stamp,
             format!(
-                "{} {} {} {} {}\n{}\n{}",
+                "{} {} {} {} {} {}\n{}\n{}",
                 report.n_vertices,
                 report.n_edges,
                 report.slices_written,
                 report.bytes_written,
                 report.attr_body_bytes,
+                // Edge cut stored in basis points so the head line stays
+                // all-integer for the parser below.
+                (report.edge_cut_pct * 100.0).round().max(0.0) as u64,
                 report
                     .subgraphs_per_partition
                     .iter()
@@ -119,6 +122,7 @@ pub fn deploy_cached(
             slices_written: head[2] as usize,
             bytes_written: head[3],
             attr_body_bytes: head.get(4).copied().unwrap_or(0),
+            edge_cut_pct: head.get(5).map(|&bp| bp as f64 / 100.0).unwrap_or(-1.0),
         };
         (root, report)
     }

@@ -1112,6 +1112,126 @@ fn main() {
         let _ = std::fs::remove_dir_all(&root);
     }
 
+    // --- Partitioning quality: streaming fennel vs count-only binpack. ---
+    // Planted-cluster graph (dense intra-cluster ring+chords, one weak
+    // edge between consecutive clusters): a graph-aware streamer should
+    // keep clusters whole while the count-only baseline shreds them.
+    // Both deployments run WCC on a 2-host in-process engine; the probe
+    // asserts identical component outputs and reports the template edge
+    // cut plus routed bytes per superstep under each partitioner.
+    {
+        use goffish::apps::WccApp;
+        use goffish::graph::{
+            GraphInstance, GraphTemplate, TemplateBuilder, TimeWindow, Timestep,
+        };
+        use goffish::partition::PartitionStrategy;
+
+        struct ClusterSource {
+            template: GraphTemplate,
+        }
+        impl CollectionSource for ClusterSource {
+            fn template(&self) -> &GraphTemplate {
+                &self.template
+            }
+            fn n_instances(&self) -> usize {
+                1
+            }
+            fn instance(&self, t: Timestep) -> GraphInstance {
+                GraphInstance::empty(
+                    &self.template,
+                    t,
+                    TimeWindow::new(t as i64 * 10, t as i64 * 10 + 10),
+                )
+            }
+        }
+
+        let (clusters, csize) = (8usize, 48usize);
+        let n = clusters * csize;
+        let mut tb = TemplateBuilder::new(Schema::new(vec![]), Schema::new(vec![]));
+        for i in 0..n {
+            tb.vertex(i as u64);
+        }
+        for c in 0..clusters {
+            let base = (c * csize) as u32;
+            for i in 0..csize as u32 {
+                tb.edge(base + i, base + (i + 1) % csize as u32);
+                tb.edge(base + i, base + (i + 7) % csize as u32);
+            }
+            // One weak edge to the next cluster closes a ring of clusters.
+            tb.edge(base, (base + csize as u32) % n as u32);
+        }
+        let src = ClusterSource { template: tb.build() };
+
+        // Deploy + WCC under one strategy; canonical output is the sorted
+        // (ext id, component label) relation — labels are component
+        // min-ext-ids, so the relation is partition-invariant.
+        let probe = |strategy: PartitionStrategy| -> (f64, f64, Vec<(u64, u64)>) {
+            let root = std::env::temp_dir().join(format!(
+                "goffish-bench-part-{}-{}",
+                strategy.name(),
+                std::process::id()
+            ));
+            let _ = std::fs::remove_dir_all(&root);
+            let mut cfg = DeployConfig::new(2, 4, 1);
+            cfg.partition.strategy = strategy;
+            let rep = deploy(&src, &cfg, &root).expect("partition probe: deploy");
+            let (eng, _m) = engine(&root, 2, 16);
+            let app = WccApp::new();
+            let stats = eng
+                .run(&app, &RunOptions { timesteps: Some(vec![0]), ..Default::default() })
+                .expect("partition probe: wcc");
+            let labels = app.results.labels.lock().unwrap();
+            let mut canon: Vec<(u64, u64)> = Vec::new();
+            for s in eng.stores() {
+                for sg in s.subgraphs() {
+                    let label = labels[&sg.id];
+                    for &ext in &sg.ext_ids {
+                        canon.push((ext, label));
+                    }
+                }
+            }
+            canon.sort_unstable();
+            drop(labels);
+            let per_ss =
+                stats.total_routed_bytes() as f64 / stats.total_supersteps().max(1) as f64;
+            let _ = std::fs::remove_dir_all(&root);
+            (rep.edge_cut_pct, per_ss, canon)
+        };
+
+        let (cut_bp, bytes_bp, canon_bp) = probe(PartitionStrategy::Binpack);
+        let (cut_fn, bytes_fn, canon_fn) = probe(PartitionStrategy::Fennel);
+        assert_eq!(
+            canon_bp, canon_fn,
+            "partitioner changed WCC component outputs"
+        );
+        assert!(
+            cut_fn < cut_bp,
+            "fennel edge cut {cut_fn:.2}% not below binpack {cut_bp:.2}%"
+        );
+        assert!(
+            bytes_fn < bytes_bp,
+            "fennel routed {bytes_fn:.0} B/superstep not below binpack {bytes_bp:.0}"
+        );
+        report.row(&[
+            "edge cut (planted clusters, k=2)".into(),
+            format!("{cut_fn:.2}% vs {cut_bp:.2}%"),
+            "fennel vs binpack (identical WCC outputs)".into(),
+        ]);
+        report.row(&[
+            "routed bytes/superstep".into(),
+            format!("{bytes_fn:.0} vs {bytes_bp:.0}"),
+            "fennel vs binpack, WCC on 2 hosts".into(),
+        ]);
+        json.push(("edge_cut_pct_binpack".into(), cut_bp));
+        json.push(("edge_cut_pct_fennel".into(), cut_fn));
+        json.push(("routed_bytes_per_superstep_binpack".into(), bytes_bp));
+        json.push(("routed_bytes_per_superstep_fennel".into(), bytes_fn));
+        println!(
+            "partition probe: edge cut {cut_fn:.2}% (fennel) vs {cut_bp:.2}% (binpack), \
+             routed {bytes_fn:.0} vs {bytes_bp:.0} B/superstep, outputs identical"
+        );
+    }
+
     // --- L1/L2: kernel dispatch + throughput vs scalar. ---
     match PjrtEngine::load(
         &std::path::PathBuf::from(

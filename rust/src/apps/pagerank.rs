@@ -32,6 +32,27 @@ pub struct PageRankSummary {
 #[derive(Debug, Default)]
 pub struct PageRankResults {
     pub by_subgraph: Mutex<HashMap<(Timestep, SubgraphId), PageRankSummary>>,
+    /// Final rank bits per (timestep, external vertex id), recorded only
+    /// when [`PageRankApp::record_ranks`] is set. Because contributions are
+    /// quantized onto a dyadic grid (see [`grid24`]), these bits are
+    /// invariant to how the template was partitioned — the property the
+    /// cross-partitioner regression tests compare on.
+    pub ranks_by_vertex: Mutex<HashMap<(Timestep, u64), u32>>,
+}
+
+/// Quantize a PageRank contribution onto the 2⁻²⁴ dyadic grid, rounding
+/// toward zero. Every contribution becomes j·2⁻²⁴ with Σj ≤ 2²⁴ (total
+/// rank mass never exceeds 1), so *any* f32-or-wider summation of any
+/// regrouping of contributions is exact: partial sums are integers ≤ 2²⁴
+/// scaled by 2⁻²⁴, all exactly representable in f32. That makes the rank
+/// vector bitwise identical across partitionings and local/remote edge
+/// splits — partitioning may change placement, never results. Flooring
+/// (instead of rounding) keeps total mass ≤ 1, which `mass()` consumers
+/// assert. Scaling by a power of two and flooring are both exact in f64,
+/// so the grid value itself is deterministic.
+#[inline]
+fn grid24(x: f64) -> f32 {
+    ((x * 16777216.0).floor() / 16777216.0) as f32
 }
 
 impl PageRankResults {
@@ -74,6 +95,10 @@ pub struct PageRankApp {
     pub results: Arc<PageRankResults>,
     /// Top-k per subgraph to publish.
     pub top_k: usize,
+    /// Also record every vertex's final rank bits into
+    /// [`PageRankResults::ranks_by_vertex`] (tests/benches comparing runs
+    /// across different partitionings; off by default).
+    pub record_ranks: bool,
 }
 
 impl PageRankApp {
@@ -86,6 +111,7 @@ impl PageRankApp {
             backend,
             results: Arc::new(PageRankResults::default()),
             top_k: 5,
+            record_ranks: false,
         }
     }
 }
@@ -115,6 +141,7 @@ impl Application for PageRankApp {
             backend: self.backend.clone(),
             results: self.results.clone(),
             top_k: self.top_k,
+            record_ranks: self.record_ranks,
             ranks: vec![0.0; sg.n_vertices()],
             remote_in: vec![0.0; sg.n_vertices()],
             out_deg: Vec::new(),
@@ -132,6 +159,7 @@ struct PageRankProgram {
     backend: Arc<dyn LocalSpmv>,
     results: Arc<PageRankResults>,
     top_k: usize,
+    record_ranks: bool,
     /// Current ranks (iteration s-1 after superstep s).
     ranks: Vec<f32>,
     /// Remote contributions received this superstep.
@@ -156,7 +184,9 @@ impl PageRankProgram {
             if deg == 0 {
                 continue;
             }
-            let c = self.ranks[r.src_local as usize] as f64 / deg as f64;
+            // Same grid point the local SpMV path feeds for this edge's
+            // source, so receivers fold values that are exact in f32.
+            let c = grid24(self.ranks[r.src_local as usize] as f64 / deg as f64) as f64;
             *per_target.entry(r.dst_subgraph).or_default().entry(r.dst_global).or_insert(0.0) +=
                 c;
         }
@@ -223,7 +253,7 @@ impl SubgraphProgram for PageRankProgram {
         let contrib: Vec<f32> = (0..n)
             .map(|v| {
                 if self.out_deg[v] > 0 {
-                    self.ranks[v] / self.out_deg[v] as f32
+                    grid24(self.ranks[v] as f64 / self.out_deg[v] as f64)
                 } else {
                     0.0
                 }
@@ -260,6 +290,12 @@ impl SubgraphProgram for PageRankProgram {
                 .lock()
                 .unwrap()
                 .insert((ctx.timestep, ctx.sgid), PageRankSummary { mass, top });
+            if self.record_ranks {
+                let mut full = self.results.ranks_by_vertex.lock().unwrap();
+                for v in 0..n {
+                    full.insert((ctx.timestep, sg.ext_ids[v]), self.ranks[v].to_bits());
+                }
+            }
             ctx.vote_to_halt();
         }
     }

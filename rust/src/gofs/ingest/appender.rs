@@ -181,6 +181,9 @@ impl CollectionAppender {
             bail!("ingest: unsupported slice_version {}", opts.slice_version);
         }
         let lock = crate::gofs::ingest::WriterLock::acquire(root, "append")?;
+        // A crashed re-partition pass leaves a staged (or half-swapped)
+        // collection; recover it before reading any partition state.
+        crate::gofs::ingest::repartition::recover(root)?;
         let vfs = Vfs::new(root, opts.fault.clone(), opts.replica_dir.clone());
         let n_parts = crate::gofs::writer::collection_parts(root)?;
         let mut parts = Vec::with_capacity(n_parts);

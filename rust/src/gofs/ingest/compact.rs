@@ -149,6 +149,9 @@ pub fn compact_collection(root: &Path, opts: &CompactOptions) -> Result<CompactR
         bail!("compact: unsupported slice_version {}", opts.slice_version);
     }
     let _lock = crate::gofs::ingest::WriterLock::acquire(root, "compact")?;
+    // Roll forward (or sweep) any interrupted re-partition swap before
+    // trusting the partition directories.
+    crate::gofs::ingest::repartition::recover(root)?;
     let t0 = Instant::now();
     // The standalone compactor runs passive: no injection, no replica
     // (the appender's inline cadence passes its own armed shim instead).

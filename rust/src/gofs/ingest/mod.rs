@@ -64,11 +64,22 @@
 //! backpressure contract across process boundaries by summing the
 //! per-partition `.flow-beacon` files the workers' transports publish.
 
+//! ### Drift re-partitioning
+//!
+//! [`repartition`] is the opt-in compaction extension (`compact
+//! --repartition`) that rebuilds a sealed collection under a refined
+//! vertex→partition assignment, migrating high-traffic boundary vertices
+//! using the engine's accumulated per-host-pair routed bytes. It reuses
+//! the batch deployment machinery and publishes through a commit-marker +
+//! directory-swap protocol whose recovery runs at every writer entry
+//! point.
+
 pub mod appender;
 pub mod beacon;
 pub mod compact;
 pub mod flow;
 pub mod lock;
+pub mod repartition;
 pub(crate) mod wal;
 
 pub use appender::{CollectionAppender, IngestOptions, IngestStats};
@@ -76,3 +87,6 @@ pub use beacon::BeaconGate;
 pub use compact::{compact_collection, CompactOptions, CompactReport};
 pub use flow::FlowGate;
 pub use lock::WriterLock;
+pub use repartition::{
+    repartition_collection, RepartCrash, RepartitionOptions, RepartitionReport,
+};

@@ -1,0 +1,529 @@
+//! Drift-aware re-partitioning: rebuild a sealed collection under a
+//! better vertex→partition assignment.
+//!
+//! The deploy-time partitioning is chosen from topology alone. Once a
+//! collection has run real analytics, the engine knows better: every run
+//! accumulates per-host-pair routed traffic (`TimestepStats::routed_pairs`),
+//! which identifies the boundary vertices whose cut edges actually carry
+//! messages. This pass migrates those vertices — an opt-in extension of
+//! compaction (`compact --repartition`) that reuses the batch deployment
+//! machinery to lay the collection out again.
+//!
+//! ### What a pass does
+//!
+//! 1. **Recover** any interrupted earlier pass (roll the staged swap
+//!    forward if it committed, sweep the staging directory if not).
+//! 2. **Reconstruct** the global template from the partitions' subgraphs
+//!    (vertices, edges and schemas round-trip exactly; external ids and
+//!    template edge indices are preserved, so results cannot change).
+//! 3. **Choose** the new assignment: the current one (or a fresh
+//!    streaming placement when a strategy is given), then
+//!    [`traffic_refine`] sweeps weighted by the observed routed bytes.
+//!    If nothing moves, the pass is a no-op.
+//! 4. **Rebuild** every sealed timestep by reading each subgraph's
+//!    projected columns and inverting the projection back to global
+//!    element indices, then batch-deploy into a staging directory
+//!    (`.repart/`) next to the live partitions.
+//! 5. **Publish** via a commit marker + directory swap: write
+//!    `.repart.commit` (the commit point), move each live `part-k` aside
+//!    into `.repart.old/`, move the staged one in, swap the root
+//!    manifest, delete `.repart.old/` and `.repart/`, and remove the
+//!    marker **last**.
+//!
+//! ### Crash windows
+//!
+//! | crash between…              | on-disk state                       | recovery |
+//! |-----------------------------|-------------------------------------|----------|
+//! | staging → commit marker     | live parts untouched + `.repart/`   | sweep deletes the staging tree; reads never saw it |
+//! | marker → swap complete      | mixed old/new part dirs, marker set | roll forward: every part still exists exactly once across root/`.repart/`/`.repart.old/`; finish the moves, then clean up |
+//! | swap complete → cleanup     | new parts live + `.repart.old/`     | roll forward degenerates to the cleanup |
+//!
+//! Recovery runs automatically at every writer entry point
+//! ([`repartition_collection`] itself, `compact_collection`,
+//! `CollectionAppender::open`) under the collection's one-writer lock.
+//! This is an **offline** maintenance pass: it requires a fully sealed
+//! collection (no open WAL tail) and exclusive write access, and
+//! in-process readers must re-open the collection afterwards — subgraph
+//! identities change when vertices migrate, which is why the pass
+//! rewrites everything through the deployment path instead of patching
+//! slices.
+
+use crate::datagen::CollectionSource;
+use crate::gofs::reader::{open_collection, Store, StoreOptions};
+use crate::gofs::slice::SliceFile;
+use crate::gofs::writer::{decode_meta_slice, deploy_with, DeployConfig};
+use crate::gofs::Projection;
+use crate::graph::{
+    AttrColumn, AttrValue, Csr, GraphInstance, GraphTemplate, Timestep, VIdx,
+};
+use crate::metrics::keys;
+use crate::partition::{
+    partition_graph, traffic_refine, PartitionOptions, PartitionStrategy, Partitioning,
+};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::time::Instant;
+
+const REPART_DIR: &str = ".repart";
+const REPART_OLD: &str = ".repart.old";
+const REPART_MARKER: &str = ".repart.commit";
+
+/// Re-partition knobs (`compact --repartition`).
+#[derive(Debug, Clone)]
+pub struct RepartitionOptions {
+    /// Re-place every vertex from scratch with this strategy before the
+    /// traffic sweeps; `None` starts from the current assignment and
+    /// only migrates what the traffic justifies.
+    pub strategy: Option<PartitionStrategy>,
+    /// Seed for a fresh placement (ignored when `strategy` is `None`).
+    pub seed: u64,
+    /// Capacity slack for placement and migration (see
+    /// [`PartitionOptions::slack`]).
+    pub slack: f64,
+    /// Traffic-weighted boundary sweeps (see [`traffic_refine`]).
+    pub refine_sweeps: usize,
+    /// Accumulated per-host-pair routed traffic `(src, dst) -> (msgs,
+    /// bytes)` — `RunStats::routed_pair_totals()`, persisted by
+    /// `run --traffic-out` and loaded by `compact --traffic`. Empty is
+    /// fine: every cut edge then weighs the same.
+    pub traffic: Vec<((usize, usize), (u64, u64))>,
+    /// Deflate-compress the rebuilt slices.
+    pub compress: bool,
+    /// Attribute body format for the rebuilt slices.
+    pub slice_version: u8,
+    /// Test-only fault injection; see [`RepartCrash`].
+    #[doc(hidden)]
+    pub crash: RepartCrash,
+    /// Registry receiving the `repartition` lifecycle event and the
+    /// `partition.edge_cut_pct` counter (basis points).
+    pub metrics: std::sync::Arc<crate::metrics::Metrics>,
+}
+
+impl Default for RepartitionOptions {
+    fn default() -> Self {
+        RepartitionOptions {
+            strategy: None,
+            seed: 0xBEEF,
+            slack: 0.05,
+            refine_sweeps: 2,
+            traffic: Vec::new(),
+            compress: true,
+            slice_version: crate::gofs::slice::VERSION_V2,
+            crash: RepartCrash::None,
+            metrics: std::sync::Arc::new(crate::metrics::Metrics::new()),
+        }
+    }
+}
+
+/// Simulated crash points for the swap-window tests: the pass returns an
+/// error at exactly the chosen point, leaving disk as a real crash there
+/// would. Not for production use.
+#[doc(hidden)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RepartCrash {
+    #[default]
+    None,
+    /// Staging fully written, commit marker not yet on disk — the pass
+    /// must recover by discarding the staging tree.
+    BeforeCommit,
+    /// Marker on disk, first partition swapped, the rest not — the pass
+    /// must recover by rolling the swap forward.
+    MidSwap,
+    /// Swap complete, `.repart.old/` and the marker still on disk.
+    BeforeCleanup,
+}
+
+/// What a re-partition pass did.
+#[derive(Debug, Clone, Default)]
+pub struct RepartitionReport {
+    pub parts: usize,
+    pub n_vertices: usize,
+    pub n_instances: usize,
+    /// Vertices whose partition changed (0 = the pass was a no-op and
+    /// nothing was rewritten).
+    pub moved_vertices: usize,
+    pub edge_cut_pct_before: f64,
+    pub edge_cut_pct_after: f64,
+    pub wall_s: f64,
+}
+
+/// Re-partition the sealed collection rooted at `root`. Takes the
+/// collection's one-writer lock; see the module docs for the crash
+/// protocol. Returns without rewriting anything when no vertex moves.
+pub fn repartition_collection(root: &Path, opts: &RepartitionOptions) -> Result<RepartitionReport> {
+    let _lock = crate::gofs::ingest::WriterLock::acquire(root, "repartition")?;
+    recover(root)?;
+    let t0 = Instant::now();
+
+    let stores = open_collection(root, &StoreOptions::default())?;
+    if stores.is_empty() {
+        bail!("repartition: collection has no partitions");
+    }
+    for s in &stores {
+        if s.tail_instances() > 0 {
+            bail!(
+                "repartition: part {} has {} open (unsealed) timesteps — \
+                 finish or seal the ingest tail first",
+                s.part_id(),
+                s.tail_instances()
+            );
+        }
+    }
+    let n_parts = stores.len();
+    let n_instances = stores[0].n_instances();
+    let (template, current) = reconstruct_template(&stores)?;
+
+    // --- Choose the new assignment. ---
+    let mut next = match opts.strategy {
+        Some(strategy) => {
+            let mut po = PartitionOptions::new(n_parts);
+            po.seed = opts.seed;
+            po.slack = opts.slack;
+            po.strategy = strategy;
+            partition_graph(&template, &po)
+        }
+        None => current.clone(),
+    };
+    let pair_bytes: Vec<((usize, usize), u64)> =
+        opts.traffic.iter().map(|&(pair, (_msgs, bytes))| (pair, bytes)).collect();
+    traffic_refine(&template, &mut next, &pair_bytes, opts.slack, opts.refine_sweeps);
+
+    let mut report = RepartitionReport {
+        parts: n_parts,
+        n_vertices: template.n_vertices(),
+        n_instances,
+        moved_vertices: current
+            .assign
+            .iter()
+            .zip(&next.assign)
+            .filter(|(a, b)| a != b)
+            .count(),
+        edge_cut_pct_before: current.edge_cut_pct(&template),
+        edge_cut_pct_after: next.edge_cut_pct(&template),
+        ..Default::default()
+    };
+    if report.moved_vertices == 0 {
+        report.wall_s = t0.elapsed().as_secs_f64();
+        emit(opts, &report);
+        return Ok(report);
+    }
+
+    // --- Rebuild into the staging directory. ---
+    let (pack, n_bins) = {
+        let dir = crate::gofs::writer::part_dir(root, 0);
+        let (mslice, _) = SliceFile::read_from(&dir.join("meta.slice"))?;
+        let meta = decode_meta_slice(&mslice.body, mslice.version)?;
+        (meta.pack, stores[0].shared().bins.n_bins)
+    };
+    let staging = root.join(REPART_DIR);
+    if staging.exists() {
+        std::fs::remove_dir_all(&staging)?;
+    }
+    let mut cfg = DeployConfig::new(n_parts, n_bins, pack);
+    cfg.compress = opts.compress;
+    cfg.slice_version = opts.slice_version;
+    let source = RebuildSource { stores: &stores, template: &template, n_instances };
+    deploy_with(&source, &cfg, &staging, Some(&next))
+        .context("repartition: rebuilding into the staging directory")?;
+    // The stores (and their fds) are done with; drop before the swap so
+    // the old directories are not pinned on platforms that care.
+    drop(stores);
+    if opts.crash == RepartCrash::BeforeCommit {
+        bail!("simulated crash: staging written, before commit marker");
+    }
+
+    // --- Commit + swap. The marker is the point of no return: once it
+    // is durable, recovery rolls the swap *forward*.
+    write_marker(root)?;
+    swap_staged(root, opts.crash)?;
+
+    report.wall_s = t0.elapsed().as_secs_f64();
+    emit(opts, &report);
+    Ok(report)
+}
+
+fn emit(opts: &RepartitionOptions, report: &RepartitionReport) {
+    opts.metrics.event(
+        "repartition",
+        &[
+            ("parts", (report.parts as u64).into()),
+            ("moved_vertices", (report.moved_vertices as u64).into()),
+            ("edge_cut_bp_before", pct_to_bp(report.edge_cut_pct_before).into()),
+            ("edge_cut_bp_after", pct_to_bp(report.edge_cut_pct_after).into()),
+        ],
+    );
+    opts.metrics.add(keys::PARTITION_EDGE_CUT_BP, pct_to_bp(report.edge_cut_pct_after));
+}
+
+/// Edge-cut percentage in basis points (counters are integers).
+fn pct_to_bp(pct: f64) -> u64 {
+    (pct * 100.0).round().max(0.0) as u64
+}
+
+/// Recover an interrupted re-partition pass. Caller must hold the
+/// collection's writer lock. Returns true when anything was done.
+///
+/// * Commit marker present → the swap committed: roll it forward (every
+///   `part-k` exists exactly once across the root, `.repart/` and
+///   `.repart.old/`, so the remaining moves are unambiguous), then clean
+///   up, removing the marker last.
+/// * No marker → a staged-but-uncommitted pass: delete `.repart/`; the
+///   live partitions were never touched.
+pub fn recover(root: &Path) -> Result<bool> {
+    if root.join(REPART_MARKER).exists() {
+        swap_staged(root, RepartCrash::None)?;
+        return Ok(true);
+    }
+    let staging = root.join(REPART_DIR);
+    if staging.exists() {
+        std::fs::remove_dir_all(&staging)
+            .context("repartition recovery: sweeping uncommitted staging")?;
+        return Ok(true);
+    }
+    Ok(false)
+}
+
+/// Durably place the commit marker (file fsync + directory fsync, so the
+/// marker cannot appear before the staged tree it commits).
+fn write_marker(root: &Path) -> Result<()> {
+    let f = std::fs::File::create(root.join(REPART_MARKER))?;
+    f.sync_all()?;
+    if let Ok(d) = std::fs::File::open(root) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// Move the staged partitions into place and clean up; idempotent, so
+/// crash recovery re-enters it with injection disabled. Assumes the
+/// commit marker is on disk; removes it last.
+fn swap_staged(root: &Path, crash: RepartCrash) -> Result<()> {
+    let staging = root.join(REPART_DIR);
+    let old = root.join(REPART_OLD);
+    if staging.exists() {
+        let mut names: Vec<String> = std::fs::read_dir(&staging)?
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| n.starts_with("part-"))
+            .collect();
+        names.sort();
+        for (k, name) in names.iter().enumerate() {
+            let src = staging.join(name);
+            let dst = root.join(name);
+            if dst.exists() {
+                std::fs::create_dir_all(&old)?;
+                let aside = old.join(name);
+                // By the per-part move ordering, `dst` and `aside` never
+                // coexist; the guard keeps recovery idempotent anyway.
+                if !aside.exists() {
+                    std::fs::rename(&dst, &aside)
+                        .with_context(|| format!("repartition: retiring {name}"))?;
+                }
+            }
+            std::fs::rename(&src, &dst)
+                .with_context(|| format!("repartition: publishing {name}"))?;
+            if crash == RepartCrash::MidSwap && k == 0 {
+                bail!("simulated crash: mid partition swap");
+            }
+        }
+        let meta = staging.join("collection.meta");
+        if meta.exists() {
+            // rename() replaces the live manifest atomically.
+            std::fs::rename(&meta, root.join("collection.meta"))?;
+        }
+    }
+    if crash == RepartCrash::BeforeCleanup {
+        bail!("simulated crash: swap complete, before cleanup");
+    }
+    if old.exists() {
+        std::fs::remove_dir_all(&old)?;
+    }
+    if staging.exists() {
+        std::fs::remove_dir_all(&staging)?;
+    }
+    match std::fs::remove_file(root.join(REPART_MARKER)) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+        Err(e) => return Err(e).context("repartition: removing commit marker"),
+    }
+    Ok(())
+}
+
+/// Persist per-host-pair routed traffic (`run --traffic-out`) as plain
+/// text: one `src dst msgs bytes` line per ordered host pair.
+pub fn write_traffic(path: &Path, pairs: &[((usize, usize), (u64, u64))]) -> Result<()> {
+    let mut out = String::from("# goffish routed traffic: src dst msgs bytes\n");
+    for &((s, d), (msgs, bytes)) in pairs {
+        out.push_str(&format!("{s} {d} {msgs} {bytes}\n"));
+    }
+    std::fs::write(path, out).with_context(|| format!("writing traffic to {}", path.display()))
+}
+
+/// Load a traffic file written by [`write_traffic`]. Blank lines and
+/// `#` comments are ignored; duplicate pairs accumulate.
+pub fn load_traffic(path: &Path) -> Result<Vec<((usize, usize), (u64, u64))>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading traffic from {}", path.display()))?;
+    let mut acc: std::collections::BTreeMap<(usize, usize), (u64, u64)> =
+        std::collections::BTreeMap::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        if fields.len() != 4 {
+            bail!("{}:{}: expected `src dst msgs bytes`", path.display(), ln + 1);
+        }
+        let parse = |s: &str| -> Result<u64> {
+            s.parse().with_context(|| format!("{}:{}: bad number {s}", path.display(), ln + 1))
+        };
+        let pair = (parse(fields[0])? as usize, parse(fields[1])? as usize);
+        let e = acc.entry(pair).or_insert((0, 0));
+        e.0 += parse(fields[2])?;
+        e.1 += parse(fields[3])?;
+    }
+    Ok(acc.into_iter().collect())
+}
+
+/// Rebuild the global template (and the current assignment) from the
+/// partitions' subgraphs. Vertices and edges keep their template indices
+/// — subgraphs store global vertex ids and template edge ids — so the
+/// reconstruction is exact, not approximate.
+fn reconstruct_template(stores: &[Store]) -> Result<(GraphTemplate, Partitioning)> {
+    let mut n = 0usize;
+    let mut m = 0usize;
+    for s in stores {
+        for sg in &s.shared().subgraphs {
+            n += sg.n_vertices();
+            for &e in &sg.edges_sorted {
+                m = m.max(e as usize + 1);
+            }
+        }
+    }
+    let mut ext_ids = vec![None; n];
+    let mut assign = vec![u32::MAX; n];
+    let mut edges: Vec<Option<(VIdx, VIdx)>> = vec![None; m];
+    for s in stores {
+        let part = s.part_id() as u32;
+        for sg in &s.shared().subgraphs {
+            for (li, &g) in sg.vertices.iter().enumerate() {
+                let g = g as usize;
+                if g >= n || ext_ids[g].is_some() {
+                    bail!("repartition: vertex {g} owned twice or out of range");
+                }
+                ext_ids[g] = Some(sg.ext_ids[li]);
+                assign[g] = part;
+            }
+            for v in 0..sg.n_vertices() as u32 {
+                for (d, pos) in sg.local.out_edges(v) {
+                    let e = sg.edges[pos as usize] as usize;
+                    edges[e] = Some((sg.vertices[v as usize], sg.vertices[d as usize]));
+                }
+            }
+            for r in &sg.remote {
+                edges[r.eidx as usize] = Some((sg.vertices[r.src_local as usize], r.dst_global));
+            }
+        }
+    }
+    let ext_ids: Vec<u64> = ext_ids
+        .into_iter()
+        .collect::<Option<Vec<_>>>()
+        .context("repartition: collection does not cover every vertex")?;
+    let edges: Vec<(VIdx, VIdx)> = edges
+        .into_iter()
+        .collect::<Option<Vec<_>>>()
+        .context("repartition: collection does not cover every edge")?;
+    let (edge_src, edge_dst): (Vec<VIdx>, Vec<VIdx>) = edges.iter().copied().unzip();
+    let triples: Vec<(VIdx, VIdx, u32)> =
+        edges.iter().enumerate().map(|(e, &(s, d))| (s, d, e as u32)).collect();
+    let template = GraphTemplate {
+        ext_ids,
+        edge_src,
+        edge_dst,
+        out: Csr::from_edges(n, &triples),
+        vertex_schema: stores[0].vertex_schema().clone(),
+        edge_schema: stores[0].edge_schema().clone(),
+    };
+    Ok((template, Partitioning { n_parts: stores.len(), assign }))
+}
+
+/// A [`CollectionSource`] over an already-deployed collection: reads
+/// every subgraph's projected columns and inverts the projection back to
+/// global element indices. Feeding this to [`deploy_with`] reproduces
+/// the original instances exactly (columns round-trip value-for-value),
+/// just laid out under the new assignment.
+struct RebuildSource<'a> {
+    stores: &'a [Store],
+    template: &'a GraphTemplate,
+    n_instances: usize,
+}
+
+impl CollectionSource for RebuildSource<'_> {
+    fn template(&self) -> &GraphTemplate {
+        self.template
+    }
+
+    fn n_instances(&self) -> usize {
+        self.n_instances
+    }
+
+    fn instance(&self, t: Timestep) -> GraphInstance {
+        let va = self.template.vertex_schema.len();
+        let ea = self.template.edge_schema.len();
+        let proj = Projection::all(&self.template.vertex_schema, &self.template.edge_schema);
+        // Gathered (global element, values) pairs per attribute; sorted
+        // before the push since AttrColumn requires ascending indices.
+        let mut vvals: Vec<Vec<(u32, Vec<AttrValue>)>> = vec![Vec::new(); va];
+        let mut evals: Vec<Vec<(u32, Vec<AttrValue>)>> = vec![Vec::new(); ea];
+        let mut window = None;
+        for s in self.stores {
+            window.get_or_insert_with(|| s.window(t));
+            for sg_local in 0..s.shared().subgraphs.len() {
+                let si = s
+                    .read_instance(sg_local, t, &proj)
+                    .unwrap_or_else(|e| panic!("repartition: reading t{t}: {e:#}"));
+                let sg = &si.sg;
+                for a in 0..va {
+                    if let Some(col) = si.vertex_column(a) {
+                        for (li, &g) in sg.vertices.iter().enumerate() {
+                            if let Some(vs) = col.values(li as u32) {
+                                if !vs.is_empty() {
+                                    vvals[a].push((g, vs.iter().collect()));
+                                }
+                            }
+                        }
+                    }
+                }
+                for a in 0..ea {
+                    if let Some(col) = si.edge_column(a) {
+                        for (pos, &e) in sg.edges_sorted.iter().enumerate() {
+                            if let Some(vs) = col.values(pos as u32) {
+                                if !vs.is_empty() {
+                                    evals[a].push((e, vs.iter().collect()));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let build = |mut pairs: Vec<(u32, Vec<AttrValue>)>| -> Option<AttrColumn> {
+            if pairs.is_empty() {
+                return None;
+            }
+            pairs.sort_by_key(|&(i, _)| i);
+            let mut col = AttrColumn::new();
+            for (i, vals) in pairs {
+                col.push(i, vals);
+            }
+            Some(col)
+        };
+        GraphInstance {
+            timestep: t,
+            window: window.expect("repartition: collection has no partitions"),
+            vcols: vvals.into_iter().map(build).collect(),
+            ecols: evals.into_iter().map(build).collect(),
+        }
+    }
+}

@@ -96,14 +96,15 @@ pub mod writer;
 pub use cache::SliceCache;
 pub use disk::DiskModel;
 pub use ingest::{
-    compact_collection, BeaconGate, CollectionAppender, CompactOptions, CompactReport, FlowGate,
-    IngestOptions, IngestStats, WriterLock,
+    compact_collection, repartition_collection, BeaconGate, CollectionAppender, CompactOptions,
+    CompactReport, FlowGate, IngestOptions, IngestStats, RepartCrash, RepartitionOptions,
+    RepartitionReport, WriterLock,
 };
 pub use reader::{open_collection, Projection, ReadTrace, Store, StoreOptions, SubgraphInstance};
 pub use scrub::{scrub, ScrubOptions, ScrubReport};
 pub use slice::{SliceError, SliceFile, SliceKind, VERSION_V1, VERSION_V2};
 pub use vfs::{err_is_corrupt, CorruptSlice, Vfs};
-pub use writer::{deploy, deploy_template, DeployConfig, DeployReport};
+pub use writer::{deploy, deploy_template, deploy_with, DeployConfig, DeployReport};
 
 /// Identifies one attribute slice within a partition.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]

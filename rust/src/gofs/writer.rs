@@ -17,7 +17,7 @@ use crate::gofs::slice::{SliceFile, SliceKind, VERSION_V1, VERSION_V2};
 use crate::gofs::SliceKey;
 use crate::partition::{
     binpack_subgraphs, extract_partitions, partition_graph, BinPacking, Partition,
-    PartitionOptions, Subgraph,
+    PartitionOptions, Partitioning, Subgraph,
 };
 use crate::util::wire::{Dec, Enc};
 use anyhow::{bail, Context, Result};
@@ -76,6 +76,10 @@ pub struct DeployReport {
     /// Uncompressed attribute-slice body bytes (isolates the v1→v2 codec
     /// effect from deflate and fixed headers).
     pub attr_body_bytes: u64,
+    /// Share (%) of template edges crossing partitions under the chosen
+    /// assignment — the partitioning-quality figure the edge-cut
+    /// regression suite compares across strategies.
+    pub edge_cut_pct: f64,
 }
 
 /// Partition-level deployment state shared with the reader.
@@ -88,11 +92,25 @@ pub(crate) struct PartLayout {
     pub bins: BinPacking,
 }
 
-/// Deploy `source` into `out_dir/part-<k>/` directories.
+/// Deploy `source` into `out_dir/part-<k>/` directories, partitioning
+/// with the strategy configured in `cfg.partition` (`--partitioner`).
 pub fn deploy(
     source: &dyn CollectionSource,
     cfg: &DeployConfig,
     out_dir: &Path,
+) -> Result<DeployReport> {
+    deploy_with(source, cfg, out_dir, None)
+}
+
+/// Like [`deploy`], but with an optional pre-computed vertex→partition
+/// assignment. The re-partition pass (`gofs::ingest::repartition`) uses
+/// this to lay a rebuilt collection out under a drift-refined
+/// partitioning instead of re-running the streaming placer.
+pub fn deploy_with(
+    source: &dyn CollectionSource,
+    cfg: &DeployConfig,
+    out_dir: &Path,
+    partitioning: Option<&Partitioning>,
 ) -> Result<DeployReport> {
     if cfg.n_bins == 0 || cfg.pack == 0 || cfg.n_parts == 0 {
         bail!("deploy: n_parts, n_bins and pack must be >= 1");
@@ -109,7 +127,22 @@ pub fn deploy(
     let vfs = crate::gofs::vfs::Vfs::passive(out_dir);
 
     // --- Partition + extract + bin-pack. ---
-    let partitioning = partition_graph(template, &cfg.partition);
+    let partitioning = match partitioning {
+        Some(p) => {
+            if p.n_parts != cfg.n_parts || p.assign.len() != template.n_vertices() {
+                bail!(
+                    "deploy: partitioning shape ({} parts, {} vertices) does not match \
+                     config ({} parts, {} vertices)",
+                    p.n_parts,
+                    p.assign.len(),
+                    cfg.n_parts,
+                    template.n_vertices()
+                );
+            }
+            p.clone()
+        }
+        None => partition_graph(template, &cfg.partition),
+    };
     let partitions = extract_partitions(template, &partitioning);
     let layouts: Vec<PartLayout> = partitions
         .into_iter()
@@ -130,6 +163,7 @@ pub fn deploy(
         n_instances,
         n_vertices: template.n_vertices(),
         n_edges: template.n_edges(),
+        edge_cut_pct: partitioning.edge_cut_pct(template),
         ..Default::default()
     };
     for l in &layouts {

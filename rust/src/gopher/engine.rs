@@ -324,6 +324,24 @@ impl RunStats {
             .flat_map(|t| t.routed_pairs.iter().map(|&(_, (_, bytes))| bytes))
             .sum()
     }
+
+    /// Whole-run per-host-pair routed traffic: every timestep's
+    /// `routed_pairs` folded into one sorted `(src, dst) -> (msgs, bytes)`
+    /// list. This is what `run --traffic-out` persists and what the
+    /// compaction re-partition pass feeds to `traffic_refine` as migration
+    /// weights.
+    pub fn routed_pair_totals(&self) -> Vec<((usize, usize), (u64, u64))> {
+        let mut acc: std::collections::BTreeMap<(usize, usize), (u64, u64)> =
+            std::collections::BTreeMap::new();
+        for t in &self.per_timestep {
+            for &(pair, (msgs, bytes)) in &t.routed_pairs {
+                let e = acc.entry(pair).or_insert((0, 0));
+                e.0 += msgs;
+                e.1 += bytes;
+            }
+        }
+        acc.into_iter().collect()
+    }
 }
 
 /// One timestep's instances, loaded ahead of its BSP, plus the GoFS

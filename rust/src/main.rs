@@ -25,10 +25,13 @@ use goffish::datagen::{
     CollectionSource, RoadNetGenerator, RoadNetParams, TraceRouteGenerator, TraceRouteParams,
 };
 use goffish::cluster::fault::{FaultInjector, FaultPlan};
+use goffish::gofs::ingest::repartition::{load_traffic, write_traffic};
 use goffish::gofs::{
-    compact_collection, deploy, deploy_template, open_collection, scrub, CollectionAppender,
-    CompactOptions, DeployConfig, DiskModel, IngestOptions, ScrubOptions, StoreOptions,
+    compact_collection, deploy, deploy_template, open_collection, repartition_collection, scrub,
+    CollectionAppender, CompactOptions, DeployConfig, DiskModel, IngestOptions,
+    RepartitionOptions, ScrubOptions, StoreOptions,
 };
+use goffish::partition::PartitionStrategy;
 use goffish::gopher::{GopherEngine, RunOptions, RunStats};
 use goffish::metrics::journal::Journal;
 use goffish::metrics::Metrics;
@@ -73,15 +76,17 @@ goffish — scalable analytics over distributed time-series graphs
 USAGE:
   goffish deploy  --dataset tr|roadnet --out DIR
                   [--parts 12 --bins 20 --pack 20 --vertices 50000
-                   --instances 146 --seed 48879 --no-compress --slice-v1
-                   --template-only]
+                   --instances 146 --seed 48879 --partitioner ldg|fennel|binpack
+                   --no-compress --slice-v1 --template-only]
   goffish ingest  --store DIR --dataset tr|roadnet
                   [--from <appender resume point> --to <dataset end>
                    --sleep-ms 0 --no-compress --no-sync --group-commit 1
                    --compact-after 0 --compact-target 0 --finish
                    --replica-dir DIR --fault-plan FILE --journal FILE]
   goffish compact --store DIR [--target-pack <8 x pack> --no-compress
-                   --journal FILE]
+                   --journal FILE --repartition --traffic FILE
+                   --partitioner ldg|fennel|binpack --seed 48879
+                   --repartition-sweeps 2]
   goffish scrub   --store DIR [--replica-dir DIR --repair --out FILE]
   goffish run     --store DIR --app sssp|pagerank|nhop|track|wcc
                   [--cache 14 --cache-bytes 0 --tail-high-water 0
@@ -89,7 +94,7 @@ USAGE:
                    --nhops 6 --backend scalar|pjrt --artifacts artifacts
                    --from <ts> --to <ts> --prefetch-depth 2
                    --poll-ms 25 --idle-polls 40 --real-disk --follow
-                   --replica-dir DIR --fault-plan FILE]
+                   --replica-dir DIR --fault-plan FILE --traffic-out FILE]
   goffish coordinator --hosts N --app sssp|pagerank
                   [--listen 127.0.0.1:0 --port-file FILE --source <ext-id>
                    --max-supersteps 10000 --max-epochs 64 --out FILE
@@ -123,6 +128,16 @@ USAGE:
   amortization; `run --follow` keeps the run live over timesteps as they
   are published — the sequential BSP loop and the Independent /
   EventuallyDependent temporal pools alike.
+
+  Partitioning: `deploy --partitioner` picks the streaming vertex placer
+  (ldg default; fennel for a degree-penalty score; binpack for the
+  graph-oblivious count-only baseline). `run --traffic-out FILE` records
+  per-host-pair routed traffic; `compact --repartition --traffic FILE`
+  then migrates high-traffic boundary vertices (optionally re-placing
+  from scratch with `--partitioner`), rebuilding the sealed collection
+  under the refined assignment through a crash-safe staged swap. Results
+  are unaffected by construction — only placement (and the edge cut)
+  changes. Requires a fully sealed collection (no open ingest tail).
 
   `coordinator` + one `host` per partition run the same analytics as
   `run --hosts N`, but as real processes over TCP — same outputs, byte
@@ -204,6 +219,7 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         cfg.slice_version = 1; // legacy interleaved attribute bodies
     }
     cfg.partition.seed = args.u64("seed", 0xBEEF);
+    cfg.partition.strategy = PartitionStrategy::parse(&args.str("partitioner", "ldg"))?;
     let t0 = std::time::Instant::now();
     let report = if args.switch("template-only") {
         deploy_template(source.as_ref(), &cfg, &out)?
@@ -219,8 +235,11 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         report.n_instances
     );
     println!(
-        "  {} partitions, subgraphs/partition {:?}",
-        report.n_parts, report.subgraphs_per_partition
+        "  {} partitions ({} placement, edge cut {:.2}%), subgraphs/partition {:?}",
+        report.n_parts,
+        cfg.partition.strategy.name(),
+        report.edge_cut_pct,
+        report.subgraphs_per_partition
     );
     println!(
         "  {} slices, {:.1} MB, {:.1}s",
@@ -346,6 +365,33 @@ fn cmd_compact(args: &Args) -> Result<()> {
         report.slices_deleted,
         report.orphans_swept
     );
+
+    // Opt-in drift re-partition pass: migrate high-traffic boundary
+    // vertices under the same one-writer discipline (the two passes each
+    // take the collection lock in turn — the lock is not re-entrant).
+    if args.switch("repartition") {
+        let ropts = RepartitionOptions {
+            strategy: args.get("partitioner").map(PartitionStrategy::parse).transpose()?,
+            seed: args.u64("seed", 0xBEEF),
+            refine_sweeps: args.usize("repartition-sweeps", 2),
+            traffic: match args.get("traffic") {
+                Some(path) => load_traffic(PathBuf::from(path).as_path())?,
+                None => Vec::new(),
+            },
+            compress: !args.switch("no-compress"),
+            metrics: opts.metrics.clone(),
+            ..Default::default()
+        };
+        let rep = repartition_collection(&store_dir, &ropts)?;
+        println!(
+            "repartitioned {}: {} vertices moved, edge cut {:.2}% -> {:.2}% in {:.2}s",
+            store_dir.display(),
+            rep.moved_vertices,
+            rep.edge_cut_pct_before,
+            rep.edge_cut_pct_after,
+            rep.wall_s
+        );
+    }
     Ok(())
 }
 
@@ -461,7 +507,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
 
     let app_name = args.str("app", "sssp");
-    match app_name.as_str() {
+    let stats: RunStats = match app_name.as_str() {
         "sssp" => {
             let attr = es
                 .index_of("latency_ms")
@@ -476,6 +522,8 @@ fn cmd_run(args: &Args) -> Result<()> {
             let total: usize =
                 reached.iter().filter(|((t, _), _)| *t == last_t).map(|(_, &c)| c).sum();
             println!("  sssp from {source}: {total}/{total_vertices} reachable by t={last_t}");
+            drop(reached);
+            stats
         }
         "pagerank" => {
             let active = es.index_of("active");
@@ -487,6 +535,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             for (ext, r) in app.results.top_k(t, 5) {
                 println!("    v{ext}: {r:.3e}");
             }
+            stats
         }
         "nhop" => {
             let attr = es.index_of("latency_ms").context("nhop needs latency_ms")?;
@@ -499,6 +548,8 @@ fn cmd_run(args: &Args) -> Result<()> {
             if let Some(h) = composite.as_ref() {
                 println!("  nhop composite: {} arrivals", h.total());
             }
+            drop(composite);
+            stats
         }
         "track" => {
             let attr = vs.index_of("plates").context("track needs a roadnet store")?;
@@ -512,6 +563,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             for (t, v) in traj.iter().take(20) {
                 println!("    t={t} at v{v}");
             }
+            stats
         }
         "wcc" => {
             run_opts.timesteps = Some(vec![0]);
@@ -519,8 +571,15 @@ fn cmd_run(args: &Args) -> Result<()> {
             let stats = eng.run(&app, &run_opts)?;
             print_stats(&stats);
             println!("  wcc: {} components", app.results.n_components());
+            stats
         }
         other => bail!("unknown app {other}"),
+    };
+    if let Some(path) = args.get("traffic-out") {
+        // Per-host-pair routed totals — the drift signal the compaction
+        // re-partition pass consumes (`compact --repartition --traffic`).
+        write_traffic(PathBuf::from(path).as_path(), &stats.routed_pair_totals())?;
+        println!("  wrote routed-traffic pairs to {path}");
     }
     Ok(())
 }

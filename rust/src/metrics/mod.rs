@@ -52,6 +52,10 @@ pub mod keys {
     pub const COMMITS: &str = "cluster.commits";
     /// Epoch teardowns observed (coordinator-side, unlabeled).
     pub const EPOCH_ABORTS: &str = "cluster.epoch_aborts";
+    /// Share of template edges crossing partitions, in basis points
+    /// (1/100th of a percent — counters are integers). Recorded by
+    /// deploy and by the compaction re-partition pass.
+    pub const PARTITION_EDGE_CUT_BP: &str = "partition.edge_cut_pct";
 
     /// A per-host labeled variant of a counter key (`base.h<host>`), for
     /// registries that aggregate several hosts (the coordinator).

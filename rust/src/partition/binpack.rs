@@ -7,7 +7,29 @@
 //! iterator then returns subgraphs in *bin-major order*, preserving
 //! spatial locality of slice access.
 
+use crate::graph::VIdx;
+use crate::partition::partitioner::Partitioner;
 use crate::partition::Partition;
+
+/// Count-only streaming vertex placement: each vertex goes to the
+/// currently least-loaded partition, ignoring the adjacency entirely.
+/// This is the graph-oblivious baseline (`--partitioner binpack`) the
+/// edge-cut regression suite measures the graph-aware strategies against
+/// — on a clustered graph it shreds every cluster across all partitions,
+/// which is exactly what makes its cut an upper reference.
+pub struct CountPlacer;
+
+impl Partitioner for CountPlacer {
+    fn name(&self) -> &'static str {
+        "binpack"
+    }
+
+    fn place(&mut self, _v: VIdx, _neighbor_counts: &[u32], sizes: &[usize]) -> u32 {
+        // min_by_key ties to the lowest index: deterministic round-robin
+        // on a balanced stream, no seed involved.
+        sizes.iter().enumerate().min_by_key(|(_, &s)| s).unwrap().0 as u32
+    }
+}
 
 /// The bin assignment for one partition's subgraphs.
 #[derive(Debug, Clone, PartialEq)]

@@ -1,0 +1,127 @@
+//! Fennel streaming partitioner [Tsourakakis et al., WSDM'14].
+//!
+//! Fennel places each arriving vertex in the partition maximizing
+//!
+//! ```text
+//! score(v, p) = |N(v) ∩ Pₚ| − α·γ·|Pₚ|^(γ−1)
+//! ```
+//!
+//! — the number of already-placed neighbors in `p` minus an additive,
+//! size-superlinear load penalty. With the standard parameterization
+//! `γ = 3/2`, `α = m·k^(γ−1)/n^γ` the penalty interpolates between pure
+//! neighbor affinity (small partitions) and hard balancing (full ones);
+//! a hard capacity cap `(1+slack)·n/k` bounds the worst case like the
+//! LDG placer's. Ties break by deterministic seeded jitter, so placement
+//! is a pure function of (input order, seed) — the property the
+//! partition-determinism test suite pins.
+
+use crate::graph::VIdx;
+use crate::partition::partitioner::Partitioner;
+use crate::util::Prng;
+
+/// The Fennel streaming placement strategy.
+pub struct FennelPlacer {
+    capacity: usize,
+    /// α·γ, precomputed (the score only ever uses the product).
+    alpha_gamma: f64,
+    /// γ − 1 (the penalty exponent).
+    gamma_m1: f64,
+    rng: Prng,
+}
+
+impl FennelPlacer {
+    /// Standard parameterization for `n` vertices, `m` directed edges and
+    /// `k` partitions: γ = 3/2, α = m·√k / n^(3/2).
+    pub fn new(n: usize, m: usize, k: usize, slack: f64, seed: u64) -> Self {
+        let gamma = 1.5f64;
+        let nf = (n.max(1)) as f64;
+        let alpha = (m as f64) * (k as f64).powf(gamma - 1.0) / nf.powf(gamma);
+        FennelPlacer {
+            capacity: (nf * (1.0 + slack) / k as f64).ceil() as usize,
+            alpha_gamma: alpha * gamma,
+            gamma_m1: gamma - 1.0,
+            rng: Prng::new(seed),
+        }
+    }
+}
+
+impl Partitioner for FennelPlacer {
+    fn name(&self) -> &'static str {
+        "fennel"
+    }
+
+    fn place(&mut self, _v: VIdx, neighbor_counts: &[u32], sizes: &[usize]) -> u32 {
+        let k = sizes.len();
+        let mut best = usize::MAX;
+        let mut best_score = f64::NEG_INFINITY;
+        for p in 0..k {
+            if sizes[p] >= self.capacity {
+                continue;
+            }
+            let penalty = self.alpha_gamma * (sizes[p] as f64).powf(self.gamma_m1);
+            let s = neighbor_counts[p] as f64 - penalty + self.rng.gen_f64() * 1e-9;
+            if s > best_score {
+                best_score = s;
+                best = p;
+            }
+        }
+        if best == usize::MAX {
+            // Every partition at capacity (transient with slack 0 only).
+            sizes.iter().enumerate().min_by_key(|(_, &s)| s).unwrap().0 as u32
+        } else {
+            best as u32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Schema, TemplateBuilder};
+    use crate::partition::partitioner::{
+        partition_graph, PartitionOptions, PartitionStrategy,
+    };
+
+    fn two_cliques(clique: usize) -> crate::graph::GraphTemplate {
+        let mut b = TemplateBuilder::new(Schema::new(vec![]), Schema::new(vec![]));
+        for c in 0..2 {
+            let vs: Vec<_> = (0..clique).map(|i| b.vertex((c * clique + i) as u64)).collect();
+            for i in 0..clique {
+                for j in (i + 1)..clique {
+                    b.edge(vs[i], vs[j]);
+                    b.edge(vs[j], vs[i]);
+                }
+            }
+        }
+        b.edge(0, clique as u32); // one bridge
+        b.build()
+    }
+
+    #[test]
+    fn fennel_keeps_cliques_whole() {
+        let t = two_cliques(12);
+        let opts = PartitionOptions {
+            strategy: PartitionStrategy::Fennel,
+            ..PartitionOptions::new(2)
+        };
+        let p = partition_graph(&t, &opts);
+        // The only cut edge should be (at most) the bridge.
+        assert!(p.cut_edges(&t) <= 1, "cut {}", p.cut_edges(&t));
+        let sizes = p.sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 24);
+        assert!(sizes.iter().all(|&s| s == 12), "sizes {sizes:?}");
+    }
+
+    #[test]
+    fn fennel_respects_capacity() {
+        let t = two_cliques(20);
+        let opts = PartitionOptions {
+            strategy: PartitionStrategy::Fennel,
+            slack: 0.10,
+            ..PartitionOptions::new(4)
+        };
+        let p = partition_graph(&t, &opts);
+        let cap = ((40.0 * 1.10) / 4.0f64).ceil() as usize;
+        assert!(p.sizes().iter().all(|&s| s <= cap), "sizes {:?} cap {cap}", p.sizes());
+    }
+}

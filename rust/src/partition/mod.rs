@@ -7,9 +7,14 @@
 //! are then bin-packed into a fixed number of slices per partition (§V-D).
 
 pub mod binpack;
+pub mod fennel;
 pub mod partitioner;
 pub mod subgraph;
 
-pub use binpack::{binpack_subgraphs, BinPacking};
-pub use partitioner::{partition_graph, PartitionOptions, Partitioning};
+pub use binpack::{binpack_subgraphs, BinPacking, CountPlacer};
+pub use fennel::FennelPlacer;
+pub use partitioner::{
+    partition_graph, stream_place, traffic_refine, PartitionOptions, PartitionStrategy,
+    Partitioner, Partitioning,
+};
 pub use subgraph::{extract_partitions, Partition, RemoteEdge, Subgraph};

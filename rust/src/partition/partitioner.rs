@@ -2,14 +2,104 @@
 //!
 //! The paper's default partitioning "balances the number of vertices per
 //! partition and minimizes the remote edge cuts" (§V-A; the original used
-//! METIS). We implement the same objective with a deterministic
-//! BFS-ordered LDG streaming pass [Stanton & Kliot, KDD'12] followed by
-//! local refinement sweeps — a standard substitute that preserves the
-//! properties the evaluation depends on: balanced |Vᵢ| and a small,
-//! skewed set of cut edges yielding the paper's power-law subgraph sizes.
+//! METIS). We implement the same objective with deterministic streaming
+//! placement behind the [`Partitioner`] strategy trait: one vertex at a
+//! time, each strategy scores the candidate partitions from (a) how many
+//! of the vertex's already-placed neighbors each partition holds and (b)
+//! a load penalty. Strategies:
+//!
+//! * **ldg** (default) — BFS-ordered LDG [Stanton & Kliot, KDD'12],
+//!   multiplicative penalty `|N(v) ∩ Pₚ| · (1 − |Pₚ|/cap)`, followed by
+//!   local refinement sweeps.
+//! * **fennel** — [`crate::partition::fennel`]: additive penalty
+//!   `|N(v) ∩ Pₚ| − αγ·|Pₚ|^(γ−1)` [Tsourakakis et al., WSDM'14].
+//! * **binpack** — count-only least-loaded placement that ignores edges
+//!   entirely; the graph-oblivious baseline the edge-cut regression suite
+//!   compares against.
+//!
+//! All three are deterministic for a fixed input order + seed, and place
+//! one vertex per step — which is what lets the same placer serve batch
+//! `deploy` and the streaming `CollectionAppender` ingest path.
 
 use crate::graph::{Csr, GraphTemplate, VIdx};
 use crate::util::Prng;
+use anyhow::{bail, Result};
+
+/// Which streaming placement strategy `partition_graph` dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PartitionStrategy {
+    /// BFS-ordered LDG with refinement sweeps (the historical default —
+    /// existing deployments keep their exact layout).
+    #[default]
+    Ldg,
+    /// Fennel additive-penalty streaming placement.
+    Fennel,
+    /// Count-only least-loaded placement (graph-oblivious baseline).
+    Binpack,
+}
+
+impl PartitionStrategy {
+    /// Parse a CLI name (`--partitioner ldg|fennel|binpack`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "ldg" => Ok(PartitionStrategy::Ldg),
+            "fennel" => Ok(PartitionStrategy::Fennel),
+            "binpack" => Ok(PartitionStrategy::Binpack),
+            other => bail!("unknown partitioner {other:?} (expected ldg, fennel or binpack)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionStrategy::Ldg => "ldg",
+            PartitionStrategy::Fennel => "fennel",
+            PartitionStrategy::Binpack => "binpack",
+        }
+    }
+}
+
+/// Streaming vertex placer: sees one vertex at a time, in stream order,
+/// and must choose a partition knowing only how many of the vertex's
+/// *already-placed* neighbors live in each partition plus the current
+/// partition sizes. Implementations must be deterministic for a fixed
+/// construction (order + seed).
+pub trait Partitioner {
+    fn name(&self) -> &'static str;
+    /// Choose a partition for `v`. `neighbor_counts[p]` = number of
+    /// already-placed undirected neighbors of `v` in partition `p`;
+    /// `sizes[p]` = vertices currently in `p`. Must return `< sizes.len()`.
+    fn place(&mut self, v: VIdx, neighbor_counts: &[u32], sizes: &[usize]) -> u32;
+}
+
+/// Drive a [`Partitioner`] over `order`, maintaining the neighbor counts
+/// and sizes it scores with. The shared streaming loop for every strategy.
+pub fn stream_place(
+    undirected: &Csr,
+    order: &[VIdx],
+    k: usize,
+    placer: &mut dyn Partitioner,
+) -> Vec<u32> {
+    let n = undirected.n_vertices();
+    let mut assign: Vec<u32> = vec![u32::MAX; n];
+    let mut sizes = vec![0usize; k];
+    let mut counts = vec![0u32; k];
+    for &v in order {
+        for c in counts.iter_mut() {
+            *c = 0;
+        }
+        for &u in undirected.neighbors(v) {
+            let p = assign[u as usize];
+            if p != u32::MAX {
+                counts[p as usize] += 1;
+            }
+        }
+        let p = placer.place(v, &counts, &sizes);
+        debug_assert!((p as usize) < k);
+        assign[v as usize] = p;
+        sizes[p as usize] += 1;
+    }
+    assign
+}
 
 /// Partitioner tuning knobs.
 #[derive(Debug, Clone)]
@@ -17,15 +107,24 @@ pub struct PartitionOptions {
     pub n_parts: usize,
     /// Capacity slack: each partition may hold up to (1+slack)·n/k vertices.
     pub slack: f64,
-    /// Number of boundary-refinement sweeps after the streaming pass.
+    /// Number of boundary-refinement sweeps after the streaming pass
+    /// (ldg and fennel; binpack stays graph-oblivious by design).
     pub refine_sweeps: usize,
     /// Seed for tie-breaks and the BFS start.
     pub seed: u64,
+    /// Streaming placement strategy.
+    pub strategy: PartitionStrategy,
 }
 
 impl PartitionOptions {
     pub fn new(n_parts: usize) -> Self {
-        PartitionOptions { n_parts, slack: 0.05, refine_sweeps: 2, seed: 0xBEEF }
+        PartitionOptions {
+            n_parts,
+            slack: 0.05,
+            refine_sweeps: 2,
+            seed: 0xBEEF,
+            strategy: PartitionStrategy::Ldg,
+        }
     }
 }
 
@@ -68,9 +167,22 @@ impl Partitioning {
             max / mean
         }
     }
+
+    /// Cut edges as a percentage of all directed template edges (0 for an
+    /// edgeless template). The quality number the regression suite and the
+    /// `partition.edge_cut_pct` metric track.
+    pub fn edge_cut_pct(&self, template: &GraphTemplate) -> f64 {
+        let m = template.n_edges();
+        if m == 0 {
+            0.0
+        } else {
+            100.0 * self.cut_edges(template) as f64 / m as f64
+        }
+    }
 }
 
-/// Partition `template` into `opts.n_parts` parts.
+/// Partition `template` into `opts.n_parts` parts using the configured
+/// streaming strategy.
 pub fn partition_graph(template: &GraphTemplate, opts: &PartitionOptions) -> Partitioning {
     let n = template.n_vertices();
     let k = opts.n_parts;
@@ -81,51 +193,37 @@ pub fn partition_graph(template: &GraphTemplate, opts: &PartitionOptions) -> Par
 
     // Undirected adjacency for neighbor-affinity scoring.
     let undirected = build_undirected(template);
-    let order = bfs_order(&undirected, opts.seed);
     let capacity = ((n as f64) * (1.0 + opts.slack) / k as f64).ceil() as usize;
 
-    let mut assign: Vec<u32> = vec![u32::MAX; n];
-    let mut sizes = vec![0usize; k];
-    let mut rng = Prng::new(opts.seed);
-    let mut scores = vec![0.0f64; k];
-
-    for &v in &order {
-        // LDG score: |assigned neighbors in p| * (1 - |p|/capacity).
-        for s in scores.iter_mut() {
-            *s = 0.0;
+    let assign = match opts.strategy {
+        PartitionStrategy::Ldg => {
+            let order = bfs_order(&undirected, opts.seed);
+            let mut placer = LdgPlacer { capacity, rng: Prng::new(opts.seed) };
+            stream_place(&undirected, &order, k, &mut placer)
         }
-        let mut any_neighbor = false;
-        for &u in undirected.neighbors(v) {
-            let p = assign[u as usize];
-            if p != u32::MAX {
-                scores[p as usize] += 1.0;
-                any_neighbor = true;
-            }
+        PartitionStrategy::Fennel => {
+            let order = bfs_order(&undirected, opts.seed);
+            let mut placer = crate::partition::fennel::FennelPlacer::new(
+                n,
+                template.n_edges(),
+                k,
+                opts.slack,
+                opts.seed,
+            );
+            stream_place(&undirected, &order, k, &mut placer)
         }
-        let mut best = usize::MAX;
-        let mut best_score = f64::NEG_INFINITY;
-        for p in 0..k {
-            if sizes[p] >= capacity {
-                continue;
-            }
-            let penalty = 1.0 - sizes[p] as f64 / capacity as f64;
-            let s = if any_neighbor { scores[p] * penalty } else { penalty };
-            // Deterministic jitter breaks ties without bias.
-            let s = s + rng.gen_f64() * 1e-9;
-            if s > best_score {
-                best_score = s;
-                best = p;
-            }
+        PartitionStrategy::Binpack => {
+            // Count-only placement streams in arrival (vertex-index) order —
+            // the order instances reach an appender — and never looks at
+            // the adjacency, so it needs neither BFS nor refinement.
+            let order: Vec<VIdx> = (0..n as VIdx).collect();
+            let mut placer = crate::partition::binpack::CountPlacer;
+            return Partitioning {
+                n_parts: k,
+                assign: stream_place(&undirected, &order, k, &mut placer),
+            };
         }
-        // All partitions full can only happen transiently with slack 0.
-        let p = if best == usize::MAX {
-            sizes.iter().enumerate().min_by_key(|(_, &s)| s).unwrap().0
-        } else {
-            best
-        };
-        assign[v as usize] = p as u32;
-        sizes[p] += 1;
-    }
+    };
 
     let mut part = Partitioning { n_parts: k, assign };
     for _ in 0..opts.refine_sweeps {
@@ -134,6 +232,46 @@ pub fn partition_graph(template: &GraphTemplate, opts: &PartitionOptions) -> Par
         }
     }
     part
+}
+
+/// The LDG streaming strategy: multiplicative load penalty plus a
+/// deterministic jitter tie-break, hard capacity cap with a least-loaded
+/// fallback. Byte-for-byte the placement the pre-trait code produced.
+struct LdgPlacer {
+    capacity: usize,
+    rng: Prng,
+}
+
+impl Partitioner for LdgPlacer {
+    fn name(&self) -> &'static str {
+        "ldg"
+    }
+
+    fn place(&mut self, _v: VIdx, neighbor_counts: &[u32], sizes: &[usize]) -> u32 {
+        let k = sizes.len();
+        let any_neighbor = neighbor_counts.iter().any(|&c| c > 0);
+        let mut best = usize::MAX;
+        let mut best_score = f64::NEG_INFINITY;
+        for p in 0..k {
+            if sizes[p] >= self.capacity {
+                continue;
+            }
+            let penalty = 1.0 - sizes[p] as f64 / self.capacity as f64;
+            let s = if any_neighbor { neighbor_counts[p] as f64 * penalty } else { penalty };
+            // Deterministic jitter breaks ties without bias.
+            let s = s + self.rng.gen_f64() * 1e-9;
+            if s > best_score {
+                best_score = s;
+                best = p;
+            }
+        }
+        // All partitions full can only happen transiently with slack 0.
+        if best == usize::MAX {
+            sizes.iter().enumerate().min_by_key(|(_, &s)| s).unwrap().0 as u32
+        } else {
+            best as u32
+        }
+    }
 }
 
 /// One boundary-refinement sweep: move vertices to the neighboring
@@ -167,6 +305,93 @@ fn refine_sweep(undirected: &Csr, part: &mut Partitioning, capacity: usize) -> u
         }
     }
     moves
+}
+
+/// Traffic-guided drift refinement: migrate boundary vertices between
+/// partitions so the *weighted* edge cut shrinks, where a cut edge between
+/// partitions (p, q) costs the observed per-host-pair routed bytes (plus a
+/// base weight of 1, so pairs with no recorded traffic still count as
+/// plain cut edges). `pair_bytes` is symmetric-ized internally; pass the
+/// accumulated `TimestepStats::routed_pairs` totals. Moves respect the
+/// same (1+slack)·n/k capacity the streaming placers enforce, and the
+/// sweep is deterministic (ascending vertex order, ties to the lowest
+/// partition index). Returns the number of vertices moved.
+pub fn traffic_refine(
+    template: &GraphTemplate,
+    part: &mut Partitioning,
+    pair_bytes: &[((usize, usize), u64)],
+    slack: f64,
+    sweeps: usize,
+) -> usize {
+    let n = template.n_vertices();
+    let k = part.n_parts;
+    if k <= 1 || n == 0 {
+        return 0;
+    }
+    let undirected = build_undirected(template);
+    let capacity = ((n as f64) * (1.0 + slack) / k as f64).ceil() as usize;
+
+    // Symmetric pair weight: 1 + bytes/scale, normalized so the heaviest
+    // pair weighs 2. Keeps the base cut objective while biasing moves
+    // toward separating the hottest host pairs.
+    let mut bytes = vec![0u64; k * k];
+    for &((a, b), by) in pair_bytes {
+        if a < k && b < k && a != b {
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            bytes[lo * k + hi] += by;
+        }
+    }
+    let scale = bytes.iter().copied().max().unwrap_or(0).max(1) as f64;
+    let weight = |p: usize, q: usize| -> f64 {
+        if p == q {
+            return 0.0;
+        }
+        let (lo, hi) = if p < q { (p, q) } else { (q, p) };
+        1.0 + bytes[lo * k + hi] as f64 / scale
+    };
+
+    let mut sizes = part.sizes();
+    let mut moved = 0usize;
+    let mut counts = vec![0usize; k];
+    for _ in 0..sweeps {
+        let mut sweep_moves = 0usize;
+        for v in 0..n as VIdx {
+            let cur = part.assign[v as usize] as usize;
+            for c in counts.iter_mut() {
+                *c = 0;
+            }
+            for &u in undirected.neighbors(v) {
+                counts[part.assign[u as usize] as usize] += 1;
+            }
+            // Weighted cut cost of hosting v in partition x.
+            let cost = |x: usize| -> f64 {
+                (0..k).map(|p| counts[p] as f64 * weight(x, p)).sum()
+            };
+            let cur_cost = cost(cur);
+            let (mut best, mut best_cost) = (cur, cur_cost);
+            for q in 0..k {
+                if q == cur || sizes[q] >= capacity {
+                    continue;
+                }
+                let c = cost(q);
+                if c < best_cost - 1e-12 {
+                    best = q;
+                    best_cost = c;
+                }
+            }
+            if best != cur && sizes[cur] > 1 {
+                part.assign[v as usize] = best as u32;
+                sizes[cur] -= 1;
+                sizes[best] += 1;
+                sweep_moves += 1;
+            }
+        }
+        moved += sweep_moves;
+        if sweep_moves == 0 {
+            break;
+        }
+    }
+    moved
 }
 
 fn build_undirected(template: &GraphTemplate) -> Csr {

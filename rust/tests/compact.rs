@@ -379,3 +379,163 @@ fn pool_follow_over_live_compacted_ingest_matches_batch() {
     std::fs::remove_dir_all(&d_batch).unwrap();
     std::fs::remove_dir_all(&d_feed).unwrap();
 }
+
+// ================= repartition crash windows (PR 10) =================
+//
+// The drift re-partition pass (`gofs::ingest::repartition`) rebuilds
+// every partition and swaps the rebuild in publish-last. Each injected
+// crash window must leave the collection either fully old (commit
+// marker never written) or fully new (marker written → recovery rolls
+// the swap forward) — and in both cases the canonical analytics output,
+// keyed by external vertex id, must not move a bit.
+
+use goffish::gofs::ingest::repartition::{load_traffic, recover, write_traffic};
+use goffish::gofs::{repartition_collection, RepartCrash, RepartitionOptions};
+use goffish::metrics::keys as mkeys;
+use goffish::partition::PartitionStrategy;
+
+/// Final SSSP distances keyed (ext id → f32 bits): placement-invariant.
+fn sssp_ext_canonical(dir: &PathBuf) -> Vec<(u64, u32)> {
+    let eng = engine(dir, 32);
+    let gen = tr_gen();
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+    let app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
+    eng.run(&app, &RunOptions::default()).unwrap();
+    let distances = app.results.distances.lock().unwrap();
+    let mut out: Vec<(u64, u32)> = Vec::new();
+    for s in eng.stores() {
+        for sg in s.subgraphs() {
+            if let Some((_, d)) = distances.get(&sg.id) {
+                for (lv, &x) in d.iter().enumerate() {
+                    out.push((sg.ext_ids[lv], x.to_bits()));
+                }
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+fn deployed_tr(tag: &str) -> PathBuf {
+    let dir = tmpdir(tag);
+    deploy(&tr_gen(), &DeployConfig::new(PARTS, BINS, 3), &dir).unwrap();
+    dir
+}
+
+fn repart_opts(crash: RepartCrash) -> RepartitionOptions {
+    RepartitionOptions {
+        strategy: Some(PartitionStrategy::Fennel),
+        crash,
+        ..Default::default()
+    }
+}
+
+/// Clean pass: vertices move, the store reopens, outputs hold, and the
+/// `partition.edge_cut_pct` metric + `repartition` event are recorded.
+#[test]
+fn repartition_clean_pass_preserves_outputs() {
+    let dir = deployed_tr("repart-clean");
+    let before = sssp_ext_canonical(&dir);
+    assert!(!before.is_empty());
+    let metrics = Arc::new(Metrics::new());
+    let rep = repartition_collection(
+        &dir,
+        &RepartitionOptions { metrics: metrics.clone(), ..repart_opts(RepartCrash::None) },
+    )
+    .unwrap();
+    assert!(rep.moved_vertices > 0, "fennel re-placement moved nothing");
+    assert!(metrics.get(mkeys::PARTITION_EDGE_CUT_BP) > 0, "edge-cut metric not recorded");
+    // No residue: staging, retired copies and the marker are all gone.
+    for residue in [".repart", ".repart.old", ".repart.commit"] {
+        assert!(!dir.join(residue).exists(), "{residue} left behind");
+    }
+    assert_eq!(sssp_ext_canonical(&dir), before, "re-partition changed SSSP");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Crash before the commit marker: the live store was never touched.
+/// Recovery sweeps the staging directory and the original layout (and
+/// outputs) remain; a re-run of the pass then completes normally.
+#[test]
+fn repartition_crash_before_commit_leaves_old_layout() {
+    let dir = deployed_tr("repart-precommit");
+    let before = sssp_ext_canonical(&dir);
+    let err = repartition_collection(&dir, &repart_opts(RepartCrash::BeforeCommit));
+    assert!(err.is_err(), "injected crash did not surface");
+    assert!(dir.join(".repart").exists(), "crash window left no staging");
+    assert!(!dir.join(".repart.commit").exists(), "marker must not precede the swap");
+
+    assert!(recover(&dir).unwrap(), "recovery had nothing to do");
+    assert!(!dir.join(".repart").exists());
+    assert_eq!(sssp_ext_canonical(&dir), before, "uncommitted pass changed outputs");
+
+    // A subsequent pass (which also recovers on entry) completes
+    // normally and still preserves outputs.
+    let rep = repartition_collection(&dir, &repart_opts(RepartCrash::None)).unwrap();
+    assert!(rep.moved_vertices > 0);
+    assert_eq!(sssp_ext_canonical(&dir), before);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Crash mid-swap, after the commit marker: some partitions are new,
+/// the rest still staged. Recovery must roll the swap forward to the
+/// new layout — outputs identical, no residue.
+#[test]
+fn repartition_crash_mid_swap_rolls_forward() {
+    let dir = deployed_tr("repart-midswap");
+    let before = sssp_ext_canonical(&dir);
+    let err = repartition_collection(&dir, &repart_opts(RepartCrash::MidSwap));
+    assert!(err.is_err(), "injected crash did not surface");
+    assert!(dir.join(".repart.commit").exists(), "mid-swap crash must leave the marker");
+
+    assert!(recover(&dir).unwrap(), "recovery had nothing to do");
+    for residue in [".repart", ".repart.old", ".repart.commit"] {
+        assert!(!dir.join(residue).exists(), "{residue} left behind after roll-forward");
+    }
+    assert_eq!(sssp_ext_canonical(&dir), before, "rolled-forward swap changed outputs");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Crash after the swap but before cleanup: the new layout is fully
+/// live; recovery just clears the retired copies and the marker. The
+/// recovery hook on the compaction path (`compact_collection` calls it
+/// under the writer lock) is exercised instead of calling recover
+/// directly.
+#[test]
+fn repartition_crash_before_cleanup_heals_via_compact() {
+    let dir = deployed_tr("repart-precleanup");
+    let before = sssp_ext_canonical(&dir);
+    let err = repartition_collection(&dir, &repart_opts(RepartCrash::BeforeCleanup));
+    assert!(err.is_err(), "injected crash did not surface");
+    assert!(dir.join(".repart.old").exists(), "cleanup crash must leave retired copies");
+    assert!(dir.join(".repart.commit").exists());
+
+    // Any writer-lock entry point recovers; compaction is one of them.
+    compact_collection(&dir, &CompactOptions::default()).unwrap();
+    for residue in [".repart", ".repart.old", ".repart.commit"] {
+        assert!(!dir.join(residue).exists(), "{residue} survived the recovery hook");
+    }
+    assert_eq!(sssp_ext_canonical(&dir), before, "healed swap changed outputs");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The traffic side-channel round-trips: what `run --traffic-out`
+/// writes, `compact --repartition --traffic` reads back — including
+/// comment lines and duplicate-pair accumulation.
+#[test]
+fn traffic_file_round_trips() {
+    let dir = tmpdir("traffic");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("traffic.txt");
+    let pairs = vec![((0usize, 1usize), (120u64, 48_000u64)), ((1, 0), (7, 512))];
+    write_traffic(&path, &pairs).unwrap();
+    assert_eq!(load_traffic(&path).unwrap(), pairs);
+
+    // Duplicated pairs accumulate; blank and comment lines are skipped.
+    std::fs::write(&path, "# header\n\n0 1 10 100\n0 1 5 50\n2 0 1 9\n").unwrap();
+    assert_eq!(
+        load_traffic(&path).unwrap(),
+        vec![((0, 1), (15, 150)), ((2, 0), (1, 9))]
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -2,12 +2,16 @@
 //! results must not depend on worker counts, temporal parallelism, or
 //! cache configuration — only on the data and the algorithm.
 
-use goffish::apps::{NHopApp, PageRankApp, SsspApp};
+use goffish::apps::{NHopApp, PageRankApp, SsspApp, WccApp};
 use goffish::cluster::ClusterSpec;
 use goffish::datagen::{traceroute, CollectionSource, TraceRouteGenerator, TraceRouteParams};
-use goffish::gofs::{deploy, open_collection, DeployConfig, DiskModel, StoreOptions};
+use goffish::gofs::{
+    deploy, open_collection, repartition_collection, DeployConfig, DiskModel,
+    RepartitionOptions, StoreOptions,
+};
 use goffish::gopher::{GopherEngine, RunOptions};
 use goffish::metrics::Metrics;
+use goffish::partition::PartitionStrategy;
 use goffish::runtime::ScalarBackend;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -352,5 +356,165 @@ fn temporal_pool_prefetch_does_not_change_results() {
         })
         .collect();
     assert_eq!(totals[0], totals[1], "pool prefetch changed the merge result");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ===================== partitioner invariance (PR 10) =====================
+//
+// Analytics must be a pure function of the data, not of the vertex→host
+// placement. These tests deploy the same generated collection under all
+// three `--partitioner` strategies and require bit-identical canonical
+// outputs — keyed by *external* vertex id, since subgraph ids are
+// placement-dependent — for the three gate apps, and across an offline
+// drift re-partition of a live deployment.
+
+fn deployed_as(tag: &str, strategy: PartitionStrategy) -> (TraceRouteGenerator, PathBuf) {
+    let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+    let dir = std::env::temp_dir().join(format!("goffish-det-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = DeployConfig::new(3, 4, 3);
+    cfg.partition.strategy = strategy;
+    deploy(&gen, &cfg, &dir).unwrap();
+    (gen, dir)
+}
+
+/// Final SSSP distances keyed (ext id → f32 bits). The label-correcting
+/// fixpoint is a min over per-path f32 sums, each accumulated along its
+/// path in path order — nothing in it depends on the partitioning.
+fn sssp_canonical(dir: &PathBuf, gen: &TraceRouteGenerator) -> Vec<(u64, u32)> {
+    let eng = engine(dir);
+    let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+    let app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
+    eng.run(&app, &RunOptions { timesteps: Some((0..6).collect()), ..Default::default() })
+        .unwrap();
+    let distances = app.results.distances.lock().unwrap();
+    let mut out: Vec<(u64, u32)> = Vec::new();
+    for s in eng.stores() {
+        for sg in s.subgraphs() {
+            if let Some((_, d)) = distances.get(&sg.id) {
+                for (lv, &x) in d.iter().enumerate() {
+                    out.push((sg.ext_ids[lv], x.to_bits()));
+                }
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Full per-vertex PageRank bits keyed (timestep, ext id) — recorded via
+/// `record_ranks`, exact across placements because contributions are
+/// dyadic-grid quantized before the order-varying reduction.
+fn pagerank_canonical(dir: &PathBuf, gen: &TraceRouteGenerator) -> Vec<((usize, u64), u32)> {
+    let eng = engine(dir);
+    let mut app = PageRankApp::new(
+        gen.template().n_vertices(),
+        Some(traceroute::eattr::ACTIVE),
+        Arc::new(ScalarBackend),
+    );
+    app.record_ranks = true;
+    eng.run(&app, &RunOptions { timesteps: Some(vec![0, 1, 2]), ..Default::default() })
+        .unwrap();
+    let ranks = app.results.ranks_by_vertex.lock().unwrap();
+    let mut out: Vec<((usize, u64), u32)> = ranks.iter().map(|(&k, &v)| (k, v)).collect();
+    out.sort_unstable();
+    out
+}
+
+/// WCC labels keyed (ext id → component min-ext-id).
+fn wcc_canonical(dir: &PathBuf) -> Vec<(u64, u64)> {
+    let eng = engine(dir);
+    let app = WccApp::new();
+    eng.run(&app, &RunOptions { timesteps: Some(vec![0]), ..Default::default() }).unwrap();
+    let labels = app.results.labels.lock().unwrap();
+    let mut out: Vec<(u64, u64)> = Vec::new();
+    for s in eng.stores() {
+        for sg in s.subgraphs() {
+            let label = labels[&sg.id];
+            for &ext in &sg.ext_ids {
+                out.push((ext, label));
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+#[test]
+fn outputs_bit_identical_across_partitioners() {
+    let (gen, ldg) = deployed_as("part-ldg", PartitionStrategy::Ldg);
+    let sssp_ref = sssp_canonical(&ldg, &gen);
+    let pr_ref = pagerank_canonical(&ldg, &gen);
+    let wcc_ref = wcc_canonical(&ldg);
+    assert!(!sssp_ref.is_empty() && !pr_ref.is_empty() && !wcc_ref.is_empty());
+    std::fs::remove_dir_all(&ldg).unwrap();
+
+    for strategy in [PartitionStrategy::Fennel, PartitionStrategy::Binpack] {
+        let tag = format!("part-{}", strategy.name());
+        let (gen2, dir) = deployed_as(&tag, strategy);
+        assert_eq!(
+            sssp_canonical(&dir, &gen2),
+            sssp_ref,
+            "{}: SSSP distances differ from the ldg deployment",
+            strategy.name()
+        );
+        assert_eq!(
+            pagerank_canonical(&dir, &gen2),
+            pr_ref,
+            "{}: PageRank bits differ from the ldg deployment",
+            strategy.name()
+        );
+        assert_eq!(
+            wcc_canonical(&dir),
+            wcc_ref,
+            "{}: WCC labels differ from the ldg deployment",
+            strategy.name()
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+/// The offline drift re-partition rewrites every partition of a sealed
+/// collection — vertex placement, subgraph extraction, bins, attribute
+/// slices — and none of the canonical outputs may move a bit. The
+/// traffic signal comes from a real run's routed-pair totals, closing
+/// the loop the CLI exposes (`run --traffic-out` → `compact
+/// --repartition --traffic`).
+#[test]
+fn repartition_preserves_all_outputs_bit_identical() {
+    let (gen, dir) = deployed_as("repart", PartitionStrategy::Ldg);
+    let sssp_before = sssp_canonical(&dir, &gen);
+    let pr_before = pagerank_canonical(&dir, &gen);
+    let wcc_before = wcc_canonical(&dir);
+
+    // Harvest a drift signal from a real run.
+    let traffic = {
+        let eng = engine(&dir);
+        let source = gen.template().ext_ids[gen.vantages()[0] as usize];
+        let app = SsspApp::new(source, traceroute::eattr::LATENCY_MS);
+        let stats = eng
+            .run(&app, &RunOptions { timesteps: Some((0..6).collect()), ..Default::default() })
+            .unwrap();
+        stats.routed_pair_totals()
+    };
+
+    let rep = repartition_collection(
+        &dir,
+        &RepartitionOptions {
+            strategy: Some(PartitionStrategy::Fennel),
+            traffic,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(
+        rep.moved_vertices > 0,
+        "fennel re-placement unexpectedly identical to the ldg layout"
+    );
+    assert_eq!(rep.parts, 3);
+
+    assert_eq!(sssp_canonical(&dir, &gen), sssp_before, "re-partition changed SSSP");
+    assert_eq!(pagerank_canonical(&dir, &gen), pr_before, "re-partition changed PageRank");
+    assert_eq!(wcc_canonical(&dir), wcc_before, "re-partition changed WCC");
     std::fs::remove_dir_all(&dir).unwrap();
 }

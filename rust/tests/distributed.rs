@@ -12,10 +12,14 @@ use goffish::cluster::coordinator::{run_coordinator, CoordinatorConfig};
 use goffish::cluster::worker::{build_app, run_host, HostConfig};
 use goffish::cluster::ClusterSpec;
 use goffish::datagen::{CollectionSource, TraceRouteGenerator, TraceRouteParams};
-use goffish::gofs::{deploy, open_collection, DeployConfig, DiskModel, StoreOptions};
+use goffish::gofs::{
+    deploy, open_collection, repartition_collection, DeployConfig, DiskModel,
+    RepartitionOptions, StoreOptions,
+};
 use goffish::gopher::{GopherEngine, RunOptions};
 use goffish::graph::SubgraphId;
 use goffish::metrics::{keys, Metrics};
+use goffish::partition::PartitionStrategy;
 use goffish::util::json::Json;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -498,5 +502,69 @@ fn chaos_pagerank_follow_supervised_host_survives_repeated_crashes() {
 
     let actual = std::fs::read_to_string(&out_file).unwrap();
     assert_eq!(actual, expected, "chaos follow output diverged from in-process");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ==================== partitioner coverage (PR 10) ====================
+
+fn deployed_as(tag: &str, strategy: PartitionStrategy) -> (TraceRouteGenerator, PathBuf) {
+    let gen = TraceRouteGenerator::new(TraceRouteParams::tiny());
+    let dir = std::env::temp_dir().join(format!("goffish-dist-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = DeployConfig::new(N_HOSTS, 4, 3);
+    cfg.partition.strategy = strategy;
+    deploy(&gen, &cfg, &dir).unwrap();
+    (gen, dir)
+}
+
+/// The 2-host protocol must be placement-agnostic: on fennel- and
+/// binpack-partitioned deployments the cluster output stays byte-equal
+/// to the in-process reference over the same store. (Cross-partitioner
+/// equality of the *analytics* is pinned by `tests/determinism.rs` —
+/// the emission here is keyed by placement-dependent subgraph ids, so
+/// each deployment is compared against its own reference.)
+#[test]
+fn fennel_and_binpack_two_host_runs_match_in_process() {
+    for strategy in [PartitionStrategy::Fennel, PartitionStrategy::Binpack] {
+        let tag = format!("sssp-{}", strategy.name());
+        let (gen, dir) = deployed_as(&tag, strategy);
+        let params = sssp_params(&gen);
+        let expected = expected_output(&dir, "sssp", &params);
+        assert!(!expected.is_empty());
+        let actual = run_cluster(&dir, "sssp", params, false, &tag, None);
+        assert_eq!(
+            actual,
+            expected,
+            "{}: distributed SSSP diverged from in-process",
+            strategy.name()
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+/// Follow mode across a re-partitioning compaction: the collection is
+/// re-partitioned offline (fennel layout → ldg re-placement, every part
+/// rebuilt and swapped publish-last), then a 2-host follow run must
+/// drain the rebuilt collection bit-identically to the in-process
+/// reference over the swapped store.
+#[test]
+fn follow_run_after_repartition_drains_bit_identically() {
+    let (_gen, dir) = deployed_as("repart-follow", PartitionStrategy::Fennel);
+    let rep = repartition_collection(
+        &dir,
+        &RepartitionOptions {
+            strategy: Some(PartitionStrategy::Ldg),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(
+        rep.moved_vertices > 0,
+        "ldg re-placement unexpectedly identical to the fennel layout"
+    );
+    let expected = expected_output(&dir, "pagerank", &[]);
+    assert!(!expected.is_empty());
+    let actual = run_cluster(&dir, "pagerank", Vec::new(), true, "repart-follow", None);
+    assert_eq!(actual, expected, "follow run over a re-partitioned store diverged");
     std::fs::remove_dir_all(&dir).unwrap();
 }

@@ -92,3 +92,48 @@ EOF
 
 echo "smoke ok: 2-host distributed SSSP matches in-process" \
      "($GOT/$EXPECTED reachable at t=$LAST_T)"
+
+# Fennel leg: same smoke once more on a fennel-partitioned deployment.
+# The in-process reference over the *same store* must agree with the
+# ldg-partitioned in-process run above (partition-invariant outputs),
+# and the 2-host run must agree with its in-process reference.
+STORE_F=$WORK/tr-fennel
+"$BIN" deploy --dataset tr --out "$STORE_F" --parts 2 --bins 4 --pack 3 \
+    --vertices 2000 --vantage 3 --instances 8 --traces 300 \
+    --partitioner fennel
+
+RUN_OUT_F=$("$BIN" run --store "$STORE_F" --app sssp)
+echo "$RUN_OUT_F"
+EXPECTED_F=$(sed -n 's|.*sssp from [0-9]*: \([0-9]*\)/.*|\1|p' <<<"$RUN_OUT_F")
+if [ "$EXPECTED_F" != "$EXPECTED" ]; then
+    echo "error: fennel in-process SSSP reached $EXPECTED_F vertices," \
+         "ldg reached $EXPECTED (outputs must be partition-invariant)" >&2
+    exit 1
+fi
+
+rm -f "$WORK/port"
+"$BIN" coordinator --hosts 2 --app sssp --source "$SOURCE" \
+    --listen 127.0.0.1:0 --port-file "$WORK/port" --out "$WORK/dist-fennel.out" &
+COORD=$!
+for _ in $(seq 1 200); do
+    [ -f "$WORK/port" ] && break
+    sleep 0.1
+done
+PORT=$(cat "$WORK/port")
+"$BIN" host --store "$STORE_F" --part 0 --connect "127.0.0.1:$PORT" &
+H0=$!
+"$BIN" host --store "$STORE_F" --part 1 --connect "127.0.0.1:$PORT" &
+H1=$!
+wait "$COORD" "$H0" "$H1"
+
+GOT_F=$(awk -v want="t=$LAST_T" \
+    '$1 == want { split($3, a, "="); s += a[2] } END { print s + 0 }' \
+    "$WORK/dist-fennel.out")
+if [ "$GOT_F" != "$EXPECTED" ]; then
+    echo "error: fennel 2-host SSSP reached $GOT_F vertices at t=$LAST_T," \
+         "in-process reached $EXPECTED" >&2
+    exit 1
+fi
+
+echo "smoke ok: fennel-partitioned 2-host SSSP matches in-process" \
+     "($GOT_F/$EXPECTED reachable at t=$LAST_T)"
